@@ -1,0 +1,98 @@
+"""AOT lowering: JAX chunk models -> artifacts/*.hlo.txt + manifest.json.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary is self-contained after.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, N, L, T): shape configurations matching the paper's experiments.
+# T is the scan-chunk length; the rust coordinator threads W_T across
+# chunks, so total horizon is any multiple of T.
+SHAPE_CONFIGS = [
+    ("smoke", 4, 3, 8),      # tiny config for tests
+    ("exp1", 10, 5, 500),    # Fig. 3 left  (N=10, L=5)
+    ("exp2", 50, 50, 250),   # Fig. 3 center/right (N=50, L=50)
+    ("exp3", 80, 40, 250),   # Fig. 4 (N=80, L=40)
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(algo: str, N: int, L: int, T: int) -> tuple[str, list]:
+    specs = model.chunk_arg_specs(algo, N, L, T)
+    fn = model.chunk_factory(algo, use_pallas=True)
+    lowered = jax.jit(fn).lower(*[s for _, s in specs])
+    return to_hlo_text(lowered), specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated subset of config names (default all)")
+    ap.add_argument("--algos", default=",".join(model.ALGORITHMS))
+    args = ap.parse_args()
+
+    wanted = set(filter(None, args.configs.split(",")))
+    algos = [a for a in args.algos.split(",") if a]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for cfg_name, N, L, T in SHAPE_CONFIGS:
+        if wanted and cfg_name not in wanted:
+            continue
+        for algo in algos:
+            name = f"{algo}_{cfg_name}"
+            text, specs = lower_one(algo, N, L, T)
+            path = f"{name}.hlo.txt"
+            with open(os.path.join(args.out_dir, path), "w") as f:
+                f.write(text)
+            entries.append({
+                "name": name,
+                "algo": algo,
+                "config": cfg_name,
+                "path": path,
+                "n_nodes": N,
+                "dim": L,
+                "chunk_len": T,
+                "inputs": [
+                    {"name": nm, "shape": list(s.shape), "dtype": "f32"}
+                    for nm, s in specs
+                ],
+                "outputs": [
+                    {"name": "W_T", "shape": [N, L], "dtype": "f32"},
+                    {"name": "MSD", "shape": [T, N], "dtype": "f32"},
+                ],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            print(f"lowered {name}: {len(text)} chars")
+
+    manifest = {"format": "hlo-text", "version": 1, "modules": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} modules to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernels: the per-iteration network-update hot spot.
+
+The DCD iteration is, per node k, a fused pass over N x L panels:
+mask-fill of the neighbour estimates, masked-residual computation, doubly
+masked gradient assembly (eq. (12)), the adapt scaled-accumulation
+(eq. (10)) and the combine (eq. (11)). The pure-jnp oracle in ``ref.py``
+materialises an N x N x L tensor through ~10 separate XLA ops; this kernel
+instead tiles the computation with grid=(N,) so each program touches only
+(N, L) panels resident in VMEM, writing a single (1, L) output row per
+program — one pass over the data instead of ten.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the panels are far below the
+VMEM budget (80 x 40 f32 = 12.8 KiB each), the arithmetic is VPU
+element-wise + row reductions (no MXU), so the kernel is memory-bound and
+fusion is the whole game. ``interpret=True`` everywhere: the CPU PJRT
+client cannot execute Mosaic custom-calls, and correctness is validated
+against ``ref.py`` through that path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dcd_kernel(w_ref, u_ref, d_ref, h_ref, q_ref, c_ref, a_ref, mu_ref,
+                wnew_ref, psi_ref):
+    """One program instance = one node k (grid=(N,))."""
+    k = pl.program_id(0)
+    W = w_ref[...]
+    U = u_ref[...]
+    D = d_ref[...][:, 0]
+    H = h_ref[...]
+    Q = q_ref[...]
+
+    wk = W[k, :]
+    uk = U[k, :]
+    hk = H[k, :]
+
+    # Node k's own residual: e_self = d_k - u_k^T w_k.
+    e_self = D[k] - jnp.sum(uk * wk)
+
+    # Filled estimates every neighbour l evaluates for node k:
+    #   x[l, :] = H_k o w_k + (1 - H_k) o w_l          (Alg. 1 step 5)
+    x = hk[None, :] * wk[None, :] + (1.0 - hk[None, :]) * W
+    # Residuals e[l] = d_l - u_l^T x[l].
+    e = D - jnp.sum(U * x, axis=1)
+    # Doubly-masked gradients (eq. (12)):
+    #   g[l, :] = Q_l o (u_l e[l]) + (1 - Q_l) o (u_k e_self)
+    g = Q * (U * e[:, None]) + (1.0 - Q) * (uk[None, :] * e_self)
+
+    # Adapt (eq. (10)): psi_k = w_k + mu_k sum_l c_{lk} g[l].
+    ck = c_ref[...][:, k]
+    psi_k = wk + mu_ref[...][k, 0] * jnp.sum(ck[:, None] * g, axis=0)
+
+    # Combine (eq. (11)). Sum the generic l-term for all l, then swap the
+    # l = k contribution a_kk (H_k o w_k + (1 - H_k) o psi_k) for a_kk psi_k,
+    # which collapses to adding a_kk H_k o (psi_k - w_k).
+    ak = a_ref[...][:, k]
+    fill = H * W + (1.0 - H) * psi_k[None, :]
+    tot = jnp.sum(ak[:, None] * fill, axis=0)
+    wnew = tot + a_ref[...][k, k] * hk * (psi_k - wk)
+
+    wnew_ref[0, :] = wnew
+    psi_ref[0, :] = psi_k
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dcd_step_pallas(W, U, D, H, Q, C, A, mu):
+    """Fused DCD network step. Same contract as ``ref.dcd_step_ref``."""
+    N, L = W.shape
+    full = lambda *shape: pl.BlockSpec(shape, lambda k: tuple(0 for _ in shape))
+    row = pl.BlockSpec((1, L), lambda k: (k, 0))
+    wnew, psi = pl.pallas_call(
+        _dcd_kernel,
+        grid=(N,),
+        in_specs=[
+            full(N, L),  # W
+            full(N, L),  # U
+            full(N, 1),  # D (column)
+            full(N, L),  # H
+            full(N, L),  # Q
+            full(N, N),  # C
+            full(N, N),  # A
+            full(N, 1),  # mu (column)
+        ],
+        out_specs=[row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, L), W.dtype),
+            jax.ShapeDtypeStruct((N, L), W.dtype),
+        ],
+        interpret=True,
+    )(W, U, D[:, None], H, Q, C, A, mu[:, None])
+    return wnew, psi
+
+
+def _partial_kernel(w_ref, u_ref, d_ref, h_ref, a_ref, mu_ref,
+                    wnew_ref, psi_ref):
+    """Partial-diffusion LMS step (eq. (8)); one program per node k."""
+    k = pl.program_id(0)
+    W = w_ref[...]
+    U = u_ref[...]
+    D = d_ref[...][:, 0]
+    H = h_ref[...]
+    mu = mu_ref[...][:, 0]
+
+    # Self-only adapt for every node (each program recomputes the full psi
+    # panel; N x L stays in VMEM and saves a second kernel launch).
+    e = D - jnp.sum(U * W, axis=1)
+    psi = W + mu[:, None] * U * e[:, None]
+
+    psi_k = psi[k, :]
+    ak = a_ref[...][:, k]
+    # fill[l] = H_l o psi_l + (1 - H_l) o psi_k ; fill[k] = psi_k exactly.
+    fill = H * psi + (1.0 - H) * psi_k[None, :]
+    wnew = jnp.sum(ak[:, None] * fill, axis=0)
+
+    wnew_ref[0, :] = wnew
+    psi_ref[0, :] = psi_k
+
+
+@functools.partial(jax.jit, static_argnames=())
+def partial_step_pallas(W, U, D, H, A, mu):
+    """Fused partial-diffusion step. Same contract as ``ref.partial_step_ref``."""
+    N, L = W.shape
+    full = lambda *shape: pl.BlockSpec(shape, lambda k: tuple(0 for _ in shape))
+    row = pl.BlockSpec((1, L), lambda k: (k, 0))
+    wnew, psi = pl.pallas_call(
+        _partial_kernel,
+        grid=(N,),
+        in_specs=[full(N, L), full(N, L), full(N, 1), full(N, L),
+                  full(N, N), full(N, 1)],
+        out_specs=[row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, L), W.dtype),
+            jax.ShapeDtypeStruct((N, L), W.dtype),
+        ],
+        interpret=True,
+    )(W, U, D[:, None], H, A, mu[:, None])
+    return wnew, psi

@@ -1,0 +1,102 @@
+"""Pure-jnp oracle for the network-step kernels.
+
+These reference implementations are the correctness ground truth for the
+Pallas kernels in ``dcd_kernel.py``: they follow the paper's equations as
+directly as possible (dense N x N x L intermediates, no fusion) and are
+compared entry-for-entry under pytest + hypothesis.
+
+Conventions (shared with the rust engine — see rust/src/algorithms/):
+  * ``W``  (N, L)  — local estimates w_{k,i-1}, row k = node k.
+  * ``U``  (N, L)  — regressors u_{k,i}.
+  * ``D``  (N,)    — desired responses d_k(i) (noise already included).
+  * ``H``  (N, L)  — 0/1 estimate-send masks; row k is H_{k,i}'s diagonal.
+  * ``Q``  (N, L)  — 0/1 gradient-send masks; row l is Q_{l,i}'s diagonal.
+  * ``C``  (N, N)  — right-stochastic adapt weights; entry [l, k] = c_{lk}.
+  * ``A``  (N, N)  — left-stochastic combine weights; entry [l, k] = a_{lk}.
+  * ``mu`` (N,)    — per-node step sizes.
+  * ``S``  (N, N)  — 0/1 RCD link-selection; [l, k] = 1 iff node k polls l.
+
+All masks/weights are float arrays (0.0/1.0 for binaries) so that the same
+buffers can be fed from rust without dtype juggling.
+"""
+
+import jax.numpy as jnp
+
+
+def dcd_step_ref(W, U, D, H, Q, C, A, mu):
+    """One synchronous DCD iteration (paper Alg. 1, eqs. (10)-(12)).
+
+    Generalises several algorithms:
+      * ``H = Q = 1`` and ``A = I``  -> diffusion LMS with A = I.
+      * ``Q = 1``  (i.e. M_grad = L) -> compressed diffusion LMS (CD).
+      * general H, Q                 -> doubly-compressed diffusion LMS.
+
+    Returns ``(W_new, psi)`` with shapes (N, L), (N, L).
+    """
+    # Filled estimate node l uses on behalf of node k (Alg. 1 step 5):
+    #   x[k, l, :] = H_k o w_k + (1 - H_k) o w_l
+    x = H[:, None, :] * W[:, None, :] + (1.0 - H[:, None, :]) * W[None, :, :]
+    # Residual at node l evaluated at the filled estimate: e[k, l].
+    e = D[None, :] - jnp.einsum("lj,klj->kl", U, x)
+    # Node k's own residual e_self[k] = d_k - u_k^T w_k.
+    e_self = D - jnp.sum(U * W, axis=1)
+    # Doubly-masked gradient g_{l,i} as seen by node k (eq. (12)):
+    #   g[k, l, :] = Q_l o (u_l e[k,l]) + (1 - Q_l) o (u_k e_self[k])
+    g = Q[None, :, :] * (U[None, :, :] * e[:, :, None]) + (
+        1.0 - Q[None, :, :]
+    ) * (U[:, None, :] * e_self[:, None, None])
+    # Adapt (eq. (10)): psi_k = w_k + mu_k sum_l c_{lk} g[k, l].
+    psi = W + mu[:, None] * jnp.einsum("lk,klj->kj", C, g)
+    # Combine (eq. (11)): the l = k term uses psi_k itself.
+    #   w_k = a_kk psi_k + sum_{l != k} a_lk (H_l o w_l + (1 - H_l) o psi_k)
+    fill = H[:, None, :] * W[:, None, :] + (1.0 - H[:, None, :]) * psi[None, :, :]
+    total = jnp.einsum("lk,lkj->kj", A, fill)
+    akk = jnp.diagonal(A)
+    # Swap the l = k term (a_kk (H_k o w_k + (1 - H_k) o psi_k)) for a_kk psi_k:
+    W_new = total + akk[:, None] * H * (psi - W)
+    return W_new, psi
+
+
+def atc_step_ref(W, U, D, C, A, mu):
+    """Textbook ATC diffusion LMS (eqs. (4)-(5)); the uncompressed baseline.
+
+    Note this differs from ``dcd_step_ref`` with all-ones masks when A != I:
+    ATC combines the *intermediate* estimates psi_l, while DCD reuses the
+    w_{l,i-1} received during adaptation. With A = I the two coincide.
+    """
+    # e[k, l] = d_l - u_l^T w_k ; psi_k = w_k + mu_k sum_l c_lk u_l e[k, l]
+    e = D[None, :] - W @ U.T  # (N, N): row k, col l
+    psi = W + mu[:, None] * jnp.einsum("lk,kl,lj->kj", C, e, U)
+    W_new = jnp.einsum("lk,lj->kj", A, psi)
+    return W_new, psi
+
+
+def rcd_step_ref(W, U, D, S, A, mu):
+    """Reduced-communication diffusion LMS [29] (paper eq. (7)).
+
+    Self-only adapt, then combine over the randomly selected neighbour
+    subset S (entries [l, k], diagonal ignored):
+      h_kk = 1 - sum_{l != k} S[l, k] a_lk
+      w_k  = h_kk psi_k + sum_{l != k} S[l, k] a_lk psi_l
+    """
+    N, _ = W.shape
+    psi = W + mu[:, None] * U * (D - jnp.sum(U * W, axis=1))[:, None]
+    offdiag = 1.0 - jnp.eye(N, dtype=W.dtype)
+    sel = S * A * offdiag  # [l, k] weight for neighbour l at node k
+    hkk = 1.0 - jnp.sum(sel, axis=0)  # (N,)
+    W_new = hkk[:, None] * psi + jnp.einsum("lk,lj->kj", sel, psi)
+    return W_new, psi
+
+
+def partial_step_ref(W, U, D, H, A, mu):
+    """Partial-diffusion LMS [31]-[33] (paper eq. (8)).
+
+    Self-only adapt; combine shares M entries of psi_l (mask row l), the
+    receiver substitutes its own psi_k for the missing ones. The l = k term
+    needs no correction because fill[k, k] = psi_k exactly.
+    """
+    psi = W + mu[:, None] * U * (D - jnp.sum(U * W, axis=1))[:, None]
+    # fill[l, k, :] = H_l o psi_l + (1 - H_l) o psi_k
+    fill = H[:, None, :] * psi[:, None, :] + (1.0 - H[:, None, :]) * psi[None, :, :]
+    W_new = jnp.einsum("lk,lkj->kj", A, fill)
+    return W_new, psi

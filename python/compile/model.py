@@ -1,0 +1,128 @@
+"""Layer-2 JAX network models: T-step scan chunks over the L1 kernels.
+
+Each ``make_*_chunk`` returns a function that advances the whole network T
+iterations with ``lax.scan`` and emits the per-node squared-deviation
+trajectory; ``aot.py`` lowers these once per (algorithm, N, L, T) to HLO
+text that the rust runtime executes. Chunking amortises PJRT dispatch: the
+rust coordinator feeds successive chunks, threading the final weights W_T
+of one chunk into the next.
+
+All inputs are runtime arguments (not baked constants) so the rust engine
+and this engine can be driven with *identical* data, masks and combiners —
+that equivalence is asserted by rust/tests/engines_agree.rs.
+
+Chunk contracts (all f32):
+  dcd:     (W0[N,L], U[T,N,L], D[T,N], H[T,N,L], Q[T,N,L],
+            C[N,N], A[N,N], mu[N], wo[L])           -> (W_T[N,L], MSD[T,N])
+  atc:     (W0, U, D, C, A, mu, wo)                 -> (W_T, MSD)
+  rcd:     (W0, U, D, S[T,N,N], A, mu, wo)          -> (W_T, MSD)
+  partial: (W0, U, D, H[T,N,L], A, mu, wo)          -> (W_T, MSD)
+
+MSD[i, k] = || wo - w_{k,i} ||^2 after the update at chunk-local step i.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.dcd_kernel import dcd_step_pallas, partial_step_pallas
+
+ALGORITHMS = ("dcd", "atc", "rcd", "partial")
+
+
+def _sqdev(W, wo):
+    d = wo[None, :] - W
+    return jnp.sum(d * d, axis=1)
+
+
+def make_dcd_chunk(use_pallas=True):
+    step = dcd_step_pallas if use_pallas else ref.dcd_step_ref
+
+    def chunk(W0, U, D, H, Q, C, A, mu, wo):
+        def body(W, inp):
+            u, d, h, q = inp
+            W_new, _psi = step(W, u, d, h, q, C, A, mu)
+            return W_new, _sqdev(W_new, wo)
+
+        W_T, msd = jax.lax.scan(body, W0, (U, D, H, Q))
+        return W_T, msd
+
+    return chunk
+
+
+def make_atc_chunk(use_pallas=True):
+    # ATC is the uncompressed baseline; its step is two einsums and does
+    # not warrant a dedicated kernel (the DCD kernel covers the fused case).
+    del use_pallas
+
+    def chunk(W0, U, D, C, A, mu, wo):
+        def body(W, inp):
+            u, d = inp
+            W_new, _psi = ref.atc_step_ref(W, u, d, C, A, mu)
+            return W_new, _sqdev(W_new, wo)
+
+        W_T, msd = jax.lax.scan(body, W0, (U, D))
+        return W_T, msd
+
+    return chunk
+
+
+def make_rcd_chunk(use_pallas=True):
+    del use_pallas
+
+    def chunk(W0, U, D, S, A, mu, wo):
+        def body(W, inp):
+            u, d, s = inp
+            W_new, _psi = ref.rcd_step_ref(W, u, d, s, A, mu)
+            return W_new, _sqdev(W_new, wo)
+
+        W_T, msd = jax.lax.scan(body, W0, (U, D, S))
+        return W_T, msd
+
+    return chunk
+
+
+def make_partial_chunk(use_pallas=True):
+    step = partial_step_pallas if use_pallas else ref.partial_step_ref
+
+    def chunk(W0, U, D, H, A, mu, wo):
+        def body(W, inp):
+            u, d, h = inp
+            W_new, _psi = step(W, u, d, h, A, mu)
+            return W_new, _sqdev(W_new, wo)
+
+        W_T, msd = jax.lax.scan(body, W0, (U, D, H))
+        return W_T, msd
+
+    return chunk
+
+
+def chunk_factory(algo, use_pallas=True):
+    return {
+        "dcd": make_dcd_chunk,
+        "atc": make_atc_chunk,
+        "rcd": make_rcd_chunk,
+        "partial": make_partial_chunk,
+    }[algo](use_pallas)
+
+
+def chunk_arg_specs(algo, N, L, T):
+    """ShapeDtypeStructs for lowering, in calling order, with names."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    common_head = [("W0", sd((N, L), f32)), ("U", sd((T, N, L), f32)),
+                   ("D", sd((T, N), f32))]
+    tail = [("A", sd((N, N), f32)), ("mu", sd((N,), f32)),
+            ("wo", sd((L,), f32))]
+    if algo == "dcd":
+        mid = [("H", sd((T, N, L), f32)), ("Q", sd((T, N, L), f32)),
+               ("C", sd((N, N), f32))]
+    elif algo == "atc":
+        mid = [("C", sd((N, N), f32))]
+    elif algo == "rcd":
+        mid = [("S", sd((T, N, N), f32))]
+    elif algo == "partial":
+        mid = [("H", sd((T, N, L), f32))]
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+    return common_head + mid + tail

@@ -1,0 +1,102 @@
+"""Hypothesis sweeps of the Pallas kernels' shape/parameter space.
+
+Each property draws network size, dimension, compression levels, dtypes
+and data, and asserts the kernel ≡ oracle identity plus structural
+invariants that must hold for *any* valid configuration.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dcd_kernel import dcd_step_pallas, partial_step_pallas
+
+
+@st.composite
+def dcd_problem(draw):
+    N = draw(st.integers(min_value=2, max_value=8))
+    L = draw(st.integers(min_value=1, max_value=8))
+    M = draw(st.integers(min_value=0, max_value=L))
+    Mg = draw(st.integers(min_value=0, max_value=L))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(N, L)).astype(np.float32)
+    U = rng.normal(size=(N, L)).astype(np.float32)
+    D = rng.normal(size=(N,)).astype(np.float32)
+
+    def masks(m):
+        out = np.zeros((N, L), np.float32)
+        for k in range(N):
+            out[k, rng.choice(L, size=m, replace=False)] = 1.0
+        return out
+
+    H, Q = masks(M), masks(Mg)
+    Craw = rng.random((N, N)).astype(np.float32) + 0.05
+    C = Craw / Craw.sum(axis=1, keepdims=True)
+    Araw = rng.random((N, N)).astype(np.float32) + 0.05
+    A = Araw / Araw.sum(axis=0, keepdims=True)
+    mu = (0.2 * rng.random(N)).astype(np.float32)
+    return W, U, D, H, Q, C, A, mu
+
+
+@settings(max_examples=60, deadline=None)
+@given(dcd_problem())
+def test_dcd_kernel_equals_oracle(problem):
+    W, U, D, H, Q, C, A, mu = problem
+    w_ref, p_ref = ref.dcd_step_ref(*map(jnp.asarray, (W, U, D, H, Q, C, A, mu)))
+    w_ker, p_ker = dcd_step_pallas(*map(jnp.asarray, (W, U, D, H, Q, C, A, mu)))
+    np.testing.assert_allclose(w_ker, w_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(p_ker, p_ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dcd_problem())
+def test_partial_kernel_equals_oracle(problem):
+    W, U, D, H, _Q, _C, A, mu = problem
+    w_ref, p_ref = ref.partial_step_ref(*map(jnp.asarray, (W, U, D, H, A, mu)))
+    w_ker, p_ker = partial_step_pallas(*map(jnp.asarray, (W, U, D, H, A, mu)))
+    np.testing.assert_allclose(w_ker, w_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(p_ker, p_ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dcd_problem())
+def test_exact_consensus_is_fixed_point(problem):
+    """If all nodes hold wo and data is noiseless, nothing moves —
+    for any masks and any combiners."""
+    W, U, _D, H, Q, C, A, mu = problem
+    N, L = W.shape
+    wo = W[0]
+    Wc = np.tile(wo, (N, 1))
+    D0 = np.sum(U * Wc, axis=1)
+    w_new, psi = dcd_step_pallas(*map(jnp.asarray, (Wc, U, D0, H, Q, C, A, mu)))
+    np.testing.assert_allclose(psi, Wc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(w_new, Wc, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dcd_problem())
+def test_zero_step_only_combines(problem):
+    """mu = 0 must freeze the adapt step: psi == W for any configuration."""
+    W, U, D, H, Q, C, A, _mu = problem
+    mu0 = np.zeros(W.shape[0], np.float32)
+    w_new, psi = dcd_step_pallas(*map(jnp.asarray, (W, U, D, H, Q, C, A, mu0)))
+    np.testing.assert_allclose(psi, W, rtol=1e-6, atol=1e-6)
+    # And the combine is then a convex recombination of rows of W:
+    # each output entry lies within [min, max] of the corresponding column.
+    w_new = np.asarray(w_new)
+    lo = W.min(axis=0) - 1e-5
+    hi = W.max(axis=0) + 1e-5
+    assert (w_new >= lo[None, :]).all() and (w_new <= hi[None, :]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(dcd_problem(), st.integers(min_value=0, max_value=10**6))
+def test_float64_agrees_with_float32(problem, _salt):
+    """The kernel math is dtype-generic: f64 run ≈ f32 run (loose tol)."""
+    W, U, D, H, Q, C, A, mu = problem
+    w32, _ = dcd_step_pallas(*map(jnp.asarray, (W, U, D, H, Q, C, A, mu)))
+    args64 = [jnp.asarray(x.astype(np.float64)) for x in (W, U, D, H, Q, C, A, mu)]
+    w64, _ = ref.dcd_step_ref(*args64)
+    np.testing.assert_allclose(np.asarray(w32, np.float64), w64, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compiled compute path: the
+AOT artifacts embed the Pallas kernels, and everything the rust runtime
+executes flows through them.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.dcd_kernel import dcd_step_pallas, partial_step_pallas
+
+
+def random_masks(rng, n, dim, m):
+    """n x dim binary mask matrix with exactly m ones per row."""
+    out = np.zeros((n, dim), np.float32)
+    for k in range(n):
+        out[k, rng.choice(dim, size=m, replace=False)] = 1.0
+    return out
+
+
+def random_problem(seed, N, L, M, Mg):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(N, L)).astype(np.float32)
+    U = rng.normal(size=(N, L)).astype(np.float32)
+    D = rng.normal(size=(N,)).astype(np.float32)
+    H = random_masks(rng, N, L, M)
+    Q = random_masks(rng, N, L, Mg)
+    Craw = rng.random((N, N)).astype(np.float32) + 0.1
+    C = Craw / Craw.sum(axis=1, keepdims=True)          # right-stochastic
+    Araw = rng.random((N, N)).astype(np.float32) + 0.1
+    A = Araw / Araw.sum(axis=0, keepdims=True)          # left-stochastic
+    mu = (0.05 + 0.1 * rng.random(N)).astype(np.float32)
+    return W, U, D, H, Q, C, A, mu
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("N,L,M,Mg", [(4, 3, 2, 1), (6, 5, 3, 1), (10, 5, 3, 1), (8, 8, 5, 4)])
+def test_dcd_kernel_matches_ref(seed, N, L, M, Mg):
+    W, U, D, H, Q, C, A, mu = random_problem(seed, N, L, M, Mg)
+    w_ref, p_ref = ref.dcd_step_ref(W, U, D, H, Q, C, A, mu)
+    w_ker, p_ker = dcd_step_pallas(W, U, D, H, Q, C, A, mu)
+    np.testing.assert_allclose(w_ker, w_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(p_ker, p_ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("N,L,M", [(4, 3, 2), (10, 5, 3), (8, 8, 5)])
+def test_partial_kernel_matches_ref(seed, N, L, M):
+    W, U, D, H, _Q, _C, A, mu = random_problem(seed, N, L, M, 1)
+    w_ref, p_ref = ref.partial_step_ref(W, U, D, H, A, mu)
+    w_ker, p_ker = partial_step_pallas(W, U, D, H, A, mu)
+    np.testing.assert_allclose(w_ker, w_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(p_ker, p_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_dcd_full_masks_equals_atc_with_identity_A():
+    """With M = M_grad = L and A = I, DCD *is* diffusion LMS (paper §III)."""
+    N, L = 6, 4
+    W, U, D, _H, _Q, C, _A, mu = random_problem(3, N, L, 2, 2)
+    ones = np.ones((N, L), np.float32)
+    eye = np.eye(N, dtype=np.float32)
+    w_dcd, p_dcd = ref.dcd_step_ref(W, U, D, ones, ones, C, eye, mu)
+    w_atc, p_atc = ref.atc_step_ref(W, U, D, C, eye, mu)
+    np.testing.assert_allclose(w_dcd, w_atc, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(p_dcd, p_atc, rtol=1e-5, atol=1e-6)
+
+
+def test_dcd_q_full_is_cd():
+    """M_grad = L (Q = 1) is the compressed-diffusion special case: the
+    gradient part must then equal the ATC gradient evaluated at the filled
+    estimates, and psi must not depend on Q at all."""
+    N, L, M = 5, 4, 2
+    W, U, D, H, _Q, C, _A, mu = random_problem(7, N, L, M, 2)
+    ones = np.ones((N, L), np.float32)
+    eye = np.eye(N, dtype=np.float32)
+    w1, p1 = ref.dcd_step_ref(W, U, D, H, ones, C, eye, mu)
+    # Q full => g[k,l] = u_l e[k,l]; independent reimplementation:
+    x = H[:, None, :] * W[:, None, :] + (1 - H[:, None, :]) * W[None, :, :]
+    e = D[None, :] - np.einsum("lj,klj->kl", U, x)
+    g = U[None, :, :] * e[:, :, None]
+    psi = W + mu[:, None] * np.einsum("lk,klj->kj", C, g)
+    np.testing.assert_allclose(p1, psi, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(w1, psi, rtol=1e-4, atol=1e-5)  # A = I
+
+
+def test_combine_is_convex_mixture():
+    """Combine output lies in the affine hull of {psi_k} U {w_l}: with
+    constant weight vectors everywhere, combine returns that constant."""
+    N, L = 5, 3
+    _, U, D, H, Q, C, A, mu = random_problem(11, N, L, 2, 1)
+    const = np.full((N, L), 2.5, np.float32)
+    # At W = const with D = U @ const, every residual is zero => psi = W,
+    # and the combine of identical vectors is the same vector (A columns
+    # sum to 1).
+    D0 = np.sum(U * const, axis=1)
+    w_new, psi = ref.dcd_step_ref(const, U, D0, H, Q, C, A, mu)
+    np.testing.assert_allclose(psi, const, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(w_new, const, rtol=1e-5, atol=1e-5)
+
+
+def test_rcd_no_links_is_pure_lms():
+    """With no selected neighbours, RCD must collapse to stand-alone LMS."""
+    N, L = 5, 3
+    W, U, D, _H, _Q, _C, A, mu = random_problem(13, N, L, 2, 1)
+    S = np.zeros((N, N), np.float32)
+    w_new, psi = ref.rcd_step_ref(W, U, D, S, A, mu)
+    lms = W + mu[:, None] * U * (D - np.sum(U * W, axis=1))[:, None]
+    np.testing.assert_allclose(psi, lms, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(w_new, lms, rtol=1e-5, atol=1e-6)
+
+
+def test_partial_full_mask_is_plain_diffusion_combine():
+    """H = 1 makes partial diffusion an ordinary combine of the psi_l."""
+    N, L = 5, 3
+    W, U, D, _H, _Q, _C, A, mu = random_problem(17, N, L, 2, 1)
+    ones = np.ones((N, L), np.float32)
+    w_new, psi = ref.partial_step_ref(W, U, D, ones, A, mu)
+    expect = np.einsum("lk,lj->kj", A, np.asarray(psi))
+    np.testing.assert_allclose(w_new, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_gradient_descends_cost():
+    """One DCD step from w = 0 with small mu must reduce the instantaneous
+    squared error on average (sanity of sign conventions)."""
+    rng = np.random.default_rng(23)
+    N, L = 8, 6
+    wo = rng.normal(size=L).astype(np.float32)
+    U = rng.normal(size=(N, L)).astype(np.float32)
+    D = (U @ wo).astype(np.float32)
+    W = np.zeros((N, L), np.float32)
+    H = random_masks(rng, N, L, 4)
+    Q = random_masks(rng, N, L, 3)
+    C = np.eye(N, dtype=np.float32)
+    A = np.eye(N, dtype=np.float32)
+    mu = np.full(N, 0.05, np.float32)
+    w_new, _ = ref.dcd_step_ref(W, U, D, H, Q, C, A, mu)
+    before = np.linalg.norm(W - wo[None, :])
+    after = np.linalg.norm(np.asarray(w_new) - wo[None, :])
+    assert after < before

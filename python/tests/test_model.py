@@ -1,0 +1,108 @@
+"""L2 correctness: scan chunks vs repeated single steps, MSD semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from .test_kernel import random_masks, random_problem
+
+
+def _chunk_inputs(seed, N, L, T, M, Mg):
+    rng = np.random.default_rng(seed)
+    W0 = np.zeros((N, L), np.float32)
+    wo = rng.normal(size=L).astype(np.float32)
+    U = rng.normal(size=(T, N, L)).astype(np.float32)
+    V = (0.03 * rng.normal(size=(T, N))).astype(np.float32)
+    D = np.einsum("tnl,l->tn", U, wo).astype(np.float32) + V
+    H = np.stack([random_masks(rng, N, L, M) for _ in range(T)])
+    Q = np.stack([random_masks(rng, N, L, Mg) for _ in range(T)])
+    Craw = rng.random((N, N)).astype(np.float32) + 0.1
+    C = Craw / Craw.sum(axis=1, keepdims=True)
+    Araw = rng.random((N, N)).astype(np.float32) + 0.1
+    A = Araw / Araw.sum(axis=0, keepdims=True)
+    mu = np.full(N, 0.05, np.float32)
+    return W0, U, D, H, Q, C, A, mu, wo
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_dcd_chunk_equals_unrolled_steps(use_pallas):
+    N, L, T = 5, 4, 7
+    W0, U, D, H, Q, C, A, mu, wo = _chunk_inputs(0, N, L, T, 2, 1)
+    chunk = model.make_dcd_chunk(use_pallas=use_pallas)
+    W_T, msd = chunk(*map(jnp.asarray, (W0, U, D, H, Q, C, A, mu, wo)))
+    # Unrolled reference.
+    W = jnp.asarray(W0)
+    for t in range(T):
+        W, _ = ref.dcd_step_ref(W, U[t], D[t], H[t], Q[t], C, A, mu)
+        expect = np.sum((wo[None, :] - np.asarray(W)) ** 2, axis=1)
+        np.testing.assert_allclose(msd[t], expect, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(W_T, W, rtol=1e-4, atol=1e-6)
+
+
+def test_chunks_compose():
+    """Two T-chunks threaded by W_T must equal one 2T-chunk."""
+    N, L, T = 4, 3, 6
+    W0, U, D, H, Q, C, A, mu, wo = _chunk_inputs(1, N, L, 2 * T, 2, 1)
+    chunk = model.make_dcd_chunk(use_pallas=True)
+    as_j = jnp.asarray
+    W_full, msd_full = chunk(as_j(W0), as_j(U), as_j(D), as_j(H), as_j(Q),
+                             as_j(C), as_j(A), as_j(mu), as_j(wo))
+    W_a, msd_a = chunk(as_j(W0), as_j(U[:T]), as_j(D[:T]), as_j(H[:T]),
+                       as_j(Q[:T]), as_j(C), as_j(A), as_j(mu), as_j(wo))
+    W_b, msd_b = chunk(W_a, as_j(U[T:]), as_j(D[T:]), as_j(H[T:]),
+                       as_j(Q[T:]), as_j(C), as_j(A), as_j(mu), as_j(wo))
+    np.testing.assert_allclose(W_b, W_full, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.concatenate([msd_a, msd_b]), msd_full, rtol=1e-4, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("algo", model.ALGORITHMS)
+def test_chunks_converge_noiseless(algo):
+    """Every algorithm's chunk must drive MSD down on noiseless data."""
+    N, L, T = 6, 4, 60
+    rng = np.random.default_rng(5)
+    wo = rng.normal(size=L).astype(np.float32)
+    U = rng.normal(size=(T, N, L)).astype(np.float32)
+    D = np.einsum("tnl,l->tn", U, wo).astype(np.float32)
+    W0 = np.zeros((N, L), np.float32)
+    eye = np.eye(N, dtype=np.float32)
+    ring = 0.5 * eye + 0.25 * np.roll(eye, 1, 0) + 0.25 * np.roll(eye, -1, 0)
+    mu = np.full(N, 0.08, np.float32)
+    chunk = model.chunk_factory(algo, use_pallas=True)
+    as_j = jnp.asarray
+    if algo == "dcd":
+        H = np.stack([random_masks(rng, N, L, 2) for _ in range(T)])
+        Q = np.stack([random_masks(rng, N, L, 2) for _ in range(T)])
+        _, msd = chunk(as_j(W0), as_j(U), as_j(D), as_j(H), as_j(Q),
+                       as_j(ring), as_j(ring), as_j(mu), as_j(wo))
+    elif algo == "atc":
+        _, msd = chunk(as_j(W0), as_j(U), as_j(D), as_j(ring), as_j(ring),
+                       as_j(mu), as_j(wo))
+    elif algo == "rcd":
+        S = (rng.random((T, N, N)) < 0.5).astype(np.float32)
+        _, msd = chunk(as_j(W0), as_j(U), as_j(D), as_j(S), as_j(ring),
+                       as_j(mu), as_j(wo))
+    else:  # partial
+        H = np.stack([random_masks(rng, N, L, 2) for _ in range(T)])
+        _, msd = chunk(as_j(W0), as_j(U), as_j(D), as_j(H), as_j(ring),
+                       as_j(mu), as_j(wo))
+    start = float(np.mean(msd[0]))
+    end = float(np.mean(msd[-1]))
+    assert end < 0.2 * start, f"{algo}: msd {start} -> {end}"
+
+
+def test_arg_specs_match_chunk_signature():
+    for algo in model.ALGORITHMS:
+        N, L, T = 4, 3, 5
+        specs = model.chunk_arg_specs(algo, N, L, T)
+        names = [nm for nm, _ in specs]
+        assert names[0] == "W0" and names[-1] == "wo"
+        # Every spec shape must be accepted by the chunk without error.
+        chunk = model.chunk_factory(algo, use_pallas=False)
+        args = [jnp.zeros(s.shape, s.dtype) for _, s in specs]
+        W_T, msd = chunk(*args)
+        assert W_T.shape == (N, L)
+        assert msd.shape == (T, N)

@@ -1,0 +1,64 @@
+//! Bench `fig3_sweep`: regenerates Fig. 3 (center/right) — steady-state
+//! MSD vs compression ratio for CD and DCD — and the A2 ablation (how to
+//! split a fixed budget M + M∇).
+//!
+//! Uses the xla engine when the exp2 artifacts exist, else the rust
+//! engine (pass --fast for a shrunk sweep on the rust engine).
+
+use dcd_lms::bench_support::{bench, fast_mode, Table};
+use dcd_lms::config::Exp2Config;
+use dcd_lms::experiments::{run_exp2, Engine};
+use dcd_lms::runtime::Runtime;
+use std::time::Duration;
+
+fn main() {
+    let fast = fast_mode();
+    let mut cfg = Exp2Config::default();
+    let engine;
+    if fast {
+        cfg.n_nodes = 16;
+        cfg.dim = 16;
+        cfg.runs = 4;
+        cfg.iters = 800;
+        cfg.cd_m_values = vec![12, 8, 4];
+        cfg.dcd_pairs = vec![(8, 8), (4, 4), (2, 2), (6, 2), (2, 6)];
+        engine = Engine::Rust;
+    } else {
+        cfg.runs = 10;
+        cfg.iters = 1_500;
+        // A2 ablation points: fixed budget M + M∇ = 10, different splits.
+        cfg.dcd_pairs.extend_from_slice(&[(8, 2), (2, 8)]);
+        engine = match Runtime::open_default() {
+            Ok(rt) if rt.manifest().find("dcd", "exp2").is_some() => Engine::Xla,
+            _ => Engine::Rust,
+        };
+    }
+
+    println!(
+        "== Fig. 3 (center/right): MSD vs compression ratio, N={} L={} ({engine:?} engine) ==\n",
+        cfg.n_nodes, cfg.dim
+    );
+    let mut out = None;
+    let stats = bench("exp2 sweep", 0, Duration::from_millis(1), || {
+        out = Some(run_exp2(&cfg, engine, None, true).unwrap());
+    });
+    println!("{stats}\n");
+    let out = out.unwrap();
+
+    println!("baseline (diffusion LMS, ratio 1): {:.2} dB\n", out.baseline_db);
+    let mut t = Table::new(&["algo", "ratio", "steady-state MSD (dB)"]);
+    for (r, db) in &out.cd {
+        t.row(&["CD".into(), format!("{r:.3}"), format!("{db:.2}")]);
+    }
+    for (r, db) in &out.dcd {
+        t.row(&["DCD".into(), format!("{r:.3}"), format!("{db:.2}")]);
+    }
+    t.print();
+
+    let cd_max = out.cd.iter().map(|p| p.0).fold(0.0, f64::max);
+    let dcd_max = out.dcd.iter().map(|p| p.0).fold(0.0, f64::max);
+    println!(
+        "\nshape check: CD's max reachable ratio {cd_max:.2} << DCD's {dcd_max:.2} \
+         (paper: CD caps at 2L/(L+M) < 2; DCD reaches 2L/(M+M∇) ≈ 20+)"
+    );
+}

@@ -1,0 +1,94 @@
+//! Bench `step_micro`: per-iteration microbenchmarks of the hot paths —
+//! the rust engine's network step for every algorithm, the xla engine's
+//! amortised per-step cost (chunked scan), and the PJRT dispatch
+//! overhead (chunk length 8 vs 500). This is the L3 §Perf workhorse.
+
+use dcd_lms::algorithms::{
+    Algorithm, CommMeter, Dcd, DiffusionLms, NetworkConfig, PartialDiffusion, Rcd, StepData,
+};
+use dcd_lms::bench_support::{bench, fast_mode, Table};
+use dcd_lms::coordinator::runner::{MonteCarlo, XlaAlgo};
+use dcd_lms::datamodel::DataModel;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::runtime::Runtime;
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+use std::time::Duration;
+
+fn net(n: usize, l: usize) -> NetworkConfig {
+    let graph = Graph::ring(n, 2);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    NetworkConfig { graph, c, a, mu: vec![0.01; n], dim: l }
+}
+
+fn main() {
+    let fast = fast_mode();
+    let budget = Duration::from_millis(if fast { 80 } else { 400 });
+
+    println!("== per-iteration microbenchmarks ==\n");
+    let mut table = Table::new(&["hot path", "config", "ns/iteration"]);
+
+    // --- rust engine, all algorithms, two network sizes -----------------
+    for &(n, l) in &[(10usize, 5usize), (80, 40)] {
+        let network = net(n, l);
+        let mut rng = Pcg64::new(1, 0);
+        let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        model.sample_iteration(&mut rng, &mut u, &mut d);
+        let mut comm = CommMeter::new(n);
+
+        let mut algs: Vec<Box<dyn Algorithm>> = vec![
+            Box::new(DiffusionLms::new(network.clone())),
+            Box::new(Dcd::cd(network.clone(), (l * 3) / 5)),
+            Box::new(Dcd::new(network.clone(), l / 16 + 1, l / 16 + 1)),
+            Box::new(PartialDiffusion::new(network.clone(), l / 10 + 1)),
+            Box::new(Rcd::new(network.clone(), 1)),
+        ];
+        for alg in algs.iter_mut() {
+            let name = alg.name().to_string();
+            let stats = bench(&name, 3, budget, || {
+                alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+            });
+            table.row(&[
+                format!("rust {}", name),
+                format!("N={n} L={l}"),
+                format!("{:.0}", stats.median.as_nanos()),
+            ]);
+        }
+    }
+
+    // --- xla engine: amortised per-step cost via chunked scan ------------
+    if let Ok(mut rt) = Runtime::open_default() {
+        for config in ["smoke", "exp1", "exp3"] {
+            let Some(spec) = rt.manifest().find("dcd", config).cloned() else {
+                continue;
+            };
+            if fast && config != "smoke" {
+                continue;
+            }
+            let (n, l, t) = (spec.n_nodes, spec.dim, spec.chunk_len);
+            let network = net(n, l);
+            let mut rng = Pcg64::new(2, 0);
+            let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+            let mc = MonteCarlo { runs: 1, iters: t, seed: 1, record_every: 1 };
+            let (c32, a32, mu32) = (network.c_f32(), network.a_f32(), network.mu_f32());
+            let algo = XlaAlgo::Dcd { m: (l / 2).max(1), m_grad: (l / 3).max(1) };
+            // Warm the compile cache outside the timed region.
+            mc.run_xla(&mut rt, config, &algo, &model, &c32, &a32, &mu32).unwrap();
+            let stats = bench(&format!("xla chunk {config}"), 1, budget, || {
+                mc.run_xla(&mut rt, config, &algo, &model, &c32, &a32, &mu32).unwrap();
+            });
+            table.row(&[
+                format!("xla dcd ({config})"),
+                format!("N={n} L={l} T={t}"),
+                format!("{:.0}", stats.median.as_nanos() as f64 / t as f64),
+            ]);
+        }
+    } else {
+        println!("(artifacts unavailable — xla rows skipped; run `make artifacts`)");
+    }
+
+    table.print();
+    println!("\nnote: xla rows amortise PJRT dispatch over the scan chunk (T steps/call).");
+}

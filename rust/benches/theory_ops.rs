@@ -1,0 +1,89 @@
+//! Bench `theory_ops`: the closed-form theory engine — operator
+//! precomputation, one Σ-recursion application, the noise functional,
+//! and a full steady-state solve (the cost behind every theoretical
+//! curve of Fig. 3 left).
+
+use dcd_lms::bench_support::{bench, fast_mode, Table};
+use dcd_lms::datamodel::DataModel;
+use dcd_lms::linalg::Mat;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::theory::{MsdModel, TheorySetup};
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+use std::time::Duration;
+
+fn setup(n: usize, l: usize, m: usize, mg: usize) -> (TheorySetup, DataModel) {
+    let graph = if n == 10 { Graph::paper_ten_node() } else { Graph::ring(n, 2) };
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let mut rng = Pcg64::new(3, 0);
+    let model = DataModel::paper(n, l, 0.8, 1.2, 1e-3, &mut rng);
+    (
+        TheorySetup {
+            n_nodes: n,
+            dim: l,
+            m,
+            m_grad: mg,
+            c,
+            mu: vec![5e-3; n],
+            sigma_u2: model.sigma_u2.clone(),
+            sigma_v2: model.sigma_v2.clone(),
+        },
+        model,
+    )
+}
+
+fn main() {
+    let fast = fast_mode();
+    let budget = Duration::from_millis(if fast { 60 } else { 300 });
+    println!("== theory engine (Σ-recursion) ==\n");
+    let mut table = Table::new(&["operation", "config", "median"]);
+
+    for &(n, l) in &[(10usize, 5usize), (20, 10)] {
+        if fast && n > 10 {
+            continue;
+        }
+        let (s, model) = setup(n, l, (3 * l) / 5, l / 5 + 1);
+        let stats = bench("model build (precompute)", 1, budget, || {
+            std::hint::black_box(MsdModel::new(s.clone()));
+        });
+        table.row(&[
+            "precompute coefficients".into(),
+            format!("N={n} L={l}"),
+            format!("{:?}", stats.median),
+        ]);
+
+        let msd = MsdModel::new(s.clone());
+        let sigma = Mat::eye(n * l);
+        let stats = bench("apply", 2, budget, || {
+            std::hint::black_box(msd.apply(&sigma));
+        });
+        table.row(&[
+            "one Σ' = F(Σ) application".into(),
+            format!("N={n} L={l}"),
+            format!("{:?}", stats.median),
+        ]);
+
+        let stats = bench("noise", 2, budget, || {
+            std::hint::black_box(msd.noise(&sigma));
+        });
+        table.row(&[
+            "noise functional".into(),
+            format!("N={n} L={l}"),
+            format!("{:?}", stats.median),
+        ]);
+
+        let stats = bench("steady-state", 0, Duration::from_millis(1), || {
+            std::hint::black_box(msd.steady_state(&model.wo, 1e-8, 20_000));
+        });
+        table.row(&[
+            "steady-state solve".into(),
+            format!("N={n} L={l}"),
+            format!("{:?}", stats.median),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nnote: the (NL)²x(NL)² matrix 𝓕 of eq. (68) is never materialised — for the \
+         paper's Exp. 2 shape it would be 2500²x2500²; the operator form makes the \
+         theory tractable at N=10 and the xla engine covers N=50."
+    );
+}

@@ -1,0 +1,482 @@
+//! Doubly-compressed diffusion LMS (the paper's contribution, Alg. 1).
+//!
+//! Per iteration, node k draws H_{k,i} (M of L entries) and Q_{k,i}
+//! (M_grad of L entries). It sends the masked estimate H_k ∘ w_k to each
+//! neighbour; each neighbour l fills the missing entries with its own
+//! w_l, evaluates the instantaneous gradient there, and returns the
+//! Q_l-masked gradient. Node k fills the missing gradient entries with
+//! its own gradient (eq. (12)), adapts (eq. (10)), and combines the
+//! masked estimates received earlier (eq. (11)).
+//!
+//! The compressed-diffusion LMS (CD) of §IV is the `m_grad = L` special
+//! case, built by [`Dcd::cd`].
+
+use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use crate::rng::Pcg64;
+
+/// Externally supplied selection patterns for one iteration (used by the
+/// engine-equivalence tests to drive rust and xla with identical masks).
+#[derive(Debug, Clone)]
+pub struct DcdMasks {
+    /// Row-major (N x L) 0/1; row k = diag of H_{k,i}.
+    pub h: Vec<f64>,
+    /// Row-major (N x L) 0/1; row l = diag of Q_{l,i}.
+    pub q: Vec<f64>,
+}
+
+/// DCD algorithm state.
+pub struct Dcd {
+    cfg: NetworkConfig,
+    /// Entries shared per estimate (M).
+    pub m: usize,
+    /// Entries shared per gradient (M_grad).
+    pub m_grad: usize,
+    /// When true (CD / plain-LMS limits), gradients are not exchanged at
+    /// all (C = I); estimate sharing still happens for the combine step.
+    grad_sharing: bool,
+    name: &'static str,
+    /// Std-dev of additive noise on every *received* scalar (imperfect
+    /// links, cf. paper refs. [14], [33]); 0 = ideal links.
+    pub link_noise_sigma: f64,
+    w: Vec<f64>,    // (N, L) current estimates
+    psi: Vec<f64>,  // (N, L) intermediate estimates
+    wnew: Vec<f64>, // (N, L) scratch for the combine
+    h: Vec<f64>,    // (N, L) current H masks
+    q: Vec<f64>,    // (N, L) current Q masks
+    /// Per-iteration link-noise samples for the estimate exchange
+    /// ((N, L); entry (k, j) perturbs H_k w_k as received by neighbours).
+    est_noise: Vec<f64>,
+    /// Reused per-step residual buffer (allocation-free hot loop).
+    e_self: Vec<f64>,
+    scratch: Vec<usize>,
+}
+
+impl Dcd {
+    pub fn new(cfg: NetworkConfig, m: usize, m_grad: usize) -> Self {
+        Self::with_name(cfg, m, m_grad, "dcd")
+    }
+
+    /// Compressed diffusion LMS: full gradients (M_grad = L).
+    pub fn cd(cfg: NetworkConfig, m: usize) -> Self {
+        let l = cfg.dim;
+        Self::with_name(cfg, m, l, "cd")
+    }
+
+    fn with_name(cfg: NetworkConfig, m: usize, m_grad: usize, name: &'static str) -> Self {
+        assert!(m <= cfg.dim && m_grad <= cfg.dim, "M, M_grad must be <= L");
+        let n = cfg.n_nodes();
+        let l = cfg.dim;
+        // C == I disables gradient exchange entirely.
+        let grad_sharing = {
+            let mut is_identity = true;
+            for a in 0..n {
+                for b in 0..n {
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    if (cfg.c[(a, b)] - want).abs() > 1e-12 {
+                        is_identity = false;
+                    }
+                }
+            }
+            !is_identity
+        };
+        Self {
+            cfg,
+            m,
+            m_grad,
+            grad_sharing,
+            name,
+            link_noise_sigma: 0.0,
+            w: vec![0.0; n * l],
+            psi: vec![0.0; n * l],
+            wnew: vec![0.0; n * l],
+            h: vec![0.0; n * l],
+            q: vec![0.0; n * l],
+            est_noise: vec![0.0; n * l],
+            e_self: vec![0.0; n],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Enable imperfect-exchange simulation: every received scalar is
+    /// perturbed by N(0, sigma²) noise (failure injection; cf. the
+    /// noisy-links analyses of paper refs. [14], [33]).
+    pub fn with_link_noise(mut self, sigma: f64) -> Self {
+        self.link_noise_sigma = sigma;
+        self
+    }
+
+    pub fn config(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+
+    /// Draw fresh H/Q masks for every node (directly into the f64
+    /// buffers — no f32 staging; §Perf).
+    fn draw_masks(&mut self, rng: &mut Pcg64) {
+        let l = self.cfg.dim;
+        let n = self.cfg.n_nodes();
+        for k in 0..n {
+            let hk = &mut self.h[k * l..(k + 1) * l];
+            hk.iter_mut().for_each(|x| *x = 0.0);
+            rng.sample_indices(l, self.m, &mut self.scratch);
+            for &i in self.scratch.iter() {
+                hk[i] = 1.0;
+            }
+            let qk = &mut self.q[k * l..(k + 1) * l];
+            qk.iter_mut().for_each(|x| *x = 0.0);
+            rng.sample_indices(l, self.m_grad, &mut self.scratch);
+            for &i in self.scratch.iter() {
+                qk[i] = 1.0;
+            }
+        }
+    }
+
+    /// One iteration with externally supplied masks (no RNG draw; ideal
+    /// links — the engine-equivalence tests depend on exactness).
+    pub fn step_with_masks(
+        &mut self,
+        data: StepData<'_>,
+        masks: &DcdMasks,
+        comm: &mut CommMeter,
+    ) {
+        self.h.copy_from_slice(&masks.h);
+        self.q.copy_from_slice(&masks.q);
+        self.step_inner(data, comm, None);
+    }
+
+    fn step_inner(
+        &mut self,
+        data: StepData<'_>,
+        comm: &mut CommMeter,
+        mut noise_rng: Option<&mut Pcg64>,
+    ) {
+        let n = self.cfg.n_nodes();
+        let l = self.cfg.dim;
+        let (u, d) = (data.u, data.d);
+        debug_assert_eq!(u.len(), n * l);
+        debug_assert_eq!(d.len(), n);
+
+        // Imperfect links: each node's broadcast H_k o w_k is perturbed
+        // once per iteration (broadcast medium — all receivers see the
+        // same corrupted frame); gradient replies get fresh per-link
+        // noise below.
+        let sigma = self.link_noise_sigma;
+        if sigma > 0.0 {
+            if let Some(rng) = noise_rng.as_deref_mut() {
+                rng.fill_gaussian(&mut self.est_noise, sigma);
+            } else {
+                self.est_noise.iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        // sigma == 0: est_noise stays all-zero (invariant from init).
+
+        // -- Adapt (eqs. (10)/(12)) -------------------------------------
+        // Per-node self residuals e_self[k] = d_k - u_k^T w_k.
+        // (§Perf: the whole step is allocation-free — `e_self` is the
+        // only per-call buffer and the per-node state is addressed by
+        // disjoint-field slices instead of clones; see EXPERIMENTS.md.)
+        self.e_self.resize(n, 0.0);
+        for k in 0..n {
+            let uk = &u[k * l..(k + 1) * l];
+            let wk = &self.w[k * l..(k + 1) * l];
+            self.e_self[k] = d[k] - dot(uk, wk);
+        }
+
+        let w = &self.w;
+        let h = &self.h;
+        let q = &self.q;
+        let est = &self.est_noise;
+        let psi = &mut self.psi;
+
+        for k in 0..n {
+            let base = k * l;
+            let mu_k = self.cfg.mu[k];
+            let e_self_k = self.e_self[k];
+            let wk = &w[base..base + l];
+            let uk = &u[base..base + l];
+            let hk = &h[base..base + l];
+            let nk = &est[base..base + l];
+
+            // psi_k starts from w_k plus the (free) self-gradient term.
+            let c_kk = mu_k * self.cfg.c[(k, k)];
+            {
+                let psi_k = &mut psi[base..base + l];
+                for ((p, &wj), &uj) in psi_k.iter_mut().zip(wk).zip(uk) {
+                    *p = wj + c_kk * uj * e_self_k;
+                }
+            }
+
+            if self.grad_sharing {
+                for &lnb in self.cfg.graph.neighbors(k) {
+                    let c_lk = self.cfg.c[(lnb, k)];
+                    // Node k sends H_k o w_k to neighbour l  (M scalars).
+                    comm.send(k, self.m);
+                    // Neighbour l fills with its own w_l, evaluates its
+                    // instantaneous gradient there...
+                    let lb = lnb * l;
+                    let wl = &w[lb..lb + l];
+                    let ul = &u[lb..lb + l];
+                    let ql = &q[lb..lb + l];
+                    let mut e = d[lnb];
+                    for (((&hj, &wj), (&nj, &wlj)), &ulj) in
+                        hk.iter().zip(wk).zip(nk.iter().zip(wl)).zip(ul)
+                    {
+                        // The received selected entries carry link noise.
+                        e -= ulj * (hj * (wj + nj) + (1.0 - hj) * wlj);
+                    }
+                    // ... and returns the Q_l-masked entries (M_grad scalars).
+                    comm.send(lnb, self.m_grad);
+                    if c_lk == 0.0 {
+                        continue;
+                    }
+                    let mu_c = mu_k * c_lk;
+                    let psi_k = &mut psi[base..base + l];
+                    if sigma > 0.0 {
+                        // Noisy-link path (per-entry RNG draw, unvectorised).
+                        let rng = noise_rng.as_deref_mut();
+                        if let Some(rng) = rng {
+                            for j in 0..l {
+                                let qlj = ql[j];
+                                let gn = if qlj != 0.0 { sigma * rng.next_gaussian() } else { 0.0 };
+                                let g = qlj * (ul[j] * e + gn)
+                                    + (1.0 - qlj) * (uk[j] * e_self_k);
+                                psi_k[j] += mu_c * g;
+                            }
+                            continue;
+                        }
+                    }
+                    // Ideal-link fast path (eq. (12)): fully vectorisable.
+                    for (((p, &qlj), &ulj), &ukj) in
+                        psi_k.iter_mut().zip(ql).zip(ul).zip(uk)
+                    {
+                        *p += mu_c * (qlj * (ulj * e) + (1.0 - qlj) * (ukj * e_self_k));
+                    }
+                }
+            } else {
+                // C = I: no gradient exchange, but the estimates still have
+                // to reach the neighbours for the combine step below.
+                comm.send(k, self.m * self.cfg.graph.neighbors(k).len());
+            }
+        }
+
+        // -- Combine (eq. (11)) ------------------------------------------
+        // Uses the H_l o w_{l,i-1} received during the adapt phase (no
+        // additional traffic).
+        let psi = &self.psi;
+        let wnew = &mut self.wnew;
+        for k in 0..n {
+            let base = k * l;
+            let a_kk = self.cfg.a[(k, k)];
+            let psi_k = &psi[base..base + l];
+            {
+                let out = &mut wnew[base..base + l];
+                for (o, &p) in out.iter_mut().zip(psi_k) {
+                    *o = a_kk * p;
+                }
+            }
+            for &lnb in self.cfg.graph.neighbors(k) {
+                let a_lk = self.cfg.a[(lnb, k)];
+                if a_lk == 0.0 {
+                    continue;
+                }
+                let lb = lnb * l;
+                let wl = &w[lb..lb + l];
+                let hl = &h[lb..lb + l];
+                let nl = &est[lb..lb + l];
+                let out = &mut wnew[base..base + l];
+                for ((o, &p), ((&hj, &wj), &nj)) in out
+                    .iter_mut()
+                    .zip(psi_k)
+                    .zip(hl.iter().zip(wl).zip(nl))
+                {
+                    // Same received (possibly noisy) frame as the adapt phase.
+                    *o += a_lk * (hj * (wj + nj) + (1.0 - hj) * p);
+                }
+            }
+        }
+        std::mem::swap(&mut self.w, &mut self.wnew);
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+impl Algorithm for Dcd {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn step(&mut self, data: StepData<'_>, rng: &mut Pcg64, comm: &mut CommMeter) {
+        self.draw_masks(rng);
+        self.step_inner(data, comm, Some(rng));
+    }
+
+    fn weights(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn reset(&mut self) {
+        self.w.iter_mut().for_each(|x| *x = 0.0);
+        self.psi.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn expected_scalars_per_iter(&self) -> f64 {
+        let per_link = if self.grad_sharing {
+            (self.m + self.m_grad) as f64
+        } else {
+            self.m as f64
+        };
+        (0..self.cfg.n_nodes())
+            .map(|k| self.cfg.graph.neighbors(k).len() as f64 * per_link)
+            .sum()
+    }
+
+    fn compression_ratio(&self) -> Option<f64> {
+        let l = self.cfg.dim as f64;
+        Some(2.0 * l / (self.m as f64 + self.m_grad as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn cfg(n: usize, l: usize, mu: f64) -> NetworkConfig {
+        let graph = Graph::ring(n, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        NetworkConfig { graph, c, a, mu: vec![mu; n], dim: l }
+    }
+
+    #[test]
+    fn converges_noiseless() {
+        let mut rng = Pcg64::new(1, 0);
+        let n = 6;
+        let l = 4;
+        let wo: Vec<f64> = (0..l).map(|j| 0.3 * j as f64 - 0.4).collect();
+        let mut alg = Dcd::new(cfg(n, l, 0.08), 2, 2);
+        let mut comm = CommMeter::new(n);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        for _ in 0..800 {
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for k in 0..n {
+                d[k] = dot(&u[k * l..(k + 1) * l], &wo);
+            }
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        }
+        assert!(alg.msd(&wo) < 1e-4, "msd {}", alg.msd(&wo));
+    }
+
+    #[test]
+    fn full_masks_equal_diffusion_lms_with_identity_a() {
+        // M = M_grad = L and A = I reduce DCD to diffusion LMS (§III).
+        let mut rng = Pcg64::new(3, 0);
+        let n = 5;
+        let l = 3;
+        let graph = Graph::ring(n, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = crate::linalg::Mat::eye(n);
+        let cfg = NetworkConfig { graph, c, a, mu: vec![0.05; n], dim: l };
+        let mut dcd = Dcd::new(cfg.clone(), l, l);
+        let mut lms = super::super::DiffusionLms::new(cfg);
+        let mut comm = CommMeter::new(n);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        for _ in 0..30 {
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for (k, dk) in d.iter_mut().enumerate() {
+                *dk = 0.5 * u[k * l] + rng.next_gaussian() * 0.01;
+            }
+            dcd.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+            lms.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+            for (x, y) in dcd.weights().iter().zip(lms.weights().iter()) {
+                assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn comm_meter_matches_expectation() {
+        let mut rng = Pcg64::new(5, 0);
+        let n = 6;
+        let l = 5;
+        let mut alg = Dcd::new(cfg(n, l, 0.01), 3, 1);
+        let mut comm = CommMeter::new(n);
+        let u = vec![0.1; n * l];
+        let d = vec![0.2; n];
+        let iters = 7;
+        for _ in 0..iters {
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        }
+        assert_eq!(
+            comm.scalars,
+            (alg.expected_scalars_per_iter() * iters as f64) as u64
+        );
+    }
+
+    #[test]
+    fn cd_ratio_formula() {
+        let alg = Dcd::cd(cfg(4, 10, 0.01), 3);
+        // CD: 2L / (M + L) = 20 / 13.
+        assert!((alg.compression_ratio().unwrap() - 20.0 / 13.0).abs() < 1e-12);
+        let alg = Dcd::new(cfg(4, 10, 0.01), 3, 2);
+        assert!((alg.compression_ratio().unwrap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_noise_raises_floor_but_stays_stable() {
+        // Failure injection: noisy links (refs [14], [33]) degrade the
+        // steady state without destroying convergence at small mu.
+        let run = |sigma: f64| {
+            let mut rng = Pcg64::new(19, 0);
+            let n = 6;
+            let l = 4;
+            let wo: Vec<f64> = (0..l).map(|j| 0.25 * j as f64 - 0.3).collect();
+            let mut alg = Dcd::new(cfg(n, l, 0.05), 2, 2).with_link_noise(sigma);
+            let mut comm = CommMeter::new(n);
+            let mut u = vec![0.0; n * l];
+            let mut d = vec![0.0; n];
+            let mut tail = 0.0;
+            for it in 0..3000 {
+                for x in u.iter_mut() {
+                    *x = rng.next_gaussian();
+                }
+                for k in 0..n {
+                    d[k] = dot(&u[k * l..(k + 1) * l], &wo) + 0.01 * rng.next_gaussian();
+                }
+                alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+                if it >= 2700 {
+                    tail += alg.msd(&wo);
+                }
+            }
+            tail / 300.0
+        };
+        let clean = run(0.0);
+        let noisy = run(0.1);
+        let very_noisy = run(0.4);
+        assert!(noisy > 2.0 * clean, "clean {clean} noisy {noisy}");
+        assert!(very_noisy > noisy, "noisy {noisy} very {very_noisy}");
+        assert!(very_noisy.is_finite() && very_noisy < 1.0);
+    }
+
+    #[test]
+    fn identity_c_skips_gradient_traffic() {
+        let mut c = cfg(4, 6, 0.01);
+        c.c = crate::linalg::Mat::eye(4);
+        let mut alg = Dcd::new(c, 2, 3);
+        let mut rng = Pcg64::new(7, 0);
+        let mut comm = CommMeter::new(4);
+        let u = vec![0.1; 24];
+        let d = vec![0.0; 4];
+        alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        // Ring of 4, 1 hop: every node has 2 neighbours; M = 2 scalars each.
+        assert_eq!(comm.scalars, (4 * 2 * 2) as u64);
+    }
+}

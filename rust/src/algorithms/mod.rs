@@ -1,0 +1,32 @@
+//! Algorithm library: the paper's DCD plus every compared baseline.
+//!
+//! All five algorithms of §IV are implemented message-accurately in f64:
+//!
+//! * [`DiffusionLms`] — ATC diffusion LMS, eqs. (4)–(5), general A and C.
+//! * [`Rcd`] — reduced-communication diffusion LMS [29], eq. (7).
+//! * [`PartialDiffusion`] — partial-diffusion LMS [31]–[33], eq. (8).
+//! * [`Dcd`] — the paper's doubly-compressed diffusion LMS, Alg. 1 /
+//!   eqs. (10)–(12); the compressed-diffusion LMS (CD) is the
+//!   `M_grad = L` special case (constructor [`Dcd::cd`]).
+//! * [`CompressiveDiffusion`] — the projection-based compressive
+//!   diffusion LMS [30], eq. (9) (the third reduction family of Fig. 1).
+//!
+//! Each step consumes a synchronous data snapshot and an RNG (for the
+//! per-iteration selection matrices), updates the per-node state, and
+//! reports every scalar that crossed a link to the [`CommMeter`] — the
+//! meter totals are what the energy model of Experiment 3 consumes, and
+//! property tests pin them to the paper's closed-form compression ratios.
+
+mod compressive;
+mod dcd;
+mod diffusion_lms;
+mod partial;
+mod rcd;
+mod traits;
+
+pub use compressive::CompressiveDiffusion;
+pub use dcd::{Dcd, DcdMasks};
+pub use diffusion_lms::DiffusionLms;
+pub use partial::{PartialDiffusion, PartialMasks};
+pub use rcd::{Rcd, RcdSelection};
+pub use traits::{Algorithm, CommMeter, NetworkConfig, StepData};

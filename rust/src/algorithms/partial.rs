@@ -1,0 +1,221 @@
+//! Partial-diffusion LMS [31]–[33] (paper eq. (8)).
+//!
+//! C = I (self-only adapt). Each node broadcasts M of the L entries of
+//! its intermediate estimate ψ; receivers substitute their own entries
+//! for the missing ones:
+//!
+//!   w_k = a_kk ψ_k + Σ_{l≠k} a_lk ( H_l ψ_l + (I − H_l) ψ_k ).
+
+use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use crate::rng::Pcg64;
+
+/// Externally supplied masks for one iteration (N x L row-major 0/1).
+#[derive(Debug, Clone)]
+pub struct PartialMasks {
+    pub h: Vec<f64>,
+}
+
+/// Partial-diffusion LMS state.
+pub struct PartialDiffusion {
+    cfg: NetworkConfig,
+    /// Entries of ψ shared per iteration (M).
+    pub m: usize,
+    w: Vec<f64>,
+    psi: Vec<f64>,
+    wnew: Vec<f64>,
+    h: Vec<f64>,
+    scratch: Vec<usize>,
+}
+
+impl PartialDiffusion {
+    pub fn new(cfg: NetworkConfig, m: usize) -> Self {
+        assert!(m <= cfg.dim);
+        let n = cfg.n_nodes();
+        let l = cfg.dim;
+        Self {
+            cfg,
+            m,
+            w: vec![0.0; n * l],
+            psi: vec![0.0; n * l],
+            wnew: vec![0.0; n * l],
+            h: vec![0.0; n * l],
+            scratch: Vec::new(),
+        }
+    }
+
+    fn draw_masks(&mut self, rng: &mut Pcg64) {
+        let l = self.cfg.dim;
+        let mut mask32 = vec![0f32; l];
+        for k in 0..self.cfg.n_nodes() {
+            rng.fill_mask(&mut mask32, self.m, &mut self.scratch);
+            for (dst, &src) in self.h[k * l..(k + 1) * l].iter_mut().zip(mask32.iter()) {
+                *dst = src as f64;
+            }
+        }
+    }
+
+    pub fn step_with_masks(
+        &mut self,
+        data: StepData<'_>,
+        masks: &PartialMasks,
+        comm: &mut CommMeter,
+    ) {
+        self.h.copy_from_slice(&masks.h);
+        self.step_inner(data, comm);
+    }
+
+    fn step_inner(&mut self, data: StepData<'_>, comm: &mut CommMeter) {
+        let n = self.cfg.n_nodes();
+        let l = self.cfg.dim;
+        let (u, d) = (data.u, data.d);
+
+        // Self-only adapt.
+        for k in 0..n {
+            let uk = &u[k * l..(k + 1) * l];
+            let wk = &self.w[k * l..(k + 1) * l];
+            let e = d[k] - dot(uk, wk);
+            let mu_k = self.cfg.mu[k];
+            let psi_k = &mut self.psi[k * l..(k + 1) * l];
+            for j in 0..l {
+                psi_k[j] = wk[j] + mu_k * uk[j] * e;
+            }
+        }
+
+        // Masked combine (eq. (8)); each node ships M entries per neighbour.
+        for k in 0..n {
+            comm.send(k, self.m * self.cfg.graph.neighbors(k).len());
+        }
+        for k in 0..n {
+            let a_kk = self.cfg.a[(k, k)];
+            let psi_k: Vec<f64> = self.psi[k * l..(k + 1) * l].to_vec();
+            let out = &mut self.wnew[k * l..(k + 1) * l];
+            for j in 0..l {
+                out[j] = a_kk * psi_k[j];
+            }
+            for &lnb in self.cfg.graph.neighbors(k) {
+                let a_lk = self.cfg.a[(lnb, k)];
+                if a_lk == 0.0 {
+                    continue;
+                }
+                let psi_l = &self.psi[lnb * l..(lnb + 1) * l];
+                let h_l = &self.h[lnb * l..(lnb + 1) * l];
+                for j in 0..l {
+                    out[j] += a_lk * (h_l[j] * psi_l[j] + (1.0 - h_l[j]) * psi_k[j]);
+                }
+            }
+        }
+        std::mem::swap(&mut self.w, &mut self.wnew);
+    }
+}
+
+impl Algorithm for PartialDiffusion {
+    fn name(&self) -> &'static str {
+        "partial-diffusion"
+    }
+
+    fn step(&mut self, data: StepData<'_>, rng: &mut Pcg64, comm: &mut CommMeter) {
+        self.draw_masks(rng);
+        self.step_inner(data, comm);
+    }
+
+    fn weights(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn reset(&mut self) {
+        self.w.iter_mut().for_each(|x| *x = 0.0);
+        self.psi.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn expected_scalars_per_iter(&self) -> f64 {
+        (0..self.cfg.n_nodes())
+            .map(|k| (self.cfg.graph.neighbors(k).len() * self.m) as f64)
+            .sum()
+    }
+
+    /// Ratio vs. the 2L-per-link diffusion LMS baseline: 2L / M.
+    fn compression_ratio(&self) -> Option<f64> {
+        Some(2.0 * self.cfg.dim as f64 / self.m as f64)
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn cfg(n: usize, l: usize, mu: f64) -> NetworkConfig {
+        let graph = Graph::ring(n, 1);
+        let c = crate::linalg::Mat::eye(n);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        NetworkConfig { graph, c, a, mu: vec![mu; n], dim: l }
+    }
+
+    #[test]
+    fn converges_noiseless() {
+        let mut rng = Pcg64::new(6, 0);
+        let n = 8;
+        let l = 4;
+        let wo: Vec<f64> = (0..l).map(|j| -0.1 * j as f64 + 0.5).collect();
+        let mut alg = PartialDiffusion::new(cfg(n, l, 0.1), 2);
+        let mut comm = CommMeter::new(n);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        for _ in 0..1500 {
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for k in 0..n {
+                d[k] = dot(&u[k * l..(k + 1) * l], &wo);
+            }
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        }
+        assert!(alg.msd(&wo) < 1e-4, "msd {}", alg.msd(&wo));
+    }
+
+    #[test]
+    fn meter_and_ratio() {
+        let n = 6;
+        let l = 8;
+        let mut alg = PartialDiffusion::new(cfg(n, l, 0.05), 2);
+        let mut rng = Pcg64::new(8, 0);
+        let mut comm = CommMeter::new(n);
+        let u = vec![0.0; n * l];
+        let d = vec![0.0; n];
+        alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        assert_eq!(comm.scalars, (6 * 2 * 2) as u64);
+        assert!((alg.compression_ratio().unwrap() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_mask_equals_plain_combine() {
+        // M = L: partial diffusion == standard (A, C=I) diffusion LMS.
+        let n = 5;
+        let l = 3;
+        let network = cfg(n, l, 0.07);
+        let mut pd = PartialDiffusion::new(network.clone(), l);
+        let mut lms = super::super::DiffusionLms::new(network);
+        let mut rng = Pcg64::new(10, 0);
+        let mut comm = CommMeter::new(n);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        for _ in 0..25 {
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for (k, dk) in d.iter_mut().enumerate() {
+                *dk = u[k * l] * 0.7 + 0.01 * rng.next_gaussian();
+            }
+            pd.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+            lms.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+            for (x, y) in pd.weights().iter().zip(lms.weights().iter()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+}

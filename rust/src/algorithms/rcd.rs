@@ -1,0 +1,246 @@
+//! Reduced-communication diffusion LMS [29] (paper eq. (7)).
+//!
+//! C = I (self-only adapt). At each iteration every node k selects a
+//! random subset of `m_k` of its neighbours; only the selected neighbours
+//! transmit their full intermediate estimates (L scalars). The combine
+//! reweights the diagonal so the weights still sum to one:
+//!
+//!   h_kk,i = 1 − Σ_{l ∈ selected} a_lk,
+//!   w_k,i  = h_kk,i ψ_k,i + Σ_{l ∈ selected} a_lk ψ_l,i.
+
+use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use crate::rng::Pcg64;
+
+/// Externally supplied neighbour selection for one iteration: row-major
+/// (N x N) 0/1, entry [l, k] = 1 iff node k polls neighbour l.
+#[derive(Debug, Clone)]
+pub struct RcdSelection {
+    pub s: Vec<f64>,
+}
+
+/// RCD algorithm state.
+pub struct Rcd {
+    cfg: NetworkConfig,
+    /// Number of neighbours polled per iteration (m_k, same for all k,
+    /// capped at the node degree).
+    pub m_links: usize,
+    w: Vec<f64>,
+    psi: Vec<f64>,
+    wnew: Vec<f64>,
+    sel: Vec<f64>, // (N x N) current selection, [l * n + k]
+    scratch: Vec<usize>,
+}
+
+impl Rcd {
+    pub fn new(cfg: NetworkConfig, m_links: usize) -> Self {
+        let n = cfg.n_nodes();
+        let l = cfg.dim;
+        Self {
+            cfg,
+            m_links,
+            w: vec![0.0; n * l],
+            psi: vec![0.0; n * l],
+            wnew: vec![0.0; n * l],
+            sel: vec![0.0; n * n],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Selection probability p_k = m_k / |N_k| (eq. (6)).
+    pub fn selection_probability(&self, k: usize) -> f64 {
+        let nk = self.cfg.graph.degree_incl(k) as f64;
+        (self.m_links as f64 / nk).min(1.0)
+    }
+
+    fn draw_selection(&mut self, rng: &mut Pcg64) {
+        let n = self.cfg.n_nodes();
+        self.sel.iter_mut().for_each(|x| *x = 0.0);
+        for k in 0..n {
+            let nbrs = self.cfg.graph.neighbors(k);
+            let m = self.m_links.min(nbrs.len());
+            rng.sample_indices(nbrs.len(), m, &mut self.scratch);
+            for &idx in self.scratch.iter() {
+                let l = nbrs[idx];
+                self.sel[l * n + k] = 1.0;
+            }
+        }
+    }
+
+    /// One iteration with an externally supplied selection pattern.
+    pub fn step_with_selection(
+        &mut self,
+        data: StepData<'_>,
+        selection: &RcdSelection,
+        comm: &mut CommMeter,
+    ) {
+        self.sel.copy_from_slice(&selection.s);
+        self.step_inner(data, comm);
+    }
+
+    fn step_inner(&mut self, data: StepData<'_>, comm: &mut CommMeter) {
+        let n = self.cfg.n_nodes();
+        let l = self.cfg.dim;
+        let (u, d) = (data.u, data.d);
+
+        // Self-only adapt.
+        for k in 0..n {
+            let uk = &u[k * l..(k + 1) * l];
+            let wk = &self.w[k * l..(k + 1) * l];
+            let e = d[k] - dot(uk, wk);
+            let mu_k = self.cfg.mu[k];
+            let psi_k = &mut self.psi[k * l..(k + 1) * l];
+            for j in 0..l {
+                psi_k[j] = wk[j] + mu_k * uk[j] * e;
+            }
+        }
+
+        // Combine over the selected subset with diagonal reweighting.
+        for k in 0..n {
+            let mut h_kk = 1.0;
+            let out = &mut self.wnew[k * l..(k + 1) * l];
+            out.iter_mut().for_each(|x| *x = 0.0);
+            for &lnb in self.cfg.graph.neighbors(k) {
+                if self.sel[lnb * n + k] == 0.0 {
+                    continue;
+                }
+                // Selected neighbour transmits its full psi (L scalars).
+                comm.send(lnb, l);
+                let a_lk = self.cfg.a[(lnb, k)];
+                h_kk -= a_lk;
+                let psi_l = &self.psi[lnb * l..(lnb + 1) * l];
+                for j in 0..l {
+                    out[j] += a_lk * psi_l[j];
+                }
+            }
+            let psi_k = &self.psi[k * l..(k + 1) * l];
+            for j in 0..l {
+                out[j] += h_kk * psi_k[j];
+            }
+        }
+        std::mem::swap(&mut self.w, &mut self.wnew);
+    }
+}
+
+impl Algorithm for Rcd {
+    fn name(&self) -> &'static str {
+        "rcd"
+    }
+
+    fn step(&mut self, data: StepData<'_>, rng: &mut Pcg64, comm: &mut CommMeter) {
+        self.draw_selection(rng);
+        self.step_inner(data, comm);
+    }
+
+    fn weights(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn reset(&mut self) {
+        self.w.iter_mut().for_each(|x| *x = 0.0);
+        self.psi.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn expected_scalars_per_iter(&self) -> f64 {
+        let l = self.cfg.dim as f64;
+        (0..self.cfg.n_nodes())
+            .map(|k| self.m_links.min(self.cfg.graph.neighbors(k).len()) as f64 * l)
+            .sum()
+    }
+
+    /// Ratio vs. the 2L-per-link diffusion LMS baseline: the expected
+    /// per-link traffic is p_k L, so r = 2 / p̄ with p̄ the mean selection
+    /// probability.
+    fn compression_ratio(&self) -> Option<f64> {
+        let n = self.cfg.n_nodes();
+        let p_mean: f64 =
+            (0..n).map(|k| self.selection_probability(k)).sum::<f64>() / n as f64;
+        Some(2.0 / p_mean)
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn cfg(n: usize, l: usize, mu: f64) -> NetworkConfig {
+        let graph = Graph::ring(n, 2);
+        let c = crate::linalg::Mat::eye(n);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        NetworkConfig { graph, c, a, mu: vec![mu; n], dim: l }
+    }
+
+    #[test]
+    fn converges_noiseless() {
+        let mut rng = Pcg64::new(2, 0);
+        let n = 8;
+        let l = 4;
+        let wo: Vec<f64> = (0..l).map(|j| 0.2 * j as f64 + 0.1).collect();
+        let mut alg = Rcd::new(cfg(n, l, 0.1), 2);
+        let mut comm = CommMeter::new(n);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        for _ in 0..1200 {
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for k in 0..n {
+                d[k] = dot(&u[k * l..(k + 1) * l], &wo);
+            }
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        }
+        assert!(alg.msd(&wo) < 1e-4, "msd {}", alg.msd(&wo));
+    }
+
+    #[test]
+    fn meter_matches_expectation() {
+        let n = 6;
+        let l = 5;
+        let mut alg = Rcd::new(cfg(n, l, 0.05), 3);
+        let mut rng = Pcg64::new(4, 0);
+        let mut comm = CommMeter::new(n);
+        let u = vec![0.0; n * l];
+        let d = vec![0.0; n];
+        for _ in 0..10 {
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        }
+        // Ring(6,2): every node has 4 neighbours, 3 polled, L scalars each.
+        assert_eq!(comm.scalars, 10 * 6 * 3 * 5);
+        assert_eq!(alg.expected_scalars_per_iter() as u64 * 10, comm.scalars);
+    }
+
+    #[test]
+    fn combine_weights_sum_to_one() {
+        // With all psi equal, combine must return the same vector for any
+        // random selection (diagonal reweighting).
+        let n = 6;
+        let l = 3;
+        let mut alg = Rcd::new(cfg(n, l, 0.0), 1);
+        // mu = 0 keeps psi = w; seed w with a constant row.
+        for k in 0..n {
+            for j in 0..l {
+                alg.w[k * l + j] = 2.5;
+            }
+        }
+        let mut rng = Pcg64::new(9, 0);
+        let mut comm = CommMeter::new(n);
+        let u = vec![0.3; n * l];
+        let d = vec![0.1; n];
+        alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        for &x in alg.weights() {
+            assert!((x - 2.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn selection_probability_eq6() {
+        let alg = Rcd::new(cfg(8, 3, 0.1), 2);
+        // Ring(8,2): |N_k| = 5 including self.
+        assert!((alg.selection_probability(0) - 2.0 / 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,127 @@
+//! Bench harness (the `criterion` substitute, DESIGN.md §2 S15).
+//!
+//! Warms up, runs timed repetitions until a time budget is exhausted,
+//! and reports median / IQR. Benches print paper-style tables so
+//! `cargo bench` regenerates every figure/table of the evaluation.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub median: Duration,
+    pub p25: Duration,
+    pub p75: Duration,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    pub fn per_unit(&self, units: usize) -> f64 {
+        self.median.as_secs_f64() / units.max(1) as f64
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<42} median {:>12?}  IQR [{:>10?} … {:>10?}]  ({} iters)",
+            self.name, self.median, self.p25, self.p75, self.iters
+        )
+    }
+}
+
+/// Time `f` repeatedly within `budget`, after `warmup` runs.
+pub fn bench(name: &str, warmup: usize, budget: Duration, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        median: q(0.5),
+        p25: q(0.25),
+        p75: q(0.75),
+        iters: samples.len(),
+    }
+}
+
+/// Simple aligned table printer for paper-style outputs.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// `--fast` support: benches honour DCD_BENCH_FAST=1 to shrink workloads
+/// (used by `make test` smoke and CI-style runs).
+pub fn fast_mode() -> bool {
+    std::env::var("DCD_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--fast")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_quartiles() {
+        let stats = bench("noop", 2, Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(stats.p25 <= stats.median);
+        assert!(stats.median <= stats.p75);
+        assert!(stats.iters >= 3);
+        assert!(stats.per_unit(10) >= 0.0);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["algo", "msd"]);
+        t.row(&["dcd".into(), "-38.2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,232 @@
+//! CLI argument parser (the `clap` substitute, DESIGN.md §2 S11).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! repeated options, and positional arguments, with generated help text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Flag (no value) vs option (takes a value).
+    pub takes_value: bool,
+    /// May be given multiple times.
+    pub repeated: bool,
+}
+
+/// A parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    pub values: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl ParsedArgs {
+    pub fn flag(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+}
+
+/// A subcommand definition.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, repeated: false });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, repeated: false });
+        self
+    }
+
+    pub fn opt_repeated(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, repeated: true });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse the arguments following the subcommand name.
+    pub fn parse(&self, args: &[String]) -> Result<ParsedArgs, String> {
+        let mut out = ParsedArgs::default();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .spec(name)
+                    .ok_or_else(|| format!("unknown option --{name} (see `{} --help`)", self.name))?;
+                let value = if !spec.takes_value {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    String::new()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| format!("--{name} requires a value"))?
+                        .clone()
+                };
+                let slot = out.values.entry(name.to_string()).or_default();
+                if !slot.is_empty() && !spec.repeated && spec.takes_value {
+                    return Err(format!("--{name} given more than once"));
+                }
+                slot.push(value);
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let rep = if o.repeated { " (repeatable)" } else { "" };
+            s.push_str(&format!("  --{}{val}\n      {}{rep}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+/// Top-level application: subcommand dispatch + global help.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\ncommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nrun `<command> --help` for command options\n");
+        s
+    }
+
+    /// Split argv into (command, parsed args). Returns `Err(help_text)`
+    /// for `--help`/missing/unknown commands.
+    pub fn dispatch(&self, argv: &[String]) -> Result<(&Command, ParsedArgs), String> {
+        let Some(first) = argv.first() else {
+            return Err(self.help());
+        };
+        if first == "--help" || first == "-h" || first == "help" {
+            return Err(self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == first)
+            .ok_or_else(|| format!("unknown command {first:?}\n\n{}", self.help()))?;
+        let rest = &argv[1..];
+        if rest.iter().any(|a| a == "--help" || a == "-h") {
+            return Err(cmd.help());
+        }
+        let parsed = cmd.parse(rest)?;
+        Ok((cmd, parsed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run things")
+            .flag("fast", "fewer iterations")
+            .opt("runs", "MC runs")
+            .opt_repeated("set", "override")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_options_positionals() {
+        let p = cmd()
+            .parse(&s(&["--fast", "--runs", "5", "pos1", "--set=a.b=1", "--set", "c.d=2"]))
+            .unwrap();
+        assert!(p.flag("fast"));
+        assert!(!p.flag("slow"));
+        assert_eq!(p.get("runs"), Some("5"));
+        assert_eq!(p.get_or("runs", 0usize).unwrap(), 5);
+        assert_eq!(p.get_all("set"), &["a.b=1".to_string(), "c.d=2".to_string()]);
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_values() {
+        assert!(cmd().parse(&s(&["--bogus"])).is_err());
+        assert!(cmd().parse(&s(&["--runs"])).is_err());
+        assert!(cmd().parse(&s(&["--fast=1"])).is_err());
+        assert!(cmd().parse(&s(&["--runs", "1", "--runs", "2"])).is_err());
+        let err = cmd().parse(&s(&["--runs", "x"])).unwrap().get_or("runs", 0usize);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App {
+            name: "dcd-lms",
+            about: "test",
+            commands: vec![cmd(), Command::new("info", "print info")],
+        };
+        let (c, p) = app.dispatch(&s(&["run", "--fast"])).unwrap();
+        assert_eq!(c.name, "run");
+        assert!(p.flag("fast"));
+        assert!(app.dispatch(&s(&["nope"])).is_err());
+        assert!(app.dispatch(&s(&[])).is_err());
+        assert!(app.dispatch(&s(&["run", "--help"])).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny INI-style parser for experiment config files:
+//!
+//! ```ini
+//! # comment
+//! [exp1]
+//! runs = 100
+//! mu = 1e-3
+//! ```
+//!
+//! Sections group keys; `key = value` with `#`/`;` comments. Values are
+//! kept as strings; typed parsing happens at the consumer.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct IniDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl IniDoc {
+    pub fn parse(src: &str) -> Result<Self, String> {
+        let mut doc = IniDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                doc.sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                return Err(format!("line {}: expected `key = value`", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    /// Insert/override a value using `section.key=value` dotted syntax
+    /// (CLI `--set`).
+    pub fn set_dotted(&mut self, dotted: &str) -> Result<(), String> {
+        let (path, value) = dotted
+            .split_once('=')
+            .ok_or_else(|| format!("--set {dotted:?}: expected section.key=value"))?;
+        let (section, key) = path
+            .split_once('.')
+            .ok_or_else(|| format!("--set {dotted:?}: expected section.key=value"))?;
+        self.sections
+            .entry(section.trim().to_string())
+            .or_default()
+            .insert(key.trim().to_string(), value.trim().to_string());
+        Ok(())
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find(['#', ';']) {
+        Some(pos) => &line[..pos],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let doc = IniDoc::parse(
+            "# top comment\n[a]\nx = 1 ; inline\ny = hello world\n\n[b]\nz=2\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a", "x"), Some("1"));
+        assert_eq!(doc.get("a", "y"), Some("hello world"));
+        assert_eq!(doc.get("b", "z"), Some("2"));
+        assert_eq!(doc.get("b", "missing"), None);
+        assert_eq!(doc.sections().count(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(IniDoc::parse("[unterminated\n").is_err());
+        assert!(IniDoc::parse("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn set_dotted_overrides() {
+        let mut doc = IniDoc::parse("[exp1]\nruns = 1\n").unwrap();
+        doc.set_dotted("exp1.runs=9").unwrap();
+        doc.set_dotted("exp2.iters = 50").unwrap();
+        assert_eq!(doc.get("exp1", "runs"), Some("9"));
+        assert_eq!(doc.get("exp2", "iters"), Some("50"));
+        assert!(doc.set_dotted("no-equals").is_err());
+        assert!(doc.set_dotted("nodot=1").is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! Config system: experiment presets (the paper's §IV settings, Tables I
+//! and II) plus an INI-style config-file / key=value override layer.
+//!
+//! Precedence: preset defaults < config file < CLI `--set key=value`.
+
+mod ini;
+pub use ini::IniDoc;
+
+use crate::energy::EnergyParams;
+
+/// Experiment 1 (Fig. 3 left): N = 10, L = 5, M = 3, M_grad = 1,
+/// μ = 1e-3, σ²_v = 1e-3, 100 MC runs.
+#[derive(Debug, Clone)]
+pub struct Exp1Config {
+    pub n_nodes: usize,
+    pub dim: usize,
+    pub m: usize,
+    pub m_grad: usize,
+    pub mu: f64,
+    pub sigma_v2: f64,
+    /// Regressor-variance range (Fig. 2 right, Experiment 1 row).
+    pub u2_min: f64,
+    pub u2_max: f64,
+    pub runs: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for Exp1Config {
+    fn default() -> Self {
+        Self {
+            n_nodes: 10,
+            dim: 5,
+            m: 3,
+            m_grad: 1,
+            mu: 1e-3,
+            sigma_v2: 1e-3,
+            u2_min: 0.8,
+            u2_max: 1.2,
+            runs: 100,
+            iters: 40_000,
+            seed: 2017,
+        }
+    }
+}
+
+/// Experiment 2 (Fig. 3 center/right): N = 50, L = 50, μ = 3e-2;
+/// MSD-vs-compression-ratio sweeps.
+#[derive(Debug, Clone)]
+pub struct Exp2Config {
+    pub n_nodes: usize,
+    pub dim: usize,
+    pub mu: f64,
+    pub sigma_v2: f64,
+    pub u2_min: f64,
+    pub u2_max: f64,
+    pub runs: usize,
+    pub iters: usize,
+    pub seed: u64,
+    /// M values for the CD sweep (ratio 2L/(M+L)).
+    pub cd_m_values: Vec<usize>,
+    /// (M, M_grad) pairs for the DCD sweep (ratio 2L/(M+M_grad)).
+    pub dcd_pairs: Vec<(usize, usize)>,
+}
+
+impl Default for Exp2Config {
+    fn default() -> Self {
+        Self {
+            n_nodes: 50,
+            dim: 50,
+            mu: 3e-2,
+            sigma_v2: 1e-3,
+            // Experiment 2's regressor variances (Fig. 2 bottom-right) are
+            // milder than Experiment 1's: with σ²_u ≈ 1 and L = 50,
+            // μ = 3e-2 sits at the mean-square stability edge for the
+            // heavily-masked CD endpoint (M = 5) — the paper's setup is
+            // only consistent with smaller variances.
+            u2_min: 0.4,
+            u2_max: 0.8,
+            runs: 10,
+            iters: 4_000,
+            seed: 2018,
+            // Ratios 2L/(M+L): 100/95 ... 100/55 (paper: max 100/55 at M = 5).
+            cd_m_values: vec![45, 35, 25, 15, 5],
+            // Ratios 2L/(M+M_grad): from 100/90 up to 20 (M + M_grad = 5).
+            dcd_pairs: vec![
+                (45, 45),
+                (35, 35),
+                (25, 25),
+                (15, 15),
+                (10, 10),
+                (5, 5),
+                (4, 2),
+                (3, 2),
+                (2, 2),
+                (3, 1),
+                (2, 1),
+            ],
+        }
+    }
+}
+
+/// Experiment 3 (Fig. 4): N = 80 hillside WSN, L = 40, ratio r = 20
+/// (CD: 80/65), step sizes from Table II.
+#[derive(Debug, Clone)]
+pub struct Exp3Config {
+    pub n_nodes: usize,
+    pub dim: usize,
+    pub sigma_v2: f64,
+    pub u2_min: f64,
+    pub u2_max: f64,
+    /// Geometric-graph connection radius (unit square).
+    pub radius: f64,
+    pub energy: EnergyParams,
+    /// Virtual-time horizon (s).
+    pub duration: f64,
+    pub sample_dt: f64,
+    pub runs: usize,
+    pub seed: u64,
+    // Table II step sizes.
+    pub mu_diffusion: f64,
+    pub mu_rcd: f64,
+    pub mu_partial: f64,
+    pub mu_cd: f64,
+    pub mu_dcd: f64,
+    // Compression settings for r = 20 (L = 40): PM shares M = 4 of 80
+    // two-way scalars; DCD shares M + M_grad = 4; CD shares M = 25
+    // (r = 80/65); RCD polls 1/10 of neighbours (r = 2/p = 20).
+    pub partial_m: usize,
+    pub dcd_m: usize,
+    pub dcd_m_grad: usize,
+    pub cd_m: usize,
+    pub rcd_fraction: f64,
+}
+
+impl Default for Exp3Config {
+    fn default() -> Self {
+        Self {
+            n_nodes: 80,
+            dim: 40,
+            sigma_v2: 1e-3,
+            u2_min: 0.8,
+            u2_max: 1.2,
+            radius: 0.18,
+            energy: EnergyParams::default(),
+            duration: 200_000.0,
+            sample_dt: 500.0,
+            runs: 4,
+            seed: 2019,
+            mu_diffusion: 5.4e-3,
+            mu_rcd: 1.14e-2,
+            mu_partial: 4.4e-3,
+            mu_cd: 4.8e-2,
+            mu_dcd: 6e-3,
+            partial_m: 4,
+            // DCD budget split at r = 20: M + M∇ = 4. The (3,1) split
+            // (more estimate sharing) dominates (2,2) in the WSN runs —
+            // see EXPERIMENTS.md E3/A2.
+            dcd_m: 3,
+            dcd_m_grad: 1,
+            cd_m: 25,
+            rcd_fraction: 0.1,
+        }
+    }
+}
+
+macro_rules! apply_override {
+    ($doc:expr, $section:expr, $cfg:expr, { $($key:literal => $field:expr => $ty:ty),+ $(,)? }) => {
+        $(
+            if let Some(v) = $doc.get($section, $key) {
+                $field = v.parse::<$ty>().map_err(|e| {
+                    format!("config {}.{}: cannot parse {:?}: {e}", $section, $key, v)
+                })?;
+            }
+        )+
+    };
+}
+
+impl Exp1Config {
+    /// Apply `[exp1]` overrides from an INI document.
+    pub fn apply(&mut self, doc: &IniDoc) -> Result<(), String> {
+        apply_override!(doc, "exp1", self, {
+            "n_nodes" => self.n_nodes => usize,
+            "dim" => self.dim => usize,
+            "m" => self.m => usize,
+            "m_grad" => self.m_grad => usize,
+            "mu" => self.mu => f64,
+            "sigma_v2" => self.sigma_v2 => f64,
+            "runs" => self.runs => usize,
+            "iters" => self.iters => usize,
+            "seed" => self.seed => u64,
+        });
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.m > self.dim || self.m_grad > self.dim {
+            return Err("exp1: M, M_grad must be <= L".into());
+        }
+        if self.runs == 0 || self.iters == 0 {
+            return Err("exp1: runs and iters must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+impl Exp2Config {
+    pub fn apply(&mut self, doc: &IniDoc) -> Result<(), String> {
+        apply_override!(doc, "exp2", self, {
+            "n_nodes" => self.n_nodes => usize,
+            "dim" => self.dim => usize,
+            "mu" => self.mu => f64,
+            "runs" => self.runs => usize,
+            "iters" => self.iters => usize,
+            "seed" => self.seed => u64,
+        });
+        Ok(())
+    }
+}
+
+impl Exp3Config {
+    pub fn apply(&mut self, doc: &IniDoc) -> Result<(), String> {
+        apply_override!(doc, "exp3", self, {
+            "n_nodes" => self.n_nodes => usize,
+            "dim" => self.dim => usize,
+            "duration" => self.duration => f64,
+            "sample_dt" => self.sample_dt => f64,
+            "runs" => self.runs => usize,
+            "seed" => self.seed => u64,
+            "dcd_m" => self.dcd_m => usize,
+            "dcd_m_grad" => self.dcd_m_grad => usize,
+            "cd_m" => self.cd_m => usize,
+            "partial_m" => self.partial_m => usize,
+        });
+        Ok(())
+    }
+
+    /// The paper's compression check: all compared algorithms sit at
+    /// r = 20 except CD at 80/65.
+    pub fn ratios(&self) -> Vec<(String, f64)> {
+        let l = self.dim as f64;
+        vec![
+            ("partial".into(), 2.0 * l / self.partial_m as f64),
+            ("dcd".into(), 2.0 * l / (self.dcd_m + self.dcd_m_grad) as f64),
+            ("cd".into(), 2.0 * l / (self.cd_m as f64 + l)),
+            ("rcd".into(), 2.0 / self.rcd_fraction),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let e1 = Exp1Config::default();
+        assert_eq!((e1.n_nodes, e1.dim, e1.m, e1.m_grad), (10, 5, 3, 1));
+        assert_eq!(e1.mu, 1e-3);
+        assert_eq!(e1.runs, 100);
+        let e2 = Exp2Config::default();
+        assert_eq!((e2.n_nodes, e2.dim), (50, 50));
+        assert_eq!(e2.mu, 3e-2);
+        let e3 = Exp3Config::default();
+        assert_eq!((e3.n_nodes, e3.dim), (80, 40));
+        // Table II step sizes.
+        assert_eq!(e3.mu_diffusion, 5.4e-3);
+        assert_eq!(e3.mu_rcd, 1.14e-2);
+        assert_eq!(e3.mu_partial, 4.4e-3);
+        assert_eq!(e3.mu_cd, 4.8e-2);
+        assert_eq!(e3.mu_dcd, 6e-3);
+    }
+
+    #[test]
+    fn exp3_ratios_match_table_ii() {
+        let e3 = Exp3Config::default();
+        let ratios = e3.ratios();
+        let get = |name: &str| ratios.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!((get("partial") - 20.0).abs() < 1e-12);
+        assert!((get("dcd") - 20.0).abs() < 1e-12);
+        assert!((get("rcd") - 20.0).abs() < 1e-12);
+        assert!((get("cd") - 80.0 / 65.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let doc = IniDoc::parse("[exp1]\nruns = 5\nmu = 0.01\n").unwrap();
+        let mut cfg = Exp1Config::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.runs, 5);
+        assert_eq!(cfg.mu, 0.01);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        let doc = IniDoc::parse("[exp1]\nruns = banana\n").unwrap();
+        let mut cfg = Exp1Config::default();
+        assert!(cfg.apply(&doc).is_err());
+        let doc = IniDoc::parse("[exp1]\nm = 99\n").unwrap();
+        let mut cfg = Exp1Config::default();
+        assert!(cfg.apply(&doc).is_err());
+    }
+}

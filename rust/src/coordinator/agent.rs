@@ -1,0 +1,318 @@
+//! Per-node DCD agent state machine over the [`bus`](super::bus).
+//!
+//! One iteration is a three-phase protocol, matching Alg. 1:
+//!
+//! 1. **broadcast** — draw H_k, Q_k; send `Estimate(H_k ∘ w_k)` to every
+//!    neighbour.
+//! 2. **reply** — for each received estimate, fill the missing entries
+//!    with the local state, evaluate the instantaneous gradient at that
+//!    point, and return its Q_k-masked entries; cache the received
+//!    estimate for the combine step.
+//! 3. **update** — fill received gradients with the local gradient
+//!    (eq. (12)), adapt (eq. (10)), combine (eq. (11)).
+//!
+//! N agents plus the bus reproduce the vectorised [`Dcd`]
+//! implementation bit-for-bit (see the equivalence test below) — this is
+//! the end-to-end validation of the wire protocol.
+
+use super::bus::{Bus, Message, PartialVector};
+use crate::rng::Pcg64;
+
+/// Per-node static configuration.
+#[derive(Debug, Clone)]
+pub struct AgentConfig {
+    pub id: usize,
+    pub dim: usize,
+    pub m: usize,
+    pub m_grad: usize,
+    pub mu: f64,
+    /// Neighbour ids (excluding self).
+    pub neighbors: Vec<usize>,
+    /// c_{lk} for l = each entry of `neighbors` (adapt weights), plus
+    /// the self weight c_{kk}.
+    pub c_self: f64,
+    pub c_neighbors: Vec<f64>,
+    /// a_{lk} combine weights, aligned with `neighbors`, plus a_{kk}.
+    pub a_self: f64,
+    pub a_neighbors: Vec<f64>,
+}
+
+/// A DCD agent.
+pub struct Agent {
+    cfg: AgentConfig,
+    pub w: Vec<f64>,
+    h_mask: Vec<f64>,
+    q_mask: Vec<f64>,
+    /// Estimates received this iteration: (from, partial vector).
+    cached_estimates: Vec<(usize, PartialVector)>,
+    /// Gradients received this iteration.
+    cached_gradients: Vec<(usize, PartialVector)>,
+    /// Local data for the current iteration.
+    u: Vec<f64>,
+    d: f64,
+    rng: Pcg64,
+    scratch: Vec<usize>,
+    mask32: Vec<f32>,
+}
+
+impl Agent {
+    pub fn new(cfg: AgentConfig, seed: u64) -> Self {
+        let l = cfg.dim;
+        let stream = cfg.id as u64;
+        Self {
+            cfg,
+            w: vec![0.0; l],
+            h_mask: vec![0.0; l],
+            q_mask: vec![0.0; l],
+            cached_estimates: Vec::new(),
+            cached_gradients: Vec::new(),
+            u: vec![0.0; l],
+            d: 0.0,
+            rng: Pcg64::new(seed, stream),
+            scratch: Vec::new(),
+            mask32: vec![0.0; l],
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.cfg.id
+    }
+
+    /// Inject this iteration's local measurements.
+    pub fn observe(&mut self, u: &[f64], d: f64) {
+        self.u.copy_from_slice(u);
+        self.d = d;
+    }
+
+    /// Override the selection masks (mask-injection for tests).
+    pub fn set_masks(&mut self, h: &[f64], q: &[f64]) {
+        self.h_mask.copy_from_slice(h);
+        self.q_mask.copy_from_slice(q);
+    }
+
+    fn draw_masks(&mut self) {
+        self.rng
+            .fill_mask(&mut self.mask32, self.cfg.m, &mut self.scratch);
+        for (dst, &src) in self.h_mask.iter_mut().zip(self.mask32.iter()) {
+            *dst = src as f64;
+        }
+        self.rng
+            .fill_mask(&mut self.mask32, self.cfg.m_grad, &mut self.scratch);
+        for (dst, &src) in self.q_mask.iter_mut().zip(self.mask32.iter()) {
+            *dst = src as f64;
+        }
+    }
+
+    /// Phase 1: draw masks (unless injected) and broadcast the masked
+    /// estimate to all neighbours.
+    pub fn phase_broadcast(&mut self, bus: &Bus, draw: bool) {
+        if draw {
+            self.draw_masks();
+        }
+        self.cached_estimates.clear();
+        self.cached_gradients.clear();
+        let body = PartialVector::from_mask(&self.w, &self.h_mask);
+        for &nb in &self.cfg.neighbors {
+            bus.send(nb, Message::Estimate { from: self.cfg.id, body: body.clone() });
+        }
+    }
+
+    /// Phase 2: answer every received estimate with a masked gradient,
+    /// caching the estimate for the combine step.
+    pub fn phase_reply(&mut self, bus: &Bus) {
+        let msgs = bus.drain(self.cfg.id);
+        for msg in msgs {
+            match msg {
+                Message::Estimate { from, body } => {
+                    // Fill missing entries with the local state w_l.
+                    let mut x = self.w.clone();
+                    body.fill_into(&mut x);
+                    let e = self.d
+                        - self.u.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f64>();
+                    let grad: Vec<f64> = self.u.iter().map(|&uj| uj * e).collect();
+                    let reply = PartialVector::from_mask(&grad, &self.q_mask);
+                    bus.send(from, Message::Gradient { from: self.cfg.id, body: reply });
+                    self.cached_estimates.push((from, body));
+                }
+                Message::Gradient { from, body } => {
+                    self.cached_gradients.push((from, body));
+                }
+            }
+        }
+    }
+
+    /// Collect gradient replies that arrived after phase 2 drained.
+    pub fn phase_collect(&mut self, bus: &Bus) {
+        for msg in bus.drain(self.cfg.id) {
+            match msg {
+                Message::Gradient { from, body } => self.cached_gradients.push((from, body)),
+                Message::Estimate { from, body } => self.cached_estimates.push((from, body)),
+            }
+        }
+    }
+
+    /// Phase 3: adapt + combine.
+    pub fn phase_update(&mut self) {
+        let l = self.cfg.dim;
+        // Own residual and gradient (fills the missing entries, eq. (12)).
+        let e_self = self.d
+            - self
+                .u
+                .iter()
+                .zip(self.w.iter())
+                .map(|(a, b)| a * b)
+                .sum::<f64>();
+        let own_grad: Vec<f64> = self.u.iter().map(|&uj| uj * e_self).collect();
+
+        // Adapt: psi = w + mu [ c_kk own_grad + sum_l c_lk g_l ].
+        let mut psi: Vec<f64> = self.w.clone();
+        for j in 0..l {
+            psi[j] += self.cfg.mu * self.cfg.c_self * own_grad[j];
+        }
+        for (from, body) in &self.cached_gradients {
+            let pos = self
+                .cfg
+                .neighbors
+                .iter()
+                .position(|&n| n == *from)
+                .expect("gradient from non-neighbour");
+            let c_lk = self.cfg.c_neighbors[pos];
+            let mut g = own_grad.clone();
+            body.fill_into(&mut g);
+            for j in 0..l {
+                psi[j] += self.cfg.mu * c_lk * g[j];
+            }
+        }
+
+        // Combine: w = a_kk psi + sum_l a_lk (H_l w_l + (1 - H_l) psi).
+        let mut w_new: Vec<f64> = psi.iter().map(|&x| self.cfg.a_self * x).collect();
+        for (from, body) in &self.cached_estimates {
+            let pos = self
+                .cfg
+                .neighbors
+                .iter()
+                .position(|&n| n == *from)
+                .expect("estimate from non-neighbour");
+            let a_lk = self.cfg.a_neighbors[pos];
+            let mut filled = psi.clone();
+            body.fill_into(&mut filled);
+            for j in 0..l {
+                w_new[j] += a_lk * filled[j];
+            }
+        }
+        self.w = w_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Algorithm, CommMeter, Dcd, DcdMasks, NetworkConfig, StepData};
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn build_agents(net: &NetworkConfig, m: usize, mg: usize) -> Vec<Agent> {
+        let n = net.n_nodes();
+        (0..n)
+            .map(|k| {
+                let neighbors: Vec<usize> = net.graph.neighbors(k).to_vec();
+                let cfg = AgentConfig {
+                    id: k,
+                    dim: net.dim,
+                    m,
+                    m_grad: mg,
+                    mu: net.mu[k],
+                    c_self: net.c[(k, k)],
+                    c_neighbors: neighbors.iter().map(|&l| net.c[(l, k)]).collect(),
+                    a_self: net.a[(k, k)],
+                    a_neighbors: neighbors.iter().map(|&l| net.a[(l, k)]).collect(),
+                    neighbors,
+                };
+                Agent::new(cfg, 1234)
+            })
+            .collect()
+    }
+
+    /// The protocol equivalence test: N agents over the bus must produce
+    /// exactly the same iterate as the vectorised Dcd implementation when
+    /// driven with identical masks and data.
+    #[test]
+    fn agents_reproduce_vectorized_dcd() {
+        let n = 6;
+        let l = 4;
+        let (m, mg) = (2, 1);
+        let graph = Graph::ring(n, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Uniform);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.08; n], dim: l };
+
+        let mut rng = Pcg64::new(77, 0);
+        let mut vectorized = Dcd::new(net.clone(), m, mg);
+        let mut agents = build_agents(&net, m, mg);
+        let bus = Bus::new(n);
+        let mut comm = CommMeter::new(n);
+
+        for _iter in 0..5 {
+            // Shared data and masks.
+            let mut u = vec![0.0; n * l];
+            let mut d = vec![0.0; n];
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for dk in d.iter_mut() {
+                *dk = rng.next_gaussian();
+            }
+            let mut h = vec![0.0; n * l];
+            let mut q = vec![0.0; n * l];
+            let mut scratch = Vec::new();
+            let mut m32 = vec![0f32; l];
+            for k in 0..n {
+                rng.fill_mask(&mut m32, m, &mut scratch);
+                for j in 0..l {
+                    h[k * l + j] = m32[j] as f64;
+                }
+                rng.fill_mask(&mut m32, mg, &mut scratch);
+                for j in 0..l {
+                    q[k * l + j] = m32[j] as f64;
+                }
+            }
+
+            vectorized.step_with_masks(
+                StepData { u: &u, d: &d },
+                &DcdMasks { h: h.clone(), q: q.clone() },
+                &mut comm,
+            );
+
+            for (k, ag) in agents.iter_mut().enumerate() {
+                ag.observe(&u[k * l..(k + 1) * l], d[k]);
+                ag.set_masks(&h[k * l..(k + 1) * l], &q[k * l..(k + 1) * l]);
+            }
+            for ag in agents.iter_mut() {
+                ag.phase_broadcast(&bus, false);
+            }
+            for ag in agents.iter_mut() {
+                ag.phase_reply(&bus);
+            }
+            for ag in agents.iter_mut() {
+                ag.phase_collect(&bus);
+            }
+            for ag in agents.iter_mut() {
+                ag.phase_update();
+            }
+
+            for (k, ag) in agents.iter().enumerate() {
+                for j in 0..l {
+                    let v = vectorized.weights()[k * l + j];
+                    let w = ag.w[j];
+                    assert!(
+                        (v - w).abs() < 1e-12,
+                        "iter {_iter} node {k} dim {j}: vec {v} vs agent {w}"
+                    );
+                }
+            }
+        }
+        // The bus must have carried exactly M + M_grad scalars per
+        // directed link per iteration.
+        let links: usize = (0..n).map(|k| net.graph.neighbors(k).len()).sum();
+        assert_eq!(bus.delivered_scalars(), (5 * links * (m + mg)) as u64);
+    }
+}

@@ -1,0 +1,174 @@
+//! Message bus: the wire protocol of Alg. 1 as typed messages with
+//! per-node mailboxes and delivery accounting.
+//!
+//! Entries travel as (index, value) pairs — exactly what a mote would put
+//! in a frame for a partial vector. The bus is deliberately simple:
+//! `send` enqueues into the destination mailbox, `drain` empties it.
+//! It is `Send + Sync` (mutex-guarded mailboxes) so the same code runs
+//! under the deterministic scheduler and under thread-per-agent tests.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A partial vector: selected entries of an L-vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialVector {
+    /// Selected indices (ascending).
+    pub idx: Vec<u16>,
+    /// Values, aligned with `idx`.
+    pub val: Vec<f64>,
+}
+
+impl PartialVector {
+    /// Extract the masked entries of `full` (mask = 0/1 slice).
+    pub fn from_mask(full: &[f64], mask: &[f64]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, (&x, &m)) in full.iter().zip(mask.iter()).enumerate() {
+            if m != 0.0 {
+                idx.push(i as u16);
+                val.push(x);
+            }
+        }
+        Self { idx, val }
+    }
+
+    /// Scatter into `out`, leaving unlisted entries untouched (the
+    /// receiver's own values fill the gaps — the paper's completion rule).
+    pub fn fill_into(&self, out: &mut [f64]) {
+        for (&i, &v) in self.idx.iter().zip(self.val.iter()) {
+            out[i as usize] = v;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+}
+
+/// Protocol messages of the DCD exchange (Alg. 1 lines 4–5).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Adapt phase, k → l: the masked estimate H_k ∘ w_k.
+    Estimate { from: usize, body: PartialVector },
+    /// Adapt phase, l → k: the masked gradient Q_l ∘ ∇J_l(filled point).
+    Gradient { from: usize, body: PartialVector },
+}
+
+impl Message {
+    pub fn from_node(&self) -> usize {
+        match self {
+            Message::Estimate { from, .. } | Message::Gradient { from, .. } => *from,
+        }
+    }
+
+    pub fn scalar_count(&self) -> usize {
+        match self {
+            Message::Estimate { body, .. } | Message::Gradient { body, .. } => body.len(),
+        }
+    }
+}
+
+/// Per-node mailboxes with delivery accounting.
+pub struct Bus {
+    mailboxes: Vec<Mutex<VecDeque<Message>>>,
+    delivered_scalars: Mutex<u64>,
+    delivered_messages: Mutex<u64>,
+}
+
+impl Bus {
+    pub fn new(n_nodes: usize) -> Self {
+        Self {
+            mailboxes: (0..n_nodes).map(|_| Mutex::new(VecDeque::new())).collect(),
+            delivered_scalars: Mutex::new(0),
+            delivered_messages: Mutex::new(0),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    pub fn send(&self, to: usize, msg: Message) {
+        *self.delivered_scalars.lock().unwrap() += msg.scalar_count() as u64;
+        *self.delivered_messages.lock().unwrap() += 1;
+        self.mailboxes[to].lock().unwrap().push_back(msg);
+    }
+
+    /// Drain all pending messages for `node`.
+    pub fn drain(&self, node: usize) -> Vec<Message> {
+        self.mailboxes[node].lock().unwrap().drain(..).collect()
+    }
+
+    /// Non-destructive pending count (diagnostics).
+    pub fn pending(&self, node: usize) -> usize {
+        self.mailboxes[node].lock().unwrap().len()
+    }
+
+    pub fn delivered_scalars(&self) -> u64 {
+        *self.delivered_scalars.lock().unwrap()
+    }
+
+    pub fn delivered_messages(&self) -> u64 {
+        *self.delivered_messages.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_vector_mask_roundtrip() {
+        let full = [1.0, 2.0, 3.0, 4.0];
+        let mask = [0.0, 1.0, 0.0, 1.0];
+        let pv = PartialVector::from_mask(&full, &mask);
+        assert_eq!(pv.idx, vec![1, 3]);
+        assert_eq!(pv.val, vec![2.0, 4.0]);
+        let mut out = [9.0; 4];
+        pv.fill_into(&mut out);
+        assert_eq!(out, [9.0, 2.0, 9.0, 4.0]);
+    }
+
+    #[test]
+    fn bus_delivery_and_accounting() {
+        let bus = Bus::new(3);
+        let pv = PartialVector { idx: vec![0, 2], val: vec![1.0, 2.0] };
+        bus.send(1, Message::Estimate { from: 0, body: pv.clone() });
+        bus.send(1, Message::Gradient { from: 2, body: pv });
+        assert_eq!(bus.pending(1), 2);
+        assert_eq!(bus.pending(0), 0);
+        let msgs = bus.drain(1);
+        assert_eq!(msgs.len(), 2);
+        assert_eq!(msgs[0].from_node(), 0);
+        assert_eq!(bus.delivered_scalars(), 4);
+        assert_eq!(bus.delivered_messages(), 2);
+        assert_eq!(bus.pending(1), 0);
+    }
+
+    #[test]
+    fn bus_is_thread_safe() {
+        use std::sync::Arc;
+        let bus = Arc::new(Bus::new(2));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let bus = bus.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        let pv = PartialVector { idx: vec![0], val: vec![t as f64] };
+                        bus.send(t % 2, Message::Estimate { from: t, body: pv });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(bus.delivered_messages(), 400);
+        assert_eq!(bus.drain(0).len() + bus.drain(1).len(), 400);
+    }
+}

@@ -1,0 +1,32 @@
+//! Layer-3 coordinator: the paper's system surface.
+//!
+//! * [`bus`] — typed partial-vector messages and per-node mailboxes with
+//!   delivery accounting (the wire protocol of Alg. 1).
+//! * [`agent`] — a per-node DCD agent state machine speaking that
+//!   protocol; N agents + the bus reproduce exactly one vectorised DCD
+//!   iteration (property-tested), validating the message protocol.
+//! * [`round`] — synchronous round scheduler: drives any [`Algorithm`]
+//!   over streaming data, records MSD traces and communication costs
+//!   (Experiments 1 and 2).
+//! * [`wsn`] — energy-aware event-driven scheduler (virtual time): each
+//!   node duty-cycles per the ENO model and updates asynchronously with
+//!   the freshest available neighbour state (Experiment 3).
+//! * [`runner`] — Monte-Carlo orchestration over both engines: the
+//!   message-level rust engine and the AOT-compiled xla engine.
+//!
+//! Scheduling is deterministic (seeded virtual time) rather than
+//! wall-clock threaded: on this single-core target determinism buys
+//! reproducible experiments and exact engine-equivalence tests; a
+//! thread-per-agent mode over the same bus is exercised in
+//! `rust/tests/integration.rs` to validate the protocol under real
+//! concurrency.
+
+pub mod agent;
+pub mod bus;
+pub mod round;
+pub mod runner;
+pub mod wsn;
+
+pub use round::{RoundScheduler, RunResult};
+pub use runner::{MonteCarlo, McResult};
+pub use wsn::{WsnConfig, WsnResult, WsnSimulation};

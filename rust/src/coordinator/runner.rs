@@ -1,0 +1,268 @@
+//! Monte-Carlo orchestration over both execution engines.
+//!
+//! * `run_rust` — message-level per-agent simulation (f64), any
+//!   [`Algorithm`].
+//! * `run_xla` — the AOT-compiled vectorised engine: generates data and
+//!   selection masks on the rust side, feeds T-step chunks to the PJRT
+//!   executable, threads the carried weights between chunks.
+//!
+//! Both engines consume the same [`DataModel`] and report the same
+//! [`McResult`]; `rust/tests/engines_agree.rs` drives them with identical
+//! inputs and asserts trajectory agreement.
+
+use crate::algorithms::Algorithm;
+use crate::datamodel::DataModel;
+use crate::metrics::TraceAccumulator;
+use crate::rng::Pcg64;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+
+use super::round::RoundScheduler;
+
+/// Monte-Carlo configuration.
+#[derive(Debug, Clone)]
+pub struct MonteCarlo {
+    pub runs: usize,
+    pub iters: usize,
+    pub seed: u64,
+    /// Thin the recorded MSD trace (1 = every iteration).
+    pub record_every: usize,
+}
+
+/// Averaged result.
+#[derive(Debug, Clone)]
+pub struct McResult {
+    /// Mean network MSD (linear) per recorded iteration.
+    pub msd: Vec<f64>,
+    /// Steady-state estimate (mean of the trailing 10%).
+    pub steady_state: f64,
+    /// Mean scalars transmitted per run (rust engine only; 0 for xla).
+    pub scalars_per_run: f64,
+    pub runs: usize,
+}
+
+/// Parameters of the compiled (xla) engine for one algorithm.
+#[derive(Debug, Clone)]
+pub enum XlaAlgo {
+    /// Generalised DCD step (covers diffusion-LMS and CD by mask choice).
+    Dcd { m: usize, m_grad: usize },
+    /// Textbook ATC diffusion LMS.
+    Atc,
+    /// Reduced-communication diffusion.
+    Rcd { m_links: usize },
+    /// Partial-diffusion LMS.
+    Partial { m: usize },
+}
+
+impl XlaAlgo {
+    pub fn module_algo(&self) -> &'static str {
+        match self {
+            XlaAlgo::Dcd { .. } => "dcd",
+            XlaAlgo::Atc => "atc",
+            XlaAlgo::Rcd { .. } => "rcd",
+            XlaAlgo::Partial { .. } => "partial",
+        }
+    }
+}
+
+impl MonteCarlo {
+    /// Rust engine: average `runs` independent trajectories of `make_alg()`.
+    pub fn run_rust(
+        &self,
+        model: &DataModel,
+        mut make_alg: impl FnMut() -> Box<dyn Algorithm>,
+    ) -> McResult {
+        let mut sched = RoundScheduler::new(model);
+        sched.record_every = self.record_every.max(1);
+        let mut acc = TraceAccumulator::new();
+        let mut scalars = 0.0;
+        for r in 0..self.runs {
+            let mut alg = make_alg();
+            let res = sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1);
+            acc.add(&res.msd);
+            scalars += res.scalars as f64;
+        }
+        let msd = acc.mean();
+        let tail = (msd.len() / 10).max(1);
+        McResult {
+            steady_state: acc.steady_state(tail),
+            msd,
+            scalars_per_run: scalars / self.runs as f64,
+            runs: self.runs,
+        }
+    }
+
+    /// Compiled engine: run the AOT module `<algo>_<config>` from the
+    /// artifact manifest. `c`/`a`/`mu` follow the artifact layout.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_xla(
+        &self,
+        rt: &mut Runtime,
+        config: &str,
+        algo: &XlaAlgo,
+        model: &DataModel,
+        c: &[f32],
+        a: &[f32],
+        mu: &[f32],
+    ) -> Result<McResult> {
+        let spec = rt
+            .manifest()
+            .find(algo.module_algo(), config)
+            .ok_or_else(|| anyhow!("no artifact for {}/{}", algo.module_algo(), config))?
+            .clone();
+        let (n, l, t) = (spec.n_nodes, spec.dim, spec.chunk_len);
+        if n != model.n_nodes || l != model.dim {
+            return Err(anyhow!(
+                "artifact {} is ({n},{l}), model is ({},{})",
+                spec.name,
+                model.n_nodes,
+                model.dim
+            ));
+        }
+        let n_chunks = self.iters.div_ceil(t);
+        let wo32 = model.wo_f32();
+        let mut acc = TraceAccumulator::new();
+
+        for r in 0..self.runs {
+            let mut rng = Pcg64::new(self.seed, r as u64 + 1);
+            let mut w = vec![0f32; n * l];
+            let mut trace: Vec<f64> = Vec::with_capacity(n_chunks * t);
+            let mut u_buf = vec![0f32; t * n * l];
+            let mut d_buf = vec![0f32; t * n];
+            let mut scratch = Vec::new();
+            for _chunk in 0..n_chunks {
+                model.sample_block_f32(&mut rng, t, &mut u_buf, &mut d_buf);
+                let masks = gen_masks(algo, n, l, t, &mut rng, &mut scratch);
+                let mut inputs: Vec<&[f32]> = vec![&w, &u_buf, &d_buf];
+                for m in &masks {
+                    inputs.push(m);
+                }
+                match algo {
+                    XlaAlgo::Dcd { .. } | XlaAlgo::Atc => inputs.push(c),
+                    _ => {}
+                }
+                inputs.push(a);
+                inputs.push(mu);
+                inputs.push(&wo32);
+                let out = rt.execute_chunk(&spec.name, &inputs)?;
+                w = out.w_final;
+                // Per-node squared deviations -> network MSD per step.
+                for step in 0..t {
+                    let row = &out.msd[step * n..(step + 1) * n];
+                    trace.push(row.iter().map(|&x| x as f64).sum::<f64>() / n as f64);
+                }
+            }
+            trace.truncate(self.iters);
+            let rec = self.record_every.max(1);
+            let thinned: Vec<f64> = trace
+                .iter()
+                .copied()
+                .enumerate()
+                .filter(|(i, _)| (i + 1) % rec == 0)
+                .map(|(_, v)| v)
+                .collect();
+            acc.add(&thinned);
+        }
+        let msd = acc.mean();
+        let tail = (msd.len() / 10).max(1);
+        Ok(McResult {
+            steady_state: acc.steady_state(tail),
+            msd,
+            scalars_per_run: 0.0,
+            runs: self.runs,
+        })
+    }
+}
+
+/// Generate per-chunk mask tensors in the artifact layout.
+fn gen_masks(
+    algo: &XlaAlgo,
+    n: usize,
+    l: usize,
+    t: usize,
+    rng: &mut Pcg64,
+    scratch: &mut Vec<usize>,
+) -> Vec<Vec<f32>> {
+    match algo {
+        XlaAlgo::Dcd { m, m_grad } => {
+            let mut h = vec![0f32; t * n * l];
+            let mut q = vec![0f32; t * n * l];
+            for slot in 0..t * n {
+                rng.fill_mask(&mut h[slot * l..(slot + 1) * l], *m, scratch);
+                rng.fill_mask(&mut q[slot * l..(slot + 1) * l], *m_grad, scratch);
+            }
+            vec![h, q]
+        }
+        XlaAlgo::Atc => vec![],
+        XlaAlgo::Rcd { m_links } => {
+            // S[t, l, k] = 1 iff node k polls neighbour l. Off-graph pairs
+            // stay 0; the step function multiplies by A's support anyway,
+            // but we only select true neighbours: that requires the graph,
+            // which the artifact does not carry — instead we select among
+            // *all* other nodes and rely on A's zero weights to nullify
+            // non-neighbours. To keep the effective poll count right we
+            // select among the support of column k of A, encoded by the
+            // caller via `XLA_RCD_SUPPORT` thread-local (see set_rcd_support).
+            let mut s = vec![0f32; t * n * n];
+            RCD_SUPPORT.with(|sup| {
+                let sup = sup.borrow();
+                let support = sup.as_ref().expect(
+                    "set_rcd_support(graph) must be called before running the rcd xla engine",
+                );
+                for ti in 0..t {
+                    for k in 0..n {
+                        let nbrs = &support[k];
+                        let m = (*m_links).min(nbrs.len());
+                        rng.sample_indices(nbrs.len(), m, scratch);
+                        for &idx in scratch.iter() {
+                            s[ti * n * n + nbrs[idx] * n + k] = 1.0;
+                        }
+                    }
+                }
+            });
+            vec![s]
+        }
+        XlaAlgo::Partial { m } => {
+            let mut h = vec![0f32; t * n * l];
+            for slot in 0..t * n {
+                rng.fill_mask(&mut h[slot * l..(slot + 1) * l], *m, scratch);
+            }
+            vec![h]
+        }
+    }
+}
+
+thread_local! {
+    static RCD_SUPPORT: std::cell::RefCell<Option<Vec<Vec<usize>>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Register the neighbour lists used by the RCD mask generator (the HLO
+/// artifact is topology-agnostic; selection must follow the graph).
+pub fn set_rcd_support(graph: &crate::topology::Graph) {
+    let lists: Vec<Vec<usize>> = (0..graph.n()).map(|k| graph.neighbors(k).to_vec()).collect();
+    RCD_SUPPORT.with(|s| *s.borrow_mut() = Some(lists));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Dcd, NetworkConfig};
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    #[test]
+    fn rust_engine_mc_converges() {
+        let mut rng = Pcg64::new(5, 0);
+        let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
+        let graph = Graph::ring(5, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = crate::linalg::Mat::eye(5);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
+        let mc = MonteCarlo { runs: 4, iters: 500, seed: 11, record_every: 1 };
+        let res = mc.run_rust(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
+        assert_eq!(res.msd.len(), 500);
+        assert!(res.steady_state < res.msd[0]);
+        assert!(res.scalars_per_run > 0.0);
+        assert_eq!(res.runs, 4);
+    }
+}

@@ -1,0 +1,504 @@
+//! Energy-aware WSN scheduler (Experiment 3, Fig. 4).
+//!
+//! Event-driven simulation over virtual time: every node duty-cycles per
+//! the ENO model (`energy::NodeEnergy`); when a node wakes *and* its
+//! capacitor is above V_ref it performs one asynchronous algorithm
+//! update using the freshest available neighbour state (the standard
+//! asynchronous-diffusion model, cf. paper refs. [10], [15]), spends the
+//! Table I active-phase energy, then sleeps for the duration given by
+//! eq. (70). Nodes below V_ref skip the update and recharge.
+//!
+//! Outputs match Fig. 4: network MSD vs virtual time (right) and mean
+//! sleep duration / harvested energy vs time (center).
+
+use crate::algorithms::NetworkConfig;
+use crate::datamodel::DataModel;
+use crate::energy::{ActiveEnergy, EnergyParams, NodeEnergy};
+use crate::rng::Pcg64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Which algorithm runs on the motes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WsnAlgo {
+    /// ATC diffusion LMS (C ≠ I): gradients + estimates, 2L per link.
+    Diffusion,
+    /// Reduced-communication diffusion [29].
+    Rcd { m_links: usize },
+    /// Partial-diffusion LMS [32].
+    Partial { m: usize },
+    /// Compressed diffusion LMS (Q = I).
+    Cd { m: usize },
+    /// Doubly-compressed diffusion LMS; `combine` selects A = I or A ≠ I.
+    Dcd { m: usize, m_grad: usize, combine: bool },
+}
+
+impl WsnAlgo {
+    pub fn label(&self) -> String {
+        match self {
+            WsnAlgo::Diffusion => "diffusion-lms".into(),
+            WsnAlgo::Rcd { .. } => "rcd".into(),
+            WsnAlgo::Partial { .. } => "partial-diffusion".into(),
+            WsnAlgo::Cd { .. } => "cd".into(),
+            WsnAlgo::Dcd { combine, .. } => {
+                if *combine {
+                    "dcd (A!=I)".into()
+                } else {
+                    "dcd (A=I)".into()
+                }
+            }
+        }
+    }
+
+    pub fn active_energy(&self) -> f64 {
+        match self {
+            WsnAlgo::Diffusion => ActiveEnergy::DIFFUSION.0,
+            WsnAlgo::Rcd { .. } => ActiveEnergy::RCD.0,
+            WsnAlgo::Partial { .. } => ActiveEnergy::PARTIAL.0,
+            WsnAlgo::Cd { .. } => ActiveEnergy::CD.0,
+            WsnAlgo::Dcd { .. } => ActiveEnergy::DCD.0,
+        }
+    }
+}
+
+/// WSN experiment configuration.
+#[derive(Clone)]
+pub struct WsnConfig {
+    pub net: NetworkConfig,
+    pub algo: WsnAlgo,
+    pub energy: EnergyParams,
+    /// Per-node harvest scales (lighting levels on the hill).
+    pub harvest_scale: Vec<f64>,
+    /// Virtual-time horizon (seconds).
+    pub duration: f64,
+    /// MSD/telemetry sampling interval (seconds).
+    pub sample_dt: f64,
+}
+
+/// Time series produced by the simulation.
+#[derive(Debug, Clone)]
+pub struct WsnResult {
+    /// Sample times (s).
+    pub time: Vec<f64>,
+    /// Network MSD (linear) at each sample time.
+    pub msd: Vec<f64>,
+    /// Mean sleep duration chosen during each interval (s).
+    pub mean_sleep: Vec<f64>,
+    /// Mean harvested energy per cycle during each interval (J).
+    pub mean_harvest: Vec<f64>,
+    /// Total node activations.
+    pub activations: u64,
+    /// Activations skipped for lack of charge.
+    pub skipped: u64,
+}
+
+/// The event-driven simulation.
+pub struct WsnSimulation {
+    cfg: WsnConfig,
+    model: DataModel,
+}
+
+impl WsnSimulation {
+    pub fn new(cfg: WsnConfig, model: DataModel) -> Self {
+        assert_eq!(cfg.net.n_nodes(), model.n_nodes);
+        assert_eq!(cfg.harvest_scale.len(), model.n_nodes);
+        Self { cfg, model }
+    }
+
+    pub fn run(&self, seed: u64) -> WsnResult {
+        let n = self.model.n_nodes;
+        let l = self.model.dim;
+        let mut rng = Pcg64::new(seed, 0);
+        let mut energies: Vec<NodeEnergy> = (0..n)
+            .map(|k| NodeEnergy::new(self.cfg.energy.clone(), self.cfg.harvest_scale[k]))
+            .collect();
+        let mut w = vec![0.0f64; n * l];
+        let mut scratch = Vec::new();
+        let mut mask32 = vec![0f32; l];
+        // Reused regressor buffers (no allocation per activation; §Perf).
+        let mut uk_buf = vec![0.0f64; l];
+        let mut un_buf = vec![0.0f64; l];
+
+        // Event queue ordered by wake time (f64 as ordered bits).
+        let mut queue: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        for k in 0..n {
+            // Small jitter avoids artificial phase lock.
+            let t0 = rng.next_f64() * 0.5;
+            queue.push(Reverse((time_key(t0), k)));
+        }
+
+        let n_samples = (self.cfg.duration / self.cfg.sample_dt).ceil() as usize;
+        let mut time = Vec::with_capacity(n_samples);
+        let mut msd = Vec::with_capacity(n_samples);
+        let mut mean_sleep = Vec::with_capacity(n_samples);
+        let mut mean_harvest = Vec::with_capacity(n_samples);
+        let mut next_sample = self.cfg.sample_dt;
+        let (mut sleep_acc, mut sleep_cnt) = (0.0, 0u64);
+        let (mut harv_acc, mut harv_cnt) = (0.0, 0u64);
+        let mut activations = 0u64;
+        let mut skipped = 0u64;
+
+        while let Some(Reverse((tk, k))) = queue.pop() {
+            let now = key_time(tk);
+            if now > self.cfg.duration {
+                break;
+            }
+            // Flush MSD samples up to `now` (state piecewise constant).
+            while next_sample <= now && time.len() < n_samples {
+                time.push(next_sample);
+                msd.push(network_msd(&w, &self.model.wo));
+                mean_sleep.push(if sleep_cnt > 0 { sleep_acc / sleep_cnt as f64 } else { 0.0 });
+                mean_harvest.push(if harv_cnt > 0 { harv_acc / harv_cnt as f64 } else { 0.0 });
+                sleep_acc = 0.0;
+                sleep_cnt = 0;
+                harv_acc = 0.0;
+                harv_cnt = 0;
+                next_sample += self.cfg.sample_dt;
+            }
+
+            let e_a = if energies[k].can_activate() {
+                activations += 1;
+                self.update_node(k, &mut w, &mut rng, &mut scratch, &mut mask32,
+                                 &mut uk_buf, &mut un_buf);
+                self.cfg.algo.active_energy()
+            } else {
+                skipped += 1;
+                0.0
+            };
+            harv_acc += energies[k].harvest(now, &mut rng);
+            harv_cnt += 1;
+            let t_s = energies[k].cycle(e_a, now, &mut rng);
+            sleep_acc += t_s;
+            sleep_cnt += 1;
+            queue.push(Reverse((time_key(now + t_s), k)));
+        }
+        // Trailing samples.
+        while time.len() < n_samples {
+            time.push(next_sample);
+            msd.push(network_msd(&w, &self.model.wo));
+            mean_sleep.push(if sleep_cnt > 0 { sleep_acc / sleep_cnt as f64 } else { 0.0 });
+            mean_harvest.push(if harv_cnt > 0 { harv_acc / harv_cnt as f64 } else { 0.0 });
+            sleep_acc = 0.0;
+            sleep_cnt = 0;
+            harv_acc = 0.0;
+            harv_cnt = 0;
+            next_sample += self.cfg.sample_dt;
+        }
+
+        WsnResult { time, msd, mean_sleep, mean_harvest, activations, skipped }
+    }
+
+    /// One asynchronous update of node k using the freshest neighbour
+    /// state. Fresh measurements are drawn at poll time for every node
+    /// involved (streaming data).
+    #[allow(clippy::too_many_arguments)]
+    fn update_node(
+        &self,
+        k: usize,
+        w: &mut [f64],
+        rng: &mut Pcg64,
+        scratch: &mut Vec<usize>,
+        mask32: &mut [f32],
+        uk_buf: &mut [f64],
+        un_buf: &mut [f64],
+    ) {
+        let net = &self.cfg.net;
+        let l = self.model.dim;
+        let mu = net.mu[k];
+        let dk = self.sample_node_into(k, rng, uk_buf);
+        let uk = &*uk_buf;
+        let wk: Vec<f64> = w[k * l..(k + 1) * l].to_vec();
+        let e_self = dk - dot(uk, &wk);
+
+        match self.cfg.algo {
+            WsnAlgo::Diffusion => {
+                // psi_k from own + neighbour gradients evaluated at w_k.
+                let mut psi: Vec<f64> = wk.clone();
+                let c_kk = net.c[(k, k)];
+                for j in 0..l {
+                    psi[j] += mu * c_kk * uk[j] * e_self;
+                }
+                for &nb in net.graph.neighbors(k) {
+                    let c_lk = net.c[(nb, k)];
+                    let dn = self.sample_node_into(nb, rng, un_buf);
+                    let un = &*un_buf;
+                    let e = dn - dot(un, &wk);
+                    for j in 0..l {
+                        psi[j] += mu * c_lk * un[j] * e;
+                    }
+                }
+                // Combine with neighbours' current estimates.
+                let a_kk = net.a[(k, k)];
+                let mut out: Vec<f64> = psi.iter().map(|&x| a_kk * x).collect();
+                for &nb in net.graph.neighbors(k) {
+                    let a_lk = net.a[(nb, k)];
+                    for j in 0..l {
+                        out[j] += a_lk * w[nb * l + j];
+                    }
+                }
+                w[k * l..(k + 1) * l].copy_from_slice(&out);
+            }
+            WsnAlgo::Rcd { m_links } => {
+                let mut psi: Vec<f64> = wk.clone();
+                for j in 0..l {
+                    psi[j] += mu * uk[j] * e_self;
+                }
+                let nbrs = net.graph.neighbors(k);
+                let m = m_links.min(nbrs.len());
+                rng.sample_indices(nbrs.len(), m, scratch);
+                let mut h_kk = 1.0;
+                let mut out = vec![0.0; l];
+                for &idx in scratch.iter() {
+                    let nb = nbrs[idx];
+                    let a_lk = net.a[(nb, k)];
+                    h_kk -= a_lk;
+                    for j in 0..l {
+                        out[j] += a_lk * w[nb * l + j];
+                    }
+                }
+                for j in 0..l {
+                    out[j] += h_kk * psi[j];
+                }
+                w[k * l..(k + 1) * l].copy_from_slice(&out);
+            }
+            WsnAlgo::Partial { m } => {
+                let mut psi: Vec<f64> = wk.clone();
+                for j in 0..l {
+                    psi[j] += mu * uk[j] * e_self;
+                }
+                let a_kk = net.a[(k, k)];
+                let mut out: Vec<f64> = psi.iter().map(|&x| a_kk * x).collect();
+                for &nb in net.graph.neighbors(k) {
+                    let a_lk = net.a[(nb, k)];
+                    rng.fill_mask(mask32, m, scratch);
+                    for j in 0..l {
+                        let hl = mask32[j] as f64;
+                        out[j] += a_lk * (hl * w[nb * l + j] + (1.0 - hl) * psi[j]);
+                    }
+                }
+                w[k * l..(k + 1) * l].copy_from_slice(&out);
+            }
+            WsnAlgo::Cd { m } => {
+                self.dcd_like_update(k, w, rng, scratch, mask32, uk_buf, un_buf, m, l, true, false);
+            }
+            WsnAlgo::Dcd { m, m_grad, combine } => {
+                self.dcd_like_update(k, w, rng, scratch, mask32, uk_buf, un_buf, m, m_grad, false, combine);
+            }
+        }
+    }
+
+    /// Shared CD/DCD async update. `q_full` ⇒ full gradients (CD);
+    /// `combine` ⇒ A ≠ I (masked-estimate combine), else A = I.
+    #[allow(clippy::too_many_arguments)]
+    fn dcd_like_update(
+        &self,
+        k: usize,
+        w: &mut [f64],
+        rng: &mut Pcg64,
+        scratch: &mut Vec<usize>,
+        mask32: &mut [f32],
+        uk_buf: &mut [f64],
+        un_buf: &mut [f64],
+        m: usize,
+        m_grad: usize,
+        q_full: bool,
+        combine: bool,
+    ) {
+        let net = &self.cfg.net;
+        let l = self.model.dim;
+        let mu = net.mu[k];
+        let dk = self.sample_node_into(k, rng, uk_buf);
+        let uk = &*uk_buf;
+        let wk: Vec<f64> = w[k * l..(k + 1) * l].to_vec();
+        let e_self = dk - dot(uk, &wk);
+
+        // H_k for this activation.
+        let mut hk = vec![0.0f64; l];
+        rng.fill_mask(mask32, m, scratch);
+        for j in 0..l {
+            hk[j] = mask32[j] as f64;
+        }
+
+        let mut psi: Vec<f64> = wk.clone();
+        let c_kk = net.c[(k, k)];
+        for j in 0..l {
+            psi[j] += mu * c_kk * uk[j] * e_self;
+        }
+        // Cache (neighbour, its H_l-masked current estimate) for combine.
+        let mut cached: Vec<(usize, Vec<f64>)> = Vec::new();
+        for &nb in net.graph.neighbors(k) {
+            let c_lk = net.c[(nb, k)];
+            let dn = self.sample_node_into(nb, rng, un_buf);
+            let un = &*un_buf;
+            // Filled point at the neighbour: H_k w_k + (1 - H_k) w_l.
+            let mut e = dn;
+            for j in 0..l {
+                let filled = hk[j] * wk[j] + (1.0 - hk[j]) * w[nb * l + j];
+                e -= un[j] * filled;
+            }
+            // Q_l mask.
+            let mut ql = vec![1.0f64; l];
+            if !q_full {
+                rng.fill_mask(mask32, m_grad, scratch);
+                for j in 0..l {
+                    ql[j] = mask32[j] as f64;
+                }
+            }
+            if c_lk != 0.0 {
+                for j in 0..l {
+                    let g = ql[j] * (un[j] * e) + (1.0 - ql[j]) * (uk[j] * e_self);
+                    psi[j] += mu * c_lk * g;
+                }
+            }
+            if combine {
+                // The neighbour's estimate-mask for this exchange.
+                rng.fill_mask(mask32, m, scratch);
+                let masked: Vec<f64> = (0..l).map(|j| mask32[j] as f64).collect();
+                cached.push((nb, masked));
+            }
+        }
+
+        if combine {
+            let a_kk = net.a[(k, k)];
+            let mut out: Vec<f64> = psi.iter().map(|&x| a_kk * x).collect();
+            for (nb, hl) in &cached {
+                let a_lk = net.a[(*nb, k)];
+                for j in 0..l {
+                    out[j] += a_lk * (hl[j] * w[nb * l + j] + (1.0 - hl[j]) * psi[j]);
+                }
+            }
+            w[k * l..(k + 1) * l].copy_from_slice(&out);
+        } else {
+            w[k * l..(k + 1) * l].copy_from_slice(&psi);
+        }
+    }
+
+    /// Fill `u` with a fresh regressor for node k and return d (hot path:
+    /// caller provides the buffer, no allocation per poll).
+    fn sample_node_into(&self, k: usize, rng: &mut Pcg64, u: &mut [f64]) -> f64 {
+        let su = self.model.sigma_u2[k].sqrt();
+        let sv = self.model.sigma_v2[k].sqrt();
+        let mut dot_wo = 0.0;
+        for (x, &woj) in u.iter_mut().zip(self.model.wo.iter()) {
+            *x = su * rng.next_gaussian();
+            dot_wo += *x * woj;
+        }
+        dot_wo + sv * rng.next_gaussian()
+    }
+}
+
+fn network_msd(w: &[f64], wo: &[f64]) -> f64 {
+    let l = wo.len();
+    let n = w.len() / l;
+    let mut total = 0.0;
+    for k in 0..n {
+        for j in 0..l {
+            let d = wo[j] - w[k * l + j];
+            total += d * d;
+        }
+    }
+    total / n as f64
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+/// Order-preserving f64→u64 key for the event queue (times are >= 0).
+#[inline]
+fn time_key(t: f64) -> u64 {
+    debug_assert!(t >= 0.0);
+    t.to_bits()
+}
+
+#[inline]
+fn key_time(k: u64) -> f64 {
+    f64::from_bits(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn small_cfg(algo: WsnAlgo, duration: f64) -> (WsnConfig, DataModel) {
+        let mut rng = Pcg64::new(42, 0);
+        let n = 8;
+        let l = 6;
+        let model = DataModel::paper(n, l, 0.8, 1.2, 1e-3, &mut rng);
+        let graph = Graph::ring(n, 2);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; n], dim: l };
+        let cfg = WsnConfig {
+            net,
+            algo,
+            energy: EnergyParams::default(),
+            harvest_scale: (0..n).map(|k| 0.4 + 0.05 * k as f64).collect(),
+            duration,
+            sample_dt: duration / 50.0,
+        };
+        (cfg, model)
+    }
+
+    #[test]
+    fn wsn_msd_decreases_for_all_algorithms() {
+        for algo in [
+            WsnAlgo::Diffusion,
+            WsnAlgo::Rcd { m_links: 2 },
+            WsnAlgo::Partial { m: 2 },
+            WsnAlgo::Cd { m: 4 },
+            WsnAlgo::Dcd { m: 2, m_grad: 2, combine: false },
+            WsnAlgo::Dcd { m: 2, m_grad: 2, combine: true },
+        ] {
+            let (cfg, model) = small_cfg(algo, 2000.0);
+            let sim = WsnSimulation::new(cfg, model);
+            let res = sim.run(1);
+            assert_eq!(res.time.len(), 50);
+            let first = res.msd[5];
+            let last = *res.msd.last().unwrap();
+            assert!(
+                last < first,
+                "{}: msd {first} -> {last}",
+                algo.label()
+            );
+            assert!(res.activations > 0);
+        }
+    }
+
+    #[test]
+    fn sleep_durations_within_bounds() {
+        let (cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: true }, 3000.0);
+        let sim = WsnSimulation::new(cfg, model);
+        let res = sim.run(3);
+        for &s in &res.mean_sleep {
+            assert!(s <= 300.0 + 1e-9, "sleep {s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cfg, model) = small_cfg(WsnAlgo::Cd { m: 3 }, 500.0);
+        let sim = WsnSimulation::new(cfg.clone(), model.clone());
+        let r1 = sim.run(7);
+        let sim2 = WsnSimulation::new(cfg, model);
+        let r2 = sim2.run(7);
+        assert_eq!(r1.msd, r2.msd);
+        assert_eq!(r1.activations, r2.activations);
+    }
+
+    #[test]
+    fn lighter_algorithm_gets_more_activations() {
+        let (cfg_d, model_d) = small_cfg(WsnAlgo::Diffusion, 4000.0);
+        let (cfg_c, model_c) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: true }, 4000.0);
+        let heavy = WsnSimulation::new(cfg_d, model_d).run(11);
+        let light = WsnSimulation::new(cfg_c, model_c).run(11);
+        assert!(
+            light.activations > heavy.activations,
+            "light {} heavy {}",
+            light.activations,
+            heavy.activations
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Streaming linear data model (paper §II-A, eq. (1)):
+//!
+//!   d_k(i) = u_{k,i}ᵀ w° + v_k(i)
+//!
+//! with zero-mean Gaussian regressors u_{k,i} ~ N(0, σ²_{u,k} I_L) and
+//! i.i.d. noise v_k(i) ~ N(0, σ²_{v,k}). Per-node variances follow the
+//! paper's Fig. 2 (right): σ²_{u,k} drawn uniformly per node, σ²_{v,k}
+//! fixed at 1e-3 in the experiments.
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Per-node second-order statistics plus the ground truth w°.
+#[derive(Debug, Clone)]
+pub struct DataModel {
+    pub n_nodes: usize,
+    pub dim: usize,
+    /// Ground-truth parameter vector w°.
+    pub wo: Vec<f64>,
+    /// Per-node regressor variances σ²_{u,k} (R_{u,k} = σ²_{u,k} I_L).
+    pub sigma_u2: Vec<f64>,
+    /// Per-node noise variances σ²_{v,k}.
+    pub sigma_v2: Vec<f64>,
+}
+
+impl DataModel {
+    /// Paper-style model: w° ~ N(0, I); σ²_{u,k} uniform in
+    /// `[u2_min, u2_max]`; σ²_{v,k} = `v2` for all nodes.
+    pub fn paper(
+        n_nodes: usize,
+        dim: usize,
+        u2_min: f64,
+        u2_max: f64,
+        v2: f64,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let wo: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        let sigma_u2: Vec<f64> = (0..n_nodes)
+            .map(|_| u2_min + (u2_max - u2_min) * rng.next_f64())
+            .collect();
+        let sigma_v2 = vec![v2; n_nodes];
+        Self { n_nodes, dim, wo, sigma_u2, sigma_v2 }
+    }
+
+    /// R_{u,k} as a dense matrix (σ²_{u,k} I_L).
+    pub fn r_u(&self, k: usize) -> Mat {
+        Mat::eye(self.dim).scale(self.sigma_u2[k])
+    }
+
+    /// Draw one synchronous snapshot: regressors U (n x L, row-major into
+    /// `u_out`) and desired responses D (n) including noise.
+    pub fn sample_iteration(&self, rng: &mut Pcg64, u_out: &mut [f64], d_out: &mut [f64]) {
+        let (n, l) = (self.n_nodes, self.dim);
+        assert_eq!(u_out.len(), n * l);
+        assert_eq!(d_out.len(), n);
+        for k in 0..n {
+            let su = self.sigma_u2[k].sqrt();
+            let sv = self.sigma_v2[k].sqrt();
+            let row = &mut u_out[k * l..(k + 1) * l];
+            let mut dot = 0.0;
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = su * rng.next_gaussian();
+                dot += *x * self.wo[j];
+            }
+            d_out[k] = dot + sv * rng.next_gaussian();
+        }
+    }
+
+    /// Sample a whole T-iteration block in the artifact layout:
+    /// `u_out` is (T, N, L) and `d_out` is (T, N), both row-major f32.
+    pub fn sample_block_f32(&self, rng: &mut Pcg64, t: usize, u_out: &mut [f32], d_out: &mut [f32]) {
+        let (n, l) = (self.n_nodes, self.dim);
+        assert_eq!(u_out.len(), t * n * l);
+        assert_eq!(d_out.len(), t * n);
+        let mut u_row = vec![0.0f64; n * l];
+        let mut d_row = vec![0.0f64; n];
+        for ti in 0..t {
+            self.sample_iteration(rng, &mut u_row, &mut d_row);
+            let ubase = ti * n * l;
+            for (dst, &src) in u_out[ubase..ubase + n * l].iter_mut().zip(u_row.iter()) {
+                *dst = src as f32;
+            }
+            let dbase = ti * n;
+            for (dst, &src) in d_out[dbase..dbase + n].iter_mut().zip(d_row.iter()) {
+                *dst = src as f32;
+            }
+        }
+    }
+
+    /// w° as f32 (artifact convention).
+    pub fn wo_f32(&self) -> Vec<f32> {
+        self.wo.iter().map(|&x| x as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_statistics_match_model() {
+        let mut rng = Pcg64::new(1, 0);
+        let model = DataModel::paper(4, 3, 0.5, 1.5, 1e-3, &mut rng);
+        let trials = 20_000;
+        let (n, l) = (model.n_nodes, model.dim);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        let mut u2_acc = vec![0.0; n];
+        let mut resid2_acc = vec![0.0; n];
+        for _ in 0..trials {
+            model.sample_iteration(&mut rng, &mut u, &mut d);
+            for k in 0..n {
+                let row = &u[k * l..(k + 1) * l];
+                u2_acc[k] += row.iter().map(|x| x * x).sum::<f64>() / l as f64;
+                let pred: f64 = row.iter().zip(model.wo.iter()).map(|(a, b)| a * b).sum();
+                let r = d[k] - pred;
+                resid2_acc[k] += r * r;
+            }
+        }
+        for k in 0..n {
+            let u2 = u2_acc[k] / trials as f64;
+            assert!(
+                (u2 - model.sigma_u2[k]).abs() < 0.05 * model.sigma_u2[k] + 0.01,
+                "node {k}: u2 {u2} vs {}",
+                model.sigma_u2[k]
+            );
+            let v2 = resid2_acc[k] / trials as f64;
+            assert!((v2 - 1e-3).abs() < 5e-4, "node {k}: v2 {v2}");
+        }
+    }
+
+    #[test]
+    fn block_layout_matches_scalar_path() {
+        let mut rng_a = Pcg64::new(5, 7);
+        let mut rng_b = Pcg64::new(5, 7);
+        let model = DataModel::paper(3, 2, 1.0, 1.0, 1e-3, &mut rng_a);
+        let model_b = DataModel::paper(3, 2, 1.0, 1.0, 1e-3, &mut rng_b);
+        assert_eq!(model.wo, model_b.wo);
+        let t = 4;
+        let mut u32buf = vec![0f32; t * 6];
+        let mut d32buf = vec![0f32; t * 3];
+        model.sample_block_f32(&mut rng_a, t, &mut u32buf, &mut d32buf);
+        let mut u = vec![0.0; 6];
+        let mut d = vec![0.0; 3];
+        for ti in 0..t {
+            model_b.sample_iteration(&mut rng_b, &mut u, &mut d);
+            for j in 0..6 {
+                assert!((u32buf[ti * 6 + j] as f64 - u[j]).abs() < 1e-6);
+            }
+            for k in 0..3 {
+                assert!((d32buf[ti * 3 + k] as f64 - d[k]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn r_u_is_scaled_identity() {
+        let mut rng = Pcg64::new(2, 2);
+        let model = DataModel::paper(2, 4, 2.0, 2.0, 1e-3, &mut rng);
+        let r = model.r_u(0);
+        assert!((r.trace() - 8.0).abs() < 1e-12);
+    }
+}

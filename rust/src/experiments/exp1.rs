@@ -1,0 +1,171 @@
+//! Experiment 1 (Fig. 3 left): theory vs simulation on the 10-node
+//! network — MSD learning curves for diffusion LMS, CD and DCD
+//! (L = 5, M = 3, M_grad = 1, μ = 1e-3, σ²_v = 1e-3, 100 MC runs).
+
+use crate::algorithms::{Dcd, NetworkConfig};
+use crate::config::Exp1Config;
+use crate::coordinator::runner::{MonteCarlo, XlaAlgo};
+use crate::datamodel::DataModel;
+use crate::linalg::Mat;
+use crate::metrics::{to_db, write_csv, write_json, Series};
+use crate::rng::Pcg64;
+use crate::runtime::Runtime;
+use crate::theory::{MsdModel, TheorySetup};
+use crate::topology::{combination_matrix, Graph, Rule};
+use anyhow::Result;
+
+use super::Engine;
+
+/// All series of Fig. 3 (left) plus summary numbers.
+#[derive(Debug, Clone)]
+pub struct Exp1Output {
+    pub series: Vec<Series>,
+    /// (label, theory steady state dB, simulated steady state dB).
+    pub steady: Vec<(String, f64, f64)>,
+}
+
+/// The three algorithm settings of the figure, as (label, M, M_grad).
+fn settings(cfg: &Exp1Config) -> Vec<(String, usize, usize)> {
+    vec![
+        ("diffusion-lms".into(), cfg.dim, cfg.dim),
+        ("cd".into(), cfg.m, cfg.dim),
+        ("dcd".into(), cfg.m, cfg.m_grad),
+    ]
+}
+
+pub fn run_exp1(
+    cfg: &Exp1Config,
+    engine: Engine,
+    out_dir: Option<&str>,
+    quiet: bool,
+) -> Result<Exp1Output> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let mut rng = Pcg64::new(cfg.seed, 0);
+    let graph = Graph::paper_ten_node();
+    assert_eq!(graph.n(), cfg.n_nodes, "exp1 preset is the 10-node network");
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = Mat::eye(cfg.n_nodes);
+    let model = DataModel::paper(
+        cfg.n_nodes,
+        cfg.dim,
+        cfg.u2_min,
+        cfg.u2_max,
+        cfg.sigma_v2,
+        &mut rng,
+    );
+    let net = NetworkConfig {
+        graph,
+        c: c.clone(),
+        a,
+        mu: vec![cfg.mu; cfg.n_nodes],
+        dim: cfg.dim,
+    };
+
+    let record_every = (cfg.iters / 2000).max(1);
+    let mc = MonteCarlo { runs: cfg.runs, iters: cfg.iters, seed: cfg.seed, record_every };
+    let mut series = Vec::new();
+    let mut steady = Vec::new();
+
+    let mut xla_rt = match engine {
+        Engine::Xla => Some(Runtime::open_default()?),
+        Engine::Rust => None,
+    };
+
+    for (label, m, m_grad) in settings(cfg) {
+        // --- theory ---------------------------------------------------
+        let setup = TheorySetup {
+            n_nodes: cfg.n_nodes,
+            dim: cfg.dim,
+            m,
+            m_grad,
+            c: c.clone(),
+            mu: vec![cfg.mu; cfg.n_nodes],
+            sigma_u2: model.sigma_u2.clone(),
+            sigma_v2: model.sigma_v2.clone(),
+        };
+        let theory = MsdModel::new(setup);
+        let tr = theory.trajectory(&model.wo, cfg.iters);
+        let theory_db: Vec<f64> = tr
+            .msd
+            .iter()
+            .skip(record_every - 1)
+            .step_by(record_every)
+            .map(|&x| to_db(x))
+            .collect();
+        let x: Vec<f64> = (1..=theory_db.len())
+            .map(|i| (i * record_every) as f64)
+            .collect();
+        series.push(Series::new(format!("{label} (theory)"), x.clone(), theory_db));
+
+        // --- simulation -------------------------------------------------
+        let res = match engine {
+            Engine::Rust => {
+                let net = net.clone();
+                mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, m_grad)))
+            }
+            Engine::Xla => mc.run_xla(
+                xla_rt.as_mut().unwrap(),
+                "exp1",
+                &XlaAlgo::Dcd { m, m_grad },
+                &model,
+                &net.c_f32(),
+                &net.a_f32(),
+                &net.mu_f32(),
+            )?,
+        };
+        let sim_db: Vec<f64> = res.msd.iter().map(|&v| to_db(v)).collect();
+        series.push(Series::new(format!("{label} (sim)"), x, sim_db));
+
+        let t_db = to_db(tr.steady_state);
+        let s_db = to_db(res.steady_state);
+        if !quiet {
+            println!(
+                "exp1 {label:<16} steady-state: theory {t_db:7.2} dB  sim {s_db:7.2} dB  (|gap| {:.2} dB)",
+                (t_db - s_db).abs()
+            );
+        }
+        steady.push((label, t_db, s_db));
+    }
+
+    if let Some(dir) = out_dir {
+        write_csv(format!("{dir}/exp1_fig3_left.csv"), &series)?;
+        write_json(
+            format!("{dir}/exp1_fig3_left.json"),
+            "Fig. 3 (left): theoretical and simulated MSD",
+            &series,
+        )?;
+        if !quiet {
+            println!("exp1: wrote {dir}/exp1_fig3_left.csv");
+        }
+    }
+    Ok(Exp1Output { series, steady })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shrunk end-to-end exp1 on the rust engine: theory and simulation
+    /// must land within 2 dB at steady state for all three algorithms.
+    #[test]
+    fn theory_matches_simulation_small() {
+        let cfg = Exp1Config {
+            runs: 12,
+            iters: 8_000,
+            mu: 5e-3, // faster convergence for the shrunk test
+            ..Exp1Config::default()
+        };
+        let out = run_exp1(&cfg, Engine::Rust, None, true).unwrap();
+        assert_eq!(out.series.len(), 6);
+        for (label, theory_db, sim_db) in &out.steady {
+            assert!(
+                (theory_db - sim_db).abs() < 2.0,
+                "{label}: theory {theory_db} dB vs sim {sim_db} dB"
+            );
+        }
+        // Ordering: diffusion LMS <= CD <= DCD steady-state MSD.
+        let ss: Vec<f64> = out.steady.iter().map(|s| s.2).collect();
+        assert!(ss[0] <= ss[1] + 0.8, "dLMS {} vs CD {}", ss[0], ss[1]);
+        assert!(ss[1] <= ss[2] + 0.8, "CD {} vs DCD {}", ss[1], ss[2]);
+    }
+}

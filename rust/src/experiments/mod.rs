@@ -1,0 +1,41 @@
+//! Experiment drivers: one module per paper experiment, regenerating
+//! every figure/table (DESIGN.md §3 index).
+//!
+//! * [`exp1`] — Fig. 3 (left): theoretical vs simulated MSD for
+//!   diffusion LMS, CD, DCD on the 10-node network.
+//! * [`exp2`] — Fig. 3 (center/right): steady-state MSD vs compression
+//!   ratio for CD and DCD on the 50-node / L = 50 network.
+//! * [`exp3`] — Fig. 4: the 80-node energy-harvesting WSN (sleep/harvest
+//!   telemetry + MSD-vs-time for all five algorithms, Tables I/II).
+//!
+//! Each driver writes `results/<name>.csv` + `.json` and returns the
+//! series so tests/benches can assert on them.
+
+pub mod exp1;
+pub mod exp2;
+pub mod exp3;
+
+pub use exp1::{run_exp1, Exp1Output};
+pub use exp2::{run_exp2, Exp2Output};
+pub use exp3::{run_exp3, Exp3Output};
+
+/// Execution engine selection for the synchronous experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Message-level rust engine (f64).
+    Rust,
+    /// AOT-compiled xla engine (f32, requires `make artifacts`).
+    Xla,
+}
+
+impl std::str::FromStr for Engine {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rust" => Ok(Engine::Rust),
+            "xla" => Ok(Engine::Xla),
+            other => Err(format!("unknown engine {other:?} (rust|xla)")),
+        }
+    }
+}

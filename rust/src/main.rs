@@ -1,0 +1,330 @@
+//! `dcd-lms` — launcher CLI for the DCD reproduction.
+//!
+//! ```text
+//! dcd-lms exp1 [--engine rust|xla] [--runs N] [--iters N] [--out DIR] ...
+//! dcd-lms exp2 [--engine rust|xla] ...
+//! dcd-lms exp3 [--fast] ...
+//! dcd-lms theory  --m M --m-grad MG [...]   # stability + steady state
+//! dcd-lms validate                          # rust engine ≡ xla engine
+//! dcd-lms info                              # artifact manifest
+//! ```
+
+use anyhow::{anyhow, Result};
+use dcd_lms::cli::{App, Command, ParsedArgs};
+use dcd_lms::config::{Exp1Config, Exp2Config, Exp3Config, IniDoc};
+use dcd_lms::experiments::{run_exp1, run_exp2, run_exp3, Engine};
+use dcd_lms::linalg::Mat;
+use dcd_lms::metrics::to_db;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::runtime::Runtime;
+use dcd_lms::theory::{MeanModel, MsdModel, TheorySetup};
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = build_app();
+    match app.dispatch(&argv) {
+        Err(help) => {
+            println!("{help}");
+        }
+        Ok((cmd, args)) => {
+            if let Err(e) = run(cmd.name, &args) {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn build_app() -> App {
+    let common = |c: Command| {
+        c.opt("config", "INI config file with [exp*] sections")
+            .opt_repeated("set", "override: section.key=value")
+            .opt("out", "output directory for CSV/JSON results (default results/)")
+            .flag("fast", "shrunk workload (smoke runs)")
+            .flag("quiet", "suppress progress output")
+    };
+    App {
+        name: "dcd-lms",
+        about: "doubly-compressed diffusion LMS over adaptive networks (Harrane, Flamary, Richard)",
+        commands: vec![
+            common(
+                Command::new("exp1", "Fig. 3 left: theory vs simulation, 10-node network")
+                    .opt("engine", "rust|xla (default rust)")
+                    .opt("runs", "Monte-Carlo runs")
+                    .opt("iters", "iterations per run"),
+            ),
+            common(
+                Command::new("exp2", "Fig. 3 center/right: MSD vs compression ratio, N=50 L=50")
+                    .opt("engine", "rust|xla (default xla)")
+                    .opt("runs", "Monte-Carlo runs")
+                    .opt("iters", "iterations per run"),
+            ),
+            common(
+                Command::new("exp3", "Fig. 4: energy-harvesting WSN, N=80 L=40")
+                    .opt("runs", "Monte-Carlo runs")
+                    .opt("duration", "virtual-time horizon (s)"),
+            ),
+            Command::new("theory", "stability bounds + theoretical steady state")
+                .opt("n", "nodes (default 10)")
+                .opt("dim", "dimension L (default 5)")
+                .opt("m", "shared estimate entries M (default 3)")
+                .opt("m-grad", "shared gradient entries M_grad (default 1)")
+                .opt("mu", "step size (default 1e-3)")
+                .opt("iters", "trajectory length (default 20000)"),
+            Command::new("validate", "drive rust and xla engines with identical inputs")
+                .opt("config", "artifact shape config (default smoke)"),
+            Command::new("info", "print artifact manifest and build info"),
+        ],
+    }
+}
+
+fn load_overrides(args: &ParsedArgs) -> Result<IniDoc> {
+    let mut doc = match args.get("config") {
+        Some(path) => IniDoc::load(path).map_err(anyhow::Error::msg)?,
+        None => IniDoc::default(),
+    };
+    for s in args.get_all("set") {
+        doc.set_dotted(s).map_err(anyhow::Error::msg)?;
+    }
+    Ok(doc)
+}
+
+fn out_dir(args: &ParsedArgs) -> String {
+    args.get("out").unwrap_or("results").to_string()
+}
+
+fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
+    match cmd {
+        "exp1" => {
+            let doc = load_overrides(args)?;
+            let mut cfg = Exp1Config::default();
+            cfg.apply(&doc).map_err(anyhow::Error::msg)?;
+            if args.flag("fast") {
+                cfg.runs = 10;
+                cfg.iters = 6_000;
+                cfg.mu = 5e-3;
+            }
+            if let Some(r) = args.get_parse::<usize>("runs").map_err(anyhow::Error::msg)? {
+                cfg.runs = r;
+            }
+            if let Some(i) = args.get_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
+                cfg.iters = i;
+            }
+            let engine: Engine = args
+                .get("engine")
+                .unwrap_or("rust")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            run_exp1(&cfg, engine, Some(&out_dir(args)), args.flag("quiet"))?;
+            Ok(())
+        }
+        "exp2" => {
+            let doc = load_overrides(args)?;
+            let mut cfg = Exp2Config::default();
+            cfg.apply(&doc).map_err(anyhow::Error::msg)?;
+            if args.flag("fast") {
+                cfg.runs = 3;
+                cfg.iters = 600;
+                cfg.cd_m_values = vec![35, 15, 5];
+                cfg.dcd_pairs = vec![(25, 25), (5, 5), (2, 2)];
+            }
+            if let Some(r) = args.get_parse::<usize>("runs").map_err(anyhow::Error::msg)? {
+                cfg.runs = r;
+            }
+            if let Some(i) = args.get_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
+                cfg.iters = i;
+            }
+            let engine: Engine = args
+                .get("engine")
+                .unwrap_or("xla")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            run_exp2(&cfg, engine, Some(&out_dir(args)), args.flag("quiet"))?;
+            Ok(())
+        }
+        "exp3" => {
+            let doc = load_overrides(args)?;
+            let mut cfg = Exp3Config::default();
+            cfg.apply(&doc).map_err(anyhow::Error::msg)?;
+            if args.flag("fast") {
+                cfg.n_nodes = 24;
+                cfg.dim = 16;
+                cfg.radius = 0.32;
+                cfg.duration = 30_000.0;
+                cfg.sample_dt = 600.0;
+                cfg.runs = 2;
+                cfg.cd_m = 10;
+            }
+            if let Some(r) = args.get_parse::<usize>("runs").map_err(anyhow::Error::msg)? {
+                cfg.runs = r;
+            }
+            if let Some(d) = args.get_parse::<f64>("duration").map_err(anyhow::Error::msg)? {
+                cfg.duration = d;
+            }
+            run_exp3(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
+            Ok(())
+        }
+        "theory" => cmd_theory(args),
+        "validate" => cmd_validate(args),
+        "info" => cmd_info(),
+        other => Err(anyhow!("unhandled command {other}")),
+    }
+}
+
+fn cmd_theory(args: &ParsedArgs) -> Result<()> {
+    let n: usize = args.get_or("n", 10).map_err(anyhow::Error::msg)?;
+    let dim: usize = args.get_or("dim", 5).map_err(anyhow::Error::msg)?;
+    let m: usize = args.get_or("m", 3).map_err(anyhow::Error::msg)?;
+    let m_grad: usize = args.get_or("m-grad", 1).map_err(anyhow::Error::msg)?;
+    let mu: f64 = args.get_or("mu", 1e-3).map_err(anyhow::Error::msg)?;
+    let iters: usize = args.get_or("iters", 20_000).map_err(anyhow::Error::msg)?;
+
+    let graph = if n == 10 { Graph::paper_ten_node() } else { Graph::ring(n, 2) };
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let mut rng = Pcg64::new(2017, 0);
+    let model = dcd_lms::datamodel::DataModel::paper(n, dim, 0.8, 1.2, 1e-3, &mut rng);
+    let setup = TheorySetup {
+        n_nodes: n,
+        dim,
+        m,
+        m_grad,
+        c,
+        mu: vec![mu; n],
+        sigma_u2: model.sigma_u2.clone(),
+        sigma_v2: model.sigma_v2.clone(),
+    };
+    setup.validate().map_err(anyhow::Error::msg)?;
+    let mean = MeanModel::new(setup.clone());
+    println!("network: N={n} L={dim} M={m} M∇={m_grad} μ={mu}");
+    println!(
+        "compression ratio 2L/(M+M∇) = {:.3}",
+        2.0 * dim as f64 / (m + m_grad) as f64
+    );
+    println!("ρ(𝓑) = {:.6}  (mean-stable: {})", mean.rho(), mean.is_mean_stable());
+    let bounds = mean.paper_mu_bounds();
+    let min_bound = bounds.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("paper step-size bound (38)-(39): μ < {min_bound:.4} (tightest node)");
+    let msd = MsdModel::new(setup);
+    let (ss, used) = msd.steady_state(&model.wo, 1e-10, iters);
+    println!(
+        "theoretical steady-state MSD: {:.2} dB (converged in {used} iterations)",
+        to_db(ss)
+    );
+    Ok(())
+}
+
+/// Drive the rust and xla engines with byte-identical inputs and report
+/// the trajectory deviation (the CLI face of rust/tests/engines_agree.rs).
+fn cmd_validate(args: &ParsedArgs) -> Result<()> {
+    use dcd_lms::algorithms::{Algorithm, CommMeter, Dcd, DcdMasks, NetworkConfig, StepData};
+
+    let config = args.get("config").unwrap_or("smoke");
+    let mut rt = Runtime::open_default()?;
+    let spec = rt
+        .manifest()
+        .find("dcd", config)
+        .ok_or_else(|| anyhow!("no dcd artifact for config {config:?} (run `make artifacts`)"))?
+        .clone();
+    let (n, l, t) = (spec.n_nodes, spec.dim, spec.chunk_len);
+    println!("validating dcd_{config}: N={n} L={l} chunk T={t}");
+
+    let mut rng = Pcg64::new(99, 0);
+    let graph = Graph::ring(n, 1);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    let net = NetworkConfig { graph, c, a, mu: vec![0.05; n], dim: l };
+    let model = dcd_lms::datamodel::DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+    let (m, m_grad) = ((l / 2).max(1), (l / 3).max(1));
+
+    // Generate one chunk of shared inputs.
+    let mut u = vec![0f32; t * n * l];
+    let mut d = vec![0f32; t * n];
+    model.sample_block_f32(&mut rng, t, &mut u, &mut d);
+    let mut h = vec![0f32; t * n * l];
+    let mut q = vec![0f32; t * n * l];
+    let mut scratch = Vec::new();
+    for slot in 0..t * n {
+        rng.fill_mask(&mut h[slot * l..(slot + 1) * l], m, &mut scratch);
+        rng.fill_mask(&mut q[slot * l..(slot + 1) * l], m_grad, &mut scratch);
+    }
+
+    // xla engine.
+    let w0 = vec![0f32; n * l];
+    let c32 = net.c_f32();
+    let a32 = net.a_f32();
+    let mu32 = net.mu_f32();
+    let wo32 = model.wo_f32();
+    let out = rt.execute_chunk(&spec.name, &[&w0, &u, &d, &h, &q, &c32, &a32, &mu32, &wo32])?;
+
+    // rust engine with identical data + masks.
+    let mut alg = Dcd::new(net, m, m_grad);
+    let mut comm = CommMeter::new(n);
+    let mut max_dev = 0.0f64;
+    for step in 0..t {
+        let u64v: Vec<f64> =
+            u[step * n * l..(step + 1) * n * l].iter().map(|&x| x as f64).collect();
+        let d64v: Vec<f64> = d[step * n..(step + 1) * n].iter().map(|&x| x as f64).collect();
+        let masks = DcdMasks {
+            h: h[step * n * l..(step + 1) * n * l].iter().map(|&x| x as f64).collect(),
+            q: q[step * n * l..(step + 1) * n * l].iter().map(|&x| x as f64).collect(),
+        };
+        alg.step_with_masks(StepData { u: &u64v, d: &d64v }, &masks, &mut comm);
+        let msd_rust = alg.msd(&model.wo);
+        let row = &out.msd[step * n..(step + 1) * n];
+        let msd_xla = row.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        max_dev = max_dev.max((msd_rust - msd_xla).abs() / msd_rust.max(1e-12));
+    }
+    // Final weights.
+    let mut w_dev = 0.0f64;
+    for (rw, xw) in alg.weights().iter().zip(out.w_final.iter()) {
+        w_dev = w_dev.max((rw - *xw as f64).abs());
+    }
+    println!("max relative MSD deviation over {t} steps: {max_dev:.3e}");
+    println!("max final-weight deviation:              {w_dev:.3e}");
+    if max_dev < 1e-3 && w_dev < 1e-3 {
+        println!("engines agree ✓");
+        Ok(())
+    } else {
+        Err(anyhow!("engines diverged"))
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!(
+        "dcd-lms {} — three-layer rust+JAX+Pallas build",
+        env!("CARGO_PKG_VERSION")
+    );
+    match Runtime::open_default() {
+        Ok(rt) => {
+            println!("artifacts:");
+            for m in &rt.manifest().modules {
+                println!(
+                    "  {:<16} N={:<3} L={:<3} T={:<4} inputs={} ({})",
+                    m.name,
+                    m.n_nodes,
+                    m.dim,
+                    m.chunk_len,
+                    m.inputs.len(),
+                    m.path
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    // A tiny self-check of the core substrates.
+    let g = Graph::paper_ten_node();
+    let a = combination_matrix(&g, Rule::Metropolis);
+    let eye = Mat::eye(3);
+    let _ = &eye * &eye;
+    println!(
+        "paper 10-node network: {} edges, connected: {}",
+        g.edge_count(),
+        g.is_connected()
+    );
+    println!("metropolis doubly stochastic: {}", {
+        let cs = dcd_lms::topology::col_sums(&a);
+        cs.iter().all(|s| (s - 1.0).abs() < 1e-9)
+    });
+    Ok(())
+}

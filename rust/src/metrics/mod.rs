@@ -1,0 +1,186 @@
+//! Metrics: MSD traces, Monte-Carlo averaging, dB conversion, CSV/JSON
+//! result writers.
+
+use crate::jsonio::{obj, Json};
+use std::io::Write;
+use std::path::Path;
+
+/// Convert a linear MSD value to dB.
+#[inline]
+pub fn to_db(x: f64) -> f64 {
+    10.0 * x.max(1e-300).log10()
+}
+
+/// Running element-wise mean of equal-length traces (MC averaging).
+#[derive(Debug, Clone, Default)]
+pub struct TraceAccumulator {
+    sum: Vec<f64>,
+    sum_sq: Vec<f64>,
+    count: usize,
+}
+
+impl TraceAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, trace: &[f64]) {
+        if self.sum.is_empty() {
+            self.sum = vec![0.0; trace.len()];
+            self.sum_sq = vec![0.0; trace.len()];
+        }
+        assert_eq!(self.sum.len(), trace.len(), "trace length changed");
+        for ((s, sq), &x) in self.sum.iter_mut().zip(self.sum_sq.iter_mut()).zip(trace) {
+            *s += x;
+            *sq += x * x;
+        }
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn mean(&self) -> Vec<f64> {
+        assert!(self.count > 0, "no traces accumulated");
+        self.sum.iter().map(|&s| s / self.count as f64).collect()
+    }
+
+    /// Per-point standard deviation across runs.
+    pub fn std(&self) -> Vec<f64> {
+        assert!(self.count > 1, "need >= 2 traces for std");
+        let n = self.count as f64;
+        self.sum
+            .iter()
+            .zip(self.sum_sq.iter())
+            .map(|(&s, &sq)| ((sq / n - (s / n) * (s / n)).max(0.0)).sqrt())
+            .collect()
+    }
+
+    /// Mean of the trailing `tail` points of the mean trace — the
+    /// steady-state estimate used across the experiments.
+    pub fn steady_state(&self, tail: usize) -> f64 {
+        let m = self.mean();
+        let tail = tail.min(m.len()).max(1);
+        m[m.len() - tail..].iter().sum::<f64>() / tail as f64
+    }
+}
+
+/// A labelled series (one curve of a figure).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, x: Vec<f64>, y: Vec<f64>) -> Self {
+        assert_eq!(x.len(), y.len());
+        Self { label: label.into(), x, y }
+    }
+
+    pub fn from_trace(label: impl Into<String>, y: Vec<f64>) -> Self {
+        let x = (1..=y.len()).map(|i| i as f64).collect();
+        Self::new(label, x, y)
+    }
+}
+
+/// Write a set of series as CSV: `x,label1,label2,...` (series must share
+/// the x grid; ragged series are written as separate files by caller).
+pub fn write_csv(path: impl AsRef<Path>, series: &[Series]) -> std::io::Result<()> {
+    assert!(!series.is_empty());
+    let x = &series[0].x;
+    for s in series {
+        assert_eq!(s.x, *x, "series {label} has a different x grid", label = s.label);
+    }
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "x")?;
+    for s in series {
+        write!(f, ",{}", s.label.replace(',', ";"))?;
+    }
+    writeln!(f)?;
+    for (i, &xv) in x.iter().enumerate() {
+        write!(f, "{xv}")?;
+        for s in series {
+            write!(f, ",{}", s.y[i])?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+/// Write series as a JSON document (self-describing, ragged-safe).
+pub fn write_json(path: impl AsRef<Path>, title: &str, series: &[Series]) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let arr = Json::Arr(
+        series
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("label", Json::Str(s.label.clone())),
+                    ("x", Json::Arr(s.x.iter().map(|&v| Json::Num(v)).collect())),
+                    ("y", Json::Arr(s.y.iter().map(|&v| Json::Num(v)).collect())),
+                ])
+            })
+            .collect(),
+    );
+    let doc = obj(vec![("title", Json::Str(title.to_string())), ("series", arr)]);
+    std::fs::write(path, doc.to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_conversion() {
+        assert!((to_db(1.0) - 0.0).abs() < 1e-12);
+        assert!((to_db(0.1) + 10.0).abs() < 1e-12);
+        assert!(to_db(0.0).is_finite()); // clamped, no -inf
+    }
+
+    #[test]
+    fn accumulator_mean_std() {
+        let mut acc = TraceAccumulator::new();
+        acc.add(&[1.0, 2.0]);
+        acc.add(&[3.0, 4.0]);
+        assert_eq!(acc.mean(), vec![2.0, 3.0]);
+        assert_eq!(acc.count(), 2);
+        let std = acc.std();
+        assert!((std[0] - 1.0).abs() < 1e-12);
+        assert!((acc.steady_state(1) - 3.0).abs() < 1e-12);
+        assert!((acc.steady_state(2) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("dcd_lms_test_csv");
+        let path = dir.join("out.csv");
+        let s1 = Series::from_trace("a", vec![1.0, 2.0]);
+        let s2 = Series::from_trace("b", vec![3.0, 4.0]);
+        write_csv(&path, &[s1, s2]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("x,a,b"));
+        assert!(text.contains("1,1,3"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_output_parses() {
+        let dir = std::env::temp_dir().join("dcd_lms_test_json");
+        let path = dir.join("out.json");
+        let s = Series::new("msd", vec![1.0], vec![-20.0]);
+        write_json(&path, "fig", &[s]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("title").as_str(), Some("fig"));
+        assert_eq!(doc.get("series").as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,239 @@
+//! RNG substrate: PCG64, Gaussian sampling, subset/mask sampling.
+//!
+//! The `rand` crate is unavailable offline (DESIGN.md §2, S2); this module
+//! provides everything the simulators need with explicit, reproducible
+//! seeding. The generator is PCG-XSL-RR-128/64 (O'Neill 2014), the same
+//! algorithm as `rand_pcg::Pcg64`.
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second Box–Muller variate.
+    spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with a stream id; distinct `(seed, stream)` pairs give
+    /// independent sequences (used to decorrelate nodes / MC runs).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initstate = ((seed as u128) << 64) | (seed as u128 ^ 0x9e37_79b9_7f4a_7c15);
+        let initseq = ((stream as u128) << 64) | (stream as u128).wrapping_add(0xda3e_39cb_94b9_5bdb);
+        let mut rng = Self { state: 0, inc: (initseq << 1) | 1, spare: None };
+        rng.step();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.step();
+        rng
+    }
+
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+    }
+
+    /// Next 64 uniform random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform double in [0, 1) with 53 bits of precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's rejection method).
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "next_below: empty range");
+        let bound = bound as u64;
+        // 128-bit multiply-shift with rejection to kill modulo bias.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via the Marsaglia polar method (both variates
+    /// used). Chosen over Box–Muller after profiling: sincos dominated
+    /// the WSN simulator's flat profile (EXPERIMENTS.md §Perf); polar
+    /// needs one ln + one sqrt per *pair* and no trigonometry, at the
+    /// cost of a ~21.5 % rejection rate.
+    pub fn next_gaussian(&mut self) -> f64 {
+        match self.spare.take() {
+            Some(z) => z,
+            None => loop {
+                let x = 2.0 * self.next_f64() - 1.0;
+                let y = 2.0 * self.next_f64() - 1.0;
+                let s = x * x + y * y;
+                if s < 1.0 && s > 0.0 {
+                    let f = (-2.0 * s.ln() / s).sqrt();
+                    self.spare = Some(y * f);
+                    break x * f;
+                }
+            },
+        }
+    }
+
+    /// Fill `out` with i.i.d. N(0, sigma^2) samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f64], sigma: f64) {
+        for x in out.iter_mut() {
+            *x = sigma * self.next_gaussian();
+        }
+    }
+
+    /// Sample `m` distinct indices from `[0, n)` (partial Fisher–Yates),
+    /// returned in arbitrary order.
+    pub fn sample_indices(&mut self, n: usize, m: usize, scratch: &mut Vec<usize>) {
+        assert!(m <= n, "sample_indices: m > n");
+        scratch.clear();
+        scratch.extend(0..n);
+        for i in 0..m {
+            let j = i + self.next_below(n - i);
+            scratch.swap(i, j);
+        }
+        scratch.truncate(m);
+    }
+
+    /// Write a 0/1 mask of length `n` with exactly `m` ones into `mask`
+    /// (an f32 slice, matching the artifact calling convention).
+    pub fn fill_mask(&mut self, mask: &mut [f32], m: usize, scratch: &mut Vec<usize>) {
+        let n = mask.len();
+        mask.iter_mut().for_each(|x| *x = 0.0);
+        self.sample_indices(n, m, scratch);
+        for &i in scratch.iter() {
+            mask[i] = 1.0;
+        }
+    }
+
+    /// Bernoulli(p).
+    pub fn next_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_independent() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        let mut c = Pcg64::new(42, 1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::new(7, 3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::new(11, 0);
+        let n = 200_000;
+        let (mut s1, mut s2, mut s4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.next_gaussian();
+            s1 += x;
+            s2 += x * x;
+            s4 += x * x * x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64;
+        let kurt = s4 / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!((kurt - 3.0).abs() < 0.1, "4th moment {kurt}");
+    }
+
+    #[test]
+    fn next_below_unbiased() {
+        let mut rng = Pcg64::new(5, 5);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.next_below(7)] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 7;
+            assert!(
+                (c as i64 - expect as i64).unsigned_abs() < (expect / 10) as u64,
+                "counts {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn masks_have_exact_popcount() {
+        let mut rng = Pcg64::new(9, 0);
+        let mut scratch = Vec::new();
+        for m in 0..=6 {
+            let mut mask = vec![0f32; 6];
+            rng.fill_mask(&mut mask, m, &mut scratch);
+            assert_eq!(mask.iter().filter(|&&x| x == 1.0).count(), m);
+            assert!(mask.iter().all(|&x| x == 0.0 || x == 1.0));
+        }
+    }
+
+    #[test]
+    fn mask_marginal_is_m_over_l() {
+        // E{H} = (M/L) I — identity (13) of the paper, sampled.
+        let mut rng = Pcg64::new(13, 0);
+        let (l, m, trials) = (5usize, 3usize, 50_000usize);
+        let mut hits = vec![0usize; l];
+        let mut scratch = Vec::new();
+        let mut mask = vec![0f32; l];
+        for _ in 0..trials {
+            rng.fill_mask(&mut mask, m, &mut scratch);
+            for (h, &x) in hits.iter_mut().zip(mask.iter()) {
+                if x == 1.0 {
+                    *h += 1;
+                }
+            }
+        }
+        let p = m as f64 / l as f64;
+        for &h in &hits {
+            let freq = h as f64 / trials as f64;
+            assert!((freq - p).abs() < 0.01, "freq {freq} vs {p}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::new(17, 1);
+        let mut scratch = Vec::new();
+        for _ in 0..100 {
+            rng.sample_indices(10, 4, &mut scratch);
+            let mut sorted = scratch.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4);
+            assert!(sorted.iter().all(|&i| i < 10));
+        }
+    }
+}

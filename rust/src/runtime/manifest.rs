@@ -1,0 +1,159 @@
+//! Artifact manifest: the calling convention of each AOT-lowered module.
+//!
+//! Written by `python/compile/aot.py`; read here with the in-tree JSON
+//! parser (`jsonio`).
+
+use crate::jsonio::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled module (algorithm x shape configuration).
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub algo: String,
+    pub config: String,
+    pub path: String,
+    pub n_nodes: usize,
+    pub dim: usize,
+    pub chunk_len: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub modules: Vec<ModuleSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        if root.get("format").as_str() != Some("hlo-text") {
+            bail!("manifest: unsupported format {:?}", root.get("format"));
+        }
+        let mods = root
+            .get("modules")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing modules array"))?;
+        let mut modules = Vec::with_capacity(mods.len());
+        for m in mods {
+            modules.push(parse_module(m)?);
+        }
+        Ok(Manifest { modules })
+    }
+
+    pub fn module(&self, name: &str) -> Option<&ModuleSpec> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+
+    /// Find a module by algorithm + shape config, e.g. `("dcd", "exp1")`.
+    pub fn find(&self, algo: &str, config: &str) -> Option<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.algo == algo && m.config == config)
+    }
+}
+
+fn parse_module(m: &Json) -> Result<ModuleSpec> {
+    let get_str = |k: &str| -> Result<String> {
+        m.get(k)
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("manifest module: missing string {k:?}"))
+    };
+    let get_usize = |k: &str| -> Result<usize> {
+        m.get(k)
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest module: missing integer {k:?}"))
+    };
+    let tensors = |k: &str| -> Result<Vec<TensorSpec>> {
+        m.get(k)
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest module: missing array {k:?}"))?
+            .iter()
+            .map(|t| {
+                let name = t
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("tensor: missing name"))?
+                    .to_string();
+                let shape = t
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("tensor {name}: missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("tensor {name}: bad dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(TensorSpec { name, shape })
+            })
+            .collect()
+    };
+    Ok(ModuleSpec {
+        name: get_str("name")?,
+        algo: get_str("algo")?,
+        config: get_str("config")?,
+        path: get_str("path")?,
+        n_nodes: get_usize("n_nodes")?,
+        dim: get_usize("dim")?,
+        chunk_len: get_usize("chunk_len")?,
+        inputs: tensors("inputs")?,
+        outputs: tensors("outputs")?,
+        sha256: get_str("sha256")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "version": 1,
+      "modules": [{
+        "name": "dcd_smoke", "algo": "dcd", "config": "smoke",
+        "path": "dcd_smoke.hlo.txt",
+        "n_nodes": 4, "dim": 3, "chunk_len": 8,
+        "inputs": [{"name": "W0", "shape": [4, 3], "dtype": "f32"}],
+        "outputs": [{"name": "W_T", "shape": [4, 3], "dtype": "f32"}],
+        "sha256": "abc"
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.modules.len(), 1);
+        let spec = m.module("dcd_smoke").unwrap();
+        assert_eq!(spec.n_nodes, 4);
+        assert_eq!(spec.inputs[0].num_elements(), 12);
+        assert!(m.find("dcd", "smoke").is_some());
+        assert!(m.find("dcd", "exp9").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": "proto", "modules": []}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

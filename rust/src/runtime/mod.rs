@@ -1,0 +1,195 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The python compile path (`make artifacts`) lowers each
+//! (algorithm, shape) variant of the L2 scan-chunk model to
+//! `artifacts/<name>.hlo.txt` and records the calling convention in
+//! `artifacts/manifest.json`. This module loads the manifest, compiles
+//! modules on the PJRT CPU client (caching executables by name), and
+//! drives multi-chunk simulations by threading the carried weights
+//! between chunk executions.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md §1).
+
+mod manifest;
+pub use manifest::{Manifest, ModuleSpec, TensorSpec};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT executable plus its manifest entry.
+pub struct LoadedModule {
+    pub spec: ModuleSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one chunk execution.
+#[derive(Debug, Clone)]
+pub struct ChunkOutput {
+    /// Final weights, row-major `(n_nodes, dim)`.
+    pub w_final: Vec<f32>,
+    /// Per-step, per-node squared deviation, row-major `(chunk_len, n_nodes)`.
+    pub msd: Vec<f32>,
+}
+
+/// PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, LoadedModule>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifact directory: `$DCD_ARTIFACTS` or `artifacts/` under the
+    /// crate root (works from `cargo run`/`cargo test` CWDs).
+    pub fn open_default() -> Result<Self> {
+        Self::open(default_artifact_dir()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) a module by manifest name,
+    /// e.g. `"dcd_exp1"`.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModule> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .module(name)
+                .ok_or_else(|| anyhow!("module {name:?} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(wrap_xla)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+            self.cache.insert(name.to_string(), LoadedModule { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute one chunk. `inputs` must match the manifest order/shapes;
+    /// each entry is a flat row-major f32 buffer.
+    pub fn execute_chunk(&mut self, name: &str, inputs: &[&[f32]]) -> Result<ChunkOutput> {
+        // Validate + build literals first (immutable borrow of manifest via
+        // loaded spec), then run.
+        let module = self.load(name)?;
+        let spec = module.spec.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "module {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, tspec) in inputs.iter().zip(&spec.inputs) {
+            let want: usize = tspec.shape.iter().product();
+            if buf.len() != want {
+                bail!(
+                    "module {name}: input {:?} expects {} elems ({:?}), got {}",
+                    tspec.name,
+                    want,
+                    tspec.shape,
+                    buf.len()
+                );
+            }
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&tspec.shape.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                .map_err(wrap_xla)?;
+            literals.push(lit);
+        }
+        let module = self.cache.get(name).expect("just loaded");
+        let result = module.exe.execute::<xla::Literal>(&literals).map_err(wrap_xla)?;
+        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        // Lowered with return_tuple=True: (W_T, MSD).
+        let elems = tuple.to_tuple().map_err(wrap_xla)?;
+        if elems.len() != 2 {
+            bail!("module {name}: expected 2 outputs, got {}", elems.len());
+        }
+        let mut it = elems.into_iter();
+        let w_final = it.next().unwrap().to_vec::<f32>().map_err(wrap_xla)?;
+        let msd = it.next().unwrap().to_vec::<f32>().map_err(wrap_xla)?;
+        Ok(ChunkOutput { w_final, msd })
+    }
+
+    /// Run `n_chunks` successive chunks, threading `W` between them and
+    /// pulling fresh per-chunk tensors from `feed`. `fixed` are the
+    /// trailing chunk-invariant inputs (combiners, step sizes, wo, ...).
+    ///
+    /// `feed(chunk_idx)` must return the per-chunk buffers in manifest
+    /// order (everything between `W0` and the fixed tail).
+    pub fn run_chunks(
+        &mut self,
+        name: &str,
+        w0: &[f32],
+        n_chunks: usize,
+        mut feed: impl FnMut(usize) -> Vec<Vec<f32>>,
+        fixed: &[&[f32]],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut w = w0.to_vec();
+        let mut msd_all = Vec::new();
+        for c in 0..n_chunks {
+            let per_chunk = feed(c);
+            let mut inputs: Vec<&[f32]> = Vec::with_capacity(1 + per_chunk.len() + fixed.len());
+            inputs.push(&w);
+            for b in &per_chunk {
+                inputs.push(b);
+            }
+            inputs.extend_from_slice(fixed);
+            let out = self.execute_chunk(name, &inputs)?;
+            w = out.w_final;
+            msd_all.extend_from_slice(&out.msd);
+        }
+        Ok((w, msd_all))
+    }
+}
+
+/// Locate `artifacts/` from the environment or relative to the crate root.
+pub fn default_artifact_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("DCD_ARTIFACTS") {
+        return Ok(PathBuf::from(dir));
+    }
+    // CARGO_MANIFEST_DIR is baked in at compile time for this crate.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let cand = root.join("artifacts");
+    if cand.join("manifest.json").exists() {
+        return Ok(cand);
+    }
+    let cwd = std::env::current_dir()?;
+    let cand = cwd.join("artifacts");
+    if cand.join("manifest.json").exists() {
+        return Ok(cand);
+    }
+    bail!(
+        "artifacts/manifest.json not found (run `make artifacts`, or set DCD_ARTIFACTS)"
+    )
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Mini property-testing harness (the `proptest` substitute, DESIGN.md
+//! §2 S14).
+//!
+//! Generates seeded random cases from composable [`Gen`] closures, runs
+//! a property over each, and on failure re-reports the failing seed so
+//! the case can be replayed deterministically. A bounded linear "shrink"
+//! retries the property on cases drawn with progressively smaller size
+//! hints to report a small counterexample when one exists.
+
+use crate::rng::Pcg64;
+
+/// A generator: draws a case from RNG + size hint (1..=255).
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Pcg64, u8) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Pcg64, u8) -> T + 'static) -> Self {
+        Self { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64, size: u8) -> T {
+        (self.f)(rng, size)
+    }
+
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng, size| g(self.sample(rng, size)))
+    }
+}
+
+/// usize in [lo, hi], scaled by the size hint.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(move |rng, size| {
+        let span = hi - lo;
+        let scaled = (span * size as usize) / 255;
+        lo + if scaled == 0 { 0 } else { rng.next_below(scaled + 1) }
+    })
+}
+
+/// f64 in [lo, hi).
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng, _| lo + (hi - lo) * rng.next_f64())
+}
+
+/// Vector of gaussians with the given length generator.
+pub fn gaussian_vec(len: Gen<usize>, sigma: f64) -> Gen<Vec<f64>> {
+    Gen::new(move |rng, size| {
+        let n = len.sample(rng, size);
+        (0..n).map(|_| sigma * rng.next_gaussian()).collect()
+    })
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0x5eed }
+    }
+}
+
+/// Run `prop` over generated cases; panics with the failing seed/case on
+/// the first failure (after trying smaller sizes for a simpler failure).
+pub fn check<T: std::fmt::Debug + 'static>(
+    cfg: &PropConfig,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case_idx in 0..cfg.cases {
+        // Size ramps up over the run: small cases first.
+        let size = (((case_idx * 255) / cfg.cases.max(1)) as u8).max(1);
+        let mut rng = Pcg64::new(cfg.seed, case_idx as u64);
+        let case = gen.sample(&mut rng, size);
+        if let Err(msg) = prop(&case) {
+            // Shrink: retry with smaller sizes from the same stream family.
+            let mut smallest: Option<(u8, T, String)> = None;
+            for s in 1..size {
+                let mut rng = Pcg64::new(cfg.seed, case_idx as u64);
+                let c = gen.sample(&mut rng, s);
+                if let Err(m) = prop(&c) {
+                    smallest = Some((s, c, m));
+                    break;
+                }
+            }
+            match smallest {
+                Some((s, c, m)) => panic!(
+                    "property failed (seed {}, case {case_idx}, shrunk to size {s}):\n  {m}\n  case: {c:?}",
+                    cfg.seed
+                ),
+                None => panic!(
+                    "property failed (seed {}, case {case_idx}, size {size}):\n  {msg}\n  case: {case:?}",
+                    cfg.seed
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = usize_in(0, 10);
+        check(&PropConfig::default(), &gen, |&x| {
+            if x <= 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} > 10"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        let gen = usize_in(0, 100);
+        check(&PropConfig { cases: 200, seed: 1 }, &gen, |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let gen = gaussian_vec(usize_in(1, 8), 1.0);
+        let mut r1 = Pcg64::new(3, 3);
+        let mut r2 = Pcg64::new(3, 3);
+        assert_eq!(gen.sample(&mut r1, 100), gen.sample(&mut r2, 100));
+    }
+
+    #[test]
+    fn size_scaling() {
+        let gen = usize_in(2, 200);
+        let mut rng = Pcg64::new(5, 0);
+        for _ in 0..50 {
+            let small = gen.sample(&mut rng, 1);
+            assert!(small <= 2, "size-1 case {small} should be near lo");
+        }
+    }
+}

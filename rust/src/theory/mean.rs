@@ -1,0 +1,210 @@
+//! Mean weight-error model (paper §III-A).
+//!
+//! E{w̃_i} = 𝓑 E{w̃_{i−1}} with 𝓑 from (31); convergence in the mean iff
+//! ρ(𝓑) < 1 (35), with the sufficient step-size condition (38)–(39).
+
+use super::TheorySetup;
+use crate::linalg::{spectral_radius, Mat};
+
+/// The mean model: 𝓑 and stability diagnostics.
+#[derive(Debug, Clone)]
+pub struct MeanModel {
+    setup: TheorySetup,
+    /// 𝓑, dense (NL x NL).
+    pub b: Mat,
+}
+
+impl MeanModel {
+    pub fn new(setup: TheorySetup) -> Self {
+        let b = build_b(&setup);
+        Self { setup, b }
+    }
+
+    /// ρ(𝓑) — the algorithm converges in the mean iff this is < 1.
+    pub fn rho(&self) -> f64 {
+        spectral_radius(&self.b, 5000)
+    }
+
+    pub fn is_mean_stable(&self) -> bool {
+        self.rho() < 1.0
+    }
+
+    /// The paper's sufficient bound (38): μ_k < 2 / λ_{max,k} with
+    /// λ_{max,k} from (39). Returns the per-node bounds.
+    pub fn paper_mu_bounds(&self) -> Vec<f64> {
+        let s = &self.setup;
+        let (l, m, mg) = (s.dim as f64, s.m as f64, s.m_grad as f64);
+        (0..s.n_nodes)
+            .map(|k| {
+                // R_{u_k} = σ²_{u,k} I ⇒ λ_max(R_{u_k}) = σ²_{u,k};
+                // R_k = Σ_l c_{lk} R_{u_l} ⇒ λ_max(R_k) = Σ_l c_{lk} σ²_{u,l}.
+                let lam_rk = s.r_k_scale(k);
+                let lam_ruk = s.sigma_u2[k];
+                let max_neighbor = (0..s.n_nodes)
+                    .map(|lnb| s.c[(lnb, k)] * s.sigma_u2[lnb])
+                    .fold(0.0f64, f64::max);
+                let lam = (m * mg / (l * l)) * lam_rk
+                    + (m / l) * (1.0 - mg / l) * lam_ruk
+                    + (mg / l) * (1.0 - m / l) * max_neighbor;
+                if lam > 0.0 {
+                    2.0 / lam
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .collect()
+    }
+
+    /// Mean trajectory: returns E{w̃_i} norms per iteration starting from
+    /// w̃_0 (stacked, length NL).
+    pub fn mean_deviation_norms(&self, w_tilde0: &[f64], iters: usize) -> Vec<f64> {
+        let mut v = w_tilde0.to_vec();
+        let mut out = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            v = self.b.matvec(&v);
+            out.push(v.iter().map(|x| x * x).sum::<f64>().sqrt());
+        }
+        out
+    }
+}
+
+/// Build 𝓑 = I − 𝓜 E{𝓧} per (31):
+///   𝓑 = I − (M·M∇/L²) 𝓜𝓡 − (1 − M∇/L) 𝓜𝓡_u − (M∇/L)(1 − M/L) 𝓜𝓒ᵀ𝓡_u.
+pub fn build_b(s: &TheorySetup) -> Mat {
+    let (n, l) = (s.n_nodes, s.dim);
+    let (lf, mf, mgf) = (l as f64, s.m as f64, s.m_grad as f64);
+    let qh = mf * mgf / (lf * lf);
+    let q_only = 1.0 - mgf / lf;
+    let cross = (mgf / lf) * (1.0 - mf / lf);
+    let mut b = Mat::eye(n * l);
+    for k in 0..n {
+        let mu_k = s.mu[k];
+        // Diagonal block: I − μ_k [ qh R_k + q_only σ²_{u,k} ] I
+        //               − μ_k cross c_{kk} σ²_{u,k} I   (the l = k term of 𝓒ᵀ𝓡_u).
+        let diag_scale =
+            mu_k * (qh * s.r_k_scale(k) + q_only * s.sigma_u2[k] + cross * s.c[(k, k)] * s.sigma_u2[k]);
+        for j in 0..l {
+            b[(k * l + j, k * l + j)] -= diag_scale;
+        }
+        // Off-diagonal blocks (k, lnb): −μ_k cross c_{lnb,k} σ²_{u,lnb} I.
+        for lnb in 0..n {
+            if lnb == k {
+                continue;
+            }
+            let w = mu_k * cross * s.c[(lnb, k)] * s.sigma_u2[lnb];
+            if w == 0.0 {
+                continue;
+            }
+            for j in 0..l {
+                b[(k * l + j, lnb * l + j)] -= w;
+            }
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    pub(crate) fn setup(n: usize, l: usize, m: usize, mg: usize, mu: f64) -> TheorySetup {
+        let graph = Graph::ring(n, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        TheorySetup {
+            n_nodes: n,
+            dim: l,
+            m,
+            m_grad: mg,
+            c,
+            mu: vec![mu; n],
+            sigma_u2: (0..n).map(|k| 0.8 + 0.1 * k as f64).collect(),
+            sigma_v2: vec![1e-3; n],
+        }
+    }
+
+    #[test]
+    fn full_masks_recover_diffusion_lms_b() {
+        // M = M_grad = L ⇒ 𝓑 = I − 𝓜𝓡 (paper (40) remark).
+        let s = setup(4, 3, 3, 3, 0.1);
+        let model = MeanModel::new(s.clone());
+        for k in 0..4 {
+            let expect = 1.0 - s.mu[k] * s.r_k_scale(k);
+            for j in 0..3 {
+                assert!((model.b[(k * 3 + j, k * 3 + j)] - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// 𝓑 must equal the Monte-Carlo average of the per-iteration
+    /// coefficient matrix 𝓑_i = I − 𝓜𝓧_i over random masks.
+    #[test]
+    fn b_matches_monte_carlo() {
+        let s = setup(4, 4, 2, 1, 0.07);
+        let model = MeanModel::new(s.clone());
+        let (n, l) = (s.n_nodes, s.dim);
+        let mut acc = Mat::zeros(n * l, n * l);
+        let mut rng = Pcg64::new(21, 0);
+        let trials = 40_000;
+        let mut scratch = Vec::new();
+        let mut h = vec![vec![0f32; l]; n];
+        let mut q = vec![vec![0f32; l]; n];
+        for _ in 0..trials {
+            for k in 0..n {
+                rng.fill_mask(&mut h[k], s.m, &mut scratch);
+                rng.fill_mask(&mut q[k], s.m_grad, &mut scratch);
+            }
+            // X_i blocks (diagonal matrices) — see theory/mod.rs.
+            for k in 0..n {
+                for lnb in 0..n {
+                    let clk = s.c[(lnb, k)];
+                    for j in 0..l {
+                        let mut x = 0.0;
+                        if lnb == k {
+                            for m_ in 0..n {
+                                let cmk = s.c[(m_, k)];
+                                if cmk == 0.0 {
+                                    continue;
+                                }
+                                x += cmk
+                                    * (s.sigma_u2[m_] * q[m_][j] as f64 * h[k][j] as f64
+                                        + s.sigma_u2[k] * (1.0 - q[m_][j] as f64));
+                            }
+                        }
+                        if clk != 0.0 {
+                            x += clk * s.sigma_u2[lnb] * q[lnb][j] as f64 * (1.0 - h[k][j] as f64);
+                        }
+                        acc[(k * l + j, lnb * l + j)] += s.mu[k] * x;
+                    }
+                }
+            }
+        }
+        acc.scale_in_place(1.0 / trials as f64);
+        let b_mc = &Mat::eye(n * l) - &acc;
+        let diff = (&b_mc - &model.b).max_abs();
+        assert!(diff < 5e-3, "MC vs closed-form B: max diff {diff}");
+    }
+
+    #[test]
+    fn stability_bound_is_respected() {
+        let s = setup(6, 5, 3, 2, 0.0);
+        let bounds = MeanModel::new(s.clone()).paper_mu_bounds();
+        // At 50% of the bound, ρ(B) < 1; at 300%, ρ(B) > 1.
+        let mut s_ok = s.clone();
+        s_ok.mu = bounds.iter().map(|b| 0.5 * b).collect();
+        assert!(MeanModel::new(s_ok).is_mean_stable());
+        let mut s_bad = s;
+        s_bad.mu = bounds.iter().map(|b| 3.0 * b).collect();
+        assert!(!MeanModel::new(s_bad).is_mean_stable());
+    }
+
+    #[test]
+    fn mean_deviation_decays_when_stable() {
+        let s = setup(5, 4, 2, 2, 0.1);
+        let model = MeanModel::new(s);
+        let w0 = vec![1.0; 20];
+        let norms = model.mean_deviation_norms(&w0, 300);
+        assert!(norms[299] < 0.01 * norms[0]);
+    }
+}

@@ -1,0 +1,87 @@
+//! Theory engine: closed-form mean and mean-square models of DCD
+//! (paper §III-A / §III-B).
+//!
+//! Scope matches the paper's analysis setting: `A = I`, `C` doubly
+//! stochastic, Gaussian regressors with `R_{u,k} = σ²_{u,k} I_L`, and the
+//! small-step-size approximation (83) (`E{R_{u,i} Φ R_{u,i}} ≈ R_u Φ R_u`).
+//!
+//! Implementation note (DESIGN.md §2, S6): rather than transcribing the
+//! appendix's P₁–P₆ matrix identities, the weighted-variance operator
+//! Σ ↦ Σ' = E{𝓑ᵢᵀ Σ 𝓑ᵢ} is built from first principles. With
+//! `R_{u,k} = σ²_{u,k} I_L`, every block of the error-recursion matrix
+//! 𝓑ᵢ = I − 𝓜𝓧ᵢ is a *diagonal* random matrix:
+//!
+//!   [𝓧ᵢ]_{kℓ} = δ_{kℓ} Σ_m c_{mk}(σ²_m Q_m H_k + σ²_k (I−Q_m))
+//!             + c_{ℓk} σ²_ℓ Q_ℓ (I−H_k)                      (from (25))
+//!
+//! so E{[𝓧]ᵀ_{ka} Φ [𝓧]_{ℓb}} = G ⊙ Φ_{kℓ} with G_{ij} = E[x_{ka,i} x_{ℓb,j}],
+//! and — by the exchangeability of the without-replacement selection
+//! vectors — G takes only two values (i = j vs i ≠ j). The operator is
+//! therefore precomputed as a sparse set of per-block (g_off, g_diag)
+//! coefficients, making one application O(N²·deg²·L²).
+//!
+//! The same machinery yields the driving-noise term
+//! trace(E{𝓖ᵢᵀ Σ 𝓖ᵢ} 𝓢) of (42), and the module cross-validates every
+//! closed form against brute-force Monte-Carlo over random masks (tests).
+
+mod mean;
+mod moments;
+mod msd;
+
+pub use mean::MeanModel;
+pub use moments::MaskMoments;
+pub use msd::{MsdModel, MsdTrajectory};
+
+use crate::linalg::Mat;
+
+/// Problem description consumed by the theory models.
+#[derive(Debug, Clone)]
+pub struct TheorySetup {
+    pub n_nodes: usize,
+    pub dim: usize,
+    /// Entries shared per estimate (M).
+    pub m: usize,
+    /// Entries shared per gradient (M_grad).
+    pub m_grad: usize,
+    /// Right-stochastic (here: doubly stochastic) adapt combiner, [l, k].
+    pub c: Mat,
+    /// Per-node step sizes.
+    pub mu: Vec<f64>,
+    /// Per-node regressor variances σ²_{u,k}.
+    pub sigma_u2: Vec<f64>,
+    /// Per-node noise variances σ²_{v,k}.
+    pub sigma_v2: Vec<f64>,
+}
+
+impl TheorySetup {
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_nodes;
+        if self.c.rows() != n || self.c.cols() != n {
+            return Err("C dimension mismatch".into());
+        }
+        if self.mu.len() != n || self.sigma_u2.len() != n || self.sigma_v2.len() != n {
+            return Err("per-node vector length mismatch".into());
+        }
+        if self.m > self.dim || self.m_grad > self.dim {
+            return Err("M, M_grad must be <= L".into());
+        }
+        if self.dim < 1 {
+            return Err("L must be >= 1".into());
+        }
+        for l in 0..n {
+            let row: f64 = self.c.row(l).iter().sum();
+            let col: f64 = (0..n).map(|k| self.c[(k, l)]).sum();
+            if (row - 1.0).abs() > 1e-9 || (col - 1.0).abs() > 1e-9 {
+                return Err("C must be doubly stochastic for the analysis".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// R_k = Σ_l c_{lk} R_{u_l} — as a scalar multiple of I (eq. (34)).
+    pub fn r_k_scale(&self, k: usize) -> f64 {
+        (0..self.n_nodes)
+            .map(|l| self.c[(l, k)] * self.sigma_u2[l])
+            .sum()
+    }
+}

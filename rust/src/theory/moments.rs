@@ -1,0 +1,124 @@
+//! Moments of the random selection vectors.
+//!
+//! `h_{k,i}` (resp. `q_{k,i}`) is a 0/1 vector with exactly M (resp.
+//! M_grad) ones among L entries, all outcomes equally likely, i.i.d.
+//! over time and nodes (paper's Assumption 2). Exchangeability gives,
+//! for one vector p with m ones:
+//!
+//!   E[p_i]       = m/L
+//!   E[p_i p_j]   = m/L                     (i = j)
+//!                = (m/L)·(m−1)/(L−1)       (i ≠ j)
+//!
+//! which are exactly the paper's identities (13), (48), (73).
+
+/// Pairwise moments for one family of selection vectors (all nodes share
+/// the same (m, L)).
+#[derive(Debug, Clone, Copy)]
+pub struct MaskMoments {
+    /// Number of selected entries m.
+    pub m: usize,
+    /// Vector length L.
+    pub l: usize,
+}
+
+impl MaskMoments {
+    pub fn new(m: usize, l: usize) -> Self {
+        assert!(m <= l && l >= 1);
+        Self { m, l }
+    }
+
+    /// E[p_i] = m/L.
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        self.m as f64 / self.l as f64
+    }
+
+    /// E[p_{a,i} p_{b,j}] for masks of nodes `a`, `b` and the entry
+    /// relation `same_entry` (i == j).
+    #[inline]
+    pub fn pair(&self, a: usize, b: usize, same_entry: bool) -> f64 {
+        let p = self.mean();
+        if a != b {
+            p * p
+        } else if same_entry {
+            p
+        } else if self.l == 1 {
+            // Degenerate: only one entry, i ≠ j cannot happen; return 0.
+            0.0
+        } else {
+            p * (self.m as f64 - 1.0) / (self.l as f64 - 1.0)
+        }
+    }
+
+    /// E[p_{a,i} (1 − p_{b,j})].
+    #[inline]
+    pub fn pair_comp(&self, a: usize, b: usize, same_entry: bool) -> f64 {
+        self.mean() - self.pair(a, b, same_entry)
+    }
+
+    /// E[(1 − p_{a,i})(1 − p_{b,j})].
+    #[inline]
+    pub fn comp_comp(&self, a: usize, b: usize, same_entry: bool) -> f64 {
+        1.0 - 2.0 * self.mean() + self.pair(a, b, same_entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Brute-force MC check of the exchangeable pair moments — this pins
+    /// the closed forms behind the paper's (48)/(73).
+    #[test]
+    fn pair_moments_match_monte_carlo() {
+        let (m, l) = (3usize, 5usize);
+        let mm = MaskMoments::new(m, l);
+        let mut rng = Pcg64::new(99, 0);
+        let trials = 200_000;
+        let mut scratch = Vec::new();
+        let mut mask = vec![0f32; l];
+        let (mut e_i, mut e_ii, mut e_ij) = (0.0, 0.0, 0.0);
+        for _ in 0..trials {
+            rng.fill_mask(&mut mask, m, &mut scratch);
+            e_i += mask[0] as f64;
+            e_ii += (mask[1] * mask[1]) as f64;
+            e_ij += (mask[0] * mask[2]) as f64;
+        }
+        let t = trials as f64;
+        assert!((e_i / t - mm.mean()).abs() < 5e-3);
+        assert!((e_ii / t - mm.pair(0, 0, true)).abs() < 5e-3);
+        assert!((e_ij / t - mm.pair(0, 0, false)).abs() < 5e-3);
+        // Independent masks factorize.
+        assert!((mm.pair(0, 1, true) - mm.mean() * mm.mean()).abs() < 1e-15);
+    }
+
+    /// The matrix identity (48): E{QΣQ} = (M/L)[(1 − (M−1)/(L−1)) I⊙Σ
+    /// + (M−1)/(L−1) Σ] — reconstructed entrywise from `pair`.
+    #[test]
+    fn identity_48_from_pair_moments() {
+        let (m, l) = (2usize, 4usize);
+        let mm = MaskMoments::new(m, l);
+        let p = mm.mean();
+        let gamma = (m as f64 - 1.0) / (l as f64 - 1.0);
+        // Entry (i,j) of E{QΣQ} is E[q_i q_j] Σ_{ij}.
+        for same in [true, false] {
+            let expect = if same { p } else { p * gamma };
+            assert!((mm.pair(0, 0, same) - expect).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn degenerate_full_and_empty_masks() {
+        let full = MaskMoments::new(4, 4);
+        assert_eq!(full.mean(), 1.0);
+        assert_eq!(full.pair(0, 0, false), 1.0);
+        assert_eq!(full.comp_comp(0, 0, false), 0.0);
+        let empty = MaskMoments::new(0, 4);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.pair(0, 0, true), 0.0);
+        assert_eq!(empty.comp_comp(0, 0, true), 1.0);
+        let single = MaskMoments::new(1, 1);
+        assert_eq!(single.pair(0, 0, true), 1.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! Network topology: graphs, combination rules, node placement.
+//!
+//! Provides the paper's three networks — the 10-node topology of Fig. 2,
+//! the 50-node network of Experiment 2, the 80-node hillside WSN of
+//! Fig. 4 — plus generic generators (ring, random geometric) and the
+//! Metropolis / uniform combination-weight rules of [1].
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Undirected connected graph over `n` nodes.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    /// Sorted neighbour lists, **excluding** self.
+    adj: Vec<Vec<usize>>,
+    /// Optional 2-D positions (used by geometric networks / plots).
+    pub positions: Option<Vec<(f64, f64)>>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n && a != b, "bad edge ({a},{b})");
+            if !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+        for list in &mut adj {
+            list.sort_unstable();
+        }
+        Self { n, adj, positions: None }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Neighbours of `k`, excluding `k` itself.
+    pub fn neighbors(&self, k: usize) -> &[usize] {
+        &self.adj[k]
+    }
+
+    /// |N_k| including the node itself (the paper's convention).
+    pub fn degree_incl(&self, k: usize) -> usize {
+        self.adj[k].len() + 1
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a].binary_search(&b).is_ok()
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(k) = stack.pop() {
+            for &j in &self.adj[k] {
+                if !seen[j] {
+                    seen[j] = true;
+                    count += 1;
+                    stack.push(j);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Ring lattice where each node links to `hops` nodes on each side.
+    pub fn ring(n: usize, hops: usize) -> Self {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for h in 1..=hops {
+                edges.push((i, (i + h) % n));
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Random geometric graph on the unit square: nodes within `radius`
+    /// are linked; extra nearest-neighbour edges are added until the
+    /// graph is connected (so the constructor always succeeds).
+    pub fn random_geometric(n: usize, radius: f64, rng: &mut Pcg64) -> Self {
+        let pos: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.next_f64(), rng.next_f64()))
+            .collect();
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if dist(pos[i], pos[j]) <= radius {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let mut g = Self::from_edges(n, &edges);
+        // Stitch components together through their closest node pairs.
+        while !g.is_connected() {
+            let comp = g.component_of(0);
+            let (mut best, mut bd) = ((0, 0), f64::INFINITY);
+            for i in 0..n {
+                if !comp[i] {
+                    continue;
+                }
+                for j in 0..n {
+                    if comp[j] {
+                        continue;
+                    }
+                    let d = dist(pos[i], pos[j]);
+                    if d < bd {
+                        bd = d;
+                        best = (i, j);
+                    }
+                }
+            }
+            edges.push(best);
+            g = Self::from_edges(n, &edges);
+        }
+        g.positions = Some(pos);
+        g
+    }
+
+    fn component_of(&self, start: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![start];
+        seen[start] = true;
+        while let Some(k) = stack.pop() {
+            for &j in &self.adj[k] {
+                if !seen[j] {
+                    seen[j] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        seen
+    }
+
+    /// The 10-node topology used in Experiment 1 (Fig. 2 left). The paper
+    /// prints the drawing, not the adjacency list; this is a connected
+    /// 10-node graph with comparable density (16 edges, degrees 2–5),
+    /// which is what the theoretical model consumes.
+    pub fn paper_ten_node() -> Self {
+        let edges = [
+            (0, 1), (0, 2), (0, 3),
+            (1, 2), (1, 4),
+            (2, 3), (2, 5),
+            (3, 6),
+            (4, 5), (4, 7),
+            (5, 6), (5, 8),
+            (6, 9),
+            (7, 8),
+            (8, 9), (3, 9),
+        ];
+        Self::from_edges(10, &edges)
+    }
+}
+
+fn dist(a: (f64, f64), b: (f64, f64)) -> f64 {
+    ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+}
+
+/// Combination-weight rules (paper ref. [1]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Metropolis: a_{lk} = 1/max(|N_k|, |N_l|) for l in N_k \ {k},
+    /// diagonal absorbs the rest. Symmetric ⇒ doubly stochastic.
+    Metropolis,
+    /// Uniform averaging: a_{lk} = 1/|N_k|.
+    Uniform,
+    /// Identity (no cooperation).
+    Identity,
+}
+
+/// Build an N x N combination matrix with entry [l, k] = weight of
+/// neighbour l at node k. Metropolis is doubly stochastic; Uniform is
+/// left-stochastic (columns sum to 1).
+pub fn combination_matrix(g: &Graph, rule: Rule) -> Mat {
+    let n = g.n();
+    let mut m = Mat::zeros(n, n);
+    match rule {
+        Rule::Identity => {
+            for k in 0..n {
+                m[(k, k)] = 1.0;
+            }
+        }
+        Rule::Uniform => {
+            for k in 0..n {
+                let w = 1.0 / g.degree_incl(k) as f64;
+                m[(k, k)] = w;
+                for &l in g.neighbors(k) {
+                    m[(l, k)] = w;
+                }
+            }
+        }
+        Rule::Metropolis => {
+            for k in 0..n {
+                let mut diag = 1.0;
+                for &l in g.neighbors(k) {
+                    let w = 1.0 / g.degree_incl(k).max(g.degree_incl(l)) as f64;
+                    m[(l, k)] = w;
+                    diag -= w;
+                }
+                m[(k, k)] = diag;
+            }
+        }
+    }
+    m
+}
+
+/// Column sums (for left-stochastic checks).
+pub fn col_sums(m: &Mat) -> Vec<f64> {
+    let mut out = vec![0.0; m.cols()];
+    for i in 0..m.rows() {
+        for (j, s) in out.iter_mut().enumerate() {
+            *s += m[(i, j)];
+        }
+    }
+    out
+}
+
+/// Row sums (for right-stochastic checks).
+pub fn row_sums(m: &Mat) -> Vec<f64> {
+    (0..m.rows())
+        .map(|i| m.row(i).iter().sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_network_is_connected() {
+        let g = Graph::paper_ten_node();
+        assert_eq!(g.n(), 10);
+        assert!(g.is_connected());
+        assert_eq!(g.edge_count(), 16);
+        for k in 0..10 {
+            let d = g.degree_incl(k);
+            assert!((3..=6).contains(&d), "node {k} degree {d}");
+        }
+    }
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::ring(6, 1);
+        assert!(g.is_connected());
+        assert_eq!(g.edge_count(), 6);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(0, 5));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn geometric_always_connected() {
+        let mut rng = Pcg64::new(3, 0);
+        for seed in 0..5 {
+            let mut r = Pcg64::new(seed, 9);
+            let g = Graph::random_geometric(30, 0.15, &mut r);
+            assert!(g.is_connected());
+            assert!(g.positions.is_some());
+        }
+        let _ = rng.next_u64();
+    }
+
+    #[test]
+    fn metropolis_doubly_stochastic() {
+        let g = Graph::paper_ten_node();
+        let a = combination_matrix(&g, Rule::Metropolis);
+        for s in col_sums(&a) {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        for s in row_sums(&a) {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        // Symmetry.
+        assert!((&a - &a.transpose()).max_abs() < 1e-12);
+        // Support matches the graph.
+        for k in 0..g.n() {
+            for l in 0..g.n() {
+                let linked = k == l || g.has_edge(k, l);
+                assert_eq!(a[(l, k)] > 0.0, linked, "({l},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_left_stochastic() {
+        let g = Graph::ring(7, 2);
+        let a = combination_matrix(&g, Rule::Uniform);
+        for s in col_sums(&a) {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        assert!((a[(0, 0)] - 0.2).abs() < 1e-12); // degree_incl = 5
+    }
+
+    #[test]
+    fn identity_rule() {
+        let g = Graph::ring(4, 1);
+        let a = combination_matrix(&g, Rule::Identity);
+        assert!((&a - &Mat::eye(4)).max_abs() == 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad edge")]
+    fn rejects_self_loop() {
+        let _ = Graph::from_edges(3, &[(1, 1)]);
+    }
+}

@@ -1,0 +1,103 @@
+//! End-to-end CLI smoke: run the compiled binary the way a user would.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn binary() -> PathBuf {
+    // target/<profile>/dcd-lms next to the test executable.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // release|debug
+    p.push("dcd-lms");
+    p
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(binary())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn dcd-lms");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = run(&["--help"]);
+    assert!(ok);
+    for cmd in ["exp1", "exp2", "exp3", "theory", "validate", "info"] {
+        assert!(text.contains(cmd), "help missing {cmd}:\n{text}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_gracefully() {
+    let (_ok, text) = run(&["frobnicate"]);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn info_prints_manifest() {
+    let (ok, text) = run(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("dcd_smoke"), "{text}");
+    assert!(text.contains("connected: true"), "{text}");
+}
+
+#[test]
+fn theory_reports_stability() {
+    let (ok, text) = run(&["theory", "--mu", "0.005", "--iters", "4000"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("mean-stable: true"), "{text}");
+    assert!(text.contains("steady-state MSD"), "{text}");
+}
+
+#[test]
+fn validate_reports_agreement() {
+    let (ok, text) = run(&["validate"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("engines agree"), "{text}");
+}
+
+#[test]
+fn exp1_fast_writes_results() {
+    let dir = std::env::temp_dir().join("dcd_cli_e2e_exp1");
+    std::fs::remove_dir_all(&dir).ok();
+    let out = dir.to_str().unwrap();
+    let (ok, text) = run(&[
+        "exp1", "--fast", "--runs", "4", "--iters", "2000", "--out", out, "--quiet",
+    ]);
+    assert!(ok, "{text}");
+    assert!(dir.join("exp1_fig3_left.csv").exists());
+    assert!(dir.join("exp1_fig3_left.json").exists());
+    let csv = std::fs::read_to_string(dir.join("exp1_fig3_left.csv")).unwrap();
+    assert!(csv.lines().next().unwrap().contains("dcd (theory)"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_overrides_apply() {
+    let dir = std::env::temp_dir().join("dcd_cli_e2e_cfg");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("cfg.ini");
+    std::fs::write(&cfg_path, "[exp1]\nruns = 2\niters = 500\nmu = 0.01\n").unwrap();
+    let out = dir.to_str().unwrap();
+    let (ok, text) = run(&[
+        "exp1",
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "--set",
+        "exp1.iters=800",
+        "--out",
+        out,
+        "--quiet",
+    ]);
+    assert!(ok, "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,203 @@
+//! Engine equivalence: the message-level rust engine and the
+//! AOT-compiled xla engine must produce the same trajectories when
+//! driven with identical data and selection patterns.
+//!
+//! Requires `make artifacts` (smoke config). Tolerances account for the
+//! f32 (xla) vs f64 (rust) arithmetic.
+
+use dcd_lms::algorithms::{
+    Algorithm, CommMeter, Dcd, DcdMasks, NetworkConfig, PartialDiffusion, PartialMasks, Rcd,
+    RcdSelection, StepData,
+};
+use dcd_lms::datamodel::DataModel;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::runtime::Runtime;
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+struct Shared {
+    n: usize,
+    l: usize,
+    t: usize,
+    u: Vec<f32>,
+    d: Vec<f32>,
+    net: NetworkConfig,
+    model: DataModel,
+}
+
+fn shared_inputs(rt: &Runtime, algo: &str) -> Shared {
+    let spec = rt
+        .manifest()
+        .find(algo, "smoke")
+        .unwrap_or_else(|| panic!("run `make artifacts` first ({algo}_smoke missing)"))
+        .clone();
+    let (n, l, t) = (spec.n_nodes, spec.dim, spec.chunk_len);
+    let mut rng = Pcg64::new(1234, 0);
+    let graph = Graph::ring(n, 1);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    let net = NetworkConfig { graph, c, a, mu: vec![0.08; n], dim: l };
+    let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+    let mut u = vec![0f32; t * n * l];
+    let mut d = vec![0f32; t * n];
+    model.sample_block_f32(&mut rng, t, &mut u, &mut d);
+    Shared { n, l, t, u, d, net, model }
+}
+
+fn as_f64(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}
+
+fn assert_weights_close(rust_w: &[f64], xla_w: &[f32], tag: &str) {
+    for (i, (rw, xw)) in rust_w.iter().zip(xla_w.iter()).enumerate() {
+        assert!(
+            (rw - *xw as f64).abs() < 5e-4,
+            "{tag}: weight {i} diverged: rust {rw} vs xla {xw}"
+        );
+    }
+}
+
+#[test]
+fn dcd_engines_agree() {
+    let mut rt = Runtime::open_default().expect("artifacts");
+    let s = shared_inputs(&rt, "dcd");
+    let (n, l, t) = (s.n, s.l, s.t);
+    let (m, mg) = (2, 1);
+
+    let mut rng = Pcg64::new(5, 5);
+    let mut h = vec![0f32; t * n * l];
+    let mut q = vec![0f32; t * n * l];
+    let mut scratch = Vec::new();
+    for slot in 0..t * n {
+        rng.fill_mask(&mut h[slot * l..(slot + 1) * l], m, &mut scratch);
+        rng.fill_mask(&mut q[slot * l..(slot + 1) * l], mg, &mut scratch);
+    }
+
+    let w0 = vec![0f32; n * l];
+    let (c32, a32, mu32, wo32) =
+        (s.net.c_f32(), s.net.a_f32(), s.net.mu_f32(), s.model.wo_f32());
+    let out = rt
+        .execute_chunk("dcd_smoke", &[&w0, &s.u, &s.d, &h, &q, &c32, &a32, &mu32, &wo32])
+        .unwrap();
+
+    let mut alg = Dcd::new(s.net.clone(), m, mg);
+    let mut comm = CommMeter::new(n);
+    for step in 0..t {
+        let masks = DcdMasks {
+            h: as_f64(&h[step * n * l..(step + 1) * n * l]),
+            q: as_f64(&q[step * n * l..(step + 1) * n * l]),
+        };
+        let u = as_f64(&s.u[step * n * l..(step + 1) * n * l]);
+        let d = as_f64(&s.d[step * n..(step + 1) * n]);
+        alg.step_with_masks(StepData { u: &u, d: &d }, &masks, &mut comm);
+        // Per-node MSD agreement at every step.
+        for k in 0..n {
+            let rust_sq: f64 = (0..l)
+                .map(|j| {
+                    let dlt = s.model.wo[j] - alg.weights()[k * l + j];
+                    dlt * dlt
+                })
+                .sum();
+            let xla_sq = out.msd[step * n + k] as f64;
+            assert!(
+                (rust_sq - xla_sq).abs() < 5e-4 * rust_sq.max(1.0),
+                "step {step} node {k}: rust {rust_sq} vs xla {xla_sq}"
+            );
+        }
+    }
+    assert_weights_close(alg.weights(), &out.w_final, "dcd");
+}
+
+#[test]
+fn partial_engines_agree() {
+    let mut rt = Runtime::open_default().expect("artifacts");
+    let s = shared_inputs(&rt, "partial");
+    let (n, l, t) = (s.n, s.l, s.t);
+    let m = 2;
+
+    let mut rng = Pcg64::new(6, 6);
+    let mut h = vec![0f32; t * n * l];
+    let mut scratch = Vec::new();
+    for slot in 0..t * n {
+        rng.fill_mask(&mut h[slot * l..(slot + 1) * l], m, &mut scratch);
+    }
+
+    // Partial diffusion uses C = I.
+    let mut net = s.net.clone();
+    net.c = dcd_lms::linalg::Mat::eye(n);
+    let w0 = vec![0f32; n * l];
+    let (a32, mu32, wo32) = (net.a_f32(), net.mu_f32(), s.model.wo_f32());
+    let out = rt
+        .execute_chunk("partial_smoke", &[&w0, &s.u, &s.d, &h, &a32, &mu32, &wo32])
+        .unwrap();
+
+    let mut alg = PartialDiffusion::new(net, m);
+    let mut comm = CommMeter::new(n);
+    for step in 0..t {
+        let masks = PartialMasks { h: as_f64(&h[step * n * l..(step + 1) * n * l]) };
+        let u = as_f64(&s.u[step * n * l..(step + 1) * n * l]);
+        let d = as_f64(&s.d[step * n..(step + 1) * n]);
+        alg.step_with_masks(StepData { u: &u, d: &d }, &masks, &mut comm);
+    }
+    assert_weights_close(alg.weights(), &out.w_final, "partial");
+}
+
+#[test]
+fn rcd_engines_agree() {
+    let mut rt = Runtime::open_default().expect("artifacts");
+    let s = shared_inputs(&rt, "rcd");
+    let (n, l, t) = (s.n, s.l, s.t);
+
+    // Random neighbour selections restricted to the ring topology.
+    let mut rng = Pcg64::new(7, 7);
+    let mut sel = vec![0f32; t * n * n];
+    let mut scratch = Vec::new();
+    for ti in 0..t {
+        for k in 0..n {
+            let nbrs = s.net.graph.neighbors(k);
+            rng.sample_indices(nbrs.len(), 1, &mut scratch);
+            sel[ti * n * n + nbrs[scratch[0]] * n + k] = 1.0;
+        }
+    }
+
+    let mut net = s.net.clone();
+    net.c = dcd_lms::linalg::Mat::eye(n);
+    let w0 = vec![0f32; n * l];
+    let (a32, mu32, wo32) = (net.a_f32(), net.mu_f32(), s.model.wo_f32());
+    let out = rt
+        .execute_chunk("rcd_smoke", &[&w0, &s.u, &s.d, &sel, &a32, &mu32, &wo32])
+        .unwrap();
+
+    let mut alg = Rcd::new(net, 1);
+    let mut comm = CommMeter::new(n);
+    for step in 0..t {
+        let selection = RcdSelection { s: as_f64(&sel[step * n * n..(step + 1) * n * n]) };
+        let u = as_f64(&s.u[step * n * l..(step + 1) * n * l]);
+        let d = as_f64(&s.d[step * n..(step + 1) * n]);
+        alg.step_with_selection(StepData { u: &u, d: &d }, &selection, &mut comm);
+    }
+    assert_weights_close(alg.weights(), &out.w_final, "rcd");
+}
+
+#[test]
+fn atc_engines_agree() {
+    let mut rt = Runtime::open_default().expect("artifacts");
+    let s = shared_inputs(&rt, "atc");
+    let (n, l, t) = (s.n, s.l, s.t);
+
+    let w0 = vec![0f32; n * l];
+    let (c32, a32, mu32, wo32) =
+        (s.net.c_f32(), s.net.a_f32(), s.net.mu_f32(), s.model.wo_f32());
+    let out = rt
+        .execute_chunk("atc_smoke", &[&w0, &s.u, &s.d, &c32, &a32, &mu32, &wo32])
+        .unwrap();
+
+    let mut alg = dcd_lms::algorithms::DiffusionLms::new(s.net.clone());
+    let mut comm = CommMeter::new(n);
+    let mut rng = Pcg64::new(0, 0);
+    for step in 0..t {
+        let u = as_f64(&s.u[step * n * l..(step + 1) * n * l]);
+        let d = as_f64(&s.d[step * n..(step + 1) * n]);
+        alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+    }
+    assert_weights_close(alg.weights(), &out.w_final, "atc");
+}

@@ -1,0 +1,322 @@
+//! Cross-module integration: runtime + coordinator + energy + theory
+//! working together, including the thread-per-agent protocol mode.
+
+use dcd_lms::algorithms::{Algorithm, CommMeter, Dcd, NetworkConfig, StepData};
+use dcd_lms::coordinator::agent::{Agent, AgentConfig};
+use dcd_lms::coordinator::bus::Bus;
+use dcd_lms::coordinator::runner::{MonteCarlo, XlaAlgo};
+use dcd_lms::coordinator::wsn::{WsnAlgo, WsnConfig, WsnSimulation};
+use dcd_lms::datamodel::DataModel;
+use dcd_lms::energy::EnergyParams;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::runtime::Runtime;
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+use std::sync::{Arc, Barrier, Mutex};
+
+fn ring_net(n: usize, l: usize, mu: f64) -> NetworkConfig {
+    let graph = Graph::ring(n, 1);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    NetworkConfig { graph, c, a, mu: vec![mu; n], dim: l }
+}
+
+/// xla engine end-to-end through the MC runner: MSD must decay.
+#[test]
+fn xla_monte_carlo_converges() {
+    let mut rt = Runtime::open_default().expect("run `make artifacts` (smoke)");
+    let spec = rt.manifest().find("dcd", "smoke").unwrap().clone();
+    let (n, l) = (spec.n_nodes, spec.dim);
+    let mut rng = Pcg64::new(8, 0);
+    let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+    let net = ring_net(n, l, 0.1);
+    let mc = MonteCarlo { runs: 3, iters: 64, seed: 2, record_every: 1 };
+    let res = mc
+        .run_xla(
+            &mut rt,
+            "smoke",
+            &XlaAlgo::Dcd { m: 2, m_grad: 1 },
+            &model,
+            &net.c_f32(),
+            &net.a_f32(),
+            &net.mu_f32(),
+        )
+        .unwrap();
+    assert_eq!(res.msd.len(), 64);
+    assert!(
+        res.msd[63] < 0.5 * res.msd[0],
+        "msd {} -> {}",
+        res.msd[0],
+        res.msd[63]
+    );
+}
+
+/// All four algorithms through the xla engine in one session (compile
+/// cache exercised); every trajectory decays.
+#[test]
+fn xla_all_algorithms_converge() {
+    let mut rt = Runtime::open_default().expect("artifacts");
+    let spec = rt.manifest().find("dcd", "smoke").unwrap().clone();
+    let (n, l) = (spec.n_nodes, spec.dim);
+    let mut rng = Pcg64::new(9, 0);
+    let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+    let net = ring_net(n, l, 0.1);
+    dcd_lms::coordinator::runner::set_rcd_support(&net.graph);
+    let mc = MonteCarlo { runs: 2, iters: 64, seed: 3, record_every: 1 };
+    for algo in [
+        XlaAlgo::Dcd { m: 2, m_grad: 1 },
+        XlaAlgo::Atc,
+        XlaAlgo::Rcd { m_links: 1 },
+        XlaAlgo::Partial { m: 2 },
+    ] {
+        let res = mc
+            .run_xla(&mut rt, "smoke", &algo, &model, &net.c_f32(), &net.a_f32(), &net.mu_f32())
+            .unwrap();
+        assert!(
+            res.msd[63] < 0.7 * res.msd[0],
+            "{:?}: {} -> {}",
+            algo,
+            res.msd[0],
+            res.msd[63]
+        );
+    }
+}
+
+/// Thread-per-agent protocol mode: the same agent state machines that the
+/// deterministic scheduler drives run under real threads with barrier
+/// phases, and still reproduce the vectorised implementation exactly.
+#[test]
+fn threaded_agents_match_vectorized() {
+    let n = 6;
+    let l = 4;
+    let (m, mg) = (2, 1);
+    let net = ring_net(n, l, 0.07);
+    let mut rng = Pcg64::new(55, 0);
+
+    // Shared data + masks for one iteration.
+    let mut u = vec![0.0; n * l];
+    let mut d = vec![0.0; n];
+    for x in u.iter_mut() {
+        *x = rng.next_gaussian();
+    }
+    for dk in d.iter_mut() {
+        *dk = rng.next_gaussian();
+    }
+    let mut h = vec![0.0; n * l];
+    let mut q = vec![0.0; n * l];
+    let mut scratch = Vec::new();
+    let mut m32 = vec![0f32; l];
+    for k in 0..n {
+        rng.fill_mask(&mut m32, m, &mut scratch);
+        for j in 0..l {
+            h[k * l + j] = m32[j] as f64;
+        }
+        rng.fill_mask(&mut m32, mg, &mut scratch);
+        for j in 0..l {
+            q[k * l + j] = m32[j] as f64;
+        }
+    }
+
+    // Vectorised reference.
+    let mut reference = Dcd::new(net.clone(), m, mg);
+    let mut comm = CommMeter::new(n);
+    reference.step_with_masks(
+        StepData { u: &u, d: &d },
+        &dcd_lms::algorithms::DcdMasks { h: h.clone(), q: q.clone() },
+        &mut comm,
+    );
+
+    // Threaded agents: one thread per node, barriers between phases.
+    let bus = Arc::new(Bus::new(n));
+    let barrier = Arc::new(Barrier::new(n));
+    let results = Arc::new(Mutex::new(vec![vec![0.0; l]; n]));
+    let mut handles = Vec::new();
+    for k in 0..n {
+        let neighbors: Vec<usize> = net.graph.neighbors(k).to_vec();
+        let cfg = AgentConfig {
+            id: k,
+            dim: l,
+            m,
+            m_grad: mg,
+            mu: net.mu[k],
+            c_self: net.c[(k, k)],
+            c_neighbors: neighbors.iter().map(|&x| net.c[(x, k)]).collect(),
+            a_self: net.a[(k, k)],
+            a_neighbors: neighbors.iter().map(|&x| net.a[(x, k)]).collect(),
+            neighbors,
+        };
+        let (bus, barrier, results) = (bus.clone(), barrier.clone(), results.clone());
+        let (uk, dk) = (u[k * l..(k + 1) * l].to_vec(), d[k]);
+        let (hk, qk) = (h[k * l..(k + 1) * l].to_vec(), q[k * l..(k + 1) * l].to_vec());
+        handles.push(std::thread::spawn(move || {
+            let mut agent = Agent::new(cfg, 99);
+            agent.observe(&uk, dk);
+            agent.set_masks(&hk, &qk);
+            agent.phase_broadcast(&bus, false);
+            barrier.wait();
+            agent.phase_reply(&bus);
+            barrier.wait();
+            agent.phase_collect(&bus);
+            barrier.wait();
+            agent.phase_update();
+            results.lock().unwrap()[agent.id()] = agent.w.clone();
+        }));
+    }
+    for handle in handles {
+        handle.join().unwrap();
+    }
+    let results = results.lock().unwrap();
+    for k in 0..n {
+        for j in 0..l {
+            let want = reference.weights()[k * l + j];
+            let got = results[k][j];
+            assert!(
+                (want - got).abs() < 1e-12,
+                "node {k} dim {j}: {want} vs {got}"
+            );
+        }
+    }
+}
+
+/// WSN + energy + algorithm stack: Table I cost ordering shows up as an
+/// activation-count ordering under identical harvest conditions.
+#[test]
+fn wsn_energy_ordering() {
+    let n = 12;
+    let l = 8;
+    let mut rng = Pcg64::new(77, 0);
+    let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+    let graph = Graph::ring(n, 2);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    let mut activations = Vec::new();
+    for algo in [
+        WsnAlgo::Diffusion,
+        WsnAlgo::Cd { m: 4 },
+        WsnAlgo::Rcd { m_links: 1 },
+        WsnAlgo::Dcd { m: 1, m_grad: 1, combine: true },
+    ] {
+        let cfg = WsnConfig {
+            net: NetworkConfig {
+                graph: graph.clone(),
+                c: c.clone(),
+                a: a.clone(),
+                mu: vec![0.02; n],
+                dim: l,
+            },
+            algo,
+            energy: EnergyParams::default(),
+            harvest_scale: vec![0.5; n],
+            duration: 20_000.0,
+            sample_dt: 1_000.0,
+        };
+        let res = WsnSimulation::new(cfg, model.clone()).run(5);
+        activations.push((algo.label(), res.activations));
+    }
+    // Table I: e_diffusion > e_cd > e_rcd > e_dcd  ⇒ reverse activation order.
+    for pair in activations.windows(2) {
+        assert!(
+            pair[0].1 <= pair[1].1,
+            "{} ({}) should activate less than {} ({})",
+            pair[0].0,
+            pair[0].1,
+            pair[1].0,
+            pair[1].1
+        );
+    }
+}
+
+/// `run_chunks` threads the carry correctly: two chunks fed by the
+/// driver equal one manual two-chunk execution.
+#[test]
+fn runtime_chunk_threading() {
+    let mut rt = Runtime::open_default().expect("artifacts");
+    let spec = rt.manifest().find("atc", "smoke").unwrap().clone();
+    let (n, l, t) = (spec.n_nodes, spec.dim, spec.chunk_len);
+    let net = ring_net(n, l, 0.1);
+    let mut rng = Pcg64::new(21, 0);
+    let model = DataModel::paper(n, l, 1.0, 1.0, 1e-3, &mut rng);
+    // Pre-generate two chunks of data.
+    let mut chunks: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+    for _ in 0..2 {
+        let mut u = vec![0f32; t * n * l];
+        let mut d = vec![0f32; t * n];
+        model.sample_block_f32(&mut rng, t, &mut u, &mut d);
+        chunks.push((u, d));
+    }
+    let (c32, a32, mu32, wo32) = (net.c_f32(), net.a_f32(), net.mu_f32(), model.wo_f32());
+    let w0 = vec![0f32; n * l];
+
+    // Manual path.
+    let out1 = rt
+        .execute_chunk("atc_smoke", &[&w0, &chunks[0].0, &chunks[0].1, &c32, &a32, &mu32, &wo32])
+        .unwrap();
+    let out2 = rt
+        .execute_chunk(
+            "atc_smoke",
+            &[&out1.w_final, &chunks[1].0, &chunks[1].1, &c32, &a32, &mu32, &wo32],
+        )
+        .unwrap();
+
+    // Driver path.
+    let chunks2 = chunks.clone();
+    let (w_final, msd) = rt
+        .run_chunks(
+            "atc_smoke",
+            &w0,
+            2,
+            move |i| vec![chunks2[i].0.clone(), chunks2[i].1.clone()],
+            &[&c32, &a32, &mu32, &wo32],
+        )
+        .unwrap();
+    assert_eq!(w_final, out2.w_final);
+    let manual: Vec<f32> = out1.msd.iter().chain(out2.msd.iter()).copied().collect();
+    assert_eq!(msd, manual);
+}
+
+/// The theory engine's EMSE weighting (Σ₀ = 𝓡_u) relates to MSD as the
+/// paper describes: EMSE ≈ σ²_u-weighted MSD, so with uniform unit
+/// regressor variances the two trajectories coincide.
+#[test]
+fn theory_emse_weighting() {
+    use dcd_lms::theory::{MsdModel, TheorySetup};
+    let n = 6;
+    let l = 4;
+    let graph = Graph::ring(n, 1);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let setup = TheorySetup {
+        n_nodes: n,
+        dim: l,
+        m: 2,
+        m_grad: 1,
+        c,
+        mu: vec![5e-3; n],
+        sigma_u2: vec![1.0; n], // unit variances ⇒ 𝓡_u = I
+        sigma_v2: vec![1e-3; n],
+    };
+    let model = MsdModel::new(setup);
+    let wo = vec![0.4, -0.2, 0.7, 0.1];
+    let msd = model.trajectory(&wo, 400);
+    let emse = model.trajectory_weighted(&wo, 400, Some(&vec![1.0; n]));
+    for (a, b) in msd.msd.iter().zip(emse.msd.iter()) {
+        assert!((a - b).abs() < 1e-12);
+    }
+}
+
+/// Runtime error paths: wrong input count/shape are rejected cleanly.
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let mut rt = Runtime::open_default().expect("artifacts");
+    let err = rt.execute_chunk("dcd_smoke", &[]).unwrap_err();
+    assert!(format!("{err}").contains("inputs"), "{err}");
+    let spec = rt.manifest().find("dcd", "smoke").unwrap().clone();
+    let mut bufs: Vec<Vec<f32>> = spec
+        .inputs
+        .iter()
+        .map(|t| vec![0f32; t.num_elements()])
+        .collect();
+    bufs[0].pop(); // corrupt W0's length
+    let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    let err = rt.execute_chunk("dcd_smoke", &refs).unwrap_err();
+    assert!(format!("{err}").contains("expects"), "{err}");
+    assert!(rt.execute_chunk("no_such_module", &[]).is_err());
+}

@@ -1,0 +1,307 @@
+//! Property tests over coordinator invariants (DESIGN.md §5), using the
+//! in-tree harness (`dcd_lms::testing` — the offline `proptest`
+//! substitute).
+
+use dcd_lms::algorithms::{
+    Algorithm, CommMeter, Dcd, DiffusionLms, NetworkConfig, PartialDiffusion, Rcd, StepData,
+};
+use dcd_lms::linalg::Mat;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::testing::{check, usize_in, Gen, PropConfig};
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+/// A random network + compression setting.
+#[derive(Debug, Clone)]
+struct Case {
+    n: usize,
+    l: usize,
+    m: usize,
+    mg: usize,
+    hops: usize,
+    seed: u64,
+}
+
+fn case_gen() -> Gen<Case> {
+    Gen::new(|rng, size| {
+        let n = 3 + rng.next_below(3 + (size as usize * 7) / 255 + 1);
+        let l = 1 + rng.next_below(1 + (size as usize * 9) / 255 + 1);
+        Case {
+            n,
+            l,
+            m: 1 + rng.next_below(l),
+            mg: 1 + rng.next_below(l),
+            hops: 1 + rng.next_below(((n - 1) / 2).max(1)),
+            seed: rng.next_u64(),
+        }
+    })
+}
+
+fn net_for(case: &Case) -> NetworkConfig {
+    let graph = Graph::ring(case.n, case.hops);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    NetworkConfig { graph, c, a, mu: vec![0.03; case.n], dim: case.l }
+}
+
+fn drive(alg: &mut dyn Algorithm, case: &Case, iters: usize, comm: &mut CommMeter) {
+    let mut rng = Pcg64::new(case.seed, 1);
+    let (n, l) = (case.n, case.l);
+    let mut u = vec![0.0; n * l];
+    let mut d = vec![0.0; n];
+    for _ in 0..iters {
+        for x in u.iter_mut() {
+            *x = rng.next_gaussian();
+        }
+        for dk in d.iter_mut() {
+            *dk = rng.next_gaussian();
+        }
+        alg.step(StepData { u: &u, d: &d }, &mut rng, comm);
+    }
+}
+
+/// The comm meter must equal the closed-form expected scalar counts for
+/// every algorithm whose traffic is deterministic given the topology.
+#[test]
+fn prop_comm_meter_matches_closed_form() {
+    check(&PropConfig { cases: 40, seed: 11 }, &case_gen(), |case| {
+        let net = net_for(case);
+        let iters = 3;
+        for alg in [
+            Box::new(Dcd::new(net.clone(), case.m, case.mg)) as Box<dyn Algorithm>,
+            Box::new(Dcd::cd(net.clone(), case.m)),
+            Box::new(DiffusionLms::new(net.clone())),
+            Box::new(PartialDiffusion::new(net.clone(), case.m)),
+            Box::new(Rcd::new(net.clone(), 1 + case.seed as usize % 2)),
+        ] {
+            let mut alg = alg;
+            let mut comm = CommMeter::new(case.n);
+            drive(alg.as_mut(), case, iters, &mut comm);
+            let expect = alg.expected_scalars_per_iter() * iters as f64;
+            if (comm.scalars as f64 - expect).abs() > 1e-9 {
+                return Err(format!(
+                    "{}: metered {} vs expected {}",
+                    alg.name(),
+                    comm.scalars,
+                    expect
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The paper's compression-ratio formulas, as exposed by each algorithm.
+#[test]
+fn prop_compression_ratio_formulas() {
+    check(&PropConfig { cases: 60, seed: 13 }, &case_gen(), |case| {
+        let net = net_for(case);
+        let l = case.l as f64;
+        let dcd = Dcd::new(net.clone(), case.m, case.mg);
+        let want = 2.0 * l / (case.m + case.mg) as f64;
+        if (dcd.compression_ratio().unwrap() - want).abs() > 1e-12 {
+            return Err(format!("dcd ratio {} != {want}", dcd.compression_ratio().unwrap()));
+        }
+        let cd = Dcd::cd(net.clone(), case.m);
+        let want = 2.0 * l / (case.m as f64 + l);
+        if (cd.compression_ratio().unwrap() - want).abs() > 1e-12 {
+            return Err("cd ratio mismatch".into());
+        }
+        let pd = PartialDiffusion::new(net, case.m);
+        let want = 2.0 * l / case.m as f64;
+        if (pd.compression_ratio().unwrap() - want).abs() > 1e-12 {
+            return Err("partial ratio mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Combine steps are convex: with every node holding the same vector and
+/// zero step size, one iteration must leave the state unchanged, for any
+/// masks/selections any algorithm draws.
+#[test]
+fn prop_consensus_is_fixed_point_at_zero_step() {
+    check(&PropConfig { cases: 40, seed: 17 }, &case_gen(), |case| {
+        let mut net = net_for(case);
+        net.mu = vec![0.0; case.n];
+        let mut rng = Pcg64::new(case.seed, 2);
+        let constant = 1.0 + rng.next_f64();
+        for alg in [
+            Box::new(Dcd::new(net.clone(), case.m, case.mg)) as Box<dyn Algorithm>,
+            Box::new(DiffusionLms::new(net.clone())),
+            Box::new(PartialDiffusion::new(net.clone(), case.m)),
+            Box::new(Rcd::new(net.clone(), 1)),
+        ] {
+            let mut alg = alg;
+            // Seed every node with the same vector by running one
+            // zero-step iteration from a crafted state: instead, verify
+            // via the residual route — zero-step keeps w = 0, then any
+            // combine of equal vectors stays equal.
+            let (n, l) = (case.n, case.l);
+            let u = vec![0.5; n * l];
+            let d = vec![constant; n];
+            let mut comm = CommMeter::new(n);
+            let mut rng2 = Pcg64::new(case.seed, 3);
+            alg.step(StepData { u: &u, d: &d }, &mut rng2, &mut comm);
+            for (i, &w) in alg.weights().iter().enumerate() {
+                if w.abs() > 1e-12 {
+                    return Err(format!("{}: w[{i}] = {w} after zero-step", alg.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Estimates stay finite over long horizons when μ is far below the
+/// stability bound (failure injection: heavy-tailed-ish data via
+/// occasional large regressors).
+#[test]
+fn prop_estimates_stay_finite_below_bound() {
+    check(&PropConfig { cases: 15, seed: 23 }, &case_gen(), |case| {
+        let net = net_for(case);
+        let mut alg = Dcd::new(net, case.m, case.mg);
+        let mut rng = Pcg64::new(case.seed, 4);
+        let (n, l) = (case.n, case.l);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        let mut comm = CommMeter::new(n);
+        for i in 0..400 {
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian() * if i % 37 == 0 { 5.0 } else { 1.0 };
+            }
+            for dk in d.iter_mut() {
+                *dk = rng.next_gaussian();
+            }
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        }
+        if alg.weights().iter().all(|w| w.is_finite()) {
+            Ok(())
+        } else {
+            Err("non-finite weight".into())
+        }
+    });
+}
+
+/// Mask popcounts: every drawn H row has exactly M ones — via the bus
+/// protocol (message sizes are exactly M and M_grad).
+#[test]
+fn prop_message_sizes_exact() {
+    check(&PropConfig { cases: 30, seed: 29 }, &case_gen(), |case| {
+        use dcd_lms::coordinator::bus::{Bus, Message};
+        use dcd_lms::coordinator::agent::{Agent, AgentConfig};
+        let net = net_for(case);
+        let n = case.n;
+        let bus = Bus::new(n);
+        let mut agents: Vec<Agent> = (0..n)
+            .map(|k| {
+                let neighbors: Vec<usize> = net.graph.neighbors(k).to_vec();
+                Agent::new(
+                    AgentConfig {
+                        id: k,
+                        dim: case.l,
+                        m: case.m,
+                        m_grad: case.mg,
+                        mu: 0.01,
+                        c_self: net.c[(k, k)],
+                        c_neighbors: neighbors.iter().map(|&l| net.c[(l, k)]).collect(),
+                        a_self: net.a[(k, k)],
+                        a_neighbors: neighbors.iter().map(|&l| net.a[(l, k)]).collect(),
+                        neighbors,
+                    },
+                    case.seed,
+                )
+            })
+            .collect();
+        for ag in agents.iter_mut() {
+            ag.observe(&vec![0.3; case.l], 0.7);
+            ag.phase_broadcast(&bus, true);
+        }
+        // Every estimate message must carry exactly M scalars.
+        for k in 0..n {
+            for msg in bus.drain(k) {
+                match msg {
+                    Message::Estimate { body, .. } => {
+                        if body.len() != case.m {
+                            return Err(format!(
+                                "estimate carries {} scalars, want {}",
+                                body.len(),
+                                case.m
+                            ));
+                        }
+                    }
+                    Message::Gradient { body, .. } => {
+                        if body.len() != case.mg {
+                            return Err("bad gradient size".into());
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// RCD reweighting: combine weights stay a partition of unity for any
+/// selection, so a network in consensus stays in consensus even with
+/// nonzero step size and noiseless consistent data.
+#[test]
+fn prop_rcd_consensus_preserved() {
+    check(&PropConfig { cases: 30, seed: 31 }, &case_gen(), |case| {
+        let net = net_for(case);
+        let mut alg = Rcd::new(net, 1 + case.seed as usize % 3);
+        let (n, l) = (case.n, case.l);
+        // Put the network at the true optimum w° and feed consistent data.
+        let mut rng = Pcg64::new(case.seed, 5);
+        let wo: Vec<f64> = (0..l).map(|_| rng.next_gaussian()).collect();
+        // Drive to near-consensus first.
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        let mut comm = CommMeter::new(n);
+        for _ in 0..600 {
+            for x in u.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for k in 0..n {
+                d[k] = u[k * l..(k + 1) * l]
+                    .iter()
+                    .zip(wo.iter())
+                    .map(|(a, b)| a * b)
+                    .sum();
+            }
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+        }
+        let msd = alg.msd(&wo);
+        if msd < 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("rcd failed to reach consensus: msd {msd}"))
+        }
+    });
+}
+
+/// Metropolis matrices remain doubly stochastic for arbitrary connected
+/// ring topologies (substrate invariant used throughout the theory).
+#[test]
+fn prop_metropolis_doubly_stochastic() {
+    check(&PropConfig { cases: 80, seed: 37 }, &case_gen(), |case| {
+        let graph = Graph::ring(case.n, case.hops);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        for k in 0..case.n {
+            let col: f64 = (0..case.n).map(|l| a[(l, k)]).sum();
+            let row: f64 = a.row(k).iter().sum();
+            if (col - 1.0).abs() > 1e-9 || (row - 1.0).abs() > 1e-9 {
+                return Err(format!("node {k}: col {col} row {row}"));
+            }
+            if a[(k, k)] < 0.0 {
+                return Err("negative diagonal".into());
+            }
+        }
+        // Spectral radius of a doubly stochastic matrix is 1.
+        let rho = dcd_lms::linalg::spectral_radius(&a, 500);
+        if (rho - 1.0).abs() > 1e-6 {
+            return Err(format!("rho {rho}"));
+        }
+        let _ = Mat::eye(2);
+        Ok(())
+    });
+}

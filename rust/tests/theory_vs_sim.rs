@@ -1,0 +1,106 @@
+//! The paper's model-accuracy claim (Fig. 3 left): the closed-form
+//! mean-square model must track Monte-Carlo simulation within ~1 dB at
+//! steady state, for all three algorithm settings, and the transient
+//! must match too.
+
+use dcd_lms::algorithms::{Dcd, NetworkConfig};
+use dcd_lms::coordinator::MonteCarlo;
+use dcd_lms::datamodel::DataModel;
+use dcd_lms::linalg::Mat;
+use dcd_lms::metrics::to_db;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::theory::{MeanModel, MsdModel, TheorySetup};
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+fn setup(m: usize, mg: usize, mu: f64) -> (TheorySetup, NetworkConfig, DataModel) {
+    let n = 10;
+    let l = 5;
+    let graph = Graph::paper_ten_node();
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let mut rng = Pcg64::new(2017, 0);
+    let model = DataModel::paper(n, l, 0.8, 1.2, 1e-3, &mut rng);
+    let setup = TheorySetup {
+        n_nodes: n,
+        dim: l,
+        m,
+        m_grad: mg,
+        c: c.clone(),
+        mu: vec![mu; n],
+        sigma_u2: model.sigma_u2.clone(),
+        sigma_v2: model.sigma_v2.clone(),
+    };
+    let net = NetworkConfig { graph, c, a: Mat::eye(n), mu: vec![mu; n], dim: l };
+    (setup, net, model)
+}
+
+fn check(m: usize, mg: usize, label: &str) {
+    let mu = 5e-3; // shrunk-horizon version of the paper's 1e-3
+    let iters = 10_000;
+    let (th_setup, net, model) = setup(m, mg, mu);
+    let theory = MsdModel::new(th_setup.clone());
+    let tr = theory.trajectory(&model.wo, iters);
+    let mc = MonteCarlo { runs: 20, iters, seed: 3, record_every: 1 };
+    let sim = mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, mg)));
+
+    // Steady state within 1.5 dB (20 MC runs; the paper used 100).
+    let t_db = to_db(tr.steady_state);
+    let s_db = to_db(sim.steady_state);
+    assert!(
+        (t_db - s_db).abs() < 1.5,
+        "{label}: steady state theory {t_db:.2} dB vs sim {s_db:.2} dB"
+    );
+
+    // Transient agreement at a few checkpoints (3 dB — single trace MC noise).
+    for &i in &[200usize, 1000, 4000] {
+        let t = to_db(tr.msd[i - 1]);
+        let s = to_db(sim.msd[i - 1]);
+        assert!(
+            (t - s).abs() < 3.0,
+            "{label} iter {i}: theory {t:.2} dB vs sim {s:.2} dB"
+        );
+    }
+}
+
+#[test]
+fn dcd_theory_tracks_simulation() {
+    check(3, 1, "dcd(M=3,M∇=1)");
+}
+
+#[test]
+fn cd_theory_tracks_simulation() {
+    check(3, 5, "cd(M=3)");
+}
+
+#[test]
+fn diffusion_theory_tracks_simulation() {
+    check(5, 5, "diffusion-lms");
+}
+
+#[test]
+fn mean_stability_bound_separates_regimes() {
+    // μ below the paper bound (38)-(39) ⇒ ρ(B) < 1; far above ⇒ unstable.
+    let (s, _, _) = setup(3, 1, 0.0);
+    let bounds = MeanModel::new(s.clone()).paper_mu_bounds();
+    let bound = bounds.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut ok = s.clone();
+    ok.mu = vec![0.4 * bound; 10];
+    assert!(MeanModel::new(ok).is_mean_stable());
+    let mut bad = s;
+    bad.mu = vec![4.0 * bound; 10];
+    assert!(!MeanModel::new(bad).is_mean_stable());
+}
+
+#[test]
+fn compression_ordering_matches_paper() {
+    // Fig. 3 (left): diffusion LMS outperforms CD outperforms DCD.
+    let mu = 5e-3;
+    let ss = |m: usize, mg: usize| {
+        let (s, _, model) = setup(m, mg, mu);
+        to_db(MsdModel::new(s).steady_state(&model.wo, 1e-10, 30_000).0)
+    };
+    let dlms = ss(5, 5);
+    let cd = ss(3, 5);
+    let dcd = ss(3, 1);
+    assert!(dlms < cd, "dLMS {dlms} < CD {cd}");
+    assert!(cd < dcd, "CD {cd} < DCD {dcd}");
+}
