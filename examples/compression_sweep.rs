@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     // The xla engine needs an artifact matching (N, L); the shipped
     // manifest covers the paper shape (50, 50). Fall back to rust
     // otherwise.
-    let engine = if force_rust || fast {
+    let engine = if force_rust || fast || !dcd_lms::runtime::xla_available() {
         Engine::Rust
     } else {
         match Runtime::open_default() {

@@ -27,7 +27,7 @@ fn main() {
     let model = DataModel::paper(n, l, 0.8, 1.2, 1e-3, &mut rng);
 
     // 3. Monte-Carlo the learning curves.
-    let mc = MonteCarlo { runs: 10, iters: 4_000, seed: 42, record_every: 1 };
+    let mc = MonteCarlo { runs: 10, iters: 4_000, seed: 42, record_every: 1, threads: 0 };
 
     let full = mc.run_rust(&model, || Box::new(DiffusionLms::new(net.clone())));
     // DCD shares 2 of 8 estimate entries and 2 of 8 gradient entries:

@@ -44,7 +44,7 @@ fn main() {
     let theory = MsdModel::new(setup).trajectory(&model.wo, iters);
 
     let net = NetworkConfig { graph, c, a: Mat::eye(n), mu: vec![mu; n], dim: l };
-    let mc = MonteCarlo { runs: 20, iters, seed: 1, record_every: 1 };
+    let mc = MonteCarlo { runs: 20, iters, seed: 1, record_every: 1, threads: 0 };
     let sim = mc.run_rust(&model, || Box::new(Dcd::new(net.clone(), m, mg)));
 
     println!("\n   iter    theory (dB)    sim (dB)    |gap|");

@@ -28,9 +28,13 @@ fn main() {
         cfg.iters = 1_500;
         // A2 ablation points: fixed budget M + M∇ = 10, different splits.
         cfg.dcd_pairs.extend_from_slice(&[(8, 2), (2, 8)]);
-        engine = match Runtime::open_default() {
-            Ok(rt) if rt.manifest().find("dcd", "exp2").is_some() => Engine::Xla,
-            _ => Engine::Rust,
+        engine = if !dcd_lms::runtime::xla_available() {
+            Engine::Rust
+        } else {
+            match Runtime::open_default() {
+                Ok(rt) if rt.manifest().find("dcd", "exp2").is_some() => Engine::Xla,
+                _ => Engine::Rust,
+            }
         };
     }
 

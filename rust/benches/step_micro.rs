@@ -59,7 +59,9 @@ fn main() {
     }
 
     // --- xla engine: amortised per-step cost via chunked scan ------------
-    if let Ok(mut rt) = Runtime::open_default() {
+    if !dcd_lms::runtime::xla_available() {
+        println!("(xla runtime unavailable — xla rows skipped; see rust/vendor/README.md)");
+    } else if let Ok(mut rt) = Runtime::open_default() {
         for config in ["smoke", "exp1", "exp3"] {
             let Some(spec) = rt.manifest().find("dcd", config).cloned() else {
                 continue;
@@ -71,7 +73,7 @@ fn main() {
             let network = net(n, l);
             let mut rng = Pcg64::new(2, 0);
             let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
-            let mc = MonteCarlo { runs: 1, iters: t, seed: 1, record_every: 1 };
+            let mc = MonteCarlo { runs: 1, iters: t, seed: 1, record_every: 1, threads: 0 };
             let (c32, a32, mu32) = (network.c_f32(), network.a_f32(), network.mu_f32());
             let algo = XlaAlgo::Dcd { m: (l / 2).max(1), m_grad: (l / 3).max(1) };
             // Warm the compile cache outside the timed region.

@@ -1,9 +1,14 @@
 //! Bench `theory_ops`: the closed-form theory engine — operator
-//! precomputation, one Σ-recursion application, the noise functional,
-//! and a full steady-state solve (the cost behind every theoretical
-//! curve of Fig. 3 left).
+//! precomputation, one Σ-recursion application (reference vs the
+//! allocation-free fast path), the noise functional, and a full
+//! steady-state solve (the cost behind every theoretical curve of
+//! Fig. 3 left).
+//!
+//! Also emits `BENCH_theory.json` — iters/sec for the Σ-recursion at
+//! NL ∈ {50, 200, 800} — so future PRs have a perf trajectory to
+//! regress against (see EXPERIMENTS.md §Perf).
 
-use dcd_lms::bench_support::{bench, fast_mode, Table};
+use dcd_lms::bench_support::{bench, fast_mode, write_bench_json, BenchRecord, Table};
 use dcd_lms::datamodel::DataModel;
 use dcd_lms::linalg::Mat;
 use dcd_lms::rng::Pcg64;
@@ -53,11 +58,23 @@ fn main() {
 
         let msd = MsdModel::new(s.clone());
         let sigma = Mat::eye(n * l);
-        let stats = bench("apply", 2, budget, || {
+        let stats = bench("apply (reference)", 2, budget, || {
             std::hint::black_box(msd.apply(&sigma));
         });
         table.row(&[
-            "one Σ' = F(Σ) application".into(),
+            "Σ' = F(Σ), reference (allocating)".into(),
+            format!("N={n} L={l}"),
+            format!("{:?}", stats.median),
+        ]);
+
+        let mut ws = msd.workspace();
+        let mut out = Mat::zeros(n * l, n * l);
+        let stats = bench("apply_into (fast path)", 2, budget, || {
+            msd.apply_into(&sigma, &mut ws, &mut out);
+            std::hint::black_box(&out);
+        });
+        table.row(&[
+            "Σ' = F(Σ), apply_into (alloc-free)".into(),
             format!("N={n} L={l}"),
             format!("{:?}", stats.median),
         ]);
@@ -81,6 +98,58 @@ fn main() {
         ]);
     }
     table.print();
+
+    // --- perf trajectory: Σ-recursion at NL ∈ {50, 200, 800} ------------
+    // (N, L) chosen so NL hits the targets with the paper-like L = 5;
+    // `apply` is the reference allocating operator, `apply_into` the
+    // production fast path. Written to BENCH_theory.json.
+    let mut records = Vec::new();
+    println!("\n== BENCH_theory.json sweep (Σ-recursion ops/sec) ==\n");
+    let mut sweep_table = Table::new(&["op", "NL", "median", "iters/sec"]);
+    for &(n, l) in &[(10usize, 5usize), (40, 5), (160, 5)] {
+        let nl = n * l;
+        if fast && nl > 50 {
+            continue;
+        }
+        let (s, _) = setup(n, l, 3, 1);
+        let msd = MsdModel::new(s);
+        let sigma = Mat::eye(nl);
+
+        let stats = bench("apply (reference)", 1, budget, || {
+            std::hint::black_box(msd.apply(&sigma));
+        });
+        sweep_table.row(&[
+            "apply (reference)".into(),
+            format!("{nl}"),
+            format!("{:?}", stats.median),
+            format!("{:.2}", stats.iters_per_sec()),
+        ]);
+        records.push(BenchRecord::from_stats(&stats, "apply_reference", &format!("NL={nl}")));
+
+        let mut ws = msd.workspace();
+        let mut out = Mat::zeros(nl, nl);
+        let stats = bench("apply_into", 1, budget, || {
+            msd.apply_into(&sigma, &mut ws, &mut out);
+            std::hint::black_box(&out);
+        });
+        sweep_table.row(&[
+            "apply_into".into(),
+            format!("{nl}"),
+            format!("{:?}", stats.median),
+            format!("{:.2}", stats.iters_per_sec()),
+        ]);
+        records.push(BenchRecord::from_stats(&stats, "apply_into", &format!("NL={nl}")));
+    }
+    sweep_table.print();
+    match write_bench_json(
+        "BENCH_theory.json",
+        "theory engine Σ-recursion (ops/sec); apply_reference = pre-refactor allocating operator, apply_into = alloc-free fast path",
+        &records,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_theory.json ({} records)", records.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_theory.json: {e}"),
+    }
+
     println!(
         "\nnote: the (NL)²x(NL)² matrix 𝓕 of eq. (68) is never materialised — for the \
          paper's Exp. 2 shape it would be 2500²x2500²; the operator form makes the \

@@ -161,7 +161,7 @@ impl Algorithm for CompressiveDiffusion {
 
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+    crate::linalg::kernels::dot(a, b)
 }
 
 #[cfg(test)]

@@ -299,7 +299,7 @@ impl Dcd {
 
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+    crate::linalg::kernels::dot(a, b)
 }
 
 impl Algorithm for Dcd {

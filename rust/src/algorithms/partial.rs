@@ -141,7 +141,7 @@ impl Algorithm for PartialDiffusion {
 
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+    crate::linalg::kernels::dot(a, b)
 }
 
 #[cfg(test)]

@@ -4,6 +4,8 @@
 //! and reports median / IQR. Benches print paper-style tables so
 //! `cargo bench` regenerates every figure/table of the evaluation.
 
+use crate::jsonio::{obj, Json};
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// One measured statistic.
@@ -20,6 +22,71 @@ impl BenchStats {
     pub fn per_unit(&self, units: usize) -> f64 {
         self.median.as_secs_f64() / units.max(1) as f64
     }
+
+    /// Median iterations per second (0 when the median rounds to zero).
+    pub fn iters_per_sec(&self) -> f64 {
+        let s = self.median.as_secs_f64();
+        if s > 0.0 {
+            1.0 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A machine-readable bench record destined for a `BENCH_*.json` file
+/// (the perf trajectory future PRs regress against).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Operation name, e.g. `"apply_into"`.
+    pub name: String,
+    /// Workload configuration, e.g. `"NL=800"`.
+    pub config: String,
+    /// Median wall-clock nanoseconds per call.
+    pub median_ns: f64,
+    /// Median calls per second.
+    pub iters_per_sec: f64,
+}
+
+impl BenchRecord {
+    pub fn from_stats(stats: &BenchStats, name: &str, config: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            config: config.to_string(),
+            median_ns: stats.median.as_secs_f64() * 1e9,
+            iters_per_sec: stats.iters_per_sec(),
+        }
+    }
+}
+
+/// Write bench records as a `BENCH_*.json` document:
+/// `{"title": ..., "records": [{"name", "config", "median_ns",
+/// "iters_per_sec"}, ...]}`.
+pub fn write_bench_json(
+    path: impl AsRef<Path>,
+    title: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    let arr = Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("config", Json::Str(r.config.clone())),
+                    ("median_ns", Json::Num(r.median_ns)),
+                    ("iters_per_sec", Json::Num(r.iters_per_sec)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = obj(vec![("title", Json::Str(title.to_string())), ("records", arr)]);
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.to_string_pretty())
 }
 
 impl std::fmt::Display for BenchStats {
@@ -123,5 +190,25 @@ mod tests {
         let mut t = Table::new(&["algo", "msd"]);
         t.row(&["dcd".into(), "-38.2".into()]);
         t.print();
+    }
+
+    #[test]
+    fn bench_json_roundtrip() {
+        let dir = std::env::temp_dir().join("dcd_bench_json_test");
+        let path = dir.join("BENCH_test.json");
+        let stats = bench("noop", 0, Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        let rec = BenchRecord::from_stats(&stats, "apply", "NL=50");
+        assert!(rec.iters_per_sec >= 0.0);
+        write_bench_json(&path, "theory ops", &[rec]).unwrap();
+        let doc =
+            crate::jsonio::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("title").as_str(), Some("theory ops"));
+        let records = doc.get("records").as_arr().unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].get("name").as_str(), Some("apply"));
+        assert_eq!(records[0].get("config").as_str(), Some("NL=50"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

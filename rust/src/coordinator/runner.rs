@@ -1,7 +1,8 @@
 //! Monte-Carlo orchestration over both execution engines.
 //!
 //! * `run_rust` — message-level per-agent simulation (f64), any
-//!   [`Algorithm`].
+//!   [`Algorithm`], fanned across worker threads (one realization per
+//!   claim; see the determinism note below).
 //! * `run_xla` — the AOT-compiled vectorised engine: generates data and
 //!   selection masks on the rust side, feeds T-step chunks to the PJRT
 //!   executable, threads the carried weights between chunks.
@@ -9,6 +10,15 @@
 //! Both engines consume the same [`DataModel`] and report the same
 //! [`McResult`]; `rust/tests/engines_agree.rs` drives them with identical
 //! inputs and asserts trajectory agreement.
+//!
+//! # Determinism of the parallel runner
+//!
+//! Realization `r` always draws from its own `Pcg64::new(seed, r + 1)`
+//! stream, so the trace of each run is independent of which worker
+//! executes it; workers hand their finished traces back by run index and
+//! the accumulators are folded **sequentially in run order** after the
+//! join. The result is bit-identical for any thread count (asserted by
+//! `parallel_runner_bit_identical_to_serial` below).
 
 use crate::algorithms::Algorithm;
 use crate::datamodel::DataModel;
@@ -16,8 +26,9 @@ use crate::metrics::TraceAccumulator;
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
 use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::round::RoundScheduler;
+use super::round::{RoundScheduler, RunResult};
 
 /// Monte-Carlo configuration.
 #[derive(Debug, Clone)]
@@ -27,6 +38,69 @@ pub struct MonteCarlo {
     pub seed: u64,
     /// Thin the recorded MSD trace (1 = every iteration).
     pub record_every: usize,
+    /// Worker threads for the rust engine: 0 = auto (`DCD_MC_THREADS`
+    /// env var, else the machine's available parallelism).
+    pub threads: usize,
+}
+
+/// Resolve a requested worker count: explicit value wins, else the
+/// `DCD_MC_THREADS` env var, else available parallelism — always capped
+/// by the number of independent jobs.
+pub fn resolve_threads(requested: usize, jobs: usize) -> usize {
+    let auto = || {
+        std::env::var("DCD_MC_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    };
+    let t = if requested > 0 { requested } else { auto() };
+    t.min(jobs.max(1))
+}
+
+/// Execute `jobs` independent tasks across up to `threads` scoped worker
+/// threads, returning the results **in job order** regardless of
+/// scheduling: workers claim job indices from a shared counter and the
+/// finished results are reassembled by index after the join. With
+/// `threads <= 1` the tasks run inline, in order — identical outputs by
+/// construction. Shared by the Monte-Carlo runner and the WSN driver.
+pub fn parallel_ordered<T: Send>(
+    jobs: usize,
+    threads: usize,
+    task: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let threads = threads.min(jobs.max(1));
+    if threads <= 1 {
+        return (0..jobs).map(&task).collect();
+    }
+    let mut slots: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            let task = &task;
+            handles.push(scope.spawn(move || {
+                let mut done = Vec::new();
+                loop {
+                    let r = next.fetch_add(1, Ordering::Relaxed);
+                    if r >= jobs {
+                        break;
+                    }
+                    done.push((r, task(r)));
+                }
+                done
+            }));
+        }
+        for handle in handles {
+            for (r, res) in handle.join().expect("parallel worker panicked") {
+                slots[r] = Some(res);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("missing job result")).collect()
 }
 
 /// Averaged result.
@@ -66,19 +140,48 @@ impl XlaAlgo {
 }
 
 impl MonteCarlo {
-    /// Rust engine: average `runs` independent trajectories of `make_alg()`.
+    /// Rust engine: average `runs` independent trajectories of
+    /// `make_alg()`, fanned across [`MonteCarlo::threads`] workers.
+    /// Bit-identical to [`Self::run_rust_serial`] for any thread count.
     pub fn run_rust(
         &self,
         model: &DataModel,
-        mut make_alg: impl FnMut() -> Box<dyn Algorithm>,
+        make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
+    ) -> McResult {
+        let threads = resolve_threads(self.threads, self.runs);
+        if threads <= 1 {
+            return self.run_rust_serial(model, make_alg);
+        }
+        let results = parallel_ordered(self.runs, threads, |r| {
+            let mut sched = RoundScheduler::new(model);
+            sched.record_every = self.record_every.max(1);
+            let mut alg = make_alg();
+            sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1)
+        });
+        self.merge(results.into_iter())
+    }
+
+    /// Serial reference path (also the `threads == 1` fast path); the
+    /// parallel runner must reproduce it bit-for-bit.
+    pub fn run_rust_serial(
+        &self,
+        model: &DataModel,
+        make_alg: impl Fn() -> Box<dyn Algorithm>,
     ) -> McResult {
         let mut sched = RoundScheduler::new(model);
         sched.record_every = self.record_every.max(1);
+        self.merge((0..self.runs).map(|r| {
+            let mut alg = make_alg();
+            sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1)
+        }))
+    }
+
+    /// Fold per-run results in run order (the order of the iterator) so
+    /// the floating-point accumulation is independent of scheduling.
+    fn merge(&self, results: impl Iterator<Item = RunResult>) -> McResult {
         let mut acc = TraceAccumulator::new();
         let mut scalars = 0.0;
-        for r in 0..self.runs {
-            let mut alg = make_alg();
-            let res = sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1);
+        for res in results {
             acc.add(&res.msd);
             scalars += res.scalars as f64;
         }
@@ -250,19 +353,55 @@ mod tests {
     use crate::algorithms::{Dcd, NetworkConfig};
     use crate::topology::{combination_matrix, Graph, Rule};
 
-    #[test]
-    fn rust_engine_mc_converges() {
+    fn small_case() -> (DataModel, NetworkConfig) {
         let mut rng = Pcg64::new(5, 0);
         let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
         let graph = Graph::ring(5, 1);
         let c = combination_matrix(&graph, Rule::Metropolis);
         let a = crate::linalg::Mat::eye(5);
-        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
-        let mc = MonteCarlo { runs: 4, iters: 500, seed: 11, record_every: 1 };
+        (model, NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 })
+    }
+
+    #[test]
+    fn rust_engine_mc_converges() {
+        let (model, net) = small_case();
+        let mc = MonteCarlo { runs: 4, iters: 500, seed: 11, record_every: 1, threads: 0 };
         let res = mc.run_rust(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
         assert_eq!(res.msd.len(), 500);
         assert!(res.steady_state < res.msd[0]);
         assert!(res.scalars_per_run > 0.0);
         assert_eq!(res.runs, 4);
+    }
+
+    /// The parallel runner must reproduce the serial runner bit-for-bit
+    /// at 1, 2 and 4 worker threads (per-realization PCG64 streams +
+    /// run-order merge).
+    #[test]
+    fn parallel_runner_bit_identical_to_serial() {
+        let (model, net) = small_case();
+        let base = MonteCarlo { runs: 6, iters: 300, seed: 17, record_every: 2, threads: 1 };
+        let serial = base.run_rust_serial(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
+        for threads in [1usize, 2, 4] {
+            let mc = MonteCarlo { threads, ..base.clone() };
+            let par = mc.run_rust(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
+            assert_eq!(par.msd, serial.msd, "threads = {threads}");
+            assert_eq!(
+                par.steady_state.to_bits(),
+                serial.steady_state.to_bits(),
+                "threads = {threads}"
+            );
+            assert_eq!(par.scalars_per_run.to_bits(), serial.scalars_per_run.to_bits());
+            assert_eq!(par.runs, serial.runs);
+        }
+    }
+
+    /// resolve_threads: explicit request wins and is capped by the job
+    /// count; auto mode always yields at least one worker.
+    #[test]
+    fn thread_resolution_rules() {
+        assert_eq!(resolve_threads(3, 100), 3);
+        assert_eq!(resolve_threads(8, 2), 2);
+        assert_eq!(resolve_threads(1, 0), 1);
+        assert!(resolve_threads(0, 64) >= 1);
     }
 }

@@ -402,7 +402,7 @@ fn network_msd(w: &[f64], wo: &[f64]) -> f64 {
 
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+    crate::linalg::kernels::dot(a, b)
 }
 
 /// Order-preserving f64→u64 key for the event queue (times are >= 0).

@@ -62,7 +62,15 @@ pub fn run_exp1(
     };
 
     let record_every = (cfg.iters / 2000).max(1);
-    let mc = MonteCarlo { runs: cfg.runs, iters: cfg.iters, seed: cfg.seed, record_every };
+    // threads: 0 = auto — realizations fan out across cores with
+    // bit-identical results (see coordinator::runner).
+    let mc = MonteCarlo {
+        runs: cfg.runs,
+        iters: cfg.iters,
+        seed: cfg.seed,
+        record_every,
+        threads: 0,
+    };
     let mut series = Vec::new();
     let mut steady = Vec::new();
 

@@ -62,6 +62,7 @@ pub fn run_exp2(
         iters: cfg.iters,
         seed: cfg.seed,
         record_every: (cfg.iters / 500).max(1),
+        threads: 0,
     };
 
     let mut xla_rt = match engine {

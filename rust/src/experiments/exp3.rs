@@ -12,7 +12,8 @@
 
 use crate::algorithms::NetworkConfig;
 use crate::config::Exp3Config;
-use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnSimulation};
+use crate::coordinator::runner::{parallel_ordered, resolve_threads};
+use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnResult, WsnSimulation};
 use crate::datamodel::DataModel;
 use crate::metrics::{to_db, write_csv, write_json, Series, TraceAccumulator};
 use crate::rng::Pcg64;
@@ -108,14 +109,18 @@ pub fn run_exp3(cfg: &Exp3Config, out_dir: Option<&str>, quiet: bool) -> Result<
             sample_dt: cfg.sample_dt,
         };
         let sim = WsnSimulation::new(wsn_cfg, model.clone());
+        // Fan the independent WSN realizations across worker threads;
+        // every run draws from its own seed and the results are merged
+        // in run order, so the averages are bit-identical for any
+        // thread count (same scheme as coordinator::runner::run_rust).
+        let runs = run_realizations(&sim, cfg.seed, cfg.runs);
         let mut msd_acc = TraceAccumulator::new();
         let mut sleep_acc = TraceAccumulator::new();
         let mut harv_acc = TraceAccumulator::new();
         let mut activations = 0.0;
         let mut time_grid = Vec::new();
-        for run in 0..cfg.runs {
-            let res = sim.run(cfg.seed.wrapping_add(run as u64 * 7919 + 1));
-            time_grid = res.time.clone();
+        for res in &runs {
+            time_grid.clone_from(&res.time);
             msd_acc.add(&res.msd);
             sleep_acc.add(&res.mean_sleep);
             harv_acc.add(&res.mean_harvest);
@@ -162,6 +167,16 @@ pub fn run_exp3(cfg: &Exp3Config, out_dir: Option<&str>, quiet: bool) -> Result<
     }
 
     Ok(Exp3Output { msd_series, sleep_series, harvest_series, summary })
+}
+
+/// Run `runs` independent WSN realizations of `sim` in parallel,
+/// returning them **in run order**. Run `r` uses seed
+/// `base_seed + r·7919 + 1` regardless of which worker executes it.
+fn run_realizations(sim: &WsnSimulation, base_seed: u64, runs: usize) -> Vec<WsnResult> {
+    let threads = resolve_threads(0, runs);
+    parallel_ordered(runs, threads, |r| {
+        sim.run(base_seed.wrapping_add(r as u64 * 7919 + 1))
+    })
 }
 
 #[cfg(test)]

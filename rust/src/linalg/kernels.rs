@@ -1,0 +1,78 @@
+//! Chunked scalar kernels shared by the theory engine and the
+//! message-level simulator.
+//!
+//! Both hot paths bottom out in dot products and scaled accumulations
+//! over contiguous `f64` slices. The kernels here process four lanes per
+//! step with independent partial accumulators, which breaks the
+//! loop-carried dependence of a naive fold and lets the compiler keep
+//! four FMAs in flight (the slice iterators also guarantee the bounds
+//! checks are hoisted). Summation order differs from a sequential fold,
+//! so results may differ from a naive loop in the last ulps — every
+//! consumer is tolerance-based.
+
+/// Dot product with four independent partial sums.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        s0 += xa[0] * xb[0];
+        s1 += xa[1] * xb[1];
+        s2 += xa[2] * xb[2];
+        s3 += xa[3] * xb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `y += alpha * x`, four lanes per step, no allocation.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    let mut cx = x.chunks_exact(4);
+    let mut cy = y.chunks_exact_mut(4);
+    for (xs, ys) in (&mut cx).zip(&mut cy) {
+        ys[0] += alpha * xs[0];
+        ys[1] += alpha * xs[1];
+        ys[2] += alpha * xs[2];
+        ys[3] += alpha * xs[3];
+    }
+    for (x, y) in cx.remainder().iter().zip(cy.into_remainder()) {
+        *y += alpha * x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        for n in [0usize, 1, 3, 4, 5, 8, 17] {
+            let a: Vec<f64> = (0..n).map(|i| 0.3 * i as f64 - 1.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| 1.7 - 0.2 * i as f64).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        for n in [0usize, 1, 3, 4, 7, 16, 21] {
+            let x: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+            let mut y: Vec<f64> = (0..n).map(|i| 1.0 - i as f64).collect();
+            let mut want = y.clone();
+            for (w, xv) in want.iter_mut().zip(&x) {
+                *w += -0.7 * xv;
+            }
+            axpy(-0.7, &x, &mut y);
+            assert_eq!(y, want, "n={n}");
+        }
+    }
+}

@@ -1,5 +1,6 @@
 //! Row-major dense f64 matrix.
 
+use super::kernels;
 use std::fmt;
 use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Neg, Sub, SubAssign};
 
@@ -85,12 +86,20 @@ impl Mat {
 
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a preallocated output (allocation-free hot path).
+    /// `out` must not alias `self`.
+    pub fn transpose_into(&self, out: &mut Mat) {
+        assert_eq!((out.rows, out.cols), (self.cols, self.rows));
         for i in 0..self.rows {
-            for j in 0..self.cols {
-                out[(j, i)] = self[(i, j)];
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            for (j, &v) in row.iter().enumerate() {
+                out.data[j * self.rows + i] = v;
             }
         }
-        out
     }
 
     pub fn trace(&self) -> f64 {
@@ -111,30 +120,50 @@ impl Mat {
     /// `self += s * other` without allocating.
     pub fn axpy(&mut self, s: f64, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += s * b;
-        }
+        kernels::axpy(s, &other.data, &mut self.data);
     }
 
     /// Matrix product into a preallocated output (the hot path of the
     /// theory engine). `out` must not alias either operand.
+    ///
+    /// i-k-j loop order (streams rhs rows, accumulates into out rows),
+    /// unrolled four k-rows deep so each pass over the output row feeds
+    /// four multiply-adds, with a skip for all-zero coefficient blocks
+    /// (𝓑 is sparse: ~N·deg·L of (NL)² entries are nonzero).
     pub fn mul_into(&self, rhs: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, rhs.rows, "dim mismatch {}x{} * {}x{}",
                    self.rows, self.cols, rhs.rows, rhs.cols);
         assert_eq!((out.rows, out.cols), (self.rows, rhs.cols));
+        let n = rhs.cols;
         out.data.iter_mut().for_each(|x| *x = 0.0);
-        // i-k-j loop order: streams rhs rows, accumulates into out rows.
         for i in 0..self.rows {
-            let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
-            for k in 0..self.cols {
-                let a = self.data[i * self.cols + k];
-                if a == 0.0 {
-                    continue;
+            let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let mut k = 0;
+            while k + 4 <= self.cols {
+                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let b0 = &rhs.data[k * n..(k + 1) * n];
+                    let b1 = &rhs.data[(k + 1) * n..(k + 2) * n];
+                    let b2 = &rhs.data[(k + 2) * n..(k + 3) * n];
+                    let b3 = &rhs.data[(k + 3) * n..(k + 4) * n];
+                    for ((((o, &x0), &x1), &x2), &x3) in
+                        orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                    {
+                        *o += a0 * x0 + a1 * x1 + a2 * x2 + a3 * x3;
+                    }
                 }
-                let brow = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
+                k += 4;
+            }
+            while k < self.cols {
+                let a = arow[k];
+                if a != 0.0 {
+                    let brow = &rhs.data[k * n..(k + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                        *o += a * b;
+                    }
                 }
+                k += 1;
             }
         }
     }
@@ -144,13 +173,8 @@ impl Mat {
         assert_eq!(x.len(), self.rows);
         assert_eq!(y.len(), self.cols);
         let mut total = 0.0;
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let mut dot = 0.0;
-            for (a, b) in row.iter().zip(y.iter()) {
-                dot += a * b;
-            }
-            total += x[i] * dot;
+        for (i, &xi) in x.iter().enumerate() {
+            total += xi * kernels::dot(self.row(i), y);
         }
         total
     }
@@ -158,11 +182,7 @@ impl Mat {
     /// Matrix–vector product.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols);
-        let mut out = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            out[i] = self.row(i).iter().zip(x.iter()).map(|(a, b)| a * b).sum();
-        }
-        out
+        (0..self.rows).map(|i| kernels::dot(self.row(i), x)).collect()
     }
 
     /// Max |entry| — used for convergence checks.

@@ -8,6 +8,7 @@
 //! still cache-blocked and allocation-free in the hot loop.
 
 mod eig;
+pub mod kernels;
 mod mat;
 mod ops;
 

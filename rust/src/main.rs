@@ -219,6 +219,13 @@ fn cmd_theory(args: &ParsedArgs) -> Result<()> {
 fn cmd_validate(args: &ParsedArgs) -> Result<()> {
     use dcd_lms::algorithms::{Algorithm, CommMeter, Dcd, DcdMasks, NetworkConfig, StepData};
 
+    if !dcd_lms::runtime::xla_available() {
+        println!(
+            "validate skipped: xla runtime unavailable in this build \
+             (offline `xla` stub; see rust/vendor/README.md)"
+        );
+        return Ok(());
+    }
     let config = args.get("config").unwrap_or("smoke");
     let mut rt = Runtime::open_default()?;
     let spec = rt

@@ -34,9 +34,19 @@ pub struct ChunkOutput {
     pub msd: Vec<f32>,
 }
 
-/// PJRT CPU runtime with an executable cache.
+/// `true` when real PJRT bindings are linked in; `false` under the
+/// offline `xla` stub (vendor/README.md). Callers that need the
+/// compiled engine (CLI `validate`, the xla-backed tests) check this and
+/// skip gracefully instead of failing at first execution.
+pub fn xla_available() -> bool {
+    xla::runtime_available()
+}
+
+/// PJRT CPU runtime with an executable cache. The PJRT client is created
+/// lazily on first compilation, so manifest-only operations (`info`,
+/// shape lookups) work even where the native runtime is absent.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
     dir: PathBuf,
     manifest: Manifest,
     cache: HashMap<String, LoadedModule>,
@@ -48,8 +58,7 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
-        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+        Ok(Self { client: None, dir, manifest, cache: HashMap::new() })
     }
 
     /// Default artifact directory: `$DCD_ARTIFACTS` or `artifacts/` under the
@@ -71,12 +80,16 @@ impl Runtime {
                 .module(name)
                 .ok_or_else(|| anyhow!("module {name:?} not in manifest"))?
                 .clone();
+            if self.client.is_none() {
+                self.client = Some(xla::PjRtClient::cpu().map_err(wrap_xla)?);
+            }
             let path = self.dir.join(&spec.path);
             let proto = xla::HloModuleProto::from_text_file(&path)
                 .map_err(wrap_xla)
                 .with_context(|| format!("parsing {}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+            let client = self.client.as_ref().expect("client just created");
+            let exe = client.compile(&comp).map_err(wrap_xla)?;
             self.cache.insert(name.to_string(), LoadedModule { spec, exe });
         }
         Ok(&self.cache[name])

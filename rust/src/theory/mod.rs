@@ -30,7 +30,7 @@ mod msd;
 
 pub use mean::MeanModel;
 pub use moments::MaskMoments;
-pub use msd::{MsdModel, MsdTrajectory};
+pub use msd::{MsdModel, MsdTrajectory, MsdWorkspace};
 
 use crate::linalg::Mat;
 

@@ -28,12 +28,49 @@ struct QuadTerm {
     g_diag: f64,
 }
 
+/// A quadratic term of the symmetric fast path ([`MsdModel::apply_into`]):
+/// coefficients are μ_k μ_l-prescaled, and only the lexicographic half of
+/// each mirror pair {(a,b,k,l), (b,a,l,k)} is kept — a `mirror` term
+/// writes its contribution to both the (a,b) and the transposed (b,a)
+/// position (Y(Φ) is symmetric for symmetric Φ), halving the Σ reads and
+/// coefficient work.
+#[derive(Debug, Clone, Copy)]
+struct SymQuadTerm {
+    a: usize,
+    b: usize,
+    k: usize,
+    l: usize,
+    g_off: f64,
+    g_diag: f64,
+    mirror: bool,
+}
+
+/// Reusable scratch for the allocation-free operator application: holds
+/// the 𝓑ᵀΣ product buffer. Create once per (NL) size (via
+/// [`MsdModel::workspace`]) and reuse across iterations — no heap
+/// traffic per [`MsdModel::apply_into`] call.
+pub struct MsdWorkspace {
+    /// 𝓑ᵀ Σ product buffer.
+    bt_sigma: Mat,
+}
+
+impl MsdWorkspace {
+    pub fn new(nl: usize) -> Self {
+        Self { bt_sigma: Mat::zeros(nl, nl) }
+    }
+}
+
 /// The mean-square evolution model.
 pub struct MsdModel {
     setup: TheorySetup,
     /// 𝓑 (mean matrix, used for the linear part of the operator).
     b: Mat,
+    /// Cached 𝓑ᵀ (the fast path multiplies by it every iteration).
+    bt: Mat,
+    /// Full quadratic-term list (reference operator [`MsdModel::apply`]).
     quad: Vec<QuadTerm>,
+    /// Halved, μ-prescaled term list (fast path).
+    quad_sym: Vec<SymQuadTerm>,
     /// Noise coefficients: noise(Σ) = Σ_{k,l} w_noise[k*n+l] · tr(Σ_{kl}).
     w_noise: Vec<f64>,
 }
@@ -51,17 +88,44 @@ impl MsdModel {
     pub fn new(setup: TheorySetup) -> Self {
         setup.validate().expect("invalid theory setup");
         let b = build_b(&setup);
+        let mut bt = Mat::zeros(b.cols(), b.rows());
+        b.transpose_into(&mut bt);
         let quad = build_quad_terms(&setup);
+        // Keep the lexicographic representative of each mirror pair
+        // {(a,b,k,l), (b,a,l,k)}; self-mirrored terms (a = b, k = l)
+        // contribute a single symmetric write.
+        let quad_sym = quad
+            .iter()
+            .filter(|t| t.a < t.b || (t.a == t.b && t.k <= t.l))
+            .map(|t| SymQuadTerm {
+                a: t.a,
+                b: t.b,
+                k: t.k,
+                l: t.l,
+                g_off: t.g_off * setup.mu[t.k] * setup.mu[t.l],
+                g_diag: t.g_diag * setup.mu[t.k] * setup.mu[t.l],
+                mirror: !(t.a == t.b && t.k == t.l),
+            })
+            .collect();
         let w_noise = build_noise_coeffs(&setup);
-        Self { setup, b, quad, w_noise }
+        Self { setup, b, bt, quad, quad_sym, w_noise }
     }
 
     pub fn setup(&self) -> &TheorySetup {
         &self.setup
     }
 
-    /// Apply the weighting-update operator: Σ' = E{𝓑ᵢᵀ Σ 𝓑ᵢ}
-    ///                                        = 𝓑ᵀΣ + Σ𝓑 − Σ + Y(𝓜Σ𝓜).
+    /// A scratch workspace sized for this model (see [`MsdWorkspace`]).
+    pub fn workspace(&self) -> MsdWorkspace {
+        MsdWorkspace::new(self.b.rows())
+    }
+
+    /// Reference implementation of the weighting-update operator:
+    ///   Σ' = E{𝓑ᵢᵀ Σ 𝓑ᵢ} = 𝓑ᵀΣ + Σ𝓑 − Σ + Y(𝓜Σ𝓜).
+    ///
+    /// Allocates freely and accepts arbitrary Σ; kept as the oracle the
+    /// equivalence tests and `theory_ops` bench compare against. The
+    /// iteration loops use the allocation-free [`Self::apply_into`].
     pub fn apply(&self, sigma: &Mat) -> Mat {
         let nl = self.b.rows();
         assert_eq!((sigma.rows(), sigma.cols()), (nl, nl));
@@ -69,7 +133,7 @@ impl MsdModel {
         let sigma_b = sigma * &self.b;
         let mut out = &(&bt_sigma + &sigma_b) - sigma;
         // Quadratic part Y(Φ), Φ_{kl} = μ_k μ_l Σ_{kl}.
-        let (n, l) = (self.setup.n_nodes, self.setup.dim);
+        let l = self.setup.dim;
         for t in &self.quad {
             let mu2 = self.setup.mu[t.k] * self.setup.mu[t.l];
             let go = t.g_off * mu2;
@@ -84,8 +148,59 @@ impl MsdModel {
                 }
             }
         }
-        let _ = n;
         out
+    }
+
+    /// Allocation-free fast path of the weighting-update operator for
+    /// **symmetric** Σ (every production iterate is: Σ₀ is diagonal and
+    /// 𝓕 maps symmetric matrices to symmetric matrices; debug-checked).
+    ///
+    /// Σ = Σᵀ ⇒ Σ𝓑 = (𝓑ᵀΣ)ᵀ, so a single `mul_into` against the cached
+    /// 𝓑ᵀ feeds a fused, tiled pass computing 𝓑ᵀΣ + (𝓑ᵀΣ)ᵀ − Σ; the
+    /// quadratic part Y(𝓜Σ𝓜) walks the halved mirror-paired term list.
+    /// `out` must not alias `sigma`.
+    pub fn apply_into(&self, sigma: &Mat, ws: &mut MsdWorkspace, out: &mut Mat) {
+        let nl = self.b.rows();
+        assert_eq!((sigma.rows(), sigma.cols()), (nl, nl));
+        assert_eq!((out.rows(), out.cols()), (nl, nl));
+        debug_assert!(max_asymmetry(sigma) <= 1e-9 * sigma.max_abs().max(1e-300),
+            "apply_into requires (numerically) symmetric Σ");
+        self.bt.mul_into(sigma, &mut ws.bt_sigma);
+        let t = ws.bt_sigma.data();
+        let s = sigma.data();
+        let o = out.data_mut();
+        // Fused linear part, tiled so the transposed read of 𝓑ᵀΣ stays
+        // cache-resident.
+        const TILE: usize = 64;
+        for ib in (0..nl).step_by(TILE) {
+            let imax = (ib + TILE).min(nl);
+            for jb in (0..nl).step_by(TILE) {
+                let jmax = (jb + TILE).min(nl);
+                for i in ib..imax {
+                    for j in jb..jmax {
+                        o[i * nl + j] = t[i * nl + j] + t[j * nl + i] - s[i * nl + j];
+                    }
+                }
+            }
+        }
+        // Quadratic part: μ-prescaled halved term list; mirror terms also
+        // write the transposed position (exact for symmetric Σ).
+        let l = self.setup.dim;
+        for term in &self.quad_sym {
+            for i in 0..l {
+                let row_in = (term.k * l + i) * nl + term.l * l;
+                let row_out = (term.a * l + i) * nl + term.b * l;
+                for j in 0..l {
+                    let v = s[row_in + j];
+                    let g = if i == j { term.g_diag } else { term.g_off };
+                    let add = g * v;
+                    o[row_out + j] += add;
+                    if term.mirror {
+                        o[(term.b * l + j) * nl + term.a * l + i] += add;
+                    }
+                }
+            }
+        }
     }
 
     /// Driving-noise term trace(E{𝓖ᵢᵀ Σ 𝓖ᵢ} 𝓢) for the weighting Σ.
@@ -106,6 +221,12 @@ impl MsdModel {
             }
         }
         total
+    }
+
+    /// Theoretical network-MSD learning curve (Fig. 3 left): w_k,0 = 0
+    /// ⇒ w̃_{k,0} = w°. Alias of [`Self::trajectory`].
+    pub fn learning_curve(&self, wo: &[f64], iters: usize) -> MsdTrajectory {
+        self.trajectory_weighted(wo, iters, None)
     }
 
     /// Theoretical network-MSD trajectory: w_k,0 = 0 ⇒ w̃_{k,0} = w°.
@@ -142,11 +263,17 @@ impl MsdModel {
                 m
             }
         };
+        // Ping-pong buffers + workspace: the loop below performs zero
+        // heap allocations per iteration (asserted by
+        // rust/tests/alloc_free.rs).
+        let mut sigma_next = Mat::zeros(nl, nl);
+        let mut ws = self.workspace();
         let mut noise_acc = 0.0;
         let mut msd = Vec::with_capacity(iters);
         for _ in 0..iters {
             noise_acc += self.noise(&sigma);
-            sigma = self.apply(&sigma);
+            self.apply_into(&sigma, &mut ws, &mut sigma_next);
+            std::mem::swap(&mut sigma, &mut sigma_next);
             let v = (sigma.quad_form(&w0, &w0) + noise_acc) / n as f64;
             msd.push(v);
         }
@@ -157,28 +284,32 @@ impl MsdModel {
     /// Mean-square stability radius: the spectral radius of the linear
     /// operator 𝓕 : Σ ↦ E{𝓑ᵢᵀΣ𝓑ᵢ} (eq. (68)) estimated by power
     /// iteration *on the operator* — the (NL)²×(NL)² matrix itself is
-    /// never formed. The algorithm is mean-square stable iff this is < 1.
+    /// never formed, and the loop is allocation-free (ping-pong Σ
+    /// buffers). The algorithm is mean-square stable iff this is < 1.
     pub fn ms_stability_radius(&self, iters: usize) -> f64 {
         let nl = self.b.rows();
         let mut sigma = Mat::eye(nl);
+        let mut next = Mat::zeros(nl, nl);
+        let mut ws = self.workspace();
         let mut rho = 0.0;
         for _ in 0..iters {
-            let next = self.apply(&sigma);
             // Keep the iterate symmetric PSD-ish; F preserves the cone,
             // so the Frobenius growth ratio converges to rho(F).
+            self.apply_into(&sigma, &mut ws, &mut next);
             let norm = next.fro_norm();
             if norm == 0.0 {
                 return 0.0;
             }
             rho = norm / sigma.fro_norm().max(1e-300);
-            sigma = next;
+            std::mem::swap(&mut sigma, &mut next);
             sigma.scale_in_place(1.0 / norm);
         }
         rho
     }
 
     /// Iterate until the MSD increment falls below `tol` (relative),
-    /// returning (steady-state MSD, iterations used).
+    /// returning (steady-state MSD, iterations used). Allocation-free
+    /// per iteration (ping-pong Σ buffers + workspace).
     pub fn steady_state(&self, wo: &[f64], tol: f64, max_iters: usize) -> (f64, usize) {
         let (n, l) = (self.setup.n_nodes, self.setup.dim);
         let nl = n * l;
@@ -187,11 +318,14 @@ impl MsdModel {
             w0.extend_from_slice(wo);
         }
         let mut sigma = Mat::eye(nl);
+        let mut sigma_next = Mat::zeros(nl, nl);
+        let mut ws = self.workspace();
         let mut noise_acc = 0.0;
         let mut prev = f64::INFINITY;
         for i in 1..=max_iters {
             noise_acc += self.noise(&sigma);
-            sigma = self.apply(&sigma);
+            self.apply_into(&sigma, &mut ws, &mut sigma_next);
+            std::mem::swap(&mut sigma, &mut sigma_next);
             let v = (sigma.quad_form(&w0, &w0) + noise_acc) / n as f64;
             if (v - prev).abs() <= tol * v.abs().max(1e-30) {
                 return (v, i);
@@ -200,6 +334,18 @@ impl MsdModel {
         }
         (prev, max_iters)
     }
+}
+
+/// Largest |Σ_{ij} − Σ_{ji}| — symmetry diagnostic for the fast-path
+/// debug assertion.
+fn max_asymmetry(m: &Mat) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..m.rows() {
+        for j in (i + 1)..m.cols() {
+            worst = worst.max((m[(i, j)] - m[(j, i)]).abs());
+        }
+    }
+    worst
 }
 
 /// Precompute the quadratic coefficients g_off/g_diag for every
@@ -523,8 +669,6 @@ mod tests {
     /// (mean-square stability is the stricter requirement).
     #[test]
     fn ms_stability_radius_tracks_mu() {
-        let wo = [0.3, -0.5, 0.2];
-        let _ = wo;
         let stable = MsdModel::new(setup(4, 3, 2, 1, 0.05));
         let rho = stable.ms_stability_radius(400);
         assert!(rho < 1.0, "rho {rho}");
@@ -535,6 +679,59 @@ mod tests {
         // before the mean-square edge; we only assert the two regimes.
         let mid = MsdModel::new(setup(4, 3, 2, 1, 0.5)).ms_stability_radius(400);
         assert!(mid < 1.0, "mid {mid}");
+    }
+
+    /// The allocation-free fast path must reproduce the reference
+    /// operator on random symmetric Σ across the whole (N, L) sweep the
+    /// experiments exercise.
+    #[test]
+    fn apply_into_matches_reference_apply() {
+        let mut rng = Pcg64::new(71, 0);
+        for &n in &[2usize, 5, 10] {
+            for &l in &[1usize, 2, 5] {
+                let m = ((3 * l) / 5).max(1);
+                let mg = (l / 2).max(1);
+                let s = setup(n, l, m, mg, 0.2);
+                let model = MsdModel::new(s);
+                let nl = n * l;
+                let mut ws = model.workspace();
+                let mut fast = Mat::zeros(nl, nl);
+                // Reuse the same workspace across draws (it must not
+                // carry state between applications).
+                for _ in 0..3 {
+                    let sigma = random_sigma(nl, &mut rng);
+                    let reference = model.apply(&sigma);
+                    model.apply_into(&sigma, &mut ws, &mut fast);
+                    let tol = 1e-12 * reference.max_abs().max(1.0);
+                    let diff = (&fast - &reference).max_abs();
+                    assert!(diff < tol, "N={n} L={l}: diff {diff} (tol {tol})");
+                }
+            }
+        }
+    }
+
+    /// Iterating the fast path (as the trajectory/steady-state loops do)
+    /// must track the iterated reference operator, and the fast-path
+    /// iterates must stay exactly symmetric (that is what licenses the
+    /// Σ𝓑 = (𝓑ᵀΣ)ᵀ fusion on the next application).
+    #[test]
+    fn iterated_fast_path_matches_iterated_reference() {
+        let s = setup(5, 4, 2, 1, 0.1);
+        let model = MsdModel::new(s);
+        let nl = 20;
+        let mut reference = Mat::eye(nl);
+        let mut sigma = Mat::eye(nl);
+        let mut next = Mat::zeros(nl, nl);
+        let mut ws = model.workspace();
+        for it in 0..8 {
+            reference = model.apply(&reference);
+            model.apply_into(&sigma, &mut ws, &mut next);
+            std::mem::swap(&mut sigma, &mut next);
+            assert_eq!(max_asymmetry(&sigma), 0.0, "iteration {it} broke symmetry");
+            let tol = 1e-10 * reference.max_abs().max(1.0);
+            let diff = (&sigma - &reference).max_abs();
+            assert!(diff < tol, "iteration {it}: diff {diff} (tol {tol})");
+        }
     }
 
     /// More compression (smaller M, M_grad) must not *decrease* the

@@ -1,0 +1,89 @@
+//! Hot-path allocation discipline (EXPERIMENTS.md §Perf): the theory
+//! engine's iteration loops must perform **zero heap allocations per
+//! iteration**. Verified with a counting global allocator: a longer run
+//! must allocate exactly as much as a shorter one (all allocations are
+//! per-call setup — ping-pong Σ buffers, workspace, output vector).
+//!
+//! This file deliberately contains a single test: the allocator counter
+//! is process-global and must not see traffic from concurrently running
+//! tests.
+
+use dcd_lms::theory::{MsdModel, TheorySetup};
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAllocator;
+
+// SAFETY: delegates directly to `System`; only adds a relaxed counter.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn allocs_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let result = f();
+    (ALLOCS.load(Ordering::Relaxed) - before, result)
+}
+
+#[test]
+fn theory_iteration_loops_do_not_allocate() {
+    // Sanity: the counter must actually observe heap traffic.
+    let (sanity, _) = allocs_during(|| std::hint::black_box(Vec::<u8>::with_capacity(64)));
+    assert!(sanity > 0, "counting allocator is not active");
+
+    let n = 6;
+    let l = 4;
+    let graph = Graph::ring(n, 1);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let setup = TheorySetup {
+        n_nodes: n,
+        dim: l,
+        m: 2,
+        m_grad: 1,
+        c,
+        mu: vec![5e-3; n],
+        sigma_u2: (0..n).map(|k| 0.8 + 0.1 * k as f64).collect(),
+        sigma_v2: vec![1e-3; n],
+    };
+    let model = MsdModel::new(setup);
+    let wo = vec![0.4, -0.2, 0.7, 0.1];
+
+    // Warm-up (page-in code paths, lazy runtime bits).
+    let _ = model.trajectory(&wo, 8);
+    let _ = model.steady_state(&wo, -1.0, 8);
+    let _ = model.ms_stability_radius(8);
+
+    // Per-call setup allocations (Σ ping-pong buffers, workspace, the
+    // preallocated output vector) are identical for any iteration count,
+    // so equal totals <=> zero allocations per iteration.
+    let (short, _) = allocs_during(|| std::hint::black_box(model.trajectory(&wo, 100)));
+    let (long, _) = allocs_during(|| std::hint::black_box(model.trajectory(&wo, 400)));
+    assert_eq!(short, long, "trajectory allocates per iteration");
+
+    // tol < 0 forces the loop to use the full iteration budget.
+    let (short, _) = allocs_during(|| std::hint::black_box(model.steady_state(&wo, -1.0, 100)));
+    let (long, _) = allocs_during(|| std::hint::black_box(model.steady_state(&wo, -1.0, 400)));
+    assert_eq!(short, long, "steady_state allocates per iteration");
+
+    let (short, _) = allocs_during(|| std::hint::black_box(model.ms_stability_radius(100)));
+    let (long, _) = allocs_during(|| std::hint::black_box(model.ms_stability_radius(400)));
+    assert_eq!(short, long, "ms_stability_radius allocates per iteration");
+}

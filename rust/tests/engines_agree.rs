@@ -58,6 +58,10 @@ fn assert_weights_close(rust_w: &[f64], xla_w: &[f32], tag: &str) {
 
 #[test]
 fn dcd_engines_agree() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("artifacts");
     let s = shared_inputs(&rt, "dcd");
     let (n, l, t) = (s.n, s.l, s.t);
@@ -109,6 +113,10 @@ fn dcd_engines_agree() {
 
 #[test]
 fn partial_engines_agree() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("artifacts");
     let s = shared_inputs(&rt, "partial");
     let (n, l, t) = (s.n, s.l, s.t);
@@ -143,6 +151,10 @@ fn partial_engines_agree() {
 
 #[test]
 fn rcd_engines_agree() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("artifacts");
     let s = shared_inputs(&rt, "rcd");
     let (n, l, t) = (s.n, s.l, s.t);
@@ -180,6 +192,10 @@ fn rcd_engines_agree() {
 
 #[test]
 fn atc_engines_agree() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("artifacts");
     let s = shared_inputs(&rt, "atc");
     let (n, l, t) = (s.n, s.l, s.t);

@@ -23,13 +23,17 @@ fn ring_net(n: usize, l: usize, mu: f64) -> NetworkConfig {
 /// xla engine end-to-end through the MC runner: MSD must decay.
 #[test]
 fn xla_monte_carlo_converges() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("run `make artifacts` (smoke)");
     let spec = rt.manifest().find("dcd", "smoke").unwrap().clone();
     let (n, l) = (spec.n_nodes, spec.dim);
     let mut rng = Pcg64::new(8, 0);
     let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
     let net = ring_net(n, l, 0.1);
-    let mc = MonteCarlo { runs: 3, iters: 64, seed: 2, record_every: 1 };
+    let mc = MonteCarlo { runs: 3, iters: 64, seed: 2, record_every: 1, threads: 0 };
     let res = mc
         .run_xla(
             &mut rt,
@@ -54,6 +58,10 @@ fn xla_monte_carlo_converges() {
 /// cache exercised); every trajectory decays.
 #[test]
 fn xla_all_algorithms_converge() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("artifacts");
     let spec = rt.manifest().find("dcd", "smoke").unwrap().clone();
     let (n, l) = (spec.n_nodes, spec.dim);
@@ -61,7 +69,7 @@ fn xla_all_algorithms_converge() {
     let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
     let net = ring_net(n, l, 0.1);
     dcd_lms::coordinator::runner::set_rcd_support(&net.graph);
-    let mc = MonteCarlo { runs: 2, iters: 64, seed: 3, record_every: 1 };
+    let mc = MonteCarlo { runs: 2, iters: 64, seed: 3, record_every: 1, threads: 0 };
     for algo in [
         XlaAlgo::Dcd { m: 2, m_grad: 1 },
         XlaAlgo::Atc,
@@ -229,6 +237,10 @@ fn wsn_energy_ordering() {
 /// driver equal one manual two-chunk execution.
 #[test]
 fn runtime_chunk_threading() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("artifacts");
     let spec = rt.manifest().find("atc", "smoke").unwrap().clone();
     let (n, l, t) = (spec.n_nodes, spec.dim, spec.chunk_len);
@@ -305,6 +317,10 @@ fn theory_emse_weighting() {
 /// Runtime error paths: wrong input count/shape are rejected cleanly.
 #[test]
 fn runtime_rejects_bad_inputs() {
+    if !dcd_lms::runtime::xla_available() {
+        eprintln!("skipping: xla runtime unavailable (offline `xla` stub)");
+        return;
+    }
     let mut rt = Runtime::open_default().expect("artifacts");
     let err = rt.execute_chunk("dcd_smoke", &[]).unwrap_err();
     assert!(format!("{err}").contains("inputs"), "{err}");

@@ -39,7 +39,7 @@ fn check(m: usize, mg: usize, label: &str) {
     let (th_setup, net, model) = setup(m, mg, mu);
     let theory = MsdModel::new(th_setup.clone());
     let tr = theory.trajectory(&model.wo, iters);
-    let mc = MonteCarlo { runs: 20, iters, seed: 3, record_every: 1 };
+    let mc = MonteCarlo { runs: 20, iters, seed: 3, record_every: 1, threads: 0 };
     let sim = mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, mg)));
 
     // Steady state within 1.5 dB (20 MC runs; the paper used 100).

@@ -1,0 +1,159 @@
+//! Offline shim for the `anyhow` crate (see `vendor/README.md`).
+//!
+//! Implements the subset this workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`]/[`bail!`] macros, [`Context`], and `Error::msg`.
+//! An error is a chain of context strings: `{e}` renders the outermost
+//! entry, `{e:#}` the full chain joined by `": "` (matching anyhow's
+//! alternate formatting), and `{e:?}` renders the chain with a
+//! `Caused by:` trailer like anyhow's Debug output.
+
+use std::fmt;
+
+/// Error value: a context chain, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context entry (the new outermost description).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, [])) => write!(f, "{head}"),
+            Some((head, rest)) => {
+                write!(f, "{head}\n\nCaused by:")?;
+                for (i, c) in rest.iter().enumerate() {
+                    write!(f, "\n    {i}: {c}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes the blanket `From` below coherent (same trick as
+// the real anyhow crate).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to a fallible result (anyhow's `Context` trait).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "loading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner() -> Result<()> {
+            bail!("bad value {}", 7)
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "bad value 7");
+        fn propagates() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(propagates().is_err());
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let e = Error::msg(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+    }
+}
