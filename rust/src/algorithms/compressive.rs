@@ -141,6 +141,18 @@ impl Algorithm for CompressiveDiffusion {
         &self.w
     }
 
+    fn weights_mut(&mut self) -> &mut [f64] {
+        &mut self.w
+    }
+
+    fn network(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+
+    fn network_mut(&mut self) -> &mut NetworkConfig {
+        &mut self.cfg
+    }
+
     fn reset(&mut self) {
         for buf in [&mut self.w, &mut self.psi, &mut self.gamma] {
             buf.iter_mut().for_each(|x| *x = 0.0);

@@ -119,6 +119,18 @@ impl Algorithm for DiffusionLms {
         &self.w
     }
 
+    fn weights_mut(&mut self) -> &mut [f64] {
+        &mut self.w
+    }
+
+    fn network(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+
+    fn network_mut(&mut self) -> &mut NetworkConfig {
+        &mut self.cfg
+    }
+
     fn reset(&mut self) {
         self.w.iter_mut().for_each(|x| *x = 0.0);
         self.psi.iter_mut().for_each(|x| *x = 0.0);

@@ -88,25 +88,50 @@ pub struct CommMeter {
     pub messages: u64,
     /// Per-node transmitted scalars.
     pub per_node: Vec<u64>,
+    /// Nodes currently gated off the air (see
+    /// [`crate::coordinator::impairments`]): their `send`s are suppressed
+    /// — no transmission happened, so nothing is billed. Empty = nobody
+    /// muted (the default, and the ideal-links fast path).
+    muted: Vec<bool>,
 }
 
 impl CommMeter {
+    /// A meter for `n_nodes` nodes with all counters at zero.
     pub fn new(n_nodes: usize) -> Self {
-        Self { scalars: 0, messages: 0, per_node: vec![0; n_nodes] }
+        Self { scalars: 0, messages: 0, per_node: vec![0; n_nodes], muted: Vec::new() }
     }
 
-    /// Record `count` scalars sent by `from` in one frame.
+    /// Record `count` scalars sent by `from` in one frame. Muted nodes
+    /// transmit nothing and are billed nothing.
     #[inline]
     pub fn send(&mut self, from: usize, count: usize) {
+        if self.muted.get(from).copied().unwrap_or(false) {
+            return;
+        }
         self.scalars += count as u64;
         self.messages += 1;
         self.per_node[from] += count as u64;
     }
 
+    /// Install this iteration's transmit-gate mask (`true` = node is
+    /// silent). The coordinator's impairment layer calls this before
+    /// every gated iteration.
+    pub fn set_mute_mask(&mut self, mask: &[bool]) {
+        self.muted.clear();
+        self.muted.extend_from_slice(mask);
+    }
+
+    /// Remove the transmit gate (every node billed again).
+    pub fn clear_mute_mask(&mut self) {
+        self.muted.clear();
+    }
+
+    /// Zero all counters (the mute mask is cleared too).
     pub fn reset(&mut self) {
         self.scalars = 0;
         self.messages = 0;
         self.per_node.iter_mut().for_each(|x| *x = 0);
+        self.muted.clear();
     }
 }
 
@@ -121,6 +146,20 @@ pub trait Algorithm {
 
     /// Current estimates, row-major (N x L).
     fn weights(&self) -> &[f64];
+
+    /// Mutable view of the estimates, row-major (N x L). The
+    /// coordinator's impairment layer uses this to emulate
+    /// finite-precision state storage (per-link quantization).
+    fn weights_mut(&mut self) -> &mut [f64];
+
+    /// The static network configuration the algorithm runs on.
+    fn network(&self) -> &NetworkConfig;
+
+    /// Mutable access to the network configuration. The coordinator's
+    /// impairment layer swaps in per-iteration *effective* combination
+    /// matrices (erased links re-allocated to the diagonal) through this
+    /// — which is what makes impairments algorithm-agnostic.
+    fn network_mut(&mut self) -> &mut NetworkConfig;
 
     /// Reset all node states to zero.
     fn reset(&mut self);
@@ -189,5 +228,20 @@ mod tests {
         assert_eq!(m.per_node, vec![6, 0, 2]);
         m.reset();
         assert_eq!(m.scalars, 0);
+    }
+
+    #[test]
+    fn muted_nodes_are_not_billed() {
+        let mut m = CommMeter::new(3);
+        m.set_mute_mask(&[false, true, false]);
+        m.send(0, 4);
+        m.send(1, 4); // suppressed
+        m.send(2, 4);
+        assert_eq!(m.scalars, 8);
+        assert_eq!(m.messages, 2);
+        assert_eq!(m.per_node, vec![4, 0, 4]);
+        m.clear_mute_mask();
+        m.send(1, 4);
+        assert_eq!(m.scalars, 12);
     }
 }

@@ -11,9 +11,10 @@
 //! 3. **update** — fill received gradients with the local gradient
 //!    (eq. (12)), adapt (eq. (10)), combine (eq. (11)).
 //!
-//! N agents plus the bus reproduce the vectorised [`Dcd`]
-//! implementation bit-for-bit (see the equivalence test below) — this is
-//! the end-to-end validation of the wire protocol.
+//! N agents plus the bus reproduce the vectorised
+//! [`Dcd`](crate::algorithms::Dcd) implementation bit-for-bit (see the
+//! equivalence test below) — this is the end-to-end validation of the
+//! wire protocol.
 
 use super::bus::{Bus, Message, PartialVector};
 use crate::rng::Pcg64;
@@ -53,6 +54,10 @@ pub struct Agent {
     rng: Pcg64,
     scratch: Vec<usize>,
     mask32: Vec<f32>,
+    /// Uniform quantizer step for every *outgoing* scalar (0 = full
+    /// precision) — the message-level face of the coordinator's
+    /// quantization impairment.
+    quant_step: f64,
 }
 
 impl Agent {
@@ -71,11 +76,19 @@ impl Agent {
             rng: Pcg64::new(seed, stream),
             scratch: Vec::new(),
             mask32: vec![0.0; l],
+            quant_step: 0.0,
         }
     }
 
     pub fn id(&self) -> usize {
         self.cfg.id
+    }
+
+    /// Enable finite-precision transmission: every scalar in an outgoing
+    /// frame (estimates and gradient replies) is snapped to the Δ grid
+    /// before it hits the bus.
+    pub fn set_quant_step(&mut self, step: f64) {
+        self.quant_step = step;
     }
 
     /// Inject this iteration's local measurements.
@@ -111,7 +124,8 @@ impl Agent {
         }
         self.cached_estimates.clear();
         self.cached_gradients.clear();
-        let body = PartialVector::from_mask(&self.w, &self.h_mask);
+        let mut body = PartialVector::from_mask(&self.w, &self.h_mask);
+        super::impairments::quantize_in_place(&mut body.val, self.quant_step);
         for &nb in &self.cfg.neighbors {
             bus.send(nb, Message::Estimate { from: self.cfg.id, body: body.clone() });
         }
@@ -130,7 +144,8 @@ impl Agent {
                     let e = self.d
                         - self.u.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f64>();
                     let grad: Vec<f64> = self.u.iter().map(|&uj| uj * e).collect();
-                    let reply = PartialVector::from_mask(&grad, &self.q_mask);
+                    let mut reply = PartialVector::from_mask(&grad, &self.q_mask);
+                    super::impairments::quantize_in_place(&mut reply.val, self.quant_step);
                     bus.send(from, Message::Gradient { from: self.cfg.id, body: reply });
                     self.cached_estimates.push((from, body));
                 }
@@ -230,6 +245,32 @@ mod tests {
                 Agent::new(cfg, 1234)
             })
             .collect()
+    }
+
+    /// Outgoing frames are grid-aligned when transmit quantization is on.
+    #[test]
+    fn quantized_agent_sends_grid_values() {
+        let graph = Graph::ring(3, 1);
+        let net = {
+            let c = combination_matrix(&graph, Rule::Metropolis);
+            let a = combination_matrix(&graph, Rule::Metropolis);
+            NetworkConfig { graph, c, a, mu: vec![0.05; 3], dim: 4 }
+        };
+        let mut agents = build_agents(&net, 4, 4);
+        let step = 0.01;
+        agents[0].set_quant_step(step);
+        agents[0].w = vec![0.1234, -0.5678, 0.0009, 2.5];
+        agents[0].set_masks(&[1.0; 4], &[1.0; 4]);
+        let bus = Bus::new(3);
+        agents[0].phase_broadcast(&bus, false);
+        for msg in bus.drain(1) {
+            if let Message::Estimate { body, .. } = msg {
+                for &v in &body.val {
+                    let q = v / step;
+                    assert!((q - q.round()).abs() < 1e-9, "{v} off the grid");
+                }
+            }
+        }
     }
 
     /// The protocol equivalence test: N agents over the bus must produce

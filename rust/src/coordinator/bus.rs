@@ -78,25 +78,45 @@ pub struct Bus {
     mailboxes: Vec<Mutex<VecDeque<Message>>>,
     delivered_scalars: Mutex<u64>,
     delivered_messages: Mutex<u64>,
+    dropped_scalars: Mutex<u64>,
+    dropped_messages: Mutex<u64>,
 }
 
 impl Bus {
+    /// A bus with one empty mailbox per node and zeroed counters.
     pub fn new(n_nodes: usize) -> Self {
         Self {
             mailboxes: (0..n_nodes).map(|_| Mutex::new(VecDeque::new())).collect(),
             delivered_scalars: Mutex::new(0),
             delivered_messages: Mutex::new(0),
+            dropped_scalars: Mutex::new(0),
+            dropped_messages: Mutex::new(0),
         }
     }
 
+    /// Number of mailboxes (nodes) on the bus.
     pub fn n_nodes(&self) -> usize {
         self.mailboxes.len()
     }
 
+    /// Deliver `msg` into the mailbox of node `to`.
     pub fn send(&self, to: usize, msg: Message) {
         *self.delivered_scalars.lock().unwrap() += msg.scalar_count() as u64;
         *self.delivered_messages.lock().unwrap() += 1;
         self.mailboxes[to].lock().unwrap().push_back(msg);
+    }
+
+    /// Send over a lossy link: with `delivered == false` the frame was
+    /// transmitted but erased in flight — it never reaches the mailbox
+    /// and is tallied in the dropped counters instead (the message-level
+    /// face of the coordinator's packet-drop impairment).
+    pub fn send_lossy(&self, to: usize, msg: Message, delivered: bool) {
+        if delivered {
+            self.send(to, msg);
+        } else {
+            *self.dropped_scalars.lock().unwrap() += msg.scalar_count() as u64;
+            *self.dropped_messages.lock().unwrap() += 1;
+        }
     }
 
     /// Drain all pending messages for `node`.
@@ -109,12 +129,24 @@ impl Bus {
         self.mailboxes[node].lock().unwrap().len()
     }
 
+    /// Total scalars delivered into mailboxes.
     pub fn delivered_scalars(&self) -> u64 {
         *self.delivered_scalars.lock().unwrap()
     }
 
+    /// Total frames delivered into mailboxes.
     pub fn delivered_messages(&self) -> u64 {
         *self.delivered_messages.lock().unwrap()
+    }
+
+    /// Total scalars transmitted but erased by lossy links.
+    pub fn dropped_scalars(&self) -> u64 {
+        *self.dropped_scalars.lock().unwrap()
+    }
+
+    /// Total frames transmitted but erased by lossy links.
+    pub fn dropped_messages(&self) -> u64 {
+        *self.dropped_messages.lock().unwrap()
     }
 }
 
@@ -148,6 +180,19 @@ mod tests {
         assert_eq!(bus.delivered_scalars(), 4);
         assert_eq!(bus.delivered_messages(), 2);
         assert_eq!(bus.pending(1), 0);
+    }
+
+    #[test]
+    fn lossy_send_accounts_for_erasures() {
+        let bus = Bus::new(2);
+        let pv = PartialVector { idx: vec![0, 1, 2], val: vec![1.0, 2.0, 3.0] };
+        bus.send_lossy(1, Message::Estimate { from: 0, body: pv.clone() }, true);
+        bus.send_lossy(1, Message::Estimate { from: 0, body: pv }, false);
+        assert_eq!(bus.pending(1), 1);
+        assert_eq!(bus.delivered_messages(), 1);
+        assert_eq!(bus.delivered_scalars(), 3);
+        assert_eq!(bus.dropped_messages(), 1);
+        assert_eq!(bus.dropped_scalars(), 3);
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! Link-impairment layer: per-edge erasures, communication gating and
+//! finite-precision state for *any* [`Algorithm`](crate::algorithms::Algorithm).
+//!
+//! The paper's experiments assume ideal links; the scenario subsystem
+//! (DESIGN.md §4) relaxes that along the axes the follow-up literature
+//! studies:
+//!
+//! * **Packet drops** — every directed link `(l → k)` independently fails
+//!   to deliver with probability `drop_prob` per iteration. The
+//!   transmitter still pays for the frame (the energy is spent whether or
+//!   not the packet lands), so communication metering is unchanged; the
+//!   receiver falls back to its own information. This is the
+//!   receiver-side erasure model of the probabilistic-link analyses
+//!   (cf. Arablouei et al., arXiv:1408.5845).
+//! * **Communication gating** — a per-node transmit gate: a gated node
+//!   stays off the air for the whole iteration (its transmissions are
+//!   neither delivered *nor billed*). [`Gating::Probabilistic`] is random
+//!   duty-cycling; [`Gating::EventTriggered`] transmits only when the
+//!   estimate moved by more than a threshold since the last broadcast
+//!   (the event-based diffusion strategy of Wang et al.,
+//!   arXiv:1803.00368).
+//! * **Quantization** — every node keeps its estimate on a uniform grid
+//!   of step `quant_step` (finite-precision motes): the state is snapped
+//!   after each update, so every scalar a node later puts on the wire is
+//!   a grid point.
+//!
+//! The layer is generic over algorithms because it acts only through the
+//! shared plumbing: a missing delivery re-allocates the corresponding
+//! combination-matrix mass to the receiver's self weight (exactly the
+//! completion rule of paper eqs. (11)–(12), and the `h_kk` reweighting of
+//! RCD), gating mutes the transmitter in the shared [`CommMeter`], and
+//! quantization goes through [`Algorithm::weights_mut`]. No algorithm
+//! contains impairment-specific code.
+//!
+//! Determinism: impairment decisions are drawn from a dedicated PCG64
+//! stream (`seed ^ LINK_SEED_SALT`, same stream id as the data RNG), so
+//! enabling impairments never perturbs the data sequence, and runs remain
+//! bit-identical for any worker-thread count.
+
+use crate::algorithms::{Algorithm, CommMeter, NetworkConfig};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Salt XOR-ed into the master seed for the impairment RNG stream, so
+/// link events are decorrelated from (and do not consume) the data RNG.
+pub const LINK_SEED_SALT: u64 = 0x6c69_6e6b_7374_6174; // "linkstat"
+
+/// Per-node transmit-gate policy (who goes on the air this iteration).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Gating {
+    /// Every node transmits every iteration (the paper's setting).
+    Always,
+    /// Each node independently transmits with probability `p` per
+    /// iteration (random duty-cycling).
+    Probabilistic(f64),
+    /// Event-triggered communication (arXiv:1803.00368): node `k`
+    /// transmits only when `‖w_k − w̃_k‖² > δ`, where `w̃_k` is the state
+    /// it last put on the air; transmitting refreshes `w̃_k`.
+    EventTriggered(f64),
+}
+
+impl std::fmt::Display for Gating {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Gating::Always => write!(f, "always"),
+            Gating::Probabilistic(p) => write!(f, "prob:{p}"),
+            Gating::EventTriggered(d) => write!(f, "event:{d}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Gating {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s == "always" {
+            return Ok(Gating::Always);
+        }
+        if let Some(p) = s.strip_prefix("prob:") {
+            return p
+                .parse::<f64>()
+                .map(Gating::Probabilistic)
+                .map_err(|e| format!("gating {s:?}: {e}"));
+        }
+        if let Some(d) = s.strip_prefix("event:") {
+            return d
+                .parse::<f64>()
+                .map(Gating::EventTriggered)
+                .map_err(|e| format!("gating {s:?}: {e}"));
+        }
+        Err(format!(
+            "gating {s:?}: expected always | prob:<p> | event:<delta>"
+        ))
+    }
+}
+
+/// Declarative link-impairment model for one scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkImpairments {
+    /// Per-directed-link erasure probability per iteration, in `[0, 1]`.
+    pub drop_prob: f64,
+    /// Per-node transmit gate.
+    pub gating: Gating,
+    /// Uniform quantizer step Δ for the stored estimates (0 = off).
+    pub quant_step: f64,
+}
+
+impl LinkImpairments {
+    /// Ideal links: nothing dropped, nobody gated, full precision.
+    pub fn ideal() -> Self {
+        Self { drop_prob: 0.0, gating: Gating::Always, quant_step: 0.0 }
+    }
+
+    /// True when the model is a no-op (the coordinator then takes the
+    /// exact legacy code path).
+    pub fn is_ideal(&self) -> bool {
+        self.drop_prob == 0.0 && self.gating == Gating::Always && self.quant_step == 0.0
+    }
+
+    /// True when link-level events (drops or gating) can occur — i.e.
+    /// the per-iteration effective-matrix rebuild is actually needed.
+    /// Quantization-only models return `false` and skip that work.
+    pub fn affects_links(&self) -> bool {
+        self.drop_prob > 0.0 || self.gating != Gating::Always
+    }
+
+    /// Range checks for every knob.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.drop_prob.is_finite() || !(0.0..=1.0).contains(&self.drop_prob) {
+            return Err(format!(
+                "impairments: drop_prob {} outside [0, 1]",
+                self.drop_prob
+            ));
+        }
+        match self.gating {
+            Gating::Always => {}
+            Gating::Probabilistic(p) => {
+                if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                    return Err(format!("impairments: gating prob {p} outside [0, 1]"));
+                }
+            }
+            Gating::EventTriggered(d) => {
+                if !d.is_finite() || d < 0.0 {
+                    return Err(format!("impairments: event threshold {d} must be >= 0"));
+                }
+            }
+        }
+        if !self.quant_step.is_finite() || self.quant_step < 0.0 {
+            return Err(format!(
+                "impairments: quant_step {} must be >= 0",
+                self.quant_step
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for LinkImpairments {
+    fn default() -> Self {
+        Self::ideal()
+    }
+}
+
+/// Snap every entry of `w` to the uniform grid of step `step`
+/// (mid-tread quantizer; `step <= 0` is a no-op).
+pub fn quantize_in_place(w: &mut [f64], step: f64) {
+    if step <= 0.0 {
+        return;
+    }
+    for x in w.iter_mut() {
+        *x = (*x / step).round() * step;
+    }
+}
+
+/// Per-run mutable state of the link-event layer: pristine combiner
+/// copies, the event-trigger reference states, and the dedicated RNG.
+/// Only needed when [`LinkImpairments::affects_links`] — quantization is
+/// stateless and applied directly by the scheduler.
+///
+/// Driven by the round scheduler: [`ImpairmentState::begin_iteration`]
+/// before every [`Algorithm::step`], [`ImpairmentState::restore`] once
+/// the run finishes.
+pub struct ImpairmentState {
+    /// Pristine combine matrix A (the per-iteration effective matrices
+    /// are rebuilt from these copies, allocation-free).
+    a0: Mat,
+    /// Pristine adapt matrix C.
+    c0: Mat,
+    /// Last-broadcast reference states w̃ (N × L, event gating).
+    last_broadcast: Vec<f64>,
+    /// Per-node silence decisions for the current iteration.
+    silent: Vec<bool>,
+    rng: Pcg64,
+    dim: usize,
+}
+
+impl ImpairmentState {
+    /// Capture the pristine combiners of `net` and seed the impairment
+    /// stream for one run (`stream` is the Monte-Carlo run stream).
+    pub fn new(net: &NetworkConfig, seed: u64, stream: u64) -> Self {
+        Self {
+            a0: net.a.clone(),
+            c0: net.c.clone(),
+            last_broadcast: vec![0.0; net.n_nodes() * net.dim],
+            silent: vec![false; net.n_nodes()],
+            rng: Pcg64::new(seed ^ LINK_SEED_SALT, stream),
+            dim: net.dim,
+        }
+    }
+
+    /// Which nodes are off the air this iteration (valid after
+    /// [`Self::begin_iteration`]).
+    pub fn silent(&self) -> &[bool] {
+        &self.silent
+    }
+
+    /// Draw this iteration's link events and install their consequences:
+    /// effective A/C matrices in the algorithm's network config and the
+    /// transmit-mute mask in the meter.
+    pub fn begin_iteration(
+        &mut self,
+        imp: &LinkImpairments,
+        alg: &mut dyn Algorithm,
+        comm: &mut CommMeter,
+    ) {
+        let l = self.dim;
+        let n = self.silent.len();
+
+        // 1. Per-node transmit gate.
+        match imp.gating {
+            Gating::Always => self.silent.iter_mut().for_each(|s| *s = false),
+            Gating::Probabilistic(p) => {
+                for s in self.silent.iter_mut() {
+                    *s = !self.rng.next_bool(p);
+                }
+            }
+            Gating::EventTriggered(delta) => {
+                let w = alg.weights();
+                for k in 0..n {
+                    let wk = &w[k * l..(k + 1) * l];
+                    let lb = &mut self.last_broadcast[k * l..(k + 1) * l];
+                    let moved: f64 = wk
+                        .iter()
+                        .zip(lb.iter())
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    let quiet = moved <= delta;
+                    self.silent[k] = quiet;
+                    if !quiet {
+                        // Transmitting refreshes the reference state.
+                        lb.copy_from_slice(wk);
+                    }
+                }
+            }
+        }
+
+        // 2. Effective combiners: start from the pristine copies, then
+        // erase every dead directed link (l → k), re-allocating its mass
+        // to the receiver's self weight — the completion rule of
+        // eqs. (11)-(12) applied at matrix level. A silent node also
+        // *solicits* nothing: it broadcast no estimate for neighbours to
+        // evaluate gradients at, so its whole C column collapses to the
+        // self weight and it runs a pure self-LMS adapt that iteration.
+        let net = alg.network_mut();
+        net.a.data_mut().copy_from_slice(self.a0.data());
+        net.c.data_mut().copy_from_slice(self.c0.data());
+        let p = imp.drop_prob;
+        for k in 0..n {
+            for &lnb in net.graph.neighbors(k) {
+                let delivered = !self.silent[lnb] && !(p > 0.0 && self.rng.next_bool(p));
+                if !delivered {
+                    let am = net.a[(lnb, k)];
+                    if am != 0.0 {
+                        net.a[(lnb, k)] = 0.0;
+                        net.a[(k, k)] += am;
+                    }
+                }
+                if !delivered || self.silent[k] {
+                    let cm = net.c[(lnb, k)];
+                    if cm != 0.0 {
+                        net.c[(lnb, k)] = 0.0;
+                        net.c[(k, k)] += cm;
+                    }
+                }
+            }
+        }
+
+        // 3. Gated nodes transmit nothing, so they are billed nothing.
+        comm.set_mute_mask(&self.silent);
+    }
+
+    /// Put the pristine combiners back (so a reused algorithm instance
+    /// sees its original configuration) and unmute the meter.
+    pub fn restore(&self, alg: &mut dyn Algorithm, comm: &mut CommMeter) {
+        let net = alg.network_mut();
+        net.a.data_mut().copy_from_slice(self.a0.data());
+        net.c.data_mut().copy_from_slice(self.c0.data());
+        comm.clear_mute_mask();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Dcd, NetworkConfig};
+    use crate::topology::{col_sums, combination_matrix, Graph, Rule};
+
+    fn net(n: usize, l: usize) -> NetworkConfig {
+        let graph = Graph::ring(n, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        NetworkConfig { graph, c, a, mu: vec![0.05; n], dim: l }
+    }
+
+    #[test]
+    fn quantizer_snaps_to_grid() {
+        let mut w = [0.1234, -0.567, 0.0, 2.0001];
+        quantize_in_place(&mut w, 0.01);
+        for x in &w {
+            let q = x / 0.01;
+            assert!((q - q.round()).abs() < 1e-9, "{x} not on grid");
+        }
+        assert!((w[0] - 0.12).abs() < 1e-12);
+        let mut v = [0.1234];
+        quantize_in_place(&mut v, 0.0);
+        assert_eq!(v[0], 0.1234);
+    }
+
+    #[test]
+    fn gating_parse_display_roundtrip() {
+        for g in [
+            Gating::Always,
+            Gating::Probabilistic(0.25),
+            Gating::EventTriggered(1e-6),
+        ] {
+            let s = g.to_string();
+            assert_eq!(s.parse::<Gating>().unwrap(), g);
+        }
+        assert!("sometimes".parse::<Gating>().is_err());
+        assert!("prob:x".parse::<Gating>().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range() {
+        let mut imp = LinkImpairments::ideal();
+        assert!(imp.validate().is_ok());
+        assert!(imp.is_ideal());
+        imp.drop_prob = 1.5;
+        assert!(imp.validate().is_err());
+        imp.drop_prob = 0.2;
+        assert!(!imp.is_ideal());
+        assert!(imp.validate().is_ok());
+        imp.gating = Gating::Probabilistic(-0.1);
+        assert!(imp.validate().is_err());
+        imp.gating = Gating::EventTriggered(-1.0);
+        assert!(imp.validate().is_err());
+        imp.gating = Gating::Always;
+        imp.quant_step = f64::NAN;
+        assert!(imp.validate().is_err());
+    }
+
+    #[test]
+    fn full_drop_isolates_every_node() {
+        let cfg = net(5, 3);
+        let mut alg = Dcd::new(cfg.clone(), 2, 1);
+        let mut comm = CommMeter::new(5);
+        let imp = LinkImpairments {
+            drop_prob: 1.0,
+            gating: Gating::Always,
+            quant_step: 0.0,
+        };
+        let mut state = ImpairmentState::new(alg.network(), 7, 1);
+        state.begin_iteration(&imp, &mut alg, &mut comm);
+        let a = &alg.network().a;
+        for k in 0..5 {
+            for lk in 0..5 {
+                if k != lk {
+                    assert_eq!(a[(lk, k)], 0.0, "({lk},{k}) should be erased");
+                }
+            }
+            assert!((a[(k, k)] - 1.0).abs() < 1e-12);
+        }
+        // Column-stochasticity is preserved by the diagonal re-allocation.
+        for s in col_sums(a) {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        state.restore(&mut alg, &mut comm);
+        assert!((alg.network().a.data()
+            .iter()
+            .zip(cfg.a.data())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max))
+            < 1e-15);
+    }
+
+    #[test]
+    fn probabilistic_gate_extremes() {
+        let cfg = net(6, 2);
+        let mut alg = Dcd::new(cfg, 1, 1);
+        let mut comm = CommMeter::new(6);
+        let all_off = LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::Probabilistic(0.0),
+            quant_step: 0.0,
+        };
+        let mut state = ImpairmentState::new(alg.network(), 3, 1);
+        state.begin_iteration(&all_off, &mut alg, &mut comm);
+        assert!(state.silent().iter().all(|&s| s));
+        let all_on = LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::Probabilistic(1.0),
+            quant_step: 0.0,
+        };
+        state.begin_iteration(&all_on, &mut alg, &mut comm);
+        assert!(state.silent().iter().all(|&s| !s));
+    }
+
+    #[test]
+    fn event_trigger_silences_unchanged_nodes() {
+        let cfg = net(4, 3);
+        let mut alg = Dcd::new(cfg, 2, 1);
+        let mut comm = CommMeter::new(4);
+        let imp = LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::EventTriggered(1e-9),
+            quant_step: 0.0,
+        };
+        let mut state = ImpairmentState::new(alg.network(), 5, 1);
+        // Fresh algorithm: w == w̃ == 0, nobody has news to share.
+        state.begin_iteration(&imp, &mut alg, &mut comm);
+        assert!(state.silent().iter().all(|&s| s));
+        // Move one node's estimate: only that node transmits.
+        alg.weights_mut()[0] = 1.0;
+        state.begin_iteration(&imp, &mut alg, &mut comm);
+        assert!(!state.silent()[0]);
+        assert!(state.silent()[1..].iter().all(|&s| s));
+        // The broadcast refreshed w̃_0: silent again next round.
+        state.begin_iteration(&imp, &mut alg, &mut comm);
+        assert!(state.silent()[0]);
+    }
+}

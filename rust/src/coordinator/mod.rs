@@ -5,7 +5,8 @@
 //! * [`agent`] — a per-node DCD agent state machine speaking that
 //!   protocol; N agents + the bus reproduce exactly one vectorised DCD
 //!   iteration (property-tested), validating the message protocol.
-//! * [`round`] — synchronous round scheduler: drives any [`Algorithm`]
+//! * [`round`] — synchronous round scheduler: drives any
+//!   [`Algorithm`](crate::algorithms::Algorithm)
 //!   over streaming data, records MSD traces and communication costs
 //!   (Experiments 1 and 2).
 //! * [`wsn`] — energy-aware event-driven scheduler (virtual time): each
@@ -13,6 +14,10 @@
 //!   the freshest available neighbour state (Experiment 3).
 //! * [`runner`] — Monte-Carlo orchestration over both engines: the
 //!   message-level rust engine and the AOT-compiled xla engine.
+//! * [`impairments`] — the link-impairment layer (per-edge erasures,
+//!   probabilistic / event-triggered communication gating, quantized
+//!   state) that the round scheduler wraps around any algorithm; the
+//!   scenario subsystem (DESIGN.md §4) configures it declaratively.
 //!
 //! Scheduling is deterministic (seeded virtual time) rather than
 //! wall-clock threaded: on this single-core target determinism buys
@@ -23,10 +28,12 @@
 
 pub mod agent;
 pub mod bus;
+pub mod impairments;
 pub mod round;
 pub mod runner;
 pub mod wsn;
 
+pub use impairments::{Gating, LinkImpairments};
 pub use round::{RoundScheduler, RunResult};
 pub use runner::{MonteCarlo, McResult};
 pub use wsn::{WsnConfig, WsnResult, WsnSimulation};

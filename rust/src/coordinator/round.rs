@@ -1,10 +1,20 @@
 //! Synchronous round scheduler: drives any [`Algorithm`] over streaming
 //! data from a [`DataModel`], recording MSD traces and communication
 //! costs (Experiments 1 and 2).
+//!
+//! When [`RoundScheduler::impairments`] is set (and not a no-op), every
+//! iteration is wrapped by the link-impairment layer of
+//! [`super::impairments`]: link events are drawn from a dedicated RNG
+//! stream, the algorithm's combination matrices are swapped for that
+//! iteration's effective versions, gated transmitters are muted in the
+//! meter, and the post-step state is quantized. With `impairments: None`
+//! the code path is byte-for-byte the legacy ideal-links loop.
 
 use crate::algorithms::{Algorithm, CommMeter, StepData};
 use crate::datamodel::DataModel;
 use crate::rng::Pcg64;
+
+use super::impairments::{quantize_in_place, ImpairmentState, LinkImpairments};
 
 /// Result of a single run.
 #[derive(Debug, Clone)]
@@ -22,11 +32,14 @@ pub struct RoundScheduler<'a> {
     pub model: &'a DataModel,
     /// Record MSD every `record_every` iterations (1 = every iteration).
     pub record_every: usize,
+    /// Optional link-impairment model wrapped around every iteration
+    /// (`None` = ideal links, the exact legacy path).
+    pub impairments: Option<LinkImpairments>,
 }
 
 impl<'a> RoundScheduler<'a> {
     pub fn new(model: &'a DataModel) -> Self {
-        Self { model, record_every: 1 }
+        Self { model, record_every: 1, impairments: None }
     }
 
     /// Run `iters` iterations of `alg` with the given seed; the algorithm
@@ -39,13 +52,34 @@ impl<'a> RoundScheduler<'a> {
         let mut u = vec![0.0; n * l];
         let mut d = vec![0.0; n];
         let mut msd = Vec::with_capacity(iters / self.record_every + 1);
+        // The impairment layer activates only for a non-trivial model, so
+        // ideal runs take the legacy path (and never touch the link RNG);
+        // quantization-only models skip the link-event state entirely.
+        let imp = self.impairments.as_ref().filter(|imp| !imp.is_ideal());
+        let mut state = match imp {
+            Some(i) if i.affects_links() => {
+                Some(ImpairmentState::new(alg.network(), seed, stream))
+            }
+            _ => None,
+        };
         alg.reset();
         for i in 0..iters {
             self.model.sample_iteration(&mut rng, &mut u, &mut d);
+            if let (Some(imp), Some(state)) = (imp, state.as_mut()) {
+                state.begin_iteration(imp, alg, &mut comm);
+            }
             alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+            if let Some(imp) = imp {
+                if imp.quant_step > 0.0 {
+                    quantize_in_place(alg.weights_mut(), imp.quant_step);
+                }
+            }
             if (i + 1) % self.record_every == 0 {
                 msd.push(alg.msd(&self.model.wo));
             }
+        }
+        if let Some(state) = &state {
+            state.restore(alg, &mut comm);
         }
         RunResult { msd, scalars: comm.scalars, messages: comm.messages }
     }
@@ -87,6 +121,106 @@ mod tests {
         sched.record_every = 10;
         let res = sched.run(&mut alg, 100, 1, 0);
         assert_eq!(res.msd.len(), 10);
+    }
+
+    #[test]
+    fn trivial_impairments_match_ideal_path_exactly() {
+        let mut rng = Pcg64::new(6, 6);
+        let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
+        let graph = Graph::ring(5, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
+        let ideal = RoundScheduler::new(&model);
+        let mut wrapped = RoundScheduler::new(&model);
+        wrapped.impairments = Some(crate::coordinator::impairments::LinkImpairments::ideal());
+        let mut a1 = Dcd::new(net.clone(), 2, 1);
+        let mut a2 = Dcd::new(net, 2, 1);
+        let r1 = ideal.run(&mut a1, 120, 3, 1);
+        let r2 = wrapped.run(&mut a2, 120, 3, 1);
+        assert_eq!(r1.msd, r2.msd);
+        assert_eq!(r1.scalars, r2.scalars);
+    }
+
+    #[test]
+    fn drops_degrade_msd_but_not_billing() {
+        use crate::coordinator::impairments::{Gating, LinkImpairments};
+        let mut rng = Pcg64::new(8, 8);
+        let model = DataModel::paper(6, 4, 1.0, 1.0, 1e-3, &mut rng);
+        let graph = Graph::ring(6, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 6], dim: 4 };
+        let run_with = |drop_prob: f64| {
+            let mut sched = RoundScheduler::new(&model);
+            sched.impairments = Some(LinkImpairments {
+                drop_prob,
+                gating: Gating::Always,
+                quant_step: 0.0,
+            });
+            let mut alg = Dcd::new(net.clone(), 2, 1);
+            sched.run(&mut alg, 2_000, 5, 1)
+        };
+        let clean = run_with(0.0);
+        let lossy = run_with(0.6);
+        // Transmissions happen whether or not the packet lands.
+        assert_eq!(clean.scalars, lossy.scalars);
+        let tail = |r: &RunResult| r.msd[1_800..].iter().sum::<f64>() / 200.0;
+        assert!(
+            tail(&lossy) > tail(&clean),
+            "lossy {} <= clean {}",
+            tail(&lossy),
+            tail(&clean)
+        );
+        assert!(tail(&lossy).is_finite());
+    }
+
+    #[test]
+    fn gating_cuts_billing_roughly_in_half() {
+        use crate::coordinator::impairments::{Gating, LinkImpairments};
+        let mut rng = Pcg64::new(9, 9);
+        let model = DataModel::paper(6, 4, 1.0, 1.0, 1e-3, &mut rng);
+        let graph = Graph::ring(6, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 6], dim: 4 };
+        let run_with = |gating: Gating| {
+            let mut sched = RoundScheduler::new(&model);
+            sched.impairments =
+                Some(LinkImpairments { drop_prob: 0.0, gating, quant_step: 0.0 });
+            let mut alg = Dcd::new(net.clone(), 2, 1);
+            sched.run(&mut alg, 1_000, 5, 1)
+        };
+        let always = run_with(Gating::Always);
+        let half = run_with(Gating::Probabilistic(0.5));
+        let ratio = half.scalars as f64 / always.scalars as f64;
+        assert!((0.4..0.6).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn quantized_state_stays_on_grid() {
+        use crate::coordinator::impairments::{Gating, LinkImpairments};
+        let mut rng = Pcg64::new(10, 10);
+        let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
+        let graph = Graph::ring(5, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
+        let step = 1e-3;
+        let mut sched = RoundScheduler::new(&model);
+        sched.impairments = Some(LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::Always,
+            quant_step: step,
+        });
+        let mut alg = Dcd::new(net, 2, 1);
+        let res = sched.run(&mut alg, 800, 5, 1);
+        for &x in alg.weights() {
+            let q = x / step;
+            assert!((q - q.round()).abs() < 1e-6, "{x} off the grid");
+        }
+        // Still converges to within a few grid cells of the target.
+        assert!(res.msd[799] < res.msd[0]);
     }
 
     #[test]

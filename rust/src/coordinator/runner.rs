@@ -28,6 +28,7 @@ use crate::runtime::Runtime;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::impairments::LinkImpairments;
 use super::round::{RoundScheduler, RunResult};
 
 /// Monte-Carlo configuration.
@@ -148,13 +149,27 @@ impl MonteCarlo {
         model: &DataModel,
         make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
     ) -> McResult {
+        self.run_rust_with(model, None, make_alg)
+    }
+
+    /// [`Self::run_rust`] with an optional link-impairment model wrapped
+    /// around every iteration (the scenario subsystem's entry point).
+    /// Impairment decisions are drawn per run from a dedicated PCG64
+    /// stream, so the result stays bit-identical for any thread count.
+    pub fn run_rust_with(
+        &self,
+        model: &DataModel,
+        impairments: Option<&LinkImpairments>,
+        make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
+    ) -> McResult {
         let threads = resolve_threads(self.threads, self.runs);
         if threads <= 1 {
-            return self.run_rust_serial(model, make_alg);
+            return self.run_rust_serial_with(model, impairments, make_alg);
         }
         let results = parallel_ordered(self.runs, threads, |r| {
             let mut sched = RoundScheduler::new(model);
             sched.record_every = self.record_every.max(1);
+            sched.impairments = impairments.cloned();
             let mut alg = make_alg();
             sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1)
         });
@@ -168,8 +183,19 @@ impl MonteCarlo {
         model: &DataModel,
         make_alg: impl Fn() -> Box<dyn Algorithm>,
     ) -> McResult {
+        self.run_rust_serial_with(model, None, make_alg)
+    }
+
+    /// Serial reference path with an optional link-impairment model.
+    pub fn run_rust_serial_with(
+        &self,
+        model: &DataModel,
+        impairments: Option<&LinkImpairments>,
+        make_alg: impl Fn() -> Box<dyn Algorithm>,
+    ) -> McResult {
         let mut sched = RoundScheduler::new(model);
         sched.record_every = self.record_every.max(1);
+        sched.impairments = impairments.cloned();
         self.merge((0..self.runs).map(|r| {
             let mut alg = make_alg();
             sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1)
@@ -393,6 +419,36 @@ mod tests {
             assert_eq!(par.scalars_per_run.to_bits(), serial.scalars_per_run.to_bits());
             assert_eq!(par.runs, serial.runs);
         }
+    }
+
+    /// The impairment layer preserves the bit-identity guarantee: its
+    /// decisions come from a per-run stream, not from shared state.
+    #[test]
+    fn impaired_parallel_bit_identical_to_serial() {
+        use crate::coordinator::impairments::{Gating, LinkImpairments};
+        let (model, net) = small_case();
+        let imp = LinkImpairments {
+            drop_prob: 0.3,
+            gating: Gating::Probabilistic(0.8),
+            quant_step: 1e-4,
+        };
+        let base = MonteCarlo { runs: 6, iters: 200, seed: 23, record_every: 1, threads: 1 };
+        let serial =
+            base.run_rust_serial_with(&model, Some(&imp), || Box::new(Dcd::new(net.clone(), 2, 1)));
+        for threads in [2usize, 4] {
+            let mc = MonteCarlo { threads, ..base.clone() };
+            let par =
+                mc.run_rust_with(&model, Some(&imp), || Box::new(Dcd::new(net.clone(), 2, 1)));
+            assert_eq!(par.msd, serial.msd, "threads = {threads}");
+            assert_eq!(par.scalars_per_run.to_bits(), serial.scalars_per_run.to_bits());
+        }
+        // And the impairment stream never perturbs the data stream: the
+        // ideal run matches the plain runner bit-for-bit.
+        let plain = base.run_rust(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
+        let ideal = base.run_rust_with(&model, Some(&LinkImpairments::ideal()), || {
+            Box::new(Dcd::new(net.clone(), 2, 1))
+        });
+        assert_eq!(plain.msd, ideal.msd);
     }
 
     /// resolve_threads: explicit request wins and is capped by the job

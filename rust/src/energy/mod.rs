@@ -72,10 +72,15 @@ impl Default for EnergyParams {
 pub struct ActiveEnergy(pub f64);
 
 impl ActiveEnergy {
+    /// Diffusion LMS active phase (full two-way exchange).
     pub const DIFFUSION: ActiveEnergy = ActiveEnergy(8.58e-2);
+    /// Reduced-communication diffusion active phase.
     pub const RCD: ActiveEnergy = ActiveEnergy(1.61e-2);
+    /// Partial-diffusion active phase.
     pub const PARTIAL: ActiveEnergy = ActiveEnergy(5.4e-3);
+    /// Compressed-diffusion active phase.
     pub const CD: ActiveEnergy = ActiveEnergy(7.51e-2);
+    /// Doubly-compressed-diffusion active phase.
     pub const DCD: ActiveEnergy = ActiveEnergy(5.4e-3);
 
     /// Table I lookup by algorithm name (as reported by `Algorithm::name`).
@@ -104,6 +109,7 @@ pub struct NodeEnergy {
 }
 
 impl NodeEnergy {
+    /// A node starting at the minimum operational charge (½ C V_ref²).
     pub fn new(params: EnergyParams, harvest_scale: f64) -> Self {
         // Start with the minimum operational charge: E = ½ C V_ref².
         let stored = 0.5 * params.c_s * params.v_ref * params.v_ref;

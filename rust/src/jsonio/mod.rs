@@ -22,6 +22,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { src: src.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -35,6 +36,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// The object's map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -42,6 +44,7 @@ impl Json {
         }
     }
 
+    /// The array's items, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -49,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -56,6 +60,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -63,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 && x <= u32::MAX as f64 {
@@ -73,6 +79,7 @@ impl Json {
         })
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),

@@ -33,6 +33,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod testing;
 pub mod theory;
 pub mod topology;

@@ -4,6 +4,9 @@
 //! dcd-lms exp1 [--engine rust|xla] [--runs N] [--iters N] [--out DIR] ...
 //! dcd-lms exp2 [--engine rust|xla] ...
 //! dcd-lms exp3 [--fast] ...
+//! dcd-lms scenario list                     # built-in scenario registry
+//! dcd-lms scenario run --name NAME [...]    # one declarative scenario
+//! dcd-lms scenario sweep --name NAME --key K --values V1,V2,...
 //! dcd-lms theory  --m M --m-grad MG [...]   # stability + steady state
 //! dcd-lms validate                          # rust engine ≡ xla engine
 //! dcd-lms info                              # artifact manifest
@@ -64,6 +67,19 @@ fn build_app() -> App {
                 Command::new("exp3", "Fig. 4: energy-harvesting WSN, N=80 L=40")
                     .opt("runs", "Monte-Carlo runs")
                     .opt("duration", "virtual-time horizon (s)"),
+            ),
+            common(
+                Command::new(
+                    "scenario",
+                    "declarative scenarios (impaired/async networks): list | run | sweep",
+                )
+                .opt("name", "registry scenario name (see `scenario list`)")
+                .opt("seed", "override the scenario seed")
+                .opt("runs", "override Monte-Carlo runs")
+                .opt("iters", "override iterations per run")
+                .opt("threads", "worker threads (0 = auto)")
+                .opt("key", "sweep: dotted scenario key, e.g. impairments.drop_prob")
+                .opt("values", "sweep: comma-separated values for --key"),
             ),
             Command::new("theory", "stability bounds + theoretical steady state")
                 .opt("n", "nodes (default 10)")
@@ -165,10 +181,105 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             run_exp3(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
             Ok(())
         }
+        "scenario" => cmd_scenario(args),
         "theory" => cmd_theory(args),
         "validate" => cmd_validate(args),
         "info" => cmd_info(),
         other => Err(anyhow!("unhandled command {other}")),
+    }
+}
+
+/// Resolve the scenario a `scenario run`/`scenario sweep` invocation
+/// addresses: registry preset or `--config` file, then `--set` dotted
+/// overrides through the INI layer, then the CLI convenience flags.
+fn resolve_scenario(args: &ParsedArgs) -> Result<dcd_lms::scenario::Scenario> {
+    let mut doc = match args.get("config") {
+        Some(path) => IniDoc::load(path).map_err(anyhow::Error::msg)?,
+        None => {
+            let name = args
+                .get("name")
+                .ok_or_else(|| anyhow!("scenario: --name <scenario> or --config <file> required"))?;
+            let base = dcd_lms::scenario::find(name).ok_or_else(|| {
+                anyhow!("unknown scenario {name:?} (run `scenario list` for the registry)")
+            })?;
+            IniDoc::parse(&base.to_ini_string()).map_err(anyhow::Error::msg)?
+        }
+    };
+    for s in args.get_all("set") {
+        // Unknown keys are rejected up front: the INI layer itself is
+        // schemaless and a typo would otherwise silently change nothing.
+        let path = s.split('=').next().unwrap_or("").trim();
+        dcd_lms::scenario::Scenario::check_key(path).map_err(anyhow::Error::msg)?;
+        doc.set_dotted(s).map_err(anyhow::Error::msg)?;
+    }
+    let mut sc = dcd_lms::scenario::Scenario::from_ini(&doc).map_err(anyhow::Error::msg)?;
+    if args.flag("fast") {
+        sc.runs = 3;
+        sc.iters = 800;
+        sc.record_every = 1;
+    }
+    if let Some(v) = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        sc.seed = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("runs").map_err(anyhow::Error::msg)? {
+        sc.runs = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
+        sc.iters = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
+        sc.threads = v;
+    }
+    sc.validate().map_err(anyhow::Error::msg)?;
+    Ok(sc)
+}
+
+fn cmd_scenario(args: &ParsedArgs) -> Result<()> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("list");
+    match action {
+        "list" => {
+            println!("{:<22} {}", "name", "description");
+            println!("{}", "-".repeat(78));
+            for sc in dcd_lms::scenario::builtins() {
+                println!("{:<22} {}", sc.name, sc.description);
+            }
+            println!(
+                "\nrun one with `scenario run --name <name>`; \
+                 sweep a knob with `scenario sweep --name <name> --key <k> --values a,b,c`"
+            );
+            Ok(())
+        }
+        "run" => {
+            let sc = resolve_scenario(args)?;
+            dcd_lms::scenario::run_scenario(&sc, Some(&out_dir(args)), args.flag("quiet"))
+                .map_err(anyhow::Error::msg)?;
+            Ok(())
+        }
+        "sweep" => {
+            let sc = resolve_scenario(args)?;
+            let key = args
+                .get("key")
+                .ok_or_else(|| anyhow!("scenario sweep: --key <dotted.key> required"))?;
+            let values: Vec<String> = args
+                .get("values")
+                .ok_or_else(|| anyhow!("scenario sweep: --values v1,v2,... required"))?
+                .split(',')
+                .map(|v| v.trim().to_string())
+                .filter(|v| !v.is_empty())
+                .collect();
+            dcd_lms::scenario::sweep_scenario(
+                &sc,
+                key,
+                &values,
+                Some(&out_dir(args)),
+                args.flag("quiet"),
+            )
+            .map_err(anyhow::Error::msg)?;
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown scenario action {other:?} (expected list | run | sweep)"
+        )),
     }
 }
 

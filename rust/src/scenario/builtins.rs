@@ -1,0 +1,205 @@
+//! The built-in scenario registry: named, reproducible presets covering
+//! the paper's settings plus the impaired/asynchronous regimes the
+//! follow-up literature studies (see DESIGN.md §4 for the axes).
+
+use crate::coordinator::impairments::{Gating, LinkImpairments};
+use crate::topology::Rule;
+
+use super::spec::{AlgorithmSpec, Scenario, TopologySpec};
+
+/// All built-in scenarios, in display order.
+pub fn builtins() -> Vec<Scenario> {
+    vec![
+        paper_10_node(),
+        fifty_node_sweep(),
+        wsn_80(),
+        lossy_geometric(),
+        event_triggered_ring(),
+        quantized_dense(),
+    ]
+}
+
+/// Look a built-in up by name.
+pub fn find(name: &str) -> Option<Scenario> {
+    builtins().into_iter().find(|sc| sc.name == name)
+}
+
+/// Experiment 1's DCD setting as a scenario: with ideal links this
+/// reproduces the `exp1` dcd trajectory bit-for-bit (tested in
+/// `rust/tests/scenario.rs`).
+fn paper_10_node() -> Scenario {
+    let mut sc = Scenario::base(
+        "paper-10-node",
+        "Fig. 3 left DCD setting: 10-node paper network, L=5, M=3, Mgrad=1",
+    );
+    sc.topology = TopologySpec::Paper10;
+    sc.combine_rule = Rule::Identity; // exp1 runs A = I
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 5;
+    sc.u2_min = 0.8;
+    sc.u2_max = 1.2;
+    sc.sigma_v2 = 1e-3;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 3, m_grad: 1 };
+    sc.mu = 1e-3;
+    sc.runs = 100;
+    sc.iters = 40_000;
+    sc.seed = 2017;
+    sc
+}
+
+/// Experiment 2's 50-node network, sized for `scenario sweep` over the
+/// impairment or compression axes.
+fn fifty_node_sweep() -> Scenario {
+    let mut sc = Scenario::base(
+        "fifty-node-sweep",
+        "Exp-2-style N=50 L=50 network, sized for sweeps over drop_prob or m",
+    );
+    sc.topology = TopologySpec::Geometric { n: 50, radius: 0.25 };
+    sc.combine_rule = Rule::Identity; // exp2 runs A = I
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 50;
+    sc.u2_min = 0.4;
+    sc.u2_max = 0.8;
+    sc.sigma_v2 = 1e-3;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 5, m_grad: 5 };
+    sc.mu = 3e-2;
+    sc.runs = 10;
+    sc.iters = 4_000;
+    sc.seed = 2018;
+    sc
+}
+
+/// The Experiment 3 hillside-WSN topology driven by synchronous rounds
+/// (the energy-driven asynchronous view lives in `exp3`).
+fn wsn_80() -> Scenario {
+    let mut sc = Scenario::base(
+        "wsn-80",
+        "80-node geometric WSN topology, L=40, DCD at ratio 20, synchronous rounds",
+    );
+    sc.topology = TopologySpec::Geometric { n: 80, radius: 0.18 };
+    sc.combine_rule = Rule::Metropolis;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 40;
+    sc.u2_min = 0.8;
+    sc.u2_max = 1.2;
+    sc.sigma_v2 = 1e-3;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 3, m_grad: 1 };
+    sc.mu = 6e-3;
+    sc.runs = 4;
+    sc.iters = 6_000;
+    sc.seed = 2019;
+    sc
+}
+
+/// An ad-hoc network with unreliable links: every directed link erases
+/// 20 % of its frames (receiver-side fallback per eqs. (11)-(12)).
+fn lossy_geometric() -> Scenario {
+    let mut sc = Scenario::base(
+        "lossy-geometric",
+        "30-node geometric network where every link drops 20% of its frames",
+    );
+    sc.topology = TopologySpec::Geometric { n: 30, radius: 0.25 };
+    sc.dim = 8;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 3, m_grad: 1 };
+    sc.mu = 2e-2;
+    sc.impairments = LinkImpairments {
+        drop_prob: 0.2,
+        gating: Gating::Always,
+        quant_step: 0.0,
+    };
+    sc.runs = 10;
+    sc.iters = 3_000;
+    sc.seed = 11;
+    sc
+}
+
+/// Event-based diffusion (arXiv:1803.00368): nodes broadcast only while
+/// their estimate is still moving, so traffic fades out as the network
+/// converges.
+fn event_triggered_ring() -> Scenario {
+    let mut sc = Scenario::base(
+        "event-triggered-ring",
+        "20-node ring running diffusion LMS, transmitting only when the estimate moved",
+    );
+    sc.topology = TopologySpec::Ring { n: 20, hops: 2 };
+    sc.dim = 6;
+    sc.algorithm = AlgorithmSpec::DiffusionLms;
+    sc.mu = 2e-2;
+    sc.impairments = LinkImpairments {
+        drop_prob: 0.0,
+        gating: Gating::EventTriggered(1e-6),
+        quant_step: 0.0,
+    };
+    sc.runs = 10;
+    sc.iters = 3_000;
+    sc.seed = 5;
+    sc
+}
+
+/// Finite-precision motes on a dense ring: every stored (hence every
+/// exchanged) scalar lives on a 1e-3 grid.
+fn quantized_dense() -> Scenario {
+    let mut sc = Scenario::base(
+        "quantized-dense",
+        "16-node dense ring with estimates kept on a 1e-3 quantization grid",
+    );
+    sc.topology = TopologySpec::Ring { n: 16, hops: 4 };
+    sc.dim = 8;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 4, m_grad: 2 };
+    sc.mu = 2e-2;
+    sc.impairments = LinkImpairments {
+        drop_prob: 0.0,
+        gating: Gating::Always,
+        quant_step: 1e-3,
+    };
+    sc.runs = 10;
+    sc.iters = 3_000;
+    sc.seed = 3;
+    sc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_at_least_six_valid_scenarios() {
+        let all = builtins();
+        assert!(all.len() >= 6, "only {} built-ins", all.len());
+        for sc in &all {
+            sc.validate().unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        }
+        // Names are unique (they name result files).
+        let mut names: Vec<&str> = all.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+
+    #[test]
+    fn every_builtin_roundtrips_through_ini() {
+        for sc in builtins() {
+            let back = Scenario::parse_str(&sc.to_ini_string()).unwrap();
+            assert_eq!(back, sc, "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn find_by_name() {
+        assert!(find("lossy-geometric").is_some());
+        assert!(find("paper-10-node").is_some());
+        assert!(find("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn paper_scenario_matches_exp1_preset() {
+        let sc = find("paper-10-node").unwrap();
+        let e1 = crate::config::Exp1Config::default();
+        assert_eq!(sc.dim, e1.dim);
+        assert_eq!(sc.mu, e1.mu);
+        assert_eq!(sc.runs, e1.runs);
+        assert_eq!(sc.iters, e1.iters);
+        assert_eq!(sc.seed, e1.seed);
+        assert_eq!(sc.algorithm, AlgorithmSpec::Dcd { m: e1.m, m_grad: e1.m_grad });
+    }
+}

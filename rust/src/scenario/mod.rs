@@ -1,0 +1,31 @@
+//! Declarative scenario subsystem (DESIGN.md §4): compose a topology
+//! generator × data model × algorithm × link impairments × schedule into
+//! a named, reproducible experiment.
+//!
+//! The paper replays three fixed experiments; the ROADMAP's north star
+//! asks for "as many scenarios as you can imagine". This module is the
+//! workload generator that gets there:
+//!
+//! * [`Scenario`] — the declarative description, parsed from and
+//!   serialized to the repo's INI config format (round-trip lossless),
+//!   with a semantic validator (connected topology, knobs within the
+//!   dimension, impairment ranges).
+//! * [`builtins()`] — a registry of named presets: the paper's settings
+//!   (`paper-10-node` reproduces the exp1 DCD trajectory bit-for-bit)
+//!   plus impaired/asynchronous regimes from the follow-up literature
+//!   (`lossy-geometric`, `event-triggered-ring`, `quantized-dense`, ...).
+//! * [`run_scenario`] / [`sweep_scenario`] — execution on the parallel
+//!   Monte-Carlo runner with the link-impairment layer
+//!   ([`crate::coordinator::impairments`]) wrapped around every
+//!   iteration; results land in `results/<name>.{csv,json}`.
+//!
+//! CLI face: `dcd-lms scenario list | run | sweep` (see the README's
+//! scenario section for a tour).
+
+mod builtins;
+mod run;
+mod spec;
+
+pub use builtins::{builtins, find};
+pub use run::{run_scenario, sweep_scenario, ScenarioOutput, SweepOutput, SweepPoint};
+pub use spec::{AlgorithmSpec, Scenario, TopologySpec};

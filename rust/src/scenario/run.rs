@@ -1,0 +1,268 @@
+//! Scenario execution: build the network and data model from a
+//! [`Scenario`], fan the Monte-Carlo realizations across the parallel
+//! runner, and write `results/<name>.{csv,json}`.
+//!
+//! Seeding mirrors the experiment drivers exactly: the master stream
+//! `Pcg64::new(seed, 0)` first builds the topology (geometric graphs
+//! consume it) and then the data model; realization `r` runs on stream
+//! `r + 1`. With ideal impairments this makes `paper-10-node` reproduce
+//! the `exp1` DCD trajectory bit-for-bit (tested).
+
+use crate::algorithms::NetworkConfig;
+use crate::config::IniDoc;
+use crate::coordinator::runner::MonteCarlo;
+use crate::datamodel::DataModel;
+use crate::metrics::{to_db, write_csv, write_json, Series};
+use crate::rng::Pcg64;
+use crate::topology::combination_matrix;
+
+use super::spec::Scenario;
+
+/// Everything one scenario run produces.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutput {
+    /// The (validated) scenario that ran.
+    pub scenario: Scenario,
+    /// MSD-vs-iteration series in dB (x = iteration index).
+    pub series: Vec<Series>,
+    /// Steady-state MSD estimate (dB, trailing 10 % of the mean trace).
+    pub steady_db: f64,
+    /// Mean scalars transmitted per realization (reflects gating).
+    pub scalars_per_run: f64,
+}
+
+/// One point of a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// The swept value, as given.
+    pub value: String,
+    /// Steady-state MSD at this value (dB).
+    pub steady_db: f64,
+    /// Mean scalars transmitted per realization at this value.
+    pub scalars_per_run: f64,
+}
+
+/// Everything one sweep produces.
+#[derive(Debug, Clone)]
+pub struct SweepOutput {
+    /// Summary per swept value, in input order.
+    pub points: Vec<SweepPoint>,
+    /// The per-value MSD traces (labelled `<key>=<value>`).
+    pub traces: Vec<Series>,
+}
+
+/// Run one scenario (validated first). With `out_dir` set, writes
+/// `<out_dir>/<name>.csv` and `<out_dir>/<name>.json`.
+pub fn run_scenario(
+    sc: &Scenario,
+    out_dir: Option<&str>,
+    quiet: bool,
+) -> Result<ScenarioOutput, String> {
+    sc.validate()?;
+    let n = sc.topology.n_nodes();
+    let mut rng = Pcg64::new(sc.seed, 0);
+    let graph = sc.topology.build(&mut rng);
+    let c = combination_matrix(&graph, sc.adapt_rule);
+    let a = combination_matrix(&graph, sc.combine_rule);
+    let model = DataModel::paper(n, sc.dim, sc.u2_min, sc.u2_max, sc.sigma_v2, &mut rng);
+    let net = NetworkConfig { graph, c, a, mu: vec![sc.mu; n], dim: sc.dim };
+    net.validate()?;
+
+    let record_every = sc.effective_record_every();
+    let mc = MonteCarlo {
+        runs: sc.runs,
+        iters: sc.iters,
+        seed: sc.seed,
+        record_every,
+        threads: sc.threads,
+    };
+    let imp = if sc.impairments.is_ideal() { None } else { Some(&sc.impairments) };
+    let res = mc.run_rust_with(&model, imp, || sc.algorithm.build(net.clone()));
+
+    let x: Vec<f64> = (1..=res.msd.len()).map(|i| (i * record_every) as f64).collect();
+    let y: Vec<f64> = res.msd.iter().map(|&v| to_db(v)).collect();
+    let series = vec![Series::new(format!("{} (sim)", sc.algorithm.name()), x, y)];
+    let steady_db = to_db(res.steady_state);
+    if !quiet {
+        println!(
+            "scenario {:<22} steady-state {:7.2} dB  scalars/run {:.0}  [drop {} gate {} quant {}]",
+            sc.name,
+            steady_db,
+            res.scalars_per_run,
+            sc.impairments.drop_prob,
+            sc.impairments.gating,
+            sc.impairments.quant_step,
+        );
+    }
+    if let Some(dir) = out_dir {
+        write_csv(format!("{dir}/{}.csv", sc.name), &series).map_err(|e| e.to_string())?;
+        write_json(
+            format!("{dir}/{}.json", sc.name),
+            &format!("scenario {}: {}", sc.name, sc.description),
+            &series,
+        )
+        .map_err(|e| e.to_string())?;
+        if !quiet {
+            println!("scenario {}: wrote {dir}/{}.csv and .json", sc.name, sc.name);
+        }
+    }
+    Ok(ScenarioOutput {
+        scenario: sc.clone(),
+        series,
+        steady_db,
+        scalars_per_run: res.scalars_per_run,
+    })
+}
+
+/// Sweep one dotted scenario key (e.g. `impairments.drop_prob`) over a
+/// list of values: each point re-parses the base scenario through the
+/// INI override layer, re-validates, and runs on the parallel runner.
+/// With `out_dir` set, writes `<out_dir>/<name>_sweep.csv` (steady-state
+/// summary) and `<out_dir>/<name>_sweep.json` (summary + full traces).
+pub fn sweep_scenario(
+    base: &Scenario,
+    key: &str,
+    values: &[String],
+    out_dir: Option<&str>,
+    quiet: bool,
+) -> Result<SweepOutput, String> {
+    if values.is_empty() {
+        return Err("scenario sweep: empty value list".into());
+    }
+    Scenario::check_key(key)?;
+    let mut points = Vec::with_capacity(values.len());
+    let mut traces = Vec::with_capacity(values.len());
+    for value in values {
+        let mut doc = IniDoc::parse(&base.to_ini_string())?;
+        doc.set_dotted(&format!("{key}={value}"))?;
+        let sc = Scenario::from_ini(&doc)?;
+        let out = run_scenario(&sc, None, true)?;
+        if !quiet {
+            println!(
+                "sweep {:<18} {key} = {value:<10} steady-state {:7.2} dB  scalars/run {:.0}",
+                base.name, out.steady_db, out.scalars_per_run
+            );
+        }
+        let mut trace = out.series.into_iter().next().expect("one series per run");
+        trace.label = format!("{key}={value}");
+        traces.push(trace);
+        points.push(SweepPoint {
+            value: value.clone(),
+            steady_db: out.steady_db,
+            scalars_per_run: out.scalars_per_run,
+        });
+    }
+
+    if let Some(dir) = out_dir {
+        // Summary CSV: x = swept value when numeric, else its index.
+        let xs: Vec<f64> = points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| p.value.parse::<f64>().unwrap_or(i as f64))
+            .collect();
+        let ys: Vec<f64> = points.iter().map(|p| p.steady_db).collect();
+        let summary = Series::new(format!("steady-state dB vs {key}"), xs, ys);
+        write_csv(format!("{dir}/{}_sweep.csv", base.name), &[summary.clone()])
+            .map_err(|e| e.to_string())?;
+        let mut all = vec![summary];
+        all.extend(traces.iter().cloned());
+        write_json(
+            format!("{dir}/{}_sweep.json", base.name),
+            &format!("scenario {} sweep over {key}", base.name),
+            &all,
+        )
+        .map_err(|e| e.to_string())?;
+        if !quiet {
+            println!(
+                "sweep {}: wrote {dir}/{}_sweep.csv and .json",
+                base.name, base.name
+            );
+        }
+    }
+    Ok(SweepOutput { points, traces })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builtins::find;
+    use super::*;
+
+    fn small(name: &str) -> Scenario {
+        let mut sc = find(name).unwrap();
+        sc.runs = 3;
+        sc.iters = 400;
+        sc.record_every = 1;
+        sc
+    }
+
+    #[test]
+    fn lossy_scenario_runs_and_converges() {
+        let sc = small("lossy-geometric");
+        let out = run_scenario(&sc, None, true).unwrap();
+        assert_eq!(out.series.len(), 1);
+        assert_eq!(out.series[0].y.len(), 400);
+        let y = &out.series[0].y;
+        assert!(y[399] < y[0], "no convergence: {} -> {}", y[0], y[399]);
+        assert!(out.scalars_per_run > 0.0);
+    }
+
+    #[test]
+    fn event_gating_spends_fewer_scalars_than_always_on() {
+        let sc = small("event-triggered-ring");
+        let gated = run_scenario(&sc, None, true).unwrap();
+        let mut always = sc.clone();
+        always.impairments = crate::coordinator::impairments::LinkImpairments::ideal();
+        let full = run_scenario(&always, None, true).unwrap();
+        assert!(
+            gated.scalars_per_run < full.scalars_per_run,
+            "gated {} >= full {}",
+            gated.scalars_per_run,
+            full.scalars_per_run
+        );
+    }
+
+    #[test]
+    fn sweep_over_drop_prob_degrades_monotonically_in_tendency() {
+        let sc = small("lossy-geometric");
+        let values: Vec<String> = ["0", "0.5"].iter().map(|s| s.to_string()).collect();
+        let out =
+            sweep_scenario(&sc, "impairments.drop_prob", &values, None, true).unwrap();
+        assert_eq!(out.points.len(), 2);
+        assert_eq!(out.traces.len(), 2);
+        assert!(
+            out.points[1].steady_db > out.points[0].steady_db,
+            "drop 0.5 {} dB <= drop 0 {} dB",
+            out.points[1].steady_db,
+            out.points[0].steady_db
+        );
+    }
+
+    #[test]
+    fn sweep_rejects_bad_overrides() {
+        let sc = small("lossy-geometric");
+        let vals = vec!["2.0".to_string()];
+        assert!(sweep_scenario(&sc, "impairments.drop_prob", &vals, None, true).is_err());
+        assert!(sweep_scenario(&sc, "nodot", &[], None, true).is_err());
+        // A typo'd key must error, not silently sweep nothing.
+        let vals = vec!["0.1".to_string()];
+        let err = sweep_scenario(&sc, "impairments.dropprob", &vals, None, true).unwrap_err();
+        assert!(err.contains("unknown scenario key"), "{err}");
+    }
+
+    #[test]
+    fn results_files_are_written() {
+        let dir = std::env::temp_dir().join("dcd_scenario_run_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let sc = small("quantized-dense");
+        let out_dir = dir.to_str().unwrap().to_string();
+        run_scenario(&sc, Some(&out_dir), true).unwrap();
+        assert!(dir.join("quantized-dense.csv").exists());
+        assert!(dir.join("quantized-dense.json").exists());
+        let doc = crate::jsonio::Json::parse(
+            &std::fs::read_to_string(dir.join("quantized-dense.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("series").as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

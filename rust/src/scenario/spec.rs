@@ -1,0 +1,615 @@
+//! The [`Scenario`] specification: a declarative, validated, INI
+//! round-trippable description of one experiment —
+//! topology × data model × algorithm × link impairments × schedule.
+
+use crate::algorithms::{Algorithm, Dcd, DiffusionLms, NetworkConfig, PartialDiffusion, Rcd};
+use crate::config::IniDoc;
+use crate::coordinator::impairments::{Gating, LinkImpairments};
+use crate::rng::Pcg64;
+use crate::topology::{Graph, Rule};
+
+/// Topology generator selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologySpec {
+    /// The paper's fixed 10-node network (Fig. 2 left).
+    Paper10,
+    /// Ring lattice: `n` nodes, each linked to `hops` nodes per side.
+    Ring {
+        /// Number of nodes.
+        n: usize,
+        /// Links per side (`hops = 0` is disconnected and rejected by
+        /// the validator).
+        hops: usize,
+    },
+    /// Random geometric graph on the unit square (stitched until
+    /// connected, like the Experiment 2/3 networks).
+    Geometric {
+        /// Number of nodes.
+        n: usize,
+        /// Connection radius.
+        radius: f64,
+    },
+}
+
+impl TopologySpec {
+    /// Number of nodes the generated graph will have.
+    pub fn n_nodes(&self) -> usize {
+        match self {
+            TopologySpec::Paper10 => 10,
+            TopologySpec::Ring { n, .. } | TopologySpec::Geometric { n, .. } => *n,
+        }
+    }
+
+    /// Instantiate the graph. Geometric topologies consume `rng` (the
+    /// scenario runner passes the master stream, exactly like exp2/exp3).
+    pub fn build(&self, rng: &mut Pcg64) -> Graph {
+        match self {
+            TopologySpec::Paper10 => Graph::paper_ten_node(),
+            TopologySpec::Ring { n, hops } => Graph::ring(*n, *hops),
+            TopologySpec::Geometric { n, radius } => Graph::random_geometric(*n, *radius, rng),
+        }
+    }
+}
+
+/// Algorithm selection plus its compression knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AlgorithmSpec {
+    /// Uncompressed ATC diffusion LMS (the 2L-per-link baseline).
+    DiffusionLms,
+    /// Compressed diffusion LMS: masked estimates, full gradients.
+    Cd {
+        /// Estimate entries shared per exchange.
+        m: usize,
+    },
+    /// Doubly-compressed diffusion LMS (the paper's Alg. 1).
+    Dcd {
+        /// Estimate entries shared per exchange.
+        m: usize,
+        /// Gradient entries shared per exchange.
+        m_grad: usize,
+    },
+    /// Reduced-communication diffusion LMS: poll a neighbour subset.
+    Rcd {
+        /// Neighbours polled per iteration.
+        m_links: usize,
+    },
+    /// Partial-diffusion LMS: masked intermediate estimates.
+    Partial {
+        /// Estimate entries shared per exchange.
+        m: usize,
+    },
+}
+
+impl AlgorithmSpec {
+    /// The registry name (also the `[algorithm] name` INI value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmSpec::DiffusionLms => "diffusion-lms",
+            AlgorithmSpec::Cd { .. } => "cd",
+            AlgorithmSpec::Dcd { .. } => "dcd",
+            AlgorithmSpec::Rcd { .. } => "rcd",
+            AlgorithmSpec::Partial { .. } => "partial",
+        }
+    }
+
+    /// Instantiate the algorithm on `net`.
+    pub fn build(&self, net: NetworkConfig) -> Box<dyn Algorithm> {
+        match self {
+            AlgorithmSpec::DiffusionLms => Box::new(DiffusionLms::new(net)),
+            AlgorithmSpec::Cd { m } => Box::new(Dcd::cd(net, *m)),
+            AlgorithmSpec::Dcd { m, m_grad } => Box::new(Dcd::new(net, *m, *m_grad)),
+            AlgorithmSpec::Rcd { m_links } => Box::new(Rcd::new(net, *m_links)),
+            AlgorithmSpec::Partial { m } => Box::new(PartialDiffusion::new(net, *m)),
+        }
+    }
+}
+
+/// One declarative experiment. Parse with [`Scenario::from_ini`] /
+/// [`Scenario::parse_str`], serialize with [`Scenario::to_ini_string`]
+/// (a lossless round-trip), check with [`Scenario::validate`], execute
+/// with [`super::run_scenario`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Registry name; also the `results/<name>.{csv,json}` stem.
+    pub name: String,
+    /// One-line human description (shown by `scenario list`).
+    pub description: String,
+    /// Network topology generator.
+    pub topology: TopologySpec,
+    /// Rule for the combine matrix A.
+    pub combine_rule: Rule,
+    /// Rule for the adapt matrix C (`identity` = no gradient exchange).
+    pub adapt_rule: Rule,
+    /// Parameter dimension L.
+    pub dim: usize,
+    /// Lower bound of the per-node regressor-variance range.
+    pub u2_min: f64,
+    /// Upper bound of the per-node regressor-variance range.
+    pub u2_max: f64,
+    /// Observation-noise variance σ²_v (all nodes).
+    pub sigma_v2: f64,
+    /// Algorithm and its compression knobs.
+    pub algorithm: AlgorithmSpec,
+    /// Step size μ (all nodes).
+    pub mu: f64,
+    /// Link-impairment model.
+    pub impairments: LinkImpairments,
+    /// Monte-Carlo realizations.
+    pub runs: usize,
+    /// Iterations per realization.
+    pub iters: usize,
+    /// Master seed (model/topology stream 0; run r uses stream r + 1).
+    pub seed: u64,
+    /// MSD recording stride; 0 = auto (`(iters / 2000).max(1)`, the
+    /// exp1 convention).
+    pub record_every: usize,
+    /// Worker threads (0 = auto, see `coordinator::runner`).
+    pub threads: usize,
+}
+
+impl Scenario {
+    /// A neutral base scenario: 10-node paper network, DCD (3, 1),
+    /// ideal links, exp1-style data model.
+    pub fn base(name: &str, description: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            description: description.to_string(),
+            topology: TopologySpec::Paper10,
+            combine_rule: Rule::Metropolis,
+            adapt_rule: Rule::Metropolis,
+            dim: 5,
+            u2_min: 0.8,
+            u2_max: 1.2,
+            sigma_v2: 1e-3,
+            algorithm: AlgorithmSpec::Dcd { m: 3, m_grad: 1 },
+            mu: 1e-2,
+            impairments: LinkImpairments::ideal(),
+            runs: 10,
+            iters: 4_000,
+            seed: 2024,
+            record_every: 0,
+            threads: 0,
+        }
+    }
+
+    /// Every `section.key` the scenario INI schema understands — the
+    /// whitelist behind [`Scenario::check_key`].
+    pub fn known_keys() -> &'static [&'static str] {
+        &[
+            "scenario.name",
+            "scenario.description",
+            "topology.kind",
+            "topology.n",
+            "topology.hops",
+            "topology.radius",
+            "topology.combine_rule",
+            "topology.adapt_rule",
+            "data.dim",
+            "data.u2_min",
+            "data.u2_max",
+            "data.sigma_v2",
+            "algorithm.name",
+            "algorithm.m",
+            "algorithm.m_grad",
+            "algorithm.m_links",
+            "algorithm.mu",
+            "impairments.drop_prob",
+            "impairments.gating",
+            "impairments.quant_step",
+            "schedule.runs",
+            "schedule.iters",
+            "schedule.seed",
+            "schedule.record_every",
+            "schedule.threads",
+        ]
+    }
+
+    /// Reject dotted override keys the schema does not understand —
+    /// without this, a typo like `impairments.dropprob` would silently
+    /// run the unmodified scenario for every sweep point.
+    pub fn check_key(dotted: &str) -> Result<(), String> {
+        if Self::known_keys().contains(&dotted) {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown scenario key {dotted:?}; known keys: {}",
+                Self::known_keys().join(", ")
+            ))
+        }
+    }
+
+    /// The recording stride actually used (resolves `record_every = 0`).
+    pub fn effective_record_every(&self) -> usize {
+        if self.record_every == 0 {
+            (self.iters / 2000).max(1)
+        } else {
+            self.record_every
+        }
+    }
+
+    /// Parse from INI text (see `to_ini_string` for the schema).
+    pub fn parse_str(src: &str) -> Result<Self, String> {
+        Self::from_ini(&IniDoc::parse(src)?)
+    }
+
+    /// Build a scenario from an INI document. Missing keys fall back to
+    /// the [`Scenario::base`] defaults; `[topology] kind` and
+    /// `[algorithm] name` select the variants.
+    pub fn from_ini(doc: &IniDoc) -> Result<Self, String> {
+        let mut sc = Self::base("unnamed", "");
+        if let Some(v) = doc.get("scenario", "name") {
+            sc.name = v.to_string();
+        }
+        if let Some(v) = doc.get("scenario", "description") {
+            sc.description = v.to_string();
+        }
+
+        // -- topology -----------------------------------------------------
+        let kind = doc.get("topology", "kind").unwrap_or("paper10");
+        sc.topology = match kind {
+            "paper10" => TopologySpec::Paper10,
+            "ring" => TopologySpec::Ring {
+                n: get_or(doc, "topology", "n", 10)?,
+                hops: get_or(doc, "topology", "hops", 1)?,
+            },
+            "geometric" => TopologySpec::Geometric {
+                n: get_or(doc, "topology", "n", 20)?,
+                radius: get_or(doc, "topology", "radius", 0.3)?,
+            },
+            other => {
+                return Err(format!(
+                    "topology.kind {other:?}: expected paper10 | ring | geometric"
+                ))
+            }
+        };
+        if let Some(v) = doc.get("topology", "combine_rule") {
+            sc.combine_rule = parse_rule(v)?;
+        }
+        if let Some(v) = doc.get("topology", "adapt_rule") {
+            sc.adapt_rule = parse_rule(v)?;
+        }
+
+        // -- data model ---------------------------------------------------
+        sc.dim = get_or(doc, "data", "dim", sc.dim)?;
+        sc.u2_min = get_or(doc, "data", "u2_min", sc.u2_min)?;
+        sc.u2_max = get_or(doc, "data", "u2_max", sc.u2_max)?;
+        sc.sigma_v2 = get_or(doc, "data", "sigma_v2", sc.sigma_v2)?;
+
+        // -- algorithm ----------------------------------------------------
+        let alg = doc.get("algorithm", "name").unwrap_or("dcd");
+        sc.algorithm = match alg {
+            "diffusion-lms" => AlgorithmSpec::DiffusionLms,
+            "cd" => AlgorithmSpec::Cd { m: get_or(doc, "algorithm", "m", 3)? },
+            "dcd" => AlgorithmSpec::Dcd {
+                m: get_or(doc, "algorithm", "m", 3)?,
+                m_grad: get_or(doc, "algorithm", "m_grad", 1)?,
+            },
+            "rcd" => AlgorithmSpec::Rcd { m_links: get_or(doc, "algorithm", "m_links", 1)? },
+            "partial" => AlgorithmSpec::Partial { m: get_or(doc, "algorithm", "m", 3)? },
+            other => {
+                return Err(format!(
+                    "algorithm.name {other:?}: expected diffusion-lms | cd | dcd | rcd | partial"
+                ))
+            }
+        };
+        sc.mu = get_or(doc, "algorithm", "mu", sc.mu)?;
+
+        // -- impairments --------------------------------------------------
+        sc.impairments.drop_prob = get_or(doc, "impairments", "drop_prob", 0.0)?;
+        if let Some(v) = doc.get("impairments", "gating") {
+            sc.impairments.gating = v.parse::<Gating>()?;
+        }
+        sc.impairments.quant_step = get_or(doc, "impairments", "quant_step", 0.0)?;
+
+        // -- schedule -----------------------------------------------------
+        sc.runs = get_or(doc, "schedule", "runs", sc.runs)?;
+        sc.iters = get_or(doc, "schedule", "iters", sc.iters)?;
+        sc.seed = get_or(doc, "schedule", "seed", sc.seed)?;
+        sc.record_every = get_or(doc, "schedule", "record_every", sc.record_every)?;
+        sc.threads = get_or(doc, "schedule", "threads", sc.threads)?;
+        Ok(sc)
+    }
+
+    /// Serialize as INI; `Scenario::parse_str(&sc.to_ini_string())`
+    /// reproduces `sc` exactly (round-trip tested).
+    pub fn to_ini_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str("[scenario]\n");
+        s.push_str(&format!("name = {}\n", self.name));
+        s.push_str(&format!("description = {}\n", self.description));
+        s.push_str("\n[topology]\n");
+        match &self.topology {
+            TopologySpec::Paper10 => s.push_str("kind = paper10\n"),
+            TopologySpec::Ring { n, hops } => {
+                s.push_str(&format!("kind = ring\nn = {n}\nhops = {hops}\n"));
+            }
+            TopologySpec::Geometric { n, radius } => {
+                s.push_str(&format!("kind = geometric\nn = {n}\nradius = {radius}\n"));
+            }
+        }
+        s.push_str(&format!("combine_rule = {}\n", rule_name(self.combine_rule)));
+        s.push_str(&format!("adapt_rule = {}\n", rule_name(self.adapt_rule)));
+        s.push_str("\n[data]\n");
+        s.push_str(&format!("dim = {}\n", self.dim));
+        s.push_str(&format!("u2_min = {}\n", self.u2_min));
+        s.push_str(&format!("u2_max = {}\n", self.u2_max));
+        s.push_str(&format!("sigma_v2 = {}\n", self.sigma_v2));
+        s.push_str("\n[algorithm]\n");
+        s.push_str(&format!("name = {}\n", self.algorithm.name()));
+        match &self.algorithm {
+            AlgorithmSpec::DiffusionLms => {}
+            AlgorithmSpec::Cd { m } | AlgorithmSpec::Partial { m } => {
+                s.push_str(&format!("m = {m}\n"));
+            }
+            AlgorithmSpec::Dcd { m, m_grad } => {
+                s.push_str(&format!("m = {m}\nm_grad = {m_grad}\n"));
+            }
+            AlgorithmSpec::Rcd { m_links } => {
+                s.push_str(&format!("m_links = {m_links}\n"));
+            }
+        }
+        s.push_str(&format!("mu = {}\n", self.mu));
+        s.push_str("\n[impairments]\n");
+        s.push_str(&format!("drop_prob = {}\n", self.impairments.drop_prob));
+        s.push_str(&format!("gating = {}\n", self.impairments.gating));
+        s.push_str(&format!("quant_step = {}\n", self.impairments.quant_step));
+        s.push_str("\n[schedule]\n");
+        s.push_str(&format!("runs = {}\n", self.runs));
+        s.push_str(&format!("iters = {}\n", self.iters));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("record_every = {}\n", self.record_every));
+        s.push_str(&format!("threads = {}\n", self.threads));
+        s
+    }
+
+    /// Full semantic validation: name usable as a file stem, connected
+    /// topology, algorithm knobs within the dimension, impairment ranges,
+    /// positive workload.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty()
+            || !self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(format!(
+                "scenario name {:?} must be non-empty [A-Za-z0-9_-] (it names the result files)",
+                self.name
+            ));
+        }
+        let n = self.topology.n_nodes();
+        if n < 2 {
+            return Err(format!("scenario {}: need at least 2 nodes", self.name));
+        }
+        if let TopologySpec::Geometric { radius, .. } = self.topology {
+            if !radius.is_finite() || radius <= 0.0 {
+                return Err(format!("scenario {}: radius {radius} must be > 0", self.name));
+            }
+        }
+        // Build the graph exactly as the runner will and check it is
+        // connected (e.g. a ring with hops = 0 is not).
+        let mut rng = Pcg64::new(self.seed, 0);
+        let graph = self.topology.build(&mut rng);
+        if !graph.is_connected() {
+            return Err(format!(
+                "scenario {}: generated topology is disconnected",
+                self.name
+            ));
+        }
+        if self.dim == 0 {
+            return Err(format!("scenario {}: dim must be >= 1", self.name));
+        }
+        if !(self.u2_min > 0.0 && self.u2_max >= self.u2_min) {
+            return Err(format!(
+                "scenario {}: need 0 < u2_min <= u2_max (got {} / {})",
+                self.name, self.u2_min, self.u2_max
+            ));
+        }
+        if !(self.sigma_v2 >= 0.0 && self.sigma_v2.is_finite()) {
+            return Err(format!("scenario {}: bad sigma_v2 {}", self.name, self.sigma_v2));
+        }
+        if !(self.mu > 0.0 && self.mu.is_finite()) {
+            return Err(format!("scenario {}: step size {} must be > 0", self.name, self.mu));
+        }
+        match self.algorithm {
+            AlgorithmSpec::DiffusionLms => {}
+            AlgorithmSpec::Cd { m } | AlgorithmSpec::Partial { m } => {
+                if m == 0 || m > self.dim {
+                    return Err(format!(
+                        "scenario {}: m = {m} outside 1..={}",
+                        self.name, self.dim
+                    ));
+                }
+            }
+            AlgorithmSpec::Dcd { m, m_grad } => {
+                if m == 0 || m > self.dim || m_grad == 0 || m_grad > self.dim {
+                    return Err(format!(
+                        "scenario {}: (m, m_grad) = ({m}, {m_grad}) outside 1..={}",
+                        self.name, self.dim
+                    ));
+                }
+            }
+            AlgorithmSpec::Rcd { m_links } => {
+                if m_links == 0 {
+                    return Err(format!("scenario {}: m_links must be >= 1", self.name));
+                }
+            }
+        }
+        self.impairments
+            .validate()
+            .map_err(|e| format!("scenario {}: {e}", self.name))?;
+        if self.runs == 0 || self.iters == 0 {
+            return Err(format!(
+                "scenario {}: runs and iters must be positive",
+                self.name
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn rule_name(r: Rule) -> &'static str {
+    match r {
+        Rule::Metropolis => "metropolis",
+        Rule::Uniform => "uniform",
+        Rule::Identity => "identity",
+    }
+}
+
+fn parse_rule(s: &str) -> Result<Rule, String> {
+    match s {
+        "metropolis" => Ok(Rule::Metropolis),
+        "uniform" => Ok(Rule::Uniform),
+        "identity" => Ok(Rule::Identity),
+        other => Err(format!(
+            "combination rule {other:?}: expected metropolis | uniform | identity"
+        )),
+    }
+}
+
+/// Typed lookup with default: absent key ⇒ `default`, unparsable ⇒ error.
+fn get_or<T: std::str::FromStr>(
+    doc: &IniDoc,
+    section: &str,
+    key: &str,
+    default: T,
+) -> Result<T, String>
+where
+    T::Err: std::fmt::Display,
+{
+    match doc.get(section, key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<T>()
+            .map_err(|e| format!("scenario config {section}.{key}: cannot parse {v:?}: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ini_roundtrip_is_lossless() {
+        let mut sc = Scenario::base("round-trip", "parse -> serialize -> parse");
+        sc.topology = TopologySpec::Geometric { n: 24, radius: 0.27 };
+        sc.combine_rule = Rule::Uniform;
+        sc.adapt_rule = Rule::Identity;
+        sc.dim = 7;
+        sc.u2_min = 0.5;
+        sc.u2_max = 1.5;
+        sc.sigma_v2 = 2e-3;
+        sc.algorithm = AlgorithmSpec::Rcd { m_links: 2 };
+        sc.mu = 0.025;
+        sc.impairments = LinkImpairments {
+            drop_prob: 0.15,
+            gating: Gating::EventTriggered(1e-6),
+            quant_step: 1e-4,
+        };
+        sc.runs = 7;
+        sc.iters = 1234;
+        sc.seed = 99;
+        sc.record_every = 3;
+        sc.threads = 2;
+        let text = sc.to_ini_string();
+        let back = Scenario::parse_str(&text).unwrap();
+        assert_eq!(back, sc);
+        // And once more through the serializer (fixed point).
+        assert_eq!(back.to_ini_string(), text);
+    }
+
+    #[test]
+    fn roundtrip_every_algorithm_and_topology() {
+        let algos = [
+            AlgorithmSpec::DiffusionLms,
+            AlgorithmSpec::Cd { m: 2 },
+            AlgorithmSpec::Dcd { m: 2, m_grad: 2 },
+            AlgorithmSpec::Rcd { m_links: 1 },
+            AlgorithmSpec::Partial { m: 2 },
+        ];
+        let topos = [
+            TopologySpec::Paper10,
+            TopologySpec::Ring { n: 12, hops: 2 },
+            TopologySpec::Geometric { n: 15, radius: 0.4 },
+        ];
+        for algo in &algos {
+            for topo in &topos {
+                let mut sc = Scenario::base("x", "");
+                sc.algorithm = algo.clone();
+                sc.topology = topo.clone();
+                let back = Scenario::parse_str(&sc.to_ini_string()).unwrap();
+                assert_eq!(back, sc, "{:?} / {:?}", algo, topo);
+            }
+        }
+    }
+
+    #[test]
+    fn validator_rejects_disconnected_graph() {
+        let mut sc = Scenario::base("disconnected", "");
+        sc.topology = TopologySpec::Ring { n: 6, hops: 0 };
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("disconnected"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_bad_drop_prob() {
+        let mut sc = Scenario::base("bad-drop", "");
+        sc.impairments.drop_prob = 1.5;
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("drop_prob"), "{err}");
+    }
+
+    #[test]
+    fn unknown_algorithm_is_an_error() {
+        let err = Scenario::parse_str("[algorithm]\nname = quantum-lms\n").unwrap_err();
+        assert!(err.contains("quantum-lms"), "{err}");
+        let err = Scenario::parse_str("[topology]\nkind = torus\n").unwrap_err();
+        assert!(err.contains("torus"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_bad_knobs() {
+        let mut sc = Scenario::base("bad", "");
+        sc.algorithm = AlgorithmSpec::Dcd { m: 9, m_grad: 1 }; // m > dim = 5
+        assert!(sc.validate().is_err());
+        let mut sc = Scenario::base("bad", "");
+        sc.mu = 0.0;
+        assert!(sc.validate().is_err());
+        let mut sc = Scenario::base("bad name!", "");
+        assert!(sc.validate().is_err());
+        let mut sc = Scenario::base("bad", "");
+        sc.runs = 0;
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn defaults_parse_from_minimal_ini() {
+        let sc = Scenario::parse_str("[scenario]\nname = tiny\n").unwrap();
+        assert_eq!(sc.name, "tiny");
+        assert_eq!(sc.topology, TopologySpec::Paper10);
+        assert_eq!(sc.algorithm, AlgorithmSpec::Dcd { m: 3, m_grad: 1 });
+        assert!(sc.impairments.is_ideal());
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn key_whitelist_catches_typos() {
+        assert!(Scenario::check_key("impairments.drop_prob").is_ok());
+        assert!(Scenario::check_key("schedule.iters").is_ok());
+        assert!(Scenario::check_key("impairments.dropprob").is_err());
+        assert!(Scenario::check_key("bogus.key").is_err());
+        assert!(Scenario::check_key("").is_err());
+    }
+
+    #[test]
+    fn effective_record_every_auto() {
+        let mut sc = Scenario::base("x", "");
+        sc.iters = 40_000;
+        sc.record_every = 0;
+        assert_eq!(sc.effective_record_every(), 20);
+        sc.iters = 500;
+        assert_eq!(sc.effective_record_every(), 1);
+        sc.record_every = 7;
+        assert_eq!(sc.effective_record_every(), 7);
+    }
+}

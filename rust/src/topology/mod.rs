@@ -35,6 +35,7 @@ impl Graph {
         Self { n, adj, positions: None }
     }
 
+    /// Number of nodes.
     pub fn n(&self) -> usize {
         self.n
     }
@@ -49,10 +50,12 @@ impl Graph {
         self.adj[k].len() + 1
     }
 
+    /// Number of undirected edges.
     pub fn edge_count(&self) -> usize {
         self.adj.iter().map(Vec::len).sum::<usize>() / 2
     }
 
+    /// Whether nodes `a` and `b` are linked.
     pub fn has_edge(&self, a: usize, b: usize) -> bool {
         self.adj[a].binary_search(&b).is_ok()
     }

@@ -30,7 +30,7 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_commands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for cmd in ["exp1", "exp2", "exp3", "theory", "validate", "info"] {
+    for cmd in ["exp1", "exp2", "exp3", "scenario", "theory", "validate", "info"] {
         assert!(text.contains(cmd), "help missing {cmd}:\n{text}");
     }
 }
@@ -87,6 +87,68 @@ fn exp1_fast_writes_results() {
     let csv = std::fs::read_to_string(dir.join("exp1_fig3_left.csv")).unwrap();
     assert!(csv.lines().next().unwrap().contains("dcd (theory)"));
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scenario_list_shows_the_registry() {
+    let (ok, text) = run(&["scenario", "list"]);
+    assert!(ok, "{text}");
+    for name in [
+        "paper-10-node",
+        "fifty-node-sweep",
+        "wsn-80",
+        "lossy-geometric",
+        "event-triggered-ring",
+        "quantized-dense",
+    ] {
+        assert!(text.contains(name), "scenario list missing {name}:\n{text}");
+    }
+}
+
+#[test]
+fn scenario_run_writes_results_thread_independent() {
+    let dir = std::env::temp_dir().join("dcd_cli_e2e_scenario");
+    std::fs::remove_dir_all(&dir).ok();
+    let run_with_threads = |threads: &str, sub: &str| {
+        let out = dir.join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let (ok, text) = run(&[
+            "scenario", "run", "--name", "lossy-geometric", "--seed", "7", "--fast",
+            "--threads", threads, "--out", &out_s, "--quiet",
+        ]);
+        assert!(ok, "{text}");
+        std::fs::read_to_string(out.join("lossy-geometric.csv")).unwrap()
+    };
+    let csv1 = run_with_threads("1", "t1");
+    let csv4 = run_with_threads("4", "t4");
+    assert_eq!(csv1, csv4, "scenario run is not thread-count invariant");
+    assert!(dir.join("t1/lossy-geometric.json").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scenario_sweep_writes_summary() {
+    let dir = std::env::temp_dir().join("dcd_cli_e2e_sweep");
+    std::fs::remove_dir_all(&dir).ok();
+    let out_s = dir.to_str().unwrap().to_string();
+    let (ok, text) = run(&[
+        "scenario", "sweep", "--name", "lossy-geometric", "--fast", "--quiet",
+        "--key", "impairments.drop_prob", "--values", "0,0.3", "--out", &out_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(dir.join("lossy-geometric_sweep.csv").exists());
+    assert!(dir.join("lossy-geometric_sweep.json").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scenario_rejects_unknown_name_and_action() {
+    let (ok, text) = run(&["scenario", "run", "--name", "no-such-thing"]);
+    assert!(!ok);
+    assert!(text.contains("unknown scenario"), "{text}");
+    let (ok, text) = run(&["scenario", "frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown scenario action"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,139 @@
+//! Documentation integrity: the DESIGN.md section citations sprinkled
+//! through the sources must resolve to real §-numbered headings, and
+//! relative markdown links must point at files that exist. This is the
+//! in-repo enforcement behind the CI markdown link-check
+//! (`tools/check_md_links.py` is the standalone face of the same rules).
+//!
+//! Note: the citation needle is assembled at runtime so this file does
+//! not match its own scanner.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .to_path_buf()
+}
+
+/// Directories never scanned (build output, vendored deps, VCS).
+const SKIP_DIRS: &[&str] = &[".git", "target", "vendor", "results", "artifacts", "__pycache__"];
+
+/// Recursively collect files under `dir` whose name passes `keep`.
+fn collect_files(dir: &Path, keep: &dyn Fn(&Path) -> bool, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if !SKIP_DIRS.contains(&name) {
+                collect_files(&path, keep, out);
+            }
+        } else if keep(&path) {
+            out.push(path);
+        }
+    }
+}
+
+/// Extract the token after a `§` sign: alphanumerics and dashes
+/// (`"2, S10"` → `"2"`, `"Hardware-Adaptation):"` → `"Hardware-Adaptation"`).
+fn section_token(after: &str) -> String {
+    after
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '-')
+        .collect()
+}
+
+#[test]
+fn design_md_section_citations_resolve() {
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md"))
+        .expect("DESIGN.md must exist at the repo root (cited throughout the sources)");
+
+    // Anchors: headings that contain a § token.
+    let mut anchors = Vec::new();
+    for line in design.lines() {
+        if !line.starts_with('#') {
+            continue;
+        }
+        if let Some((_, rest)) = line.split_once('§') {
+            let token = section_token(rest);
+            if !token.is_empty() {
+                anchors.push(token);
+            }
+        }
+    }
+    assert!(
+        anchors.len() >= 4,
+        "DESIGN.md has only {} §-numbered headings",
+        anchors.len()
+    );
+
+    // Citations: every "DESIGN.md §<token>" in the rust/python sources
+    // (the in-code contract; prose files may quote the pattern loosely).
+    let mut files = Vec::new();
+    let keep = |p: &Path| {
+        matches!(p.extension().and_then(|e| e.to_str()), Some("rs") | Some("py"))
+    };
+    collect_files(&root, &keep, &mut files);
+    assert!(files.len() > 20, "file walk looks broken: {} files", files.len());
+    let needle = format!("{}.md §", "DESIGN");
+    let mut checked = 0;
+    for file in &files {
+        let Ok(text) = fs::read_to_string(file) else { continue };
+        for (idx, _) in text.match_indices(&needle) {
+            let token = section_token(&text[idx + needle.len()..]);
+            assert!(
+                !token.is_empty() && anchors.iter().any(|a| *a == token),
+                "{}: section citation `§{token}` has no matching heading in DESIGN.md \
+                 (anchors: {anchors:?})",
+                file.display()
+            );
+            checked += 1;
+        }
+    }
+    // The repo is known to cite DESIGN.md from many modules; if this
+    // drops to zero the scanner (not the docs) broke.
+    assert!(checked >= 10, "only {checked} DESIGN.md § citations found");
+}
+
+#[test]
+fn relative_markdown_links_point_at_existing_files() {
+    let root = repo_root();
+    let mut files = Vec::new();
+    let keep = |p: &Path| p.extension().and_then(|e| e.to_str()) == Some("md");
+    collect_files(&root, &keep, &mut files);
+    assert!(!files.is_empty());
+    for file in &files {
+        let Ok(text) = fs::read_to_string(file) else { continue };
+        let dir = file.parent().unwrap();
+        for (idx, _) in text.match_indices("](") {
+            let rest = &text[idx + 2..];
+            let Some(end) = rest.find(')') else { continue };
+            let target = &rest[..end];
+            if target.is_empty()
+                || target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with('#')
+                || target.starts_with("mailto:")
+            {
+                continue;
+            }
+            let path_part = target.split('#').next().unwrap();
+            if path_part.is_empty() {
+                continue;
+            }
+            let resolved = dir.join(path_part);
+            assert!(
+                resolved.exists(),
+                "{}: markdown link `{target}` resolves to missing {}",
+                file.display(),
+                resolved.display()
+            );
+        }
+    }
+}

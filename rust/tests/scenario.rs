@@ -1,0 +1,75 @@
+//! Scenario-subsystem acceptance tests: thread-count bit-identity for
+//! impaired runs, and exact equivalence between the `paper-10-node`
+//! scenario and the Experiment 1 driver on ideal links.
+
+use dcd_lms::config::Exp1Config;
+use dcd_lms::experiments::{run_exp1, Engine};
+use dcd_lms::scenario::{self, Scenario};
+
+/// `scenario run --name lossy-geometric --seed 7` must be bit-identical
+/// at 1, 2 and 4 worker threads (the acceptance criterion; shrunk
+/// workload, same code path).
+#[test]
+fn lossy_geometric_bit_identical_across_thread_counts() {
+    let mut sc = scenario::find("lossy-geometric").expect("registry has lossy-geometric");
+    sc.seed = 7;
+    sc.runs = 6;
+    sc.iters = 500;
+    sc.record_every = 1;
+    sc.threads = 1;
+    let reference = scenario::run_scenario(&sc, None, true).unwrap();
+    for threads in [2usize, 4] {
+        let mut sct = sc.clone();
+        sct.threads = threads;
+        let out = scenario::run_scenario(&sct, None, true).unwrap();
+        assert_eq!(out.series[0].y, reference.series[0].y, "threads = {threads}");
+        assert_eq!(
+            out.steady_db.to_bits(),
+            reference.steady_db.to_bits(),
+            "threads = {threads}"
+        );
+        assert_eq!(
+            out.scalars_per_run.to_bits(),
+            reference.scalars_per_run.to_bits()
+        );
+    }
+}
+
+/// With ideal links (drop probability 0, no gating, no quantization) the
+/// `paper-10-node` scenario reproduces the exp1 DCD simulation
+/// trajectory exactly — same topology, model stream, Monte-Carlo seeds
+/// and recording grid.
+#[test]
+fn paper_scenario_matches_exp1_trajectory_exactly() {
+    let cfg = Exp1Config { runs: 4, iters: 2_000, ..Exp1Config::default() };
+    let exp1 = run_exp1(&cfg, Engine::Rust, None, true).unwrap();
+    let dcd_sim = exp1
+        .series
+        .iter()
+        .find(|s| s.label == "dcd (sim)")
+        .expect("exp1 emits a dcd (sim) series");
+
+    let mut sc: Scenario = scenario::find("paper-10-node").unwrap();
+    assert!(sc.impairments.is_ideal());
+    sc.runs = cfg.runs;
+    sc.iters = cfg.iters;
+    sc.record_every = 0; // auto — the exp1 convention
+    let out = scenario::run_scenario(&sc, None, true).unwrap();
+
+    assert_eq!(out.series[0].x, dcd_sim.x);
+    assert_eq!(out.series[0].y, dcd_sim.y, "scenario and exp1 trajectories diverge");
+}
+
+/// The scenario INI written by `to_ini_string` is a valid `--config`
+/// input that reproduces the same run (CLI contract).
+#[test]
+fn serialized_scenario_reruns_identically() {
+    let mut sc = scenario::find("quantized-dense").unwrap();
+    sc.runs = 3;
+    sc.iters = 300;
+    sc.record_every = 1;
+    let direct = scenario::run_scenario(&sc, None, true).unwrap();
+    let reparsed = Scenario::parse_str(&sc.to_ini_string()).unwrap();
+    let again = scenario::run_scenario(&reparsed, None, true).unwrap();
+    assert_eq!(direct.series[0].y, again.series[0].y);
+}

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Markdown link check + DESIGN.md section-citation check.
+
+Standalone CI face of rust/tests/docs_integrity.rs — the same two rules:
+
+1. Every relative link target in a *.md file must exist on disk.
+2. Every DESIGN.md section citation (a § token after the file name) in
+   the rust/python sources must resolve to a §-numbered heading there.
+
+Exit status 0 = clean, 1 = at least one dangling reference (all are
+listed). Run from anywhere: the repo root is located relative to this
+file.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", "target", "vendor", "results", "artifacts", "__pycache__"}
+
+LINK_RE = re.compile(r"\]\(([^)\s]+)\)")
+# '§' followed by alphanumerics/dashes.
+SECTION_RE = re.compile("DESIGN\\.md §([A-Za-z0-9-]+)")
+HEADING_RE = re.compile("^#+.*§([A-Za-z0-9-]+)", re.M)
+
+
+def walk(suffixes):
+    for path in sorted(ROOT.rglob("*")):
+        if path.is_dir():
+            continue
+        if any(part in SKIP_DIRS for part in path.relative_to(ROOT).parts):
+            continue
+        if path.suffix in suffixes:
+            yield path
+
+
+def check_md_links(errors):
+    for md in walk({".md"}):
+        text = md.read_text(encoding="utf-8", errors="replace")
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: dangling link -> {target}")
+
+
+def check_design_citations(errors):
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        errors.append("DESIGN.md missing at repo root (cited throughout the sources)")
+        return
+    anchors = set(HEADING_RE.findall(design.read_text(encoding="utf-8")))
+    if not anchors:
+        errors.append("DESIGN.md has no §-numbered headings")
+        return
+    me = Path(__file__).resolve()
+    for src in walk({".rs", ".py"}):
+        if src.resolve() == me:
+            continue
+        text = src.read_text(encoding="utf-8", errors="replace")
+        for token in SECTION_RE.findall(text):
+            if token not in anchors:
+                errors.append(
+                    f"{src.relative_to(ROOT)}: citation §{token} "
+                    f"has no heading in DESIGN.md (anchors: {sorted(anchors)})"
+                )
+
+
+def main():
+    errors = []
+    check_md_links(errors)
+    check_design_citations(errors)
+    if errors:
+        print("documentation integrity check FAILED:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("documentation integrity check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
