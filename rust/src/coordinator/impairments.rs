@@ -59,6 +59,21 @@ pub enum Gating {
     EventTriggered(f64),
 }
 
+impl Gating {
+    /// Per-iteration transmit probability, when the gate is a Bernoulli
+    /// process the closed-form impaired-link theory can average over
+    /// (DESIGN.md §7): [`Gating::Always`] → 1, [`Gating::Probabilistic`]
+    /// → p. Event-triggered gating depends on the trajectory itself and
+    /// has no fixed transmit probability — `None`.
+    pub fn transmit_prob(&self) -> Option<f64> {
+        match self {
+            Gating::Always => Some(1.0),
+            Gating::Probabilistic(p) => Some(*p),
+            Gating::EventTriggered(_) => None,
+        }
+    }
+}
+
 impl std::fmt::Display for Gating {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -124,6 +139,38 @@ impl LinkImpairments {
         self.drop_prob > 0.0 || self.gating != Gating::Always
     }
 
+    /// P that a directed link delivers its *combine* frame (transmitter
+    /// on the air and no erasure): `p_tx · (1 − p_drop)`. `None` under
+    /// event-triggered gating, which has no fixed transmit probability.
+    pub fn combine_keep_prob(&self) -> Option<f64> {
+        self.gating.transmit_prob().map(|p| p * (1.0 - self.drop_prob))
+    }
+
+    /// P that the *adapt* (solicited-gradient) exchange on a directed
+    /// link survives: the transmitter is on the air, the frame is
+    /// delivered, *and* the receiver solicited it by broadcasting its
+    /// own estimate — `p_tx² · (1 − p_drop)` (DESIGN.md §7). `None`
+    /// under event-triggered gating.
+    pub fn adapt_keep_prob(&self) -> Option<f64> {
+        self.gating.transmit_prob().map(|p| p * p * (1.0 - self.drop_prob))
+    }
+
+    /// Expected effective combiners `(Ā, C̄) = (E{A(i)}, E{C(i)})` under
+    /// the independent-Bernoulli link-state model: exactly the
+    /// per-iteration reallocation of [`ImpairmentState::begin_iteration`]
+    /// taken in expectation — surviving off-diagonal mass scaled by the
+    /// keep probability, the complement moved to the receiver's self
+    /// weight. These are the matrices the impaired-link theory engine
+    /// anchors on (DESIGN.md §7). `None` under event-triggered gating.
+    pub fn expected_combiners(&self, net: &NetworkConfig) -> Option<(Mat, Mat)> {
+        let pa = self.combine_keep_prob()?;
+        let pc = self.adapt_keep_prob()?;
+        Some((
+            reallocate_expected(&net.a, pa),
+            reallocate_expected(&net.c, pc),
+        ))
+    }
+
     /// Range checks for every knob.
     pub fn validate(&self) -> Result<(), String> {
         if !self.drop_prob.is_finite() || !(0.0..=1.0).contains(&self.drop_prob) {
@@ -159,6 +206,28 @@ impl Default for LinkImpairments {
     fn default() -> Self {
         Self::ideal()
     }
+}
+
+/// Scale every off-diagonal entry of `m` by `keep`, re-allocating the
+/// complement to the column's diagonal — the expected-value form of the
+/// per-iteration erasure reallocation (DESIGN.md §7). The single source
+/// of that rule in expectation: shared by
+/// [`LinkImpairments::expected_combiners`] and the theory engine's
+/// expected-combiner construction (`theory/linkstate.rs`).
+pub(crate) fn reallocate_expected(m: &Mat, keep: f64) -> Mat {
+    let n = m.cols();
+    let mut out = m.clone();
+    for k in 0..n {
+        for l in 0..n {
+            let v = m[(l, k)];
+            if l != k && v != 0.0 {
+                let moved = v * (1.0 - keep);
+                out[(l, k)] -= moved;
+                out[(k, k)] += moved;
+            }
+        }
+    }
+    out
 }
 
 /// Snap every entry of `w` to the uniform grid of step `step`
@@ -413,6 +482,60 @@ mod tests {
         };
         state.begin_iteration(&all_on, &mut alg, &mut comm);
         assert!(state.silent().iter().all(|&s| !s));
+    }
+
+    /// `expected_combiners` must be the Monte-Carlo average of the
+    /// effective matrices `begin_iteration` actually installs — the
+    /// closed form and the per-iteration rebuild are the same model.
+    #[test]
+    fn expected_combiners_match_realized_average() {
+        let cfg = net(5, 2);
+        let mut alg = Dcd::new(cfg.clone(), 1, 1);
+        let mut comm = CommMeter::new(5);
+        let imp = LinkImpairments {
+            drop_prob: 0.25,
+            gating: Gating::Probabilistic(0.8),
+            quant_step: 0.0,
+        };
+        let (a_bar, c_bar) = imp.expected_combiners(&cfg).unwrap();
+        let mut state = ImpairmentState::new(alg.network(), 13, 1);
+        let trials = 60_000;
+        let mut a_acc = crate::linalg::Mat::zeros(5, 5);
+        let mut c_acc = crate::linalg::Mat::zeros(5, 5);
+        for _ in 0..trials {
+            state.begin_iteration(&imp, &mut alg, &mut comm);
+            a_acc.axpy(1.0, &alg.network().a);
+            c_acc.axpy(1.0, &alg.network().c);
+        }
+        a_acc.scale_in_place(1.0 / trials as f64);
+        c_acc.scale_in_place(1.0 / trials as f64);
+        assert!((&a_acc - &a_bar).max_abs() < 6e-3, "Ā off by {}", (&a_acc - &a_bar).max_abs());
+        assert!((&c_acc - &c_bar).max_abs() < 6e-3, "C̄ off by {}", (&c_acc - &c_bar).max_abs());
+        state.restore(&mut alg, &mut comm);
+        // Event-triggered gating has no closed form.
+        let ev = LinkImpairments {
+            drop_prob: 0.1,
+            gating: Gating::EventTriggered(1e-6),
+            quant_step: 0.0,
+        };
+        assert!(ev.expected_combiners(&cfg).is_none());
+        assert_eq!(ev.gating.transmit_prob(), None);
+        // Ideal impairments leave the combiners bit-identical.
+        let (a_id, c_id) = LinkImpairments::ideal().expected_combiners(&cfg).unwrap();
+        assert_eq!(a_id, cfg.a);
+        assert_eq!(c_id, cfg.c);
+    }
+
+    #[test]
+    fn keep_probabilities() {
+        let imp = LinkImpairments {
+            drop_prob: 0.2,
+            gating: Gating::Probabilistic(0.5),
+            quant_step: 0.0,
+        };
+        assert!((imp.combine_keep_prob().unwrap() - 0.5 * 0.8).abs() < 1e-15);
+        assert!((imp.adapt_keep_prob().unwrap() - 0.25 * 0.8).abs() < 1e-15);
+        assert_eq!(Gating::Always.transmit_prob(), Some(1.0));
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Experiment 4 (beyond the paper): predicted vs simulated steady-state
+//! MSD as a function of the per-link drop probability — the impaired
+//! analogue of exp1's theory-vs-simulation anchoring (DESIGN.md §7).
+//!
+//! For each swept drop probability the driver runs the base scenario's
+//! Monte-Carlo simulation *and* the closed-form [`ImpairedMsdModel`]
+//! (through the scenario runner's theory column), then writes the two
+//! steady-state curves to `results/exp4_theory_impaired.{csv,json}`.
+//! The base scenario must be inside the analysis scope — the default,
+//! `lossy-geometric`, is built for exactly this.
+//!
+//! [`ImpairedMsdModel`]: crate::theory::ImpairedMsdModel
+
+use crate::metrics::{write_csv, write_json, Series};
+use crate::scenario::{find, run_scenario, theory_scope};
+use anyhow::{anyhow, Result};
+
+/// Configuration of the drop-probability sweep.
+#[derive(Debug, Clone)]
+pub struct Exp4Config {
+    /// Base scenario name from the registry (its own `drop_prob` is
+    /// overridden per sweep point).
+    pub scenario: String,
+    /// Drop probabilities to sweep, in plot order.
+    pub drop_probs: Vec<f64>,
+    /// Monte-Carlo runs per point (0 = the scenario's own schedule).
+    pub runs: usize,
+    /// Iterations per realization (0 = the scenario's own schedule).
+    pub iters: usize,
+    /// Master seed override (`None` = the scenario's own seed).
+    pub seed: Option<u64>,
+}
+
+impl Default for Exp4Config {
+    fn default() -> Self {
+        Self {
+            scenario: "lossy-geometric".to_string(),
+            drop_probs: vec![0.0, 0.05, 0.1, 0.2, 0.3, 0.4],
+            runs: 0,
+            iters: 0,
+            seed: None,
+        }
+    }
+}
+
+/// One sweep point: predicted and simulated steady-state MSD.
+#[derive(Debug, Clone)]
+pub struct Exp4Point {
+    /// The swept per-link drop probability.
+    pub drop_prob: f64,
+    /// Closed-form steady-state MSD prediction (dB).
+    pub theory_db: f64,
+    /// Monte-Carlo steady-state MSD estimate (dB).
+    pub sim_db: f64,
+}
+
+/// Everything the sweep produces.
+#[derive(Debug, Clone)]
+pub struct Exp4Output {
+    /// Per-point summary, in sweep order.
+    pub points: Vec<Exp4Point>,
+    /// The two steady-state curves (theory, sim) over drop probability.
+    pub series: Vec<Series>,
+}
+
+/// Run the predicted-vs-simulated drop-probability sweep. With
+/// `out_dir` set, writes `<out_dir>/exp4_theory_impaired.{csv,json}`.
+pub fn run_exp4(cfg: &Exp4Config, out_dir: Option<&str>, quiet: bool) -> Result<Exp4Output> {
+    if cfg.drop_probs.is_empty() {
+        return Err(anyhow!("exp4: empty drop-probability list"));
+    }
+    let base = find(&cfg.scenario).ok_or_else(|| {
+        anyhow!(
+            "exp4: unknown scenario {:?} (run `scenario list` for the registry)",
+            cfg.scenario
+        )
+    })?;
+    // Fail fast on an out-of-scope base scenario — before spending a
+    // full Monte-Carlo run discovering the missing theory column.
+    theory_scope(&base).map_err(|why| {
+        anyhow!(
+            "exp4: scenario {:?} is outside the impaired-theory scope ({why}; \
+             see DESIGN.md §7)",
+            cfg.scenario
+        )
+    })?;
+    let mut points = Vec::with_capacity(cfg.drop_probs.len());
+    for &p in &cfg.drop_probs {
+        let mut sc = base.clone();
+        sc.impairments.drop_prob = p;
+        if cfg.runs > 0 {
+            sc.runs = cfg.runs;
+        }
+        if cfg.iters > 0 {
+            sc.iters = cfg.iters;
+        }
+        if let Some(seed) = cfg.seed {
+            sc.seed = seed;
+        }
+        let out = run_scenario(&sc, None, true).map_err(anyhow::Error::msg)?;
+        let theory_db = out.theory_steady_db.ok_or_else(|| {
+            anyhow!(
+                "exp4: scenario {:?} is outside the impaired-theory scope \
+                 (needs combine_rule = identity, a DCD-family algorithm and \
+                 non-event gating; see DESIGN.md §7)",
+                sc.name
+            )
+        })?;
+        if !quiet {
+            println!(
+                "exp4 drop {p:<5} theory {theory_db:7.2} dB  sim {:7.2} dB  (|gap| {:.2} dB)",
+                out.steady_db,
+                (theory_db - out.steady_db).abs()
+            );
+        }
+        points.push(Exp4Point { drop_prob: p, theory_db, sim_db: out.steady_db });
+    }
+
+    let x: Vec<f64> = points.iter().map(|pt| pt.drop_prob).collect();
+    let ty: Vec<f64> = points.iter().map(|pt| pt.theory_db).collect();
+    let sy: Vec<f64> = points.iter().map(|pt| pt.sim_db).collect();
+    let series = vec![
+        Series::new("steady-state MSD dB (theory)", x.clone(), ty),
+        Series::new("steady-state MSD dB (sim)", x, sy),
+    ];
+    if let Some(dir) = out_dir {
+        write_csv(format!("{dir}/exp4_theory_impaired.csv"), &series)?;
+        write_json(
+            format!("{dir}/exp4_theory_impaired.json"),
+            &format!(
+                "Exp 4: predicted vs simulated steady-state MSD under per-link \
+                 drops ({} base scenario)",
+                cfg.scenario
+            ),
+            &series,
+        )?;
+        if !quiet {
+            println!("exp4: wrote {dir}/exp4_theory_impaired.csv and .json");
+        }
+    }
+    Ok(Exp4Output { points, series })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shrunk end-to-end sweep: two points, theory column present, both
+    /// curves rise with the drop probability and track each other. The
+    /// horizon must clear the ≈140-iteration time constant by a wide
+    /// margin so steady-state estimates are not transient artefacts.
+    #[test]
+    fn sweep_produces_tracking_curves() {
+        let cfg = Exp4Config {
+            drop_probs: vec![0.0, 0.4],
+            runs: 6,
+            iters: 2_000,
+            ..Exp4Config::default()
+        };
+        let out = run_exp4(&cfg, None, true).unwrap();
+        assert_eq!(out.points.len(), 2);
+        assert_eq!(out.series.len(), 2);
+        for pt in &out.points {
+            assert!(pt.theory_db.is_finite() && pt.sim_db.is_finite());
+            assert!(
+                (pt.theory_db - pt.sim_db).abs() < 3.0,
+                "drop {}: theory {} dB vs sim {} dB",
+                pt.drop_prob,
+                pt.theory_db,
+                pt.sim_db
+            );
+        }
+        assert!(
+            out.points[1].sim_db > out.points[0].sim_db,
+            "drops should raise the simulated floor"
+        );
+        assert!(
+            out.points[1].theory_db > out.points[0].theory_db,
+            "drops should raise the predicted floor"
+        );
+    }
+
+    #[test]
+    fn bad_configs_error() {
+        let empty = Exp4Config { drop_probs: vec![], ..Exp4Config::default() };
+        assert!(run_exp4(&empty, None, true).is_err());
+        let unknown = Exp4Config {
+            scenario: "no-such-scenario".to_string(),
+            ..Exp4Config::default()
+        };
+        assert!(run_exp4(&unknown, None, true).is_err());
+        // A scenario outside the theory scope is rejected with a
+        // pointer at the analysis assumptions.
+        let out_of_scope = Exp4Config {
+            scenario: "event-triggered-ring".to_string(),
+            drop_probs: vec![0.1],
+            runs: 2,
+            iters: 50,
+            ..Exp4Config::default()
+        };
+        let err = run_exp4(&out_of_scope, None, true).unwrap_err().to_string();
+        assert!(err.contains("scope"), "{err}");
+    }
+}

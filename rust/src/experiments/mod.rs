@@ -7,6 +7,9 @@
 //!   ratio for CD and DCD on the 50-node / L = 50 network.
 //! * [`exp3`] — Fig. 4: the 80-node energy-harvesting WSN (sleep/harvest
 //!   telemetry + MSD-vs-time for all five algorithms, Tables I/II).
+//! * [`exp4`] — beyond the paper: predicted vs simulated steady-state
+//!   MSD under per-link drops (the impaired-link theory of DESIGN.md §7
+//!   against the scenario runner's Monte-Carlo).
 //!
 //! Each driver writes `results/<name>.csv` + `.json` and returns the
 //! series so tests/benches can assert on them.
@@ -14,10 +17,12 @@
 pub mod exp1;
 pub mod exp2;
 pub mod exp3;
+pub mod exp4;
 
 pub use exp1::{run_exp1, Exp1Output};
 pub use exp2::{run_exp2, Exp2Output};
 pub use exp3::{run_exp3, Exp3Output};
+pub use exp4::{run_exp4, Exp4Config, Exp4Output, Exp4Point};
 
 /// Execution engine selection for the synchronous experiments.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

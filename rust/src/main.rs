@@ -4,10 +4,11 @@
 //! dcd-lms exp1 [--engine rust|xla] [--runs N] [--iters N] [--out DIR] ...
 //! dcd-lms exp2 [--engine rust|xla] ...
 //! dcd-lms exp3 [--fast] ...
+//! dcd-lms exp4 [--name SCENARIO] [--values P1,P2,...]  # theory vs sim, lossy links
 //! dcd-lms scenario list                     # built-in scenario registry
 //! dcd-lms scenario run --name NAME [...]    # one declarative scenario
 //! dcd-lms scenario sweep --name NAME --key K --values V1,V2,...
-//! dcd-lms theory  --m M --m-grad MG [...]   # stability + steady state
+//! dcd-lms theory  --m M --m-grad MG [--drop-prob P] [...]  # stability + steady state
 //! dcd-lms validate                          # rust engine ≡ xla engine
 //! dcd-lms info                              # artifact manifest
 //! ```
@@ -15,12 +16,13 @@
 use anyhow::{anyhow, Result};
 use dcd_lms::cli::{App, Command, ParsedArgs};
 use dcd_lms::config::{Exp1Config, Exp2Config, Exp3Config, IniDoc};
-use dcd_lms::experiments::{run_exp1, run_exp2, run_exp3, Engine};
+use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::experiments::{run_exp1, run_exp2, run_exp3, run_exp4, Engine, Exp4Config};
 use dcd_lms::linalg::Mat;
 use dcd_lms::metrics::to_db;
 use dcd_lms::rng::Pcg64;
 use dcd_lms::runtime::Runtime;
-use dcd_lms::theory::{MeanModel, MsdModel, TheorySetup};
+use dcd_lms::theory::{ImpairedMsdModel, MeanModel, MsdModel, TheorySetup};
 use dcd_lms::topology::{combination_matrix, Graph, Rule};
 
 fn main() {
@@ -70,6 +72,17 @@ fn build_app() -> App {
             ),
             common(
                 Command::new(
+                    "exp4",
+                    "theory vs simulation under impaired links (drop-probability sweep)",
+                )
+                .opt("name", "base scenario, must be theory-anchored (default lossy-geometric)")
+                .opt("values", "comma-separated drop probabilities to sweep")
+                .opt("runs", "Monte-Carlo runs per point (default: scenario schedule)")
+                .opt("iters", "iterations per realization (default: scenario schedule)")
+                .opt("seed", "master seed override"),
+            ),
+            common(
+                Command::new(
                     "scenario",
                     "declarative scenarios (impaired/async networks): list | run | sweep",
                 )
@@ -87,7 +100,10 @@ fn build_app() -> App {
                 .opt("m", "shared estimate entries M (default 3)")
                 .opt("m-grad", "shared gradient entries M_grad (default 1)")
                 .opt("mu", "step size (default 1e-3)")
-                .opt("iters", "trajectory length (default 20000)"),
+                .opt("iters", "trajectory length (default 20000)")
+                .opt("drop-prob", "per-link drop probability for the impaired model (default 0)")
+                .opt("gate-prob", "per-node transmit probability (default: always on)")
+                .opt("quant-step", "quantizer step for the impaired noise floor (default 0)"),
             Command::new("validate", "drive rust and xla engines with identical inputs")
                 .opt("config", "artifact shape config (default smoke)"),
             Command::new("info", "print artifact manifest and build info"),
@@ -179,6 +195,37 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
                 cfg.duration = d;
             }
             run_exp3(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
+            Ok(())
+        }
+        "exp4" => {
+            let mut cfg = Exp4Config::default();
+            if let Some(name) = args.get("name") {
+                cfg.scenario = name.to_string();
+            }
+            if args.flag("fast") {
+                cfg.drop_probs = vec![0.0, 0.1, 0.3];
+                cfg.runs = 3;
+                cfg.iters = 800;
+            }
+            if let Some(values) = args.get("values") {
+                cfg.drop_probs = values
+                    .split(',')
+                    .map(|v| v.trim())
+                    .filter(|v| !v.is_empty())
+                    .map(|v| {
+                        v.parse::<f64>()
+                            .map_err(|e| anyhow!("exp4 --values {v:?}: {e}"))
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+            }
+            if let Some(r) = args.get_parse::<usize>("runs").map_err(anyhow::Error::msg)? {
+                cfg.runs = r;
+            }
+            if let Some(i) = args.get_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
+                cfg.iters = i;
+            }
+            cfg.seed = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)?;
+            run_exp4(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
             Ok(())
         }
         "scenario" => cmd_scenario(args),
@@ -316,12 +363,45 @@ fn cmd_theory(args: &ParsedArgs) -> Result<()> {
     let bounds = mean.paper_mu_bounds();
     let min_bound = bounds.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("paper step-size bound (38)-(39): μ < {min_bound:.4} (tightest node)");
-    let msd = MsdModel::new(setup);
+    let msd = MsdModel::new(setup.clone());
     let (ss, used) = msd.steady_state(&model.wo, 1e-10, iters);
     println!(
         "theoretical steady-state MSD: {:.2} dB (converged in {used} iterations)",
         to_db(ss)
     );
+
+    // Impaired-link model (DESIGN.md §7) when any impairment knob is set.
+    let drop_prob: f64 = args.get_or("drop-prob", 0.0).map_err(anyhow::Error::msg)?;
+    let gate_prob = args.get_parse::<f64>("gate-prob").map_err(anyhow::Error::msg)?;
+    let quant_step: f64 = args.get_or("quant-step", 0.0).map_err(anyhow::Error::msg)?;
+    // `!= 0.0` (not `> 0.0`) so negative typos reach validate() and
+    // error instead of silently printing only the ideal numbers.
+    if drop_prob != 0.0 || gate_prob.is_some() || quant_step != 0.0 {
+        let imp = LinkImpairments {
+            drop_prob,
+            gating: match gate_prob {
+                Some(p) => Gating::Probabilistic(p),
+                None => Gating::Always,
+            },
+            quant_step,
+        };
+        let impaired = ImpairedMsdModel::new(setup, &imp).map_err(anyhow::Error::msg)?;
+        println!(
+            "impaired links [drop {} gate {} quant {}]:",
+            imp.drop_prob, imp.gating, imp.quant_step
+        );
+        println!(
+            "  ρ(𝓑̄) = {:.6}  (mean-stable: {})",
+            impaired.mean_rho(),
+            impaired.is_mean_stable()
+        );
+        let (ss_i, used_i) = impaired.steady_state(&model.wo, 1e-10, iters);
+        println!(
+            "  steady-state MSD: {:.2} dB (converged in {used_i} iterations, {:+.2} dB vs ideal)",
+            to_db(ss_i),
+            to_db(ss_i) - to_db(ss)
+        );
+    }
     Ok(())
 }
 

@@ -17,15 +17,22 @@
 //! * [`run_scenario`] / [`sweep_scenario`] — execution on the parallel
 //!   Monte-Carlo runner with the link-impairment layer
 //!   ([`crate::coordinator::impairments`]) wrapped around every
-//!   iteration; results land in `results/<name>.{csv,json}`.
+//!   iteration; results land in `results/<name>.{csv,json}`. Scenarios
+//!   inside the impaired-link analysis scope (DESIGN.md §7) also emit a
+//!   closed-form theory column next to the Monte-Carlo curve, the way
+//!   exp1 anchors the ideal setting.
 //!
 //! CLI face: `dcd-lms scenario list | run | sweep` (see the README's
-//! scenario section for a tour).
+//! scenario section for a tour); `dcd-lms exp4` sweeps the drop
+//! probability of a theory-anchored scenario and plots predicted vs
+//! simulated steady-state MSD.
 
 mod builtins;
 mod run;
 mod spec;
 
 pub use builtins::{builtins, find};
-pub use run::{run_scenario, sweep_scenario, ScenarioOutput, SweepOutput, SweepPoint};
+pub use run::{
+    run_scenario, sweep_scenario, theory_scope, ScenarioOutput, SweepOutput, SweepPoint,
+};
 pub use spec::{AlgorithmSpec, Scenario, TopologySpec};

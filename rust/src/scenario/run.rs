@@ -7,6 +7,11 @@
 //! consume it) and then the data model; realization `r` runs on stream
 //! `r + 1`. With ideal impairments this makes `paper-10-node` reproduce
 //! the `exp1` DCD trajectory bit-for-bit (tested).
+//!
+//! Scenarios inside the analysis scope of DESIGN.md §7 additionally get
+//! a closed-form **theory column** ([`ImpairedMsdModel`]) next to the
+//! Monte-Carlo curve — the impaired analogue of exp1's theory-vs-sim
+//! anchoring; see [`ScenarioOutput::theory_steady_db`].
 
 use crate::algorithms::NetworkConfig;
 use crate::config::IniDoc;
@@ -14,19 +19,31 @@ use crate::coordinator::runner::MonteCarlo;
 use crate::datamodel::DataModel;
 use crate::metrics::{to_db, write_csv, write_json, Series};
 use crate::rng::Pcg64;
-use crate::topology::combination_matrix;
+use crate::theory::{ImpairedMsdModel, TheorySetup};
+use crate::topology::{combination_matrix, Rule};
 
 use super::spec::Scenario;
+
+/// Upper bound on N·L for the automatic theory column: one application
+/// of the variance operator costs O((NL)³), so big sweeps (e.g. the
+/// N = 50, L = 50 exp2 network) would dwarf the simulation itself.
+const MAX_THEORY_NL: usize = 256;
 
 /// Everything one scenario run produces.
 #[derive(Debug, Clone)]
 pub struct ScenarioOutput {
     /// The (validated) scenario that ran.
     pub scenario: Scenario,
-    /// MSD-vs-iteration series in dB (x = iteration index).
+    /// MSD-vs-iteration series in dB (x = iteration index). The
+    /// simulation curve is always `series[0]`; scenarios inside the
+    /// DESIGN.md §7 analysis scope get a `… (theory)` series after it.
     pub series: Vec<Series>,
     /// Steady-state MSD estimate (dB, trailing 10 % of the mean trace).
     pub steady_db: f64,
+    /// Theoretical steady-state MSD (dB) from the impaired-link model,
+    /// when the scenario is inside the analysis scope (`A = I`,
+    /// DCD-family algorithm, non-event gating, N·L within the cap).
+    pub theory_steady_db: Option<f64>,
     /// Mean scalars transmitted per realization (reflects gating).
     pub scalars_per_run: f64,
 }
@@ -38,6 +55,8 @@ pub struct SweepPoint {
     pub value: String,
     /// Steady-state MSD at this value (dB).
     pub steady_db: f64,
+    /// Theoretical steady-state MSD (dB), when in analysis scope.
+    pub theory_db: Option<f64>,
     /// Mean scalars transmitted per realization at this value.
     pub scalars_per_run: f64,
 }
@@ -49,6 +68,59 @@ pub struct SweepOutput {
     pub points: Vec<SweepPoint>,
     /// The per-value MSD traces (labelled `<key>=<value>`).
     pub traces: Vec<Series>,
+}
+
+/// Cheap scope check for the theory column, *without* building data or
+/// models: `Err` is the human-readable reason a scenario has no
+/// closed-form anchor. The analysis scope (DESIGN.md §7): the paper's
+/// `A = I` setting (`combine_rule = identity`), a DCD-family algorithm,
+/// Bernoulli-representable gating, and a network small enough for the
+/// O((NL)³) recursion. (A non-doubly-stochastic adapt combiner is only
+/// caught later, by `TheorySetup::validate` on the built matrix.)
+pub fn theory_scope(sc: &Scenario) -> Result<(usize, usize), String> {
+    let masks = sc
+        .algorithm
+        .theory_masks(sc.dim)
+        .ok_or_else(|| format!("no closed-form model for algorithm {}", sc.algorithm.name()))?;
+    if sc.combine_rule != Rule::Identity {
+        return Err("analysis assumes A = I (combine_rule = identity)".into());
+    }
+    if sc.impairments.gating.transmit_prob().is_none() {
+        return Err(format!(
+            "gating {} is state-dependent and has no closed-form link-state distribution",
+            sc.impairments.gating
+        ));
+    }
+    let n = sc.topology.n_nodes();
+    if n * sc.dim > MAX_THEORY_NL {
+        return Err(format!(
+            "N·L = {} exceeds the theory-column cap {MAX_THEORY_NL}",
+            n * sc.dim
+        ));
+    }
+    Ok(masks)
+}
+
+/// Build the impaired-link theory anchor for a scenario, or explain why
+/// it has none (see [`theory_scope`]).
+fn theory_anchor(
+    sc: &Scenario,
+    model: &DataModel,
+    c: &crate::linalg::Mat,
+) -> Result<ImpairedMsdModel, String> {
+    let (m, m_grad) = theory_scope(sc)?;
+    let n = sc.topology.n_nodes();
+    let setup = TheorySetup {
+        n_nodes: n,
+        dim: sc.dim,
+        m,
+        m_grad,
+        c: c.clone(),
+        mu: vec![sc.mu; n],
+        sigma_u2: model.sigma_u2.clone(),
+        sigma_v2: model.sigma_v2.clone(),
+    };
+    ImpairedMsdModel::new(setup, &sc.impairments)
 }
 
 /// Run one scenario (validated first). With `out_dir` set, writes
@@ -81,13 +153,43 @@ pub fn run_scenario(
 
     let x: Vec<f64> = (1..=res.msd.len()).map(|i| (i * record_every) as f64).collect();
     let y: Vec<f64> = res.msd.iter().map(|&v| to_db(v)).collect();
-    let series = vec![Series::new(format!("{} (sim)", sc.algorithm.name()), x, y)];
+    let mut series = vec![Series::new(format!("{} (sim)", sc.algorithm.name()), x.clone(), y)];
     let steady_db = to_db(res.steady_state);
+
+    // Theory column (exp1-style anchoring for impaired scenarios).
+    let mut theory_steady_db = None;
+    match theory_anchor(sc, &model, &net.c) {
+        Ok(theory) => {
+            let tr = theory.trajectory(&model.wo, sc.iters);
+            let ty: Vec<f64> = tr
+                .msd
+                .iter()
+                .skip(record_every - 1)
+                .step_by(record_every)
+                .map(|&v| to_db(v))
+                .collect();
+            debug_assert_eq!(ty.len(), x.len());
+            series.push(Series::new(format!("{} (theory)", sc.algorithm.name()), x, ty));
+            theory_steady_db = Some(to_db(tr.steady_state));
+        }
+        Err(why) => {
+            if !quiet {
+                println!("scenario {}: no theory column ({why})", sc.name);
+            }
+        }
+    }
+
     if !quiet {
+        let theory = match theory_steady_db {
+            Some(t) => format!("  theory {t:7.2} dB"),
+            None => String::new(),
+        };
         println!(
-            "scenario {:<22} steady-state {:7.2} dB  scalars/run {:.0}  [drop {} gate {} quant {}]",
+            "scenario {:<22} steady-state {:7.2} dB{}  scalars/run {:.0}  \
+             [drop {} gate {} quant {}]",
             sc.name,
             steady_db,
+            theory,
             res.scalars_per_run,
             sc.impairments.drop_prob,
             sc.impairments.gating,
@@ -110,6 +212,7 @@ pub fn run_scenario(
         scenario: sc.clone(),
         series,
         steady_db,
+        theory_steady_db,
         scalars_per_run: res.scalars_per_run,
     })
 }
@@ -138,33 +241,51 @@ pub fn sweep_scenario(
         let sc = Scenario::from_ini(&doc)?;
         let out = run_scenario(&sc, None, true)?;
         if !quiet {
+            let theory = match out.theory_steady_db {
+                Some(t) => format!("  theory {t:7.2} dB"),
+                None => String::new(),
+            };
             println!(
-                "sweep {:<18} {key} = {value:<10} steady-state {:7.2} dB  scalars/run {:.0}",
-                base.name, out.steady_db, out.scalars_per_run
+                "sweep {:<18} {key} = {value:<10} steady-state {:7.2} dB{}  scalars/run {:.0}",
+                base.name, out.steady_db, theory, out.scalars_per_run
             );
         }
-        let mut trace = out.series.into_iter().next().expect("one series per run");
+        // Keep only the simulated trace per point (always series[0]);
+        // the per-point theory curve is summarized by the scalar
+        // `theory_db` column instead of a full trace, keeping sweep
+        // artifacts one-series-per-value.
+        let mut trace = out.series.into_iter().next().expect("sim series is always present");
         trace.label = format!("{key}={value}");
         traces.push(trace);
         points.push(SweepPoint {
             value: value.clone(),
             steady_db: out.steady_db,
+            theory_db: out.theory_steady_db,
             scalars_per_run: out.scalars_per_run,
         });
     }
 
     if let Some(dir) = out_dir {
-        // Summary CSV: x = swept value when numeric, else its index.
+        // Summary CSV: x = swept value when numeric, else its index;
+        // one simulated column, plus a predicted column when every
+        // point is inside the theory scope (DESIGN.md §7).
         let xs: Vec<f64> = points
             .iter()
             .enumerate()
             .map(|(i, p)| p.value.parse::<f64>().unwrap_or(i as f64))
             .collect();
         let ys: Vec<f64> = points.iter().map(|p| p.steady_db).collect();
-        let summary = Series::new(format!("steady-state dB vs {key}"), xs, ys);
-        write_csv(format!("{dir}/{}_sweep.csv", base.name), &[summary.clone()])
+        let mut summaries = vec![Series::new(format!("steady-state dB vs {key}"), xs.clone(), ys)];
+        if points.iter().all(|p| p.theory_db.is_some()) {
+            let ty: Vec<f64> = points
+                .iter()
+                .map(|p| p.theory_db.expect("guarded by the all() above"))
+                .collect();
+            summaries.push(Series::new(format!("theory steady-state dB vs {key}"), xs, ty));
+        }
+        write_csv(format!("{dir}/{}_sweep.csv", base.name), &summaries)
             .map_err(|e| e.to_string())?;
-        let mut all = vec![summary];
+        let mut all = summaries;
         all.extend(traces.iter().cloned());
         write_json(
             format!("{dir}/{}_sweep.json", base.name),
@@ -199,11 +320,31 @@ mod tests {
     fn lossy_scenario_runs_and_converges() {
         let sc = small("lossy-geometric");
         let out = run_scenario(&sc, None, true).unwrap();
-        assert_eq!(out.series.len(), 1);
+        // Simulation first, then the DESIGN.md §7 theory column (the
+        // preset sits inside the analysis scope).
+        assert_eq!(out.series.len(), 2);
         assert_eq!(out.series[0].y.len(), 400);
+        assert_eq!(out.series[1].y.len(), 400);
+        assert!(out.series[1].label.contains("theory"), "{}", out.series[1].label);
+        assert!(out.theory_steady_db.is_some());
         let y = &out.series[0].y;
         assert!(y[399] < y[0], "no convergence: {} -> {}", y[0], y[399]);
         assert!(out.scalars_per_run > 0.0);
+    }
+
+    /// Scenarios outside the analysis scope run fine, just without the
+    /// theory column: event gating (no Bernoulli representation) and a
+    /// non-identity combine matrix both disqualify.
+    #[test]
+    fn out_of_scope_scenarios_have_no_theory_column() {
+        let gated = small("event-triggered-ring");
+        let out = run_scenario(&gated, None, true).unwrap();
+        assert_eq!(out.series.len(), 1);
+        assert!(out.theory_steady_db.is_none());
+        let quantized = small("quantized-dense"); // combine = metropolis
+        let out = run_scenario(&quantized, None, true).unwrap();
+        assert_eq!(out.series.len(), 1);
+        assert!(out.theory_steady_db.is_none());
     }
 
     #[test]
@@ -235,6 +376,10 @@ mod tests {
             out.points[1].steady_db,
             out.points[0].steady_db
         );
+        // The theory column tracks the degradation across the sweep.
+        let t0 = out.points[0].theory_db.expect("in-scope sweep point");
+        let t1 = out.points[1].theory_db.expect("in-scope sweep point");
+        assert!(t1 > t0, "theory: drop 0.5 {t1} dB <= drop 0 {t0} dB");
     }
 
     #[test]

@@ -92,6 +92,21 @@ impl AlgorithmSpec {
         }
     }
 
+    /// The `(M, M_grad)` selection-mask pair the mean-square analysis
+    /// (paper §III ideal, DESIGN.md §7 impaired) models for this
+    /// algorithm: diffusion LMS is the uncompressed limit
+    /// (M = M_grad = L), CD masks estimates only, DCD masks both. RCD
+    /// and partial diffusion follow different update equations and are
+    /// outside the analysis — `None`.
+    pub fn theory_masks(&self, dim: usize) -> Option<(usize, usize)> {
+        match self {
+            AlgorithmSpec::DiffusionLms => Some((dim, dim)),
+            AlgorithmSpec::Cd { m } => Some((*m, dim)),
+            AlgorithmSpec::Dcd { m, m_grad } => Some((*m, *m_grad)),
+            AlgorithmSpec::Rcd { .. } | AlgorithmSpec::Partial { .. } => None,
+        }
+    }
+
     /// Instantiate the algorithm on `net`.
     pub fn build(&self, net: NetworkConfig) -> Box<dyn Algorithm> {
         match self {

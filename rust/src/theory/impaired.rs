@@ -1,0 +1,433 @@
+//! Impaired-link mean-square model (DESIGN.md §7): the paper's §III
+//! analysis extended to the probabilistic combination matrices of the
+//! coordinator's link-impairment layer, à la Arablouei et al.
+//! (arXiv:1408.5845).
+//!
+//! The model consumes the *same* [`LinkImpairments`] spec the
+//! coordinator executes. Under independent Bernoulli link states the
+//! error-recursion matrix 𝓑ᵢ = I − 𝓜𝓧ᵢ(C(i), H, Q) is random in both
+//! the selection masks and the effective adapt combiner `C(i)`, and the
+//! two sources are independent, so
+//!
+//! * the mean matrix is 𝓑̄ = I − 𝓜 E{𝓧} — the ideal construction
+//!   evaluated at the *expected* combiner C̄ = E{C(i)} (𝓧 is linear in
+//!   the combiner entries);
+//! * the weighted-variance operator Σ ↦ E{𝓑ᵢᵀΣ𝓑ᵢ} keeps the ideal
+//!   structure 𝓑̄ᵀΣ + Σ𝓑̄ − Σ + Y(𝓜Σ𝓜), with every quadratic and
+//!   noise coefficient's combiner product `c_{mk} c_{nl}` replaced by
+//!   the link-state second moment `E[C_{mk} C_{nl}]`
+//!   (`theory/linkstate.rs`, closed form for Bernoulli links);
+//! * quantization enters as an additive white term in the driving
+//!   covariance: a mid-tread quantizer of step Δ injects per-entry
+//!   variance Δ²/12 per iteration, i.e. `(Δ²/12)·tr(Σ)` in the variance
+//!   recursion.
+//!
+//! Everything else — the allocation-free fast path, the ping-pong
+//! trajectory/steady-state loops, the operator-level stability radius —
+//! is the ideal [`MsdModel`] engine, reused verbatim via its
+//! crate-internal `from_parts` constructor. At zero impairment the substituted
+//! coefficients are *bit-identical* to the ideal ones (the correction
+//! terms are exact float zeros), so the impaired model degenerates to
+//! [`MsdModel`] exactly (tested to 1e-12 in
+//! `rust/tests/theory_impaired.rs`).
+//!
+//! Scope and assumptions (DESIGN.md §7 for the full list): the paper's
+//! analysis setting `A = I` and doubly stochastic pristine `C`; gating
+//! must be `always` or `prob:p` (event-triggered gating is
+//! state-dependent and has no product-form link-state distribution);
+//! the white-noise quantization model is accurate while per-iteration
+//! estimate increments exceed Δ.
+
+use super::linkstate::LinkStateMoments;
+use super::mean::build_b;
+use super::msd::{build_noise_coeffs, build_quad_terms, MsdModel, MsdTrajectory, MsdWorkspace};
+use super::TheorySetup;
+use crate::coordinator::impairments::LinkImpairments;
+use crate::linalg::{spectral_radius, Mat};
+
+/// Mean-square model of DCD under per-link drops, probabilistic gating
+/// and quantized state — the theoretical anchor for the scenario
+/// subsystem's impaired presets (`lossy-geometric` etc.).
+pub struct ImpairedMsdModel {
+    inner: MsdModel,
+    imp: LinkImpairments,
+}
+
+impl ImpairedMsdModel {
+    /// Build the model for `setup` (the *pristine* network: the paper's
+    /// validation rules apply to it, not to the expected combiner) under
+    /// the impairment spec `imp`.
+    ///
+    /// Errors on invalid setups/specs and on event-triggered gating,
+    /// which admits no closed-form link-state distribution.
+    pub fn new(setup: TheorySetup, imp: &LinkImpairments) -> Result<Self, String> {
+        setup.validate()?;
+        imp.validate()?;
+        let tx_prob = imp.gating.transmit_prob().ok_or_else(|| {
+            format!(
+                "impaired theory: gating {} is state-dependent and has no \
+                 closed-form link-state distribution (DESIGN.md §7)",
+                imp.gating
+            )
+        })?;
+        let lm = LinkStateMoments::new(&setup.c, imp.drop_prob, tx_prob);
+        let eff = TheorySetup { c: lm.mean_matrix(), ..setup };
+        let b = build_b(&eff);
+        let quad = build_quad_terms(&eff, &lm);
+        let w_noise = build_noise_coeffs(&eff, &lm);
+        let quant_tr = imp.quant_step * imp.quant_step / 12.0;
+        Ok(Self {
+            inner: MsdModel::from_parts(eff, b, quad, w_noise, quant_tr),
+            imp: imp.clone(),
+        })
+    }
+
+    /// The underlying mean-square engine (operator application, EMSE
+    /// weightings, workspaces) — identical API to the ideal model.
+    pub fn model(&self) -> &MsdModel {
+        &self.inner
+    }
+
+    /// The impairment spec the model was built for.
+    pub fn impairments(&self) -> &LinkImpairments {
+        &self.imp
+    }
+
+    /// The expected adapt combiner C̄ = E{C(i)} the mean recursion runs
+    /// on (also available via [`MsdModel::setup`] on [`Self::model`]).
+    pub fn c_bar(&self) -> &Mat {
+        &self.inner.setup().c
+    }
+
+    /// ρ(𝓑̄) — the algorithm converges in the mean under the impairment
+    /// model iff this is < 1.
+    pub fn mean_rho(&self) -> f64 {
+        spectral_radius(self.inner.b(), 5000)
+    }
+
+    /// Mean stability under the impairment model.
+    pub fn is_mean_stable(&self) -> bool {
+        self.mean_rho() < 1.0
+    }
+
+    /// A scratch workspace sized for this model.
+    pub fn workspace(&self) -> MsdWorkspace {
+        self.inner.workspace()
+    }
+
+    /// Reference (allocating) application of the impaired variance
+    /// operator Σ ↦ E{𝓑ᵢᵀΣ𝓑ᵢ}.
+    pub fn apply(&self, sigma: &Mat) -> Mat {
+        self.inner.apply(sigma)
+    }
+
+    /// Allocation-free fast path of the impaired variance operator
+    /// (symmetric Σ; see [`MsdModel::apply_into`]).
+    pub fn apply_into(&self, sigma: &Mat, ws: &mut MsdWorkspace, out: &mut Mat) {
+        self.inner.apply_into(sigma, ws, out)
+    }
+
+    /// Per-iteration driving-noise injection, including the quantization
+    /// floor `(Δ²/12)·tr(Σ)`.
+    pub fn noise(&self, sigma: &Mat) -> f64 {
+        self.inner.noise(sigma)
+    }
+
+    /// Theoretical network-MSD learning curve under the impairment model.
+    pub fn learning_curve(&self, wo: &[f64], iters: usize) -> MsdTrajectory {
+        self.inner.learning_curve(wo, iters)
+    }
+
+    /// Theoretical network-MSD trajectory (see [`MsdModel::trajectory`]).
+    pub fn trajectory(&self, wo: &[f64], iters: usize) -> MsdTrajectory {
+        self.inner.trajectory(wo, iters)
+    }
+
+    /// MSD/EMSE-style weighted trajectory (see
+    /// [`MsdModel::trajectory_weighted`]).
+    pub fn trajectory_weighted(
+        &self,
+        wo: &[f64],
+        iters: usize,
+        weighting: Option<&[f64]>,
+    ) -> MsdTrajectory {
+        self.inner.trajectory_weighted(wo, iters, weighting)
+    }
+
+    /// Steady-state MSD under the impairment model (see
+    /// [`MsdModel::steady_state`]).
+    pub fn steady_state(&self, wo: &[f64], tol: f64, max_iters: usize) -> (f64, usize) {
+        self.inner.steady_state(wo, tol, max_iters)
+    }
+
+    /// Mean-square stability radius ρ(𝓕) of the impaired operator.
+    pub fn ms_stability_radius(&self, iters: usize) -> f64 {
+        self.inner.ms_stability_radius(iters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Algorithm, CommMeter, Dcd, NetworkConfig};
+    use crate::coordinator::impairments::{Gating, ImpairmentState};
+    use crate::rng::Pcg64;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn setup(n: usize, l: usize, m: usize, mg: usize, mu: f64) -> (TheorySetup, NetworkConfig) {
+        let graph = Graph::ring(n, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig {
+            graph: graph.clone(),
+            c: c.clone(),
+            a: Mat::eye(n),
+            mu: vec![mu; n],
+            dim: l,
+        };
+        let s = TheorySetup {
+            n_nodes: n,
+            dim: l,
+            m,
+            m_grad: mg,
+            c,
+            mu: vec![mu; n],
+            sigma_u2: (0..n).map(|k| 0.7 + 0.15 * k as f64).collect(),
+            sigma_v2: (0..n).map(|k| 1e-3 * (1.0 + 0.3 * k as f64)).collect(),
+        };
+        (s, net)
+    }
+
+    fn imp(drop: f64, gate: Gating) -> LinkImpairments {
+        LinkImpairments { drop_prob: drop, gating: gate, quant_step: 0.0 }
+    }
+
+    fn random_sigma(nl: usize, rng: &mut Pcg64) -> Mat {
+        let mut m = Mat::zeros(nl, nl);
+        for i in 0..nl {
+            for j in 0..nl {
+                m[(i, j)] = rng.next_gaussian();
+            }
+        }
+        let mt = m.transpose();
+        &m * &mt
+    }
+
+    /// Draw masks and build 𝓑ᵢ for a *given* effective combiner (same
+    /// construction as the ideal model's MC test, with C(i) plugged in).
+    fn sample_b_i(s: &TheorySetup, ceff: &Mat, rng: &mut Pcg64) -> Mat {
+        let (n, l) = (s.n_nodes, s.dim);
+        let mut scratch = Vec::new();
+        let mut h = vec![vec![0f32; l]; n];
+        let mut q = vec![vec![0f32; l]; n];
+        for k in 0..n {
+            rng.fill_mask(&mut h[k], s.m, &mut scratch);
+            rng.fill_mask(&mut q[k], s.m_grad, &mut scratch);
+        }
+        let mut b = Mat::eye(n * l);
+        for k in 0..n {
+            for lnb in 0..n {
+                let clk = ceff[(lnb, k)];
+                for j in 0..l {
+                    let mut x = 0.0;
+                    if lnb == k {
+                        for m_ in 0..n {
+                            let cmk = ceff[(m_, k)];
+                            if cmk == 0.0 {
+                                continue;
+                            }
+                            x += cmk
+                                * (s.sigma_u2[m_] * q[m_][j] as f64 * h[k][j] as f64
+                                    + s.sigma_u2[k] * (1.0 - q[m_][j] as f64));
+                        }
+                    }
+                    if clk != 0.0 {
+                        x += clk * s.sigma_u2[lnb] * q[lnb][j] as f64 * (1.0 - h[k][j] as f64);
+                    }
+                    b[(k * l + j, lnb * l + j)] -= s.mu[k] * x;
+                }
+            }
+        }
+        b
+    }
+
+    /// The core validation: the impaired closed-form operator must equal
+    /// the Monte-Carlo average of 𝓑ᵢᵀΣ𝓑ᵢ where the effective combiner of
+    /// every trial is produced by the *real* coordinator impairment layer
+    /// (`ImpairmentState::begin_iteration`).
+    #[test]
+    fn impaired_operator_matches_coordinator_monte_carlo() {
+        let (s, net) = setup(4, 3, 2, 1, 0.3);
+        let im = imp(0.3, Gating::Probabilistic(0.8));
+        let model = ImpairedMsdModel::new(s.clone(), &im).unwrap();
+        let mut rng = Pcg64::new(29, 0);
+        let sigma = random_sigma(12, &mut rng);
+        let closed = model.apply(&sigma);
+
+        let mut alg = Dcd::new(net.clone(), s.m, s.m_grad);
+        let mut comm = CommMeter::new(4);
+        let mut state = ImpairmentState::new(alg.network(), 91, 1);
+        let trials = 60_000;
+        let mut acc = Mat::zeros(12, 12);
+        for _ in 0..trials {
+            state.begin_iteration(&im, &mut alg, &mut comm);
+            let b_i = sample_b_i(&s, &alg.network().c, &mut rng);
+            let prod = &(&b_i.transpose() * &sigma) * &b_i;
+            acc.axpy(1.0, &prod);
+        }
+        acc.scale_in_place(1.0 / trials as f64);
+        let diff = (&acc - &closed).max_abs();
+        let scale = closed.max_abs();
+        assert!(diff < 0.02 * scale, "MC mismatch: {diff} (scale {scale})");
+    }
+
+    /// The impaired driving-noise term against the same coordinator-
+    /// sampled effective combiners.
+    #[test]
+    fn impaired_noise_matches_coordinator_monte_carlo() {
+        let (s, net) = setup(4, 3, 2, 1, 0.3);
+        let im = imp(0.25, Gating::Probabilistic(0.85));
+        let model = ImpairedMsdModel::new(s.clone(), &im).unwrap();
+        let mut rng = Pcg64::new(31, 0);
+        let sigma = random_sigma(12, &mut rng);
+        let closed = model.noise(&sigma);
+
+        let (n, l) = (4usize, 3usize);
+        let mut alg = Dcd::new(net, s.m, s.m_grad);
+        let mut comm = CommMeter::new(n);
+        let mut state = ImpairmentState::new(alg.network(), 47, 1);
+        let trials = 60_000;
+        let mut acc = 0.0;
+        let mut scratch = Vec::new();
+        let mut q = vec![vec![0f32; l]; n];
+        for _ in 0..trials {
+            state.begin_iteration(&im, &mut alg, &mut comm);
+            let ceff = &alg.network().c;
+            for qk in q.iter_mut() {
+                rng.fill_mask(qk, s.m_grad, &mut scratch);
+            }
+            let mut g = Mat::zeros(n * l, n * l);
+            for k in 0..n {
+                for lnb in 0..n {
+                    for j in 0..l {
+                        let mut y = ceff[(lnb, k)] * q[lnb][j] as f64;
+                        if lnb == k {
+                            for m_ in 0..n {
+                                y += ceff[(m_, k)] * (1.0 - q[m_][j] as f64);
+                            }
+                        }
+                        g[(k * l + j, lnb * l + j)] = s.mu[k] * y;
+                    }
+                }
+            }
+            let gts_g = &(&g.transpose() * &sigma) * &g;
+            for b in 0..n {
+                let sb = s.sigma_v2[b] * s.sigma_u2[b];
+                for j in 0..l {
+                    acc += sb * gts_g[(b * l + j, b * l + j)];
+                }
+            }
+        }
+        let mc = acc / trials as f64;
+        assert!(
+            (mc - closed).abs() < 0.02 * closed.abs().max(1e-12),
+            "noise MC {mc} vs closed {closed}"
+        );
+    }
+
+    /// Gating probability 0 isolates every node: the model must coincide
+    /// with the ideal model on C = I (pure self-LMS per node).
+    #[test]
+    fn zero_transmit_prob_reduces_to_self_lms() {
+        let (s, _) = setup(5, 3, 2, 1, 0.1);
+        let gated = ImpairedMsdModel::new(s.clone(), &imp(0.0, Gating::Probabilistic(0.0)))
+            .unwrap();
+        let mut iso = s.clone();
+        iso.c = Mat::eye(5);
+        let ideal = MsdModel::new(iso);
+        let mut rng = Pcg64::new(7, 0);
+        let sigma = random_sigma(15, &mut rng);
+        let a = gated.apply(&sigma);
+        let b = ideal.apply(&sigma);
+        let diff = (&a - &b).max_abs();
+        assert!(diff < 1e-12 * b.max_abs().max(1.0), "diff {diff}");
+        assert!((gated.c_bar() - &Mat::eye(5)).max_abs() < 1e-12);
+    }
+
+    /// C̄ must agree with the coordinator's `expected_combiners` — the
+    /// reallocation rule exists in both layers (the theory cannot take a
+    /// `NetworkConfig`), and this sweep over the (drop, gate) grid is
+    /// what keeps the two copies from drifting apart.
+    #[test]
+    fn c_bar_matches_coordinator_expected_combiners() {
+        let (s, net) = setup(6, 2, 1, 1, 0.05);
+        for &drop in &[0.0, 0.15, 0.5, 1.0] {
+            for &gate in &[1.0, 0.9, 0.4, 0.0] {
+                let im = imp(drop, Gating::Probabilistic(gate));
+                let model = ImpairedMsdModel::new(s.clone(), &im).unwrap();
+                let (_, c_bar) = im.expected_combiners(&net).unwrap();
+                let diff = (model.c_bar() - &c_bar).max_abs();
+                assert!(diff < 1e-12, "drop {drop} gate {gate}: C̄ diff {diff}");
+            }
+        }
+    }
+
+    /// Worse links ⇒ worse steady state: drops, duty-cycling and
+    /// quantization each raise the floor monotonically.
+    #[test]
+    fn impairments_raise_the_steady_state() {
+        let (s, _) = setup(5, 4, 2, 1, 0.05);
+        let wo = vec![0.5, -0.3, 0.8, 0.1];
+        let ss = |im: &LinkImpairments| {
+            ImpairedMsdModel::new(s.clone(), im)
+                .unwrap()
+                .steady_state(&wo, 1e-10, 30_000)
+                .0
+        };
+        let ideal = ss(&LinkImpairments::ideal());
+        let drops = ss(&imp(0.4, Gating::Always));
+        let heavy_drops = ss(&imp(0.8, Gating::Always));
+        assert!(ideal <= drops * 1.02, "{ideal} vs {drops}");
+        assert!(drops <= heavy_drops * 1.02, "{drops} vs {heavy_drops}");
+        let gated = ss(&imp(0.0, Gating::Probabilistic(0.5)));
+        assert!(ideal <= gated * 1.02, "{ideal} vs {gated}");
+        let quant = ss(&LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::Always,
+            quant_step: 1e-3,
+        });
+        assert!(quant > ideal, "{quant} vs {ideal}");
+        // The Σ-recursion is untouched by quantization, so the steady
+        // state is exactly affine in Δ²: a 10× step must raise the
+        // quantization excess by 100×.
+        let quant_big = ss(&LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::Always,
+            quant_step: 1e-2,
+        });
+        let ratio = (quant_big - ideal) / (quant - ideal);
+        assert!((ratio - 100.0).abs() < 1.0, "Δ² scaling off: ratio {ratio}");
+    }
+
+    /// Event-triggered gating is out of analysis scope and must error.
+    #[test]
+    fn event_triggered_gating_is_rejected() {
+        let (s, _) = setup(4, 3, 2, 1, 0.1);
+        let err = ImpairedMsdModel::new(s, &imp(0.0, Gating::EventTriggered(1e-6)))
+            .unwrap_err();
+        assert!(err.contains("event"), "{err}");
+    }
+
+    /// Mean stability degrades gracefully: the impaired model stays
+    /// mean-stable at small μ and reports instability at huge μ.
+    #[test]
+    fn impaired_mean_stability_tracks_mu() {
+        let (s, _) = setup(4, 3, 2, 1, 0.05);
+        let model = ImpairedMsdModel::new(s.clone(), &imp(0.3, Gating::Probabilistic(0.7)))
+            .unwrap();
+        assert!(model.is_mean_stable(), "rho {}", model.mean_rho());
+        let mut bad = s;
+        bad.mu = vec![3.0; 4];
+        let model = ImpairedMsdModel::new(bad, &imp(0.3, Gating::Probabilistic(0.7))).unwrap();
+        assert!(!model.is_mean_stable(), "rho {}", model.mean_rho());
+    }
+}

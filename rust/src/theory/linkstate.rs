@@ -1,0 +1,253 @@
+//! Closed-form moments of the random effective adapt combiner under
+//! independent Bernoulli link states (DESIGN.md §7).
+//!
+//! The coordinator's impairment layer (`coordinator/impairments.rs`)
+//! draws, per iteration, a transmit gate `g_m ~ Bernoulli(p_tx)` per
+//! node and an erasure `d_{mk} ~ Bernoulli(1 − p_drop)` per directed
+//! link, and keeps node k's adapt weight for source m iff
+//!
+//! ```text
+//!   y_{mk} = g_m · d_{mk} · g_k
+//! ```
+//!
+//! (transmitter on the air, frame delivered, receiver soliciting).
+//! Erased mass is re-allocated to the receiver's self weight, so the
+//! effective combiner of one iteration is
+//!
+//! ```text
+//!   C_{mk}(i) = c⁰_{mk} · y_{mk}                            (m ≠ k)
+//!   C_{kk}(i) = c⁰_{kk} + Σ_{m ∈ N(k)} c⁰_{mk} (1 − y_{mk})
+//! ```
+//!
+//! Every `y` is a product of independent Bernoullis shared across links
+//! only through the per-node gates, so joint moments have closed form:
+//!
+//! ```text
+//!   E[y_{mk} y_{nl}] = p_tx^{|{m,k} ∪ {n,l}|} · (1 − p_drop)^{#distinct links}
+//! ```
+//!
+//! (a gate squared is itself, so repeated node indices collapse). This
+//! module packages the first moment (the expected combiner C̄) and every
+//! pair moment `E[C_{mk} C_{nl}]` — including the diagonal-collapse
+//! expansions — behind the [`CombinerMoments`] interface the variance-
+//! operator builders consume, and is cross-validated against the *real*
+//! coordinator reallocation by Monte-Carlo in `theory/impaired.rs`.
+//!
+//! At `p_drop = 0`, `p_tx = 1` every `y ≡ 1` and all formulas reduce to
+//! the deterministic products *exactly* (the correction terms are exact
+//! float zeros), which is what makes the impaired model degenerate to
+//! the ideal [`super::MsdModel`] at zero impairment.
+
+use super::msd::CombinerMoments;
+use crate::coordinator::impairments::reallocate_expected;
+use crate::linalg::Mat;
+
+/// Bernoulli link-state moments over a pristine adapt combiner `c⁰`.
+pub(super) struct LinkStateMoments {
+    /// Pristine combiner (owned copy; columns indexed as `c0[(m, k)]`).
+    c0: Mat,
+    /// Off-diagonal support per column: sources `m ≠ k` with `c⁰_{mk} ≠ 0`.
+    nb: Vec<Vec<usize>>,
+    /// Full support per column including the diagonal (erased mass can
+    /// always land there).
+    supp: Vec<Vec<usize>>,
+    /// Per-node transmit probability `p_tx`.
+    p_tx: f64,
+    /// Per-link survival probability `1 − p_drop`.
+    keep: f64,
+}
+
+impl LinkStateMoments {
+    pub(super) fn new(c0: &Mat, drop_prob: f64, tx_prob: f64) -> Self {
+        assert!(c0.is_square());
+        let n = c0.cols();
+        let nb = (0..n)
+            .map(|k| (0..n).filter(|&m| m != k && c0[(m, k)] != 0.0).collect())
+            .collect();
+        let supp = (0..n)
+            .map(|k| (0..n).filter(|&m| m == k || c0[(m, k)] != 0.0).collect())
+            .collect();
+        Self { c0: c0.clone(), nb, supp, p_tx: tx_prob, keep: 1.0 - drop_prob }
+    }
+
+    /// `E[y_{mk}]` for any off-diagonal link: both gates up, no erasure.
+    fn y1(&self) -> f64 {
+        self.p_tx * self.p_tx * self.keep
+    }
+
+    /// `E[y_{mk} y_{nl}]` for two (possibly equal) off-diagonal links.
+    fn y2(&self, m: usize, k: usize, n: usize, l: usize) -> f64 {
+        let d = if m == n && k == l { self.keep } else { self.keep * self.keep };
+        let mut v = [m, k, n, l];
+        v.sort_unstable();
+        let mut distinct = 1i32;
+        for i in 1..4 {
+            if v[i] != v[i - 1] {
+                distinct += 1;
+            }
+        }
+        self.p_tx.powi(distinct) * d
+    }
+
+    /// The expected effective combiner C̄ = E{C(i)}: off-diagonal mass
+    /// scaled by `E[y]`, the complement re-allocated to the diagonal —
+    /// the coordinator's per-iteration reallocation, in expectation
+    /// (the same shared `reallocate_expected` the coordinator's
+    /// `expected_combiners` uses, so the two layers cannot drift).
+    pub(super) fn mean_matrix(&self) -> Mat {
+        reallocate_expected(&self.c0, self.y1())
+    }
+
+    /// `E[C_{kk} C_{nl}]` for an off-diagonal `(n, l)`: expand the
+    /// diagonal collapse sum against the single survival indicator.
+    fn diag_off(&self, k: usize, n: usize, l: usize) -> f64 {
+        let y1 = self.y1();
+        let mut t = self.c0[(k, k)] * y1;
+        for &mp in &self.nb[k] {
+            t += self.c0[(mp, k)] * (y1 - self.y2(mp, k, n, l));
+        }
+        self.c0[(n, l)] * t
+    }
+
+    /// `E[C_{kk} C_{ll}]`: both diagonal collapse sums expanded, with
+    /// `E[(1 − y)(1 − y')] = 1 − 2·E[y] + E[y y']` per cross term.
+    fn diag_diag(&self, k: usize, l: usize) -> f64 {
+        let y1 = self.y1();
+        let mut t = self.c0[(k, k)] * self.c0[(l, l)];
+        for &np in &self.nb[l] {
+            t += self.c0[(k, k)] * self.c0[(np, l)] * (1.0 - y1);
+        }
+        for &mp in &self.nb[k] {
+            t += self.c0[(l, l)] * self.c0[(mp, k)] * (1.0 - y1);
+        }
+        for &mp in &self.nb[k] {
+            for &np in &self.nb[l] {
+                t += self.c0[(mp, k)]
+                    * self.c0[(np, l)]
+                    * (1.0 - 2.0 * y1 + self.y2(mp, k, np, l));
+            }
+        }
+        t
+    }
+}
+
+impl CombinerMoments for LinkStateMoments {
+    fn supp(&self, k: usize) -> &[usize] {
+        &self.supp[k]
+    }
+
+    fn has(&self, m: usize, k: usize) -> bool {
+        m == k || self.c0[(m, k)] != 0.0
+    }
+
+    fn cc(&self, m: usize, k: usize, n: usize, l: usize) -> f64 {
+        match (m == k, n == l) {
+            (false, false) => self.c0[(m, k)] * self.c0[(n, l)] * self.y2(m, k, n, l),
+            (true, false) => self.diag_off(k, n, l),
+            (false, true) => self.diag_off(l, m, k),
+            (true, true) => self.diag_diag(k, l),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn c0(n: usize) -> Mat {
+        combination_matrix(&Graph::ring(n, 1), Rule::Metropolis)
+    }
+
+    /// Zero impairment must reproduce the deterministic products and the
+    /// pristine matrix *exactly* (the degeneration the impaired model's
+    /// 1e-12 equivalence test relies on).
+    #[test]
+    fn ideal_limit_is_exact() {
+        let c = c0(5);
+        let lm = LinkStateMoments::new(&c, 0.0, 1.0);
+        assert_eq!(lm.mean_matrix(), c);
+        for m in 0..5 {
+            for k in 0..5 {
+                for n in 0..5 {
+                    for l in 0..5 {
+                        if lm.has(m, k) && lm.has(n, l) {
+                            assert_eq!(lm.cc(m, k, n, l), c[(m, k)] * c[(n, l)]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Every pair moment against brute-force Monte-Carlo over the
+    /// Bernoulli gates and erasures (the coordinator's sampling rule).
+    #[test]
+    fn pair_moments_match_monte_carlo() {
+        let n = 4;
+        let c = c0(n);
+        let (pd, pg) = (0.3, 0.7);
+        let lm = LinkStateMoments::new(&c, pd, pg);
+        let mut rng = Pcg64::new(77, 0);
+        let trials = 200_000;
+        let mut acc = vec![0.0f64; n * n * n * n];
+        let mut ceff = Mat::zeros(n, n);
+        for _ in 0..trials {
+            let g: Vec<bool> = (0..n).map(|_| rng.next_bool(pg)).collect();
+            ceff.data_mut().copy_from_slice(c.data());
+            for k in 0..n {
+                for m in 0..n {
+                    if m == k || c[(m, k)] == 0.0 {
+                        continue;
+                    }
+                    let delivered = g[m] && !rng.next_bool(pd);
+                    if !delivered || !g[k] {
+                        let w = ceff[(m, k)];
+                        ceff[(m, k)] = 0.0;
+                        ceff[(k, k)] += w;
+                    }
+                }
+            }
+            for m in 0..n {
+                for k in 0..n {
+                    for nn in 0..n {
+                        for l in 0..n {
+                            acc[((m * n + k) * n + nn) * n + l] +=
+                                ceff[(m, k)] * ceff[(nn, l)];
+                        }
+                    }
+                }
+            }
+        }
+        for m in 0..n {
+            for k in 0..n {
+                for nn in 0..n {
+                    for l in 0..n {
+                        if !(lm.has(m, k) && lm.has(nn, l)) {
+                            continue;
+                        }
+                        let mc = acc[((m * n + k) * n + nn) * n + l] / trials as f64;
+                        let closed = lm.cc(m, k, nn, l);
+                        assert!(
+                            (mc - closed).abs() < 8e-3,
+                            "E[C_{m}{k} C_{nn}{l}]: MC {mc} vs closed {closed}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// C̄ keeps columns stochastic (mass is only re-allocated).
+    #[test]
+    fn mean_matrix_columns_sum_to_one() {
+        let c = c0(6);
+        let lm = LinkStateMoments::new(&c, 0.25, 0.8);
+        let cb = lm.mean_matrix();
+        for k in 0..6 {
+            let s: f64 = (0..6).map(|m| cb[(m, k)]).sum();
+            assert!((s - 1.0).abs() < 1e-12, "column {k} sums to {s}");
+        }
+    }
+}

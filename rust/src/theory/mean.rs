@@ -15,6 +15,7 @@ pub struct MeanModel {
 }
 
 impl MeanModel {
+    /// Build 𝓑 for `setup` (eq. (31)).
     pub fn new(setup: TheorySetup) -> Self {
         let b = build_b(&setup);
         Self { setup, b }
@@ -25,6 +26,7 @@ impl MeanModel {
         spectral_radius(&self.b, 5000)
     }
 
+    /// Convergence in the mean: ρ(𝓑) < 1.
     pub fn is_mean_stable(&self) -> bool {
         self.rho() < 1.0
     }

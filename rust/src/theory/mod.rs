@@ -23,11 +23,20 @@
 //! The same machinery yields the driving-noise term
 //! trace(E{𝓖ᵢᵀ Σ 𝓖ᵢ} 𝓢) of (42), and the module cross-validates every
 //! closed form against brute-force Monte-Carlo over random masks (tests).
+//!
+//! [`ImpairedMsdModel`] extends the analysis to the coordinator's
+//! link-impairment layer (per-link Bernoulli drops, probabilistic
+//! gating, quantized state): the same operator with every combiner
+//! product replaced by its link-state expectation, plus a quantization
+//! noise floor — see DESIGN.md §7 and `theory/impaired.rs`.
 
+mod impaired;
+mod linkstate;
 mod mean;
 mod moments;
 mod msd;
 
+pub use impaired::ImpairedMsdModel;
 pub use mean::MeanModel;
 pub use moments::MaskMoments;
 pub use msd::{MsdModel, MsdTrajectory, MsdWorkspace};
@@ -54,6 +63,8 @@ pub struct TheorySetup {
 }
 
 impl TheorySetup {
+    /// Reject dimension mismatches, out-of-range mask sizes, and a
+    /// non-doubly-stochastic adapt combiner (the analysis setting).
     pub fn validate(&self) -> Result<(), String> {
         let n = self.n_nodes;
         if self.c.rows() != n || self.c.cols() != n {

@@ -22,6 +22,7 @@ pub struct MaskMoments {
 }
 
 impl MaskMoments {
+    /// Moments of a selection vector with `m` ones among `l` entries.
     pub fn new(m: usize, l: usize) -> Self {
         assert!(m <= l && l >= 1);
         Self { m, l }

@@ -14,10 +14,63 @@ use super::moments::MaskMoments;
 use super::{mean::build_b, TheorySetup};
 use crate::linalg::Mat;
 
+/// Joint second moments of the (possibly random) adapt-combiner entries,
+/// abstracting the only thing that differs between the ideal operator
+/// (deterministic `C`) and the impaired-link operator (random effective
+/// `C(i)`, DESIGN.md §7): every quadratic coefficient of the variance
+/// operator is a sum of products `c_{mk} c_{nl}`, and — because the
+/// per-iteration link states are independent of the selection masks —
+/// the impaired coefficients are obtained by replacing each product with
+/// `E[C_{mk}(i) C_{nl}(i)]`. The builders below
+/// ([`build_quad_terms`], [`build_noise_coeffs`]) are written against
+/// this trait so both models share one (tested) code path.
+pub(super) trait CombinerMoments {
+    /// Support of column `k`: every `m` with `P(C_{mk} ≠ 0) > 0`
+    /// (for random combiners this always includes the diagonal `k`,
+    /// where erased mass lands).
+    fn supp(&self, k: usize) -> &[usize];
+    /// Whether entry `(m, k)` can be nonzero.
+    fn has(&self, m: usize, k: usize) -> bool;
+    /// `E[C_{mk} C_{nl}]` over the link-state distribution (for a
+    /// deterministic combiner: the plain product).
+    fn cc(&self, m: usize, k: usize, n: usize, l: usize) -> f64;
+}
+
+/// The deterministic provider backing the ideal [`MsdModel`]:
+/// `cc` is the plain entry product and the support is `C`'s sparsity.
+pub(super) struct DetCombiner<'a> {
+    c: &'a Mat,
+    supp: Vec<Vec<usize>>,
+}
+
+impl<'a> DetCombiner<'a> {
+    pub(super) fn new(c: &'a Mat) -> Self {
+        let n = c.cols();
+        let supp = (0..n)
+            .map(|k| (0..n).filter(|&m| c[(m, k)] != 0.0).collect())
+            .collect();
+        Self { c, supp }
+    }
+}
+
+impl CombinerMoments for DetCombiner<'_> {
+    fn supp(&self, k: usize) -> &[usize] {
+        &self.supp[k]
+    }
+
+    fn has(&self, m: usize, k: usize) -> bool {
+        self.c[(m, k)] != 0.0
+    }
+
+    fn cc(&self, m: usize, k: usize, n: usize, l: usize) -> f64 {
+        self.c[(m, k)] * self.c[(n, l)]
+    }
+}
+
 /// One precomputed quadratic coefficient: the contribution of input
 /// block (k, l) to output block (a, b).
 #[derive(Debug, Clone, Copy)]
-struct QuadTerm {
+pub(super) struct QuadTerm {
     a: usize,
     b: usize,
     k: usize,
@@ -55,6 +108,7 @@ pub struct MsdWorkspace {
 }
 
 impl MsdWorkspace {
+    /// Allocate scratch for an `nl`-dimensional (NL × NL) operator.
     pub fn new(nl: usize) -> Self {
         Self { bt_sigma: Mat::zeros(nl, nl) }
     }
@@ -73,6 +127,10 @@ pub struct MsdModel {
     quad_sym: Vec<SymQuadTerm>,
     /// Noise coefficients: noise(Σ) = Σ_{k,l} w_noise[k*n+l] · tr(Σ_{kl}).
     w_noise: Vec<f64>,
+    /// Extra per-iteration injection `extra_tr_noise · tr(Σ)` — the
+    /// quantization-noise floor of the impaired model (DESIGN.md §7);
+    /// exactly 0 for the ideal model.
+    extra_tr_noise: f64,
 }
 
 /// A computed theoretical trajectory.
@@ -85,12 +143,33 @@ pub struct MsdTrajectory {
 }
 
 impl MsdModel {
+    /// Build the ideal-link model: validates `setup` and precomputes
+    /// 𝓑, 𝓑ᵀ and the quadratic/noise coefficient lists.
     pub fn new(setup: TheorySetup) -> Self {
         setup.validate().expect("invalid theory setup");
+        let det = DetCombiner::new(&setup.c);
         let b = build_b(&setup);
+        let quad = build_quad_terms(&setup, &det);
+        let w_noise = build_noise_coeffs(&setup, &det);
+        Self::from_parts(setup, b, quad, w_noise, 0.0)
+    }
+
+    /// Assemble a model from externally built parts — the impaired-link
+    /// model (DESIGN.md §7) constructs `b` from the *expected* combiner
+    /// C̄ and the quadratic/noise coefficient lists from the link-state
+    /// second moments, then reuses this whole engine (fast path,
+    /// trajectory/steady-state loops) unchanged. Performs no
+    /// double-stochasticity validation: C̄ need not be doubly stochastic
+    /// even when the pristine `C` is.
+    pub(super) fn from_parts(
+        setup: TheorySetup,
+        b: Mat,
+        quad: Vec<QuadTerm>,
+        w_noise: Vec<f64>,
+        extra_tr_noise: f64,
+    ) -> Self {
         let mut bt = Mat::zeros(b.cols(), b.rows());
         b.transpose_into(&mut bt);
-        let quad = build_quad_terms(&setup);
         // Keep the lexicographic representative of each mirror pair
         // {(a,b,k,l), (b,a,l,k)}; self-mirrored terms (a = b, k = l)
         // contribute a single symmetric write.
@@ -107,10 +186,17 @@ impl MsdModel {
                 mirror: !(t.a == t.b && t.k == t.l),
             })
             .collect();
-        let w_noise = build_noise_coeffs(&setup);
-        Self { setup, b, bt, quad, quad_sym, w_noise }
+        Self { setup, b, bt, quad, quad_sym, w_noise, extra_tr_noise }
     }
 
+    /// The mean coefficient matrix 𝓑 (for the impaired model: 𝓑̄ built
+    /// from the expected combiner C̄).
+    pub(super) fn b(&self) -> &Mat {
+        &self.b
+    }
+
+    /// The problem description the model was built for (the impaired
+    /// model stores the expected combiner C̄ here).
     pub fn setup(&self) -> &TheorySetup {
         &self.setup
     }
@@ -203,10 +289,15 @@ impl MsdModel {
         }
     }
 
-    /// Driving-noise term trace(E{𝓖ᵢᵀ Σ 𝓖ᵢ} 𝓢) for the weighting Σ.
+    /// Per-iteration driving-noise injection for the weighting Σ:
+    /// trace(E{𝓖ᵢᵀ Σ 𝓖ᵢ} 𝓢), plus — for the impaired model — the
+    /// additive quantization floor `(Δ²/12) · tr(Σ)` (DESIGN.md §7).
     pub fn noise(&self, sigma: &Mat) -> f64 {
         let (n, l) = (self.setup.n_nodes, self.setup.dim);
         let mut total = 0.0;
+        if self.extra_tr_noise != 0.0 {
+            total += self.extra_tr_noise * sigma.trace();
+        }
         for k in 0..n {
             for lnb in 0..n {
                 let w = self.w_noise[k * n + lnb];
@@ -236,6 +327,9 @@ impl MsdModel {
         self.trajectory_weighted(wo, iters, None)
     }
 
+    /// Weighted-variance trajectory: `weighting = None` gives the MSD
+    /// (Σ₀ = I); `Some(scales)` installs a block-diagonal Σ₀ with the
+    /// given per-node scales (EMSE-style weightings).
     pub fn trajectory_weighted(
         &self,
         wo: &[f64],
@@ -356,62 +450,56 @@ fn max_asymmetry(m: &Mat) -> f64 {
 ///   D_k = Σ_m c_{mk} (σ²_m Q_m H_k + σ²_k (I − Q_m)),
 /// all diagonal, so the coefficient of Φ_{kl} entry (i, j) is
 /// E[x_{ka,i} x_{lb,j}], which only depends on i = j vs i ≠ j.
-fn build_quad_terms(s: &TheorySetup) -> Vec<QuadTerm> {
+///
+/// Combiner entries are consumed only through `cm` (supports and pair
+/// moments `E[C_{mk} C_{nl}]`), so the same builder serves the ideal
+/// model (deterministic products) and the impaired model (link-state
+/// second moments, DESIGN.md §7).
+pub(super) fn build_quad_terms(s: &TheorySetup, cm: &dyn CombinerMoments) -> Vec<QuadTerm> {
     let n = s.n_nodes;
     let qm = MaskMoments::new(s.m_grad, s.dim);
     let hm = MaskMoments::new(s.m, s.dim);
-    // Support of column k of C (the m-sums in D_k).
-    let supp: Vec<Vec<usize>> = (0..n)
-        .map(|k| (0..n).filter(|&m| s.c[(m, k)] != 0.0).collect())
-        .collect();
 
     let eval = |a: usize, k: usize, b: usize, l: usize, same: bool| -> f64 {
         let su = &s.sigma_u2;
         let mut total = 0.0;
         let diag_a = k == a;
         let diag_b = l == b;
-        let off_a = s.c[(a, k)] != 0.0;
-        let off_b = s.c[(b, l)] != 0.0;
+        let off_a = cm.has(a, k);
+        let off_b = cm.has(b, l);
         // A: diag × diag.
         if diag_a && diag_b {
-            for &m in &supp[k] {
-                let cmk = s.c[(m, k)];
-                for &nn in &supp[l] {
-                    let cnl = s.c[(nn, l)];
+            for &m in cm.supp(k) {
+                for &nn in cm.supp(l) {
                     // E[(σ²_m q_m h_k + σ²_k(1−q_m))(σ²_n q_n h_l + σ²_l(1−q_n))]
                     // expanded into its four sub-products:
                     let t1 = su[m] * su[nn] * qm.pair(m, nn, same) * hm.pair(k, l, same);
                     let t2 = su[m] * su[l] * qm.pair_comp(m, nn, same) * hm.mean();
                     let t3 = su[k] * su[nn] * qm.pair_comp(nn, m, same) * hm.mean();
                     let t4 = su[k] * su[l] * qm.comp_comp(m, nn, same);
-                    total += cmk * cnl * (t1 + t2 + t3 + t4);
+                    total += cm.cc(m, k, nn, l) * (t1 + t2 + t3 + t4);
                 }
             }
         }
         // B: diag(k=a) × off(l, b).
         if diag_a && off_b {
-            let cbl = s.c[(b, l)];
-            for &m in &supp[k] {
-                let cmk = s.c[(m, k)];
+            for &m in cm.supp(k) {
                 let t1 = su[m] * qm.pair(m, b, same) * hm.pair_comp(k, l, same);
                 let t2 = su[k] * qm.pair_comp(b, m, same) * (1.0 - hm.mean());
-                total += cmk * cbl * su[b] * (t1 + t2);
+                total += cm.cc(m, k, b, l) * su[b] * (t1 + t2);
             }
         }
         // C: off(k, a) × diag(l=b).
         if off_a && diag_b {
-            let cak = s.c[(a, k)];
-            for &nn in &supp[l] {
-                let cnl = s.c[(nn, l)];
+            for &nn in cm.supp(l) {
                 let t1 = su[nn] * qm.pair(a, nn, same) * hm.pair_comp(l, k, same);
                 let t2 = su[l] * qm.pair_comp(a, nn, same) * (1.0 - hm.mean());
-                total += cak * cnl * su[a] * (t1 + t2);
+                total += cm.cc(a, k, nn, l) * su[a] * (t1 + t2);
             }
         }
         // D: off × off.
         if off_a && off_b {
-            total += s.c[(a, k)]
-                * s.c[(b, l)]
+            total += cm.cc(a, k, b, l)
                 * su[a]
                 * su[b]
                 * qm.pair(a, b, same)
@@ -422,10 +510,10 @@ fn build_quad_terms(s: &TheorySetup) -> Vec<QuadTerm> {
 
     let mut out = Vec::new();
     for a in 0..n {
-        // k must satisfy k == a or c_{ak} != 0 (i.e. k ∈ N_a ∪ {a}).
-        let ks: Vec<usize> = (0..n).filter(|&k| k == a || s.c[(a, k)] != 0.0).collect();
+        // k must satisfy k == a or C_{ak} possibly nonzero (k ∈ N_a ∪ {a}).
+        let ks: Vec<usize> = (0..n).filter(|&k| k == a || cm.has(a, k)).collect();
         for b in 0..n {
-            let ls: Vec<usize> = (0..n).filter(|&l| l == b || s.c[(b, l)] != 0.0).collect();
+            let ls: Vec<usize> = (0..n).filter(|&l| l == b || cm.has(b, l)).collect();
             for &k in &ks {
                 for &l in &ls {
                     let g_off = eval(a, k, b, l, false);
@@ -443,12 +531,13 @@ fn build_quad_terms(s: &TheorySetup) -> Vec<QuadTerm> {
 /// Noise coefficients: noise(Σ) = Σ_{k,l} w[k*n+l] tr(Σ_{kl}) with
 /// w[k*n+l] = Σ_b σ²_{v,b} σ²_{u,b} μ_k μ_l gN(k, l, b) and
 /// gN = E[y_{kb,i} y_{lb,i}] for [𝓖]_{kb} = μ_k (c_{bk} Q_b + δ_{kb} Σ_m c_{mk}(I − Q_m)).
-fn build_noise_coeffs(s: &TheorySetup) -> Vec<f64> {
+///
+/// Like [`build_quad_terms`], combiner entries enter only through the
+/// pair moments of `cm`, so the impaired model reuses this builder with
+/// its link-state moments (DESIGN.md §7).
+pub(super) fn build_noise_coeffs(s: &TheorySetup, cm: &dyn CombinerMoments) -> Vec<f64> {
     let n = s.n_nodes;
     let qm = MaskMoments::new(s.m_grad, s.dim);
-    let supp: Vec<Vec<usize>> = (0..n)
-        .map(|k| (0..n).filter(|&m| s.c[(m, k)] != 0.0).collect())
-        .collect();
     let mut w = vec![0.0; n * n];
     for k in 0..n {
         for lnb in 0..n {
@@ -458,26 +547,24 @@ fn build_noise_coeffs(s: &TheorySetup) -> Vec<f64> {
                 if sb == 0.0 {
                     continue;
                 }
-                let cbk = s.c[(b, k)];
-                let cbl = s.c[(b, lnb)];
-                let mut g = cbk * cbl * qm.pair(b, b, true); // term 1
+                let mut g = cm.cc(b, k, b, lnb) * qm.pair(b, b, true); // term 1
                 if lnb == b {
                     // term 2: c_{bk} Σ_n c_{n,l} E[q_b (1 − q_n)]  (same entry)
-                    for &nn in &supp[lnb] {
-                        g += cbk * s.c[(nn, lnb)] * qm.pair_comp(b, nn, true);
+                    for &nn in cm.supp(lnb) {
+                        g += cm.cc(b, k, nn, lnb) * qm.pair_comp(b, nn, true);
                     }
                 }
                 if k == b {
                     // term 3 (mirror).
-                    for &m in &supp[k] {
-                        g += cbl * s.c[(m, k)] * qm.pair_comp(b, m, true);
+                    for &m in cm.supp(k) {
+                        g += cm.cc(m, k, b, lnb) * qm.pair_comp(b, m, true);
                     }
                 }
                 if k == b && lnb == b {
                     // term 4.
-                    for &m in &supp[k] {
-                        for &nn in &supp[lnb] {
-                            g += s.c[(m, k)] * s.c[(nn, lnb)] * qm.comp_comp(m, nn, true);
+                    for &m in cm.supp(k) {
+                        for &nn in cm.supp(lnb) {
+                            g += cm.cc(m, k, nn, lnb) * qm.comp_comp(m, nn, true);
                         }
                     }
                 }

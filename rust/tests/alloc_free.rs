@@ -8,7 +8,8 @@
 //! is process-global and must not see traffic from concurrently running
 //! tests.
 
-use dcd_lms::theory::{MsdModel, TheorySetup};
+use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::theory::{ImpairedMsdModel, MsdModel, TheorySetup};
 use dcd_lms::topology::{combination_matrix, Graph, Rule};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -86,4 +87,32 @@ fn theory_iteration_loops_do_not_allocate() {
     let (short, _) = allocs_during(|| std::hint::black_box(model.ms_stability_radius(100)));
     let (long, _) = allocs_during(|| std::hint::black_box(model.ms_stability_radius(400)));
     assert_eq!(short, long, "ms_stability_radius allocates per iteration");
+
+    // The impaired-link operator (DESIGN.md §7) rides the same engine
+    // and must keep the same discipline: zero allocations per iteration
+    // with drops, gating and the quantization noise floor all active.
+    let setup = model.setup().clone();
+    let imp = LinkImpairments {
+        drop_prob: 0.2,
+        gating: Gating::Probabilistic(0.8),
+        quant_step: 1e-3,
+    };
+    let impaired = ImpairedMsdModel::new(setup, &imp).expect("bernoulli gating is in scope");
+    let _ = impaired.trajectory(&wo, 8);
+    let _ = impaired.steady_state(&wo, -1.0, 8);
+    let _ = impaired.ms_stability_radius(8);
+
+    let (short, _) = allocs_during(|| std::hint::black_box(impaired.trajectory(&wo, 100)));
+    let (long, _) = allocs_during(|| std::hint::black_box(impaired.trajectory(&wo, 400)));
+    assert_eq!(short, long, "impaired trajectory allocates per iteration");
+
+    let (short, _) =
+        allocs_during(|| std::hint::black_box(impaired.steady_state(&wo, -1.0, 100)));
+    let (long, _) =
+        allocs_during(|| std::hint::black_box(impaired.steady_state(&wo, -1.0, 400)));
+    assert_eq!(short, long, "impaired steady_state allocates per iteration");
+
+    let (short, _) = allocs_during(|| std::hint::black_box(impaired.ms_stability_radius(100)));
+    let (long, _) = allocs_during(|| std::hint::black_box(impaired.ms_stability_radius(400)));
+    assert_eq!(short, long, "impaired ms_stability_radius allocates per iteration");
 }

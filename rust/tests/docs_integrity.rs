@@ -1,7 +1,9 @@
 //! Documentation integrity: the DESIGN.md section citations sprinkled
-//! through the sources must resolve to real §-numbered headings, and
-//! relative markdown links must point at files that exist. This is the
-//! in-repo enforcement behind the CI markdown link-check
+//! through the sources (and quoted from the markdown docs) must resolve
+//! to real §-numbered headings, relative markdown links must point at
+//! files that exist, and `#fragment` links into markdown files must
+//! name real heading anchors (GitHub slug rules). This is the in-repo
+//! enforcement behind the CI markdown link-check
 //! (`tools/check_md_links.py` is the standalone face of the same rules).
 //!
 //! Note: the citation needle is assembled at runtime so this file does
@@ -74,19 +76,34 @@ fn design_md_section_citations_resolve() {
     );
 
     // Citations: every "DESIGN.md §<token>" in the rust/python sources
-    // (the in-code contract; prose files may quote the pattern loosely).
+    // and in the markdown docs (README/EXPERIMENTS/... quote sections
+    // in prose; a renumbering must not strand them). DESIGN.md itself
+    // is exempt — its heading lines define the tokens.
     let mut files = Vec::new();
     let keep = |p: &Path| {
-        matches!(p.extension().and_then(|e| e.to_str()), Some("rs") | Some("py"))
+        matches!(
+            p.extension().and_then(|e| e.to_str()),
+            Some("rs") | Some("py") | Some("md")
+        )
     };
     collect_files(&root, &keep, &mut files);
     assert!(files.len() > 20, "file walk looks broken: {} files", files.len());
     let needle = format!("{}.md §", "DESIGN");
     let mut checked = 0;
     for file in &files {
+        if file.file_name().and_then(|n| n.to_str()) == Some("DESIGN.md") {
+            continue;
+        }
+        let is_md = file.extension().and_then(|e| e.to_str()) == Some("md");
         let Ok(text) = fs::read_to_string(file) else { continue };
         for (idx, _) in text.match_indices(&needle) {
             let token = section_token(&text[idx + needle.len()..]);
+            if token.is_empty() && is_md {
+                // Markdown prose may quote the `§` pattern itself (same
+                // semantics as the CI regex); source files stay strict —
+                // an empty token there is a malformed citation.
+                continue;
+            }
             assert!(
                 !token.is_empty() && anchors.iter().any(|a| *a == token),
                 "{}: section citation `§{token}` has no matching heading in DESIGN.md \
@@ -99,6 +116,97 @@ fn design_md_section_citations_resolve() {
     // The repo is known to cite DESIGN.md from many modules; if this
     // drops to zero the scanner (not the docs) broke.
     assert!(checked >= 10, "only {checked} DESIGN.md § citations found");
+}
+
+/// GitHub's anchor slug for a heading: lowercase, keep alphanumerics /
+/// hyphens / underscores, spaces to hyphens, everything else dropped.
+fn github_slug(heading: &str) -> String {
+    let mut out = String::new();
+    for ch in heading.trim().chars() {
+        if ch.is_alphanumeric() || ch == '_' {
+            out.extend(ch.to_lowercase());
+        } else if ch == ' ' || ch == '-' {
+            out.push('-');
+        }
+    }
+    out
+}
+
+/// All GitHub-style anchors of one markdown file, with the `-N`
+/// suffixes GitHub appends to duplicated headings.
+fn heading_anchors(text: &str) -> Vec<String> {
+    let mut anchors = Vec::new();
+    let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
+    for line in text.lines() {
+        let hashes = line.chars().take_while(|&c| c == '#').count();
+        if hashes == 0 || hashes > 6 {
+            continue;
+        }
+        let title = &line[hashes..];
+        if !title.starts_with(char::is_whitespace) {
+            continue;
+        }
+        let slug = github_slug(title);
+        let n = counts.entry(slug.clone()).or_insert(0);
+        anchors.push(if *n == 0 { slug.clone() } else { format!("{slug}-{n}") });
+        *n += 1;
+    }
+    anchors
+}
+
+#[test]
+fn markdown_anchor_fragments_resolve() {
+    let root = repo_root();
+    let mut files = Vec::new();
+    let keep = |p: &Path| p.extension().and_then(|e| e.to_str()) == Some("md");
+    collect_files(&root, &keep, &mut files);
+    assert!(!files.is_empty());
+    let mut checked = 0;
+    for file in &files {
+        let Ok(text) = fs::read_to_string(file) else { continue };
+        let dir = file.parent().unwrap();
+        for (idx, _) in text.match_indices("](") {
+            let rest = &text[idx + 2..];
+            let Some(end) = rest.find(')') else { continue };
+            let target = &rest[..end];
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+                // Same semantics as the CI regex `[^)\s]+`: a target
+                // with whitespace (e.g. a markdown link title) is not
+                // a checkable path.
+                || target.contains(char::is_whitespace)
+            {
+                continue;
+            }
+            let Some((path_part, fragment)) = target.split_once('#') else { continue };
+            if fragment.is_empty() {
+                continue;
+            }
+            // Self-links have an empty path; only markdown targets have
+            // checkable heading anchors.
+            let resolved = if path_part.is_empty() {
+                file.clone()
+            } else {
+                dir.join(path_part)
+            };
+            if resolved.extension().and_then(|e| e.to_str()) != Some("md") {
+                continue;
+            }
+            let Ok(target_text) = fs::read_to_string(&resolved) else { continue };
+            let anchors = heading_anchors(&target_text);
+            assert!(
+                anchors.iter().any(|a| a.as_str() == fragment),
+                "{}: link `{target}` names no heading anchor of {} (anchors: {anchors:?})",
+                file.display(),
+                resolved.display()
+            );
+            checked += 1;
+        }
+    }
+    // DESIGN.md's own §Hardware-Adaptation self-link plus the
+    // EXPERIMENTS/README §7 deep links keep this nonzero.
+    assert!(checked >= 2, "only {checked} anchored markdown links found");
 }
 
 #[test]

@@ -1,0 +1,177 @@
+//! Acceptance tests of the impaired-link theory engine (DESIGN.md §7):
+//!
+//! 1. At zero impairment the [`ImpairedMsdModel`] must degenerate to the
+//!    ideal [`MsdModel`] — operator outputs, trajectories and steady
+//!    states within 1e-12 across the (N, L) sweep the experiments use.
+//! 2. For the `lossy-geometric` builtin (20 % per-link drops), the
+//!    closed-form steady-state MSD must agree with the Monte-Carlo
+//!    estimate within 1 dB — the impaired analogue of the paper's
+//!    Fig. 3 (left) model-accuracy claim.
+
+use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::linalg::Mat;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::scenario::{find, run_scenario};
+use dcd_lms::theory::{ImpairedMsdModel, MsdModel, TheorySetup};
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+fn setup(n: usize, l: usize, m: usize, mg: usize, mu: f64) -> TheorySetup {
+    let graph = Graph::ring(n, 1);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    TheorySetup {
+        n_nodes: n,
+        dim: l,
+        m,
+        m_grad: mg,
+        c,
+        mu: vec![mu; n],
+        sigma_u2: (0..n).map(|k| 0.8 + 0.1 * k as f64).collect(),
+        sigma_v2: (0..n).map(|k| 1e-3 * (1.0 + 0.2 * k as f64)).collect(),
+    }
+}
+
+fn random_sigma(nl: usize, rng: &mut Pcg64) -> Mat {
+    let mut m = Mat::zeros(nl, nl);
+    for i in 0..nl {
+        for j in 0..nl {
+            m[(i, j)] = rng.next_gaussian();
+        }
+    }
+    let mt = m.transpose();
+    &m * &mt
+}
+
+/// Zero impairment ⇒ the impaired model *is* the ideal model: operator
+/// outputs and iterated trajectories agree to 1e-12 on N ∈ {2, 5, 10}.
+#[test]
+fn zero_impairment_matches_ideal_model() {
+    let mut rng = Pcg64::new(2024, 0);
+    let ideal_imp = LinkImpairments::ideal();
+    for &n in &[2usize, 5, 10] {
+        for &l in &[2usize, 5] {
+            let m = ((3 * l) / 5).max(1);
+            let mg = (l / 2).max(1);
+            let s = setup(n, l, m, mg, 0.05);
+            let ideal = MsdModel::new(s.clone());
+            let impaired = ImpairedMsdModel::new(s, &ideal_imp).unwrap();
+            let nl = n * l;
+
+            // Operator equivalence on random symmetric weightings.
+            for _ in 0..3 {
+                let sigma = random_sigma(nl, &mut rng);
+                let a = ideal.apply(&sigma);
+                let b = impaired.apply(&sigma);
+                let tol = 1e-12 * a.max_abs().max(1.0);
+                let diff = (&b - &a).max_abs();
+                assert!(diff < tol, "N={n} L={l}: operator diff {diff} (tol {tol})");
+                let na = ideal.noise(&sigma);
+                let nb = impaired.noise(&sigma);
+                assert!(
+                    (na - nb).abs() <= 1e-12 * na.abs().max(1.0),
+                    "N={n} L={l}: noise {na} vs {nb}"
+                );
+            }
+
+            // Trajectory + steady-state equivalence.
+            let wo: Vec<f64> = (0..l).map(|j| 0.4 - 0.15 * j as f64).collect();
+            let ta = ideal.trajectory(&wo, 400);
+            let tb = impaired.trajectory(&wo, 400);
+            for (i, (a, b)) in ta.msd.iter().zip(tb.msd.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * a.abs().max(1e-30),
+                    "N={n} L={l} iter {i}: {a} vs {b}"
+                );
+            }
+            let (sa, _) = ideal.steady_state(&wo, 1e-10, 20_000);
+            let (sb, _) = impaired.steady_state(&wo, 1e-10, 20_000);
+            assert!(
+                (sa - sb).abs() <= 1e-12 * sa.abs(),
+                "N={n} L={l}: steady state {sa} vs {sb}"
+            );
+        }
+    }
+}
+
+/// The headline acceptance criterion: on the `lossy-geometric` builtin
+/// the predicted steady-state MSD lands within 1 dB of the Monte-Carlo
+/// estimate (the scenario runner computes both — simulation curve and
+/// DESIGN.md §7 theory column — from the same scenario).
+#[test]
+fn lossy_geometric_prediction_within_one_db() {
+    let mut sc = find("lossy-geometric").expect("registry has lossy-geometric");
+    assert_eq!(sc.impairments.drop_prob, 0.2, "preset changed under the test");
+    // Shrunk schedule (physics untouched): more runs to tame MC noise,
+    // a horizon that is still ≫ the convergence time constant.
+    sc.runs = 16;
+    sc.iters = 2_500;
+    sc.record_every = 1;
+    let out = run_scenario(&sc, None, true).unwrap();
+    let theory_db = out.theory_steady_db.expect("lossy-geometric is theory-anchored");
+    let gap = (theory_db - out.steady_db).abs();
+    assert!(
+        gap < 1.0,
+        "steady state: theory {theory_db:.2} dB vs sim {:.2} dB (|gap| {gap:.2} dB)",
+        out.steady_db
+    );
+    // And the transient tracks too (single-trace checkpoints, loose).
+    let sim = &out.series[0];
+    let theory = &out.series[1];
+    for &i in &[400usize, 1200, 2400] {
+        let s = sim.y[i - 1];
+        let t = theory.y[i - 1];
+        assert!((s - t).abs() < 3.0, "iter {i}: sim {s:.2} dB vs theory {t:.2} dB");
+    }
+}
+
+/// Bernoulli gating is part of the closed form: duty-cycled variant of
+/// the same preset still lands within tolerance (slightly looser — the
+/// gate correlates the combiner across links).
+#[test]
+fn gated_lossy_geometric_prediction_tracks_simulation() {
+    let mut sc = find("lossy-geometric").unwrap();
+    sc.impairments.gating = Gating::Probabilistic(0.7);
+    sc.runs = 12;
+    sc.iters = 2_500;
+    sc.record_every = 1;
+    let out = run_scenario(&sc, None, true).unwrap();
+    let theory_db = out.theory_steady_db.expect("probabilistic gating is in scope");
+    let gap = (theory_db - out.steady_db).abs();
+    assert!(
+        gap < 1.5,
+        "steady state: theory {theory_db:.2} dB vs sim {:.2} dB (|gap| {gap:.2} dB)",
+        out.steady_db
+    );
+}
+
+/// Quantization enters the prediction as a white floor Δ²/12 in the
+/// driving covariance. The white-noise model's validity condition
+/// (per-iteration increments ≳ Δ, DESIGN.md §7) does not hold at
+/// paper-scale step sizes — the simulated mid-tread quantizer stalls in
+/// its deadzone instead — so this test pins the *model*, not a tight
+/// sim gap: the predicted floor must rise with Δ and the scenario
+/// wiring must carry the quantized variant end to end.
+#[test]
+fn quantization_raises_the_predicted_floor() {
+    let mut sc = find("lossy-geometric").unwrap();
+    sc.impairments = LinkImpairments {
+        drop_prob: 0.0,
+        gating: Gating::Always,
+        quant_step: 2e-3,
+    };
+    sc.runs = 4;
+    sc.iters = 2_000;
+    sc.record_every = 1;
+    let quantized = run_scenario(&sc, None, true).unwrap();
+    let q_theory = quantized.theory_steady_db.unwrap();
+    sc.impairments.quant_step = 0.0;
+    let clean = run_scenario(&sc, None, true).unwrap();
+    let c_theory = clean.theory_steady_db.unwrap();
+    assert!(q_theory > c_theory + 1.0, "theory floor: {q_theory} vs {c_theory}");
+    // The simulated quantizer cannot do better than the ideal run.
+    assert!(
+        quantized.steady_db >= clean.steady_db - 0.3,
+        "sim: quantized {} dB better than clean {} dB",
+        quantized.steady_db,
+        clean.steady_db
+    );
+}

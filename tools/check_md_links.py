@@ -1,11 +1,16 @@
 #!/usr/bin/env python3
 """Markdown link check + DESIGN.md section-citation check.
 
-Standalone CI face of rust/tests/docs_integrity.rs — the same two rules:
+Standalone CI face of rust/tests/docs_integrity.rs — three rules:
 
 1. Every relative link target in a *.md file must exist on disk.
-2. Every DESIGN.md section citation (a § token after the file name) in
-   the rust/python sources must resolve to a §-numbered heading there.
+2. Every markdown link with a `#fragment` that points at a markdown
+   file (including self-links like `(#anchor)`) must name a real
+   heading anchor of the target file, using GitHub's slugification
+   (lowercase, punctuation stripped, spaces to dashes).
+3. Every DESIGN.md section citation (a § token after the file name) in
+   the rust/python sources *and* in the markdown docs must resolve to a
+   §-numbered heading there.
 
 Exit status 0 = clean, 1 = at least one dangling reference (all are
 listed). Run from anywhere: the repo root is located relative to this
@@ -23,6 +28,7 @@ LINK_RE = re.compile(r"\]\(([^)\s]+)\)")
 # '§' followed by alphanumerics/dashes.
 SECTION_RE = re.compile("DESIGN\\.md §([A-Za-z0-9-]+)")
 HEADING_RE = re.compile("^#+.*§([A-Za-z0-9-]+)", re.M)
+MD_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$", re.M)
 
 
 def walk(suffixes):
@@ -35,18 +41,49 @@ def walk(suffixes):
             yield path
 
 
+def github_slug(heading):
+    """GitHub's anchor slug for a heading: lowercase, keep only
+    alphanumerics / spaces / hyphens / underscores, spaces to hyphens."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug, flags=re.UNICODE)
+    return slug.replace(" ", "-")
+
+
+def heading_anchors(md_path, cache={}):
+    """All GitHub-style anchors of a markdown file (with the `-1`, `-2`
+    suffixes GitHub appends to duplicate headings)."""
+    if md_path in cache:
+        return cache[md_path]
+    anchors = set()
+    counts = {}
+    text = md_path.read_text(encoding="utf-8", errors="replace")
+    for _, title in MD_HEADING_RE.findall(text):
+        slug = github_slug(title)
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    cache[md_path] = anchors
+    return anchors
+
+
 def check_md_links(errors):
     for md in walk({".md"}):
         text = md.read_text(encoding="utf-8", errors="replace")
         for target in LINK_RE.findall(text):
-            if target.startswith(("http://", "https://", "#", "mailto:")):
+            if target.startswith(("http://", "https://", "mailto:")):
                 continue
-            path_part = target.split("#", 1)[0]
-            if not path_part:
-                continue
-            resolved = (md.parent / path_part).resolve()
+            path_part, _, fragment = target.partition("#")
+            resolved = (md.parent / path_part).resolve() if path_part else md.resolve()
             if not resolved.exists():
                 errors.append(f"{md.relative_to(ROOT)}: dangling link -> {target}")
+                continue
+            # Anchor fragments are only checkable for markdown targets.
+            if fragment and resolved.suffix == ".md":
+                if fragment not in heading_anchors(resolved):
+                    errors.append(
+                        f"{md.relative_to(ROOT)}: link -> {target} names no "
+                        f"heading anchor of {resolved.relative_to(ROOT)}"
+                    )
 
 
 def check_design_citations(errors):
@@ -59,8 +96,12 @@ def check_design_citations(errors):
         errors.append("DESIGN.md has no §-numbered headings")
         return
     me = Path(__file__).resolve()
-    for src in walk({".rs", ".py"}):
-        if src.resolve() == me:
+    # Markdown docs are part of the checked set: EXPERIMENTS.md and
+    # README.md cite DESIGN.md sections in prose, and a renumbering
+    # must not silently strand them. DESIGN.md itself is exempt (its
+    # own heading lines contain the tokens being defined).
+    for src in walk({".rs", ".py", ".md"}):
+        if src.resolve() in (me, design.resolve()):
             continue
         text = src.read_text(encoding="utf-8", errors="replace")
         for token in SECTION_RE.findall(text):
