@@ -1,0 +1,77 @@
+//! Shard-scaling curve: wall-clock of the `fifty-node-sweep` scenario's
+//! Monte-Carlo at 1 / 2 / 4 worker processes, written to
+//! `BENCH_shard.json` (the perf trajectory the sharded runner is judged
+//! against; DESIGN.md §8). Per-worker threads are pinned to 1 so the
+//! process axis is the only parallelism being measured — on a
+//! multi-core host the 4-shard row should show ≥ 2× over serial.
+//!
+//! Run `cargo build --release` first (the workers are spawned from the
+//! `dcd-lms` binary next to this bench executable); `--fast` or
+//! `DCD_BENCH_FAST=1` shrinks the workload.
+
+use std::time::Instant;
+
+use dcd_lms::bench_support::{fast_mode, write_bench_json, BenchRecord, Table};
+use dcd_lms::scenario::{find, run_scenario};
+
+fn main() {
+    let fast = fast_mode();
+    let mut sc = find("fifty-node-sweep").expect("registry scenario");
+    if fast {
+        sc.runs = 4;
+        sc.iters = 600;
+    }
+    // One thread per worker: the bench isolates the process axis.
+    sc.threads = 1;
+
+    // Spawn workers from the dcd-lms binary that sits next to this
+    // bench executable (target/<profile>/).
+    let mut bin = std::env::current_exe().expect("bench executable path");
+    bin.pop(); // deps/
+    bin.pop(); // release|debug
+    bin.push("dcd-lms");
+    if !bin.exists() {
+        println!(
+            "shard_scaling: worker binary {} missing — run `cargo build --release` first",
+            bin.display()
+        );
+        return;
+    }
+    std::env::set_var(dcd_lms::shard::WORKER_BIN_ENV, &bin);
+
+    let mut records = Vec::new();
+    let mut table = Table::new(&["shards", "wall (s)", "runs/s", "speedup"]);
+    let mut serial_secs = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        sc.shards = shards;
+        let t0 = Instant::now();
+        let out = run_scenario(&sc, None, true).expect("scenario run");
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(out.steady_db.is_finite(), "degenerate result at {shards} shards");
+        if shards == 1 {
+            serial_secs = secs;
+        }
+        let speedup = if secs > 0.0 { serial_secs / secs } else { 0.0 };
+        let runs_per_sec = if secs > 0.0 { sc.runs as f64 / secs } else { 0.0 };
+        table.row(&[
+            shards.to_string(),
+            format!("{secs:.2}"),
+            format!("{runs_per_sec:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        records.push(BenchRecord {
+            name: "fifty-node-sweep_mc".to_string(),
+            config: format!("shards={shards}"),
+            median_ns: secs * 1e9,
+            iters_per_sec: runs_per_sec,
+        });
+    }
+    table.print();
+    write_bench_json(
+        "BENCH_shard.json",
+        "sharded Monte-Carlo wall-clock scaling (fifty-node-sweep, 1 thread/worker)",
+        &records,
+    )
+    .expect("write BENCH_shard.json");
+    println!("wrote BENCH_shard.json");
+}

@@ -60,14 +60,26 @@ impl ParsedArgs {
 /// A subcommand definition.
 #[derive(Debug, Clone)]
 pub struct Command {
+    /// Subcommand name (the first argv token).
     pub name: &'static str,
+    /// One-line description shown in the global help.
     pub about: &'static str,
+    /// Declared options.
     pub opts: Vec<OptSpec>,
+    /// Hidden commands dispatch normally but are omitted from the
+    /// global help (internal plumbing like `shard-worker`).
+    pub hidden: bool,
 }
 
 impl Command {
     pub fn new(name: &'static str, about: &'static str) -> Self {
-        Self { name, about, opts: Vec::new() }
+        Self { name, about, opts: Vec::new(), hidden: false }
+    }
+
+    /// Mark the command as hidden (dispatchable, but not listed).
+    pub fn hide(mut self) -> Self {
+        self.hidden = true;
+        self
     }
 
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
@@ -147,7 +159,7 @@ pub struct App {
 impl App {
     pub fn help(&self) -> String {
         let mut s = format!("{} — {}\n\ncommands:\n", self.name, self.about);
-        for c in &self.commands {
+        for c in self.commands.iter().filter(|c| !c.hidden) {
             s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
         }
         s.push_str("\nrun `<command> --help` for command options\n");
@@ -228,5 +240,18 @@ mod tests {
         assert!(app.dispatch(&s(&["nope"])).is_err());
         assert!(app.dispatch(&s(&[])).is_err());
         assert!(app.dispatch(&s(&["run", "--help"])).is_err());
+    }
+
+    /// Hidden commands dispatch but stay out of the global help.
+    #[test]
+    fn hidden_commands_dispatch_without_listing() {
+        let app = App {
+            name: "dcd-lms",
+            about: "test",
+            commands: vec![cmd(), Command::new("secret", "internal").hide()],
+        };
+        assert!(!app.help().contains("secret"));
+        let (c, _) = app.dispatch(&s(&["secret"])).unwrap();
+        assert_eq!(c.name, "secret");
     }
 }

@@ -24,6 +24,9 @@ pub struct Exp1Config {
     pub runs: usize,
     pub iters: usize,
     pub seed: u64,
+    /// Worker processes the Monte-Carlo runs are sharded across
+    /// (1 = in-process; rust engine only — see DESIGN.md §8).
+    pub shards: usize,
 }
 
 impl Default for Exp1Config {
@@ -40,6 +43,7 @@ impl Default for Exp1Config {
             runs: 100,
             iters: 40_000,
             seed: 2017,
+            shards: 1,
         }
     }
 }
@@ -57,6 +61,9 @@ pub struct Exp2Config {
     pub runs: usize,
     pub iters: usize,
     pub seed: u64,
+    /// Worker processes per sweep point (1 = in-process; rust engine
+    /// only — see DESIGN.md §8).
+    pub shards: usize,
     /// M values for the CD sweep (ratio 2L/(M+L)).
     pub cd_m_values: Vec<usize>,
     /// (M, M_grad) pairs for the DCD sweep (ratio 2L/(M+M_grad)).
@@ -80,6 +87,7 @@ impl Default for Exp2Config {
             runs: 10,
             iters: 4_000,
             seed: 2018,
+            shards: 1,
             // Ratios 2L/(M+L): 100/95 ... 100/55 (paper: max 100/55 at M = 5).
             cd_m_values: vec![45, 35, 25, 15, 5],
             // Ratios 2L/(M+M_grad): from 100/90 up to 20 (M + M_grad = 5).
@@ -117,6 +125,9 @@ pub struct Exp3Config {
     pub sample_dt: f64,
     pub runs: usize,
     pub seed: u64,
+    /// Worker processes the WSN realizations are sharded across
+    /// (1 = in-process; see DESIGN.md §8).
+    pub shards: usize,
     // Table II step sizes.
     pub mu_diffusion: f64,
     pub mu_rcd: f64,
@@ -147,6 +158,7 @@ impl Default for Exp3Config {
             sample_dt: 500.0,
             runs: 4,
             seed: 2019,
+            shards: 1,
             mu_diffusion: 5.4e-3,
             mu_rcd: 1.14e-2,
             mu_partial: 4.4e-3,
@@ -189,6 +201,7 @@ impl Exp1Config {
             "runs" => self.runs => usize,
             "iters" => self.iters => usize,
             "seed" => self.seed => u64,
+            "shards" => self.shards => usize,
         });
         self.validate()
     }
@@ -199,6 +212,9 @@ impl Exp1Config {
         }
         if self.runs == 0 || self.iters == 0 {
             return Err("exp1: runs and iters must be positive".into());
+        }
+        if self.shards == 0 {
+            return Err("exp1: shards must be >= 1 (1 = in-process)".into());
         }
         Ok(())
     }
@@ -213,26 +229,110 @@ impl Exp2Config {
             "runs" => self.runs => usize,
             "iters" => self.iters => usize,
             "seed" => self.seed => u64,
+            "shards" => self.shards => usize,
         });
+        self.validate()
+    }
+
+    /// Semantic checks shared by the INI layer and `run_exp2` (which
+    /// also covers programmatic construction).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("exp2: shards must be >= 1 (1 = in-process)".into());
+        }
         Ok(())
     }
 }
 
 impl Exp3Config {
+    /// Apply `[exp3]` + `[energy]` overrides from an INI document. The
+    /// key set covers **every** field, so [`Exp3Config::to_ini_string`]
+    /// round-trips losslessly — the contract the WSN shard workers rely
+    /// on to replay the exact job (DESIGN.md §8).
     pub fn apply(&mut self, doc: &IniDoc) -> Result<(), String> {
         apply_override!(doc, "exp3", self, {
             "n_nodes" => self.n_nodes => usize,
             "dim" => self.dim => usize,
+            "sigma_v2" => self.sigma_v2 => f64,
+            "u2_min" => self.u2_min => f64,
+            "u2_max" => self.u2_max => f64,
+            "radius" => self.radius => f64,
             "duration" => self.duration => f64,
             "sample_dt" => self.sample_dt => f64,
             "runs" => self.runs => usize,
             "seed" => self.seed => u64,
+            "shards" => self.shards => usize,
+            "mu_diffusion" => self.mu_diffusion => f64,
+            "mu_rcd" => self.mu_rcd => f64,
+            "mu_partial" => self.mu_partial => f64,
+            "mu_cd" => self.mu_cd => f64,
+            "mu_dcd" => self.mu_dcd => f64,
+            "partial_m" => self.partial_m => usize,
             "dcd_m" => self.dcd_m => usize,
             "dcd_m_grad" => self.dcd_m_grad => usize,
             "cd_m" => self.cd_m => usize,
-            "partial_m" => self.partial_m => usize,
+            "rcd_fraction" => self.rcd_fraction => f64,
         });
+        apply_override!(doc, "energy", self, {
+            "c_s" => self.energy.c_s => f64,
+            "p_leak" => self.energy.p_leak => f64,
+            "p_sleep" => self.energy.p_sleep => f64,
+            "t_s_min" => self.energy.t_s_min => f64,
+            "t_s_max" => self.energy.t_s_max => f64,
+            "v_ref" => self.energy.v_ref => f64,
+            "eta" => self.energy.eta => f64,
+            "e0" => self.energy.e0 => f64,
+            "f" => self.energy.f => f64,
+            "sigma_n2" => self.energy.sigma_n2 => f64,
+            "v_max" => self.energy.v_max => f64,
+        });
+        if self.shards == 0 {
+            return Err("exp3: shards must be >= 1 (1 = in-process)".into());
+        }
         Ok(())
+    }
+
+    /// Serialize every simulation-defining field (`[exp3]` + `[energy]`;
+    /// the `shards` execution knob is deliberately excluded — a shard
+    /// worker must never shard recursively). `apply` on the output
+    /// reproduces the config exactly: f64 fields go through rust's
+    /// shortest-round-trip formatter.
+    pub fn to_ini_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str("[exp3]\n");
+        s.push_str(&format!("n_nodes = {}\n", self.n_nodes));
+        s.push_str(&format!("dim = {}\n", self.dim));
+        s.push_str(&format!("sigma_v2 = {}\n", self.sigma_v2));
+        s.push_str(&format!("u2_min = {}\n", self.u2_min));
+        s.push_str(&format!("u2_max = {}\n", self.u2_max));
+        s.push_str(&format!("radius = {}\n", self.radius));
+        s.push_str(&format!("duration = {}\n", self.duration));
+        s.push_str(&format!("sample_dt = {}\n", self.sample_dt));
+        s.push_str(&format!("runs = {}\n", self.runs));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("mu_diffusion = {}\n", self.mu_diffusion));
+        s.push_str(&format!("mu_rcd = {}\n", self.mu_rcd));
+        s.push_str(&format!("mu_partial = {}\n", self.mu_partial));
+        s.push_str(&format!("mu_cd = {}\n", self.mu_cd));
+        s.push_str(&format!("mu_dcd = {}\n", self.mu_dcd));
+        s.push_str(&format!("partial_m = {}\n", self.partial_m));
+        s.push_str(&format!("dcd_m = {}\n", self.dcd_m));
+        s.push_str(&format!("dcd_m_grad = {}\n", self.dcd_m_grad));
+        s.push_str(&format!("cd_m = {}\n", self.cd_m));
+        s.push_str(&format!("rcd_fraction = {}\n", self.rcd_fraction));
+        s.push_str("\n[energy]\n");
+        s.push_str(&format!("c_s = {}\n", self.energy.c_s));
+        s.push_str(&format!("p_leak = {}\n", self.energy.p_leak));
+        s.push_str(&format!("p_sleep = {}\n", self.energy.p_sleep));
+        s.push_str(&format!("t_s_min = {}\n", self.energy.t_s_min));
+        s.push_str(&format!("t_s_max = {}\n", self.energy.t_s_max));
+        s.push_str(&format!("v_ref = {}\n", self.energy.v_ref));
+        s.push_str(&format!("eta = {}\n", self.energy.eta));
+        s.push_str(&format!("e0 = {}\n", self.energy.e0));
+        s.push_str(&format!("f = {}\n", self.energy.f));
+        s.push_str(&format!("sigma_n2 = {}\n", self.energy.sigma_n2));
+        s.push_str(&format!("v_max = {}\n", self.energy.v_max));
+        s
     }
 
     /// The paper's compression check: all compared algorithms sit at
@@ -289,6 +389,58 @@ mod tests {
         cfg.apply(&doc).unwrap();
         assert_eq!(cfg.runs, 5);
         assert_eq!(cfg.mu, 0.01);
+    }
+
+    #[test]
+    fn exp3_ini_roundtrip_is_lossless() {
+        let mut cfg = Exp3Config {
+            n_nodes: 17,
+            dim: 9,
+            sigma_v2: 2.5e-3,
+            u2_min: 0.45,
+            u2_max: 1.35,
+            radius: 0.27,
+            duration: 12_345.5,
+            sample_dt: 111.25,
+            runs: 3,
+            seed: 77,
+            mu_dcd: 7.3e-3,
+            rcd_fraction: 0.15,
+            ..Exp3Config::default()
+        };
+        cfg.energy.eta = 0.75;
+        cfg.energy.sigma_n2 = 2e-6;
+        let text = cfg.to_ini_string();
+        let doc = IniDoc::parse(&text).unwrap();
+        let mut back = Exp3Config::default();
+        back.apply(&doc).unwrap();
+        // Field-by-field spot checks incl. the energy section; the f64
+        // fields must round-trip exactly (shard workers replay this).
+        assert_eq!(back.n_nodes, 17);
+        assert_eq!(back.dim, 9);
+        assert_eq!(back.sigma_v2.to_bits(), cfg.sigma_v2.to_bits());
+        assert_eq!(back.radius.to_bits(), cfg.radius.to_bits());
+        assert_eq!(back.duration.to_bits(), cfg.duration.to_bits());
+        assert_eq!(back.sample_dt.to_bits(), cfg.sample_dt.to_bits());
+        assert_eq!(back.mu_dcd.to_bits(), cfg.mu_dcd.to_bits());
+        assert_eq!(back.mu_cd.to_bits(), cfg.mu_cd.to_bits());
+        assert_eq!(back.rcd_fraction.to_bits(), cfg.rcd_fraction.to_bits());
+        assert_eq!(back.energy.eta.to_bits(), cfg.energy.eta.to_bits());
+        assert_eq!(back.energy.sigma_n2.to_bits(), cfg.energy.sigma_n2.to_bits());
+        assert_eq!(back.seed, 77);
+        assert_eq!(back.runs, 3);
+        // `shards` is an execution knob, not part of the job payload.
+        assert_eq!(back.shards, 1);
+    }
+
+    #[test]
+    fn shards_zero_rejected_in_configs() {
+        let doc = IniDoc::parse("[exp1]\nshards = 0\n").unwrap();
+        assert!(Exp1Config::default().apply(&doc).is_err());
+        let doc = IniDoc::parse("[exp2]\nshards = 0\n").unwrap();
+        assert!(Exp2Config::default().apply(&doc).is_err());
+        let doc = IniDoc::parse("[exp3]\nshards = 0\n").unwrap();
+        assert!(Exp3Config::default().apply(&doc).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub struct RunResult {
 
 /// Synchronous round scheduler.
 pub struct RoundScheduler<'a> {
+    /// The streaming data source every iteration samples from.
     pub model: &'a DataModel,
     /// Record MSD every `record_every` iterations (1 = every iteration).
     pub record_every: usize,
@@ -38,6 +39,7 @@ pub struct RoundScheduler<'a> {
 }
 
 impl<'a> RoundScheduler<'a> {
+    /// A scheduler over `model` recording every iteration, ideal links.
     pub fn new(model: &'a DataModel) -> Self {
         Self { model, record_every: 1, impairments: None }
     }

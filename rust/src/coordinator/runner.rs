@@ -34,14 +34,41 @@ use super::round::{RoundScheduler, RunResult};
 /// Monte-Carlo configuration.
 #[derive(Debug, Clone)]
 pub struct MonteCarlo {
+    /// Independent realizations to average.
     pub runs: usize,
+    /// Iterations per realization.
     pub iters: usize,
+    /// Master seed; realization `r` draws from stream `r + 1`.
     pub seed: u64,
     /// Thin the recorded MSD trace (1 = every iteration).
     pub record_every: usize,
     /// Worker threads for the rust engine: 0 = auto (`DCD_MC_THREADS`
     /// env var, else the machine's available parallelism).
     pub threads: usize,
+}
+
+/// Split `runs` realizations into `shards` contiguous run-index ranges
+/// `(start, count)`, in run order, as evenly as possible (the first
+/// `runs % shards` shards get one extra run). Empty ranges are never
+/// emitted: with more shards than runs the plan has `runs` singleton
+/// entries. This is the shard layout the multi-process supervisor
+/// executes (DESIGN.md §8); keeping the ranges contiguous *and* merging
+/// shard outputs back in run order is what preserves bit-identity with
+/// [`MonteCarlo::run_rust_serial`].
+pub fn shard_ranges(runs: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, runs.max(1));
+    let base = runs / shards;
+    let extra = runs % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut start = 0;
+    for i in 0..shards {
+        let count = base + usize::from(i < extra);
+        if count > 0 {
+            ranges.push((start, count));
+            start += count;
+        }
+    }
+    ranges
 }
 
 /// Resolve a requested worker count: explicit value wins, else the
@@ -113,6 +140,7 @@ pub struct McResult {
     pub steady_state: f64,
     /// Mean scalars transmitted per run (rust engine only; 0 for xla).
     pub scalars_per_run: f64,
+    /// Number of realizations averaged.
     pub runs: usize,
 }
 
@@ -130,6 +158,7 @@ pub enum XlaAlgo {
 }
 
 impl XlaAlgo {
+    /// The artifact-manifest algorithm name this variant executes.
     pub fn module_algo(&self) -> &'static str {
         match self {
             XlaAlgo::Dcd { .. } => "dcd",
@@ -166,14 +195,32 @@ impl MonteCarlo {
         if threads <= 1 {
             return self.run_rust_serial_with(model, impairments, make_alg);
         }
-        let results = parallel_ordered(self.runs, threads, |r| {
+        self.merge(self.run_rust_range(model, impairments, make_alg, 0, self.runs).into_iter())
+    }
+
+    /// Execute the contiguous realization block
+    /// `[run_start, run_start + count)` and return the per-run results
+    /// **in run order**. Realization `r` always draws from stream
+    /// `r + 1` of the master seed, so a block produces exactly the
+    /// per-run results the full runner would — this is what a shard
+    /// worker process executes (DESIGN.md §8). Within the block the
+    /// runs fan across [`MonteCarlo::threads`] workers.
+    pub fn run_rust_range(
+        &self,
+        model: &DataModel,
+        impairments: Option<&LinkImpairments>,
+        make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
+        run_start: usize,
+        count: usize,
+    ) -> Vec<RunResult> {
+        let threads = resolve_threads(self.threads, count);
+        parallel_ordered(count, threads, |i| {
             let mut sched = RoundScheduler::new(model);
             sched.record_every = self.record_every.max(1);
             sched.impairments = impairments.cloned();
             let mut alg = make_alg();
-            sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1)
-        });
-        self.merge(results.into_iter())
+            sched.run(alg.as_mut(), self.iters, self.seed, (run_start + i) as u64 + 1)
+        })
     }
 
     /// Serial reference path (also the `threads == 1` fast path); the
@@ -204,7 +251,11 @@ impl MonteCarlo {
 
     /// Fold per-run results in run order (the order of the iterator) so
     /// the floating-point accumulation is independent of scheduling.
-    fn merge(&self, results: impl Iterator<Item = RunResult>) -> McResult {
+    /// The multi-process shard supervisor reuses this exact fold after
+    /// reassembling worker outputs by run index, which is why sharded
+    /// results stay bit-identical to [`Self::run_rust_serial`]
+    /// (DESIGN.md §8).
+    pub(crate) fn merge(&self, results: impl Iterator<Item = RunResult>) -> McResult {
         let mut acc = TraceAccumulator::new();
         let mut scalars = 0.0;
         for res in results {
@@ -449,6 +500,61 @@ mod tests {
             Box::new(Dcd::new(net.clone(), 2, 1))
         });
         assert_eq!(plain.msd, ideal.msd);
+    }
+
+    /// Contiguous shard plans: cover every run exactly once, in order,
+    /// as evenly as possible, and never emit empty ranges.
+    #[test]
+    fn shard_plan_covers_runs_contiguously() {
+        assert_eq!(shard_ranges(10, 1), vec![(0, 10)]);
+        assert_eq!(shard_ranges(10, 2), vec![(0, 5), (5, 5)]);
+        assert_eq!(shard_ranges(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(shard_ranges(3, 8), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(shard_ranges(5, 0), vec![(0, 5)]); // clamped to 1
+        assert_eq!(shard_ranges(0, 4), Vec::<(usize, usize)>::new());
+        for (runs, shards) in [(100, 7), (17, 4), (1, 1), (2, 2)] {
+            let plan = shard_ranges(runs, shards);
+            let mut next = 0;
+            for &(start, count) in &plan {
+                assert_eq!(start, next, "gap in plan {plan:?}");
+                assert!(count > 0);
+                next = start + count;
+            }
+            assert_eq!(next, runs, "plan {plan:?} does not cover {runs} runs");
+        }
+    }
+
+    /// Per-run results from a sharded range plan, concatenated in run
+    /// order, are exactly the serial runner's realizations: merging them
+    /// reproduces the full result bit-for-bit.
+    #[test]
+    fn range_runs_merge_to_full_result() {
+        let (model, net) = small_case();
+        let mc = MonteCarlo { runs: 7, iters: 200, seed: 31, record_every: 1, threads: 1 };
+        let serial = mc.run_rust_serial(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
+        for shards in [2usize, 3, 7] {
+            let mut pieces = Vec::new();
+            for (start, count) in shard_ranges(mc.runs, shards) {
+                pieces.extend(mc.run_rust_range(
+                    &model,
+                    None,
+                    || Box::new(Dcd::new(net.clone(), 2, 1)),
+                    start,
+                    count,
+                ));
+            }
+            let merged = mc.merge(pieces.into_iter());
+            assert_eq!(merged.msd, serial.msd, "shards = {shards}");
+            assert_eq!(
+                merged.steady_state.to_bits(),
+                serial.steady_state.to_bits(),
+                "shards = {shards}"
+            );
+            assert_eq!(
+                merged.scalars_per_run.to_bits(),
+                serial.scalars_per_run.to_bits()
+            );
+        }
     }
 
     /// resolve_threads: explicit request wins and is capped by the job

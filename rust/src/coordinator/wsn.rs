@@ -34,6 +34,7 @@ pub enum WsnAlgo {
 }
 
 impl WsnAlgo {
+    /// Display label used in figure legends and result-CSV headers.
     pub fn label(&self) -> String {
         match self {
             WsnAlgo::Diffusion => "diffusion-lms".into(),
@@ -50,6 +51,7 @@ impl WsnAlgo {
         }
     }
 
+    /// Table I active-phase energy e_a (J) for one activation.
     pub fn active_energy(&self) -> f64 {
         match self {
             WsnAlgo::Diffusion => ActiveEnergy::DIFFUSION.0,
@@ -64,8 +66,11 @@ impl WsnAlgo {
 /// WSN experiment configuration.
 #[derive(Clone)]
 pub struct WsnConfig {
+    /// Graph, combiners and step sizes of the network.
     pub net: NetworkConfig,
+    /// Which algorithm runs on the motes.
     pub algo: WsnAlgo,
+    /// ENO energy-model constants (Table I).
     pub energy: EnergyParams,
     /// Per-node harvest scales (lighting levels on the hill).
     pub harvest_scale: Vec<f64>,
@@ -99,12 +104,18 @@ pub struct WsnSimulation {
 }
 
 impl WsnSimulation {
+    /// Assemble a simulation; panics on a node-count mismatch between
+    /// the network, the harvest scales and the data model.
     pub fn new(cfg: WsnConfig, model: DataModel) -> Self {
         assert_eq!(cfg.net.n_nodes(), model.n_nodes);
         assert_eq!(cfg.harvest_scale.len(), model.n_nodes);
         Self { cfg, model }
     }
 
+    /// One full realization over the virtual-time horizon: every node
+    /// duty-cycles per the ENO model and the sampled telemetry/MSD land
+    /// in the returned [`WsnResult`]. Deterministic in `seed` (the
+    /// Monte-Carlo drivers use per-run seeds `base + r·7919 + 1`).
     pub fn run(&self, seed: u64) -> WsnResult {
         let n = self.model.n_nodes;
         let l = self.model.dim;

@@ -10,11 +10,40 @@ use crate::linalg::Mat;
 use crate::metrics::{to_db, write_csv, write_json, Series};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
+use crate::scenario::{AlgorithmSpec, Scenario, TopologySpec};
 use crate::theory::{MsdModel, TheorySetup};
 use crate::topology::{combination_matrix, Graph, Rule};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::Engine;
+
+/// The exp1 simulation of one `(M, M_grad)` setting expressed as a
+/// scenario job — the payload a shard worker replays. The mapping is
+/// exact: `mc_parts` consumes the master stream in the same order as
+/// [`run_exp1`] (paper-10 topology draws nothing, then the data model),
+/// `combine_rule = identity` is `Mat::eye`, and all three Fig. 3
+/// algorithms are `Dcd` instances here, so sharded results match the
+/// in-process runner byte for byte (asserted by the CI CSV diff and
+/// `rust/tests/shard.rs`).
+fn sim_scenario(cfg: &Exp1Config, m: usize, m_grad: usize, record_every: usize) -> Scenario {
+    let mut sc = Scenario::base("exp1", "exp1 simulation block (sharded)");
+    sc.topology = TopologySpec::Paper10;
+    sc.combine_rule = Rule::Identity;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = cfg.dim;
+    sc.u2_min = cfg.u2_min;
+    sc.u2_max = cfg.u2_max;
+    sc.sigma_v2 = cfg.sigma_v2;
+    sc.algorithm = AlgorithmSpec::Dcd { m, m_grad };
+    sc.mu = cfg.mu;
+    sc.runs = cfg.runs;
+    sc.iters = cfg.iters;
+    sc.seed = cfg.seed;
+    sc.record_every = record_every;
+    sc.threads = 0;
+    sc.shards = cfg.shards;
+    sc
+}
 
 /// All series of Fig. 3 (left) plus summary numbers.
 #[derive(Debug, Clone)]
@@ -40,6 +69,11 @@ pub fn run_exp1(
     quiet: bool,
 ) -> Result<Exp1Output> {
     cfg.validate().map_err(anyhow::Error::msg)?;
+    if cfg.shards > 1 && engine == Engine::Xla {
+        return Err(anyhow!(
+            "exp1: --shards applies to the rust engine (the xla engine runs in-process)"
+        ));
+    }
     let mut rng = Pcg64::new(cfg.seed, 0);
     let graph = Graph::paper_ten_node();
     assert_eq!(graph.n(), cfg.n_nodes, "exp1 preset is the 10-node network");
@@ -108,8 +142,13 @@ pub fn run_exp1(
         // --- simulation -------------------------------------------------
         let res = match engine {
             Engine::Rust => {
-                let net = net.clone();
-                mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, m_grad)))
+                if cfg.shards > 1 {
+                    let sc = sim_scenario(cfg, m, m_grad, record_every);
+                    crate::shard::run_scenario_sharded(&sc).map_err(anyhow::Error::msg)?
+                } else {
+                    let net = net.clone();
+                    mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, m_grad)))
+                }
             }
             Engine::Xla => mc.run_xla(
                 xla_rt.as_mut().unwrap(),

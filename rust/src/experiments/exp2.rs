@@ -15,10 +15,40 @@ use crate::linalg::Mat;
 use crate::metrics::{to_db, write_csv, write_json, Series};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
+use crate::scenario::{AlgorithmSpec, Scenario, TopologySpec};
 use crate::topology::{combination_matrix, Graph, Rule};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::Engine;
+
+/// The exp2 geometric-graph connection radius (the paper does not print
+/// this topology; the value is part of the reproduction's contract and
+/// is shared with the sharded job description below).
+const EXP2_RADIUS: f64 = 0.25;
+
+/// One exp2 sweep point as a scenario job for the shard workers —
+/// `mc_parts` rebuilds the geometric graph and data model from the same
+/// master stream in the same order as [`run_exp2`], so per-run results
+/// are bit-identical to the in-process sweep (DESIGN.md §8).
+fn sim_scenario(cfg: &Exp2Config, m: usize, m_grad: usize, record_every: usize) -> Scenario {
+    let mut sc = Scenario::base("exp2", "exp2 sweep point (sharded)");
+    sc.topology = TopologySpec::Geometric { n: cfg.n_nodes, radius: EXP2_RADIUS };
+    sc.combine_rule = Rule::Identity;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = cfg.dim;
+    sc.u2_min = cfg.u2_min;
+    sc.u2_max = cfg.u2_max;
+    sc.sigma_v2 = cfg.sigma_v2;
+    sc.algorithm = AlgorithmSpec::Dcd { m, m_grad };
+    sc.mu = cfg.mu;
+    sc.runs = cfg.runs;
+    sc.iters = cfg.iters;
+    sc.seed = cfg.seed;
+    sc.record_every = record_every;
+    sc.threads = 0;
+    sc.shards = cfg.shards;
+    sc
+}
 
 #[derive(Debug, Clone)]
 pub struct Exp2Output {
@@ -36,10 +66,16 @@ pub fn run_exp2(
     out_dir: Option<&str>,
     quiet: bool,
 ) -> Result<Exp2Output> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    if cfg.shards > 1 && engine == Engine::Xla {
+        return Err(anyhow!(
+            "exp2: --shards applies to the rust engine (the xla engine runs in-process)"
+        ));
+    }
     let mut rng = Pcg64::new(cfg.seed, 0);
     // Experiment 2 network: connected random geometric graph over the
     // unit square (the paper does not print this topology).
-    let graph = Graph::random_geometric(cfg.n_nodes, 0.25, &mut rng);
+    let graph = Graph::random_geometric(cfg.n_nodes, EXP2_RADIUS, &mut rng);
     let c = combination_matrix(&graph, Rule::Metropolis);
     let a = Mat::eye(cfg.n_nodes);
     let model = DataModel::paper(
@@ -73,8 +109,13 @@ pub fn run_exp2(
     let mut run_point = |m: usize, m_grad: usize| -> Result<f64> {
         let res = match engine {
             Engine::Rust => {
-                let net = net.clone();
-                mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, m_grad)))
+                if cfg.shards > 1 {
+                    let sc = sim_scenario(cfg, m, m_grad, mc.record_every);
+                    crate::shard::run_scenario_sharded(&sc).map_err(anyhow::Error::msg)?
+                } else {
+                    let net = net.clone();
+                    mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, m_grad)))
+                }
             }
             Engine::Xla => mc.run_xla(
                 xla_rt.as_mut().unwrap(),

@@ -15,11 +15,13 @@ use crate::config::Exp3Config;
 use crate::coordinator::runner::{parallel_ordered, resolve_threads};
 use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnResult, WsnSimulation};
 use crate::datamodel::DataModel;
+use crate::linalg::Mat;
 use crate::metrics::{to_db, write_csv, write_json, Series, TraceAccumulator};
 use crate::rng::Pcg64;
 use crate::topology::{combination_matrix, Graph, Rule};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+/// Everything `run_exp3` produces.
 #[derive(Debug, Clone)]
 pub struct Exp3Output {
     /// MSD-vs-time series, one per algorithm (dB).
@@ -34,8 +36,9 @@ pub struct Exp3Output {
 
 /// The six algorithm settings of Fig. 4 (right). `mean_deg` sizes the
 /// RCD poll count: m_links ≈ rcd_fraction · mean degree (p = 1/r·2,
-/// Table II's r = 20 ⇒ p = 0.1), at least one link.
-fn settings(cfg: &Exp3Config, mean_deg: f64) -> Vec<(WsnAlgo, f64)> {
+/// Table II's r = 20 ⇒ p = 0.1), at least one link. Shared with the
+/// WSN shard worker, which addresses one entry by index (DESIGN.md §8).
+pub(crate) fn exp3_settings(cfg: &Exp3Config, mean_deg: f64) -> Vec<(WsnAlgo, f64)> {
     let m_links = ((cfg.rcd_fraction * mean_deg).round() as usize).max(1);
     vec![
         (WsnAlgo::Diffusion, cfg.mu_diffusion),
@@ -53,27 +56,80 @@ fn settings(cfg: &Exp3Config, mean_deg: f64) -> Vec<(WsnAlgo, f64)> {
     ]
 }
 
+/// The deterministic exp3 setup (hill topology, harvest scales,
+/// combiners, data model) — everything derived from the config and the
+/// master stream `Pcg64::new(seed, 0)`. `run_exp3` and the WSN shard
+/// workers build their simulations through this one constructor, which
+/// is what keeps sharded realizations bit-identical to in-process ones.
+pub(crate) struct Exp3Parts {
+    pub graph: Graph,
+    pub harvest_scale: Vec<f64>,
+    pub c: Mat,
+    pub a: Mat,
+    pub model: DataModel,
+    pub mean_deg: f64,
+}
+
+impl Exp3Parts {
+    /// Replay the setup from the config (consumes the master stream in
+    /// the fixed order: topology, then data model).
+    pub fn build(cfg: &Exp3Config) -> Self {
+        let mut rng = Pcg64::new(cfg.seed, 0);
+        let graph = Graph::random_geometric(cfg.n_nodes, cfg.radius, &mut rng);
+        // Lighting level grows with altitude (y-coordinate of the hill).
+        let harvest_scale: Vec<f64> = graph
+            .positions
+            .as_ref()
+            .expect("geometric graph has positions")
+            .iter()
+            .map(|&(_, y)| 0.3 + 0.7 * y)
+            .collect();
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let model = DataModel::paper(
+            cfg.n_nodes,
+            cfg.dim,
+            cfg.u2_min,
+            cfg.u2_max,
+            cfg.sigma_v2,
+            &mut rng,
+        );
+        let mean_deg = (0..cfg.n_nodes)
+            .map(|k| graph.neighbors(k).len())
+            .sum::<usize>() as f64
+            / cfg.n_nodes as f64;
+        Self { graph, harvest_scale, c, a, model, mean_deg }
+    }
+
+    /// Assemble the event-driven simulation for one algorithm setting.
+    pub fn simulation(&self, cfg: &Exp3Config, algo: WsnAlgo, mu: f64) -> WsnSimulation {
+        let net = NetworkConfig {
+            graph: self.graph.clone(),
+            c: self.c.clone(),
+            a: self.a.clone(),
+            mu: vec![mu; cfg.n_nodes],
+            dim: cfg.dim,
+        };
+        let wsn_cfg = WsnConfig {
+            net,
+            algo,
+            energy: cfg.energy.clone(),
+            harvest_scale: self.harvest_scale.clone(),
+            duration: cfg.duration,
+            sample_dt: cfg.sample_dt,
+        };
+        WsnSimulation::new(wsn_cfg, self.model.clone())
+    }
+}
+
+/// Run Experiment 3 end to end; with `out_dir` set, writes
+/// `exp3_fig4_right_msd.csv`, `exp3_fig4_center_energy.csv` and
+/// `exp3_fig4.json` there.
 pub fn run_exp3(cfg: &Exp3Config, out_dir: Option<&str>, quiet: bool) -> Result<Exp3Output> {
-    let mut rng = Pcg64::new(cfg.seed, 0);
-    let graph = Graph::random_geometric(cfg.n_nodes, cfg.radius, &mut rng);
-    // Lighting level grows with altitude (y-coordinate of the hill).
-    let harvest_scale: Vec<f64> = graph
-        .positions
-        .as_ref()
-        .expect("geometric graph has positions")
-        .iter()
-        .map(|&(_, y)| 0.3 + 0.7 * y)
-        .collect();
-    let c = combination_matrix(&graph, Rule::Metropolis);
-    let a = combination_matrix(&graph, Rule::Metropolis);
-    let model = DataModel::paper(
-        cfg.n_nodes,
-        cfg.dim,
-        cfg.u2_min,
-        cfg.u2_max,
-        cfg.sigma_v2,
-        &mut rng,
-    );
+    if cfg.shards == 0 {
+        return Err(anyhow!("exp3: shards must be >= 1 (1 = in-process)"));
+    }
+    let parts = Exp3Parts::build(cfg);
 
     if !quiet {
         println!("exp3: Table II compression check (target r = 20; CD 80/65 ≈ 1.23):");
@@ -87,33 +143,20 @@ pub fn run_exp3(cfg: &Exp3Config, out_dir: Option<&str>, quiet: bool) -> Result<
     let mut harvest_series: Vec<Series> = Vec::new();
     let mut summary = Vec::new();
 
-    let mean_deg = (0..cfg.n_nodes)
-        .map(|k| graph.neighbors(k).len())
-        .sum::<usize>() as f64
-        / cfg.n_nodes as f64;
-
-    for (algo, mu) in settings(cfg, mean_deg) {
-        let net = NetworkConfig {
-            graph: graph.clone(),
-            c: c.clone(),
-            a: a.clone(),
-            mu: vec![mu; cfg.n_nodes],
-            dim: cfg.dim,
+    let settings = exp3_settings(cfg, parts.mean_deg);
+    for (algo_index, (algo, mu)) in settings.into_iter().enumerate() {
+        // Fan the independent WSN realizations across worker threads —
+        // or, with `shards > 1`, across worker processes. Every run
+        // draws from its own seed and the results are merged in run
+        // order, so the averages are bit-identical either way (same
+        // scheme as coordinator::runner::run_rust; DESIGN.md §8).
+        let runs = if cfg.shards > 1 {
+            crate::shard::run_wsn_sharded(cfg, algo_index, cfg.shards)
+                .map_err(anyhow::Error::msg)?
+        } else {
+            let sim = parts.simulation(cfg, algo, mu);
+            run_realizations(&sim, cfg.seed, cfg.runs)
         };
-        let wsn_cfg = WsnConfig {
-            net,
-            algo,
-            energy: cfg.energy.clone(),
-            harvest_scale: harvest_scale.clone(),
-            duration: cfg.duration,
-            sample_dt: cfg.sample_dt,
-        };
-        let sim = WsnSimulation::new(wsn_cfg, model.clone());
-        // Fan the independent WSN realizations across worker threads;
-        // every run draws from its own seed and the results are merged
-        // in run order, so the averages are bit-identical for any
-        // thread count (same scheme as coordinator::runner::run_rust).
-        let runs = run_realizations(&sim, cfg.seed, cfg.runs);
         let mut msd_acc = TraceAccumulator::new();
         let mut sleep_acc = TraceAccumulator::new();
         let mut harv_acc = TraceAccumulator::new();

@@ -29,6 +29,10 @@ pub struct Exp4Config {
     pub iters: usize,
     /// Master seed override (`None` = the scenario's own seed).
     pub seed: Option<u64>,
+    /// Worker processes per sweep point (1 = in-process; the
+    /// simulation half of each point shards, the closed-form theory
+    /// column is cheap and stays local — DESIGN.md §8).
+    pub shards: usize,
 }
 
 impl Default for Exp4Config {
@@ -39,6 +43,7 @@ impl Default for Exp4Config {
             runs: 0,
             iters: 0,
             seed: None,
+            shards: 1,
         }
     }
 }
@@ -69,6 +74,9 @@ pub fn run_exp4(cfg: &Exp4Config, out_dir: Option<&str>, quiet: bool) -> Result<
     if cfg.drop_probs.is_empty() {
         return Err(anyhow!("exp4: empty drop-probability list"));
     }
+    if cfg.shards == 0 {
+        return Err(anyhow!("exp4: shards must be >= 1 (1 = in-process)"));
+    }
     let base = find(&cfg.scenario).ok_or_else(|| {
         anyhow!(
             "exp4: unknown scenario {:?} (run `scenario list` for the registry)",
@@ -97,6 +105,7 @@ pub fn run_exp4(cfg: &Exp4Config, out_dir: Option<&str>, quiet: bool) -> Result<
         if let Some(seed) = cfg.seed {
             sc.seed = seed;
         }
+        sc.shards = cfg.shards;
         let out = run_scenario(&sc, None, true).map_err(anyhow::Error::msg)?;
         let theory_db = out.theory_steady_db.ok_or_else(|| {
             anyhow!(

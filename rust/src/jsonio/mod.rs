@@ -79,6 +79,20 @@ impl Json {
         })
     }
 
+    /// The value as a `u64`, if it is a non-negative integer that an f64
+    /// represents exactly (|x| ≤ 2⁵³ — the shard frame protocol ships
+    /// communication counters through this, and they must round-trip
+    /// bit-exactly; see DESIGN.md §8).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|x| {
+            if x >= 0.0 && x.fract() == 0.0 && x <= 9_007_199_254_740_992.0 {
+                Some(x as u64)
+            } else {
+                None
+            }
+        })
+    }
+
     /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
@@ -442,6 +456,19 @@ mod tests {
         assert_eq!(v.get("a").as_arr().unwrap()[0].as_usize(), Some(1));
         assert_eq!(v.get("c").as_str(), Some("x\ny"));
         assert_eq!(v.get("missing"), &Json::Null);
+    }
+
+    #[test]
+    fn u64_accessor_is_exact() {
+        assert_eq!(Json::parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(Json::parse("4294967296").unwrap().as_u64(), Some(1 << 32));
+        assert_eq!(
+            Json::parse("9007199254740992").unwrap().as_u64(),
+            Some(9_007_199_254_740_992)
+        );
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("\"7\"").unwrap().as_u64(), None);
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //! dcd-lms validate                          # rust engine ≡ xla engine
 //! dcd-lms info                              # artifact manifest
 //! ```
+//!
+//! `exp1..exp4` and `scenario run|sweep` accept `--shards N` to fan the
+//! Monte-Carlo realizations across N worker processes (`shard-worker`,
+//! a hidden subcommand of this same binary) with bit-identical results
+//! — see DESIGN.md §8 and docs/HANDBOOK.md.
 
 use anyhow::{anyhow, Result};
 use dcd_lms::cli::{App, Command, ParsedArgs};
@@ -57,18 +62,21 @@ fn build_app() -> App {
                 Command::new("exp1", "Fig. 3 left: theory vs simulation, 10-node network")
                     .opt("engine", "rust|xla (default rust)")
                     .opt("runs", "Monte-Carlo runs")
-                    .opt("iters", "iterations per run"),
+                    .opt("iters", "iterations per run")
+                    .opt("shards", "worker processes for the MC runs (default 1)"),
             ),
             common(
                 Command::new("exp2", "Fig. 3 center/right: MSD vs compression ratio, N=50 L=50")
                     .opt("engine", "rust|xla (default xla)")
                     .opt("runs", "Monte-Carlo runs")
-                    .opt("iters", "iterations per run"),
+                    .opt("iters", "iterations per run")
+                    .opt("shards", "worker processes per sweep point (rust engine)"),
             ),
             common(
                 Command::new("exp3", "Fig. 4: energy-harvesting WSN, N=80 L=40")
                     .opt("runs", "Monte-Carlo runs")
-                    .opt("duration", "virtual-time horizon (s)"),
+                    .opt("duration", "virtual-time horizon (s)")
+                    .opt("shards", "worker processes for the WSN realizations (default 1)"),
             ),
             common(
                 Command::new(
@@ -79,7 +87,8 @@ fn build_app() -> App {
                 .opt("values", "comma-separated drop probabilities to sweep")
                 .opt("runs", "Monte-Carlo runs per point (default: scenario schedule)")
                 .opt("iters", "iterations per realization (default: scenario schedule)")
-                .opt("seed", "master seed override"),
+                .opt("seed", "master seed override")
+                .opt("shards", "worker processes per sweep point (default 1)"),
             ),
             common(
                 Command::new(
@@ -91,6 +100,7 @@ fn build_app() -> App {
                 .opt("runs", "override Monte-Carlo runs")
                 .opt("iters", "override iterations per run")
                 .opt("threads", "worker threads (0 = auto)")
+                .opt("shards", "worker processes (default 1; bit-identical results)")
                 .opt("key", "sweep: dotted scenario key, e.g. impairments.drop_prob")
                 .opt("values", "sweep: comma-separated values for --key"),
             ),
@@ -107,7 +117,27 @@ fn build_app() -> App {
             Command::new("validate", "drive rust and xla engines with identical inputs")
                 .opt("config", "artifact shape config (default smoke)"),
             Command::new("info", "print artifact manifest and build info"),
+            // Internal: the child-process half of --shards (DESIGN.md §8).
+            // Speaks the versioned JSON frame protocol on stdin/stdout;
+            // never invoked by hand, so it stays out of the help text.
+            Command::new(
+                "shard-worker",
+                "internal: execute one shard of a Monte-Carlo job (frame protocol on stdio)",
+            )
+            .hide(),
         ],
+    }
+}
+
+/// Parse `--shards`, rejecting the nonsensical 0 up front (a negative
+/// value is already a usize parse error with the offending text).
+fn parse_shards(args: &ParsedArgs) -> Result<Option<usize>> {
+    match args.get_parse::<usize>("shards").map_err(anyhow::Error::msg)? {
+        Some(0) => Err(anyhow!(
+            "--shards 0: need at least one worker process (1 = in-process; \
+             there is no process-count auto mode)"
+        )),
+        other => Ok(other),
     }
 }
 
@@ -143,6 +173,9 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             if let Some(i) = args.get_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
                 cfg.iters = i;
             }
+            if let Some(s) = parse_shards(args)? {
+                cfg.shards = s;
+            }
             let engine: Engine = args
                 .get("engine")
                 .unwrap_or("rust")
@@ -166,6 +199,9 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             }
             if let Some(i) = args.get_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
                 cfg.iters = i;
+            }
+            if let Some(s) = parse_shards(args)? {
+                cfg.shards = s;
             }
             let engine: Engine = args
                 .get("engine")
@@ -193,6 +229,9 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             }
             if let Some(d) = args.get_parse::<f64>("duration").map_err(anyhow::Error::msg)? {
                 cfg.duration = d;
+            }
+            if let Some(s) = parse_shards(args)? {
+                cfg.shards = s;
             }
             run_exp3(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
             Ok(())
@@ -225,10 +264,14 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
                 cfg.iters = i;
             }
             cfg.seed = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)?;
+            if let Some(s) = parse_shards(args)? {
+                cfg.shards = s;
+            }
             run_exp4(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
             Ok(())
         }
         "scenario" => cmd_scenario(args),
+        "shard-worker" => dcd_lms::shard::worker_main().map_err(|e| anyhow!(e)),
         "theory" => cmd_theory(args),
         "validate" => cmd_validate(args),
         "info" => cmd_info(),
@@ -276,6 +319,9 @@ fn resolve_scenario(args: &ParsedArgs) -> Result<dcd_lms::scenario::Scenario> {
     }
     if let Some(v) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
         sc.threads = v;
+    }
+    if let Some(v) = parse_shards(args)? {
+        sc.shards = v;
     }
     sc.validate().map_err(anyhow::Error::msg)?;
     Ok(sc)

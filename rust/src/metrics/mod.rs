@@ -115,6 +115,19 @@ pub fn write_csv(path: impl AsRef<Path>, series: &[Series]) -> std::io::Result<(
 
 /// Write series as a JSON document (self-describing, ragged-safe).
 pub fn write_json(path: impl AsRef<Path>, title: &str, series: &[Series]) -> std::io::Result<()> {
+    write_json_with_meta(path, title, None, series)
+}
+
+/// [`write_json`] with an optional `"manifest"` object recorded next to
+/// the series — the scenario runner uses it to pin down how a result
+/// was produced (runs/seed/threads/shard layout; DESIGN.md §8), so a
+/// results file is auditable without the invocation that made it.
+pub fn write_json_with_meta(
+    path: impl AsRef<Path>,
+    title: &str,
+    manifest: Option<Json>,
+    series: &[Series],
+) -> std::io::Result<()> {
     if let Some(parent) = path.as_ref().parent() {
         std::fs::create_dir_all(parent)?;
     }
@@ -130,7 +143,11 @@ pub fn write_json(path: impl AsRef<Path>, title: &str, series: &[Series]) -> std
             })
             .collect(),
     );
-    let doc = obj(vec![("title", Json::Str(title.to_string())), ("series", arr)]);
+    let mut pairs = vec![("title", Json::Str(title.to_string())), ("series", arr)];
+    if let Some(meta) = manifest {
+        pairs.push(("manifest", meta));
+    }
+    let doc = obj(pairs);
     std::fs::write(path, doc.to_string_pretty())
 }
 

@@ -33,6 +33,7 @@ mod spec;
 
 pub use builtins::{builtins, find};
 pub use run::{
-    run_scenario, sweep_scenario, theory_scope, ScenarioOutput, SweepOutput, SweepPoint,
+    mc_parts, run_scenario, sweep_scenario, theory_scope, ScenarioOutput, SweepOutput,
+    SweepPoint,
 };
 pub use spec::{AlgorithmSpec, Scenario, TopologySpec};

@@ -15,9 +15,10 @@
 
 use crate::algorithms::NetworkConfig;
 use crate::config::IniDoc;
-use crate::coordinator::runner::MonteCarlo;
+use crate::coordinator::runner::{shard_ranges, McResult, MonteCarlo};
 use crate::datamodel::DataModel;
-use crate::metrics::{to_db, write_csv, write_json, Series};
+use crate::jsonio::{obj, Json};
+use crate::metrics::{to_db, write_csv, write_json, write_json_with_meta, Series};
 use crate::rng::Pcg64;
 use crate::theory::{ImpairedMsdModel, TheorySetup};
 use crate::topology::{combination_matrix, Rule};
@@ -123,14 +124,15 @@ fn theory_anchor(
     ImpairedMsdModel::new(setup, &sc.impairments)
 }
 
-/// Run one scenario (validated first). With `out_dir` set, writes
-/// `<out_dir>/<name>.csv` and `<out_dir>/<name>.json`.
-pub fn run_scenario(
-    sc: &Scenario,
-    out_dir: Option<&str>,
-    quiet: bool,
-) -> Result<ScenarioOutput, String> {
-    sc.validate()?;
+/// Build the executable pieces of a scenario's Monte-Carlo job —
+/// topology/combiners/data model (consumed from master stream
+/// `Pcg64::new(seed, 0)` in the fixed order the experiment drivers
+/// use), the [`NetworkConfig`], and the configured [`MonteCarlo`].
+/// Both the in-process runner ([`run_scenario`]) and the shard worker
+/// (`dcd-lms shard-worker`, DESIGN.md §8) construct their jobs through
+/// this one function, which is what makes a worker's realizations
+/// bit-identical to the in-process ones.
+pub fn mc_parts(sc: &Scenario) -> Result<(DataModel, NetworkConfig, MonteCarlo), String> {
     let n = sc.topology.n_nodes();
     let mut rng = Pcg64::new(sc.seed, 0);
     let graph = sc.topology.build(&mut rng);
@@ -139,17 +141,67 @@ pub fn run_scenario(
     let model = DataModel::paper(n, sc.dim, sc.u2_min, sc.u2_max, sc.sigma_v2, &mut rng);
     let net = NetworkConfig { graph, c, a, mu: vec![sc.mu; n], dim: sc.dim };
     net.validate()?;
-
-    let record_every = sc.effective_record_every();
     let mc = MonteCarlo {
         runs: sc.runs,
         iters: sc.iters,
         seed: sc.seed,
-        record_every,
+        record_every: sc.effective_record_every(),
         threads: sc.threads,
     };
+    Ok((model, net, mc))
+}
+
+/// Execute a scenario's Monte-Carlo simulation on pre-built parts:
+/// in-process for `shards = 1`, across worker processes otherwise
+/// (same result either way, bit for bit — the workers rebuild the same
+/// parts from the scenario INI).
+fn run_mc(
+    sc: &Scenario,
+    model: &DataModel,
+    net: &NetworkConfig,
+    mc: &MonteCarlo,
+) -> Result<McResult, String> {
+    if sc.shards > 1 {
+        return crate::shard::run_scenario_sharded(sc);
+    }
     let imp = if sc.impairments.is_ideal() { None } else { Some(&sc.impairments) };
-    let res = mc.run_rust_with(&model, imp, || sc.algorithm.build(net.clone()));
+    Ok(mc.run_rust_with(model, imp, || sc.algorithm.build(net.clone())))
+}
+
+/// The `"manifest"` object recorded in `results/<name>.json`: the
+/// schedule that produced the result, including the shard layout
+/// (DESIGN.md §8), so the artifact is self-describing.
+fn run_manifest(sc: &Scenario) -> Json {
+    let layout = Json::Arr(
+        shard_ranges(sc.runs, sc.shards)
+            .into_iter()
+            .map(|(start, count)| {
+                Json::Arr(vec![Json::Num(start as f64), Json::Num(count as f64)])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("runs", Json::Num(sc.runs as f64)),
+        ("iters", Json::Num(sc.iters as f64)),
+        ("seed", Json::Num(sc.seed as f64)),
+        ("record_every", Json::Num(sc.effective_record_every() as f64)),
+        ("threads", Json::Num(sc.threads as f64)),
+        ("shards", Json::Num(sc.shards as f64)),
+        ("shard_layout", layout),
+    ])
+}
+
+/// Run one scenario (validated first). With `out_dir` set, writes
+/// `<out_dir>/<name>.csv` and `<out_dir>/<name>.json`.
+pub fn run_scenario(
+    sc: &Scenario,
+    out_dir: Option<&str>,
+    quiet: bool,
+) -> Result<ScenarioOutput, String> {
+    sc.validate()?;
+    let record_every = sc.effective_record_every();
+    let (model, net, mc) = mc_parts(sc)?;
+    let res = run_mc(sc, &model, &net, &mc)?;
 
     let x: Vec<f64> = (1..=res.msd.len()).map(|i| (i * record_every) as f64).collect();
     let y: Vec<f64> = res.msd.iter().map(|&v| to_db(v)).collect();
@@ -198,9 +250,10 @@ pub fn run_scenario(
     }
     if let Some(dir) = out_dir {
         write_csv(format!("{dir}/{}.csv", sc.name), &series).map_err(|e| e.to_string())?;
-        write_json(
+        write_json_with_meta(
             format!("{dir}/{}.json", sc.name),
             &format!("scenario {}: {}", sc.name, sc.description),
+            Some(run_manifest(sc)),
             &series,
         )
         .map_err(|e| e.to_string())?;
@@ -408,6 +461,13 @@ mod tests {
         )
         .unwrap();
         assert_eq!(doc.get("series").as_arr().unwrap().len(), 1);
+        // The manifest records the schedule + shard layout (§8).
+        let manifest = doc.get("manifest");
+        assert_eq!(manifest.get("runs").as_usize(), Some(3));
+        assert_eq!(manifest.get("shards").as_usize(), Some(1));
+        let layout = manifest.get("shard_layout").as_arr().unwrap();
+        assert_eq!(layout.len(), 1);
+        assert_eq!(layout[0].as_arr().unwrap()[1].as_usize(), Some(3));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -160,6 +160,10 @@ pub struct Scenario {
     pub record_every: usize,
     /// Worker threads (0 = auto, see `coordinator::runner`).
     pub threads: usize,
+    /// Worker *processes* the realizations are sharded across (1 = run
+    /// in-process; must be ≥ 1). Results are bit-identical for any
+    /// value — see DESIGN.md §8 and [`crate::shard`].
+    pub shards: usize,
 }
 
 impl Scenario {
@@ -184,6 +188,7 @@ impl Scenario {
             seed: 2024,
             record_every: 0,
             threads: 0,
+            shards: 1,
         }
     }
 
@@ -216,6 +221,7 @@ impl Scenario {
             "schedule.seed",
             "schedule.record_every",
             "schedule.threads",
+            "schedule.shards",
         ]
     }
 
@@ -322,6 +328,7 @@ impl Scenario {
         sc.seed = get_or(doc, "schedule", "seed", sc.seed)?;
         sc.record_every = get_or(doc, "schedule", "record_every", sc.record_every)?;
         sc.threads = get_or(doc, "schedule", "threads", sc.threads)?;
+        sc.shards = get_or(doc, "schedule", "shards", sc.shards)?;
         Ok(sc)
     }
 
@@ -374,6 +381,7 @@ impl Scenario {
         s.push_str(&format!("seed = {}\n", self.seed));
         s.push_str(&format!("record_every = {}\n", self.record_every));
         s.push_str(&format!("threads = {}\n", self.threads));
+        s.push_str(&format!("shards = {}\n", self.shards));
         s
     }
 
@@ -459,6 +467,13 @@ impl Scenario {
                 self.name
             ));
         }
+        if self.shards == 0 {
+            return Err(format!(
+                "scenario {}: shards must be >= 1 (1 = in-process; \
+                 there is no process-count auto mode)",
+                self.name
+            ));
+        }
         Ok(())
     }
 }
@@ -526,6 +541,7 @@ mod tests {
         sc.seed = 99;
         sc.record_every = 3;
         sc.threads = 2;
+        sc.shards = 4;
         let text = sc.to_ini_string();
         let back = Scenario::parse_str(&text).unwrap();
         assert_eq!(back, sc);
@@ -595,6 +611,10 @@ mod tests {
         let mut sc = Scenario::base("bad", "");
         sc.runs = 0;
         assert!(sc.validate().is_err());
+        let mut sc = Scenario::base("bad", "");
+        sc.shards = 0;
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("shards"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,35 @@
+//! Sharded multi-process Monte-Carlo execution (DESIGN.md §8).
+//!
+//! The in-process parallel runner (`coordinator::runner`) tops out at
+//! one machine's thread pool; this module is the next scaling rung: a
+//! **supervisor** splits a Monte-Carlo job's realizations into
+//! contiguous run-index ranges ([`crate::coordinator::runner::shard_ranges`]),
+//! spawns one `dcd-lms shard-worker` process per range (the same
+//! binary, a hidden subcommand), and the workers stream per-run partial
+//! results back over a versioned JSON frame protocol on stdin/stdout
+//! (the [`Frame`] grammar of `shard/protocol.rs`).
+//!
+//! Determinism is preserved by construction, exactly as in the threaded
+//! runner: realization `r` always draws from PCG64 stream `r + 1` of
+//! the master seed no matter which process executes it, and the
+//! supervisor folds the streamed per-run results **sequentially in run
+//! order** with the very same merge the serial runner uses — so results
+//! are bit-identical to `run_rust_serial` at any `--shards × --threads`
+//! combination (tested end-to-end in `rust/tests/shard.rs` and by the
+//! CI byte-for-byte CSV diff).
+//!
+//! Crash handling: a worker that dies mid-stream (non-zero exit,
+//! truncated stream, malformed frame) is re-spawned with its whole
+//! block — re-runs are deterministic, so the replacement reproduces the
+//! exact frames the casualty would have sent. See DESIGN.md §8 for the
+//! frame grammar, versioning and failure semantics.
+
+mod protocol;
+mod supervisor;
+mod worker;
+
+pub use protocol::{Frame, JobKind, RunPayload, ShardJob, PROTOCOL_VERSION};
+pub use supervisor::{
+    run_scenario_sharded, run_wsn_sharded, shard_retries, RETRIES_ENV, WORKER_BIN_ENV,
+};
+pub use worker::{worker_main, CRASH_ONCE_ENV, CRASH_RUN_ENV};

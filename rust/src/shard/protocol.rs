@@ -1,0 +1,416 @@
+//! The versioned JSON frame protocol spoken between the shard
+//! supervisor and `dcd-lms shard-worker` processes (DESIGN.md §8).
+//!
+//! Frames are newline-delimited JSON objects, one frame per line; every
+//! frame carries the protocol version (`"v"`) and a `"type"` tag.
+//! Exactly one [`Frame::Job`] travels supervisor → worker on stdin; the
+//! worker answers on stdout with one [`Frame::Run`] per realization of
+//! its block (in run order) and a terminal [`Frame::Done`], or a
+//! terminal [`Frame::Error`]. Finite floats are serialized through
+//! `jsonio`'s shortest-round-trip formatter, non-finite ones as the
+//! strings `"inf"`/`"-inf"`/`"NaN"` (divergent runs must shard like
+//! they run serially), and all counters fit in 2⁵³ — so a decoded
+//! frame reproduces the worker's numbers bit-exactly, the property the
+//! run-order merge needs to keep sharded results byte-identical to the
+//! serial runner.
+
+use crate::coordinator::round::RunResult;
+use crate::coordinator::wsn::WsnResult;
+use crate::jsonio::{obj, Json};
+
+/// Protocol version; a worker rejects any other value with a
+/// [`Frame::Error`] so mixed-binary deployments fail loudly instead of
+/// silently misreading frames.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// What a shard worker is asked to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// A synchronous-round Monte-Carlo block: the payload is a scenario
+    /// INI document (`Scenario::to_ini_string`).
+    Mc,
+    /// An exp3 WSN realization block: the payload is an `[exp3]` +
+    /// `[energy]` INI document (`Exp3Config::to_ini_string`) and
+    /// `algo_index` selects the Fig. 4 algorithm setting.
+    Wsn,
+}
+
+impl JobKind {
+    fn name(self) -> &'static str {
+        match self {
+            JobKind::Mc => "mc",
+            JobKind::Wsn => "wsn",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "mc" => Ok(JobKind::Mc),
+            "wsn" => Ok(JobKind::Wsn),
+            other => Err(format!("unknown job kind {other:?} (expected mc | wsn)")),
+        }
+    }
+}
+
+/// The supervisor → worker work order: replay `payload` and execute the
+/// contiguous realization block `[run_start, run_start + run_count)`.
+#[derive(Debug, Clone)]
+pub struct ShardJob {
+    /// Payload interpretation (see [`JobKind`]).
+    pub kind: JobKind,
+    /// Self-contained INI description of the job the worker replays.
+    pub payload: String,
+    /// First global run index of this shard's block.
+    pub run_start: usize,
+    /// Number of realizations in this shard's block.
+    pub run_count: usize,
+    /// In-process worker threads for this block (0 = auto). The
+    /// supervisor divides the machine's cores across the shards here,
+    /// so concurrent workers do not each grab full parallelism.
+    pub threads: usize,
+    /// WSN jobs only: index into the exp3 algorithm settings.
+    pub algo_index: usize,
+}
+
+/// Per-realization result payload of a [`Frame::Run`].
+#[derive(Debug, Clone)]
+pub enum RunPayload {
+    /// Synchronous-round result (MSD trace + communication counters).
+    Mc(RunResult),
+    /// WSN result (time grid, MSD, telemetry, activation counters).
+    Wsn(WsnResult),
+}
+
+/// One protocol frame.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// Supervisor → worker: the work order (exactly one, then EOF).
+    Job(ShardJob),
+    /// Worker → supervisor: one finished realization.
+    Run {
+        /// Global run index of this realization.
+        run: usize,
+        /// The realization's result.
+        payload: RunPayload,
+    },
+    /// Worker → supervisor: terminal success marker; `runs` must equal
+    /// the job's `run_count` (a truncated stream is detected by its
+    /// absence).
+    Done {
+        /// Number of run frames that preceded this marker.
+        runs: usize,
+    },
+    /// Worker → supervisor: terminal failure with a human-readable
+    /// reason; the worker also exits non-zero.
+    Error {
+        /// What went wrong, with context.
+        message: String,
+    },
+}
+
+fn num(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+/// Encode a u64 counter; panics past 2⁵³, where the f64 transport would
+/// silently round — a loud worker death (the supervisor reports it)
+/// instead of a corrupt counter. Unreachable at any physical workload:
+/// 2⁵³ scalar transmissions is ~10⁶ node-years of simulation.
+fn num_u64(x: u64) -> Json {
+    assert!(x <= 1 << 53, "counter {x} exceeds exact f64 range");
+    Json::Num(x as f64)
+}
+
+/// Encode one f64: finite values as JSON numbers (shortest round-trip
+/// formatting ⇒ bit-exact), non-finite ones as the strings `"inf"` /
+/// `"-inf"` / `"NaN"` — plain `Json::Num` would emit invalid JSON for
+/// them, and a *divergent* simulation must shard exactly like it runs
+/// serially (reporting its infinities) rather than die on a malformed
+/// frame.
+fn num_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("{v}"))
+    }
+}
+
+fn f64_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&v| num_f64(v)).collect())
+}
+
+fn get_f64_arr(v: &Json, key: &str) -> Result<Vec<f64>, String> {
+    v.get(key)
+        .as_arr()
+        .ok_or_else(|| format!("frame field {key:?} must be an array of numbers"))?
+        .iter()
+        .map(|x| decode_f64(x, key))
+        .collect()
+}
+
+/// Decode one f64: a number, or one of the non-finite strings
+/// [`num_f64`] emits (a string holding a finite number is rejected —
+/// only the values `Json::Num` cannot carry may ride in a string).
+fn decode_f64(x: &Json, key: &str) -> Result<f64, String> {
+    if let Some(v) = x.as_f64() {
+        return Ok(v);
+    }
+    if let Some(v) = x.as_str().and_then(|s| s.parse::<f64>().ok()) {
+        if !v.is_finite() {
+            return Ok(v);
+        }
+    }
+    Err(format!("frame field {key:?} contains a non-number"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| format!("frame field {key:?} must be a non-negative integer"))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .as_u64()
+        .ok_or_else(|| format!("frame field {key:?} must be an exact u64"))
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String, String> {
+    Ok(v.get(key)
+        .as_str()
+        .ok_or_else(|| format!("frame field {key:?} must be a string"))?
+        .to_string())
+}
+
+impl Frame {
+    /// Serialize as one line of compact JSON (newlines in strings are
+    /// escaped by the writer, so the frame never spans lines).
+    pub fn encode(&self) -> String {
+        let v = ("v", Json::Num(PROTOCOL_VERSION as f64));
+        let doc = match self {
+            Frame::Job(job) => obj(vec![
+                v,
+                ("type", Json::Str("job".into())),
+                ("kind", Json::Str(job.kind.name().into())),
+                ("payload", Json::Str(job.payload.clone())),
+                ("run_start", num(job.run_start)),
+                ("run_count", num(job.run_count)),
+                ("threads", num(job.threads)),
+                ("algo_index", num(job.algo_index)),
+            ]),
+            Frame::Run { run, payload } => match payload {
+                RunPayload::Mc(res) => obj(vec![
+                    v,
+                    ("type", Json::Str("run".into())),
+                    ("kind", Json::Str("mc".into())),
+                    ("run", num(*run)),
+                    ("msd", f64_arr(&res.msd)),
+                    ("scalars", num_u64(res.scalars)),
+                    ("messages", num_u64(res.messages)),
+                ]),
+                RunPayload::Wsn(res) => obj(vec![
+                    v,
+                    ("type", Json::Str("run".into())),
+                    ("kind", Json::Str("wsn".into())),
+                    ("run", num(*run)),
+                    ("time", f64_arr(&res.time)),
+                    ("msd", f64_arr(&res.msd)),
+                    ("mean_sleep", f64_arr(&res.mean_sleep)),
+                    ("mean_harvest", f64_arr(&res.mean_harvest)),
+                    ("activations", num_u64(res.activations)),
+                    ("skipped", num_u64(res.skipped)),
+                ]),
+            },
+            Frame::Done { runs } => obj(vec![
+                v,
+                ("type", Json::Str("done".into())),
+                ("runs", num(*runs)),
+            ]),
+            Frame::Error { message } => obj(vec![
+                v,
+                ("type", Json::Str("error".into())),
+                ("message", Json::Str(message.clone())),
+            ]),
+        };
+        doc.to_string_compact()
+    }
+
+    /// Parse one frame line; errors carry enough context to point at
+    /// the offending field.
+    pub fn decode(line: &str) -> Result<Frame, String> {
+        let doc = Json::parse(line.trim())
+            .map_err(|e| format!("shard protocol: not a JSON frame ({e}): {line:?}"))?;
+        let version = get_u64(&doc, "v")
+            .map_err(|e| format!("shard protocol: {e} (missing version?)"))?;
+        if version != PROTOCOL_VERSION {
+            return Err(format!(
+                "shard protocol: frame version {version} != supported {PROTOCOL_VERSION} \
+                 (mixed dcd-lms binaries?)"
+            ));
+        }
+        let ty = get_str(&doc, "type").map_err(|e| format!("shard protocol: {e}"))?;
+        let frame = match ty.as_str() {
+            "job" => Frame::Job(ShardJob {
+                kind: JobKind::parse(&get_str(&doc, "kind")?)?,
+                payload: get_str(&doc, "payload")?,
+                run_start: get_usize(&doc, "run_start")?,
+                run_count: get_usize(&doc, "run_count")?,
+                threads: get_usize(&doc, "threads")?,
+                algo_index: get_usize(&doc, "algo_index")?,
+            }),
+            "run" => {
+                let run = get_usize(&doc, "run")?;
+                let payload = match JobKind::parse(&get_str(&doc, "kind")?)? {
+                    JobKind::Mc => RunPayload::Mc(RunResult {
+                        msd: get_f64_arr(&doc, "msd")?,
+                        scalars: get_u64(&doc, "scalars")?,
+                        messages: get_u64(&doc, "messages")?,
+                    }),
+                    JobKind::Wsn => RunPayload::Wsn(WsnResult {
+                        time: get_f64_arr(&doc, "time")?,
+                        msd: get_f64_arr(&doc, "msd")?,
+                        mean_sleep: get_f64_arr(&doc, "mean_sleep")?,
+                        mean_harvest: get_f64_arr(&doc, "mean_harvest")?,
+                        activations: get_u64(&doc, "activations")?,
+                        skipped: get_u64(&doc, "skipped")?,
+                    }),
+                };
+                Frame::Run { run, payload }
+            }
+            "done" => Frame::Done { runs: get_usize(&doc, "runs")? },
+            "error" => Frame::Error { message: get_str(&doc, "message")? },
+            other => {
+                return Err(format!(
+                    "shard protocol: unknown frame type {other:?} \
+                     (expected job | run | done | error)"
+                ))
+            }
+        };
+        Ok(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_frame_roundtrips_multiline_payload() {
+        let job = ShardJob {
+            kind: JobKind::Mc,
+            payload: "[scenario]\nname = x\n\n[schedule]\nruns = 4\n".to_string(),
+            run_start: 3,
+            run_count: 2,
+            threads: 1,
+            algo_index: 0,
+        };
+        let line = Frame::Job(job.clone()).encode();
+        assert!(!line.contains('\n'), "frame spans lines: {line}");
+        match Frame::decode(&line).unwrap() {
+            Frame::Job(back) => {
+                assert_eq!(back.kind, job.kind);
+                assert_eq!(back.payload, job.payload);
+                assert_eq!(back.run_start, 3);
+                assert_eq!(back.run_count, 2);
+                assert_eq!(back.threads, 1);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mc_run_frame_roundtrips_bit_exactly() {
+        let res = RunResult {
+            msd: vec![1.0, 0.123456789012345e-7, 3.5e300, 0.0],
+            scalars: 9_007_199_254_740_992, // 2^53: largest exact counter
+            messages: 12_345,
+        };
+        let line = Frame::Run { run: 7, payload: RunPayload::Mc(res.clone()) }.encode();
+        match Frame::decode(&line).unwrap() {
+            Frame::Run { run, payload: RunPayload::Mc(back) } => {
+                assert_eq!(run, 7);
+                assert_eq!(back.scalars, res.scalars);
+                assert_eq!(back.messages, res.messages);
+                assert_eq!(back.msd.len(), res.msd.len());
+                for (a, b) in back.msd.iter().zip(res.msd.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+                }
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    /// A divergent simulation's infinities must survive the pipe: the
+    /// sharded run has to report exactly what the serial run would.
+    #[test]
+    fn non_finite_msd_values_survive_the_frame() {
+        let res = RunResult {
+            msd: vec![f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 1.5],
+            scalars: 10,
+            messages: 2,
+        };
+        let line = Frame::Run { run: 0, payload: RunPayload::Mc(res) }.encode();
+        match Frame::decode(&line).unwrap() {
+            Frame::Run { payload: RunPayload::Mc(back), .. } => {
+                assert_eq!(back.msd[0], f64::INFINITY);
+                assert_eq!(back.msd[1], f64::NEG_INFINITY);
+                assert!(back.msd[2].is_nan());
+                assert_eq!(back.msd[3], 1.5);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // A finite number hiding in a string is still rejected.
+        let sneaky = "{\"v\":1,\"type\":\"run\",\"kind\":\"mc\",\"run\":0,\
+                      \"msd\":[\"1.5\"],\"scalars\":0,\"messages\":0}";
+        assert!(Frame::decode(sneaky).unwrap_err().contains("non-number"));
+    }
+
+    #[test]
+    fn wsn_run_frame_roundtrips() {
+        let res = WsnResult {
+            time: vec![500.0, 1000.0],
+            msd: vec![0.5, 0.25],
+            mean_sleep: vec![10.0, 20.5],
+            mean_harvest: vec![0.01, 0.02],
+            activations: 321,
+            skipped: 7,
+        };
+        let line = Frame::Run { run: 0, payload: RunPayload::Wsn(res.clone()) }.encode();
+        match Frame::decode(&line).unwrap() {
+            Frame::Run { payload: RunPayload::Wsn(back), .. } => {
+                assert_eq!(back.time, res.time);
+                assert_eq!(back.msd, res.msd);
+                assert_eq!(back.mean_sleep, res.mean_sleep);
+                assert_eq!(back.mean_harvest, res.mean_harvest);
+                assert_eq!(back.activations, 321);
+                assert_eq!(back.skipped, 7);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected_with_context() {
+        let err = Frame::decode("not json at all").unwrap_err();
+        assert!(err.contains("shard protocol"), "{err}");
+        let err = Frame::decode("{\"type\":\"job\"}").unwrap_err();
+        assert!(err.contains("version"), "{err}");
+        let err = Frame::decode("{\"v\":99,\"type\":\"done\",\"runs\":0}").unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+        let err = Frame::decode("{\"v\":1,\"type\":\"frobnicate\"}").unwrap_err();
+        assert!(err.contains("frobnicate"), "{err}");
+        let headless_run = "{\"v\":1,\"type\":\"run\",\"kind\":\"mc\",\"run\":0}";
+        let err = Frame::decode(headless_run).unwrap_err();
+        assert!(err.contains("msd"), "{err}");
+        // A done/error frame round-trips.
+        match Frame::decode(&Frame::Done { runs: 5 }.encode()).unwrap() {
+            Frame::Done { runs } => assert_eq!(runs, 5),
+            other => panic!("decoded {other:?}"),
+        }
+        let err_frame = Frame::Error { message: "boom\nline2".into() };
+        match Frame::decode(&err_frame.encode()).unwrap() {
+            Frame::Error { message } => assert_eq!(message, "boom\nline2"),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+}

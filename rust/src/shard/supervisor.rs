@@ -1,0 +1,325 @@
+//! The shard supervisor: spawns `dcd-lms shard-worker` processes over a
+//! contiguous run-range plan, streams their per-run result frames back,
+//! re-spawns crashed shards, and reassembles everything **in run
+//! order** so sharded results are bit-identical to the serial runner
+//! (DESIGN.md §8).
+//!
+//! Failure semantics: a shard whose worker exits non-zero, truncates
+//! its stream before the `done` frame, or emits a malformed/out-of-range
+//! frame is re-spawned up to [`shard_retries`] times (the whole block
+//! re-runs — realizations are deterministic, so a re-run reproduces the
+//! exact same frames). When the retry budget is exhausted the supervisor
+//! returns a contextual error naming the shard, its run range and the
+//! worker's last words (stderr tail), and the CLI exits non-zero.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use crate::config::Exp3Config;
+use crate::coordinator::runner::{shard_ranges, McResult, MonteCarlo};
+use crate::coordinator::wsn::WsnResult;
+use crate::scenario::Scenario;
+
+use super::protocol::{Frame, JobKind, RunPayload, ShardJob};
+
+/// Env override for the worker binary path (defaults to the current
+/// executable). Tests point this at the real `dcd-lms` binary — or at
+/// an impostor, to exercise the malformed-frame handling.
+pub const WORKER_BIN_ENV: &str = "DCD_SHARD_WORKER";
+
+/// Env override for the per-shard re-spawn budget (default 1).
+pub const RETRIES_ENV: &str = "DCD_SHARD_RETRIES";
+
+/// How many times a failed shard is re-spawned before the supervisor
+/// gives up: the `DCD_SHARD_RETRIES` env var, else 1.
+pub fn shard_retries() -> usize {
+    std::env::var(RETRIES_ENV)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// The per-worker in-process thread budget: an explicit request passes
+/// through unchanged; auto (0) divides the machine's cores across the
+/// concurrent shards, so `--shards N` never oversubscribes the host by
+/// N × cores (threads never affect result bytes, only wall-clock).
+fn per_worker_threads(requested: usize, shards: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (cores / shards.max(1)).max(1)
+}
+
+/// Run a scenario's Monte-Carlo job across `sc.shards` worker
+/// processes and merge the per-run results in run order. The result is
+/// bit-identical to the in-process runner at any shards × threads
+/// combination (tested end-to-end in `rust/tests/shard.rs`).
+pub fn run_scenario_sharded(sc: &Scenario) -> Result<McResult, String> {
+    // The payload the workers replay: the same scenario, but with the
+    // shard knob reset so a worker never tries to shard recursively.
+    let mut job_sc = sc.clone();
+    job_sc.shards = 1;
+    let payload = job_sc.to_ini_string();
+    let threads = per_worker_threads(sc.threads, sc.shards);
+    let collected = collect_sharded(sc.runs, sc.shards, &|run_start, run_count| ShardJob {
+        kind: JobKind::Mc,
+        payload: payload.clone(),
+        run_start,
+        run_count,
+        threads,
+        algo_index: 0,
+    })?;
+    let mut results = Vec::with_capacity(collected.len());
+    for payload in collected {
+        match payload {
+            RunPayload::Mc(res) => results.push(res),
+            RunPayload::Wsn(_) => {
+                return Err("shard worker answered an mc job with a wsn frame".to_string())
+            }
+        }
+    }
+    let mc = MonteCarlo {
+        runs: sc.runs,
+        iters: sc.iters,
+        seed: sc.seed,
+        record_every: sc.effective_record_every(),
+        threads: sc.threads,
+    };
+    Ok(mc.merge(results.into_iter()))
+}
+
+/// Run one exp3 algorithm setting's WSN realizations across `shards`
+/// worker processes, returning the per-run results in run order (the
+/// same contract as the in-process `parallel_ordered` fan-out).
+pub fn run_wsn_sharded(
+    cfg: &Exp3Config,
+    algo_index: usize,
+    shards: usize,
+) -> Result<Vec<WsnResult>, String> {
+    let payload = cfg.to_ini_string();
+    let threads = per_worker_threads(0, shards);
+    let collected = collect_sharded(cfg.runs, shards, &|run_start, run_count| ShardJob {
+        kind: JobKind::Wsn,
+        payload: payload.clone(),
+        run_start,
+        run_count,
+        threads,
+        algo_index,
+    })?;
+    let mut results = Vec::with_capacity(collected.len());
+    for payload in collected {
+        match payload {
+            RunPayload::Wsn(res) => results.push(res),
+            RunPayload::Mc(_) => {
+                return Err("shard worker answered a wsn job with an mc frame".to_string())
+            }
+        }
+    }
+    Ok(results)
+}
+
+/// Fan a run-range plan across worker processes (one concurrent
+/// supervisor thread per shard) and reassemble the per-run payloads by
+/// global run index. Every run must be reported exactly once.
+fn collect_sharded(
+    runs: usize,
+    shards: usize,
+    make_job: &(dyn Fn(usize, usize) -> ShardJob + Sync),
+) -> Result<Vec<RunPayload>, String> {
+    if runs == 0 {
+        return Err("sharded run: zero realizations".to_string());
+    }
+    let ranges = shard_ranges(runs, shards);
+    let mut shard_outputs: Vec<Result<Vec<(usize, RunPayload)>, String>> =
+        Vec::with_capacity(ranges.len());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        for (idx, &(start, count)) in ranges.iter().enumerate() {
+            let job = make_job(start, count);
+            handles.push(scope.spawn(move || run_shard_with_retries(idx, job)));
+        }
+        for handle in handles {
+            shard_outputs.push(handle.join().expect("shard supervisor thread panicked"));
+        }
+    });
+    let mut slots: Vec<Option<RunPayload>> = (0..runs).map(|_| None).collect();
+    for output in shard_outputs {
+        for (run, payload) in output? {
+            if slots[run].is_some() {
+                return Err(format!("run {run} reported by more than one shard"));
+            }
+            slots[run] = Some(payload);
+        }
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(run, slot)| slot.ok_or_else(|| format!("run {run} missing from shard outputs")))
+        .collect()
+}
+
+/// Drive one shard to completion, re-spawning on failure within the
+/// retry budget.
+fn run_shard_with_retries(
+    shard_idx: usize,
+    job: ShardJob,
+) -> Result<Vec<(usize, RunPayload)>, String> {
+    let attempts = shard_retries() + 1;
+    let mut last_err = String::new();
+    for attempt in 1..=attempts {
+        match run_shard_once(&job) {
+            Ok(results) => return Ok(results),
+            Err(e) => {
+                last_err = e;
+                if attempt < attempts {
+                    eprintln!(
+                        "shard {shard_idx} (runs {}..{}) attempt {attempt} failed: \
+                         {last_err}; re-spawning",
+                        job.run_start,
+                        job.run_start + job.run_count
+                    );
+                }
+            }
+        }
+    }
+    Err(format!(
+        "shard {shard_idx} (runs {}..{}) failed after {attempts} attempt(s): {last_err}",
+        job.run_start,
+        job.run_start + job.run_count
+    ))
+}
+
+/// The worker binary to spawn: `DCD_SHARD_WORKER` override, else this
+/// very executable (the worker is a hidden subcommand of `dcd-lms`).
+fn worker_binary() -> Result<PathBuf, String> {
+    if let Ok(path) = std::env::var(WORKER_BIN_ENV) {
+        return Ok(PathBuf::from(path));
+    }
+    std::env::current_exe().map_err(|e| format!("cannot locate the worker binary: {e}"))
+}
+
+/// One spawn → stream → wait cycle for a shard.
+fn run_shard_once(job: &ShardJob) -> Result<Vec<(usize, RunPayload)>, String> {
+    let bin = worker_binary()?;
+    let mut child = Command::new(&bin)
+        .arg("shard-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .map_err(|e| format!("spawning {}: {e}", bin.display()))?;
+
+    // Hand the worker its job. A write failure is not fatal by itself
+    // (the worker may have exited already); the read loop below
+    // surfaces the real error.
+    if let Some(mut stdin) = child.stdin.take() {
+        let _ = writeln!(stdin, "{}", Frame::Job(job.clone()).encode());
+        // stdin drops here -> EOF for the worker.
+    }
+
+    let stdout = child.stdout.take().expect("stdout was piped");
+    // Drain stderr concurrently: a worker that fills the stderr pipe
+    // while we are still reading stdout would otherwise deadlock the
+    // whole run (write(2) blocks on the full pipe, we block on stdout).
+    let mut stderr = child.stderr.take().expect("stderr was piped");
+    let stderr_drain = std::thread::spawn(move || {
+        let mut text = String::new();
+        let _ = stderr.read_to_string(&mut text);
+        text
+    });
+    let run_end = job.run_start + job.run_count;
+    let mut results: Vec<(usize, RunPayload)> = Vec::with_capacity(job.run_count);
+    let mut done = false;
+    let mut frame_err: Option<String> = None;
+    for (lineno, line) in BufReader::new(stdout).lines().enumerate() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                frame_err = Some(format!("reading worker stdout: {e}"));
+                break;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Frame::decode(&line) {
+            Ok(Frame::Run { run, payload }) => {
+                if run < job.run_start || run >= run_end {
+                    frame_err = Some(format!(
+                        "worker reported run {run} outside its block {}..{run_end}",
+                        job.run_start
+                    ));
+                    break;
+                }
+                if results.iter().any(|(r, _)| *r == run) {
+                    frame_err = Some(format!("worker reported run {run} twice"));
+                    break;
+                }
+                results.push((run, payload));
+            }
+            Ok(Frame::Done { runs }) => {
+                if runs != job.run_count || results.len() != job.run_count {
+                    frame_err = Some(format!(
+                        "worker finished with {} of {} runs (done frame said {runs})",
+                        results.len(),
+                        job.run_count
+                    ));
+                } else {
+                    done = true;
+                }
+                break;
+            }
+            Ok(Frame::Error { message }) => {
+                frame_err = Some(format!("worker error: {message}"));
+                break;
+            }
+            Ok(Frame::Job(_)) => {
+                frame_err = Some("worker echoed a job frame".to_string());
+                break;
+            }
+            Err(e) => {
+                frame_err = Some(format!("worker frame {} malformed: {e}", lineno + 1));
+                break;
+            }
+        }
+    }
+
+    // Collect the exit status and stderr tail for diagnostics; a
+    // protocol error above still drains the child so nothing leaks.
+    let status = child.wait().map_err(|e| format!("waiting for worker: {e}"))?;
+    let stderr_text = stderr_drain.join().unwrap_or_default();
+    if let Some(err) = frame_err {
+        // The frame error is the primary diagnosis; the exit status is
+        // secondary noise once the stream already went wrong.
+        return Err(with_stderr(err, &stderr_text));
+    }
+    if !status.success() {
+        return Err(with_stderr(
+            format!("worker exited with {status} before completing its block"),
+            &stderr_text,
+        ));
+    }
+    if !done {
+        return Err(with_stderr(
+            format!(
+                "worker stream ended after {} of {} runs without a done frame",
+                results.len(),
+                job.run_count
+            ),
+            &stderr_text,
+        ));
+    }
+    Ok(results)
+}
+
+fn with_stderr(err: String, stderr_text: &str) -> String {
+    let lines: Vec<&str> = stderr_text.lines().collect();
+    let tail = lines[lines.len().saturating_sub(3)..].join(" | ");
+    if tail.is_empty() {
+        err
+    } else {
+        format!("{err} [worker stderr: {tail}]")
+    }
+}

@@ -1,0 +1,185 @@
+//! The `dcd-lms shard-worker` loop: the child-process half of the
+//! sharded Monte-Carlo runner (DESIGN.md §8).
+//!
+//! A worker reads exactly one [`Frame::Job`] line from stdin, replays
+//! the job description (a scenario INI or an exp3 INI — the *same*
+//! builders the in-process runner uses, which is what makes per-run
+//! results bit-identical), executes its contiguous realization block
+//! fanned across its in-process thread budget, and then writes one
+//! [`Frame::Run`] per realization to stdout in run order, terminated by
+//! [`Frame::Done`]. (The block completes before the frames go out —
+//! the in-worker thread pool returns results all at once; "streaming"
+//! is per run on the wire, not overlapped with compute.) Any failure
+//! is reported as a terminal [`Frame::Error`] frame *and* a non-zero
+//! exit, so the supervisor can distinguish a clean refusal from a
+//! crash either way.
+
+use std::io::{BufRead, Write};
+
+use crate::config::{Exp3Config, IniDoc};
+use crate::coordinator::runner::{parallel_ordered, resolve_threads};
+use crate::experiments::exp3::{exp3_settings, Exp3Parts};
+use crate::scenario::{mc_parts, Scenario};
+
+use super::protocol::{Frame, JobKind, RunPayload, ShardJob};
+
+/// Env hook for the crash tests: a worker that finds this set to a path
+/// atomically creates the file and exits 17 — exactly once across all
+/// workers sharing the marker (`create_new`), so the supervisor's
+/// re-spawn path gets one deterministic crash to recover from.
+pub const CRASH_ONCE_ENV: &str = "DCD_SHARD_TEST_CRASH_ONCE";
+
+/// Env hook for the crash tests: a worker whose block contains this
+/// global run index exits 17 just before emitting that run's frame
+/// (i.e. mid-stream, after earlier frames already went out) — on every
+/// attempt, so with retries exhausted the supervisor must surface a
+/// clean error.
+pub const CRASH_RUN_ENV: &str = "DCD_SHARD_TEST_CRASH_RUN";
+
+/// Run the shard-worker protocol over this process's stdin/stdout.
+/// On error the terminal [`Frame::Error`] has already been emitted;
+/// the caller (main) should still exit non-zero with the message.
+pub fn worker_main() -> Result<(), String> {
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    match run_worker(&mut out) {
+        Ok(()) => Ok(()),
+        Err(message) => {
+            let message = format!("shard-worker: {message}");
+            // Best effort: the supervisor may already be gone.
+            let _ = writeln!(out, "{}", Frame::Error { message: message.clone() }.encode());
+            let _ = out.flush();
+            Err(message)
+        }
+    }
+}
+
+fn run_worker(out: &mut impl Write) -> Result<(), String> {
+    let mut line = String::new();
+    std::io::stdin()
+        .lock()
+        .read_line(&mut line)
+        .map_err(|e| format!("reading the job frame from stdin: {e}"))?;
+    if line.trim().is_empty() {
+        return Err("empty input: expected one job frame on stdin".to_string());
+    }
+    let job = match Frame::decode(&line)? {
+        Frame::Job(job) => job,
+        other => {
+            return Err(format!(
+                "expected a job frame on stdin, got a {} frame",
+                frame_name(&other)
+            ))
+        }
+    };
+    crash_once_hook();
+    let payloads = match job.kind {
+        JobKind::Mc => run_mc_block(&job)?,
+        JobKind::Wsn => run_wsn_block(&job)?,
+    };
+    debug_assert_eq!(payloads.len(), job.run_count);
+    let crash_run = crash_run_index();
+    for (i, payload) in payloads.into_iter().enumerate() {
+        let run = job.run_start + i;
+        if crash_run == Some(run) {
+            // Simulated kill mid-stream (after earlier frames went out).
+            std::process::exit(17);
+        }
+        writeln!(out, "{}", Frame::Run { run, payload }.encode())
+            .map_err(|e| format!("writing run frame {run}: {e}"))?;
+    }
+    writeln!(out, "{}", Frame::Done { runs: job.run_count }.encode())
+        .map_err(|e| format!("writing done frame: {e}"))?;
+    out.flush().map_err(|e| format!("flushing stdout: {e}"))?;
+    Ok(())
+}
+
+/// Replay a scenario job and execute its realization block on the same
+/// code path `run_scenario` uses in-process.
+fn run_mc_block(job: &ShardJob) -> Result<Vec<RunPayload>, String> {
+    let sc = Scenario::parse_str(&job.payload)
+        .map_err(|e| format!("job payload is not a valid scenario: {e}"))?;
+    sc.validate()?;
+    check_block(job, sc.runs)?;
+    let (model, net, mut mc) = mc_parts(&sc)?;
+    // The supervisor divides the machine across the concurrent shards;
+    // its budget overrides the scenario's own (whole-machine) setting.
+    mc.threads = job.threads;
+    let imp = if sc.impairments.is_ideal() { None } else { Some(&sc.impairments) };
+    let results = mc.run_rust_range(
+        &model,
+        imp,
+        || sc.algorithm.build(net.clone()),
+        job.run_start,
+        job.run_count,
+    );
+    Ok(results.into_iter().map(RunPayload::Mc).collect())
+}
+
+/// Replay an exp3 WSN job and execute its realization block with the
+/// per-run seeds of `experiments::exp3` (`seed + r·7919 + 1`).
+fn run_wsn_block(job: &ShardJob) -> Result<Vec<RunPayload>, String> {
+    let doc = IniDoc::parse(&job.payload)
+        .map_err(|e| format!("job payload is not a valid exp3 INI: {e}"))?;
+    let mut cfg = Exp3Config::default();
+    cfg.apply(&doc)?;
+    check_block(job, cfg.runs)?;
+    let parts = Exp3Parts::build(&cfg);
+    let settings = exp3_settings(&cfg, parts.mean_deg);
+    let (algo, mu) = *settings.get(job.algo_index).ok_or_else(|| {
+        format!(
+            "algo_index {} out of range (exp3 has {} settings)",
+            job.algo_index,
+            settings.len()
+        )
+    })?;
+    let sim = parts.simulation(&cfg, algo, mu);
+    let seed = cfg.seed;
+    let threads = resolve_threads(job.threads, job.run_count);
+    let results = parallel_ordered(job.run_count, threads, |i| {
+        sim.run(seed.wrapping_add((job.run_start + i) as u64 * 7919 + 1))
+    });
+    Ok(results.into_iter().map(RunPayload::Wsn).collect())
+}
+
+/// Validate the job's block against the replayed config's run count.
+fn check_block(job: &ShardJob, total_runs: usize) -> Result<(), String> {
+    if job.run_count == 0 {
+        return Err("job has an empty run block".to_string());
+    }
+    if job.run_start + job.run_count > total_runs {
+        return Err(format!(
+            "run block {}..{} exceeds the job's {} runs",
+            job.run_start,
+            job.run_start + job.run_count,
+            total_runs
+        ));
+    }
+    Ok(())
+}
+
+fn frame_name(f: &Frame) -> &'static str {
+    match f {
+        Frame::Job(_) => "job",
+        Frame::Run { .. } => "run",
+        Frame::Done { .. } => "done",
+        Frame::Error { .. } => "error",
+    }
+}
+
+fn crash_once_hook() {
+    if let Ok(path) = std::env::var(CRASH_ONCE_ENV) {
+        if std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .is_ok()
+        {
+            std::process::exit(17);
+        }
+    }
+}
+
+fn crash_run_index() -> Option<usize> {
+    std::env::var(CRASH_RUN_ENV).ok()?.parse().ok()
+}

@@ -209,6 +209,38 @@ fn markdown_anchor_fragments_resolve() {
     assert!(checked >= 2, "only {checked} anchored markdown links found");
 }
 
+/// The operator's handbook (docs/HANDBOOK.md) must document every CLI
+/// subcommand declared in main.rs — hidden ones included — so the
+/// handbook cannot silently fall behind the binary. Mirrors rule 4 of
+/// `tools/check_md_links.py`.
+#[test]
+fn handbook_covers_every_cli_subcommand() {
+    let root = repo_root();
+    let handbook = fs::read_to_string(root.join("docs").join("HANDBOOK.md"))
+        .expect("docs/HANDBOOK.md must exist (the operator's guide)");
+    let main_rs = fs::read_to_string(root.join("rust").join("src").join("main.rs"))
+        .expect("rust/src/main.rs");
+    let needle = "Command::new(";
+    let mut commands = Vec::new();
+    for (idx, _) in main_rs.match_indices(needle) {
+        let rest = main_rs[idx + needle.len()..].trim_start();
+        let Some(rest) = rest.strip_prefix('"') else { continue };
+        let Some(end) = rest.find('"') else { continue };
+        commands.push(&rest[..end]);
+    }
+    assert!(
+        commands.len() >= 8,
+        "only {} Command::new declarations found in main.rs (scanner broke?)",
+        commands.len()
+    );
+    for cmd in commands {
+        assert!(
+            handbook.contains(&format!("`{cmd}`")) || handbook.contains(&format!("`dcd-lms {cmd}")),
+            "docs/HANDBOOK.md does not document the `{cmd}` subcommand"
+        );
+    }
+}
+
 #[test]
 fn relative_markdown_links_point_at_existing_files() {
     let root = repo_root();

@@ -1,0 +1,351 @@
+//! End-to-end tests of the sharded multi-process Monte-Carlo runner
+//! (DESIGN.md §8): byte-identical results at any `--shards × --threads`
+//! combination, crash re-spawn, clean failure surfacing, and
+//! malformed-frame rejection. Everything here drives the real `dcd-lms`
+//! binary the way the supervisor does in production.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use dcd_lms::scenario::find;
+use dcd_lms::shard::{Frame, JobKind, ShardJob};
+
+fn binary() -> PathBuf {
+    // target/<profile>/dcd-lms next to the test executable.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // release|debug
+    p.push("dcd-lms");
+    p
+}
+
+fn run_env(args: &[&str], envs: &[(&str, &str)]) -> (bool, String) {
+    let mut cmd = Command::new(binary());
+    cmd.args(args).current_dir(env!("CARGO_MANIFEST_DIR"));
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let out = cmd.output().expect("spawn dcd-lms");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    run_env(args, &[])
+}
+
+fn read(path: &std::path::Path) -> String {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// The acceptance anchor: `scenario run --name paper-10-node --shards N`
+/// writes a results CSV that is byte-identical to the serial run, for
+/// N ∈ {2, 4}, including a shards × threads combination.
+#[test]
+fn scenario_sharded_csv_byte_identical_to_serial() {
+    let dir = std::env::temp_dir().join("dcd_shard_scenario_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    let base = [
+        "scenario", "run", "--name", "paper-10-node", "--runs", "6", "--iters", "2000",
+        "--quiet",
+    ];
+    let run_variant = |sub: &str, extra: &[&str]| -> String {
+        let out = dir.join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--out", &out_s]);
+        args.extend_from_slice(extra);
+        let (ok, text) = run(&args);
+        assert!(ok, "{sub}: {text}");
+        read(&out.join("paper-10-node.csv"))
+    };
+    let serial = run_variant("serial", &[]);
+    let s2 = run_variant("s2", &["--shards", "2"]);
+    let s4 = run_variant("s4", &["--shards", "4"]);
+    let s2t2 = run_variant("s2t2", &["--shards", "2", "--threads", "2"]);
+    assert_eq!(serial, s2, "2 shards diverged from serial");
+    assert_eq!(serial, s4, "4 shards diverged from serial");
+    assert_eq!(serial, s2t2, "2 shards x 2 threads diverged from serial");
+    // The JSON manifest records the shard layout (DESIGN.md §8).
+    let json = read(&dir.join("s4").join("paper-10-node.json"));
+    let doc = dcd_lms::jsonio::Json::parse(&json).unwrap();
+    assert_eq!(doc.get("manifest").get("shards").as_usize(), Some(4));
+    assert_eq!(
+        doc.get("manifest").get("shard_layout").as_arr().unwrap().len(),
+        4
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `exp1 --shards 2` reproduces the serial exp1 CSV byte for byte (the
+/// same check CI runs on every push).
+#[test]
+fn exp1_sharded_csv_byte_identical_to_serial() {
+    let dir = std::env::temp_dir().join("dcd_shard_exp1_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    let serial_out = dir.join("serial");
+    let shard_out = dir.join("sharded");
+    let base = ["exp1", "--fast", "--runs", "4", "--iters", "1200", "--quiet"];
+    let mut args: Vec<&str> = base.to_vec();
+    let serial_s = serial_out.to_str().unwrap().to_string();
+    args.extend_from_slice(&["--out", &serial_s]);
+    let (ok, text) = run(&args);
+    assert!(ok, "{text}");
+    let mut args: Vec<&str> = base.to_vec();
+    let shard_s = shard_out.to_str().unwrap().to_string();
+    args.extend_from_slice(&["--out", &shard_s, "--shards", "2"]);
+    let (ok, text) = run(&args);
+    assert!(ok, "{text}");
+    assert_eq!(
+        read(&serial_out.join("exp1_fig3_left.csv")),
+        read(&shard_out.join("exp1_fig3_left.csv")),
+        "sharded exp1 diverged from serial"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `exp3 --shards 2` (the WSN job kind) reproduces the serial MSD CSV
+/// byte for byte.
+#[test]
+fn exp3_sharded_csv_byte_identical_to_serial() {
+    let dir = std::env::temp_dir().join("dcd_shard_exp3_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    let base = ["exp3", "--fast", "--duration", "15000", "--quiet"];
+    let run_variant = |sub: &str, extra: &[&str]| -> String {
+        let out = dir.join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--out", &out_s]);
+        args.extend_from_slice(extra);
+        let (ok, text) = run(&args);
+        assert!(ok, "{sub}: {text}");
+        read(&out.join("exp3_fig4_right_msd.csv"))
+    };
+    let serial = run_variant("serial", &[]);
+    let sharded = run_variant("sharded", &["--shards", "2"]);
+    assert_eq!(serial, sharded, "sharded exp3 diverged from serial");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// CLI error paths: `--shards 0` and negative values are rejected with
+/// a clear message on every front-end that accepts the flag.
+#[test]
+fn bad_shard_counts_are_rejected() {
+    let (ok, text) = run(&["exp1", "--fast", "--shards", "0"]);
+    assert!(!ok);
+    assert!(text.contains("shards"), "{text}");
+    let (ok, text) = run(&["exp1", "--fast", "--shards", "-3"]);
+    assert!(!ok);
+    assert!(text.contains("-3"), "{text}");
+    let (ok, text) =
+        run(&["scenario", "run", "--name", "paper-10-node", "--shards", "0"]);
+    assert!(!ok);
+    assert!(text.contains("shards"), "{text}");
+    let (ok, text) = run(&["exp3", "--fast", "--shards", "0"]);
+    assert!(!ok);
+    assert!(text.contains("shards"), "{text}");
+    // The INI face hits the same validation.
+    let (ok, text) = run(&[
+        "scenario", "run", "--name", "paper-10-node", "--set", "schedule.shards=0",
+        "--fast",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("shards"), "{text}");
+}
+
+/// A worker killed mid-run with the retry budget exhausted surfaces a
+/// clean contextual error and a non-zero exit — no hang, no partial
+/// results file.
+#[test]
+fn killed_worker_surfaces_clean_error() {
+    let dir = std::env::temp_dir().join("dcd_shard_killed");
+    std::fs::remove_dir_all(&dir).ok();
+    let out_s = dir.to_str().unwrap().to_string();
+    let (ok, text) = run_env(
+        &[
+            "scenario", "run", "--name", "paper-10-node", "--runs", "4", "--iters", "200",
+            "--shards", "2", "--quiet", "--out", &out_s,
+        ],
+        &[
+            (dcd_lms::shard::CRASH_RUN_ENV, "1"),
+            (dcd_lms::shard::RETRIES_ENV, "0"),
+        ],
+    );
+    assert!(!ok, "a killed worker must fail the run:\n{text}");
+    assert!(text.contains("shard 0"), "{text}");
+    assert!(text.contains("failed after 1 attempt"), "{text}");
+    assert!(
+        !dir.join("paper-10-node.csv").exists(),
+        "failed run must not leave a results CSV"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A worker that crashes once is re-spawned and the run completes with
+/// results byte-identical to the serial run (re-runs are deterministic).
+#[test]
+fn crashed_shard_is_respawned_and_result_is_exact() {
+    let dir = std::env::temp_dir().join("dcd_shard_respawn");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let marker = dir.join("crash_once.marker");
+    let base = [
+        "scenario", "run", "--name", "paper-10-node", "--runs", "4", "--iters", "400",
+        "--quiet",
+    ];
+    let serial_out = dir.join("serial");
+    let serial_s = serial_out.to_str().unwrap().to_string();
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend_from_slice(&["--out", &serial_s]);
+    let (ok, text) = run(&args);
+    assert!(ok, "{text}");
+    let shard_out = dir.join("sharded");
+    let shard_s = shard_out.to_str().unwrap().to_string();
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend_from_slice(&["--out", &shard_s, "--shards", "2"]);
+    let (ok, text) = run_env(
+        &args,
+        &[(dcd_lms::shard::CRASH_ONCE_ENV, marker.to_str().unwrap())],
+    );
+    assert!(ok, "re-spawn should recover from a single crash:\n{text}");
+    assert!(marker.exists(), "the crash hook should have fired");
+    assert!(text.contains("re-spawning"), "{text}");
+    assert_eq!(
+        read(&serial_out.join("paper-10-node.csv")),
+        read(&shard_out.join("paper-10-node.csv")),
+        "post-respawn result diverged from serial"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn run_worker_with_stdin(input: &str) -> (bool, String) {
+    let mut child = Command::new(binary())
+        .arg("shard-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn shard-worker");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(input.as_bytes())
+        .expect("write job frame");
+    let out = child.wait_with_output().expect("wait for shard-worker");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+/// Malformed frames on the worker's stdin are rejected with context and
+/// a non-zero exit (never silently ignored, never a hang).
+#[test]
+fn worker_rejects_malformed_frames_with_context() {
+    let (ok, text) = run_worker_with_stdin("this is not a frame\n");
+    assert!(!ok);
+    assert!(text.contains("shard protocol"), "{text}");
+    let (ok, text) = run_worker_with_stdin("{\"v\":99,\"type\":\"done\",\"runs\":0}\n");
+    assert!(!ok);
+    assert!(text.contains("version 99"), "{text}");
+    let (ok, text) = run_worker_with_stdin("{\"v\":1,\"type\":\"done\",\"runs\":0}\n");
+    assert!(!ok);
+    assert!(text.contains("expected a job frame"), "{text}");
+    let (ok, text) = run_worker_with_stdin("");
+    assert!(!ok);
+    assert!(text.contains("empty input"), "{text}");
+    // A syntactically valid job whose payload is garbage.
+    let job = Frame::Job(ShardJob {
+        kind: JobKind::Mc,
+        payload: "[algorithm]\nname = quantum-lms\n".to_string(),
+        run_start: 0,
+        run_count: 1,
+        threads: 1,
+        algo_index: 0,
+    });
+    let (ok, text) = run_worker_with_stdin(&format!("{}\n", job.encode()));
+    assert!(!ok);
+    assert!(text.contains("quantum-lms"), "{text}");
+    // A run block that exceeds the job's schedule.
+    let sc = find("paper-10-node").unwrap();
+    let job = Frame::Job(ShardJob {
+        kind: JobKind::Mc,
+        payload: sc.to_ini_string(),
+        run_start: 99,
+        run_count: 5,
+        threads: 1,
+        algo_index: 0,
+    });
+    let (ok, text) = run_worker_with_stdin(&format!("{}\n", job.encode()));
+    assert!(!ok);
+    assert!(text.contains("exceeds"), "{text}");
+}
+
+/// A well-formed tiny job executed directly through the worker: the
+/// stream is run frames in run order followed by a done frame.
+#[test]
+fn worker_streams_run_frames_in_order() {
+    let mut sc = find("paper-10-node").unwrap();
+    sc.runs = 5;
+    sc.iters = 100;
+    sc.record_every = 10;
+    let job = Frame::Job(ShardJob {
+        kind: JobKind::Mc,
+        payload: sc.to_ini_string(),
+        run_start: 2,
+        run_count: 2,
+        threads: 1,
+        algo_index: 0,
+    });
+    let (ok, text) = run_worker_with_stdin(&format!("{}\n", job.encode()));
+    assert!(ok, "{text}");
+    let frames: Vec<Frame> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Frame::decode(l).unwrap())
+        .collect();
+    assert_eq!(frames.len(), 3, "{text}");
+    match &frames[0] {
+        Frame::Run { run, .. } => assert_eq!(*run, 2),
+        other => panic!("frame 0: {other:?}"),
+    }
+    match &frames[1] {
+        Frame::Run { run, .. } => assert_eq!(*run, 3),
+        other => panic!("frame 1: {other:?}"),
+    }
+    match &frames[2] {
+        Frame::Done { runs } => assert_eq!(*runs, 2),
+        other => panic!("frame 2: {other:?}"),
+    }
+}
+
+/// An impostor worker that answers with garbage is caught by the
+/// supervisor with a malformed-frame diagnosis (and the run fails).
+#[test]
+fn supervisor_rejects_impostor_worker() {
+    if !std::path::Path::new("/bin/echo").exists() {
+        return; // exotic platform; the unit tests still cover decode
+    }
+    let (ok, text) = run_env(
+        &[
+            "scenario", "run", "--name", "paper-10-node", "--runs", "2", "--iters", "100",
+            "--shards", "2", "--quiet",
+        ],
+        &[
+            (dcd_lms::shard::WORKER_BIN_ENV, "/bin/echo"),
+            (dcd_lms::shard::RETRIES_ENV, "0"),
+        ],
+    );
+    assert!(!ok, "an impostor worker must fail the run:\n{text}");
+    assert!(text.contains("malformed"), "{text}");
+}

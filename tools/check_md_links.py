@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Markdown link check + DESIGN.md section-citation check.
 
-Standalone CI face of rust/tests/docs_integrity.rs — three rules:
+Standalone CI face of rust/tests/docs_integrity.rs — four rules:
 
 1. Every relative link target in a *.md file must exist on disk.
 2. Every markdown link with a `#fragment` that points at a markdown
@@ -11,10 +11,14 @@ Standalone CI face of rust/tests/docs_integrity.rs — three rules:
 3. Every DESIGN.md section citation (a § token after the file name) in
    the rust/python sources *and* in the markdown docs must resolve to a
    §-numbered heading there.
+4. docs/HANDBOOK.md (the operator's guide) must mention every CLI
+   subcommand declared in rust/src/main.rs — including hidden ones —
+   so the handbook cannot silently fall behind the binary.
 
-Exit status 0 = clean, 1 = at least one dangling reference (all are
-listed). Run from anywhere: the repo root is located relative to this
-file.
+The scan covers the repo root *and* docs/ recursively (everything but
+SKIP_DIRS). Exit status 0 = clean, 1 = at least one dangling reference
+(all are listed). Run from anywhere: the repo root is located relative
+to this file.
 """
 
 import re
@@ -112,10 +116,39 @@ def check_design_citations(errors):
                 )
 
 
+COMMAND_RE = re.compile(r'Command::new\(\s*"([a-z0-9-]+)"')
+
+
+def check_handbook_cli_coverage(errors):
+    """Rule 4: the operator's handbook documents every CLI subcommand."""
+    handbook = ROOT / "docs" / "HANDBOOK.md"
+    if not handbook.exists():
+        errors.append("docs/HANDBOOK.md missing (the operator's guide)")
+        return
+    main_rs = ROOT / "rust" / "src" / "main.rs"
+    commands = COMMAND_RE.findall(main_rs.read_text(encoding="utf-8"))
+    if not commands:
+        errors.append("rust/src/main.rs: no Command::new declarations found "
+                      "(CLI coverage scanner broke?)")
+        return
+    text = handbook.read_text(encoding="utf-8")
+    for cmd in commands:
+        if f"`{cmd}`" not in text and f"`dcd-lms {cmd}" not in text:
+            errors.append(
+                f"docs/HANDBOOK.md: CLI subcommand `{cmd}` (declared in "
+                f"rust/src/main.rs) is undocumented"
+            )
+
+
 def main():
     errors = []
+    # Guard: the walk must include docs/ (a SKIP_DIRS regression would
+    # silently stop checking the handbook).
+    if not any(p.relative_to(ROOT).parts[0] == "docs" for p in walk({".md"})):
+        errors.append("markdown walk found nothing under docs/ (scanner broke?)")
     check_md_links(errors)
     check_design_citations(errors)
+    check_handbook_cli_coverage(errors)
     if errors:
         print("documentation integrity check FAILED:")
         for e in errors:
