@@ -1,0 +1,154 @@
+//! Bench `comm_ledger`: hot-path cost of the directional message
+//! ledger (DESIGN.md §9) versus the legacy transmitter-only counter it
+//! replaced, at N ∈ {10, 50, 80}.
+//!
+//! Three measurements per network size:
+//!
+//! * `step`        — one full DCD iteration billing into the ledger
+//!                   (the real hot path);
+//! * `ledger-pass` — one iteration's worth of `CommMeter::send` calls
+//!                   alone;
+//! * `legacy-pass` — the same call trace on a reconstruction of the old
+//!                   undirected meter (scalars/messages/per-node only).
+//!
+//! The ledger's extra work per send (per-link + per-purpose counters,
+//! two outcome-table branches) must stay below **5 % of the full step
+//! time** on the ideal path — asserted here, so the fast-bench CI step
+//! fails if the ledger ever grows into the hot loop. Emits
+//! `BENCH_comm.json`.
+
+use dcd_lms::algorithms::{Algorithm, CommMeter, Dcd, NetworkConfig, Purpose, StepData};
+use dcd_lms::bench_support::{bench, fast_mode, write_bench_json, BenchRecord, Table};
+use dcd_lms::rng::Pcg64;
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+use std::time::Duration;
+
+/// The pre-ledger meter, reconstructed for the comparison: undirected,
+/// transmitter-only billing.
+struct LegacyMeter {
+    scalars: u64,
+    messages: u64,
+    per_node: Vec<u64>,
+}
+
+impl LegacyMeter {
+    fn new(n: usize) -> Self {
+        Self { scalars: 0, messages: 0, per_node: vec![0; n] }
+    }
+
+    #[inline]
+    fn send(&mut self, from: usize, count: usize) {
+        self.scalars += count as u64;
+        self.messages += 1;
+        self.per_node[from] += count as u64;
+    }
+}
+
+fn main() {
+    let fast = fast_mode();
+    let budget = Duration::from_millis(if fast { 40 } else { 200 });
+    let (m, m_grad, dim) = (3usize, 1usize, 16usize);
+    println!("== directional ledger hot path (DCD M=3 M∇=1, L={dim}) ==\n");
+    let mut table = Table::new(&["measurement", "config", "median", "per send"]);
+    let mut records = Vec::new();
+
+    for &n in &[10usize, 50, 80] {
+        if fast && n > 50 {
+            continue;
+        }
+        let graph = Graph::ring(n, 2);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![5e-3; n], dim };
+        // One iteration's send trace (src, dst, purpose, count).
+        let mut trace: Vec<(usize, usize, Purpose, usize)> = Vec::new();
+        for k in 0..n {
+            for &nb in net.graph.neighbors(k) {
+                trace.push((k, nb, Purpose::Estimate, m));
+                trace.push((nb, k, Purpose::Gradient, m_grad));
+            }
+        }
+        let sends = trace.len();
+        let config = format!("N={n}");
+
+        // The real hot path: one full DCD step billing into the ledger.
+        let mut alg = Dcd::new(net.clone(), m, m_grad);
+        let mut comm = CommMeter::new(n);
+        let mut rng = Pcg64::new(7, 1);
+        let mut u = vec![0.0f64; n * dim];
+        let mut d = vec![0.0f64; n];
+        for x in u.iter_mut() {
+            *x = rng.next_gaussian();
+        }
+        for x in d.iter_mut() {
+            *x = rng.next_gaussian();
+        }
+        let step = bench("step", 3, budget, || {
+            alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+            std::hint::black_box(&comm);
+        });
+        table.row(&[
+            "full DCD step (ledger)".into(),
+            config.clone(),
+            format!("{:?}", step.median),
+            String::new(),
+        ]);
+        records.push(BenchRecord::from_stats(&step, "step", &config));
+
+        // The metering alone: the same send trace, ledger vs legacy.
+        let mut ledger = CommMeter::new(n);
+        let ledger_pass = bench("ledger-pass", 3, budget, || {
+            for &(src, dst, purpose, count) in &trace {
+                ledger.send(src, dst, purpose, count);
+            }
+            std::hint::black_box(&ledger);
+        });
+        let mut legacy = LegacyMeter::new(n);
+        let legacy_pass = bench("legacy-pass", 3, budget, || {
+            for &(src, _dst, _purpose, count) in &trace {
+                legacy.send(src, count);
+            }
+            std::hint::black_box((&legacy.scalars, &legacy.messages, &legacy.per_node));
+        });
+        for (stats, name) in [(&ledger_pass, "ledger-pass"), (&legacy_pass, "legacy-pass")] {
+            table.row(&[
+                name.into(),
+                config.clone(),
+                format!("{:?}", stats.median),
+                format!("{:.1} ns", stats.median.as_secs_f64() * 1e9 / sends as f64),
+            ]);
+            records.push(BenchRecord::from_stats(stats, name, &config));
+        }
+
+        // The acceptance gate: the ledger's *extra* metering cost per
+        // iteration must stay below 5 % of the full step.
+        let extra = (ledger_pass.median.as_secs_f64() - legacy_pass.median.as_secs_f64())
+            .max(0.0);
+        let overhead = extra / step.median.as_secs_f64();
+        println!(
+            "N={n}: ledger overhead {:.2}% of one step ({sends} sends)",
+            overhead * 100.0
+        );
+        records.push(BenchRecord {
+            name: "overhead-frac".into(),
+            config: config.clone(),
+            median_ns: extra * 1e9,
+            iters_per_sec: overhead,
+        });
+        assert!(
+            overhead < 0.05,
+            "ledger overhead {:.2}% exceeds the 5% budget at N={n}",
+            overhead * 100.0
+        );
+    }
+
+    println!();
+    table.print();
+    write_bench_json(
+        "BENCH_comm.json",
+        "directional ledger hot-path overhead vs the legacy meter",
+        &records,
+    )
+    .expect("write BENCH_comm.json");
+    println!("\nwrote BENCH_comm.json");
+}

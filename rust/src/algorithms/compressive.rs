@@ -17,7 +17,7 @@
 //! step η trades reconstruction lag for noise (the "additional adaptive
 //! step which can increase the algorithm complexity" noted in §II-B).
 
-use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use super::traits::{Algorithm, CommMeter, NetworkConfig, Purpose, StepData};
 use crate::rng::Pcg64;
 
 /// Compressive diffusion LMS state.
@@ -108,8 +108,10 @@ impl Algorithm for CompressiveDiffusion {
                 .zip(psi_k.iter().zip(gamma_k.iter()))
                 .map(|(pj, (s, g))| pj * (s - g))
                 .sum();
-            // One scalar to each neighbour.
-            comm.send(k, self.cfg.graph.neighbors(k).len());
+            // One projection-residue scalar to each neighbour.
+            for &lnb in self.cfg.graph.neighbors(k) {
+                comm.send(k, lnb, Purpose::Residue, 1);
+            }
             for (g, pj) in gamma_k.iter_mut().zip(p.iter()) {
                 *g += self.eta * pj * eps;
             }
@@ -226,12 +228,13 @@ mod tests {
         let u = vec![0.1; n * l];
         let d = vec![0.0; n];
         alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
-        assert_eq!(comm.scalars, (n * 2) as u64); // ring: 2 neighbours
+        assert_eq!(comm.scalars(), (n * 2) as u64); // ring: 2 neighbours
         assert_eq!(alg.compression_ratio(), Some(18.0));
         assert_eq!(
             alg.expected_scalars_per_iter() as u64,
-            comm.scalars
+            comm.scalars()
         );
+        assert_eq!(comm.ledger().purpose_scalars(Purpose::Residue), comm.scalars());
     }
 
     #[test]

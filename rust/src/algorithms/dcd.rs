@@ -11,7 +11,7 @@
 //! The compressed-diffusion LMS (CD) of §IV is the `m_grad = L` special
 //! case, built by [`Dcd::cd`].
 
-use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use super::traits::{Algorithm, CommMeter, NetworkConfig, Purpose, StepData};
 use crate::rng::Pcg64;
 
 /// Externally supplied selection patterns for one iteration (used by the
@@ -209,7 +209,7 @@ impl Dcd {
                 for &lnb in self.cfg.graph.neighbors(k) {
                     let c_lk = self.cfg.c[(lnb, k)];
                     // Node k sends H_k o w_k to neighbour l  (M scalars).
-                    comm.send(k, self.m);
+                    comm.send(k, lnb, Purpose::Estimate, self.m);
                     // Neighbour l fills with its own w_l, evaluates its
                     // instantaneous gradient there...
                     let lb = lnb * l;
@@ -223,8 +223,10 @@ impl Dcd {
                         // The received selected entries carry link noise.
                         e -= ulj * (hj * (wj + nj) + (1.0 - hj) * wlj);
                     }
-                    // ... and returns the Q_l-masked entries (M_grad scalars).
-                    comm.send(lnb, self.m_grad);
+                    // ... and returns the Q_l-masked entries (M_grad
+                    // scalars) — a solicited reply: the ledger bills it
+                    // only when k's broadcast actually reached l.
+                    comm.send(lnb, k, Purpose::Gradient, self.m_grad);
                     if c_lk == 0.0 {
                         continue;
                     }
@@ -254,7 +256,9 @@ impl Dcd {
             } else {
                 // C = I: no gradient exchange, but the estimates still have
                 // to reach the neighbours for the combine step below.
-                comm.send(k, self.m * self.cfg.graph.neighbors(k).len());
+                for &lnb in self.cfg.graph.neighbors(k) {
+                    comm.send(k, lnb, Purpose::Estimate, self.m);
+                }
             }
         }
 
@@ -428,8 +432,19 @@ mod tests {
             alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
         }
         assert_eq!(
-            comm.scalars,
+            comm.scalars(),
             (alg.expected_scalars_per_iter() * iters as f64) as u64
+        );
+        // The ledger's breakdowns are conservative: per-node, per-link
+        // and per-purpose views all sum back to the same total.
+        let ledger = comm.ledger();
+        assert_eq!(ledger.per_node.iter().sum::<u64>(), ledger.scalars);
+        assert_eq!(ledger.per_link.iter().sum::<u64>(), ledger.scalars);
+        assert_eq!(ledger.per_purpose.iter().sum::<u64>(), ledger.scalars);
+        // DCD splits traffic M : M_grad between the two purposes.
+        assert_eq!(
+            ledger.purpose_scalars(Purpose::Estimate) * alg.m_grad as u64,
+            ledger.purpose_scalars(Purpose::Gradient) * alg.m as u64
         );
     }
 
@@ -489,6 +504,7 @@ mod tests {
         let d = vec![0.0; 4];
         alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
         // Ring of 4, 1 hop: every node has 2 neighbours; M = 2 scalars each.
-        assert_eq!(comm.scalars, (4 * 2 * 2) as u64);
+        assert_eq!(comm.scalars(), (4 * 2 * 2) as u64);
+        assert_eq!(comm.ledger().purpose_scalars(Purpose::Gradient), 0);
     }
 }

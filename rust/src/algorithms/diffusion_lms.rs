@@ -7,7 +7,7 @@
 //! quoted against. The combine step reuses the estimates already held by
 //! the neighbours, matching the accounting of §IV.
 
-use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use super::traits::{Algorithm, CommMeter, NetworkConfig, Purpose, StepData};
 use crate::rng::Pcg64;
 
 /// ATC diffusion LMS state.
@@ -71,9 +71,10 @@ impl Algorithm for DiffusionLms {
             }
             if self.grad_sharing {
                 for &lnb in self.cfg.graph.neighbors(k) {
-                    // k -> l: full estimate; l -> k: full gradient.
-                    comm.send(k, l);
-                    comm.send(lnb, l);
+                    // k -> l: full estimate; l -> k: the solicited full
+                    // gradient (billed only when the request arrived).
+                    comm.send(k, lnb, Purpose::Estimate, l);
+                    comm.send(lnb, k, Purpose::Gradient, l);
                     let c_lk = self.cfg.c[(lnb, k)];
                     if c_lk == 0.0 {
                         continue;
@@ -101,7 +102,7 @@ impl Algorithm for DiffusionLms {
             for &lnb in self.cfg.graph.neighbors(k) {
                 let a_lk = self.cfg.a[(lnb, k)];
                 if !self.grad_sharing {
-                    comm.send(lnb, l);
+                    comm.send(lnb, k, Purpose::Estimate, l);
                 }
                 if a_lk == 0.0 {
                     continue;
@@ -201,8 +202,13 @@ mod tests {
         let d = vec![0.0; n];
         alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
         // Ring: 2 neighbours each, 2L scalars per directed link.
-        assert_eq!(comm.scalars, (n * 2 * 2 * l) as u64);
-        assert_eq!(alg.expected_scalars_per_iter() as u64, comm.scalars);
+        assert_eq!(comm.scalars(), (n * 2 * 2 * l) as u64);
+        assert_eq!(alg.expected_scalars_per_iter() as u64, comm.scalars());
+        // Half the traffic is estimates, half solicited gradients.
+        assert_eq!(
+            comm.ledger().purpose_scalars(Purpose::Estimate),
+            comm.ledger().purpose_scalars(Purpose::Gradient)
+        );
     }
 
     #[test]
@@ -215,6 +221,6 @@ mod tests {
         let u = vec![0.0; 35];
         let d = vec![0.0; 5];
         alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
-        assert_eq!(comm.scalars, (5 * 2 * 7) as u64);
+        assert_eq!(comm.scalars(), (5 * 2 * 7) as u64);
     }
 }

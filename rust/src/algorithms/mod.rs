@@ -29,4 +29,4 @@ pub use dcd::{Dcd, DcdMasks};
 pub use diffusion_lms::DiffusionLms;
 pub use partial::{PartialDiffusion, PartialMasks};
 pub use rcd::{Rcd, RcdSelection};
-pub use traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+pub use traits::{Algorithm, CommLedger, CommMeter, NetworkConfig, Purpose, StepData};

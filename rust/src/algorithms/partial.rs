@@ -6,7 +6,7 @@
 //!
 //!   w_k = a_kk ψ_k + Σ_{l≠k} a_lk ( H_l ψ_l + (I − H_l) ψ_k ).
 
-use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use super::traits::{Algorithm, CommMeter, NetworkConfig, Purpose, StepData};
 use crate::rng::Pcg64;
 
 /// Externally supplied masks for one iteration (N x L row-major 0/1).
@@ -83,7 +83,9 @@ impl PartialDiffusion {
 
         // Masked combine (eq. (8)); each node ships M entries per neighbour.
         for k in 0..n {
-            comm.send(k, self.m * self.cfg.graph.neighbors(k).len());
+            for &lnb in self.cfg.graph.neighbors(k) {
+                comm.send(k, lnb, Purpose::Estimate, self.m);
+            }
         }
         for k in 0..n {
             let a_kk = self.cfg.a[(k, k)];
@@ -200,7 +202,7 @@ mod tests {
         let u = vec![0.0; n * l];
         let d = vec![0.0; n];
         alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
-        assert_eq!(comm.scalars, (6 * 2 * 2) as u64);
+        assert_eq!(comm.scalars(), (6 * 2 * 2) as u64);
         assert!((alg.compression_ratio().unwrap() - 8.0).abs() < 1e-12);
     }
 

@@ -8,7 +8,7 @@
 //!   h_kk,i = 1 − Σ_{l ∈ selected} a_lk,
 //!   w_k,i  = h_kk,i ψ_k,i + Σ_{l ∈ selected} a_lk ψ_l,i.
 
-use super::traits::{Algorithm, CommMeter, NetworkConfig, StepData};
+use super::traits::{Algorithm, CommMeter, NetworkConfig, Purpose, StepData};
 use crate::rng::Pcg64;
 
 /// Externally supplied neighbour selection for one iteration: row-major
@@ -104,7 +104,7 @@ impl Rcd {
                     continue;
                 }
                 // Selected neighbour transmits its full psi (L scalars).
-                comm.send(lnb, l);
+                comm.send(lnb, k, Purpose::Estimate, l);
                 let a_lk = self.cfg.a[(lnb, k)];
                 h_kk -= a_lk;
                 let psi_l = &self.psi[lnb * l..(lnb + 1) * l];
@@ -222,8 +222,8 @@ mod tests {
             alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
         }
         // Ring(6,2): every node has 4 neighbours, 3 polled, L scalars each.
-        assert_eq!(comm.scalars, 10 * 6 * 3 * 5);
-        assert_eq!(alg.expected_scalars_per_iter() as u64 * 10, comm.scalars);
+        assert_eq!(comm.scalars(), 10 * 6 * 3 * 5);
+        assert_eq!(alg.expected_scalars_per_iter() as u64 * 10, comm.scalars());
     }
 
     #[test]

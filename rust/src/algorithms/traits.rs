@@ -1,10 +1,17 @@
 //! Shared algorithm plumbing: network configuration, data snapshots,
 //! communication metering, and the `Algorithm` trait the coordinator
 //! drives.
+//!
+//! The communication meter itself lives with the energy substrate
+//! ([`crate::energy::comm`], DESIGN.md §9) — communication cost *is*
+//! energy in this system — and is re-exported here because every
+//! algorithm step reports its traffic to it.
 
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 use crate::topology::Graph;
+
+pub use crate::energy::comm::{CommLedger, CommMeter, Purpose};
 
 /// Static network configuration shared by all algorithms.
 #[derive(Debug, Clone)]
@@ -73,75 +80,16 @@ pub struct StepData<'a> {
     pub d: &'a [f64],
 }
 
-/// Counts every scalar (and message) that crosses a link.
-///
-/// Scalars are the paper's communication unit: its compression ratios are
-/// ratios of transmitted vector entries per iteration (index overhead is
-/// ignored because selection patterns can be reproduced from shared PRNG
-/// seeds; we track `messages` separately so a frame-count cost model is
-/// also possible).
-#[derive(Debug, Clone, Default)]
-pub struct CommMeter {
-    /// Total scalars transmitted (all nodes).
-    pub scalars: u64,
-    /// Total messages (frames) transmitted.
-    pub messages: u64,
-    /// Per-node transmitted scalars.
-    pub per_node: Vec<u64>,
-    /// Nodes currently gated off the air (see
-    /// [`crate::coordinator::impairments`]): their `send`s are suppressed
-    /// — no transmission happened, so nothing is billed. Empty = nobody
-    /// muted (the default, and the ideal-links fast path).
-    muted: Vec<bool>,
-}
-
-impl CommMeter {
-    /// A meter for `n_nodes` nodes with all counters at zero.
-    pub fn new(n_nodes: usize) -> Self {
-        Self { scalars: 0, messages: 0, per_node: vec![0; n_nodes], muted: Vec::new() }
-    }
-
-    /// Record `count` scalars sent by `from` in one frame. Muted nodes
-    /// transmit nothing and are billed nothing.
-    #[inline]
-    pub fn send(&mut self, from: usize, count: usize) {
-        if self.muted.get(from).copied().unwrap_or(false) {
-            return;
-        }
-        self.scalars += count as u64;
-        self.messages += 1;
-        self.per_node[from] += count as u64;
-    }
-
-    /// Install this iteration's transmit-gate mask (`true` = node is
-    /// silent). The coordinator's impairment layer calls this before
-    /// every gated iteration.
-    pub fn set_mute_mask(&mut self, mask: &[bool]) {
-        self.muted.clear();
-        self.muted.extend_from_slice(mask);
-    }
-
-    /// Remove the transmit gate (every node billed again).
-    pub fn clear_mute_mask(&mut self) {
-        self.muted.clear();
-    }
-
-    /// Zero all counters (the mute mask is cleared too).
-    pub fn reset(&mut self) {
-        self.scalars = 0;
-        self.messages = 0;
-        self.per_node.iter_mut().for_each(|x| *x = 0);
-        self.muted.clear();
-    }
-}
-
 /// A distributed estimation algorithm driven one synchronous iteration at
 /// a time by the coordinator.
 pub trait Algorithm {
     fn name(&self) -> &'static str;
 
     /// Advance one network iteration: draw selection patterns from `rng`,
-    /// exchange (metered) messages, update all node states.
+    /// exchange messages, update all node states. Every exchanged frame
+    /// is reported to the directional ledger as
+    /// `(source, destination, purpose, scalars)` — see
+    /// [`CommMeter::send`] and DESIGN.md §9 for the billing rules.
     fn step(&mut self, data: StepData<'_>, rng: &mut Pcg64, comm: &mut CommMeter);
 
     /// Current estimates, row-major (N x L).
@@ -217,31 +165,14 @@ mod tests {
         assert!(cfg.validate().is_err());
     }
 
+    /// The re-exported ledger is the meter every algorithm bills into
+    /// (its own unit tests live in `energy::comm`).
     #[test]
-    fn meter_accumulates() {
+    fn meter_reexport_is_the_ledger() {
         let mut m = CommMeter::new(3);
-        m.send(0, 5);
-        m.send(2, 2);
-        m.send(0, 1);
-        assert_eq!(m.scalars, 8);
-        assert_eq!(m.messages, 3);
-        assert_eq!(m.per_node, vec![6, 0, 2]);
-        m.reset();
-        assert_eq!(m.scalars, 0);
-    }
-
-    #[test]
-    fn muted_nodes_are_not_billed() {
-        let mut m = CommMeter::new(3);
-        m.set_mute_mask(&[false, true, false]);
-        m.send(0, 4);
-        m.send(1, 4); // suppressed
-        m.send(2, 4);
-        assert_eq!(m.scalars, 8);
-        assert_eq!(m.messages, 2);
-        assert_eq!(m.per_node, vec![4, 0, 4]);
-        m.clear_mute_mask();
-        m.send(1, 4);
-        assert_eq!(m.scalars, 12);
+        m.send(0, 1, Purpose::Estimate, 5);
+        m.send(2, 0, Purpose::Gradient, 2);
+        assert_eq!(m.scalars(), 7);
+        assert_eq!(m.ledger().link_scalars(0, 1), 5);
     }
 }

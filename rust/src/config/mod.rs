@@ -128,6 +128,11 @@ pub struct Exp3Config {
     /// Worker processes the WSN realizations are sharded across
     /// (1 = in-process; see DESIGN.md §8).
     pub shards: usize,
+    /// Also write `exp3_ledger.csv` — the per-node energy/communication
+    /// breakdown from the directional ledger (DESIGN.md §9). An output
+    /// knob (CLI `--ledger-csv`), deliberately outside the INI
+    /// round-trip: it defines no part of the simulation.
+    pub ledger_csv: bool,
     // Table II step sizes.
     pub mu_diffusion: f64,
     pub mu_rcd: f64,
@@ -159,6 +164,7 @@ impl Default for Exp3Config {
             runs: 4,
             seed: 2019,
             shards: 1,
+            ledger_csv: false,
             mu_diffusion: 5.4e-3,
             mu_rcd: 1.14e-2,
             mu_partial: 4.4e-3,

@@ -355,5 +355,10 @@ mod tests {
         // directed link per iteration.
         let links: usize = (0..n).map(|k| net.graph.neighbors(k).len()).sum();
         assert_eq!(bus.delivered_scalars(), (5 * links * (m + mg)) as u64);
+        // Message-level and frame-level engines bill into the *same*
+        // directional ledger model: the bus ledger reproduces the
+        // vectorised meter's ledger exactly — per link, per purpose,
+        // per node (DESIGN.md §9).
+        assert_eq!(bus.ledger(), *comm.ledger());
     }
 }

@@ -6,7 +6,16 @@
 //! `send` enqueues into the destination mailbox, `drain` empties it.
 //! It is `Send + Sync` (mutex-guarded mailboxes) so the same code runs
 //! under the deterministic scheduler and under thread-per-agent tests.
+//!
+//! Accounting goes through the same directional [`CommMeter`] ledger the
+//! frame-level engine bills into (DESIGN.md §9): every message carries
+//! its `(source, destination, purpose)` triple, `send_lossy` records
+//! in-flight erasures in the ledger's dropped counters, and
+//! [`Bus::set_quant_step`] installs the quantized payload width — the
+//! message-level and matrix-level engines share one metering model
+//! instead of two parallel counter sets.
 
+use crate::algorithms::{CommLedger, CommMeter, Purpose};
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
@@ -71,26 +80,28 @@ impl Message {
             Message::Estimate { body, .. } | Message::Gradient { body, .. } => body.len(),
         }
     }
+
+    /// The ledger purpose of this message (DESIGN.md §9).
+    pub fn purpose(&self) -> Purpose {
+        match self {
+            Message::Estimate { .. } => Purpose::Estimate,
+            Message::Gradient { .. } => Purpose::Gradient,
+        }
+    }
 }
 
-/// Per-node mailboxes with delivery accounting.
+/// Per-node mailboxes billing into the shared directional ledger.
 pub struct Bus {
     mailboxes: Vec<Mutex<VecDeque<Message>>>,
-    delivered_scalars: Mutex<u64>,
-    delivered_messages: Mutex<u64>,
-    dropped_scalars: Mutex<u64>,
-    dropped_messages: Mutex<u64>,
+    ledger: Mutex<CommMeter>,
 }
 
 impl Bus {
-    /// A bus with one empty mailbox per node and zeroed counters.
+    /// A bus with one empty mailbox per node and a zeroed ledger.
     pub fn new(n_nodes: usize) -> Self {
         Self {
             mailboxes: (0..n_nodes).map(|_| Mutex::new(VecDeque::new())).collect(),
-            delivered_scalars: Mutex::new(0),
-            delivered_messages: Mutex::new(0),
-            dropped_scalars: Mutex::new(0),
-            dropped_messages: Mutex::new(0),
+            ledger: Mutex::new(CommMeter::new(n_nodes)),
         }
     }
 
@@ -99,23 +110,41 @@ impl Bus {
         self.mailboxes.len()
     }
 
-    /// Deliver `msg` into the mailbox of node `to`.
+    /// Install the quantized payload width (Δ grid) for billed bits —
+    /// the accounting face of [`super::agent::Agent::set_quant_step`],
+    /// which quantizes the transmitted values themselves.
+    pub fn set_quant_step(&self, quant_step: f64) {
+        self.ledger.lock().unwrap().set_quant_step(quant_step);
+    }
+
+    /// Deliver `msg` into the mailbox of node `to`, billing its
+    /// transmitter in the ledger.
     pub fn send(&self, to: usize, msg: Message) {
-        *self.delivered_scalars.lock().unwrap() += msg.scalar_count() as u64;
-        *self.delivered_messages.lock().unwrap() += 1;
+        self.ledger.lock().unwrap().send_lossy(
+            msg.from_node(),
+            to,
+            msg.purpose(),
+            msg.scalar_count(),
+            true,
+        );
         self.mailboxes[to].lock().unwrap().push_back(msg);
     }
 
     /// Send over a lossy link: with `delivered == false` the frame was
-    /// transmitted but erased in flight — it never reaches the mailbox
-    /// and is tallied in the dropped counters instead (the message-level
-    /// face of the coordinator's packet-drop impairment).
+    /// transmitted (and billed — the transmitter pays either way) but
+    /// erased in flight: it never reaches the mailbox and lands in the
+    /// ledger's dropped counters (the message-level face of the
+    /// coordinator's packet-drop impairment).
     pub fn send_lossy(&self, to: usize, msg: Message, delivered: bool) {
+        self.ledger.lock().unwrap().send_lossy(
+            msg.from_node(),
+            to,
+            msg.purpose(),
+            msg.scalar_count(),
+            delivered,
+        );
         if delivered {
-            self.send(to, msg);
-        } else {
-            *self.dropped_scalars.lock().unwrap() += msg.scalar_count() as u64;
-            *self.dropped_messages.lock().unwrap() += 1;
+            self.mailboxes[to].lock().unwrap().push_back(msg);
         }
     }
 
@@ -129,24 +158,31 @@ impl Bus {
         self.mailboxes[node].lock().unwrap().len()
     }
 
-    /// Total scalars delivered into mailboxes.
+    /// Snapshot of the bus's directional ledger.
+    pub fn ledger(&self) -> CommLedger {
+        self.ledger.lock().unwrap().ledger().clone()
+    }
+
+    /// Total scalars delivered into mailboxes (billed minus erased).
     pub fn delivered_scalars(&self) -> u64 {
-        *self.delivered_scalars.lock().unwrap()
+        let m = self.ledger.lock().unwrap();
+        m.ledger().scalars - m.ledger().dropped_scalars
     }
 
     /// Total frames delivered into mailboxes.
     pub fn delivered_messages(&self) -> u64 {
-        *self.delivered_messages.lock().unwrap()
+        let m = self.ledger.lock().unwrap();
+        m.ledger().messages - m.ledger().dropped_messages
     }
 
     /// Total scalars transmitted but erased by lossy links.
     pub fn dropped_scalars(&self) -> u64 {
-        *self.dropped_scalars.lock().unwrap()
+        self.ledger.lock().unwrap().ledger().dropped_scalars
     }
 
     /// Total frames transmitted but erased by lossy links.
     pub fn dropped_messages(&self) -> u64 {
-        *self.dropped_messages.lock().unwrap()
+        self.ledger.lock().unwrap().ledger().dropped_messages
     }
 }
 
@@ -193,6 +229,24 @@ mod tests {
         assert_eq!(bus.delivered_scalars(), 3);
         assert_eq!(bus.dropped_messages(), 1);
         assert_eq!(bus.dropped_scalars(), 3);
+        // The transmitter paid for both frames, on the directed link.
+        let ledger = bus.ledger();
+        assert_eq!(ledger.scalars, 6);
+        assert_eq!(ledger.link_scalars(0, 1), 6);
+        assert_eq!(ledger.purpose_scalars(Purpose::Estimate), 6);
+    }
+
+    /// Quantized payloads are billed at the grid-index width — the
+    /// accounting half of the agent's `set_quant_step` wire face.
+    #[test]
+    fn quantized_payload_width_reaches_the_bus_ledger() {
+        let bus = Bus::new(2);
+        bus.set_quant_step(1e-3);
+        let pv = PartialVector { idx: vec![0, 1], val: vec![0.001, 0.002] };
+        bus.send(1, Message::Estimate { from: 0, body: pv });
+        let ledger = bus.ledger();
+        assert_eq!(ledger.bits_per_scalar, crate::energy::payload_bits(1e-3));
+        assert_eq!(ledger.bits(), 2 * ledger.bits_per_scalar as u64);
     }
 
     #[test]

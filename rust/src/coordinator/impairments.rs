@@ -259,6 +259,11 @@ pub struct ImpairmentState {
     last_broadcast: Vec<f64>,
     /// Per-node silence decisions for the current iteration.
     silent: Vec<bool>,
+    /// Dense request-delivery table `src * n + dst`: did src's estimate
+    /// broadcast reach dst this iteration? The single source of truth
+    /// shared by the effective-matrix rebuild *and* the ledger's
+    /// solicited-reply billing (DESIGN.md §9).
+    delivered: Vec<bool>,
     rng: Pcg64,
     dim: usize,
 }
@@ -272,6 +277,7 @@ impl ImpairmentState {
             c0: net.c.clone(),
             last_broadcast: vec![0.0; net.n_nodes() * net.dim],
             silent: vec![false; net.n_nodes()],
+            delivered: vec![true; net.n_nodes() * net.n_nodes()],
             rng: Pcg64::new(seed ^ LINK_SEED_SALT, stream),
             dim: net.dim,
         }
@@ -281,6 +287,12 @@ impl ImpairmentState {
     /// [`Self::begin_iteration`]).
     pub fn silent(&self) -> &[bool] {
         &self.silent
+    }
+
+    /// The request-delivery table of the current iteration, dense
+    /// `src * n + dst` (valid after [`Self::begin_iteration`]).
+    pub fn delivered(&self) -> &[bool] {
+        &self.delivered
     }
 
     /// Draw this iteration's link events and install their consequences:
@@ -330,13 +342,17 @@ impl ImpairmentState {
         // *solicits* nothing: it broadcast no estimate for neighbours to
         // evaluate gradients at, so its whole C column collapses to the
         // self weight and it runs a pure self-LMS adapt that iteration.
+        // The per-link outcomes recorded here are the same ones the
+        // ledger bills against below — one draw, two consumers.
         let net = alg.network_mut();
         net.a.data_mut().copy_from_slice(self.a0.data());
         net.c.data_mut().copy_from_slice(self.c0.data());
+        self.delivered.iter_mut().for_each(|d| *d = true);
         let p = imp.drop_prob;
         for k in 0..n {
             for &lnb in net.graph.neighbors(k) {
                 let delivered = !self.silent[lnb] && !(p > 0.0 && self.rng.next_bool(p));
+                self.delivered[lnb * n + k] = delivered;
                 if !delivered {
                     let am = net.a[(lnb, k)];
                     if am != 0.0 {
@@ -354,17 +370,21 @@ impl ImpairmentState {
             }
         }
 
-        // 3. Gated nodes transmit nothing, so they are billed nothing.
-        comm.set_mute_mask(&self.silent);
+        // 3. Install the outcomes in the ledger: gated nodes transmit
+        // nothing and are billed nothing, and a gradient reply whose
+        // soliciting broadcast died on this table is never billed
+        // (DESIGN.md §9 billing rules).
+        comm.set_outcomes(&self.silent, Some(&self.delivered));
     }
 
     /// Put the pristine combiners back (so a reused algorithm instance
-    /// sees its original configuration) and unmute the meter.
+    /// sees its original configuration) and clear the ledger's outcome
+    /// tables.
     pub fn restore(&self, alg: &mut dyn Algorithm, comm: &mut CommMeter) {
         let net = alg.network_mut();
         net.a.data_mut().copy_from_slice(self.a0.data());
         net.c.data_mut().copy_from_slice(self.c0.data());
-        comm.clear_mute_mask();
+        comm.clear_outcomes();
     }
 }
 
@@ -536,6 +556,41 @@ mod tests {
         assert!((imp.combine_keep_prob().unwrap() - 0.5 * 0.8).abs() < 1e-15);
         assert!((imp.adapt_keep_prob().unwrap() - 0.25 * 0.8).abs() < 1e-15);
         assert_eq!(Gating::Always.transmit_prob(), Some(1.0));
+    }
+
+    /// The delivered table installed in the meter is the same event the
+    /// effective matrices encode: with every frame erased, estimate
+    /// broadcasts stay billed (transmitter pays) while every solicited
+    /// gradient reply is suppressed and tracked (DESIGN.md §9).
+    #[test]
+    fn ledger_outcomes_follow_the_link_events() {
+        use crate::algorithms::Purpose;
+        let cfg = net(4, 2);
+        let mut alg = Dcd::new(cfg, 1, 1);
+        let mut comm = CommMeter::new(4);
+        let all_dropped = LinkImpairments {
+            drop_prob: 1.0,
+            gating: Gating::Always,
+            quant_step: 0.0,
+        };
+        let mut state = ImpairmentState::new(alg.network(), 11, 1);
+        state.begin_iteration(&all_dropped, &mut alg, &mut comm);
+        // Every directed edge is dead in the table...
+        for k in 0..4 {
+            for &lnb in alg.network().graph.neighbors(k) {
+                assert!(!state.delivered()[lnb * 4 + k], "{lnb}->{k} should be erased");
+            }
+        }
+        // ... so a broadcast is billed but its solicited reply is not.
+        comm.send(0, 1, Purpose::Estimate, 3);
+        comm.send(1, 0, Purpose::Gradient, 2);
+        assert_eq!(comm.scalars(), 3);
+        assert_eq!(comm.ledger().suppressed_scalars, 2);
+        assert_eq!(comm.ledger().legacy_scalars(), 5);
+        state.restore(&mut alg, &mut comm);
+        // Outcomes cleared: everything billed again.
+        comm.send(1, 0, Purpose::Gradient, 2);
+        assert_eq!(comm.scalars(), 5);
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //!   (Experiments 1 and 2).
 //! * [`wsn`] — energy-aware event-driven scheduler (virtual time): each
 //!   node duty-cycles per the ENO model and updates asynchronously with
-//!   the freshest available neighbour state (Experiment 3).
+//!   the freshest available neighbour state (Experiment 3); carries the
+//!   same [`impairments`] layer as the round scheduler, so nodes gate
+//!   on charge *and* events and every exchange is billed in the
+//!   directional ledger (DESIGN.md §9).
 //! * [`runner`] — Monte-Carlo orchestration over both engines: the
 //!   message-level rust engine and the AOT-compiled xla engine.
 //! * [`impairments`] — the link-impairment layer (per-edge erasures,

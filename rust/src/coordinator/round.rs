@@ -10,7 +10,7 @@
 //! meter, and the post-step state is quantized. With `impairments: None`
 //! the code path is byte-for-byte the legacy ideal-links loop.
 
-use crate::algorithms::{Algorithm, CommMeter, StepData};
+use crate::algorithms::{Algorithm, CommLedger, CommMeter, StepData};
 use crate::datamodel::DataModel;
 use crate::rng::Pcg64;
 
@@ -21,10 +21,10 @@ use super::impairments::{quantize_in_place, ImpairmentState, LinkImpairments};
 pub struct RunResult {
     /// Network MSD (linear) after each iteration.
     pub msd: Vec<f64>,
-    /// Total scalars transmitted.
-    pub scalars: u64,
-    /// Total messages transmitted.
-    pub messages: u64,
+    /// The run's directional communication bill: billed scalars/bits
+    /// with per-node, per-link and per-purpose breakdowns
+    /// (DESIGN.md §9).
+    pub ledger: CommLedger,
 }
 
 /// Synchronous round scheduler.
@@ -58,6 +58,10 @@ impl<'a> RoundScheduler<'a> {
         // ideal runs take the legacy path (and never touch the link RNG);
         // quantization-only models skip the link-event state entirely.
         let imp = self.impairments.as_ref().filter(|imp| !imp.is_ideal());
+        if let Some(imp) = imp {
+            // Quantized payloads cost fewer bits per scalar (§9).
+            comm.set_quant_step(imp.quant_step);
+        }
         let mut state = match imp {
             Some(i) if i.affects_links() => {
                 Some(ImpairmentState::new(alg.network(), seed, stream))
@@ -83,7 +87,7 @@ impl<'a> RoundScheduler<'a> {
         if let Some(state) = &state {
             state.restore(alg, &mut comm);
         }
-        RunResult { msd, scalars: comm.scalars, messages: comm.messages }
+        RunResult { msd, ledger: comm.into_ledger() }
     }
 }
 
@@ -107,7 +111,9 @@ mod tests {
         assert_eq!(res.msd.len(), 400);
         assert!(res.msd[399] < res.msd[0]);
         // 5 nodes x 2 neighbours x (2 + 1) scalars x 400 iterations.
-        assert_eq!(res.scalars, 5 * 2 * 3 * 400);
+        assert_eq!(res.ledger.scalars, 5 * 2 * 3 * 400);
+        assert_eq!(res.ledger.bits(), 5 * 2 * 3 * 400 * 64);
+        assert_eq!(res.ledger.suppressed_scalars, 0);
     }
 
     #[test]
@@ -141,11 +147,11 @@ mod tests {
         let r1 = ideal.run(&mut a1, 120, 3, 1);
         let r2 = wrapped.run(&mut a2, 120, 3, 1);
         assert_eq!(r1.msd, r2.msd);
-        assert_eq!(r1.scalars, r2.scalars);
+        assert_eq!(r1.ledger, r2.ledger);
     }
 
     #[test]
-    fn drops_degrade_msd_but_not_billing() {
+    fn drops_degrade_msd_and_suppress_dead_replies() {
         use crate::coordinator::impairments::{Gating, LinkImpairments};
         let mut rng = Pcg64::new(8, 8);
         let model = DataModel::paper(6, 4, 1.0, 1.0, 1e-3, &mut rng);
@@ -165,8 +171,24 @@ mod tests {
         };
         let clean = run_with(0.0);
         let lossy = run_with(0.6);
-        // Transmissions happen whether or not the packet lands.
-        assert_eq!(clean.scalars, lossy.scalars);
+        // Estimate broadcasts are billed whether or not the packet lands
+        // (transmitter pays), but a gradient reply whose soliciting
+        // broadcast was erased is never transmitted: the exact bill is
+        // strictly below the old transmitter-only meter's, and the two
+        // reconcile through the suppressed counter (DESIGN.md §9).
+        use crate::algorithms::Purpose;
+        assert_eq!(
+            clean.ledger.purpose_scalars(Purpose::Estimate),
+            lossy.ledger.purpose_scalars(Purpose::Estimate)
+        );
+        assert!(
+            lossy.ledger.scalars < clean.ledger.scalars,
+            "lossy bill {} not below clean {}",
+            lossy.ledger.scalars,
+            clean.ledger.scalars
+        );
+        assert!(lossy.ledger.suppressed_scalars > 0);
+        assert_eq!(lossy.ledger.legacy_scalars(), clean.ledger.scalars);
         let tail = |r: &RunResult| r.msd[1_800..].iter().sum::<f64>() / 200.0;
         assert!(
             tail(&lossy) > tail(&clean),
@@ -195,8 +217,19 @@ mod tests {
         };
         let always = run_with(Gating::Always);
         let half = run_with(Gating::Probabilistic(0.5));
-        let ratio = half.scalars as f64 / always.scalars as f64;
-        assert!((0.4..0.6).contains(&ratio), "ratio {ratio}");
+        // The old transmitter-only bill halves with the gate...
+        let legacy_ratio =
+            half.ledger.legacy_scalars() as f64 / always.ledger.scalars as f64;
+        assert!((0.4..0.6).contains(&legacy_ratio), "legacy ratio {legacy_ratio}");
+        // ... and the exact bill is strictly lower still: a reply leg
+        // needs the soliciting node on the air too (rate p² not p), so
+        // with DCD(2, 1) the expectation is (p·2 + p²·1)/3 = 5/12.
+        let exact_ratio = half.ledger.scalars as f64 / always.ledger.scalars as f64;
+        assert!(
+            exact_ratio < legacy_ratio,
+            "exact {exact_ratio} not below legacy {legacy_ratio}"
+        );
+        assert!((0.33..0.5).contains(&exact_ratio), "exact ratio {exact_ratio}");
     }
 
     #[test]
@@ -223,6 +256,13 @@ mod tests {
         }
         // Still converges to within a few grid cells of the target.
         assert!(res.msd[799] < res.msd[0]);
+        // Quantized payloads are billed at the grid-index width, not 64
+        // bits per scalar (DESIGN.md §9).
+        assert_eq!(
+            res.ledger.bits_per_scalar,
+            crate::energy::payload_bits(step)
+        );
+        assert!(res.ledger.bits() < res.ledger.scalars * 64);
     }
 
     #[test]

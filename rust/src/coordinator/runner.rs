@@ -142,6 +142,11 @@ pub struct McResult {
     pub scalars_per_run: f64,
     /// Number of realizations averaged.
     pub runs: usize,
+    /// Directional communication bill summed over all realizations
+    /// (integer counters, so the total is order-independent —
+    /// bit-identical for any thread/shard layout; DESIGN.md §9). Empty
+    /// (zero-node) for the xla engine, which carries no meter.
+    pub ledger: crate::algorithms::CommLedger,
 }
 
 /// Parameters of the compiled (xla) engine for one algorithm.
@@ -258,9 +263,11 @@ impl MonteCarlo {
     pub(crate) fn merge(&self, results: impl Iterator<Item = RunResult>) -> McResult {
         let mut acc = TraceAccumulator::new();
         let mut scalars = 0.0;
+        let mut ledger = crate::algorithms::CommLedger::empty(0);
         for res in results {
             acc.add(&res.msd);
-            scalars += res.scalars as f64;
+            scalars += res.ledger.scalars as f64;
+            ledger.merge(&res.ledger);
         }
         let msd = acc.mean();
         let tail = (msd.len() / 10).max(1);
@@ -269,6 +276,7 @@ impl MonteCarlo {
             msd,
             scalars_per_run: scalars / self.runs as f64,
             runs: self.runs,
+            ledger,
         }
     }
 
@@ -350,6 +358,7 @@ impl MonteCarlo {
             msd,
             scalars_per_run: 0.0,
             runs: self.runs,
+            ledger: crate::algorithms::CommLedger::empty(0),
         })
     }
 }
@@ -468,6 +477,7 @@ mod tests {
                 "threads = {threads}"
             );
             assert_eq!(par.scalars_per_run.to_bits(), serial.scalars_per_run.to_bits());
+            assert_eq!(par.ledger, serial.ledger, "threads = {threads}");
             assert_eq!(par.runs, serial.runs);
         }
     }
@@ -492,6 +502,7 @@ mod tests {
                 mc.run_rust_with(&model, Some(&imp), || Box::new(Dcd::new(net.clone(), 2, 1)));
             assert_eq!(par.msd, serial.msd, "threads = {threads}");
             assert_eq!(par.scalars_per_run.to_bits(), serial.scalars_per_run.to_bits());
+            assert_eq!(par.ledger, serial.ledger, "threads = {threads}");
         }
         // And the impairment stream never perturbs the data stream: the
         // ideal run matches the plain runner bit-for-bit.
@@ -554,6 +565,7 @@ mod tests {
                 merged.scalars_per_run.to_bits(),
                 serial.scalars_per_run.to_bits()
             );
+            assert_eq!(merged.ledger, serial.ledger, "shards = {shards}");
         }
     }
 

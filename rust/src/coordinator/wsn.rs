@@ -8,15 +8,50 @@
 //! Table I active-phase energy, then sleeps for the duration given by
 //! eq. (70). Nodes below V_ref skip the update and recharge.
 //!
+//! # Link impairments and the ledger
+//!
+//! The simulation carries the same [`LinkImpairments`] layer as the
+//! synchronous round scheduler, so energy-harvesting scenarios gate on
+//! charge *and* events (DESIGN.md §9):
+//!
+//! * **Gating** — on top of the charge gate (V ≥ V_ref), a woken node
+//!   consults the transmit gate (`prob:p` duty-cycling or `event:δ`
+//!   change detection against its last-broadcast state). A gated node
+//!   spends its active phase on a purely local LMS update: it polls no
+//!   neighbour, transmits nothing, and is billed nothing.
+//! * **Drops** — each neighbour exchange of a transmitting node is
+//!   erased independently with `drop_prob`. The erased party's
+//!   contribution falls back to the node's own information (the
+//!   completion rule of eqs. (11)–(12)), estimate frames stay billed
+//!   (transmitter pays), and solicited gradient replies whose request
+//!   leg was erased are never transmitted or billed.
+//! * **Quantization** — the updated state is snapped to the Δ grid and
+//!   payloads are billed at the grid-index width.
+//!
+//! All impairment decisions draw from a dedicated PCG64 stream
+//! (`seed ^ LINK_SEED_SALT`), so the ideal configuration replays the
+//! exact legacy trajectory, and billed bits are deterministic for any
+//! worker-thread or shard layout (integer ledger counters; tested).
+//! Dropped exchanges keep **draw parity** with the ideal path — every
+//! data-stream RNG draw still happens, only its application is gated —
+//! so a lossy run keeps the ideal run's activation schedule and its
+//! bill reconciles exactly with the legacy transmitter-only bill
+//! (`scalars + suppressed_scalars`). A *gated* activation genuinely
+//! does less work (no neighbour measurements), so gating legitimately
+//! changes the trajectory.
+//!
 //! Outputs match Fig. 4: network MSD vs virtual time (right) and mean
-//! sleep duration / harvested energy vs time (center).
+//! sleep duration / harvested energy vs time (center), plus the
+//! directional communication ledger of DESIGN.md §9.
 
 use crate::algorithms::NetworkConfig;
 use crate::datamodel::DataModel;
-use crate::energy::{ActiveEnergy, EnergyParams, NodeEnergy};
+use crate::energy::{ActiveEnergy, CommLedger, CommMeter, EnergyParams, NodeEnergy, Purpose};
 use crate::rng::Pcg64;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+use super::impairments::{quantize_in_place, Gating, LinkImpairments, LINK_SEED_SALT};
 
 /// Which algorithm runs on the motes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +113,9 @@ pub struct WsnConfig {
     pub duration: f64,
     /// MSD/telemetry sampling interval (seconds).
     pub sample_dt: f64,
+    /// Link-impairment layer wrapped around every activation
+    /// ([`LinkImpairments::ideal`] = the exact legacy path).
+    pub impairments: LinkImpairments,
 }
 
 /// Time series produced by the simulation.
@@ -91,10 +129,31 @@ pub struct WsnResult {
     pub mean_sleep: Vec<f64>,
     /// Mean harvested energy per cycle during each interval (J).
     pub mean_harvest: Vec<f64>,
-    /// Total node activations.
+    /// Total node activations (active phases with charge; includes the
+    /// gated ones — the active-phase energy is spent either way).
     pub activations: u64,
     /// Activations skipped for lack of charge.
     pub skipped: u64,
+    /// Activations whose transmit gate was closed (subset of
+    /// `activations`): the node ran a purely local update and was
+    /// billed nothing.
+    pub gated: u64,
+    /// Per-node activation counts (length N); `per_node_activations[k]
+    /// × e_a` is node k's exact active-phase energy spend.
+    pub per_node_activations: Vec<u64>,
+    /// The run's directional communication bill (DESIGN.md §9).
+    pub ledger: CommLedger,
+}
+
+/// Reusable per-run buffers of the event loop (no allocation per
+/// activation; §Perf).
+struct Scratch {
+    scratch: Vec<usize>,
+    mask32: Vec<f32>,
+    uk: Vec<f64>,
+    un: Vec<f64>,
+    /// Per-neighbour request-delivery outcomes of one activation.
+    deliv: Vec<bool>,
 }
 
 /// The event-driven simulation.
@@ -109,26 +168,37 @@ impl WsnSimulation {
     pub fn new(cfg: WsnConfig, model: DataModel) -> Self {
         assert_eq!(cfg.net.n_nodes(), model.n_nodes);
         assert_eq!(cfg.harvest_scale.len(), model.n_nodes);
+        cfg.impairments.validate().expect("invalid WSN impairments");
         Self { cfg, model }
     }
 
     /// One full realization over the virtual-time horizon: every node
     /// duty-cycles per the ENO model and the sampled telemetry/MSD land
     /// in the returned [`WsnResult`]. Deterministic in `seed` (the
-    /// Monte-Carlo drivers use per-run seeds `base + r·7919 + 1`).
+    /// Monte-Carlo drivers use per-run seeds `base + r·7919 + 1`); link
+    /// impairments draw from the salted `seed ^ LINK_SEED_SALT` stream
+    /// so the ideal configuration replays the legacy trajectory exactly.
     pub fn run(&self, seed: u64) -> WsnResult {
         let n = self.model.n_nodes;
         let l = self.model.dim;
+        let imp = &self.cfg.impairments;
         let mut rng = Pcg64::new(seed, 0);
+        let mut imp_rng = Pcg64::new(seed ^ LINK_SEED_SALT, 0);
         let mut energies: Vec<NodeEnergy> = (0..n)
             .map(|k| NodeEnergy::new(self.cfg.energy.clone(), self.cfg.harvest_scale[k]))
             .collect();
         let mut w = vec![0.0f64; n * l];
-        let mut scratch = Vec::new();
-        let mut mask32 = vec![0f32; l];
-        // Reused regressor buffers (no allocation per activation; §Perf).
-        let mut uk_buf = vec![0.0f64; l];
-        let mut un_buf = vec![0.0f64; l];
+        let mut comm = CommMeter::new(n);
+        comm.set_quant_step(imp.quant_step);
+        // Last-broadcast reference states w̃ (event gating).
+        let mut last_broadcast = vec![0.0f64; n * l];
+        let mut sb = Scratch {
+            scratch: Vec::new(),
+            mask32: vec![0f32; l],
+            uk: vec![0.0f64; l],
+            un: vec![0.0f64; l],
+            deliv: Vec::new(),
+        };
 
         // Event queue ordered by wake time (f64 as ordered bits).
         let mut queue: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
@@ -148,6 +218,8 @@ impl WsnSimulation {
         let (mut harv_acc, mut harv_cnt) = (0.0, 0u64);
         let mut activations = 0u64;
         let mut skipped = 0u64;
+        let mut gated = 0u64;
+        let mut per_node_activations = vec![0u64; n];
 
         while let Some(Reverse((tk, k))) = queue.pop() {
             let now = key_time(tk);
@@ -169,8 +241,38 @@ impl WsnSimulation {
 
             let e_a = if energies[k].can_activate() {
                 activations += 1;
-                self.update_node(k, &mut w, &mut rng, &mut scratch, &mut mask32,
-                                 &mut uk_buf, &mut un_buf);
+                per_node_activations[k] += 1;
+                // Charge gate passed; now the transmit gate (§9: gate
+                // on charge *and* events).
+                let silent = match imp.gating {
+                    Gating::Always => false,
+                    Gating::Probabilistic(p) => !imp_rng.next_bool(p),
+                    Gating::EventTriggered(delta) => {
+                        let wk = &w[k * l..(k + 1) * l];
+                        let lb = &last_broadcast[k * l..(k + 1) * l];
+                        let moved: f64 = wk
+                            .iter()
+                            .zip(lb.iter())
+                            .map(|(a, b)| (a - b) * (a - b))
+                            .sum();
+                        moved <= delta
+                    }
+                };
+                if silent {
+                    gated += 1;
+                    self.local_update(k, &mut w, &mut rng, &mut sb);
+                } else {
+                    if let Gating::EventTriggered(_) = imp.gating {
+                        // Transmitting refreshes the reference state
+                        // with the broadcast (pre-update) estimate.
+                        last_broadcast[k * l..(k + 1) * l]
+                            .copy_from_slice(&w[k * l..(k + 1) * l]);
+                    }
+                    self.update_node(k, &mut w, &mut rng, &mut imp_rng, &mut comm, &mut sb);
+                }
+                if imp.quant_step > 0.0 {
+                    quantize_in_place(&mut w[k * l..(k + 1) * l], imp.quant_step);
+                }
                 self.cfg.algo.active_energy()
             } else {
                 skipped += 1;
@@ -196,30 +298,65 @@ impl WsnSimulation {
             next_sample += self.cfg.sample_dt;
         }
 
-        WsnResult { time, msd, mean_sleep, mean_harvest, activations, skipped }
+        WsnResult {
+            time,
+            msd,
+            mean_sleep,
+            mean_harvest,
+            activations,
+            skipped,
+            gated,
+            per_node_activations,
+            ledger: comm.into_ledger(),
+        }
+    }
+
+    /// A gated node's active phase: one purely local LMS step (the
+    /// whole adapt mass on the node's own gradient — exactly the C
+    /// column collapse a silent node gets in the synchronous model).
+    /// No neighbour is polled and nothing is billed.
+    fn local_update(&self, k: usize, w: &mut [f64], rng: &mut Pcg64, sb: &mut Scratch) {
+        let l = self.model.dim;
+        let mu = self.cfg.net.mu[k];
+        let dk = self.sample_node_into(k, rng, &mut sb.uk);
+        let wk = &mut w[k * l..(k + 1) * l];
+        let e = dk - dot(&sb.uk, wk);
+        for (wj, &uj) in wk.iter_mut().zip(sb.uk.iter()) {
+            *wj += mu * uj * e;
+        }
+    }
+
+    /// Draw this activation's per-neighbour request-delivery outcomes
+    /// into `sb.deliv` (all delivered on ideal links — no RNG draw).
+    fn draw_deliveries(&self, degree: usize, imp_rng: &mut Pcg64, sb: &mut Scratch) {
+        let p = self.cfg.impairments.drop_prob;
+        sb.deliv.clear();
+        for _ in 0..degree {
+            sb.deliv.push(!(p > 0.0 && imp_rng.next_bool(p)));
+        }
     }
 
     /// One asynchronous update of node k using the freshest neighbour
     /// state. Fresh measurements are drawn at poll time for every node
-    /// involved (streaming data).
-    #[allow(clippy::too_many_arguments)]
+    /// involved (streaming data); exchanges are billed in the ledger
+    /// and erased exchanges fall back to the node's own information.
     fn update_node(
         &self,
         k: usize,
         w: &mut [f64],
         rng: &mut Pcg64,
-        scratch: &mut Vec<usize>,
-        mask32: &mut [f32],
-        uk_buf: &mut [f64],
-        un_buf: &mut [f64],
+        imp_rng: &mut Pcg64,
+        comm: &mut CommMeter,
+        sb: &mut Scratch,
     ) {
         let net = &self.cfg.net;
         let l = self.model.dim;
         let mu = net.mu[k];
-        let dk = self.sample_node_into(k, rng, uk_buf);
-        let uk = &*uk_buf;
+        let degree = net.graph.neighbors(k).len();
+        self.draw_deliveries(degree, imp_rng, sb);
+        let dk = self.sample_node_into(k, rng, &mut sb.uk);
         let wk: Vec<f64> = w[k * l..(k + 1) * l].to_vec();
-        let e_self = dk - dot(uk, &wk);
+        let e_self = dk - dot(&sb.uk, &wk);
 
         match self.cfg.algo {
             WsnAlgo::Diffusion => {
@@ -227,24 +364,46 @@ impl WsnSimulation {
                 let mut psi: Vec<f64> = wk.clone();
                 let c_kk = net.c[(k, k)];
                 for j in 0..l {
-                    psi[j] += mu * c_kk * uk[j] * e_self;
+                    psi[j] += mu * c_kk * sb.uk[j] * e_self;
                 }
-                for &nb in net.graph.neighbors(k) {
+                for (i, &nb) in net.graph.neighbors(k).iter().enumerate() {
                     let c_lk = net.c[(nb, k)];
-                    let dn = self.sample_node_into(nb, rng, un_buf);
-                    let un = &*un_buf;
-                    let e = dn - dot(un, &wk);
-                    for j in 0..l {
-                        psi[j] += mu * c_lk * un[j] * e;
+                    // k broadcasts its full estimate; the neighbour's
+                    // full-gradient reply exists only when the request
+                    // arrived. The neighbour's measurement is drawn
+                    // either way (draw parity: drops never perturb the
+                    // data stream, so a lossy run keeps the ideal run's
+                    // activation schedule).
+                    comm.send(k, nb, Purpose::Estimate, l);
+                    comm.send_solicited(nb, k, Purpose::Gradient, l, sb.deliv[i]);
+                    let dn = self.sample_node_into(nb, rng, &mut sb.un);
+                    if sb.deliv[i] {
+                        let e = dn - dot(&sb.un, &wk);
+                        for j in 0..l {
+                            psi[j] += mu * c_lk * sb.un[j] * e;
+                        }
+                    } else {
+                        // Completion: the erased neighbour's adapt mass
+                        // falls to the self gradient (eq. (12)).
+                        for j in 0..l {
+                            psi[j] += mu * c_lk * sb.uk[j] * e_self;
+                        }
                     }
                 }
-                // Combine with neighbours' current estimates.
+                // Combine with the neighbours' current estimates; an
+                // erased link falls back to the node's own psi.
                 let a_kk = net.a[(k, k)];
                 let mut out: Vec<f64> = psi.iter().map(|&x| a_kk * x).collect();
-                for &nb in net.graph.neighbors(k) {
+                for (i, &nb) in net.graph.neighbors(k).iter().enumerate() {
                     let a_lk = net.a[(nb, k)];
-                    for j in 0..l {
-                        out[j] += a_lk * w[nb * l + j];
+                    if sb.deliv[i] {
+                        for j in 0..l {
+                            out[j] += a_lk * w[nb * l + j];
+                        }
+                    } else {
+                        for j in 0..l {
+                            out[j] += a_lk * psi[j];
+                        }
                     }
                 }
                 w[k * l..(k + 1) * l].copy_from_slice(&out);
@@ -252,15 +411,25 @@ impl WsnSimulation {
             WsnAlgo::Rcd { m_links } => {
                 let mut psi: Vec<f64> = wk.clone();
                 for j in 0..l {
-                    psi[j] += mu * uk[j] * e_self;
+                    psi[j] += mu * sb.uk[j] * e_self;
                 }
                 let nbrs = net.graph.neighbors(k);
                 let m = m_links.min(nbrs.len());
-                rng.sample_indices(nbrs.len(), m, scratch);
+                rng.sample_indices(nbrs.len(), m, &mut sb.scratch);
                 let mut h_kk = 1.0;
                 let mut out = vec![0.0; l];
-                for &idx in scratch.iter() {
+                for s in 0..m {
+                    let idx = sb.scratch[s];
                     let nb = nbrs[idx];
+                    // The polled neighbour transmits its full psi; the
+                    // transmitter pays whether or not the frame lands
+                    // (receiver-side erasure).
+                    comm.send(nb, k, Purpose::Estimate, l);
+                    if !sb.deliv[idx] {
+                        // Erased: treated exactly like an unselected
+                        // neighbour (mass stays on the diagonal).
+                        continue;
+                    }
                     let a_lk = net.a[(nb, k)];
                     h_kk -= a_lk;
                     for j in 0..l {
@@ -275,41 +444,50 @@ impl WsnSimulation {
             WsnAlgo::Partial { m } => {
                 let mut psi: Vec<f64> = wk.clone();
                 for j in 0..l {
-                    psi[j] += mu * uk[j] * e_self;
+                    psi[j] += mu * sb.uk[j] * e_self;
                 }
                 let a_kk = net.a[(k, k)];
                 let mut out: Vec<f64> = psi.iter().map(|&x| a_kk * x).collect();
-                for &nb in net.graph.neighbors(k) {
+                for (i, &nb) in net.graph.neighbors(k).iter().enumerate() {
                     let a_lk = net.a[(nb, k)];
-                    rng.fill_mask(mask32, m, scratch);
-                    for j in 0..l {
-                        let hl = mask32[j] as f64;
-                        out[j] += a_lk * (hl * w[nb * l + j] + (1.0 - hl) * psi[j]);
+                    // The neighbour ships M masked entries; transmitter
+                    // pays, an erased frame completes from psi. The
+                    // mask is drawn either way (draw parity).
+                    comm.send(nb, k, Purpose::Estimate, m);
+                    rng.fill_mask(&mut sb.mask32, m, &mut sb.scratch);
+                    if sb.deliv[i] {
+                        for j in 0..l {
+                            let hl = sb.mask32[j] as f64;
+                            out[j] += a_lk * (hl * w[nb * l + j] + (1.0 - hl) * psi[j]);
+                        }
+                    } else {
+                        for j in 0..l {
+                            out[j] += a_lk * psi[j];
+                        }
                     }
                 }
                 w[k * l..(k + 1) * l].copy_from_slice(&out);
             }
             WsnAlgo::Cd { m } => {
-                self.dcd_like_update(k, w, rng, scratch, mask32, uk_buf, un_buf, m, l, true, false);
+                self.dcd_like_update(k, w, rng, comm, sb, m, l, true, false);
             }
             WsnAlgo::Dcd { m, m_grad, combine } => {
-                self.dcd_like_update(k, w, rng, scratch, mask32, uk_buf, un_buf, m, m_grad, false, combine);
+                self.dcd_like_update(k, w, rng, comm, sb, m, m_grad, false, combine);
             }
         }
     }
 
     /// Shared CD/DCD async update. `q_full` ⇒ full gradients (CD);
     /// `combine` ⇒ A ≠ I (masked-estimate combine), else A = I.
+    /// `sb.deliv` and `sb.uk` are already populated by `update_node`.
     #[allow(clippy::too_many_arguments)]
     fn dcd_like_update(
         &self,
         k: usize,
         w: &mut [f64],
         rng: &mut Pcg64,
-        scratch: &mut Vec<usize>,
-        mask32: &mut [f32],
-        uk_buf: &mut [f64],
-        un_buf: &mut [f64],
+        comm: &mut CommMeter,
+        sb: &mut Scratch,
         m: usize,
         m_grad: usize,
         q_full: bool,
@@ -318,64 +496,100 @@ impl WsnSimulation {
         let net = &self.cfg.net;
         let l = self.model.dim;
         let mu = net.mu[k];
-        let dk = self.sample_node_into(k, rng, uk_buf);
-        let uk = &*uk_buf;
+        // Fresh local measurement for this activation (the second draw
+        // for node k, exactly like the pre-ledger code path — ideal
+        // runs must replay the legacy RNG sequence bit for bit).
+        let dk = self.sample_node_into(k, rng, &mut sb.uk);
         let wk: Vec<f64> = w[k * l..(k + 1) * l].to_vec();
-        let e_self = dk - dot(uk, &wk);
+        let e_self = dk - dot(&sb.uk, &wk);
 
         // H_k for this activation.
         let mut hk = vec![0.0f64; l];
-        rng.fill_mask(mask32, m, scratch);
+        rng.fill_mask(&mut sb.mask32, m, &mut sb.scratch);
         for j in 0..l {
-            hk[j] = mask32[j] as f64;
+            hk[j] = sb.mask32[j] as f64;
         }
 
         let mut psi: Vec<f64> = wk.clone();
         let c_kk = net.c[(k, k)];
         for j in 0..l {
-            psi[j] += mu * c_kk * uk[j] * e_self;
+            psi[j] += mu * c_kk * sb.uk[j] * e_self;
         }
         // Cache (neighbour, its H_l-masked current estimate) for combine.
         let mut cached: Vec<(usize, Vec<f64>)> = Vec::new();
-        for &nb in net.graph.neighbors(k) {
+        for (i, &nb) in net.graph.neighbors(k).iter().enumerate() {
             let c_lk = net.c[(nb, k)];
-            let dn = self.sample_node_into(nb, rng, un_buf);
-            let un = &*un_buf;
+            let delivered = sb.deliv[i];
+            // k broadcasts its H_k-masked estimate (M scalars); the
+            // masked-gradient reply exists only when it arrived. Every
+            // RNG draw below happens whether or not the exchange was
+            // erased (draw parity: drops never perturb the data
+            // stream).
+            comm.send(k, nb, Purpose::Estimate, m);
+            comm.send_solicited(nb, k, Purpose::Gradient, m_grad, delivered);
+            let dn = self.sample_node_into(nb, rng, &mut sb.un);
             // Filled point at the neighbour: H_k w_k + (1 - H_k) w_l.
             let mut e = dn;
             for j in 0..l {
                 let filled = hk[j] * wk[j] + (1.0 - hk[j]) * w[nb * l + j];
-                e -= un[j] * filled;
+                e -= sb.un[j] * filled;
             }
             // Q_l mask.
             let mut ql = vec![1.0f64; l];
             if !q_full {
-                rng.fill_mask(mask32, m_grad, scratch);
+                rng.fill_mask(&mut sb.mask32, m_grad, &mut sb.scratch);
                 for j in 0..l {
-                    ql[j] = mask32[j] as f64;
+                    ql[j] = sb.mask32[j] as f64;
                 }
             }
             if c_lk != 0.0 {
-                for j in 0..l {
-                    let g = ql[j] * (un[j] * e) + (1.0 - ql[j]) * (uk[j] * e_self);
-                    psi[j] += mu * c_lk * g;
+                if delivered {
+                    for j in 0..l {
+                        let g = ql[j] * (sb.un[j] * e) + (1.0 - ql[j]) * (sb.uk[j] * e_self);
+                        psi[j] += mu * c_lk * g;
+                    }
+                } else {
+                    // Completion (eq. (12)): the whole reply falls back
+                    // to the node's own gradient.
+                    for j in 0..l {
+                        psi[j] += mu * c_lk * sb.uk[j] * e_self;
+                    }
                 }
             }
             if combine {
-                // The neighbour's estimate-mask for this exchange.
-                rng.fill_mask(mask32, m, scratch);
-                let masked: Vec<f64> = (0..l).map(|j| mask32[j] as f64).collect();
-                cached.push((nb, masked));
+                // The neighbour's estimate-mask for this exchange
+                // (carried by the same reply frame — no extra billing,
+                // matching the synchronous accounting). An erased
+                // exchange caches nothing: the combine completes from
+                // the node's own intermediate estimate.
+                rng.fill_mask(&mut sb.mask32, m, &mut sb.scratch);
+                if delivered {
+                    let masked: Vec<f64> = (0..l).map(|j| sb.mask32[j] as f64).collect();
+                    cached.push((nb, masked));
+                }
             }
         }
 
         if combine {
             let a_kk = net.a[(k, k)];
             let mut out: Vec<f64> = psi.iter().map(|&x| a_kk * x).collect();
-            for (nb, hl) in &cached {
-                let a_lk = net.a[(*nb, k)];
-                for j in 0..l {
-                    out[j] += a_lk * (hl[j] * w[nb * l + j] + (1.0 - hl[j]) * psi[j]);
+            // `cached` is in neighbour order, with the erased exchanges
+            // missing — walk the two lists in lockstep.
+            let mut ci = 0usize;
+            for &nb in net.graph.neighbors(k) {
+                let a_lk = net.a[(nb, k)];
+                if ci < cached.len() && cached[ci].0 == nb {
+                    let hl = &cached[ci].1;
+                    for j in 0..l {
+                        out[j] += a_lk * (hl[j] * w[nb * l + j] + (1.0 - hl[j]) * psi[j]);
+                    }
+                    ci += 1;
+                } else {
+                    // Erased exchange: complete from the node's own
+                    // intermediate estimate (H_l = 0 case).
+                    for j in 0..l {
+                        out[j] += a_lk * psi[j];
+                    }
                 }
             }
             w[k * l..(k + 1) * l].copy_from_slice(&out);
@@ -449,6 +663,7 @@ mod tests {
             harvest_scale: (0..n).map(|k| 0.4 + 0.05 * k as f64).collect(),
             duration,
             sample_dt: duration / 50.0,
+            impairments: LinkImpairments::ideal(),
         };
         (cfg, model)
     }
@@ -475,6 +690,24 @@ mod tests {
                 algo.label()
             );
             assert!(res.activations > 0);
+            assert_eq!(res.gated, 0, "ideal links gate nothing");
+            // Ledger invariants: per-node activations sum to the total,
+            // the bill is broken down consistently, and an ideal run
+            // suppresses nothing.
+            assert_eq!(
+                res.per_node_activations.iter().sum::<u64>(),
+                res.activations
+            );
+            assert!(res.ledger.scalars > 0);
+            assert_eq!(res.ledger.suppressed_scalars, 0);
+            assert_eq!(
+                res.ledger.per_node.iter().sum::<u64>(),
+                res.ledger.scalars
+            );
+            assert_eq!(
+                res.ledger.per_purpose.iter().sum::<u64>(),
+                res.ledger.scalars
+            );
         }
     }
 
@@ -497,6 +730,7 @@ mod tests {
         let r2 = sim2.run(7);
         assert_eq!(r1.msd, r2.msd);
         assert_eq!(r1.activations, r2.activations);
+        assert_eq!(r1.ledger, r2.ledger);
     }
 
     #[test]
@@ -511,5 +745,75 @@ mod tests {
             light.activations,
             heavy.activations
         );
+    }
+
+    /// Event gating on top of the charge gate: gated activations run a
+    /// purely local update and bill nothing, so the billed bits drop
+    /// strictly below the always-on bill, and the simulation stays
+    /// deterministic in the seed.
+    #[test]
+    fn event_gating_cuts_the_bill_and_stays_deterministic() {
+        let (mut cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: true }, 4000.0);
+        let ideal = WsnSimulation::new(cfg.clone(), model.clone()).run(9);
+        cfg.impairments = LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::EventTriggered(1e-2),
+            quant_step: 0.0,
+        };
+        let gated = WsnSimulation::new(cfg.clone(), model.clone()).run(9);
+        assert!(gated.gated > 0, "the event gate never closed");
+        assert!(
+            gated.ledger.bits() < ideal.ledger.bits(),
+            "gated bill {} not below ideal {}",
+            gated.ledger.bits(),
+            ideal.ledger.bits()
+        );
+        // MSD still improves (local updates keep learning).
+        assert!(*gated.msd.last().unwrap() < gated.msd[5]);
+        let again = WsnSimulation::new(cfg, model).run(9);
+        assert_eq!(gated.msd, again.msd);
+        assert_eq!(gated.ledger, again.ledger);
+    }
+
+    /// Drops: estimate frames stay billed (transmitter pays) while the
+    /// dead request legs' replies are suppressed and tracked — the
+    /// exact bill reconciles with the legacy transmitter-only bill.
+    #[test]
+    fn drops_suppress_solicited_replies_only() {
+        let (mut cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: false }, 3000.0);
+        let ideal = WsnSimulation::new(cfg.clone(), model.clone()).run(5);
+        cfg.impairments = LinkImpairments {
+            drop_prob: 0.5,
+            gating: Gating::Always,
+            quant_step: 0.0,
+        };
+        let lossy = WsnSimulation::new(cfg, model).run(5);
+        // Same activation schedule (impairments ride a salted stream).
+        assert_eq!(ideal.activations, lossy.activations);
+        assert_eq!(
+            ideal.ledger.purpose_scalars(Purpose::Estimate),
+            lossy.ledger.purpose_scalars(Purpose::Estimate)
+        );
+        assert!(lossy.ledger.suppressed_scalars > 0);
+        assert_eq!(lossy.ledger.legacy_scalars(), ideal.ledger.scalars);
+        assert!(*lossy.msd.last().unwrap() < lossy.msd[5]);
+    }
+
+    /// Quantization snaps the stored state to the grid and bills
+    /// payloads at the grid-index width.
+    #[test]
+    fn quantized_wsn_state_stays_on_grid() {
+        let (mut cfg, model) = small_cfg(WsnAlgo::Partial { m: 3 }, 2000.0);
+        let step = 1e-3;
+        cfg.impairments = LinkImpairments {
+            drop_prob: 0.0,
+            gating: Gating::Always,
+            quant_step: step,
+        };
+        let sim = WsnSimulation::new(cfg, model);
+        let res = sim.run(3);
+        assert_eq!(res.ledger.bits_per_scalar, crate::energy::payload_bits(step));
+        assert!(res.ledger.bits() < res.ledger.scalars * 64);
+        assert!(*res.msd.last().unwrap() < res.msd[5]);
     }
 }

@@ -1,0 +1,522 @@
+//! Directional, purpose-tagged message ledger (DESIGN.md §9).
+//!
+//! The paper's whole subject is the communication/performance trade-off,
+//! so the communication accounting has to be exact. The ledger replaces
+//! the original frame-level meter (which billed transmitters only) with
+//! a model of every metered exchange as a directed, purpose-tagged
+//! message:
+//!
+//! ```text
+//!   (source, destination, purpose, payload scalars × payload width)
+//!
+//!   purpose ∈ { estimate-broadcast,   unsolicited push of (masked)
+//!                                     estimate entries,
+//!               gradient-reply,       reply to a soliciting estimate
+//!                                     broadcast,
+//!               dcd-residue }         compressive diffusion's one-scalar
+//!                                     projection residue
+//! ```
+//!
+//! Billing rules (the §9 message grammar):
+//!
+//! 1. A **gated (silent) transmitter** puts nothing on the air: none of
+//!    its messages are billed (unchanged from the mute-mask meter).
+//! 2. A **broadcast** (estimate or residue) from an on-air transmitter
+//!    is always billed — the energy is spent whether or not a lossy
+//!    link erases the frame in flight (receiver-side erasure,
+//!    cf. arXiv:1408.5845).
+//! 3. A **solicited reply** (gradient) is billed only when its request
+//!    leg was actually delivered: a reply to a gated or erased estimate
+//!    broadcast was never computed, never transmitted, never billed.
+//!    The scalars rule 3 saves relative to the old transmitter-only
+//!    meter are tracked in [`CommLedger::suppressed_scalars`], so
+//!    `scalars + suppressed_scalars` reproduces the legacy bill.
+//!
+//! Payload width: a full-precision scalar is 64 bits on the wire; under
+//! the quantization impairment a scalar is a fixed-point index into the
+//! Δ grid of the `[-PAYLOAD_RANGE, PAYLOAD_RANGE]` dynamic range,
+//! [`payload_bits`] wide. Billed bits are `scalars × width`.
+//!
+//! Determinism: the ledger draws no randomness and all counters are
+//! integers, so billed scalars/bits are associative under merging —
+//! bit-identical for any worker-thread or shard layout. On ideal links
+//! no outcome table is installed and every send is billed, which is
+//! exactly the legacy accounting (the bit-identity argument of §9).
+
+/// What a metered message is *for* — the purpose axis of the ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Purpose {
+    /// Unsolicited (masked) estimate entries: DCD/CD `H_k ∘ w_k`
+    /// broadcasts, partial-diffusion `H_k ∘ ψ_k`, RCD's polled ψ, and
+    /// diffusion LMS's full-estimate exchanges.
+    Estimate,
+    /// A solicited gradient reply `Q_l ∘ ∇J_l` (DCD/CD/diffusion LMS):
+    /// only transmitted when the soliciting estimate broadcast arrived.
+    Gradient,
+    /// Compressive diffusion's one-scalar projection residue.
+    Residue,
+}
+
+/// Number of [`Purpose`] variants (sizes the per-purpose counters).
+pub const N_PURPOSES: usize = 3;
+
+impl Purpose {
+    /// All purposes, in counter order.
+    pub const ALL: [Purpose; N_PURPOSES] = [Purpose::Estimate, Purpose::Gradient, Purpose::Residue];
+
+    /// Counter index of this purpose.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Purpose::Estimate => 0,
+            Purpose::Gradient => 1,
+            Purpose::Residue => 2,
+        }
+    }
+
+    /// Stable label used in result columns and JSON manifests.
+    pub fn label(self) -> &'static str {
+        match self {
+            Purpose::Estimate => "estimate-broadcast",
+            Purpose::Gradient => "gradient-reply",
+            Purpose::Residue => "dcd-residue",
+        }
+    }
+}
+
+/// Wire width of one full-precision scalar (bits).
+pub const FULL_PRECISION_BITS: u32 = 64;
+
+/// Half-width R of the fixed-point dynamic range `[-R, R]` quantized
+/// payloads are billed over. The paper's data model draws each entry of
+/// w° from a standard Gaussian, so ±8 covers every estimate a
+/// converging network transmits to ≈8σ (per-entry excursion
+/// probability ~1e-15); the simulated quantizer itself is unbounded —
+/// this is a fixed-point wire format, not an entropy bound.
+pub const PAYLOAD_RANGE: f64 = 8.0;
+
+/// Wire width of one scalar under the quantization impairment: a
+/// mid-tread quantizer of step Δ over the dynamic range
+/// `[-PAYLOAD_RANGE, PAYLOAD_RANGE]` has `2R/Δ + 1` levels, so a grid
+/// index costs `⌈log₂ levels⌉` bits (clamped to `[2, 64]`). `Δ <= 0`
+/// means full precision (DESIGN.md §9).
+pub fn payload_bits(quant_step: f64) -> u32 {
+    if quant_step <= 0.0 || !quant_step.is_finite() {
+        return FULL_PRECISION_BITS;
+    }
+    let levels = (2.0 * PAYLOAD_RANGE / quant_step + 1.0).max(2.0);
+    (levels.log2().ceil() as u32).clamp(2, FULL_PRECISION_BITS)
+}
+
+/// The billed totals of one run (or the merged totals of many runs):
+/// pure integer counters, so merging is associative and sharded /
+/// threaded runs reproduce the serial bill bit for bit (DESIGN.md §9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommLedger {
+    /// Number of nodes (sizes the per-node / per-link tables).
+    pub n_nodes: usize,
+    /// Total billed scalars.
+    pub scalars: u64,
+    /// Total billed messages (one per directed metered send).
+    pub messages: u64,
+    /// Scalars the legacy transmitter-only meter would have billed on
+    /// top of `scalars`: solicited replies whose request leg was gated
+    /// or erased (billing rule 3).
+    pub suppressed_scalars: u64,
+    /// Billed scalars that were erased in flight (transmitter paid,
+    /// receiver got nothing — the bus face's drop accounting).
+    pub dropped_scalars: u64,
+    /// Billed messages erased in flight.
+    pub dropped_messages: u64,
+    /// Wire width of one scalar (64 = full precision; see
+    /// [`payload_bits`]).
+    pub bits_per_scalar: u32,
+    /// Billed scalars per transmitting node (length `n_nodes`).
+    pub per_node: Vec<u64>,
+    /// Billed scalars per purpose ([`Purpose::index`] order).
+    pub per_purpose: [u64; N_PURPOSES],
+    /// Billed scalars per directed link, dense `src * n_nodes + dst`.
+    pub per_link: Vec<u64>,
+}
+
+impl CommLedger {
+    /// An all-zero ledger for `n_nodes` nodes at full precision.
+    pub fn empty(n_nodes: usize) -> Self {
+        Self {
+            n_nodes,
+            scalars: 0,
+            messages: 0,
+            suppressed_scalars: 0,
+            dropped_scalars: 0,
+            dropped_messages: 0,
+            bits_per_scalar: FULL_PRECISION_BITS,
+            per_node: vec![0; n_nodes],
+            per_purpose: [0; N_PURPOSES],
+            per_link: vec![0; n_nodes * n_nodes],
+        }
+    }
+
+    /// Total billed payload bits.
+    pub fn bits(&self) -> u64 {
+        self.scalars * self.bits_per_scalar as u64
+    }
+
+    /// Billed payload bits transmitted by node `k`.
+    pub fn per_node_bits(&self, k: usize) -> u64 {
+        self.per_node[k] * self.bits_per_scalar as u64
+    }
+
+    /// Billed scalars on the directed link `src → dst`.
+    pub fn link_scalars(&self, src: usize, dst: usize) -> u64 {
+        self.per_link[src * self.n_nodes + dst]
+    }
+
+    /// Billed scalars for one purpose.
+    pub fn purpose_scalars(&self, p: Purpose) -> u64 {
+        self.per_purpose[p.index()]
+    }
+
+    /// What the legacy transmitter-only meter would have billed: the
+    /// exact bill plus the suppressed reply legs (billing rule 3).
+    pub fn legacy_scalars(&self) -> u64 {
+        self.scalars + self.suppressed_scalars
+    }
+
+    /// Accumulate another ledger (integer addition — order-independent,
+    /// which is what keeps sharded totals bit-identical to serial).
+    pub fn merge(&mut self, other: &CommLedger) {
+        if self.n_nodes == 0 && self.scalars == 0 {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(self.n_nodes, other.n_nodes, "merging ledgers of different networks");
+        if self.scalars == 0 {
+            self.bits_per_scalar = other.bits_per_scalar;
+        } else if other.scalars > 0 {
+            debug_assert_eq!(
+                self.bits_per_scalar, other.bits_per_scalar,
+                "merging ledgers with different payload widths"
+            );
+        }
+        self.scalars += other.scalars;
+        self.messages += other.messages;
+        self.suppressed_scalars += other.suppressed_scalars;
+        self.dropped_scalars += other.dropped_scalars;
+        self.dropped_messages += other.dropped_messages;
+        for (a, b) in self.per_node.iter_mut().zip(other.per_node.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.per_purpose.iter_mut().zip(other.per_purpose.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.per_link.iter_mut().zip(other.per_link.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// The live meter every [`Algorithm`](crate::algorithms::Algorithm)
+/// step reports its traffic to: a [`CommLedger`] plus the current
+/// iteration's link outcomes (who is gated, which request legs were
+/// delivered), installed by the coordinator's impairment layer.
+///
+/// Scalars remain the paper's communication unit (compression ratios
+/// are ratios of transmitted vector entries; index overhead is ignored
+/// because selection patterns are reproducible from shared PRNG seeds);
+/// billed bits add the payload-width axis on top.
+#[derive(Debug, Clone)]
+pub struct CommMeter {
+    ledger: CommLedger,
+    /// Per-node transmit gate (`true` = silent); empty = nobody gated.
+    muted: Vec<bool>,
+    /// Request-delivery table, dense `src * n + dst`: did `src`'s
+    /// estimate broadcast reach `dst` this iteration? Empty = every
+    /// request delivered (the ideal-links fast path).
+    delivered: Vec<bool>,
+}
+
+impl CommMeter {
+    /// A meter for `n_nodes` nodes with all counters at zero.
+    pub fn new(n_nodes: usize) -> Self {
+        Self {
+            ledger: CommLedger::empty(n_nodes),
+            muted: Vec::new(),
+            delivered: Vec::new(),
+        }
+    }
+
+    /// Number of nodes the meter was sized for.
+    pub fn n_nodes(&self) -> usize {
+        self.ledger.n_nodes
+    }
+
+    /// Total billed scalars.
+    pub fn scalars(&self) -> u64 {
+        self.ledger.scalars
+    }
+
+    /// Total billed messages.
+    pub fn messages(&self) -> u64 {
+        self.ledger.messages
+    }
+
+    /// Total billed payload bits.
+    pub fn bits(&self) -> u64 {
+        self.ledger.bits()
+    }
+
+    /// The full directional ledger.
+    pub fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    /// Consume the meter, keeping only its ledger (what a finished run
+    /// hands back to the scheduler).
+    pub fn into_ledger(self) -> CommLedger {
+        self.ledger
+    }
+
+    /// Install the payload width implied by the quantizer step Δ
+    /// (0 = full precision); see [`payload_bits`].
+    pub fn set_quant_step(&mut self, quant_step: f64) {
+        self.ledger.bits_per_scalar = payload_bits(quant_step);
+    }
+
+    /// Install this iteration's link outcomes: the transmit-gate mask
+    /// (`true` = silent) and, optionally, the dense request-delivery
+    /// table (`delivered[src * n + dst]` = src's broadcast reached
+    /// dst). The coordinator's impairment layer calls this before every
+    /// impaired iteration; without it every send is billed (ideal
+    /// links).
+    pub fn set_outcomes(&mut self, muted: &[bool], delivered: Option<&[bool]>) {
+        self.muted.clear();
+        self.muted.extend_from_slice(muted);
+        self.delivered.clear();
+        if let Some(d) = delivered {
+            debug_assert_eq!(d.len(), self.ledger.n_nodes * self.ledger.n_nodes);
+            self.delivered.extend_from_slice(d);
+        }
+    }
+
+    /// Remove the outcome tables (every send billed again).
+    pub fn clear_outcomes(&mut self) {
+        self.muted.clear();
+        self.delivered.clear();
+    }
+
+    /// Record one directed message of `count` scalars from `src` to
+    /// `dst` for `purpose`, applying the §9 billing rules against the
+    /// installed outcome tables.
+    #[inline]
+    pub fn send(&mut self, src: usize, dst: usize, purpose: Purpose, count: usize) {
+        if !self.muted.is_empty() && self.muted[src] {
+            // Rule 1: a gated transmitter is off the air.
+            return;
+        }
+        if purpose == Purpose::Gradient
+            && !self.delivered.is_empty()
+            && !self.delivered[dst * self.ledger.n_nodes + src]
+        {
+            // Rule 3: the soliciting broadcast dst → src never arrived,
+            // so this reply was never computed or transmitted. The old
+            // transmitter-only meter billed it anyway — track the gap.
+            self.ledger.suppressed_scalars += count as u64;
+            return;
+        }
+        self.bill(src, dst, purpose, count);
+    }
+
+    /// [`CommMeter::send`] for callers that already know whether the
+    /// soliciting request leg was delivered (the WSN event scheduler,
+    /// which draws link outcomes activation by activation instead of
+    /// installing per-iteration tables).
+    #[inline]
+    pub fn send_solicited(
+        &mut self,
+        src: usize,
+        dst: usize,
+        purpose: Purpose,
+        count: usize,
+        request_delivered: bool,
+    ) {
+        if !self.muted.is_empty() && self.muted[src] {
+            return;
+        }
+        if !request_delivered {
+            self.ledger.suppressed_scalars += count as u64;
+            return;
+        }
+        self.bill(src, dst, purpose, count);
+    }
+
+    /// Record a billed transmission that was erased in flight
+    /// (transmitter pays, receiver gets nothing) — the bus face's lossy
+    /// send. Returns whether the message was billed (i.e. actually
+    /// transmitted).
+    pub fn send_lossy(
+        &mut self,
+        src: usize,
+        dst: usize,
+        purpose: Purpose,
+        count: usize,
+        delivered: bool,
+    ) -> bool {
+        if !self.muted.is_empty() && self.muted[src] {
+            return false;
+        }
+        self.bill(src, dst, purpose, count);
+        if !delivered {
+            self.ledger.dropped_scalars += count as u64;
+            self.ledger.dropped_messages += 1;
+        }
+        true
+    }
+
+    #[inline]
+    fn bill(&mut self, src: usize, dst: usize, purpose: Purpose, count: usize) {
+        let count = count as u64;
+        self.ledger.scalars += count;
+        self.ledger.messages += 1;
+        self.ledger.per_node[src] += count;
+        self.ledger.per_purpose[purpose.index()] += count;
+        self.ledger.per_link[src * self.ledger.n_nodes + dst] += count;
+    }
+
+    /// Zero all counters and outcome tables (the payload width is kept:
+    /// it is schedule-level configuration, not per-run state).
+    pub fn reset(&mut self) {
+        let width = self.ledger.bits_per_scalar;
+        self.ledger = CommLedger::empty(self.ledger.n_nodes);
+        self.ledger.bits_per_scalar = width;
+        self.muted.clear();
+        self.delivered.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates_directionally() {
+        let mut m = CommMeter::new(3);
+        m.send(0, 1, Purpose::Estimate, 5);
+        m.send(2, 0, Purpose::Gradient, 2);
+        m.send(0, 2, Purpose::Estimate, 1);
+        assert_eq!(m.scalars(), 8);
+        assert_eq!(m.messages(), 3);
+        assert_eq!(m.ledger().per_node, vec![6, 0, 2]);
+        assert_eq!(m.ledger().link_scalars(0, 1), 5);
+        assert_eq!(m.ledger().link_scalars(2, 0), 2);
+        assert_eq!(m.ledger().purpose_scalars(Purpose::Estimate), 6);
+        assert_eq!(m.ledger().purpose_scalars(Purpose::Gradient), 2);
+        assert_eq!(m.bits(), 8 * 64);
+        m.reset();
+        assert_eq!(m.scalars(), 0);
+        assert_eq!(m.ledger().per_link.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn muted_transmitters_are_not_billed() {
+        let mut m = CommMeter::new(3);
+        m.set_outcomes(&[false, true, false], None);
+        m.send(0, 1, Purpose::Estimate, 4);
+        m.send(1, 0, Purpose::Estimate, 4); // suppressed: gated
+        m.send(2, 1, Purpose::Estimate, 4);
+        assert_eq!(m.scalars(), 8);
+        assert_eq!(m.messages(), 2);
+        assert_eq!(m.ledger().per_node, vec![4, 0, 4]);
+        // A gated node's non-transmission is not legacy over-billing:
+        // the old meter's mute mask suppressed it too.
+        assert_eq!(m.ledger().suppressed_scalars, 0);
+        m.clear_outcomes();
+        m.send(1, 0, Purpose::Estimate, 4);
+        assert_eq!(m.scalars(), 12);
+    }
+
+    #[test]
+    fn replies_to_dead_requests_are_suppressed_and_tracked() {
+        let n = 3;
+        let mut m = CommMeter::new(n);
+        // Request table: node 0's broadcasts never arrive anywhere.
+        let mut delivered = vec![true; n * n];
+        delivered[1] = false; // 0 -> 1
+        delivered[2] = false; // 0 -> 2
+        m.set_outcomes(&[false; 3], Some(&delivered));
+        // 0's own broadcast: billed (transmitter pays, rule 2).
+        m.send(0, 1, Purpose::Estimate, 3);
+        // 1's reply to 0's broadcast: the request 0 -> 1 died, so the
+        // reply was never transmitted (rule 3).
+        m.send(1, 0, Purpose::Gradient, 2);
+        // 1's reply to 2's broadcast: request 2 -> 1 arrived.
+        m.send(1, 2, Purpose::Gradient, 2);
+        assert_eq!(m.scalars(), 5);
+        assert_eq!(m.ledger().suppressed_scalars, 2);
+        assert_eq!(m.ledger().legacy_scalars(), 7);
+        assert_eq!(m.ledger().purpose_scalars(Purpose::Gradient), 2);
+    }
+
+    #[test]
+    fn quantized_payload_width() {
+        assert_eq!(payload_bits(0.0), 64);
+        assert_eq!(payload_bits(-1.0), 64);
+        assert_eq!(payload_bits(f64::NAN), 64);
+        assert_eq!(payload_bits(1e-3), 14); // 16001 levels over [-8, 8]
+        assert_eq!(payload_bits(0.5), 6); // 33 levels
+        assert_eq!(payload_bits(1e-30), 64); // clamped
+        let mut m = CommMeter::new(2);
+        m.set_quant_step(1e-3);
+        m.send(0, 1, Purpose::Estimate, 10);
+        assert_eq!(m.bits(), 10 * 14);
+        m.reset();
+        // Width survives a reset (schedule-level configuration).
+        m.send(0, 1, Purpose::Estimate, 1);
+        assert_eq!(m.bits(), 14);
+    }
+
+    #[test]
+    fn lossy_sends_bill_the_transmitter_and_track_drops() {
+        let mut m = CommMeter::new(2);
+        assert!(m.send_lossy(0, 1, Purpose::Estimate, 3, true));
+        assert!(m.send_lossy(0, 1, Purpose::Estimate, 3, false));
+        assert_eq!(m.scalars(), 6);
+        assert_eq!(m.ledger().dropped_scalars, 3);
+        assert_eq!(m.ledger().dropped_messages, 1);
+        m.set_outcomes(&[true, false], None);
+        assert!(!m.send_lossy(0, 1, Purpose::Estimate, 3, true));
+        assert_eq!(m.scalars(), 6);
+    }
+
+    #[test]
+    fn solicited_face_matches_table_face() {
+        let mut a = CommMeter::new(2);
+        let mut delivered = vec![true; 4];
+        delivered[2] = false; // src 1 * n 2 + dst 0: request 1 -> 0 died
+        a.set_outcomes(&[false, false], Some(&delivered));
+        a.send(0, 1, Purpose::Gradient, 4);
+        let mut b = CommMeter::new(2);
+        b.send_solicited(0, 1, Purpose::Gradient, 4, false);
+        assert_eq!(a.ledger(), b.ledger());
+        assert_eq!(a.ledger().suppressed_scalars, 4);
+    }
+
+    #[test]
+    fn ledgers_merge_associatively() {
+        let mut a = CommMeter::new(2);
+        a.send(0, 1, Purpose::Estimate, 3);
+        let mut b = CommMeter::new(2);
+        b.send(1, 0, Purpose::Gradient, 2);
+        b.send_solicited(1, 0, Purpose::Gradient, 5, false);
+        let mut left = CommLedger::empty(0);
+        left.merge(a.ledger());
+        left.merge(b.ledger());
+        let mut right = CommLedger::empty(0);
+        right.merge(b.ledger());
+        right.merge(a.ledger());
+        assert_eq!(left.scalars, right.scalars);
+        assert_eq!(left.per_link, right.per_link);
+        assert_eq!(left.suppressed_scalars, 5);
+        assert_eq!(left.scalars, 5);
+        assert_eq!(left.messages, 2);
+    }
+}

@@ -19,6 +19,10 @@
 
 use crate::rng::Pcg64;
 
+pub mod comm;
+
+pub use comm::{payload_bits, CommLedger, CommMeter, Purpose, FULL_PRECISION_BITS, N_PURPOSES};
+
 /// Table I constants plus the harvest-law parameters.
 #[derive(Debug, Clone)]
 pub struct EnergyParams {

@@ -12,14 +12,30 @@
 
 use crate::algorithms::NetworkConfig;
 use crate::config::Exp3Config;
+use crate::coordinator::impairments::LinkImpairments;
 use crate::coordinator::runner::{parallel_ordered, resolve_threads};
 use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnResult, WsnSimulation};
 use crate::datamodel::DataModel;
+use crate::energy::CommLedger;
 use crate::linalg::Mat;
 use crate::metrics::{to_db, write_csv, write_json, Series, TraceAccumulator};
 use crate::rng::Pcg64;
 use crate::topology::{combination_matrix, Graph, Rule};
 use anyhow::{anyhow, Result};
+
+/// One algorithm setting's communication/energy bill, summed over the
+/// Monte-Carlo runs (DESIGN.md §9).
+#[derive(Debug, Clone)]
+pub struct AlgoLedger {
+    /// Algorithm label (matches the MSD series).
+    pub label: String,
+    /// Directional communication ledger (all runs).
+    pub ledger: CommLedger,
+    /// Per-node activation counts (all runs).
+    pub per_node_activations: Vec<u64>,
+    /// Table I active-phase energy e_a (J) per activation.
+    pub active_energy: f64,
+}
 
 /// Everything `run_exp3` produces.
 #[derive(Debug, Clone)]
@@ -32,6 +48,35 @@ pub struct Exp3Output {
     pub harvest_series: Vec<Series>,
     /// (label, final MSD dB, activations per run).
     pub summary: Vec<(String, f64, f64)>,
+    /// Per-algorithm communication/energy ledgers (the `--ledger-csv`
+    /// breakdown of the paper's Fig. 5-style analysis).
+    pub ledgers: Vec<AlgoLedger>,
+}
+
+/// The per-node energy/communication breakdown as CSV text: one row per
+/// (algorithm, node) with exact integer counters and the Table-I energy
+/// spend — deterministic in the seed, byte-for-byte, at any thread or
+/// shard count (the golden-file contract of `exp3 --ledger-csv`).
+pub fn ledger_csv_string(ledgers: &[AlgoLedger]) -> String {
+    let mut s = String::from(
+        "algorithm,node,activations,energy_J,scalars,bits,bits_per_scalar\n",
+    );
+    for al in ledgers {
+        for (node, &acts) in al.per_node_activations.iter().enumerate() {
+            let scalars = al.ledger.per_node[node];
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                al.label,
+                node,
+                acts,
+                acts as f64 * al.active_energy,
+                scalars,
+                scalars * al.ledger.bits_per_scalar as u64,
+                al.ledger.bits_per_scalar,
+            ));
+        }
+    }
+    s
 }
 
 /// The six algorithm settings of Fig. 4 (right). `mean_deg` sizes the
@@ -117,6 +162,9 @@ impl Exp3Parts {
             harvest_scale: self.harvest_scale.clone(),
             duration: cfg.duration,
             sample_dt: cfg.sample_dt,
+            // exp3 reproduces the paper's setting: ideal links (the
+            // impaired WSN regimes live in the scenario subsystem).
+            impairments: LinkImpairments::ideal(),
         };
         WsnSimulation::new(wsn_cfg, self.model.clone())
     }
@@ -142,6 +190,7 @@ pub fn run_exp3(cfg: &Exp3Config, out_dir: Option<&str>, quiet: bool) -> Result<
     let mut sleep_series = Vec::new();
     let mut harvest_series: Vec<Series> = Vec::new();
     let mut summary = Vec::new();
+    let mut ledgers = Vec::new();
 
     let settings = exp3_settings(cfg, parts.mean_deg);
     for (algo_index, (algo, mu)) in settings.into_iter().enumerate() {
@@ -162,15 +211,27 @@ pub fn run_exp3(cfg: &Exp3Config, out_dir: Option<&str>, quiet: bool) -> Result<
         let mut harv_acc = TraceAccumulator::new();
         let mut activations = 0.0;
         let mut time_grid = Vec::new();
+        let mut ledger = CommLedger::empty(0);
+        let mut per_node_activations = vec![0u64; cfg.n_nodes];
         for res in &runs {
             time_grid.clone_from(&res.time);
             msd_acc.add(&res.msd);
             sleep_acc.add(&res.mean_sleep);
             harv_acc.add(&res.mean_harvest);
             activations += res.activations as f64;
+            ledger.merge(&res.ledger);
+            for (acc, &x) in per_node_activations.iter_mut().zip(&res.per_node_activations) {
+                *acc += x;
+            }
         }
         activations /= cfg.runs as f64;
         let label = algo.label();
+        ledgers.push(AlgoLedger {
+            label: label.clone(),
+            ledger,
+            per_node_activations,
+            active_energy: algo.active_energy(),
+        });
         let msd_db: Vec<f64> = msd_acc.mean().iter().map(|&x| to_db(x)).collect();
         let final_db = *msd_db.last().unwrap();
         if !quiet {
@@ -204,12 +265,22 @@ pub fn run_exp3(cfg: &Exp3Config, out_dir: Option<&str>, quiet: bool) -> Result<
             "Fig. 4: WSN energy telemetry and MSD vs time",
             &[msd_series.clone(), center].concat(),
         )?;
+        if cfg.ledger_csv {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(
+                format!("{dir}/exp3_ledger.csv"),
+                ledger_csv_string(&ledgers),
+            )?;
+            if !quiet {
+                println!("exp3: wrote {dir}/exp3_ledger.csv (per-node energy/comm breakdown)");
+            }
+        }
         if !quiet {
             println!("exp3: wrote {dir}/exp3_fig4_right_msd.csv, exp3_fig4_center_energy.csv");
         }
     }
 
-    Ok(Exp3Output { msd_series, sleep_series, harvest_series, summary })
+    Ok(Exp3Output { msd_series, sleep_series, harvest_series, summary, ledgers })
 }
 
 /// Run `runs` independent WSN realizations of `sim` in parallel,
@@ -274,5 +345,55 @@ mod tests {
             let last = *s.y.last().unwrap();
             assert!(last < first, "{}: {first} -> {last}", s.label);
         }
+    }
+
+    /// The `--ledger-csv` artifact is a golden file: byte-identical
+    /// across repeated runs (pure integer counters + shortest-round-trip
+    /// floats), schema-stable, and its rows cross-foot against the
+    /// in-memory ledgers.
+    #[test]
+    fn ledger_csv_is_byte_stable_and_cross_foots() {
+        let cfg = Exp3Config {
+            n_nodes: 10,
+            dim: 6,
+            radius: 0.45,
+            duration: 6_000.0,
+            sample_dt: 600.0,
+            runs: 2,
+            dcd_m: 2,
+            dcd_m_grad: 1,
+            partial_m: 2,
+            cd_m: 4,
+            ..Exp3Config::default()
+        };
+        let a = run_exp3(&cfg, None, true).unwrap();
+        let b = run_exp3(&cfg, None, true).unwrap();
+        let csv = ledger_csv_string(&a.ledgers);
+        assert_eq!(csv, ledger_csv_string(&b.ledgers), "ledger CSV not deterministic");
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "algorithm,node,activations,energy_J,scalars,bits,bits_per_scalar"
+        );
+        // 6 algorithm settings x n_nodes rows.
+        assert_eq!(csv.lines().count(), 1 + 6 * cfg.n_nodes);
+        // Rows cross-foot: per-node scalars sum to each ledger's total.
+        for al in &a.ledgers {
+            assert_eq!(al.ledger.per_node.iter().sum::<u64>(), al.ledger.scalars);
+            assert_eq!(al.per_node_activations.len(), cfg.n_nodes);
+            assert!(al.ledger.scalars > 0, "{}: empty ledger", al.label);
+        }
+        // Diffusion bills 2L per link; DCD (A=I) bills M + M_grad — the
+        // Fig. 5-style per-algorithm ordering.
+        let get = |label: &str| {
+            a.ledgers
+                .iter()
+                .find(|l| l.label == label)
+                .unwrap_or_else(|| panic!("missing {label}"))
+        };
+        let per_act = |al: &AlgoLedger| {
+            al.ledger.scalars as f64 / al.per_node_activations.iter().sum::<u64>() as f64
+        };
+        assert!(per_act(get("diffusion-lms")) > per_act(get("dcd (A=I)")));
     }
 }

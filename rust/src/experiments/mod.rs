@@ -21,7 +21,7 @@ pub mod exp4;
 
 pub use exp1::{run_exp1, Exp1Output};
 pub use exp2::{run_exp2, Exp2Output};
-pub use exp3::{run_exp3, Exp3Output};
+pub use exp3::{ledger_csv_string, run_exp3, AlgoLedger, Exp3Output};
 pub use exp4::{run_exp4, Exp4Config, Exp4Output, Exp4Point};
 
 /// Execution engine selection for the synchronous experiments.

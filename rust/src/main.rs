@@ -76,7 +76,11 @@ fn build_app() -> App {
                 Command::new("exp3", "Fig. 4: energy-harvesting WSN, N=80 L=40")
                     .opt("runs", "Monte-Carlo runs")
                     .opt("duration", "virtual-time horizon (s)")
-                    .opt("shards", "worker processes for the WSN realizations (default 1)"),
+                    .opt("shards", "worker processes for the WSN realizations (default 1)")
+                    .flag(
+                        "ledger-csv",
+                        "also write exp3_ledger.csv (per-node energy/comm breakdown)",
+                    ),
             ),
             common(
                 Command::new(
@@ -233,6 +237,7 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             if let Some(s) = parse_shards(args)? {
                 cfg.shards = s;
             }
+            cfg.ledger_csv = args.flag("ledger-csv");
             run_exp3(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
             Ok(())
         }
@@ -307,6 +312,14 @@ fn resolve_scenario(args: &ParsedArgs) -> Result<dcd_lms::scenario::Scenario> {
         sc.runs = 3;
         sc.iters = 800;
         sc.record_every = 1;
+        if matches!(sc.mode, dcd_lms::scenario::ScheduleMode::Wsn { .. }) {
+            // Shrink the virtual-time horizon too (iters is unused
+            // under the event-driven schedule).
+            sc.mode = dcd_lms::scenario::ScheduleMode::Wsn {
+                duration: 20_000.0,
+                sample_dt: 500.0,
+            };
+        }
     }
     if let Some(v) = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
         sc.seed = v;

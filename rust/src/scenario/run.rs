@@ -1,12 +1,15 @@
 //! Scenario execution: build the network and data model from a
 //! [`Scenario`], fan the Monte-Carlo realizations across the parallel
-//! runner, and write `results/<name>.{csv,json}`.
+//! runner, and write `results/<name>.{csv,json}` plus the per-link
+//! billed-bits ledger `results/<name>_ledger.csv` (DESIGN.md §9).
 //!
 //! Seeding mirrors the experiment drivers exactly: the master stream
 //! `Pcg64::new(seed, 0)` first builds the topology (geometric graphs
 //! consume it) and then the data model; realization `r` runs on stream
-//! `r + 1`. With ideal impairments this makes `paper-10-node` reproduce
-//! the `exp1` DCD trajectory bit-for-bit (tested).
+//! `r + 1` (synchronous rounds) or seed `seed + r·7919 + 1` (the
+//! `mode = wsn` event-driven schedule, the exp3 convention). With ideal
+//! impairments this makes `paper-10-node` reproduce the `exp1` DCD
+//! trajectory bit-for-bit (tested).
 //!
 //! Scenarios inside the analysis scope of DESIGN.md §7 additionally get
 //! a closed-form **theory column** ([`ImpairedMsdModel`]) next to the
@@ -15,15 +18,19 @@
 
 use crate::algorithms::NetworkConfig;
 use crate::config::IniDoc;
-use crate::coordinator::runner::{shard_ranges, McResult, MonteCarlo};
+use crate::coordinator::runner::{
+    parallel_ordered, resolve_threads, shard_ranges, McResult, MonteCarlo,
+};
+use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnResult, WsnSimulation};
 use crate::datamodel::DataModel;
+use crate::energy::{CommLedger, EnergyParams, Purpose};
 use crate::jsonio::{obj, Json};
-use crate::metrics::{to_db, write_csv, write_json, write_json_with_meta, Series};
+use crate::metrics::{to_db, write_csv, write_json, write_json_with_meta, Series, TraceAccumulator};
 use crate::rng::Pcg64;
 use crate::theory::{ImpairedMsdModel, TheorySetup};
 use crate::topology::{combination_matrix, Rule};
 
-use super::spec::Scenario;
+use super::spec::{AlgorithmSpec, Scenario, ScheduleMode};
 
 /// Upper bound on N·L for the automatic theory column: one application
 /// of the variance operator costs O((NL)³), so big sweeps (e.g. the
@@ -35,9 +42,10 @@ const MAX_THEORY_NL: usize = 256;
 pub struct ScenarioOutput {
     /// The (validated) scenario that ran.
     pub scenario: Scenario,
-    /// MSD-vs-iteration series in dB (x = iteration index). The
-    /// simulation curve is always `series[0]`; scenarios inside the
-    /// DESIGN.md §7 analysis scope get a `… (theory)` series after it.
+    /// MSD series in dB (x = iteration index for `mode = rounds`,
+    /// virtual time for `mode = wsn`). The simulation curve is always
+    /// `series[0]`; scenarios inside the DESIGN.md §7 analysis scope
+    /// get a `… (theory)` series after it.
     pub series: Vec<Series>,
     /// Steady-state MSD estimate (dB, trailing 10 % of the mean trace).
     pub steady_db: f64,
@@ -45,8 +53,12 @@ pub struct ScenarioOutput {
     /// when the scenario is inside the analysis scope (`A = I`,
     /// DCD-family algorithm, non-event gating, N·L within the cap).
     pub theory_steady_db: Option<f64>,
-    /// Mean scalars transmitted per realization (reflects gating).
+    /// Mean scalars transmitted per realization (reflects gating — and,
+    /// since the directional ledger, dead solicited replies too).
     pub scalars_per_run: f64,
+    /// The directional communication bill summed over all realizations
+    /// (per-node / per-link / per-purpose breakdowns; DESIGN.md §9).
+    pub ledger: CommLedger,
 }
 
 /// One point of a sweep.
@@ -60,6 +72,9 @@ pub struct SweepPoint {
     pub theory_db: Option<f64>,
     /// Mean scalars transmitted per realization at this value.
     pub scalars_per_run: f64,
+    /// Mean billed payload bits per realization at this value
+    /// (DESIGN.md §9).
+    pub bits_per_run: f64,
 }
 
 /// Everything one sweep produces.
@@ -75,10 +90,14 @@ pub struct SweepOutput {
 /// models: `Err` is the human-readable reason a scenario has no
 /// closed-form anchor. The analysis scope (DESIGN.md §7): the paper's
 /// `A = I` setting (`combine_rule = identity`), a DCD-family algorithm,
-/// Bernoulli-representable gating, and a network small enough for the
-/// O((NL)³) recursion. (A non-doubly-stochastic adapt combiner is only
-/// caught later, by `TheorySetup::validate` on the built matrix.)
+/// Bernoulli-representable gating, the synchronous-round schedule, and
+/// a network small enough for the O((NL)³) recursion. (A
+/// non-doubly-stochastic adapt combiner is only caught later, by
+/// `TheorySetup::validate` on the built matrix.)
 pub fn theory_scope(sc: &Scenario) -> Result<(usize, usize), String> {
+    if let ScheduleMode::Wsn { .. } = sc.mode {
+        return Err("the event-driven WSN schedule has no closed-form model".into());
+    }
     let masks = sc
         .algorithm
         .theory_masks(sc.dim)
@@ -151,6 +170,76 @@ pub fn mc_parts(sc: &Scenario) -> Result<(DataModel, NetworkConfig, MonteCarlo),
     Ok((model, net, mc))
 }
 
+/// The [`WsnAlgo`] a scenario's algorithm spec maps to under
+/// `mode = wsn` (DCD's combine step follows the combine rule: `A = I`
+/// ⇒ no masked-estimate combine).
+fn wsn_algo(sc: &Scenario) -> WsnAlgo {
+    match sc.algorithm {
+        AlgorithmSpec::DiffusionLms => WsnAlgo::Diffusion,
+        AlgorithmSpec::Cd { m } => WsnAlgo::Cd { m },
+        AlgorithmSpec::Dcd { m, m_grad } => WsnAlgo::Dcd {
+            m,
+            m_grad,
+            combine: sc.combine_rule != Rule::Identity,
+        },
+        AlgorithmSpec::Rcd { m_links } => WsnAlgo::Rcd { m_links },
+        AlgorithmSpec::Partial { m } => WsnAlgo::Partial { m },
+    }
+}
+
+/// Assemble the event-driven WSN simulation of a `mode = wsn` scenario:
+/// the master stream builds topology then data model (the exact
+/// [`mc_parts`] order), harvest scales follow the exp3 hillside law
+/// over node positions (uniform mid-level lighting for topologies
+/// without coordinates), and the scenario's impairment model is wired
+/// straight into the scheduler (charge *and* event gating; §9).
+pub fn wsn_sim(sc: &Scenario) -> Result<WsnSimulation, String> {
+    let ScheduleMode::Wsn { duration, sample_dt } = sc.mode else {
+        return Err(format!("scenario {} has no [wsn] schedule", sc.name));
+    };
+    let n = sc.topology.n_nodes();
+    let mut rng = Pcg64::new(sc.seed, 0);
+    let graph = sc.topology.build(&mut rng);
+    let c = combination_matrix(&graph, sc.adapt_rule);
+    let a = combination_matrix(&graph, sc.combine_rule);
+    let model = DataModel::paper(n, sc.dim, sc.u2_min, sc.u2_max, sc.sigma_v2, &mut rng);
+    let harvest_scale: Vec<f64> = match graph.positions.as_ref() {
+        Some(pos) => pos.iter().map(|&(_, y)| 0.3 + 0.7 * y).collect(),
+        None => vec![0.6; n],
+    };
+    let net = NetworkConfig { graph, c, a, mu: vec![sc.mu; n], dim: sc.dim };
+    net.validate()?;
+    let cfg = WsnConfig {
+        net,
+        algo: wsn_algo(sc),
+        energy: EnergyParams::default(),
+        harvest_scale,
+        duration,
+        sample_dt,
+        impairments: sc.impairments.clone(),
+    };
+    Ok(WsnSimulation::new(cfg, model))
+}
+
+/// Execute the contiguous WSN realization block
+/// `[run_start, run_start + count)` of a `mode = wsn` scenario, in run
+/// order. Realization `r` always runs on seed `seed + r·7919 + 1`
+/// (the exp3 convention), so a block produces exactly the per-run
+/// results the full runner would — this is what a shard worker executes
+/// for WSN scenarios (DESIGN.md §8).
+pub fn wsn_block(
+    sc: &Scenario,
+    run_start: usize,
+    count: usize,
+    threads: usize,
+) -> Result<Vec<WsnResult>, String> {
+    let sim = wsn_sim(sc)?;
+    let threads = resolve_threads(threads, count);
+    Ok(parallel_ordered(count, threads, |i| {
+        sim.run(sc.seed.wrapping_add((run_start + i) as u64 * 7919 + 1))
+    }))
+}
+
 /// Execute a scenario's Monte-Carlo simulation on pre-built parts:
 /// in-process for `shards = 1`, across worker processes otherwise
 /// (same result either way, bit for bit — the workers rebuild the same
@@ -170,8 +259,9 @@ fn run_mc(
 
 /// The `"manifest"` object recorded in `results/<name>.json`: the
 /// schedule that produced the result, including the shard layout
-/// (DESIGN.md §8), so the artifact is self-describing.
-fn run_manifest(sc: &Scenario) -> Json {
+/// (DESIGN.md §8) and the directional communication bill (§9), so the
+/// artifact is self-describing.
+fn run_manifest(sc: &Scenario, ledger: &CommLedger) -> Json {
     let layout = Json::Arr(
         shard_ranges(sc.runs, sc.shards)
             .into_iter()
@@ -180,6 +270,24 @@ fn run_manifest(sc: &Scenario) -> Json {
             })
             .collect(),
     );
+    let per_purpose = obj(Purpose::ALL
+        .iter()
+        .map(|&p| (p.label(), Json::Num(ledger.purpose_scalars(p) as f64)))
+        .collect());
+    let per_node_bits = Json::Arr(
+        (0..ledger.n_nodes)
+            .map(|k| Json::Num(ledger.per_node_bits(k) as f64))
+            .collect(),
+    );
+    let ledger_obj = obj(vec![
+        ("scalars", Json::Num(ledger.scalars as f64)),
+        ("bits", Json::Num(ledger.bits() as f64)),
+        ("messages", Json::Num(ledger.messages as f64)),
+        ("suppressed_scalars", Json::Num(ledger.suppressed_scalars as f64)),
+        ("bits_per_scalar", Json::Num(ledger.bits_per_scalar as f64)),
+        ("per_purpose_scalars", per_purpose),
+        ("per_node_bits", per_node_bits),
+    ]);
     obj(vec![
         ("runs", Json::Num(sc.runs as f64)),
         ("iters", Json::Num(sc.iters as f64)),
@@ -188,17 +296,88 @@ fn run_manifest(sc: &Scenario) -> Json {
         ("threads", Json::Num(sc.threads as f64)),
         ("shards", Json::Num(sc.shards as f64)),
         ("shard_layout", layout),
+        ("ledger", ledger_obj),
     ])
 }
 
+/// The per-directed-link billed-bits table as CSV text (`src,dst,
+/// scalars,bits`; zero links omitted) — `results/<name>_ledger.csv`.
+fn ledger_csv(ledger: &CommLedger) -> String {
+    let mut s = String::from("src,dst,scalars,bits\n");
+    let n = ledger.n_nodes;
+    for src in 0..n {
+        for dst in 0..n {
+            let scalars = ledger.per_link[src * n + dst];
+            if scalars > 0 {
+                s.push_str(&format!(
+                    "{src},{dst},{scalars},{}\n",
+                    scalars * ledger.bits_per_scalar as u64
+                ));
+            }
+        }
+    }
+    s
+}
+
 /// Run one scenario (validated first). With `out_dir` set, writes
-/// `<out_dir>/<name>.csv` and `<out_dir>/<name>.json`.
+/// `<out_dir>/<name>.csv`, `<out_dir>/<name>.json` (manifest includes
+/// the ledger summary) and `<out_dir>/<name>_ledger.csv` (per-link
+/// billed bits).
 pub fn run_scenario(
     sc: &Scenario,
     out_dir: Option<&str>,
     quiet: bool,
 ) -> Result<ScenarioOutput, String> {
     sc.validate()?;
+    let out = match sc.mode {
+        ScheduleMode::Rounds => run_rounds_scenario(sc, quiet)?,
+        ScheduleMode::Wsn { .. } => run_wsn_scenario(sc)?,
+    };
+
+    if !quiet {
+        let theory = match out.theory_steady_db {
+            Some(t) => format!("  theory {t:7.2} dB"),
+            None => String::new(),
+        };
+        println!(
+            "scenario {:<22} steady-state {:7.2} dB{}  scalars/run {:.0}  bits/run {:.0}  \
+             [drop {} gate {} quant {}]",
+            sc.name,
+            out.steady_db,
+            theory,
+            out.scalars_per_run,
+            out.ledger.bits() as f64 / sc.runs as f64,
+            sc.impairments.drop_prob,
+            sc.impairments.gating,
+            sc.impairments.quant_step,
+        );
+    }
+    if let Some(dir) = out_dir {
+        write_csv(format!("{dir}/{}.csv", sc.name), &out.series).map_err(|e| e.to_string())?;
+        write_json_with_meta(
+            format!("{dir}/{}.json", sc.name),
+            &format!("scenario {}: {}", sc.name, sc.description),
+            Some(run_manifest(sc, &out.ledger)),
+            &out.series,
+        )
+        .map_err(|e| e.to_string())?;
+        std::fs::write(
+            format!("{dir}/{}_ledger.csv", sc.name),
+            ledger_csv(&out.ledger),
+        )
+        .map_err(|e| e.to_string())?;
+        if !quiet {
+            println!(
+                "scenario {}: wrote {dir}/{}.csv, .json and _ledger.csv",
+                sc.name, sc.name
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// The synchronous-round execution path (the default mode).
+fn run_rounds_scenario(sc: &Scenario, quiet: bool) -> Result<ScenarioOutput, String> {
     let record_every = sc.effective_record_every();
     let (model, net, mc) = mc_parts(sc)?;
     let res = run_mc(sc, &model, &net, &mc)?;
@@ -231,42 +410,45 @@ pub fn run_scenario(
         }
     }
 
-    if !quiet {
-        let theory = match theory_steady_db {
-            Some(t) => format!("  theory {t:7.2} dB"),
-            None => String::new(),
-        };
-        println!(
-            "scenario {:<22} steady-state {:7.2} dB{}  scalars/run {:.0}  \
-             [drop {} gate {} quant {}]",
-            sc.name,
-            steady_db,
-            theory,
-            res.scalars_per_run,
-            sc.impairments.drop_prob,
-            sc.impairments.gating,
-            sc.impairments.quant_step,
-        );
-    }
-    if let Some(dir) = out_dir {
-        write_csv(format!("{dir}/{}.csv", sc.name), &series).map_err(|e| e.to_string())?;
-        write_json_with_meta(
-            format!("{dir}/{}.json", sc.name),
-            &format!("scenario {}: {}", sc.name, sc.description),
-            Some(run_manifest(sc)),
-            &series,
-        )
-        .map_err(|e| e.to_string())?;
-        if !quiet {
-            println!("scenario {}: wrote {dir}/{}.csv and .json", sc.name, sc.name);
-        }
-    }
     Ok(ScenarioOutput {
         scenario: sc.clone(),
         series,
         steady_db,
         theory_steady_db,
         scalars_per_run: res.scalars_per_run,
+        ledger: res.ledger,
+    })
+}
+
+/// The `mode = wsn` execution path: independent event-driven
+/// realizations fanned across threads (or worker processes with
+/// `shards > 1`), merged in run order.
+fn run_wsn_scenario(sc: &Scenario) -> Result<ScenarioOutput, String> {
+    let results = if sc.shards > 1 {
+        crate::shard::run_scenario_wsn_sharded(sc)?
+    } else {
+        wsn_block(sc, 0, sc.runs, sc.threads)?
+    };
+    let mut acc = TraceAccumulator::new();
+    let mut ledger = CommLedger::empty(0);
+    let mut time = Vec::new();
+    for res in &results {
+        time.clone_from(&res.time);
+        acc.add(&res.msd);
+        ledger.merge(&res.ledger);
+    }
+    let mean = acc.mean();
+    let tail = (mean.len() / 10).max(1);
+    let steady_db = to_db(acc.steady_state(tail));
+    let y: Vec<f64> = mean.iter().map(|&v| to_db(v)).collect();
+    let series = vec![Series::new(format!("{} (sim)", sc.algorithm.name()), time, y)];
+    Ok(ScenarioOutput {
+        scenario: sc.clone(),
+        series,
+        steady_db,
+        theory_steady_db: None,
+        scalars_per_run: ledger.scalars as f64 / sc.runs as f64,
+        ledger,
     })
 }
 
@@ -307,6 +489,7 @@ pub fn sweep_scenario(
         // the per-point theory curve is summarized by the scalar
         // `theory_db` column instead of a full trace, keeping sweep
         // artifacts one-series-per-value.
+        let bits_per_run = out.ledger.bits() as f64 / sc.runs as f64;
         let mut trace = out.series.into_iter().next().expect("sim series is always present");
         trace.label = format!("{key}={value}");
         traces.push(trace);
@@ -315,20 +498,26 @@ pub fn sweep_scenario(
             steady_db: out.steady_db,
             theory_db: out.theory_steady_db,
             scalars_per_run: out.scalars_per_run,
+            bits_per_run,
         });
     }
 
     if let Some(dir) = out_dir {
         // Summary CSV: x = swept value when numeric, else its index;
-        // one simulated column, plus a predicted column when every
-        // point is inside the theory scope (DESIGN.md §7).
+        // one simulated column, a billed-bits column (§9), plus a
+        // predicted column when every point is inside the theory scope
+        // (DESIGN.md §7).
         let xs: Vec<f64> = points
             .iter()
             .enumerate()
             .map(|(i, p)| p.value.parse::<f64>().unwrap_or(i as f64))
             .collect();
         let ys: Vec<f64> = points.iter().map(|p| p.steady_db).collect();
-        let mut summaries = vec![Series::new(format!("steady-state dB vs {key}"), xs.clone(), ys)];
+        let bits: Vec<f64> = points.iter().map(|p| p.bits_per_run).collect();
+        let mut summaries = vec![
+            Series::new(format!("steady-state dB vs {key}"), xs.clone(), ys),
+            Series::new(format!("billed bits/run vs {key}"), xs.clone(), bits),
+        ];
         if points.iter().all(|p| p.theory_db.is_some()) {
             let ty: Vec<f64> = points
                 .iter()
@@ -383,6 +572,13 @@ mod tests {
         let y = &out.series[0].y;
         assert!(y[399] < y[0], "no convergence: {} -> {}", y[0], y[399]);
         assert!(out.scalars_per_run > 0.0);
+        // The ledger reconciles with the legacy transmitter-only bill:
+        // drops suppress exactly the dead solicited replies.
+        assert!(out.ledger.suppressed_scalars > 0);
+        assert_eq!(
+            out.ledger.per_link.iter().sum::<u64>(),
+            out.ledger.scalars
+        );
     }
 
     /// Scenarios outside the analysis scope run fine, just without the
@@ -415,6 +611,52 @@ mod tests {
         );
     }
 
+    /// The `mode = wsn` path end-to-end on a shrunk `wsn-80`: the
+    /// scenario drives `WsnSimulation` with its (non-trivial)
+    /// impairment spec, converges, and reports an exact bill.
+    #[test]
+    fn wsn_mode_scenario_runs_the_event_scheduler() {
+        let mut sc = find("wsn-80").unwrap();
+        assert!(matches!(sc.mode, ScheduleMode::Wsn { .. }));
+        assert!(!sc.impairments.is_ideal(), "wsn-80 should exercise impairments");
+        sc.topology = super::super::spec::TopologySpec::Geometric { n: 16, radius: 0.45 };
+        sc.dim = 8;
+        sc.runs = 2;
+        sc.mu = 0.05; // shrunk horizon: converge well inside 6000 s
+        sc.mode = ScheduleMode::Wsn { duration: 6_000.0, sample_dt: 300.0 };
+        sc.validate().unwrap();
+        let out = run_scenario(&sc, None, true).unwrap();
+        assert_eq!(out.series.len(), 1, "wsn mode has no closed-form theory column");
+        assert!(out.theory_steady_db.is_none());
+        let y = &out.series[0].y;
+        assert!(y[y.len() - 1] < y[1], "no convergence: {} -> {}", y[1], y[y.len() - 1]);
+        assert!(out.ledger.scalars > 0);
+        // x axis is virtual time on the sample grid.
+        assert_eq!(out.series[0].x.len(), 20);
+        assert!((out.series[0].x[0] - 300.0).abs() < 1e-9);
+    }
+
+    /// WSN-mode realizations fan across threads with bit-identical
+    /// results — including the integer billed-bits ledger (the
+    /// determinism half of the WSN × impairments acceptance).
+    #[test]
+    fn wsn_mode_bit_identical_across_thread_counts() {
+        let mut sc = find("wsn-80").unwrap();
+        sc.topology = super::super::spec::TopologySpec::Geometric { n: 12, radius: 0.5 };
+        sc.dim = 6;
+        sc.runs = 4;
+        sc.mode = ScheduleMode::Wsn { duration: 4_000.0, sample_dt: 400.0 };
+        sc.threads = 1;
+        let reference = run_scenario(&sc, None, true).unwrap();
+        for threads in [2usize, 4] {
+            let mut sct = sc.clone();
+            sct.threads = threads;
+            let out = run_scenario(&sct, None, true).unwrap();
+            assert_eq!(out.series[0].y, reference.series[0].y, "threads = {threads}");
+            assert_eq!(out.ledger, reference.ledger, "threads = {threads}");
+        }
+    }
+
     #[test]
     fn sweep_over_drop_prob_degrades_monotonically_in_tendency() {
         let sc = small("lossy-geometric");
@@ -433,6 +675,13 @@ mod tests {
         let t0 = out.points[0].theory_db.expect("in-scope sweep point");
         let t1 = out.points[1].theory_db.expect("in-scope sweep point");
         assert!(t1 > t0, "theory: drop 0.5 {t1} dB <= drop 0 {t0} dB");
+        // Exact billing: more drops ⇒ fewer billed bits (dead replies).
+        assert!(
+            out.points[1].bits_per_run < out.points[0].bits_per_run,
+            "bits/run did not drop: {} vs {}",
+            out.points[1].bits_per_run,
+            out.points[0].bits_per_run
+        );
     }
 
     #[test]
@@ -461,13 +710,25 @@ mod tests {
         )
         .unwrap();
         assert_eq!(doc.get("series").as_arr().unwrap().len(), 1);
-        // The manifest records the schedule + shard layout (§8).
+        // The manifest records the schedule + shard layout (§8) and the
+        // ledger summary (§9).
         let manifest = doc.get("manifest");
         assert_eq!(manifest.get("runs").as_usize(), Some(3));
         assert_eq!(manifest.get("shards").as_usize(), Some(1));
         let layout = manifest.get("shard_layout").as_arr().unwrap();
         assert_eq!(layout.len(), 1);
         assert_eq!(layout[0].as_arr().unwrap()[1].as_usize(), Some(3));
+        let ledger = manifest.get("ledger");
+        assert!(ledger.get("scalars").as_u64().unwrap_or(0) > 0);
+        // quantized-dense stores on a 1e-3 grid: 14-bit payloads
+        // (16001 levels over the ±8 fixed-point range).
+        assert_eq!(ledger.get("bits_per_scalar").as_u64(), Some(14));
+        assert!(ledger.get("per_purpose_scalars").get("estimate-broadcast").as_f64().is_some());
+        // The per-link billed-bits table rides next to the results.
+        let ledger_csv =
+            std::fs::read_to_string(dir.join("quantized-dense_ledger.csv")).unwrap();
+        assert!(ledger_csv.starts_with("src,dst,scalars,bits\n"), "{ledger_csv}");
+        assert!(ledger_csv.lines().count() > 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

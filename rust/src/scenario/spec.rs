@@ -119,6 +119,24 @@ impl AlgorithmSpec {
     }
 }
 
+/// How a scenario's schedule drives the network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleMode {
+    /// Synchronous rounds on the Monte-Carlo round scheduler (the
+    /// default; `iters` iterations per realization).
+    Rounds,
+    /// The energy-harvesting event-driven WSN scheduler
+    /// ([`crate::coordinator::WsnSimulation`]): nodes duty-cycle on the
+    /// ENO model and gate on charge *and* the scenario's impairment
+    /// gate (DESIGN.md §9). `iters` is ignored; virtual time rules.
+    Wsn {
+        /// Virtual-time horizon (s).
+        duration: f64,
+        /// MSD/telemetry sampling interval (s).
+        sample_dt: f64,
+    },
+}
+
 /// One declarative experiment. Parse with [`Scenario::from_ini`] /
 /// [`Scenario::parse_str`], serialize with [`Scenario::to_ini_string`]
 /// (a lossless round-trip), check with [`Scenario::validate`], execute
@@ -164,6 +182,10 @@ pub struct Scenario {
     /// in-process; must be ≥ 1). Results are bit-identical for any
     /// value — see DESIGN.md §8 and [`crate::shard`].
     pub shards: usize,
+    /// Schedule mode: synchronous rounds (default) or the event-driven
+    /// energy-harvesting WSN scheduler (`[schedule] mode = wsn` plus a
+    /// `[wsn]` section).
+    pub mode: ScheduleMode,
 }
 
 impl Scenario {
@@ -189,6 +211,7 @@ impl Scenario {
             record_every: 0,
             threads: 0,
             shards: 1,
+            mode: ScheduleMode::Rounds,
         }
     }
 
@@ -222,6 +245,9 @@ impl Scenario {
             "schedule.record_every",
             "schedule.threads",
             "schedule.shards",
+            "schedule.mode",
+            "wsn.duration",
+            "wsn.sample_dt",
         ]
     }
 
@@ -329,6 +355,16 @@ impl Scenario {
         sc.record_every = get_or(doc, "schedule", "record_every", sc.record_every)?;
         sc.threads = get_or(doc, "schedule", "threads", sc.threads)?;
         sc.shards = get_or(doc, "schedule", "shards", sc.shards)?;
+        sc.mode = match doc.get("schedule", "mode").unwrap_or("rounds") {
+            "rounds" => ScheduleMode::Rounds,
+            "wsn" => ScheduleMode::Wsn {
+                duration: get_or(doc, "wsn", "duration", 200_000.0)?,
+                sample_dt: get_or(doc, "wsn", "sample_dt", 500.0)?,
+            },
+            other => {
+                return Err(format!("schedule.mode {other:?}: expected rounds | wsn"))
+            }
+        };
         Ok(sc)
     }
 
@@ -382,6 +418,15 @@ impl Scenario {
         s.push_str(&format!("record_every = {}\n", self.record_every));
         s.push_str(&format!("threads = {}\n", self.threads));
         s.push_str(&format!("shards = {}\n", self.shards));
+        match &self.mode {
+            ScheduleMode::Rounds => s.push_str("mode = rounds\n"),
+            ScheduleMode::Wsn { duration, sample_dt } => {
+                s.push_str("mode = wsn\n");
+                s.push_str("\n[wsn]\n");
+                s.push_str(&format!("duration = {duration}\n"));
+                s.push_str(&format!("sample_dt = {sample_dt}\n"));
+            }
+        }
         s
     }
 
@@ -461,6 +506,20 @@ impl Scenario {
         self.impairments
             .validate()
             .map_err(|e| format!("scenario {}: {e}", self.name))?;
+        if let ScheduleMode::Wsn { duration, sample_dt } = self.mode {
+            if !(duration.is_finite() && duration > 0.0) {
+                return Err(format!(
+                    "scenario {}: wsn duration {duration} must be > 0",
+                    self.name
+                ));
+            }
+            if !(sample_dt.is_finite() && sample_dt > 0.0 && sample_dt <= duration) {
+                return Err(format!(
+                    "scenario {}: wsn sample_dt {sample_dt} must be in (0, duration]",
+                    self.name
+                ));
+            }
+        }
         if self.runs == 0 || self.iters == 0 {
             return Err(format!(
                 "scenario {}: runs and iters must be positive",
@@ -634,6 +693,31 @@ mod tests {
         assert!(Scenario::check_key("impairments.dropprob").is_err());
         assert!(Scenario::check_key("bogus.key").is_err());
         assert!(Scenario::check_key("").is_err());
+    }
+
+    #[test]
+    fn wsn_mode_roundtrips_and_validates() {
+        let mut sc = Scenario::base("wsn-mode", "event-driven schedule");
+        sc.mode = ScheduleMode::Wsn { duration: 12_345.0, sample_dt: 123.0 };
+        sc.impairments.gating = Gating::EventTriggered(1e-4);
+        let text = sc.to_ini_string();
+        assert!(text.contains("mode = wsn"), "{text}");
+        assert!(text.contains("[wsn]"), "{text}");
+        let back = Scenario::parse_str(&text).unwrap();
+        assert_eq!(back, sc);
+        assert!(back.validate().is_ok());
+        // Bad schedules are rejected.
+        sc.mode = ScheduleMode::Wsn { duration: -1.0, sample_dt: 1.0 };
+        assert!(sc.validate().is_err());
+        sc.mode = ScheduleMode::Wsn { duration: 100.0, sample_dt: 500.0 };
+        assert!(sc.validate().is_err());
+        let err = Scenario::parse_str("[schedule]\nmode = warp\n").unwrap_err();
+        assert!(err.contains("warp"), "{err}");
+        // The rounds default round-trips too.
+        let plain = Scenario::base("plain", "");
+        assert_eq!(Scenario::parse_str(&plain.to_ini_string()).unwrap(), plain);
+        assert!(Scenario::check_key("wsn.duration").is_ok());
+        assert!(Scenario::check_key("schedule.mode").is_ok());
     }
 
     #[test]

@@ -30,6 +30,7 @@ mod worker;
 
 pub use protocol::{Frame, JobKind, RunPayload, ShardJob, PROTOCOL_VERSION};
 pub use supervisor::{
-    run_scenario_sharded, run_wsn_sharded, shard_retries, RETRIES_ENV, WORKER_BIN_ENV,
+    run_scenario_sharded, run_scenario_wsn_sharded, run_wsn_sharded, shard_retries, RETRIES_ENV,
+    WORKER_BIN_ENV,
 };
 pub use worker::{worker_main, CRASH_ONCE_ENV, CRASH_RUN_ENV};

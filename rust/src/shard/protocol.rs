@@ -16,12 +16,15 @@
 
 use crate::coordinator::round::RunResult;
 use crate::coordinator::wsn::WsnResult;
+use crate::energy::{CommLedger, N_PURPOSES};
 use crate::jsonio::{obj, Json};
 
 /// Protocol version; a worker rejects any other value with a
 /// [`Frame::Error`] so mixed-binary deployments fail loudly instead of
-/// silently misreading frames.
-pub const PROTOCOL_VERSION: u64 = 1;
+/// silently misreading frames. v2: run frames carry the directional
+/// communication ledger (DESIGN.md §9) instead of bare scalar counters,
+/// and WSN frames gained the gating/activation breakdown.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// What a shard worker is asked to execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -182,6 +185,95 @@ fn get_str(v: &Json, key: &str) -> Result<String, String> {
         .to_string())
 }
 
+fn u64_arr(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| num_u64(x)).collect())
+}
+
+fn get_u64_arr(v: &Json, key: &str) -> Result<Vec<u64>, String> {
+    v.get(key)
+        .as_arr()
+        .ok_or_else(|| format!("frame field {key:?} must be an array of integers"))?
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .ok_or_else(|| format!("frame field {key:?} contains a non-u64"))
+        })
+        .collect()
+}
+
+/// Encode a [`CommLedger`] as a frame object: exact u64 counters, with
+/// the dense per-link table shipped sparsely as `[index, scalars]`
+/// pairs (geometric graphs leave most of the N² table zero).
+fn ledger_json(l: &CommLedger) -> Json {
+    let per_link: Vec<Json> = l
+        .per_link
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| Json::Arr(vec![num(i), num_u64(c)]))
+        .collect();
+    obj(vec![
+        ("n", num(l.n_nodes)),
+        ("scalars", num_u64(l.scalars)),
+        ("messages", num_u64(l.messages)),
+        ("suppressed", num_u64(l.suppressed_scalars)),
+        ("dropped_s", num_u64(l.dropped_scalars)),
+        ("dropped_m", num_u64(l.dropped_messages)),
+        ("width", num(l.bits_per_scalar as usize)),
+        ("per_node", u64_arr(&l.per_node)),
+        ("per_purpose", u64_arr(&l.per_purpose)),
+        ("per_link", Json::Arr(per_link)),
+    ])
+}
+
+/// Decode the ledger object of a run frame (see [`ledger_json`]).
+fn decode_ledger(v: &Json) -> Result<CommLedger, String> {
+    let l = v.get("ledger");
+    if matches!(l, &Json::Null) {
+        return Err("frame field \"ledger\" missing".to_string());
+    }
+    let n = get_usize(l, "n")?;
+    let mut ledger = CommLedger::empty(n);
+    ledger.scalars = get_u64(l, "scalars")?;
+    ledger.messages = get_u64(l, "messages")?;
+    ledger.suppressed_scalars = get_u64(l, "suppressed")?;
+    ledger.dropped_scalars = get_u64(l, "dropped_s")?;
+    ledger.dropped_messages = get_u64(l, "dropped_m")?;
+    ledger.bits_per_scalar = get_usize(l, "width")? as u32;
+    let per_node = get_u64_arr(l, "per_node")?;
+    if per_node.len() != n {
+        return Err(format!("ledger per_node has {} entries, want {n}", per_node.len()));
+    }
+    ledger.per_node = per_node;
+    let per_purpose = get_u64_arr(l, "per_purpose")?;
+    if per_purpose.len() != N_PURPOSES {
+        return Err(format!(
+            "ledger per_purpose has {} entries, want {N_PURPOSES}",
+            per_purpose.len()
+        ));
+    }
+    ledger.per_purpose.copy_from_slice(&per_purpose);
+    for entry in l
+        .get("per_link")
+        .as_arr()
+        .ok_or("ledger per_link must be an array")?
+    {
+        let pair = entry.as_arr().ok_or("ledger per_link entry must be a pair")?;
+        if pair.len() != 2 {
+            return Err("ledger per_link entry must be a pair".to_string());
+        }
+        let idx = pair[0]
+            .as_usize()
+            .ok_or("ledger per_link index must be a usize")?;
+        let count = pair[1].as_u64().ok_or("ledger per_link count must be a u64")?;
+        if idx >= ledger.per_link.len() {
+            return Err(format!("ledger per_link index {idx} out of range"));
+        }
+        ledger.per_link[idx] = count;
+    }
+    Ok(ledger)
+}
+
 impl Frame {
     /// Serialize as one line of compact JSON (newlines in strings are
     /// escaped by the writer, so the frame never spans lines).
@@ -205,8 +297,7 @@ impl Frame {
                     ("kind", Json::Str("mc".into())),
                     ("run", num(*run)),
                     ("msd", f64_arr(&res.msd)),
-                    ("scalars", num_u64(res.scalars)),
-                    ("messages", num_u64(res.messages)),
+                    ("ledger", ledger_json(&res.ledger)),
                 ]),
                 RunPayload::Wsn(res) => obj(vec![
                     v,
@@ -219,6 +310,9 @@ impl Frame {
                     ("mean_harvest", f64_arr(&res.mean_harvest)),
                     ("activations", num_u64(res.activations)),
                     ("skipped", num_u64(res.skipped)),
+                    ("gated", num_u64(res.gated)),
+                    ("per_node_activations", u64_arr(&res.per_node_activations)),
+                    ("ledger", ledger_json(&res.ledger)),
                 ]),
             },
             Frame::Done { runs } => obj(vec![
@@ -263,8 +357,7 @@ impl Frame {
                 let payload = match JobKind::parse(&get_str(&doc, "kind")?)? {
                     JobKind::Mc => RunPayload::Mc(RunResult {
                         msd: get_f64_arr(&doc, "msd")?,
-                        scalars: get_u64(&doc, "scalars")?,
-                        messages: get_u64(&doc, "messages")?,
+                        ledger: decode_ledger(&doc)?,
                     }),
                     JobKind::Wsn => RunPayload::Wsn(WsnResult {
                         time: get_f64_arr(&doc, "time")?,
@@ -273,6 +366,9 @@ impl Frame {
                         mean_harvest: get_f64_arr(&doc, "mean_harvest")?,
                         activations: get_u64(&doc, "activations")?,
                         skipped: get_u64(&doc, "skipped")?,
+                        gated: get_u64(&doc, "gated")?,
+                        per_node_activations: get_u64_arr(&doc, "per_node_activations")?,
+                        ledger: decode_ledger(&doc)?,
                     }),
                 };
                 Frame::Run { run, payload }
@@ -318,19 +414,34 @@ mod tests {
         }
     }
 
+    fn sample_ledger() -> CommLedger {
+        let mut l = CommLedger::empty(3);
+        l.scalars = 9_007_199_254_740_992; // 2^53: largest exact counter
+        l.messages = 12_345;
+        l.suppressed_scalars = 77;
+        l.dropped_scalars = 5;
+        l.dropped_messages = 1;
+        l.bits_per_scalar = 11;
+        l.per_node = vec![10, 0, 32];
+        l.per_purpose = [30, 12, 0];
+        l.per_link[1] = 10; // 0 -> 1
+        l.per_link[5] = 32; // 1 -> 2
+        l
+    }
+
     #[test]
     fn mc_run_frame_roundtrips_bit_exactly() {
         let res = RunResult {
             msd: vec![1.0, 0.123456789012345e-7, 3.5e300, 0.0],
-            scalars: 9_007_199_254_740_992, // 2^53: largest exact counter
-            messages: 12_345,
+            ledger: sample_ledger(),
         };
         let line = Frame::Run { run: 7, payload: RunPayload::Mc(res.clone()) }.encode();
         match Frame::decode(&line).unwrap() {
             Frame::Run { run, payload: RunPayload::Mc(back) } => {
                 assert_eq!(run, 7);
-                assert_eq!(back.scalars, res.scalars);
-                assert_eq!(back.messages, res.messages);
+                // The whole directional ledger survives the pipe —
+                // sparse per-link encoding included.
+                assert_eq!(back.ledger, res.ledger);
                 assert_eq!(back.msd.len(), res.msd.len());
                 for (a, b) in back.msd.iter().zip(res.msd.iter()) {
                     assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
@@ -346,8 +457,7 @@ mod tests {
     fn non_finite_msd_values_survive_the_frame() {
         let res = RunResult {
             msd: vec![f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 1.5],
-            scalars: 10,
-            messages: 2,
+            ledger: CommLedger::empty(2),
         };
         let line = Frame::Run { run: 0, payload: RunPayload::Mc(res) }.encode();
         match Frame::decode(&line).unwrap() {
@@ -360,7 +470,7 @@ mod tests {
             other => panic!("decoded {other:?}"),
         }
         // A finite number hiding in a string is still rejected.
-        let sneaky = "{\"v\":1,\"type\":\"run\",\"kind\":\"mc\",\"run\":0,\
+        let sneaky = "{\"v\":2,\"type\":\"run\",\"kind\":\"mc\",\"run\":0,\
                       \"msd\":[\"1.5\"],\"scalars\":0,\"messages\":0}";
         assert!(Frame::decode(sneaky).unwrap_err().contains("non-number"));
     }
@@ -374,6 +484,9 @@ mod tests {
             mean_harvest: vec![0.01, 0.02],
             activations: 321,
             skipped: 7,
+            gated: 13,
+            per_node_activations: vec![200, 121, 0],
+            ledger: sample_ledger(),
         };
         let line = Frame::Run { run: 0, payload: RunPayload::Wsn(res.clone()) }.encode();
         match Frame::decode(&line).unwrap() {
@@ -384,6 +497,9 @@ mod tests {
                 assert_eq!(back.mean_harvest, res.mean_harvest);
                 assert_eq!(back.activations, 321);
                 assert_eq!(back.skipped, 7);
+                assert_eq!(back.gated, 13);
+                assert_eq!(back.per_node_activations, res.per_node_activations);
+                assert_eq!(back.ledger, res.ledger);
             }
             other => panic!("decoded {other:?}"),
         }
@@ -397,11 +513,18 @@ mod tests {
         assert!(err.contains("version"), "{err}");
         let err = Frame::decode("{\"v\":99,\"type\":\"done\",\"runs\":0}").unwrap_err();
         assert!(err.contains("version 99"), "{err}");
-        let err = Frame::decode("{\"v\":1,\"type\":\"frobnicate\"}").unwrap_err();
+        // v1 frames (pre-ledger) are rejected, not misread.
+        let err = Frame::decode("{\"v\":1,\"type\":\"done\",\"runs\":0}").unwrap_err();
+        assert!(err.contains("version 1"), "{err}");
+        let err = Frame::decode("{\"v\":2,\"type\":\"frobnicate\"}").unwrap_err();
         assert!(err.contains("frobnicate"), "{err}");
-        let headless_run = "{\"v\":1,\"type\":\"run\",\"kind\":\"mc\",\"run\":0}";
+        let headless_run = "{\"v\":2,\"type\":\"run\",\"kind\":\"mc\",\"run\":0}";
         let err = Frame::decode(headless_run).unwrap_err();
         assert!(err.contains("msd"), "{err}");
+        // A run frame without its ledger is malformed.
+        let ledgerless = "{\"v\":2,\"type\":\"run\",\"kind\":\"mc\",\"run\":0,\"msd\":[1.0]}";
+        let err = Frame::decode(ledgerless).unwrap_err();
+        assert!(err.contains("ledger"), "{err}");
         // A done/error frame round-trips.
         match Frame::decode(&Frame::Done { runs: 5 }.encode()).unwrap() {
             Frame::Done { runs } => assert_eq!(runs, 5),

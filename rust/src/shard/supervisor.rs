@@ -90,6 +90,39 @@ pub fn run_scenario_sharded(sc: &Scenario) -> Result<McResult, String> {
     Ok(mc.merge(results.into_iter()))
 }
 
+/// Run a `mode = wsn` scenario's event-driven realizations across
+/// `sc.shards` worker processes, in run order. The job payload is the
+/// scenario INI (same `JobKind::Mc` envelope as the round-mode jobs —
+/// the worker dispatches on the replayed scenario's schedule mode) and
+/// the workers answer with WSN run frames carrying the full ledger
+/// (DESIGN.md §8, §9).
+pub fn run_scenario_wsn_sharded(sc: &Scenario) -> Result<Vec<WsnResult>, String> {
+    let mut job_sc = sc.clone();
+    job_sc.shards = 1;
+    let payload = job_sc.to_ini_string();
+    let threads = per_worker_threads(sc.threads, sc.shards);
+    let collected = collect_sharded(sc.runs, sc.shards, &|run_start, run_count| ShardJob {
+        kind: JobKind::Mc,
+        payload: payload.clone(),
+        run_start,
+        run_count,
+        threads,
+        algo_index: 0,
+    })?;
+    let mut results = Vec::with_capacity(collected.len());
+    for payload in collected {
+        match payload {
+            RunPayload::Wsn(res) => results.push(res),
+            RunPayload::Mc(_) => {
+                return Err(
+                    "shard worker answered a wsn-mode scenario with an mc frame".to_string()
+                )
+            }
+        }
+    }
+    Ok(results)
+}
+
 /// Run one exp3 algorithm setting's WSN realizations across `shards`
 /// worker processes, returning the per-run results in run order (the
 /// same contract as the in-process `parallel_ordered` fan-out).

@@ -19,7 +19,7 @@ use std::io::{BufRead, Write};
 use crate::config::{Exp3Config, IniDoc};
 use crate::coordinator::runner::{parallel_ordered, resolve_threads};
 use crate::experiments::exp3::{exp3_settings, Exp3Parts};
-use crate::scenario::{mc_parts, Scenario};
+use crate::scenario::{mc_parts, wsn_block, Scenario, ScheduleMode};
 
 use super::protocol::{Frame, JobKind, RunPayload, ShardJob};
 
@@ -95,12 +95,18 @@ fn run_worker(out: &mut impl Write) -> Result<(), String> {
 }
 
 /// Replay a scenario job and execute its realization block on the same
-/// code path `run_scenario` uses in-process.
+/// code path `run_scenario` uses in-process. A `mode = wsn` scenario
+/// dispatches to the event-driven scheduler and answers with WSN run
+/// frames; the default rounds mode stays on the Monte-Carlo runner.
 fn run_mc_block(job: &ShardJob) -> Result<Vec<RunPayload>, String> {
     let sc = Scenario::parse_str(&job.payload)
         .map_err(|e| format!("job payload is not a valid scenario: {e}"))?;
     sc.validate()?;
     check_block(job, sc.runs)?;
+    if matches!(sc.mode, ScheduleMode::Wsn { .. }) {
+        let results = wsn_block(&sc, job.run_start, job.run_count, job.threads)?;
+        return Ok(results.into_iter().map(RunPayload::Wsn).collect());
+    }
     let (model, net, mut mc) = mc_parts(&sc)?;
     // The supervisor divides the machine across the concurrent shards;
     // its budget overrides the scenario's own (whole-machine) setting.

@@ -241,6 +241,31 @@ fn handbook_covers_every_cli_subcommand() {
     }
 }
 
+/// Rule 5: DESIGN.md must carry the §9 ledger chapter and the ledger
+/// implementation must cite it — the ledger's billing rules are
+/// load-bearing documentation (the communication numbers of every
+/// result file are defined there), so the section and its anchor
+/// citation may not silently drift apart. Mirrors rule 5 of
+/// `tools/check_md_links.py`.
+#[test]
+fn ledger_chapter_and_citation_are_paired() {
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md")).expect("DESIGN.md");
+    let has_section = design
+        .lines()
+        .any(|l| l.starts_with('#') && l.contains("§9"));
+    assert!(has_section, "DESIGN.md lost its §9 ledger chapter");
+    let comm = fs::read_to_string(
+        root.join("rust").join("src").join("energy").join("comm.rs"),
+    )
+    .expect("rust/src/energy/comm.rs (the directional ledger)");
+    let needle = format!("{}.md §9", "DESIGN");
+    assert!(
+        comm.contains(&needle),
+        "rust/src/energy/comm.rs does not cite DESIGN.md §9"
+    );
+}
+
 #[test]
 fn relative_markdown_links_point_at_existing_files() {
     let root = repo_root();

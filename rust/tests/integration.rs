@@ -216,6 +216,7 @@ fn wsn_energy_ordering() {
             harvest_scale: vec![0.5; n],
             duration: 20_000.0,
             sample_dt: 1_000.0,
+            impairments: dcd_lms::coordinator::LinkImpairments::ideal(),
         };
         let res = WsnSimulation::new(cfg, model.clone()).run(5);
         activations.push((algo.label(), res.activations));

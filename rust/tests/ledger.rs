@@ -1,0 +1,148 @@
+//! Acceptance tests for the directional message ledger (DESIGN.md §9):
+//! hand-computed bills on a 3-node line topology, exact gating/drop
+//! savings versus the legacy transmitter-only meter, and the billing
+//! rules end-to-end through the round scheduler.
+
+use dcd_lms::algorithms::{NetworkConfig, Purpose};
+use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::coordinator::RoundScheduler;
+use dcd_lms::datamodel::DataModel;
+use dcd_lms::energy::payload_bits;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+const ITERS: usize = 50;
+
+/// The 3-node line 0 — 1 — 2 (degrees 1, 2, 1; 4 directed links).
+fn line_net(dim: usize) -> NetworkConfig {
+    let graph = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    NetworkConfig { graph, c, a, mu: vec![0.05; 3], dim }
+}
+
+fn run_line(imp: Option<LinkImpairments>) -> dcd_lms::coordinator::RunResult {
+    let mut rng = Pcg64::new(41, 0);
+    let net = line_net(4);
+    let model = DataModel::paper(3, 4, 1.0, 1.0, 1e-3, &mut rng);
+    let mut sched = RoundScheduler::new(&model);
+    sched.impairments = imp;
+    // DCD with M = 2, M_grad = 1.
+    let mut alg = dcd_lms::algorithms::Dcd::new(net, 2, 1);
+    sched.run(&mut alg, ITERS, 17, 1)
+}
+
+/// Ideal links, DCD(M = 2, M∇ = 1): every directed link carries M
+/// estimate scalars one way and M∇ gradient scalars back per iteration
+/// — 3 scalars per directed link per iteration, 12 total, 64-bit
+/// payloads. Every number below is hand-computed.
+#[test]
+fn ideal_line_bill_matches_hand_computation() {
+    let res = run_line(None);
+    let t = ITERS as u64;
+    let l = &res.ledger;
+    assert_eq!(l.scalars, 12 * t);
+    assert_eq!(l.bits(), 12 * t * 64);
+    assert_eq!(l.suppressed_scalars, 0);
+    // Estimates: 4 directed links x M = 2; gradients: 4 x M∇ = 1.
+    assert_eq!(l.purpose_scalars(Purpose::Estimate), 8 * t);
+    assert_eq!(l.purpose_scalars(Purpose::Gradient), 4 * t);
+    // Per transmitter: the end nodes each send M + M∇ = 3 (one
+    // neighbour); the middle node sends 2 x (M + M∇) = 6.
+    assert_eq!(l.per_node, vec![3 * t, 6 * t, 3 * t]);
+    // Per directed link: M + M∇ = 3 each way on both edges; nothing on
+    // the non-edge 0 <-> 2.
+    assert_eq!(l.link_scalars(0, 1), 3 * t);
+    assert_eq!(l.link_scalars(1, 0), 3 * t);
+    assert_eq!(l.link_scalars(1, 2), 3 * t);
+    assert_eq!(l.link_scalars(2, 1), 3 * t);
+    assert_eq!(l.link_scalars(0, 2), 0);
+    assert_eq!(l.link_scalars(2, 0), 0);
+}
+
+/// Every frame erased (`drop_prob = 1`): estimate broadcasts stay
+/// billed (the transmitter spent the energy), but no request ever
+/// arrives, so no gradient reply is ever computed, transmitted or
+/// billed. The legacy transmitter-only meter billed those replies
+/// anyway — the ledger's bill is strictly lower and the suppressed
+/// counter reconciles the two exactly.
+#[test]
+fn fully_lossy_line_bill_matches_hand_computation() {
+    let imp = LinkImpairments {
+        drop_prob: 1.0,
+        gating: Gating::Always,
+        quant_step: 0.0,
+    };
+    let res = run_line(Some(imp));
+    let t = ITERS as u64;
+    let l = &res.ledger;
+    // Only the 4 x M = 8 estimate scalars per iteration are billed.
+    assert_eq!(l.scalars, 8 * t);
+    assert_eq!(l.purpose_scalars(Purpose::Estimate), 8 * t);
+    assert_eq!(l.purpose_scalars(Purpose::Gradient), 0);
+    // The 4 x M∇ = 4 dead replies per iteration are tracked, and the
+    // legacy bill is reproduced exactly: strictly-lower billed bits is
+    // the whole point of the directional ledger.
+    assert_eq!(l.suppressed_scalars, 4 * t);
+    assert_eq!(l.legacy_scalars(), 12 * t);
+    assert!(l.scalars < l.legacy_scalars());
+    assert_eq!(l.per_node, vec![2 * t, 4 * t, 2 * t]);
+    assert_eq!(l.link_scalars(0, 1), 2 * t);
+    assert_eq!(l.link_scalars(1, 0), 2 * t);
+}
+
+/// Everybody gated (`prob:0`): nothing transmits, nothing is billed —
+/// and nothing is "suppressed" either, because the legacy mute-mask
+/// meter got this case right already.
+#[test]
+fn fully_gated_line_bills_nothing() {
+    let imp = LinkImpairments {
+        drop_prob: 0.0,
+        gating: Gating::Probabilistic(0.0),
+        quant_step: 0.0,
+    };
+    let res = run_line(Some(imp));
+    assert_eq!(res.ledger.scalars, 0);
+    assert_eq!(res.ledger.bits(), 0);
+    assert_eq!(res.ledger.suppressed_scalars, 0);
+    assert_eq!(res.ledger.per_node, vec![0, 0, 0]);
+}
+
+/// Quantized payloads on the line: the same scalar counts, billed at
+/// the Δ-grid width instead of 64 bits.
+#[test]
+fn quantized_line_bill_uses_grid_width() {
+    let imp = LinkImpairments {
+        drop_prob: 0.0,
+        gating: Gating::Always,
+        quant_step: 1e-3,
+    };
+    let res = run_line(Some(imp));
+    let t = ITERS as u64;
+    // 14 bits for the 1e-3 grid over the ±8 fixed-point range.
+    let width = payload_bits(1e-3) as u64;
+    assert_eq!(width, 14);
+    assert_eq!(res.ledger.scalars, 12 * t);
+    assert_eq!(res.ledger.bits(), 12 * t * width);
+}
+
+/// The probabilistic-gating bill sits strictly below the legacy bill
+/// (a reply needs *both* ends on the air), and both bills reconcile
+/// through the suppressed counter — the previously inexact gating
+/// savings of DESIGN.md §4's old caveat, now exact.
+#[test]
+fn gated_line_savings_are_exact_and_strictly_larger_than_legacy() {
+    let imp = LinkImpairments {
+        drop_prob: 0.0,
+        gating: Gating::Probabilistic(0.5),
+        quant_step: 0.0,
+    };
+    let res = run_line(Some(imp));
+    let l = &res.ledger;
+    assert!(l.suppressed_scalars > 0, "no dead replies over {ITERS} iterations?");
+    assert!(l.scalars < l.legacy_scalars());
+    // Conservation still holds under gating.
+    assert_eq!(l.per_node.iter().sum::<u64>(), l.scalars);
+    assert_eq!(l.per_link.iter().sum::<u64>(), l.scalars);
+    assert_eq!(l.per_purpose.iter().sum::<u64>(), l.scalars);
+}

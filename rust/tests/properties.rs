@@ -77,13 +77,37 @@ fn prop_comm_meter_matches_closed_form() {
             let mut comm = CommMeter::new(case.n);
             drive(alg.as_mut(), case, iters, &mut comm);
             let expect = alg.expected_scalars_per_iter() * iters as f64;
-            if (comm.scalars as f64 - expect).abs() > 1e-9 {
+            if (comm.scalars() as f64 - expect).abs() > 1e-9 {
                 return Err(format!(
                     "{}: metered {} vs expected {}",
                     alg.name(),
-                    comm.scalars,
+                    comm.scalars(),
                     expect
                 ));
+            }
+            // Ledger conservation: the per-node, per-link and
+            // per-purpose breakdowns each sum back to the total, and
+            // billed bits are scalars x width (DESIGN.md §9).
+            let ledger = comm.ledger();
+            if ledger.per_node.iter().sum::<u64>() != ledger.scalars
+                || ledger.per_link.iter().sum::<u64>() != ledger.scalars
+                || ledger.per_purpose.iter().sum::<u64>() != ledger.scalars
+                || ledger.bits() != ledger.scalars * ledger.bits_per_scalar as u64
+            {
+                return Err(format!("{}: ledger breakdowns do not cross-foot", alg.name()));
+            }
+            // Billing stays on real directed edges.
+            for src in 0..case.n {
+                for dst in 0..case.n {
+                    if ledger.link_scalars(src, dst) > 0
+                        && !net.graph.neighbors(src).contains(&dst)
+                    {
+                        return Err(format!(
+                            "{}: billed off-graph link {src}->{dst}",
+                            alg.name()
+                        ));
+                    }
+                }
             }
         }
         Ok(())

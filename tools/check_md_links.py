@@ -14,6 +14,10 @@ Standalone CI face of rust/tests/docs_integrity.rs — four rules:
 4. docs/HANDBOOK.md (the operator's guide) must mention every CLI
    subcommand declared in rust/src/main.rs — including hidden ones —
    so the handbook cannot silently fall behind the binary.
+5. DESIGN.md must carry the §9 directional-ledger chapter and the
+   ledger implementation (rust/src/energy/comm.rs) must cite it: the
+   billing rules documented there define the communication numbers of
+   every result file.
 
 The scan covers the repo root *and* docs/ recursively (everything but
 SKIP_DIRS). Exit status 0 = clean, 1 = at least one dangling reference
@@ -140,6 +144,24 @@ def check_handbook_cli_coverage(errors):
             )
 
 
+def check_ledger_chapter(errors):
+    """Rule 5: the §9 ledger chapter and its in-code citation pair up."""
+    design = ROOT / "DESIGN.md"
+    if design.exists():
+        headings = [
+            line
+            for line in design.read_text(encoding="utf-8").splitlines()
+            if line.startswith("#") and "§9" in line
+        ]
+        if not headings:
+            errors.append("DESIGN.md: the §9 ledger chapter is missing")
+    comm = ROOT / "rust" / "src" / "energy" / "comm.rs"
+    if not comm.exists():
+        errors.append("rust/src/energy/comm.rs missing (the directional ledger)")
+    elif "DESIGN.md §9" not in comm.read_text(encoding="utf-8"):
+        errors.append("rust/src/energy/comm.rs does not cite DESIGN.md §9")
+
+
 def main():
     errors = []
     # Guard: the walk must include docs/ (a SKIP_DIRS regression would
@@ -149,6 +171,7 @@ def main():
     check_md_links(errors)
     check_design_citations(errors)
     check_handbook_cli_coverage(errors)
+    check_ledger_chapter(errors)
     if errors:
         print("documentation integrity check FAILED:")
         for e in errors:
