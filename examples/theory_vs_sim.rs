@@ -9,11 +9,10 @@
 use dcd_lms::algorithms::{Dcd, NetworkConfig};
 use dcd_lms::coordinator::MonteCarlo;
 use dcd_lms::datamodel::DataModel;
-use dcd_lms::linalg::Mat;
 use dcd_lms::metrics::to_db;
 use dcd_lms::rng::Pcg64;
 use dcd_lms::theory::{MeanModel, MsdModel, TheorySetup};
-use dcd_lms::topology::{combination_matrix, Graph, Rule};
+use dcd_lms::topology::{combination_matrix, Combiner, Graph, Rule};
 
 fn main() {
     let (n, l, m, mg) = (10, 5, 3, 1);
@@ -30,7 +29,7 @@ fn main() {
         dim: l,
         m,
         m_grad: mg,
-        c: c.clone(),
+        c: c.to_dense(),
         mu: vec![mu; n],
         sigma_u2: model.sigma_u2.clone(),
         sigma_v2: model.sigma_v2.clone(),
@@ -43,7 +42,7 @@ fn main() {
 
     let theory = MsdModel::new(setup).trajectory(&model.wo, iters);
 
-    let net = NetworkConfig { graph, c, a: Mat::eye(n), mu: vec![mu; n], dim: l };
+    let net = NetworkConfig { graph, c, a: Combiner::eye(n), mu: vec![mu; n], dim: l };
     let mc = MonteCarlo { runs: 20, iters, seed: 1, record_every: 1, threads: 0 };
     let sim = mc.run_rust(&model, || Box::new(Dcd::new(net.clone(), m, mg)));
 

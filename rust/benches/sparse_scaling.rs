@@ -1,0 +1,224 @@
+//! Bench `sparse_scaling`: dense vs CSR on the simulator's two
+//! per-iteration hot paths (DESIGN.md §10) —
+//!
+//! * the impairment **rebuild**: historical dense path = full N×N
+//!   copies of A and C plus the per-edge erasure pass (O(N²) no matter
+//!   how sparse the graph), CSR path = `ImpairmentState::begin_iteration`
+//!   (one O(E) value memcpy + in-place edits);
+//! * the **combine step**: weighted neighbour average of the N×L
+//!   estimate block, dense column scan (O(N²·L)) vs CSR row iteration
+//!   (O(E·L)).
+//!
+//! Emits `BENCH_sparse.json` over N ∈ {10², 10³, 10⁴, 10⁵} (grid
+//! lattices, so E grows linearly with N). The dense baselines stop at
+//! N = 10³: at N = 10⁴ a single dense combiner is already 800 MB.
+//! CI gates on rebuild_dense / rebuild_csr ≥ 5 at N = 10³ (ci.yml).
+
+use dcd_lms::algorithms::{CommMeter, Dcd, NetworkConfig};
+use dcd_lms::bench_support::{bench, fast_mode, write_bench_json, BenchRecord, Table};
+use dcd_lms::coordinator::impairments::{Gating, ImpairmentState, LinkImpairments};
+use dcd_lms::linalg::Mat;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::topology::{combination_matrix, Combiner, Graph, Rule};
+use std::time::Duration;
+
+/// Largest N for which the dense baselines are materialised.
+const DENSE_MAX_N: usize = 1_000;
+
+/// Stand-in for the pre-CSR rebuild: restore both combiners with full
+/// N×N copies, then walk the graph edges erasing dropped links — the
+/// same per-edge draw order as the CSR path, but the copy is O(N²).
+fn dense_rebuild(
+    a: &mut Mat,
+    c: &mut Mat,
+    a0: &Mat,
+    c0: &Mat,
+    graph: &Graph,
+    drop_prob: f64,
+    rng: &mut Pcg64,
+) {
+    a.data_mut().copy_from_slice(a0.data());
+    c.data_mut().copy_from_slice(c0.data());
+    for k in 0..graph.n() {
+        for &lnb in graph.neighbors(k) {
+            if rng.next_bool(drop_prob) {
+                let am = a[(lnb, k)];
+                a[(lnb, k)] = 0.0;
+                a[(k, k)] += am;
+                let cm = c[(lnb, k)];
+                c[(lnb, k)] = 0.0;
+                c[(k, k)] += cm;
+            }
+        }
+    }
+}
+
+/// Dense combine step: ψ ← Σ_l A[l,k]·w_l with a full column scan.
+fn dense_combine(a: &Mat, w: &[f64], out: &mut [f64], l: usize) {
+    let n = a.rows();
+    for k in 0..n {
+        let dst = &mut out[k * l..(k + 1) * l];
+        dst.fill(0.0);
+        for src in 0..n {
+            let wgt = a[(src, k)];
+            if wgt != 0.0 {
+                let s = &w[src * l..(src + 1) * l];
+                for (d, sv) in dst.iter_mut().zip(s) {
+                    *d += wgt * sv;
+                }
+            }
+        }
+    }
+}
+
+/// CSR combine step: the neighbour iteration every algorithm now uses.
+fn csr_combine(a: &Combiner, w: &[f64], out: &mut [f64], l: usize) {
+    for k in 0..a.n() {
+        let (cols, vals) = a.row(k);
+        let dst = &mut out[k * l..(k + 1) * l];
+        dst.fill(0.0);
+        for (&src, &wgt) in cols.iter().zip(vals) {
+            let s = &w[src * l..(src + 1) * l];
+            for (d, sv) in dst.iter_mut().zip(s) {
+                *d += wgt * sv;
+            }
+        }
+    }
+}
+
+fn main() {
+    let fast = fast_mode();
+    let budget = Duration::from_millis(if fast { 60 } else { 300 });
+    let dim = 4usize;
+    let imp = LinkImpairments {
+        drop_prob: 0.05,
+        gating: Gating::Always,
+        quant_step: 0.0,
+    };
+
+    println!("== dense vs CSR scaling (grid lattices, drop_prob 0.05) ==\n");
+    let mut table = Table::new(&["operation", "N", "E (directed)", "median", "ns/edge"]);
+    let mut records = Vec::new();
+
+    for &(rows, cols) in &[(10usize, 10usize), (25, 40), (100, 100), (320, 320)] {
+        let n = rows * cols;
+        if fast && n > DENSE_MAX_N {
+            continue;
+        }
+        let graph = Graph::grid(rows, cols);
+        let e = 2 * graph.edge_count(); // directed edges
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig {
+            graph,
+            c,
+            a,
+            mu: vec![1e-2; n],
+            dim,
+        };
+
+        // --- rebuild: CSR fast path (the production coordinator loop) --
+        let mut alg = Dcd::new(net.clone(), 2, 1);
+        let mut comm = CommMeter::new(n);
+        let mut state = ImpairmentState::new(&net, 2025, 1);
+        let stats = bench("rebuild_csr", 3, budget, || {
+            state.begin_iteration(&imp, &mut alg, &mut comm);
+        });
+        table.row(&[
+            "rebuild (CSR, begin_iteration)".into(),
+            format!("{n}"),
+            format!("{e}"),
+            format!("{:?}", stats.median),
+            format!("{:.1}", stats.per_unit(e) * 1e9),
+        ]);
+        records.push(BenchRecord::from_stats(&stats, "rebuild_csr", &format!("N={n}")));
+
+        // --- combine step: CSR neighbour iteration ---------------------
+        let mut w = vec![0.0f64; n * dim];
+        let mut rng = Pcg64::new(7, 0);
+        for x in w.iter_mut() {
+            *x = rng.next_gaussian();
+        }
+        let mut out = vec![0.0f64; n * dim];
+        let a_sparse = &net.a;
+        let stats = bench("combine_csr", 3, budget, || {
+            csr_combine(a_sparse, &w, &mut out, dim);
+            std::hint::black_box(&out);
+        });
+        table.row(&[
+            "combine (CSR rows)".into(),
+            format!("{n}"),
+            format!("{e}"),
+            format!("{:?}", stats.median),
+            format!("{:.1}", stats.per_unit(e) * 1e9),
+        ]);
+        records.push(BenchRecord::from_stats(&stats, "combine_csr", &format!("N={n}")));
+
+        // --- dense baselines (capped: O(N²) memory) --------------------
+        if n > DENSE_MAX_N {
+            println!(
+                "(dense baselines skipped at N={n}: a dense combiner would be \
+                 {:.1} MB)",
+                (n * n * 8) as f64 / 1e6
+            );
+            continue;
+        }
+        let a_dense0 = net.a.to_dense();
+        let c_dense0 = net.c.to_dense();
+        let mut a_dense = a_dense0.clone();
+        let mut c_dense = c_dense0.clone();
+        let mut rng = Pcg64::new(2025, 1);
+        let graph = &net.graph;
+        let stats = bench("rebuild_dense", 3, budget, || {
+            dense_rebuild(
+                &mut a_dense,
+                &mut c_dense,
+                &a_dense0,
+                &c_dense0,
+                graph,
+                imp.drop_prob,
+                &mut rng,
+            );
+            std::hint::black_box(&a_dense);
+        });
+        table.row(&[
+            "rebuild (dense copies)".into(),
+            format!("{n}"),
+            format!("{e}"),
+            format!("{:?}", stats.median),
+            format!("{:.1}", stats.per_unit(e) * 1e9),
+        ]);
+        records.push(BenchRecord::from_stats(&stats, "rebuild_dense", &format!("N={n}")));
+
+        let stats = bench("combine_dense", 3, budget, || {
+            dense_combine(&a_dense0, &w, &mut out, dim);
+            std::hint::black_box(&out);
+        });
+        table.row(&[
+            "combine (dense column scan)".into(),
+            format!("{n}"),
+            format!("{e}"),
+            format!("{:?}", stats.median),
+            format!("{:.1}", stats.per_unit(e) * 1e9),
+        ]);
+        records.push(BenchRecord::from_stats(&stats, "combine_dense", &format!("N={n}")));
+    }
+    table.print();
+
+    match write_bench_json(
+        "BENCH_sparse.json",
+        "dense vs CSR hot paths on grid lattices; rebuild_dense/combine_dense = \
+         pre-CSR O(N²) baselines (capped at N=1000), rebuild_csr/combine_csr = \
+         O(E) production paths",
+        &records,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_sparse.json ({} records)", records.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_sparse.json: {e}"),
+    }
+
+    println!(
+        "\nnote: ns/edge is flat for the CSR rows (near-linear in E) and grows \
+         ∝ N for the dense baselines — the gap that lets mega-grid (N = 102400) \
+         run at all."
+    );
+}

@@ -18,7 +18,7 @@ use std::time::Duration;
 
 fn setup(n: usize, l: usize, m: usize, mg: usize) -> (TheorySetup, DataModel) {
     let graph = if n == 10 { Graph::paper_ten_node() } else { Graph::ring(n, 2) };
-    let c = combination_matrix(&graph, Rule::Metropolis);
+    let c = combination_matrix(&graph, Rule::Metropolis).to_dense();
     let mut rng = Pcg64::new(3, 0);
     let model = DataModel::paper(n, l, 0.8, 1.2, 1e-3, &mut rng);
     (

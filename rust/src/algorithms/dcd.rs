@@ -66,19 +66,8 @@ impl Dcd {
         assert!(m <= cfg.dim && m_grad <= cfg.dim, "M, M_grad must be <= L");
         let n = cfg.n_nodes();
         let l = cfg.dim;
-        // C == I disables gradient exchange entirely.
-        let grad_sharing = {
-            let mut is_identity = true;
-            for a in 0..n {
-                for b in 0..n {
-                    let want = if a == b { 1.0 } else { 0.0 };
-                    if (cfg.c[(a, b)] - want).abs() > 1e-12 {
-                        is_identity = false;
-                    }
-                }
-            }
-            !is_identity
-        };
+        // C == I disables gradient exchange entirely (O(nnz) check).
+        let grad_sharing = !cfg.c.is_identity();
         Self {
             cfg,
             m,
@@ -396,7 +385,7 @@ mod tests {
         let l = 3;
         let graph = Graph::ring(n, 1);
         let c = combination_matrix(&graph, Rule::Metropolis);
-        let a = crate::linalg::Mat::eye(n);
+        let a = crate::topology::Combiner::eye(n);
         let cfg = NetworkConfig { graph, c, a, mu: vec![0.05; n], dim: l };
         let mut dcd = Dcd::new(cfg.clone(), l, l);
         let mut lms = super::super::DiffusionLms::new(cfg);
@@ -496,7 +485,7 @@ mod tests {
     #[test]
     fn identity_c_skips_gradient_traffic() {
         let mut c = cfg(4, 6, 0.01);
-        c.c = crate::linalg::Mat::eye(4);
+        c.c = crate::topology::Combiner::eye(4);
         let mut alg = Dcd::new(c, 2, 3);
         let mut rng = Pcg64::new(7, 0);
         let mut comm = CommMeter::new(4);

@@ -23,17 +23,8 @@ impl DiffusionLms {
     pub fn new(cfg: NetworkConfig) -> Self {
         let n = cfg.n_nodes();
         let l = cfg.dim;
-        let mut is_identity = true;
-        for a in 0..n {
-            for b in 0..n {
-                let want = if a == b { 1.0 } else { 0.0 };
-                if (cfg.c[(a, b)] - want).abs() > 1e-12 {
-                    is_identity = false;
-                }
-            }
-        }
         Self {
-            grad_sharing: !is_identity,
+            grad_sharing: !cfg.c.is_identity(),
             cfg,
             w: vec![0.0; n * l],
             psi: vec![0.0; n * l],
@@ -214,7 +205,7 @@ mod tests {
     #[test]
     fn identity_c_halves_traffic() {
         let mut c = cfg(5, 7, 0.01);
-        c.c = crate::linalg::Mat::eye(5);
+        c.c = crate::topology::Combiner::eye(5);
         let mut alg = DiffusionLms::new(c);
         let mut comm = CommMeter::new(5);
         let mut rng = Pcg64::new(1, 1);

@@ -182,7 +182,7 @@ mod tests {
 
     fn cfg(n: usize, l: usize, mu: f64) -> NetworkConfig {
         let graph = Graph::ring(n, 2);
-        let c = crate::linalg::Mat::eye(n);
+        let c = crate::topology::Combiner::eye(n);
         let a = combination_matrix(&graph, Rule::Metropolis);
         NetworkConfig { graph, c, a, mu: vec![mu; n], dim: l }
     }

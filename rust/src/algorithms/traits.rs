@@ -7,9 +7,8 @@
 //! energy in this system — and is re-exported here because every
 //! algorithm step reports its traffic to it.
 
-use crate::linalg::Mat;
 use crate::rng::Pcg64;
-use crate::topology::Graph;
+use crate::topology::{Combiner, Graph};
 
 pub use crate::energy::comm::{CommLedger, CommMeter, Purpose};
 
@@ -18,10 +17,11 @@ pub use crate::energy::comm::{CommLedger, CommMeter, Purpose};
 pub struct NetworkConfig {
     pub graph: Graph,
     /// Right-stochastic adapt combiner; entry `[l, k]` = c_{lk}. Support
-    /// must match the graph (plus the diagonal).
-    pub c: Mat,
+    /// must match the graph (plus the diagonal). Stored sparse (CSR,
+    /// DESIGN.md §10) — O(E), not O(N²).
+    pub c: Combiner,
     /// Left-stochastic combine matrix; entry `[l, k]` = a_{lk}.
-    pub a: Mat,
+    pub a: Combiner,
     /// Per-node step sizes μ_k.
     pub mu: Vec<f64>,
     /// Parameter dimension L.
@@ -44,14 +44,13 @@ impl NetworkConfig {
         if self.mu.len() != n {
             return Err(format!("mu must have {n} entries"));
         }
-        for k in 0..n {
-            let col: f64 = (0..n).map(|l| self.a[(l, k)]).sum();
+        // O(nnz) stochasticity checks via the CSR row/column sums.
+        for (k, col) in self.a.col_sums().into_iter().enumerate() {
             if (col - 1.0).abs() > 1e-9 {
                 return Err(format!("A column {k} sums to {col}, not 1"));
             }
         }
-        for l in 0..n {
-            let row: f64 = self.c.row(l).iter().sum();
+        for (l, row) in self.c.row_sums().into_iter().enumerate() {
             if (row - 1.0).abs() > 1e-9 {
                 return Err(format!("C row {l} sums to {row}, not 1"));
             }
@@ -61,11 +60,11 @@ impl NetworkConfig {
 
     /// f32 copies in the artifact layout (for the xla engine).
     pub fn c_f32(&self) -> Vec<f32> {
-        self.c.data().iter().map(|&x| x as f32).collect()
+        self.c.to_dense().data().iter().map(|&x| x as f32).collect()
     }
 
     pub fn a_f32(&self) -> Vec<f32> {
-        self.a.data().iter().map(|&x| x as f32).collect()
+        self.a.to_dense().data().iter().map(|&x| x as f32).collect()
     }
 
     pub fn mu_f32(&self) -> Vec<f32> {
@@ -158,7 +157,7 @@ mod tests {
     #[test]
     fn validate_rejects_bad_sums() {
         let mut cfg = tiny_config();
-        cfg.a = Mat::eye(4).scale(0.5);
+        cfg.a = Combiner::from_dense(&crate::linalg::Mat::eye(4).scale(0.5));
         assert!(cfg.validate().is_err());
         let mut cfg = tiny_config();
         cfg.mu = vec![0.1; 3];

@@ -38,8 +38,9 @@
 //! bit-identical for any worker-thread count.
 
 use crate::algorithms::{Algorithm, CommMeter, NetworkConfig};
-use crate::linalg::Mat;
+use crate::energy::comm::LinkOutcomes;
 use crate::rng::Pcg64;
+use crate::topology::Combiner;
 
 /// Salt XOR-ed into the master seed for the impairment RNG stream, so
 /// link events are decorrelated from (and do not consume) the data RNG.
@@ -162,13 +163,29 @@ impl LinkImpairments {
     /// keep probability, the complement moved to the receiver's self
     /// weight. These are the matrices the impaired-link theory engine
     /// anchors on (DESIGN.md §7). `None` under event-triggered gating.
-    pub fn expected_combiners(&self, net: &NetworkConfig) -> Option<(Mat, Mat)> {
+    pub fn expected_combiners(&self, net: &NetworkConfig) -> Option<(Combiner, Combiner)> {
         let pa = self.combine_keep_prob()?;
         let pc = self.adapt_keep_prob()?;
         Some((
             reallocate_expected(&net.a, pa),
             reallocate_expected(&net.c, pc),
         ))
+    }
+
+    /// [`Self::expected_combiners`] into caller-owned buffers: no
+    /// allocation once `a_out`/`c_out` have the right structure
+    /// (alloc-free discipline, `tests/alloc_free.rs`).
+    pub fn expected_combiners_into(
+        &self,
+        net: &NetworkConfig,
+        a_out: &mut Combiner,
+        c_out: &mut Combiner,
+    ) -> Option<()> {
+        let pa = self.combine_keep_prob()?;
+        let pc = self.adapt_keep_prob()?;
+        reallocate_expected_into(&net.a, pa, a_out);
+        reallocate_expected_into(&net.c, pc, c_out);
+        Some(())
     }
 
     /// Range checks for every knob.
@@ -214,20 +231,33 @@ impl Default for LinkImpairments {
 /// of that rule in expectation: shared by
 /// [`LinkImpairments::expected_combiners`] and the theory engine's
 /// expected-combiner construction (`theory/linkstate.rs`).
-pub(crate) fn reallocate_expected(m: &Mat, keep: f64) -> Mat {
-    let n = m.cols();
+pub(crate) fn reallocate_expected(m: &Combiner, keep: f64) -> Combiner {
     let mut out = m.clone();
-    for k in 0..n {
-        for l in 0..n {
-            let v = m[(l, k)];
-            if l != k && v != 0.0 {
+    reallocate_expected_into(m, keep, &mut out);
+    out
+}
+
+/// [`reallocate_expected`] into a caller-owned combiner, reusing its
+/// buffers. O(nnz): the CSR rows *are* the dense columns, walked in the
+/// same ascending-sender order as the historical dense loop, so the
+/// diagonal accumulates in the identical floating-point order.
+pub(crate) fn reallocate_expected_into(m: &Combiner, keep: f64, out: &mut Combiner) {
+    out.clone_from(m);
+    for k in 0..m.n() {
+        let di = m.diag_idx(k);
+        let vals = out.vals_mut();
+        for idx in m.row_span(k) {
+            if idx == di {
+                continue;
+            }
+            let v = m.vals()[idx];
+            if v != 0.0 {
                 let moved = v * (1.0 - keep);
-                out[(l, k)] -= moved;
-                out[(k, k)] += moved;
+                vals[idx] -= moved;
+                vals[di] += moved;
             }
         }
     }
-    out
 }
 
 /// Snap every entry of `w` to the uniform grid of step `step`
@@ -250,20 +280,21 @@ pub fn quantize_in_place(w: &mut [f64], step: f64) {
 /// before every [`Algorithm::step`], [`ImpairmentState::restore`] once
 /// the run finishes.
 pub struct ImpairmentState {
-    /// Pristine combine matrix A (the per-iteration effective matrices
-    /// are rebuilt from these copies, allocation-free).
-    a0: Mat,
-    /// Pristine adapt matrix C.
-    c0: Mat,
+    /// Pristine CSR values of the combine matrix A (same layout as the
+    /// network's combiner — the per-iteration effective matrices are
+    /// rebuilt by one O(E) memcpy from these, allocation-free).
+    a0: Vec<f64>,
+    /// Pristine CSR values of the adapt matrix C.
+    c0: Vec<f64>,
     /// Last-broadcast reference states w̃ (N × L, event gating).
     last_broadcast: Vec<f64>,
     /// Per-node silence decisions for the current iteration.
     silent: Vec<bool>,
-    /// Dense request-delivery table `src * n + dst`: did src's estimate
+    /// Edge-indexed request-delivery outcomes: did src's estimate
     /// broadcast reach dst this iteration? The single source of truth
     /// shared by the effective-matrix rebuild *and* the ledger's
     /// solicited-reply billing (DESIGN.md §9).
-    delivered: Vec<bool>,
+    delivered: LinkOutcomes,
     rng: Pcg64,
     dim: usize,
 }
@@ -273,11 +304,11 @@ impl ImpairmentState {
     /// stream for one run (`stream` is the Monte-Carlo run stream).
     pub fn new(net: &NetworkConfig, seed: u64, stream: u64) -> Self {
         Self {
-            a0: net.a.clone(),
-            c0: net.c.clone(),
+            a0: net.a.vals().to_vec(),
+            c0: net.c.vals().to_vec(),
             last_broadcast: vec![0.0; net.n_nodes() * net.dim],
             silent: vec![false; net.n_nodes()],
-            delivered: vec![true; net.n_nodes() * net.n_nodes()],
+            delivered: LinkOutcomes::for_graph(&net.graph),
             rng: Pcg64::new(seed ^ LINK_SEED_SALT, stream),
             dim: net.dim,
         }
@@ -289,9 +320,9 @@ impl ImpairmentState {
         &self.silent
     }
 
-    /// The request-delivery table of the current iteration, dense
-    /// `src * n + dst` (valid after [`Self::begin_iteration`]).
-    pub fn delivered(&self) -> &[bool] {
+    /// The request-delivery outcomes of the current iteration (valid
+    /// after [`Self::begin_iteration`]).
+    pub fn delivered(&self) -> &LinkOutcomes {
         &self.delivered
     }
 
@@ -335,7 +366,8 @@ impl ImpairmentState {
             }
         }
 
-        // 2. Effective combiners: start from the pristine copies, then
+        // 2. Effective combiners: start from the pristine copies (one
+        // O(E) value memcpy — the CSR structure never changes), then
         // erase every dead directed link (l → k), re-allocating its mass
         // to the receiver's self weight — the completion rule of
         // eqs. (11)-(12) applied at matrix level. A silent node also
@@ -344,27 +376,41 @@ impl ImpairmentState {
         // self weight and it runs a pure self-LMS adapt that iteration.
         // The per-link outcomes recorded here are the same ones the
         // ledger bills against below — one draw, two consumers.
+        //
+        // The loop walks *graph* edges, not stored combiner entries:
+        // that keeps the salted-PCG64 draw order (one conditional draw
+        // per directed edge) bit-identical to the historical dense
+        // rebuild even when a combiner's support is smaller than the
+        // graph (e.g. A = I), where the erasure is then a no-op.
         let net = alg.network_mut();
-        net.a.data_mut().copy_from_slice(self.a0.data());
-        net.c.data_mut().copy_from_slice(self.c0.data());
-        self.delivered.iter_mut().for_each(|d| *d = true);
+        net.a.vals_mut().copy_from_slice(&self.a0);
+        net.c.vals_mut().copy_from_slice(&self.c0);
+        self.delivered.reset_all_true();
         let p = imp.drop_prob;
         for k in 0..n {
-            for &lnb in net.graph.neighbors(k) {
+            let a_diag = net.a.diag_idx(k);
+            let c_diag = net.c.diag_idx(k);
+            for (slot, &lnb) in net.graph.neighbors(k).iter().enumerate() {
                 let delivered = !self.silent[lnb] && !(p > 0.0 && self.rng.next_bool(p));
-                self.delivered[lnb * n + k] = delivered;
+                self.delivered.set_row_slot(k, slot, delivered);
                 if !delivered {
-                    let am = net.a[(lnb, k)];
-                    if am != 0.0 {
-                        net.a[(lnb, k)] = 0.0;
-                        net.a[(k, k)] += am;
+                    if let Some(idx) = net.a.entry_idx(k, lnb) {
+                        let am = net.a.vals()[idx];
+                        if am != 0.0 {
+                            let vals = net.a.vals_mut();
+                            vals[idx] = 0.0;
+                            vals[a_diag] += am;
+                        }
                     }
                 }
                 if !delivered || self.silent[k] {
-                    let cm = net.c[(lnb, k)];
-                    if cm != 0.0 {
-                        net.c[(lnb, k)] = 0.0;
-                        net.c[(k, k)] += cm;
+                    if let Some(idx) = net.c.entry_idx(k, lnb) {
+                        let cm = net.c.vals()[idx];
+                        if cm != 0.0 {
+                            let vals = net.c.vals_mut();
+                            vals[idx] = 0.0;
+                            vals[c_diag] += cm;
+                        }
                     }
                 }
             }
@@ -382,8 +428,8 @@ impl ImpairmentState {
     /// tables.
     pub fn restore(&self, alg: &mut dyn Algorithm, comm: &mut CommMeter) {
         let net = alg.network_mut();
-        net.a.data_mut().copy_from_slice(self.a0.data());
-        net.c.data_mut().copy_from_slice(self.c0.data());
+        net.a.vals_mut().copy_from_slice(&self.a0);
+        net.c.vals_mut().copy_from_slice(&self.c0);
         comm.clear_outcomes();
     }
 }
@@ -392,7 +438,7 @@ impl ImpairmentState {
 mod tests {
     use super::*;
     use crate::algorithms::{Dcd, NetworkConfig};
-    use crate::topology::{col_sums, combination_matrix, Graph, Rule};
+    use crate::topology::{combination_matrix, Graph, Rule};
 
     fn net(n: usize, l: usize) -> NetworkConfig {
         let graph = Graph::ring(n, 1);
@@ -470,16 +516,11 @@ mod tests {
             assert!((a[(k, k)] - 1.0).abs() < 1e-12);
         }
         // Column-stochasticity is preserved by the diagonal re-allocation.
-        for s in col_sums(a) {
+        for s in a.col_sums() {
             assert!((s - 1.0).abs() < 1e-12);
         }
         state.restore(&mut alg, &mut comm);
-        assert!((alg.network().a.data()
-            .iter()
-            .zip(cfg.a.data())
-            .map(|(x, y)| (x - y).abs())
-            .fold(0.0, f64::max))
-            < 1e-15);
+        assert_eq!(alg.network().a, cfg.a, "restore must be bit-identical");
     }
 
     #[test]
@@ -524,11 +565,12 @@ mod tests {
         let mut c_acc = crate::linalg::Mat::zeros(5, 5);
         for _ in 0..trials {
             state.begin_iteration(&imp, &mut alg, &mut comm);
-            a_acc.axpy(1.0, &alg.network().a);
-            c_acc.axpy(1.0, &alg.network().c);
+            a_acc.axpy(1.0, &alg.network().a.to_dense());
+            c_acc.axpy(1.0, &alg.network().c.to_dense());
         }
         a_acc.scale_in_place(1.0 / trials as f64);
         c_acc.scale_in_place(1.0 / trials as f64);
+        let (a_bar, c_bar) = (a_bar.to_dense(), c_bar.to_dense());
         assert!((&a_acc - &a_bar).max_abs() < 6e-3, "Ā off by {}", (&a_acc - &a_bar).max_abs());
         assert!((&c_acc - &c_bar).max_abs() < 6e-3, "C̄ off by {}", (&c_acc - &c_bar).max_abs());
         state.restore(&mut alg, &mut comm);
@@ -578,7 +620,7 @@ mod tests {
         // Every directed edge is dead in the table...
         for k in 0..4 {
             for &lnb in alg.network().graph.neighbors(k) {
-                assert!(!state.delivered()[lnb * 4 + k], "{lnb}->{k} should be erased");
+                assert!(!state.delivered().delivered(lnb, k), "{lnb}->{k} should be erased");
             }
         }
         // ... so a broadcast is billed but its solicited reply is not.

@@ -103,7 +103,7 @@ mod tests {
         let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
         let graph = Graph::ring(5, 1);
         let c = combination_matrix(&graph, Rule::Metropolis);
-        let a = crate::linalg::Mat::eye(5);
+        let a = crate::topology::Combiner::eye(5);
         let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
         let mut alg = Dcd::new(net, 2, 1);
         let sched = RoundScheduler::new(&model);
@@ -271,7 +271,7 @@ mod tests {
         let model = DataModel::paper(4, 3, 1.0, 1.0, 1e-3, &mut rng);
         let graph = Graph::ring(4, 1);
         let c = combination_matrix(&graph, Rule::Metropolis);
-        let a = crate::linalg::Mat::eye(4);
+        let a = crate::topology::Combiner::eye(4);
         let net = NetworkConfig { graph, c, a, mu: vec![0.03; 4], dim: 3 };
         let sched = RoundScheduler::new(&model);
         let mut a1 = Dcd::new(net.clone(), 2, 1);

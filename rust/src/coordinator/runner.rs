@@ -444,7 +444,7 @@ mod tests {
         let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
         let graph = Graph::ring(5, 1);
         let c = combination_matrix(&graph, Rule::Metropolis);
-        let a = crate::linalg::Mat::eye(5);
+        let a = crate::topology::Combiner::eye(5);
         (model, NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 })
     }
 

@@ -43,6 +43,226 @@
 //! no outcome table is installed and every send is billed, which is
 //! exactly the legacy accounting (the bit-identity argument of §9).
 
+use std::collections::BTreeMap;
+
+use crate::topology::Graph;
+
+/// Node count above which the per-link scalar table switches from a
+/// dense `N²` array to a sorted sparse map. Every historical preset
+/// (≤ 80 nodes) stays on the dense path, so its counters, merge order
+/// and serialized form are untouched; the large-N `mega-grid` scenarios
+/// (N ≥ 10⁵, where a dense table would be 10¹⁰ entries) get O(edges
+/// actually billed) storage instead.
+pub const DENSE_LINK_LIMIT: usize = 1024;
+
+/// Billed scalars per directed link, keyed by the dense index
+/// `src * n + dst`. Dense below [`DENSE_LINK_LIMIT`] nodes, sparse
+/// (sorted map) above it; the two variants are logically identical —
+/// iteration and equality only ever observe nonzero entries in
+/// ascending index order.
+#[derive(Debug, Clone)]
+pub enum LinkCounts {
+    Dense { n: usize, counts: Vec<u64> },
+    Sparse { n: usize, counts: BTreeMap<u64, u64> },
+}
+
+impl LinkCounts {
+    /// An all-zero table for an `n`-node network.
+    pub fn for_nodes(n: usize) -> Self {
+        if n <= DENSE_LINK_LIMIT {
+            LinkCounts::Dense { n, counts: vec![0; n * n] }
+        } else {
+            LinkCounts::Sparse { n, counts: BTreeMap::new() }
+        }
+    }
+
+    /// Number of nodes the table was sized for.
+    pub fn n_nodes(&self) -> usize {
+        match self {
+            LinkCounts::Dense { n, .. } | LinkCounts::Sparse { n, .. } => *n,
+        }
+    }
+
+    /// Count at dense index `idx` (= `src * n + dst`).
+    pub fn get(&self, idx: usize) -> u64 {
+        match self {
+            LinkCounts::Dense { counts, .. } => counts[idx],
+            LinkCounts::Sparse { counts, .. } => counts.get(&(idx as u64)).copied().unwrap_or(0),
+        }
+    }
+
+    /// Add `count` scalars at dense index `idx`.
+    #[inline]
+    pub fn add(&mut self, idx: usize, count: u64) {
+        match self {
+            LinkCounts::Dense { counts, .. } => counts[idx] += count,
+            LinkCounts::Sparse { counts, .. } => *counts.entry(idx as u64).or_insert(0) += count,
+        }
+    }
+
+    /// Overwrite the count at dense index `idx` (deserialization).
+    pub fn set(&mut self, idx: usize, count: u64) {
+        match self {
+            LinkCounts::Dense { counts, .. } => counts[idx] = count,
+            LinkCounts::Sparse { counts, .. } => {
+                if count == 0 {
+                    counts.remove(&(idx as u64));
+                } else {
+                    counts.insert(idx as u64, count);
+                }
+            }
+        }
+    }
+
+    /// Stored counts (zeros included on the dense path) — supports the
+    /// historical `.iter().sum::<u64>()` total.
+    pub fn iter(&self) -> Box<dyn Iterator<Item = u64> + '_> {
+        match self {
+            LinkCounts::Dense { counts, .. } => Box::new(counts.iter().copied()),
+            LinkCounts::Sparse { counts, .. } => Box::new(counts.values().copied()),
+        }
+    }
+
+    /// Nonzero `(dense index, count)` pairs in ascending index order —
+    /// the canonical form used for serialization, CSV emission, merging
+    /// and equality (identical for both variants).
+    pub fn pairs(&self) -> Box<dyn Iterator<Item = (usize, u64)> + '_> {
+        match self {
+            LinkCounts::Dense { counts, .. } => Box::new(
+                counts
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(i, &c)| (i, c)),
+            ),
+            LinkCounts::Sparse { counts, .. } => {
+                Box::new(counts.iter().map(|(&i, &c)| (i as usize, c)))
+            }
+        }
+    }
+
+    /// Accumulate another table (integer adds — order-independent).
+    pub fn merge(&mut self, other: &LinkCounts) {
+        for (idx, count) in other.pairs() {
+            self.add(idx, count);
+        }
+    }
+}
+
+impl PartialEq for LinkCounts {
+    /// Logical equality: same network size, same nonzero entries —
+    /// a dense and a sparse table with equal content compare equal.
+    fn eq(&self, other: &Self) -> bool {
+        self.n_nodes() == other.n_nodes() && self.pairs().eq(other.pairs())
+    }
+}
+
+/// Per-iteration request-delivery outcomes, stored edge-indexed
+/// (receiver-major CSR over the graph, mirroring
+/// [`Combiner`](crate::topology::Combiner)): row `dst` lists the sender
+/// ids whose broadcasts can reach `dst`, each with a delivered flag.
+/// O(E) instead of the dense `N²` bool table, which is what lets the
+/// impairment layer run at N = 10⁵. Pairs that are not stored count as
+/// delivered (matching the dense table's `true` default).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LinkOutcomes {
+    n: usize,
+    /// Receiver `dst`'s senders span `indptr[dst]..indptr[dst + 1]`.
+    indptr: Vec<usize>,
+    /// Sender ids per receiver row, sorted ascending.
+    src: Vec<usize>,
+    ok: Vec<bool>,
+}
+
+impl LinkOutcomes {
+    /// All-delivered outcomes over a graph's directed edges.
+    pub fn for_graph(g: &Graph) -> Self {
+        let n = g.n();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut src = Vec::new();
+        indptr.push(0);
+        for k in 0..n {
+            src.extend_from_slice(g.neighbors(k));
+            indptr.push(src.len());
+        }
+        let ok = vec![true; src.len()];
+        Self { n, indptr, src, ok }
+    }
+
+    /// All-delivered outcomes over every (src, dst) pair — test helper
+    /// standing in for the historical dense table.
+    pub fn fully_connected(n: usize) -> Self {
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut src = Vec::with_capacity(n * n);
+        indptr.push(0);
+        for _ in 0..n {
+            src.extend(0..n);
+            indptr.push(src.len());
+        }
+        let ok = vec![true; src.len()];
+        Self { n, indptr, src, ok }
+    }
+
+    /// Whether no outcome table is installed (every send delivered).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of stored directed links.
+    pub fn n_links(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Did `src`'s broadcast reach `dst`? Unstored pairs are delivered.
+    #[inline]
+    pub fn delivered(&self, src: usize, dst: usize) -> bool {
+        let span = self.indptr[dst]..self.indptr[dst + 1];
+        match self.src[span.clone()].binary_search(&src) {
+            Ok(i) => self.ok[span.start + i],
+            Err(_) => true,
+        }
+    }
+
+    /// Set the outcome of the stored link `src → dst` (binary search;
+    /// panics if the pair is not stored).
+    pub fn set(&mut self, src: usize, dst: usize, delivered: bool) {
+        let span = self.indptr[dst]..self.indptr[dst + 1];
+        let i = self.src[span.clone()]
+            .binary_search(&src)
+            .unwrap_or_else(|_| panic!("link {src} -> {dst} not stored"));
+        self.ok[span.start + i] = delivered;
+    }
+
+    /// Set the outcome of receiver `dst`'s `slot`-th stored in-link
+    /// (slots follow the graph's sorted neighbour order) — the O(1)
+    /// write the per-edge impairment rebuild uses.
+    #[inline]
+    pub fn set_row_slot(&mut self, dst: usize, slot: usize, delivered: bool) {
+        self.ok[self.indptr[dst] + slot] = delivered;
+    }
+
+    /// Mark every stored link delivered.
+    pub fn reset_all_true(&mut self) {
+        self.ok.iter_mut().for_each(|x| *x = true);
+    }
+
+    /// Replace contents with `other`, reusing existing buffers.
+    pub fn copy_from(&mut self, other: &LinkOutcomes) {
+        self.n = other.n;
+        self.indptr.clone_from(&other.indptr);
+        self.src.clone_from(&other.src);
+        self.ok.clone_from(&other.ok);
+    }
+
+    /// Remove the table (back to the every-send-delivered default).
+    pub fn clear(&mut self) {
+        self.n = 0;
+        self.indptr.clear();
+        self.src.clear();
+        self.ok.clear();
+    }
+}
+
 /// What a metered message is *for* — the purpose axis of the ledger.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Purpose {
@@ -135,8 +355,9 @@ pub struct CommLedger {
     pub per_node: Vec<u64>,
     /// Billed scalars per purpose ([`Purpose::index`] order).
     pub per_purpose: [u64; N_PURPOSES],
-    /// Billed scalars per directed link, dense `src * n_nodes + dst`.
-    pub per_link: Vec<u64>,
+    /// Billed scalars per directed link, keyed `src * n_nodes + dst`
+    /// (dense below [`DENSE_LINK_LIMIT`] nodes, sparse above).
+    pub per_link: LinkCounts,
 }
 
 impl CommLedger {
@@ -152,7 +373,7 @@ impl CommLedger {
             bits_per_scalar: FULL_PRECISION_BITS,
             per_node: vec![0; n_nodes],
             per_purpose: [0; N_PURPOSES],
-            per_link: vec![0; n_nodes * n_nodes],
+            per_link: LinkCounts::for_nodes(n_nodes),
         }
     }
 
@@ -168,7 +389,7 @@ impl CommLedger {
 
     /// Billed scalars on the directed link `src → dst`.
     pub fn link_scalars(&self, src: usize, dst: usize) -> u64 {
-        self.per_link[src * self.n_nodes + dst]
+        self.per_link.get(src * self.n_nodes + dst)
     }
 
     /// Billed scalars for one purpose.
@@ -209,9 +430,7 @@ impl CommLedger {
         for (a, b) in self.per_purpose.iter_mut().zip(other.per_purpose.iter()) {
             *a += b;
         }
-        for (a, b) in self.per_link.iter_mut().zip(other.per_link.iter()) {
-            *a += b;
-        }
+        self.per_link.merge(&other.per_link);
     }
 }
 
@@ -229,10 +448,10 @@ pub struct CommMeter {
     ledger: CommLedger,
     /// Per-node transmit gate (`true` = silent); empty = nobody gated.
     muted: Vec<bool>,
-    /// Request-delivery table, dense `src * n + dst`: did `src`'s
-    /// estimate broadcast reach `dst` this iteration? Empty = every
-    /// request delivered (the ideal-links fast path).
-    delivered: Vec<bool>,
+    /// Request-delivery outcomes (edge-indexed): did `src`'s estimate
+    /// broadcast reach `dst` this iteration? Empty = every request
+    /// delivered (the ideal-links fast path).
+    delivered: LinkOutcomes,
 }
 
 impl CommMeter {
@@ -241,7 +460,7 @@ impl CommMeter {
         Self {
             ledger: CommLedger::empty(n_nodes),
             muted: Vec::new(),
-            delivered: Vec::new(),
+            delivered: LinkOutcomes::default(),
         }
     }
 
@@ -283,18 +502,18 @@ impl CommMeter {
     }
 
     /// Install this iteration's link outcomes: the transmit-gate mask
-    /// (`true` = silent) and, optionally, the dense request-delivery
-    /// table (`delivered[src * n + dst]` = src's broadcast reached
-    /// dst). The coordinator's impairment layer calls this before every
-    /// impaired iteration; without it every send is billed (ideal
-    /// links).
-    pub fn set_outcomes(&mut self, muted: &[bool], delivered: Option<&[bool]>) {
+    /// (`true` = silent) and, optionally, the edge-indexed
+    /// request-delivery table (did src's broadcast reach dst?). The
+    /// coordinator's impairment layer calls this before every impaired
+    /// iteration; without it every send is billed (ideal links). The
+    /// copy reuses the meter's buffers — allocation-free once shapes
+    /// stabilise.
+    pub fn set_outcomes(&mut self, muted: &[bool], delivered: Option<&LinkOutcomes>) {
         self.muted.clear();
         self.muted.extend_from_slice(muted);
-        self.delivered.clear();
-        if let Some(d) = delivered {
-            debug_assert_eq!(d.len(), self.ledger.n_nodes * self.ledger.n_nodes);
-            self.delivered.extend_from_slice(d);
+        match delivered {
+            Some(d) => self.delivered.copy_from(d),
+            None => self.delivered.clear(),
         }
     }
 
@@ -315,7 +534,7 @@ impl CommMeter {
         }
         if purpose == Purpose::Gradient
             && !self.delivered.is_empty()
-            && !self.delivered[dst * self.ledger.n_nodes + src]
+            && !self.delivered.delivered(dst, src)
         {
             // Rule 3: the soliciting broadcast dst → src never arrived,
             // so this reply was never computed or transmitted. The old
@@ -379,7 +598,7 @@ impl CommMeter {
         self.ledger.messages += 1;
         self.ledger.per_node[src] += count;
         self.ledger.per_purpose[purpose.index()] += count;
-        self.ledger.per_link[src * self.ledger.n_nodes + dst] += count;
+        self.ledger.per_link.add(src * self.ledger.n_nodes + dst, count);
     }
 
     /// Zero all counters and outcome tables (the payload width is kept:
@@ -439,9 +658,9 @@ mod tests {
         let n = 3;
         let mut m = CommMeter::new(n);
         // Request table: node 0's broadcasts never arrive anywhere.
-        let mut delivered = vec![true; n * n];
-        delivered[1] = false; // 0 -> 1
-        delivered[2] = false; // 0 -> 2
+        let mut delivered = LinkOutcomes::fully_connected(n);
+        delivered.set(0, 1, false);
+        delivered.set(0, 2, false);
         m.set_outcomes(&[false; 3], Some(&delivered));
         // 0's own broadcast: billed (transmitter pays, rule 2).
         m.send(0, 1, Purpose::Estimate, 3);
@@ -490,8 +709,8 @@ mod tests {
     #[test]
     fn solicited_face_matches_table_face() {
         let mut a = CommMeter::new(2);
-        let mut delivered = vec![true; 4];
-        delivered[2] = false; // src 1 * n 2 + dst 0: request 1 -> 0 died
+        let mut delivered = LinkOutcomes::fully_connected(2);
+        delivered.set(1, 0, false); // request 1 -> 0 died
         a.set_outcomes(&[false, false], Some(&delivered));
         a.send(0, 1, Purpose::Gradient, 4);
         let mut b = CommMeter::new(2);
@@ -518,5 +737,55 @@ mod tests {
         assert_eq!(left.suppressed_scalars, 5);
         assert_eq!(left.scalars, 5);
         assert_eq!(left.messages, 2);
+    }
+
+    #[test]
+    fn link_counts_dense_and_sparse_agree() {
+        let mut dense = LinkCounts::Dense { n: 3, counts: vec![0; 9] };
+        let mut sparse = LinkCounts::Sparse { n: 3, counts: BTreeMap::new() };
+        for (idx, c) in [(1usize, 5u64), (7, 2), (1, 3), (4, 1)] {
+            dense.add(idx, c);
+            sparse.add(idx, c);
+        }
+        assert_eq!(dense, sparse);
+        assert_eq!(dense.get(1), 8);
+        assert_eq!(sparse.get(1), 8);
+        assert_eq!(dense.iter().sum::<u64>(), sparse.iter().sum::<u64>());
+        assert_eq!(
+            dense.pairs().collect::<Vec<_>>(),
+            vec![(1, 8), (4, 1), (7, 2)]
+        );
+        assert_eq!(dense.pairs().collect::<Vec<_>>(), sparse.pairs().collect::<Vec<_>>());
+        // Cross-variant merge lands on the same totals.
+        let mut acc = LinkCounts::for_nodes(3);
+        acc.merge(&sparse);
+        acc.merge(&dense);
+        assert_eq!(acc.get(1), 16);
+        sparse.set(1, 0);
+        assert_eq!(sparse.pairs().count(), 2);
+    }
+
+    #[test]
+    fn link_outcomes_default_to_delivered() {
+        let g = Graph::ring(5, 1);
+        let mut o = LinkOutcomes::for_graph(&g);
+        assert_eq!(o.n_links(), 10);
+        assert!(o.delivered(0, 1));
+        // Non-edges (and self-pairs) read as delivered.
+        assert!(o.delivered(0, 2));
+        assert!(o.delivered(3, 3));
+        o.set(0, 1, false);
+        assert!(!o.delivered(0, 1));
+        assert!(o.delivered(1, 0));
+        // Slot addressing follows the sorted neighbour order.
+        o.reset_all_true();
+        o.set_row_slot(1, 0, false); // receiver 1, first in-neighbour = 0
+        assert!(!o.delivered(0, 1));
+        let mut copy = LinkOutcomes::default();
+        assert!(copy.is_empty());
+        copy.copy_from(&o);
+        assert_eq!(copy, o);
+        copy.clear();
+        assert!(copy.is_empty());
     }
 }

@@ -6,7 +6,6 @@ use crate::algorithms::{Dcd, NetworkConfig};
 use crate::config::Exp1Config;
 use crate::coordinator::runner::{MonteCarlo, XlaAlgo};
 use crate::datamodel::DataModel;
-use crate::linalg::Mat;
 use crate::metrics::{to_db, write_csv, write_json, Series};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
@@ -21,7 +20,7 @@ use super::Engine;
 /// scenario job — the payload a shard worker replays. The mapping is
 /// exact: `mc_parts` consumes the master stream in the same order as
 /// [`run_exp1`] (paper-10 topology draws nothing, then the data model),
-/// `combine_rule = identity` is `Mat::eye`, and all three Fig. 3
+/// `combine_rule = identity` is `Combiner::eye`, and all three Fig. 3
 /// algorithms are `Dcd` instances here, so sharded results match the
 /// in-process runner byte for byte (asserted by the CI CSV diff and
 /// `rust/tests/shard.rs`).
@@ -78,7 +77,7 @@ pub fn run_exp1(
     let graph = Graph::paper_ten_node();
     assert_eq!(graph.n(), cfg.n_nodes, "exp1 preset is the 10-node network");
     let c = combination_matrix(&graph, Rule::Metropolis);
-    let a = Mat::eye(cfg.n_nodes);
+    let a = crate::topology::Combiner::eye(cfg.n_nodes);
     let model = DataModel::paper(
         cfg.n_nodes,
         cfg.dim,
@@ -120,7 +119,7 @@ pub fn run_exp1(
             dim: cfg.dim,
             m,
             m_grad,
-            c: c.clone(),
+            c: c.to_dense(),
             mu: vec![cfg.mu; cfg.n_nodes],
             sigma_u2: model.sigma_u2.clone(),
             sigma_v2: model.sigma_v2.clone(),

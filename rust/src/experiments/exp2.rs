@@ -11,7 +11,6 @@ use crate::algorithms::{Dcd, DiffusionLms, NetworkConfig};
 use crate::config::Exp2Config;
 use crate::coordinator::runner::{MonteCarlo, XlaAlgo};
 use crate::datamodel::DataModel;
-use crate::linalg::Mat;
 use crate::metrics::{to_db, write_csv, write_json, Series};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
@@ -77,7 +76,7 @@ pub fn run_exp2(
     // unit square (the paper does not print this topology).
     let graph = Graph::random_geometric(cfg.n_nodes, EXP2_RADIUS, &mut rng);
     let c = combination_matrix(&graph, Rule::Metropolis);
-    let a = Mat::eye(cfg.n_nodes);
+    let a = crate::topology::Combiner::eye(cfg.n_nodes);
     let model = DataModel::paper(
         cfg.n_nodes,
         cfg.dim,

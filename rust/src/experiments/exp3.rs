@@ -17,10 +17,9 @@ use crate::coordinator::runner::{parallel_ordered, resolve_threads};
 use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnResult, WsnSimulation};
 use crate::datamodel::DataModel;
 use crate::energy::CommLedger;
-use crate::linalg::Mat;
 use crate::metrics::{to_db, write_csv, write_json, Series, TraceAccumulator};
 use crate::rng::Pcg64;
-use crate::topology::{combination_matrix, Graph, Rule};
+use crate::topology::{combination_matrix, Combiner, Graph, Rule};
 use anyhow::{anyhow, Result};
 
 /// One algorithm setting's communication/energy bill, summed over the
@@ -109,8 +108,8 @@ pub(crate) fn exp3_settings(cfg: &Exp3Config, mean_deg: f64) -> Vec<(WsnAlgo, f6
 pub(crate) struct Exp3Parts {
     pub graph: Graph,
     pub harvest_scale: Vec<f64>,
-    pub c: Mat,
-    pub a: Mat,
+    pub c: Combiner,
+    pub a: Combiner,
     pub model: DataModel,
     pub mean_deg: f64,
 }

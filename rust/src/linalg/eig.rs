@@ -73,7 +73,17 @@ pub fn spectral_radius(m: &Mat, iters: usize) -> f64 {
 
 fn jacobi_or_power(m: &Mat, iters: usize, _sym: bool) -> f64 {
     assert!(m.is_square());
-    let n = m.rows();
+    power_radius_with(m.rows(), iters, |v| m.matvec(v))
+}
+
+/// Power iteration on an abstract matvec operator — the same arithmetic
+/// as the dense path (`spectral_radius` delegates here with `m.matvec`),
+/// so a CSR-backed caller gets identical convergence behaviour without
+/// ever forming the matrix densely.
+pub(crate) fn power_radius_with<F>(n: usize, iters: usize, mut matvec: F) -> f64
+where
+    F: FnMut(&[f64]) -> Vec<f64>,
+{
     if n == 0 {
         return 0.0;
     }
@@ -88,7 +98,7 @@ fn jacobi_or_power(m: &Mat, iters: usize, _sym: bool) -> f64 {
     let mut lambda = 0.0;
     let mut prev = f64::INFINITY;
     for it in 0..iters {
-        let w = m.matvec(&v);
+        let w = matvec(&v);
         let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
         if norm == 0.0 {
             return 0.0;

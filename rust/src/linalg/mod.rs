@@ -11,7 +11,10 @@ mod eig;
 pub mod kernels;
 mod mat;
 mod ops;
+mod sparse;
 
 pub use eig::{jacobi_eigenvalues, power_iteration_sym, spectral_radius};
+pub(crate) use eig::power_radius_with;
 pub use mat::Mat;
 pub use ops::{block_diag, hadamard, kron, vec_of, unvec};
+pub use sparse::SparseMat;

@@ -1,0 +1,286 @@
+//! Compressed-sparse-row (CSR) f64 matrix.
+//!
+//! The large-N fast path of DESIGN.md §10: diffusion networks are sparse
+//! (E ≪ N²), so the topology layer, the per-iteration impairment rebuild
+//! and the theory engine's recursion matrix 𝓑 all store O(nnz) instead of
+//! O(N²). The dense [`Mat`](super::Mat) stays the substrate for the small
+//! problems the closed-form tests exercise; `SparseMat` converts to and
+//! from it losslessly, and the CSR × dense product bottoms out in the
+//! same 4-lane [`kernels`](super::kernels) the dense multiply uses.
+//!
+//! Row indices within a row are kept sorted ascending — the same
+//! invariant the topology layer's neighbour lists rely on — so per-entry
+//! lookup is a binary search and row iteration streams contiguously.
+
+use super::{kernels, Mat};
+
+/// CSR matrix: `indptr[r]..indptr[r + 1]` delimits row `r`'s entries in
+/// `indices` (column ids, sorted ascending per row) and `vals`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseMat {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl SparseMat {
+    /// Build from raw CSR parts, validating the invariants (monotone
+    /// `indptr`, in-bounds and strictly ascending column ids per row).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        vals: Vec<f64>,
+    ) -> Self {
+        assert_eq!(indptr.len(), rows + 1, "indptr must have rows + 1 entries");
+        assert_eq!(indices.len(), vals.len(), "indices/vals length mismatch");
+        assert_eq!(indptr[0], 0, "indptr must start at 0");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr must end at nnz");
+        for r in 0..rows {
+            assert!(indptr[r] <= indptr[r + 1], "indptr must be monotone");
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "row {r}: column ids must be strictly ascending");
+            }
+            if let Some(&last) = row.last() {
+                assert!(last < cols, "row {r}: column id {last} out of bounds");
+            }
+        }
+        Self { rows, cols, indptr, indices, vals }
+    }
+
+    /// An empty (all-zero, no stored entries) matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            indptr: vec![0; rows + 1],
+            indices: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Sparsify a dense matrix (stores exactly the nonzero entries).
+    pub fn from_dense(m: &Mat) -> Self {
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        indptr.push(0);
+        for i in 0..rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    vals.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows, cols, indptr, indices, vals }
+    }
+
+    /// Densify (exact: stored values are copied bit for bit).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let orow = &mut out.data_mut()[r * self.cols..(r + 1) * self.cols];
+            for (&c, &v) in cols.iter().zip(vals) {
+                orow[c] = v;
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row `r` as parallel (column ids, values) slices.
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let span = self.indptr[r]..self.indptr[r + 1];
+        (&self.indices[span.clone()], &self.vals[span])
+    }
+
+    /// Stored values (row-major within the CSR layout).
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Mutable stored values — the structure (indptr/indices) is fixed,
+    /// which is exactly what the O(E) impairment rebuild needs.
+    pub fn vals_mut(&mut self) -> &mut [f64] {
+        &mut self.vals
+    }
+
+    /// Entry (r, c), defaulting to 0 for non-stored positions.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&c) {
+            Ok(i) => vals[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Sparse matrix–vector product `self · x`.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.spmv_into(x, &mut out);
+        out
+    }
+
+    /// `out = self · x` without allocating.
+    pub fn spmv_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "spmv: dimension mismatch");
+        assert_eq!(out.len(), self.rows, "spmv: output length mismatch");
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            out[r] = acc;
+        }
+    }
+
+    /// CSR × dense product `out = self · rhs` (the matrix-free theory
+    /// engine's 𝓑ᵀΣ step): each stored entry contributes a scaled rhs
+    /// row, accumulated through the 4-lane axpy kernel. O(nnz · rhs.cols).
+    pub fn mul_dense_into(&self, rhs: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, rhs.rows, "mul_dense_into: dim mismatch");
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (self.rows, rhs.cols()),
+            "mul_dense_into: output shape mismatch"
+        );
+        let w = rhs.cols();
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let orow = &mut out.data_mut()[r * w..(r + 1) * w];
+            orow.iter_mut().for_each(|x| *x = 0.0);
+            for (&c, &v) in cols.iter().zip(vals) {
+                kernels::axpy(v, rhs.row(c), orow);
+            }
+        }
+    }
+
+    /// Transpose (O(nnz + rows + cols), counting-sort by column).
+    pub fn transpose(&self) -> SparseMat {
+        let mut out = SparseMat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into `out`, reusing its buffers (allocation-free once
+    /// the shapes have stabilised). `out` must not alias `self`.
+    pub fn transpose_into(&self, out: &mut SparseMat) {
+        out.rows = self.cols;
+        out.cols = self.rows;
+        out.indptr.clear();
+        out.indptr.resize(self.cols + 1, 0);
+        out.indices.clear();
+        out.indices.resize(self.nnz(), 0);
+        out.vals.clear();
+        out.vals.resize(self.nnz(), 0.0);
+        // Column occupancy counts -> output row offsets.
+        for &c in &self.indices {
+            out.indptr[c + 1] += 1;
+        }
+        for i in 1..out.indptr.len() {
+            out.indptr[i] += out.indptr[i - 1];
+        }
+        // Scatter: source rows ascend, so each output row's column ids
+        // (= source row ids) come out sorted ascending as required.
+        let mut cursor = out.indptr.clone();
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let slot = cursor[c];
+                out.indices[slot] = r;
+                out.vals[slot] = v;
+                cursor[c] += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Mat {
+        Mat::from_rows(&[
+            &[1.0, 0.0, 2.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0],
+            &[-3.0, 4.0, 0.0, 0.5],
+        ])
+    }
+
+    #[test]
+    fn dense_roundtrip_is_exact() {
+        let d = sample();
+        let s = SparseMat::from_dense(&d);
+        assert_eq!(s.nnz(), 5);
+        assert_eq!(s.to_dense(), d);
+        assert_eq!(s.get(0, 2), 2.0);
+        assert_eq!(s.get(1, 1), 0.0);
+        assert_eq!(s.get(2, 3), 0.5);
+    }
+
+    #[test]
+    fn spmv_matches_dense_matvec() {
+        let d = sample();
+        let s = SparseMat::from_dense(&d);
+        let x = [0.5, -1.0, 2.0, 4.0];
+        let want = d.matvec(&x);
+        let got = s.spmv(&x);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-15, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let d = sample();
+        let s = SparseMat::from_dense(&d);
+        assert_eq!(s.transpose().to_dense(), d.transpose());
+        // Reused buffers give the same result.
+        let mut out = SparseMat::zeros(0, 0);
+        s.transpose_into(&mut out);
+        assert_eq!(out.to_dense(), d.transpose());
+    }
+
+    #[test]
+    fn mul_dense_matches_dense_product() {
+        let d = sample();
+        let s = SparseMat::from_dense(&d);
+        let rhs = Mat::from_rows(&[
+            &[1.0, 2.0],
+            &[0.5, -1.0],
+            &[3.0, 0.0],
+            &[-2.0, 1.5],
+        ]);
+        let want = &d * &rhs;
+        let mut got = Mat::zeros(3, 2);
+        s.mul_dense_into(&rhs, &mut got);
+        assert!((&want - &got).max_abs() < 1e-14);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn rejects_unsorted_rows() {
+        let _ = SparseMat::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+}

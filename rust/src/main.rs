@@ -398,7 +398,7 @@ fn cmd_theory(args: &ParsedArgs) -> Result<()> {
     let iters: usize = args.get_or("iters", 20_000).map_err(anyhow::Error::msg)?;
 
     let graph = if n == 10 { Graph::paper_ten_node() } else { Graph::ring(n, 2) };
-    let c = combination_matrix(&graph, Rule::Metropolis);
+    let c = combination_matrix(&graph, Rule::Metropolis).to_dense();
     let mut rng = Pcg64::new(2017, 0);
     let model = dcd_lms::datamodel::DataModel::paper(n, dim, 0.8, 1.2, 1e-3, &mut rng);
     let setup = TheorySetup {
@@ -580,7 +580,7 @@ fn cmd_info() -> Result<()> {
         g.is_connected()
     );
     println!("metropolis doubly stochastic: {}", {
-        let cs = dcd_lms::topology::col_sums(&a);
+        let cs = a.col_sums();
         cs.iter().all(|s| (s - 1.0).abs() < 1e-9)
     });
     Ok(())

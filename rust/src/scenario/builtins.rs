@@ -16,6 +16,7 @@ pub fn builtins() -> Vec<Scenario> {
         lossy_geometric(),
         event_triggered_ring(),
         quantized_dense(),
+        mega_grid(),
     ]
 }
 
@@ -174,6 +175,40 @@ fn quantized_dense() -> Scenario {
     sc.runs = 10;
     sc.iters = 3_000;
     sc.seed = 3;
+    sc
+}
+
+/// The sparse-path stress preset (DESIGN.md §10): a 320 x 320 lattice —
+/// 102 400 nodes, 204 160 undirected links — that only exists because
+/// every per-iteration structure (combiners, effective-matrix rebuild,
+/// ledger) is CSR / O(E). Bounded degree keeps the per-iteration cost at
+/// ~N·L + E·L flops, so a short schedule completes in seconds in release
+/// mode; the lossy links exercise the in-place impairment rebuild at
+/// full scale. N·L = 409 600 is far beyond the theory cap, so the run
+/// carries no theory column.
+fn mega_grid() -> Scenario {
+    let mut sc = Scenario::base(
+        "mega-grid",
+        "320x320 lattice (102400 nodes) on the CSR fast path, lossy links, DCD at ratio 4",
+    );
+    sc.topology = TopologySpec::Grid { rows: 320, cols: 320 };
+    sc.combine_rule = Rule::Metropolis;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 4;
+    sc.u2_min = 0.8;
+    sc.u2_max = 1.2;
+    sc.sigma_v2 = 1e-3;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 2, m_grad: 1 };
+    sc.mu = 1e-2;
+    sc.impairments = LinkImpairments {
+        drop_prob: 0.05,
+        gating: Gating::Always,
+        quant_step: 0.0,
+    };
+    sc.runs = 2;
+    sc.iters = 100;
+    sc.seed = 2025;
+    sc.shards = 2; // exercises the sharded runner by default
     sc
 }
 

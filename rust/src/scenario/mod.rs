@@ -36,4 +36,4 @@ pub use run::{
     mc_parts, run_scenario, sweep_scenario, theory_scope, wsn_block, wsn_sim, ScenarioOutput,
     SweepOutput, SweepPoint,
 };
-pub use spec::{AlgorithmSpec, Scenario, ScheduleMode, TopologySpec};
+pub use spec::{AlgorithmSpec, Scenario, ScheduleMode, TheoryColumn, TopologySpec};

@@ -30,12 +30,21 @@ use crate::rng::Pcg64;
 use crate::theory::{ImpairedMsdModel, TheorySetup};
 use crate::topology::{combination_matrix, Rule};
 
-use super::spec::{AlgorithmSpec, Scenario, ScheduleMode};
+use super::spec::{AlgorithmSpec, Scenario, ScheduleMode, TheoryColumn};
 
-/// Upper bound on N·L for the automatic theory column: one application
-/// of the variance operator costs O((NL)³), so big sweeps (e.g. the
-/// N = 50, L = 50 exp2 network) would dwarf the simulation itself.
-const MAX_THEORY_NL: usize = 256;
+/// Hard upper bound on N·L for the theory column. With the CSR 𝓑
+/// operator (DESIGN.md §10) one application of the variance operator is
+/// O(nnz(𝓑)·NL) instead of O((NL)³), which moves the practical limit
+/// from the old 256 up to ~10⁴: there the binding constraints are the
+/// dense NL×NL Σ iterates (~800 MB each at the cap) and the
+/// O((Σ_k |N_k|)²) quadratic-term list, not the linear algebra.
+const MAX_THEORY_NL: usize = 10_000;
+
+/// Threshold for the *automatic* theory column (`theory = auto`, the
+/// default) — kept at the historical dense limit so every pre-existing
+/// preset's CSV stays byte-identical. Larger scenarios state the
+/// opt-in (`theory = on`) in the "no theory column" notice.
+const AUTO_THEORY_NL: usize = 256;
 
 /// Everything one scenario run produces.
 #[derive(Debug, Clone)]
@@ -91,10 +100,14 @@ pub struct SweepOutput {
 /// closed-form anchor. The analysis scope (DESIGN.md §7): the paper's
 /// `A = I` setting (`combine_rule = identity`), a DCD-family algorithm,
 /// Bernoulli-representable gating, the synchronous-round schedule, and
-/// a network small enough for the O((NL)³) recursion. (A
-/// non-doubly-stochastic adapt combiner is only caught later, by
-/// `TheorySetup::validate` on the built matrix.)
+/// a network within the size cap. The default `theory = auto` policy
+/// additionally keeps the historical N·L ≤ 256 threshold so existing
+/// presets keep byte-identical outputs; `theory = on` opts in to the
+/// full matrix-free cap (DESIGN.md §10).
 pub fn theory_scope(sc: &Scenario) -> Result<(usize, usize), String> {
+    if sc.theory == TheoryColumn::Off {
+        return Err("theory = off disables the theory column".into());
+    }
     if let ScheduleMode::Wsn { .. } = sc.mode {
         return Err("the event-driven WSN schedule has no closed-form model".into());
     }
@@ -111,11 +124,16 @@ pub fn theory_scope(sc: &Scenario) -> Result<(usize, usize), String> {
             sc.impairments.gating
         ));
     }
-    let n = sc.topology.n_nodes();
-    if n * sc.dim > MAX_THEORY_NL {
+    let nl = sc.topology.n_nodes() * sc.dim;
+    if nl > MAX_THEORY_NL {
         return Err(format!(
-            "N·L = {} exceeds the theory-column cap {MAX_THEORY_NL}",
-            n * sc.dim
+            "N·L = {nl} exceeds the theory-column cap {MAX_THEORY_NL}"
+        ));
+    }
+    if sc.theory == TheoryColumn::Auto && nl > AUTO_THEORY_NL {
+        return Err(format!(
+            "N·L = {nl} exceeds the automatic theory threshold {AUTO_THEORY_NL} \
+             (set [schedule] theory = on to force it, up to N·L = {MAX_THEORY_NL})"
         ));
     }
     Ok(masks)
@@ -126,7 +144,7 @@ pub fn theory_scope(sc: &Scenario) -> Result<(usize, usize), String> {
 fn theory_anchor(
     sc: &Scenario,
     model: &DataModel,
-    c: &crate::linalg::Mat,
+    c: &crate::topology::Combiner,
 ) -> Result<ImpairedMsdModel, String> {
     let (m, m_grad) = theory_scope(sc)?;
     let n = sc.topology.n_nodes();
@@ -135,7 +153,7 @@ fn theory_anchor(
         dim: sc.dim,
         m,
         m_grad,
-        c: c.clone(),
+        c: c.to_dense(),
         mu: vec![sc.mu; n],
         sigma_u2: model.sigma_u2.clone(),
         sigma_v2: model.sigma_v2.clone(),
@@ -305,16 +323,14 @@ fn run_manifest(sc: &Scenario, ledger: &CommLedger) -> Json {
 fn ledger_csv(ledger: &CommLedger) -> String {
     let mut s = String::from("src,dst,scalars,bits\n");
     let n = ledger.n_nodes;
-    for src in 0..n {
-        for dst in 0..n {
-            let scalars = ledger.per_link[src * n + dst];
-            if scalars > 0 {
-                s.push_str(&format!(
-                    "{src},{dst},{scalars},{}\n",
-                    scalars * ledger.bits_per_scalar as u64
-                ));
-            }
-        }
+    // `pairs()` yields nonzero links in ascending src*n+dst order — the
+    // exact rows (and row order) the historical dense double loop wrote.
+    for (idx, scalars) in ledger.per_link.pairs() {
+        let (src, dst) = (idx / n, idx % n);
+        s.push_str(&format!(
+            "{src},{dst},{scalars},{}\n",
+            scalars * ledger.bits_per_scalar as u64
+        ));
     }
     s
 }

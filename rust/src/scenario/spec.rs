@@ -29,6 +29,15 @@ pub enum TopologySpec {
         /// Connection radius.
         radius: f64,
     },
+    /// 4-connected `rows x cols` lattice — deterministic, bounded-degree,
+    /// and therefore the natural shape for very large N on the sparse
+    /// (CSR) path (DESIGN.md §10).
+    Grid {
+        /// Lattice rows.
+        rows: usize,
+        /// Lattice columns.
+        cols: usize,
+    },
 }
 
 impl TopologySpec {
@@ -37,6 +46,7 @@ impl TopologySpec {
         match self {
             TopologySpec::Paper10 => 10,
             TopologySpec::Ring { n, .. } | TopologySpec::Geometric { n, .. } => *n,
+            TopologySpec::Grid { rows, cols } => rows * cols,
         }
     }
 
@@ -47,6 +57,7 @@ impl TopologySpec {
             TopologySpec::Paper10 => Graph::paper_ten_node(),
             TopologySpec::Ring { n, hops } => Graph::ring(*n, *hops),
             TopologySpec::Geometric { n, radius } => Graph::random_geometric(*n, *radius, rng),
+            TopologySpec::Grid { rows, cols } => Graph::grid(*rows, *cols),
         }
     }
 }
@@ -119,6 +130,32 @@ impl AlgorithmSpec {
     }
 }
 
+/// Whether the runner attaches the closed-form theory column
+/// (`… (theory)` series + steady-state anchor) to a scenario's output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TheoryColumn {
+    /// Attach when the scenario is inside the analysis scope *and*
+    /// N·L is at or below the automatic threshold (256) — exactly the
+    /// historical behavior, so existing presets keep byte-identical
+    /// outputs.
+    Auto,
+    /// Attach whenever the scenario is in scope, up to the hard engine
+    /// cap (N·L ≤ 10 000 on the matrix-free path; DESIGN.md §10).
+    On,
+    /// Never attach.
+    Off,
+}
+
+impl TheoryColumn {
+    fn name(self) -> &'static str {
+        match self {
+            TheoryColumn::Auto => "auto",
+            TheoryColumn::On => "on",
+            TheoryColumn::Off => "off",
+        }
+    }
+}
+
 /// How a scenario's schedule drives the network.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ScheduleMode {
@@ -186,6 +223,8 @@ pub struct Scenario {
     /// energy-harvesting WSN scheduler (`[schedule] mode = wsn` plus a
     /// `[wsn]` section).
     pub mode: ScheduleMode,
+    /// Theory-column policy (`[schedule] theory = auto | on | off`).
+    pub theory: TheoryColumn,
 }
 
 impl Scenario {
@@ -212,6 +251,7 @@ impl Scenario {
             threads: 0,
             shards: 1,
             mode: ScheduleMode::Rounds,
+            theory: TheoryColumn::Auto,
         }
     }
 
@@ -225,6 +265,8 @@ impl Scenario {
             "topology.n",
             "topology.hops",
             "topology.radius",
+            "topology.rows",
+            "topology.cols",
             "topology.combine_rule",
             "topology.adapt_rule",
             "data.dim",
@@ -246,6 +288,7 @@ impl Scenario {
             "schedule.threads",
             "schedule.shards",
             "schedule.mode",
+            "schedule.theory",
             "wsn.duration",
             "wsn.sample_dt",
         ]
@@ -303,9 +346,13 @@ impl Scenario {
                 n: get_or(doc, "topology", "n", 20)?,
                 radius: get_or(doc, "topology", "radius", 0.3)?,
             },
+            "grid" => TopologySpec::Grid {
+                rows: get_or(doc, "topology", "rows", 10)?,
+                cols: get_or(doc, "topology", "cols", 10)?,
+            },
             other => {
                 return Err(format!(
-                    "topology.kind {other:?}: expected paper10 | ring | geometric"
+                    "topology.kind {other:?}: expected paper10 | ring | geometric | grid"
                 ))
             }
         };
@@ -365,6 +412,14 @@ impl Scenario {
                 return Err(format!("schedule.mode {other:?}: expected rounds | wsn"))
             }
         };
+        sc.theory = match doc.get("schedule", "theory").unwrap_or("auto") {
+            "auto" => TheoryColumn::Auto,
+            "on" => TheoryColumn::On,
+            "off" => TheoryColumn::Off,
+            other => {
+                return Err(format!("schedule.theory {other:?}: expected auto | on | off"))
+            }
+        };
         Ok(sc)
     }
 
@@ -383,6 +438,9 @@ impl Scenario {
             }
             TopologySpec::Geometric { n, radius } => {
                 s.push_str(&format!("kind = geometric\nn = {n}\nradius = {radius}\n"));
+            }
+            TopologySpec::Grid { rows, cols } => {
+                s.push_str(&format!("kind = grid\nrows = {rows}\ncols = {cols}\n"));
             }
         }
         s.push_str(&format!("combine_rule = {}\n", rule_name(self.combine_rule)));
@@ -418,6 +476,7 @@ impl Scenario {
         s.push_str(&format!("record_every = {}\n", self.record_every));
         s.push_str(&format!("threads = {}\n", self.threads));
         s.push_str(&format!("shards = {}\n", self.shards));
+        s.push_str(&format!("theory = {}\n", self.theory.name()));
         match &self.mode {
             ScheduleMode::Rounds => s.push_str("mode = rounds\n"),
             ScheduleMode::Wsn { duration, sample_dt } => {
@@ -621,6 +680,7 @@ mod tests {
             TopologySpec::Paper10,
             TopologySpec::Ring { n: 12, hops: 2 },
             TopologySpec::Geometric { n: 15, radius: 0.4 },
+            TopologySpec::Grid { rows: 4, cols: 5 },
         ];
         for algo in &algos {
             for topo in &topos {
@@ -718,6 +778,46 @@ mod tests {
         assert_eq!(Scenario::parse_str(&plain.to_ini_string()).unwrap(), plain);
         assert!(Scenario::check_key("wsn.duration").is_ok());
         assert!(Scenario::check_key("schedule.mode").is_ok());
+    }
+
+    #[test]
+    fn grid_topology_builds_and_validates() {
+        let mut sc = Scenario::base("grid-check", "");
+        sc.topology = TopologySpec::Grid { rows: 3, cols: 7 };
+        assert_eq!(sc.topology.n_nodes(), 21);
+        assert!(sc.validate().is_ok());
+        let back = Scenario::parse_str(&sc.to_ini_string()).unwrap();
+        assert_eq!(back, sc);
+        let mut rng = Pcg64::new(1, 0);
+        let g = sc.topology.build(&mut rng);
+        assert_eq!(g.n(), 21);
+        assert!(g.is_connected());
+        // Degenerate lattices are rejected before Graph::grid runs.
+        sc.topology = TopologySpec::Grid { rows: 1, cols: 1 };
+        assert!(sc.validate().is_err());
+        assert!(Scenario::check_key("topology.rows").is_ok());
+        assert!(Scenario::check_key("topology.cols").is_ok());
+    }
+
+    #[test]
+    fn theory_key_roundtrips_and_rejects_garbage() {
+        for (mode, text) in [
+            (TheoryColumn::Auto, "theory = auto"),
+            (TheoryColumn::On, "theory = on"),
+            (TheoryColumn::Off, "theory = off"),
+        ] {
+            let mut sc = Scenario::base("theory-mode", "");
+            sc.theory = mode;
+            let ini = sc.to_ini_string();
+            assert!(ini.contains(text), "{ini}");
+            assert_eq!(Scenario::parse_str(&ini).unwrap(), sc);
+        }
+        // Absent key ⇒ the legacy automatic behavior.
+        let sc = Scenario::parse_str("[scenario]\nname = t\n").unwrap();
+        assert_eq!(sc.theory, TheoryColumn::Auto);
+        let err = Scenario::parse_str("[schedule]\ntheory = maybe\n").unwrap_err();
+        assert!(err.contains("maybe"), "{err}");
+        assert!(Scenario::check_key("schedule.theory").is_ok());
     }
 
     #[test]

@@ -205,12 +205,14 @@ fn get_u64_arr(v: &Json, key: &str) -> Result<Vec<u64>, String> {
 /// the dense per-link table shipped sparsely as `[index, scalars]`
 /// pairs (geometric graphs leave most of the N² table zero).
 fn ledger_json(l: &CommLedger) -> Json {
+    // `LinkCounts::pairs` yields the nonzero (index, count) entries in
+    // ascending index order on both the dense and sparse storage, so
+    // the wire form is identical whichever representation the worker
+    // happened to hold.
     let per_link: Vec<Json> = l
         .per_link
-        .iter()
-        .enumerate()
-        .filter(|(_, &c)| c > 0)
-        .map(|(i, &c)| Json::Arr(vec![num(i), num_u64(c)]))
+        .pairs()
+        .map(|(i, c)| Json::Arr(vec![num(i), num_u64(c)]))
         .collect();
     obj(vec![
         ("n", num(l.n_nodes)),
@@ -266,10 +268,10 @@ fn decode_ledger(v: &Json) -> Result<CommLedger, String> {
             .as_usize()
             .ok_or("ledger per_link index must be a usize")?;
         let count = pair[1].as_u64().ok_or("ledger per_link count must be a u64")?;
-        if idx >= ledger.per_link.len() {
+        if idx >= n * n {
             return Err(format!("ledger per_link index {idx} out of range"));
         }
-        ledger.per_link[idx] = count;
+        ledger.per_link.set(idx, count);
     }
     Ok(ledger)
 }
@@ -424,8 +426,8 @@ mod tests {
         l.bits_per_scalar = 11;
         l.per_node = vec![10, 0, 32];
         l.per_purpose = [30, 12, 0];
-        l.per_link[1] = 10; // 0 -> 1
-        l.per_link[5] = 32; // 1 -> 2
+        l.per_link.set(1, 10); // 0 -> 1
+        l.per_link.set(5, 32); // 1 -> 2
         l
     }
 

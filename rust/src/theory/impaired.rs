@@ -39,11 +39,12 @@
 //! estimate increments exceed Δ.
 
 use super::linkstate::LinkStateMoments;
-use super::mean::build_b;
-use super::msd::{build_noise_coeffs, build_quad_terms, MsdModel, MsdTrajectory, MsdWorkspace};
+use super::msd::{
+    build_noise_coeffs, build_quad_terms, BOperator, MsdModel, MsdTrajectory, MsdWorkspace,
+};
 use super::TheorySetup;
 use crate::coordinator::impairments::LinkImpairments;
-use crate::linalg::{spectral_radius, Mat};
+use crate::linalg::Mat;
 
 /// Mean-square model of DCD under per-link drops, probabilistic gating
 /// and quantized state — the theoretical anchor for the scenario
@@ -72,12 +73,12 @@ impl ImpairedMsdModel {
         })?;
         let lm = LinkStateMoments::new(&setup.c, imp.drop_prob, tx_prob);
         let eff = TheorySetup { c: lm.mean_matrix(), ..setup };
-        let b = build_b(&eff);
+        let bop = BOperator::build(&eff);
         let quad = build_quad_terms(&eff, &lm);
         let w_noise = build_noise_coeffs(&eff, &lm);
         let quant_tr = imp.quant_step * imp.quant_step / 12.0;
         Ok(Self {
-            inner: MsdModel::from_parts(eff, b, quad, w_noise, quant_tr),
+            inner: MsdModel::from_parts(eff, bop, quad, w_noise, quant_tr),
             imp: imp.clone(),
         })
     }
@@ -100,9 +101,9 @@ impl ImpairedMsdModel {
     }
 
     /// ρ(𝓑̄) — the algorithm converges in the mean under the impairment
-    /// model iff this is < 1.
+    /// model iff this is < 1. Matrix-free above the dense size limit.
     pub fn mean_rho(&self) -> f64 {
-        spectral_radius(self.inner.b(), 5000)
+        self.inner.mean_radius(5000)
     }
 
     /// Mean stability under the impairment model.
@@ -180,7 +181,7 @@ mod tests {
         let net = NetworkConfig {
             graph: graph.clone(),
             c: c.clone(),
-            a: Mat::eye(n),
+            a: crate::topology::Combiner::eye(n),
             mu: vec![mu; n],
             dim: l,
         };
@@ -189,7 +190,7 @@ mod tests {
             dim: l,
             m,
             m_grad: mg,
-            c,
+            c: c.to_dense(),
             mu: vec![mu; n],
             sigma_u2: (0..n).map(|k| 0.7 + 0.15 * k as f64).collect(),
             sigma_v2: (0..n).map(|k| 1e-3 * (1.0 + 0.3 * k as f64)).collect(),
@@ -214,7 +215,7 @@ mod tests {
 
     /// Draw masks and build 𝓑ᵢ for a *given* effective combiner (same
     /// construction as the ideal model's MC test, with C(i) plugged in).
-    fn sample_b_i(s: &TheorySetup, ceff: &Mat, rng: &mut Pcg64) -> Mat {
+    fn sample_b_i(s: &TheorySetup, ceff: &crate::topology::Combiner, rng: &mut Pcg64) -> Mat {
         let (n, l) = (s.n_nodes, s.dim);
         let mut scratch = Vec::new();
         let mut h = vec![vec![0f32; l]; n];
@@ -365,7 +366,7 @@ mod tests {
                 let im = imp(drop, Gating::Probabilistic(gate));
                 let model = ImpairedMsdModel::new(s.clone(), &im).unwrap();
                 let (_, c_bar) = im.expected_combiners(&net).unwrap();
-                let diff = (model.c_bar() - &c_bar).max_abs();
+                let diff = (model.c_bar() - &c_bar.to_dense()).max_abs();
                 assert!(diff < 1e-12, "drop {drop} gate {gate}: C̄ diff {diff}");
             }
         }

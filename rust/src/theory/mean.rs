@@ -4,7 +4,7 @@
 //! ρ(𝓑) < 1 (35), with the sufficient step-size condition (38)–(39).
 
 use super::TheorySetup;
-use crate::linalg::{spectral_radius, Mat};
+use crate::linalg::{spectral_radius, Mat, SparseMat};
 
 /// The mean model: 𝓑 and stability diagnostics.
 #[derive(Debug, Clone)]
@@ -105,6 +105,55 @@ pub fn build_b(s: &TheorySetup) -> Mat {
     b
 }
 
+/// Sparse (CSR) construction of the same 𝓑 — identical values, stored
+/// row by row. Every block of 𝓑 is a diagonal L×L matrix, so dense row
+/// k·L+j holds one entry per block column: the diagonal block plus one
+/// per neighbour with `c_{lk} σ²_{u,l} ≠ 0`. nnz ≈ (2E + N)·L — this is
+/// what lets the variance operator run above `DENSE_NL_LIMIT` without
+/// ever materialising the (NL)² matrix (DESIGN.md §10).
+pub(super) fn build_b_csr(s: &TheorySetup) -> SparseMat {
+    let (n, l) = (s.n_nodes, s.dim);
+    let (lf, mf, mgf) = (l as f64, s.m as f64, s.m_grad as f64);
+    let qh = mf * mgf / (lf * lf);
+    let q_only = 1.0 - mgf / lf;
+    let cross = (mgf / lf) * (1.0 - mf / lf);
+    let nl = n * l;
+    let mut indptr = Vec::with_capacity(nl + 1);
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    indptr.push(0);
+    // Per block row: the (block-column, value) pattern is shared by all
+    // L scalar rows, so compute it once and replicate with shifted ids.
+    let mut entries: Vec<(usize, f64)> = Vec::new();
+    for k in 0..n {
+        let mu_k = s.mu[k];
+        let diag_val = 1.0
+            - mu_k
+                * (qh * s.r_k_scale(k)
+                    + q_only * s.sigma_u2[k]
+                    + cross * s.c[(k, k)] * s.sigma_u2[k]);
+        entries.clear();
+        for lnb in 0..n {
+            if lnb == k {
+                entries.push((k, diag_val));
+                continue;
+            }
+            let w = mu_k * cross * s.c[(lnb, k)] * s.sigma_u2[lnb];
+            if w != 0.0 {
+                entries.push((lnb, -w));
+            }
+        }
+        for j in 0..l {
+            for &(lnb, v) in &entries {
+                cols.push(lnb * l + j);
+                vals.push(v);
+            }
+            indptr.push(cols.len());
+        }
+    }
+    SparseMat::from_parts(nl, nl, indptr, cols, vals)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,7 +162,7 @@ mod tests {
 
     pub(crate) fn setup(n: usize, l: usize, m: usize, mg: usize, mu: f64) -> TheorySetup {
         let graph = Graph::ring(n, 1);
-        let c = combination_matrix(&graph, Rule::Metropolis);
+        let c = combination_matrix(&graph, Rule::Metropolis).to_dense();
         TheorySetup {
             n_nodes: n,
             dim: l,
@@ -186,6 +235,18 @@ mod tests {
         let b_mc = &Mat::eye(n * l) - &acc;
         let diff = (&b_mc - &model.b).max_abs();
         assert!(diff < 5e-3, "MC vs closed-form B: max diff {diff}");
+    }
+
+    /// The CSR construction must reproduce the dense 𝓑 bit for bit —
+    /// the sparse theory path above `DENSE_NL_LIMIT` rests on this.
+    #[test]
+    fn sparse_b_matches_dense_b() {
+        for &(n, l, m, mg) in &[(6usize, 4usize, 2usize, 1usize), (5, 3, 3, 3), (8, 2, 1, 2)] {
+            let s = setup(n, l, m, mg, 0.08);
+            let dense = build_b(&s);
+            let sparse = build_b_csr(&s);
+            assert_eq!(sparse.to_dense(), dense, "N={n} L={l} M={m} Mg={mg}");
+        }
     }
 
     #[test]

@@ -11,8 +11,81 @@
 //! paper's small-μ approximation (83)) and cheap.
 
 use super::moments::MaskMoments;
-use super::{mean::build_b, TheorySetup};
-use crate::linalg::Mat;
+use super::{
+    mean::{build_b, build_b_csr},
+    TheorySetup,
+};
+use crate::linalg::{power_radius_with, Mat, SparseMat};
+
+/// Largest N·L for which 𝓑/𝓑ᵀ are kept dense. At or below this size the
+/// operator is bit-identical to the historical dense implementation (the
+/// existing presets and golden outputs live here); above it the linear
+/// part switches to CSR and one application costs O(nnz(𝓑)·NL) instead
+/// of O((NL)³), which is what lifts the scenario-theory cap to
+/// N·L ~ 10⁴ (DESIGN.md §10).
+pub(super) const DENSE_NL_LIMIT: usize = 256;
+
+/// The mean coefficient matrix 𝓑 of the variance operator, stored dense
+/// (small setups, bit-compatible legacy path) or CSR (large setups;
+/// nnz ≈ (2E + N)·L since every block of 𝓑 is a diagonal L×L matrix).
+/// Both representations carry the cached transpose: the fast path
+/// multiplies by 𝓑ᵀ every iteration.
+pub(super) enum BOperator {
+    Dense { b: Mat, bt: Mat },
+    Sparse { b: SparseMat, bt: SparseMat },
+}
+
+impl BOperator {
+    /// Build 𝓑 for `s`, choosing the representation by N·L.
+    pub(super) fn build(s: &TheorySetup) -> Self {
+        if s.n_nodes * s.dim <= DENSE_NL_LIMIT {
+            Self::from_dense_b(build_b(s))
+        } else {
+            let b = build_b_csr(s);
+            let bt = b.transpose();
+            Self::Sparse { b, bt }
+        }
+    }
+
+    /// Wrap an externally built dense 𝓑 (caches the transpose).
+    pub(super) fn from_dense_b(b: Mat) -> Self {
+        let mut bt = Mat::zeros(b.cols(), b.rows());
+        b.transpose_into(&mut bt);
+        Self::Dense { b, bt }
+    }
+
+    /// Operator dimension (NL).
+    fn nl(&self) -> usize {
+        match self {
+            Self::Dense { b, .. } => b.rows(),
+            Self::Sparse { b, .. } => b.rows(),
+        }
+    }
+
+    /// 𝓑 · x (the mean recursion step; powers the spectral radius).
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            Self::Dense { b, .. } => b.matvec(x),
+            Self::Sparse { b, .. } => b.spmv(x),
+        }
+    }
+
+    /// `out = 𝓑ᵀ · sigma` — the one matrix product of the fast path.
+    fn mul_bt_into(&self, sigma: &Mat, out: &mut Mat) {
+        match self {
+            Self::Dense { bt, .. } => bt.mul_into(sigma, out),
+            Self::Sparse { bt, .. } => bt.mul_dense_into(sigma, out),
+        }
+    }
+
+    /// Densified 𝓑 (allocating; reference/oracle paths only).
+    fn to_dense_b(&self) -> Mat {
+        match self {
+            Self::Dense { b, .. } => b.clone(),
+            Self::Sparse { b, .. } => b.to_dense(),
+        }
+    }
+}
 
 /// Joint second moments of the (possibly random) adapt-combiner entries,
 /// abstracting the only thing that differs between the ideal operator
@@ -117,10 +190,9 @@ impl MsdWorkspace {
 /// The mean-square evolution model.
 pub struct MsdModel {
     setup: TheorySetup,
-    /// 𝓑 (mean matrix, used for the linear part of the operator).
-    b: Mat,
-    /// Cached 𝓑ᵀ (the fast path multiplies by it every iteration).
-    bt: Mat,
+    /// 𝓑 with its cached transpose, dense or CSR by size (see
+    /// [`BOperator`]).
+    bop: BOperator,
     /// Full quadratic-term list (reference operator [`MsdModel::apply`]).
     quad: Vec<QuadTerm>,
     /// Halved, μ-prescaled term list (fast path).
@@ -148,10 +220,10 @@ impl MsdModel {
     pub fn new(setup: TheorySetup) -> Self {
         setup.validate().expect("invalid theory setup");
         let det = DetCombiner::new(&setup.c);
-        let b = build_b(&setup);
+        let bop = BOperator::build(&setup);
         let quad = build_quad_terms(&setup, &det);
         let w_noise = build_noise_coeffs(&setup, &det);
-        Self::from_parts(setup, b, quad, w_noise, 0.0)
+        Self::from_parts(setup, bop, quad, w_noise, 0.0)
     }
 
     /// Assemble a model from externally built parts — the impaired-link
@@ -163,13 +235,11 @@ impl MsdModel {
     /// even when the pristine `C` is.
     pub(super) fn from_parts(
         setup: TheorySetup,
-        b: Mat,
+        bop: BOperator,
         quad: Vec<QuadTerm>,
         w_noise: Vec<f64>,
         extra_tr_noise: f64,
     ) -> Self {
-        let mut bt = Mat::zeros(b.cols(), b.rows());
-        b.transpose_into(&mut bt);
         // Keep the lexicographic representative of each mirror pair
         // {(a,b,k,l), (b,a,l,k)}; self-mirrored terms (a = b, k = l)
         // contribute a single symmetric write.
@@ -186,13 +256,15 @@ impl MsdModel {
                 mirror: !(t.a == t.b && t.k == t.l),
             })
             .collect();
-        Self { setup, b, bt, quad, quad_sym, w_noise, extra_tr_noise }
+        Self { setup, bop, quad, quad_sym, w_noise, extra_tr_noise }
     }
 
-    /// The mean coefficient matrix 𝓑 (for the impaired model: 𝓑̄ built
-    /// from the expected combiner C̄).
-    pub(super) fn b(&self) -> &Mat {
-        &self.b
+    /// ρ(𝓑) by power iteration *on the operator* — matrix-free on the
+    /// sparse path, and bit-identical to `spectral_radius(&b, iters)` on
+    /// the dense path (both run the same core over `b.matvec`). For the
+    /// impaired model this is ρ(𝓑̄), the mean-stability radius.
+    pub(super) fn mean_radius(&self, iters: usize) -> f64 {
+        power_radius_with(self.bop.nl(), iters, |v| self.bop.matvec(v))
     }
 
     /// The problem description the model was built for (the impaired
@@ -203,7 +275,7 @@ impl MsdModel {
 
     /// A scratch workspace sized for this model (see [`MsdWorkspace`]).
     pub fn workspace(&self) -> MsdWorkspace {
-        MsdWorkspace::new(self.b.rows())
+        MsdWorkspace::new(self.bop.nl())
     }
 
     /// Reference implementation of the weighting-update operator:
@@ -213,10 +285,11 @@ impl MsdModel {
     /// equivalence tests and `theory_ops` bench compare against. The
     /// iteration loops use the allocation-free [`Self::apply_into`].
     pub fn apply(&self, sigma: &Mat) -> Mat {
-        let nl = self.b.rows();
+        let nl = self.bop.nl();
         assert_eq!((sigma.rows(), sigma.cols()), (nl, nl));
-        let bt_sigma = &self.b.transpose() * sigma;
-        let sigma_b = sigma * &self.b;
+        let b = self.bop.to_dense_b();
+        let bt_sigma = &b.transpose() * sigma;
+        let sigma_b = sigma * &b;
         let mut out = &(&bt_sigma + &sigma_b) - sigma;
         // Quadratic part Y(Φ), Φ_{kl} = μ_k μ_l Σ_{kl}.
         let l = self.setup.dim;
@@ -246,12 +319,12 @@ impl MsdModel {
     /// quadratic part Y(𝓜Σ𝓜) walks the halved mirror-paired term list.
     /// `out` must not alias `sigma`.
     pub fn apply_into(&self, sigma: &Mat, ws: &mut MsdWorkspace, out: &mut Mat) {
-        let nl = self.b.rows();
+        let nl = self.bop.nl();
         assert_eq!((sigma.rows(), sigma.cols()), (nl, nl));
         assert_eq!((out.rows(), out.cols()), (nl, nl));
         debug_assert!(max_asymmetry(sigma) <= 1e-9 * sigma.max_abs().max(1e-300),
             "apply_into requires (numerically) symmetric Σ");
-        self.bt.mul_into(sigma, &mut ws.bt_sigma);
+        self.bop.mul_bt_into(sigma, &mut ws.bt_sigma);
         let t = ws.bt_sigma.data();
         let s = sigma.data();
         let o = out.data_mut();
@@ -381,7 +454,7 @@ impl MsdModel {
     /// never formed, and the loop is allocation-free (ping-pong Σ
     /// buffers). The algorithm is mean-square stable iff this is < 1.
     pub fn ms_stability_radius(&self, iters: usize) -> f64 {
-        let nl = self.b.rows();
+        let nl = self.bop.nl();
         let mut sigma = Mat::eye(nl);
         let mut next = Mat::zeros(nl, nl);
         let mut ws = self.workspace();
@@ -508,14 +581,29 @@ pub(super) fn build_quad_terms(s: &TheorySetup, cm: &dyn CombinerMoments) -> Vec
         total
     };
 
+    // k must satisfy k == a or C_{ak} possibly nonzero (k ∈ N_a ∪ {a}).
+    // Hoisted: invert the supports once (O(nnz)) instead of scanning all
+    // n columns per (a, b) pair — the ascending push order reproduces the
+    // historical filter order exactly, so the term list is unchanged.
+    let mut ks_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for k in 0..n {
+        for &m in cm.supp(k) {
+            ks_of[m].push(k);
+        }
+    }
+    for (a, list) in ks_of.iter_mut().enumerate() {
+        if let Err(pos) = list.binary_search(&a) {
+            list.insert(pos, a);
+        }
+    }
+
     let mut out = Vec::new();
     for a in 0..n {
-        // k must satisfy k == a or C_{ak} possibly nonzero (k ∈ N_a ∪ {a}).
-        let ks: Vec<usize> = (0..n).filter(|&k| k == a || cm.has(a, k)).collect();
+        let ks = &ks_of[a];
         for b in 0..n {
-            let ls: Vec<usize> = (0..n).filter(|&l| l == b || cm.has(b, l)).collect();
-            for &k in &ks {
-                for &l in &ls {
+            let ls = &ks_of[b];
+            for &k in ks {
+                for &l in ls {
                     let g_off = eval(a, k, b, l, false);
                     let g_diag = eval(a, k, b, l, true);
                     if g_off != 0.0 || g_diag != 0.0 {
@@ -584,7 +672,7 @@ mod tests {
 
     fn setup(n: usize, l: usize, m: usize, mg: usize, mu: f64) -> TheorySetup {
         let graph = Graph::ring(n, 1);
-        let c = combination_matrix(&graph, Rule::Metropolis);
+        let c = combination_matrix(&graph, Rule::Metropolis).to_dense();
         TheorySetup {
             n_nodes: n,
             dim: l,
@@ -819,6 +907,47 @@ mod tests {
             let diff = (&sigma - &reference).max_abs();
             assert!(diff < tol, "iteration {it}: diff {diff} (tol {tol})");
         }
+    }
+
+    /// The CSR linear path (used automatically above `DENSE_NL_LIMIT`)
+    /// must agree with the dense path on the full model surface: fast
+    /// operator application, trajectories, and both stability radii.
+    #[test]
+    fn sparse_linear_path_matches_dense() {
+        let s = setup(6, 4, 2, 1, 0.1);
+        let dense = MsdModel::new(s.clone());
+        let mut sparse = MsdModel::new(s.clone());
+        let b = build_b_csr(&s);
+        let bt = b.transpose();
+        sparse.bop = BOperator::Sparse { b, bt };
+
+        let mut rng = Pcg64::new(83, 0);
+        let nl = 24;
+        let mut ws_d = dense.workspace();
+        let mut ws_s = sparse.workspace();
+        let mut out_d = Mat::zeros(nl, nl);
+        let mut out_s = Mat::zeros(nl, nl);
+        for _ in 0..3 {
+            let sigma = random_sigma(nl, &mut rng);
+            dense.apply_into(&sigma, &mut ws_d, &mut out_d);
+            sparse.apply_into(&sigma, &mut ws_s, &mut out_s);
+            let tol = 1e-12 * out_d.max_abs().max(1.0);
+            let diff = (&out_s - &out_d).max_abs();
+            assert!(diff < tol, "apply_into diff {diff} (tol {tol})");
+        }
+
+        let wo = vec![0.5, -0.3, 0.8, 0.1];
+        let td = dense.trajectory(&wo, 200);
+        let ts = sparse.trajectory(&wo, 200);
+        for (x, y) in td.msd.iter().zip(&ts.msd) {
+            assert!((x - y).abs() < 1e-10 * x.abs().max(1e-30));
+        }
+        let rd = dense.ms_stability_radius(200);
+        let rs = sparse.ms_stability_radius(200);
+        assert!((rd - rs).abs() < 1e-10, "{rd} vs {rs}");
+        let md = dense.mean_radius(2000);
+        let ms = sparse.mean_radius(2000);
+        assert!((md - ms).abs() < 1e-10, "{md} vs {ms}");
     }
 
     /// More compression (smaller M, M_grad) must not *decrease* the

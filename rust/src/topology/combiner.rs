@@ -1,0 +1,338 @@
+//! Sparse combination matrices (DESIGN.md §10).
+//!
+//! A combination matrix over an N-node graph has exactly one nonzero
+//! column entry per in-neighbour plus the diagonal — O(E) entries, not
+//! O(N²). `Combiner` stores them in CSR, *receiver-major*: storage row k
+//! holds dense **column** k, i.e. the in-weights at receiver k, with
+//! column ids sorted ascending ({k} ∪ N(k) — the graph's sorted-neighbour
+//! invariant carries over). That orientation makes the per-iteration
+//! impairment rebuild and every algorithm's combine step walk one
+//! contiguous slice per node.
+//!
+//! Dense-matrix indexing convention is preserved: `c[(l, k)]` is the
+//! weight of sender l at receiver k (storage row k, column id l), so all
+//! call sites written against `Mat` compile unchanged.
+
+use std::ops::Index;
+
+use crate::linalg::Mat;
+
+use super::{Graph, Rule};
+
+static ZERO: f64 = 0.0;
+
+/// CSR combination matrix, receiver-major (see module docs). The
+/// diagonal entry of every receiver row is always stored, even when its
+/// value is zero, so in-place reallocation always has a slot to move
+/// weight into.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Combiner {
+    n: usize,
+    /// Row k (receiver k) spans `indptr[k]..indptr[k + 1]`.
+    indptr: Vec<usize>,
+    /// Sender ids per row, sorted ascending.
+    cols: Vec<usize>,
+    vals: Vec<f64>,
+    /// Position of the diagonal entry of each row inside `vals`.
+    diag: Vec<usize>,
+}
+
+impl Combiner {
+    /// Identity combiner (no cooperation): one diagonal entry per row.
+    pub fn eye(n: usize) -> Self {
+        Self {
+            n,
+            indptr: (0..=n).collect(),
+            cols: (0..n).collect(),
+            vals: vec![1.0; n],
+            diag: (0..n).collect(),
+        }
+    }
+
+    /// Build the combination matrix for `rule` on `g`, sparse natively.
+    /// Entry [l, k] = weight of neighbour l at node k; the arithmetic is
+    /// ordered exactly as the historical dense construction (Metropolis
+    /// subtracts neighbour weights from the diagonal in sorted-neighbour
+    /// order), so converted outputs are bit-identical.
+    pub fn from_rule(g: &Graph, rule: Rule) -> Self {
+        let n = g.n();
+        let mut out = Self::with_graph_structure(g);
+        match rule {
+            Rule::Identity => {
+                for k in 0..n {
+                    out.vals[out.diag[k]] = 1.0;
+                }
+            }
+            Rule::Uniform => {
+                for k in 0..n {
+                    let w = 1.0 / g.degree_incl(k) as f64;
+                    let span = out.indptr[k]..out.indptr[k + 1];
+                    for v in &mut out.vals[span] {
+                        *v = w;
+                    }
+                }
+            }
+            Rule::Metropolis => {
+                for k in 0..n {
+                    let mut diag = 1.0;
+                    for &l in g.neighbors(k) {
+                        let w = 1.0 / g.degree_incl(k).max(g.degree_incl(l)) as f64;
+                        let idx = out.entry_idx(k, l).expect("neighbour slot exists");
+                        out.vals[idx] = w;
+                        diag -= w;
+                    }
+                    out.vals[out.diag[k]] = diag;
+                }
+            }
+        }
+        out
+    }
+
+    /// All-zero values on the graph's structure ({k} ∪ N(k) per row).
+    fn with_graph_structure(g: &Graph) -> Self {
+        let n = g.n();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut cols = Vec::new();
+        let mut diag = Vec::with_capacity(n);
+        indptr.push(0);
+        for k in 0..n {
+            let mut placed = false;
+            for &l in g.neighbors(k) {
+                if !placed && l > k {
+                    diag.push(cols.len());
+                    cols.push(k);
+                    placed = true;
+                }
+                cols.push(l);
+            }
+            if !placed {
+                diag.push(cols.len());
+                cols.push(k);
+            }
+            indptr.push(cols.len());
+        }
+        let vals = vec![0.0; cols.len()];
+        Self { n, indptr, cols, vals, diag }
+    }
+
+    /// Sparsify a dense combination matrix. Nonzero entries of each
+    /// dense column become a storage row; the diagonal is always kept
+    /// structurally.
+    pub fn from_dense(m: &Mat) -> Self {
+        assert!(m.is_square(), "combiner must be square");
+        let n = m.rows();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut diag = Vec::with_capacity(n);
+        indptr.push(0);
+        for k in 0..n {
+            for l in 0..n {
+                let v = m[(l, k)];
+                if l == k {
+                    diag.push(cols.len());
+                    cols.push(l);
+                    vals.push(v);
+                } else if v != 0.0 {
+                    cols.push(l);
+                    vals.push(v);
+                }
+            }
+            indptr.push(cols.len());
+        }
+        Self { n, indptr, cols, vals, diag }
+    }
+
+    /// Densify (exact: values copy bit for bit).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.n, self.n);
+        for k in 0..self.n {
+            let (senders, weights) = self.row(k);
+            for (&l, &v) in senders.iter().zip(weights) {
+                out[(l, k)] = v;
+            }
+        }
+        out
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dense-shape compatibility: square, n x n.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored entries (≈ 2E + N on a graph structure).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Receiver k's in-edges as parallel (sender ids, weights) slices.
+    /// Sender ids are sorted ascending and include k itself.
+    pub fn row(&self, k: usize) -> (&[usize], &[f64]) {
+        let span = self.row_span(k);
+        (&self.cols[span.clone()], &self.vals[span])
+    }
+
+    /// The range of positions inside `vals` holding receiver k's row.
+    pub fn row_span(&self, k: usize) -> std::ops::Range<usize> {
+        self.indptr[k]..self.indptr[k + 1]
+    }
+
+    /// Position inside `vals` of the (receiver, sender) entry, if stored.
+    pub fn entry_idx(&self, receiver: usize, sender: usize) -> Option<usize> {
+        let span = self.indptr[receiver]..self.indptr[receiver + 1];
+        self.cols[span.clone()]
+            .binary_search(&sender)
+            .ok()
+            .map(|i| span.start + i)
+    }
+
+    /// Position inside `vals` of receiver k's diagonal entry. O(1).
+    pub fn diag_idx(&self, k: usize) -> usize {
+        self.diag[k]
+    }
+
+    /// The diagonal weight at node k. O(1).
+    pub fn diag(&self, k: usize) -> f64 {
+        self.vals[self.diag[k]]
+    }
+
+    /// Weight of sender l at receiver k (0 for non-stored pairs).
+    pub fn get(&self, l: usize, k: usize) -> f64 {
+        match self.entry_idx(k, l) {
+            Some(i) => self.vals[i],
+            None => 0.0,
+        }
+    }
+
+    /// Stored weights, receiver-major.
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Mutable stored weights — structure is fixed, which is what the
+    /// O(E) impairment rebuild relies on.
+    pub fn vals_mut(&mut self) -> &mut [f64] {
+        &mut self.vals
+    }
+
+    /// Dense-column sums (sum of in-weights per receiver): one stored
+    /// row each, O(nnz) total. A left-stochastic combiner has all 1s.
+    pub fn col_sums(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|k| self.row(k).1.iter().sum())
+            .collect()
+    }
+
+    /// Dense-row sums (sum of out-weights per sender), O(nnz). A
+    /// right-stochastic combiner has all 1s.
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        for (&l, &v) in self.cols.iter().zip(&self.vals) {
+            out[l] += v;
+        }
+        out
+    }
+
+    /// Whether this combiner equals the identity to 1e-12 (diagonal 1,
+    /// everything stored off-diagonal 0). O(nnz) — replaces the dense
+    /// O(N²) scans the algorithms used for no-cooperation detection.
+    pub fn is_identity(&self) -> bool {
+        for k in 0..self.n {
+            let (senders, weights) = self.row(k);
+            for (&l, &v) in senders.iter().zip(weights) {
+                let want = if l == k { 1.0 } else { 0.0 };
+                if (v - want).abs() > 1e-12 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl Index<(usize, usize)> for Combiner {
+    type Output = f64;
+
+    /// Dense-style indexing: `c[(l, k)]` = weight of sender l at
+    /// receiver k. Non-stored pairs read as 0.
+    fn index(&self, (l, k): (usize, usize)) -> &f64 {
+        match self.entry_idx(k, l) {
+            Some(i) => &self.vals[i],
+            None => &ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_is_identity() {
+        let c = Combiner::eye(5);
+        assert!(c.is_identity());
+        assert_eq!(c.nnz(), 5);
+        assert_eq!(c[(2, 2)], 1.0);
+        assert_eq!(c[(1, 2)], 0.0);
+        assert_eq!(c.to_dense(), Mat::eye(5));
+    }
+
+    #[test]
+    fn dense_roundtrip_preserves_values() {
+        let g = Graph::paper_ten_node();
+        let c = Combiner::from_rule(&g, Rule::Metropolis);
+        let d = c.to_dense();
+        let c2 = Combiner::from_dense(&d);
+        assert_eq!(c2.to_dense(), d);
+        for k in 0..10 {
+            for l in 0..10 {
+                assert_eq!(c[(l, k)], d[(l, k)], "entry ({l},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn structure_matches_graph() {
+        let g = Graph::ring(6, 1);
+        let c = Combiner::from_rule(&g, Rule::Uniform);
+        // 6 nodes x (2 neighbours + self) entries.
+        assert_eq!(c.nnz(), 18);
+        for k in 0..6 {
+            let (senders, _) = c.row(k);
+            assert!(senders.windows(2).all(|w| w[0] < w[1]));
+            assert!(senders.contains(&k));
+            assert_eq!(c.diag(k), 1.0 / 3.0);
+        }
+        assert_eq!(c.col_sums(), vec![1.0; 6]);
+    }
+
+    #[test]
+    fn identity_rule_keeps_structural_zeros() {
+        // Structural slots for every graph edge survive under Identity,
+        // so an impairment rebuild can still find them.
+        let g = Graph::ring(4, 1);
+        let c = Combiner::from_rule(&g, Rule::Identity);
+        assert!(c.is_identity());
+        assert_eq!(c.nnz(), 12);
+        assert!(c.entry_idx(0, 1).is_some());
+        assert_eq!(c[(1, 0)], 0.0);
+    }
+
+    #[test]
+    fn diag_index_is_consistent() {
+        let g = Graph::paper_ten_node();
+        let c = Combiner::from_rule(&g, Rule::Metropolis);
+        for k in 0..10 {
+            assert_eq!(c.entry_idx(k, k), Some(c.diag_idx(k)));
+            assert_eq!(c.diag(k), c[(k, k)]);
+        }
+    }
+}

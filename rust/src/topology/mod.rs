@@ -8,6 +8,10 @@
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 
+mod combiner;
+
+pub use combiner::Combiner;
+
 /// Undirected connected graph over `n` nodes.
 #[derive(Debug, Clone)]
 pub struct Graph {
@@ -19,18 +23,18 @@ pub struct Graph {
 }
 
 impl Graph {
-    /// Build from an undirected edge list.
+    /// Build from an undirected edge list. O(E log E): duplicates are
+    /// removed by sort + dedup rather than per-edge linear scans.
     pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
         let mut adj = vec![Vec::new(); n];
         for &(a, b) in edges {
             assert!(a < n && b < n && a != b, "bad edge ({a},{b})");
-            if !adj[a].contains(&b) {
-                adj[a].push(b);
-                adj[b].push(a);
-            }
+            adj[a].push(b);
+            adj[b].push(a);
         }
         for list in &mut adj {
             list.sort_unstable();
+            list.dedup();
         }
         Self { n, adj, positions: None }
     }
@@ -62,11 +66,23 @@ impl Graph {
 
     /// BFS connectivity check.
     pub fn is_connected(&self) -> bool {
+        let mut seen = Vec::new();
+        let mut stack = Vec::new();
+        self.is_connected_with(&mut seen, &mut stack)
+    }
+
+    /// Connectivity check with caller-owned scratch buffers — iterative
+    /// BFS, no per-call allocation once the buffers have grown to n.
+    /// On return `seen` marks the component containing node 0 (so a
+    /// `false` result leaves the caller with the partition for free).
+    pub fn is_connected_with(&self, seen: &mut Vec<bool>, stack: &mut Vec<usize>) -> bool {
         if self.n == 0 {
             return true;
         }
-        let mut seen = vec![false; self.n];
-        let mut stack = vec![0usize];
+        seen.clear();
+        seen.resize(self.n, false);
+        stack.clear();
+        stack.push(0);
         seen[0] = true;
         let mut count = 1;
         while let Some(k) = stack.pop() {
@@ -109,15 +125,18 @@ impl Graph {
         }
         let mut g = Self::from_edges(n, &edges);
         // Stitch components together through their closest node pairs.
-        while !g.is_connected() {
-            let comp = g.component_of(0);
+        // The BFS scratch doubles as the component mask, and each new
+        // edge is inserted in place — no graph rebuild per stitch.
+        let mut seen = Vec::new();
+        let mut stack = Vec::new();
+        while !g.is_connected_with(&mut seen, &mut stack) {
             let (mut best, mut bd) = ((0, 0), f64::INFINITY);
             for i in 0..n {
-                if !comp[i] {
+                if !seen[i] {
                     continue;
                 }
                 for j in 0..n {
-                    if comp[j] {
+                    if seen[j] {
                         continue;
                     }
                     let d = dist(pos[i], pos[j]);
@@ -127,26 +146,59 @@ impl Graph {
                     }
                 }
             }
-            edges.push(best);
-            g = Self::from_edges(n, &edges);
+            g.insert_edge(best.0, best.1);
         }
         g.positions = Some(pos);
         g
     }
 
-    fn component_of(&self, start: usize) -> Vec<bool> {
-        let mut seen = vec![false; self.n];
-        let mut stack = vec![start];
-        seen[start] = true;
-        while let Some(k) = stack.pop() {
-            for &j in &self.adj[k] {
-                if !seen[j] {
-                    seen[j] = true;
-                    stack.push(j);
+    /// Insert an undirected edge, keeping neighbour lists sorted.
+    fn insert_edge(&mut self, a: usize, b: usize) {
+        debug_assert!(a != b && a < self.n && b < self.n);
+        if let Err(i) = self.adj[a].binary_search(&b) {
+            self.adj[a].insert(i, b);
+        }
+        if let Err(i) = self.adj[b].binary_search(&a) {
+            self.adj[b].insert(i, a);
+        }
+    }
+
+    /// Rectangular 4-neighbour lattice (`rows * cols` nodes, node id
+    /// `r * cols + c`), with positions on the unit square. This is the
+    /// generator behind the large-N `mega-grid` scenario: building it is
+    /// O(N), unlike the O(N²) pair scan of `random_geometric`.
+    pub fn grid(rows: usize, cols: usize) -> Self {
+        assert!(rows * cols > 0, "empty grid");
+        let n = rows * cols;
+        let mut adj = vec![Vec::new(); n];
+        for r in 0..rows {
+            for c in 0..cols {
+                let id = r * cols + c;
+                // Pushed in ascending order: up, left, right, down.
+                if r > 0 {
+                    adj[id].push(id - cols);
+                }
+                if c > 0 {
+                    adj[id].push(id - 1);
+                }
+                if c + 1 < cols {
+                    adj[id].push(id + 1);
+                }
+                if r + 1 < rows {
+                    adj[id].push(id + cols);
                 }
             }
         }
-        seen
+        let pos = (0..n)
+            .map(|id| {
+                let (r, c) = (id / cols, id % cols);
+                (
+                    c as f64 / (cols.max(2) - 1) as f64,
+                    r as f64 / (rows.max(2) - 1) as f64,
+                )
+            })
+            .collect();
+        Self { n, adj, positions: Some(pos) }
     }
 
     /// The 10-node topology used in Experiment 1 (Fig. 2 left). The paper
@@ -187,38 +239,10 @@ pub enum Rule {
 
 /// Build an N x N combination matrix with entry [l, k] = weight of
 /// neighbour l at node k. Metropolis is doubly stochastic; Uniform is
-/// left-stochastic (columns sum to 1).
-pub fn combination_matrix(g: &Graph, rule: Rule) -> Mat {
-    let n = g.n();
-    let mut m = Mat::zeros(n, n);
-    match rule {
-        Rule::Identity => {
-            for k in 0..n {
-                m[(k, k)] = 1.0;
-            }
-        }
-        Rule::Uniform => {
-            for k in 0..n {
-                let w = 1.0 / g.degree_incl(k) as f64;
-                m[(k, k)] = w;
-                for &l in g.neighbors(k) {
-                    m[(l, k)] = w;
-                }
-            }
-        }
-        Rule::Metropolis => {
-            for k in 0..n {
-                let mut diag = 1.0;
-                for &l in g.neighbors(k) {
-                    let w = 1.0 / g.degree_incl(k).max(g.degree_incl(l)) as f64;
-                    m[(l, k)] = w;
-                    diag -= w;
-                }
-                m[(k, k)] = diag;
-            }
-        }
-    }
-    m
+/// left-stochastic (columns sum to 1). Sparse natively (O(E) storage);
+/// call [`Combiner::to_dense`] for the dense form the theory layer uses.
+pub fn combination_matrix(g: &Graph, rule: Rule) -> Combiner {
+    Combiner::from_rule(g, rule)
 }
 
 /// Column sums (for left-stochastic checks).
@@ -281,14 +305,19 @@ mod tests {
     fn metropolis_doubly_stochastic() {
         let g = Graph::paper_ten_node();
         let a = combination_matrix(&g, Rule::Metropolis);
-        for s in col_sums(&a) {
+        for s in a.col_sums() {
             assert!((s - 1.0).abs() < 1e-12);
         }
-        for s in row_sums(&a) {
+        for s in a.row_sums() {
             assert!((s - 1.0).abs() < 1e-12);
         }
         // Symmetry.
-        assert!((&a - &a.transpose()).max_abs() < 1e-12);
+        let d = a.to_dense();
+        assert!((&d - &d.transpose()).max_abs() < 1e-12);
+        // Dense conversion agrees with the historical dense builder.
+        for s in col_sums(&d) {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
         // Support matches the graph.
         for k in 0..g.n() {
             for l in 0..g.n() {
@@ -302,7 +331,7 @@ mod tests {
     fn uniform_left_stochastic() {
         let g = Graph::ring(7, 2);
         let a = combination_matrix(&g, Rule::Uniform);
-        for s in col_sums(&a) {
+        for s in a.col_sums() {
             assert!((s - 1.0).abs() < 1e-12);
         }
         assert!((a[(0, 0)] - 0.2).abs() < 1e-12); // degree_incl = 5
@@ -312,7 +341,30 @@ mod tests {
     fn identity_rule() {
         let g = Graph::ring(4, 1);
         let a = combination_matrix(&g, Rule::Identity);
-        assert!((&a - &Mat::eye(4)).max_abs() == 0.0);
+        assert!((&a.to_dense() - &Mat::eye(4)).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = Graph::grid(3, 4);
+        assert_eq!(g.n(), 12);
+        assert!(g.is_connected());
+        // 3 * 3 horizontal + 2 * 4 vertical edges.
+        assert_eq!(g.edge_count(), 17);
+        // Interior node 5 = (1, 1): 4 neighbours.
+        assert_eq!(g.neighbors(5), &[1, 4, 6, 9]);
+        // Corners have 2.
+        assert_eq!(g.degree_incl(0), 3);
+        assert!(g.positions.is_some());
+    }
+
+    #[test]
+    fn connectivity_scratch_marks_component() {
+        let g = Graph::from_edges(5, &[(0, 1), (2, 3), (3, 4)]);
+        let mut seen = Vec::new();
+        let mut stack = Vec::new();
+        assert!(!g.is_connected_with(&mut seen, &mut stack));
+        assert_eq!(seen, vec![true, true, false, false, false]);
     }
 
     #[test]

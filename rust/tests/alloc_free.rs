@@ -8,7 +8,8 @@
 //! is process-global and must not see traffic from concurrently running
 //! tests.
 
-use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::algorithms::{CommMeter, Dcd, NetworkConfig};
+use dcd_lms::coordinator::impairments::{Gating, ImpairmentState, LinkImpairments};
 use dcd_lms::theory::{ImpairedMsdModel, MsdModel, TheorySetup};
 use dcd_lms::topology::{combination_matrix, Graph, Rule};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -53,7 +54,7 @@ fn theory_iteration_loops_do_not_allocate() {
     let n = 6;
     let l = 4;
     let graph = Graph::ring(n, 1);
-    let c = combination_matrix(&graph, Rule::Metropolis);
+    let c = combination_matrix(&graph, Rule::Metropolis).to_dense();
     let setup = TheorySetup {
         n_nodes: n,
         dim: l,
@@ -115,4 +116,45 @@ fn theory_iteration_loops_do_not_allocate() {
     let (short, _) = allocs_during(|| std::hint::black_box(impaired.ms_stability_radius(100)));
     let (long, _) = allocs_during(|| std::hint::black_box(impaired.ms_stability_radius(400)));
     assert_eq!(short, long, "impaired ms_stability_radius allocates per iteration");
+
+    // The coordinator's per-iteration effective-matrix rebuild
+    // (DESIGN.md §10) is one O(E) value memcpy plus in-place CSR edits —
+    // it must also run without heap traffic once the state exists.
+    let graph = Graph::random_geometric(12, 0.5, &mut dcd_lms::rng::Pcg64::new(8, 0));
+    let n = graph.n();
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let net = NetworkConfig { graph, c, a, mu: vec![5e-3; n], dim: 4 };
+    let mut alg = Dcd::new(net.clone(), 2, 1);
+    let mut comm = CommMeter::new(n);
+    let mut state = ImpairmentState::new(&net, 77, 1);
+    let rebuild = |state: &mut ImpairmentState,
+                   alg: &mut Dcd,
+                   comm: &mut CommMeter,
+                   iters: usize| {
+        for _ in 0..iters {
+            state.begin_iteration(&imp, alg, comm);
+        }
+    };
+    rebuild(&mut state, &mut alg, &mut comm, 8); // warm-up
+    let (short, _) = allocs_during(|| rebuild(&mut state, &mut alg, &mut comm, 100));
+    let (long, _) = allocs_during(|| rebuild(&mut state, &mut alg, &mut comm, 400));
+    assert_eq!(short, long, "impairment rebuild allocates per iteration");
+
+    // Same discipline for the expected-combiner (Ā, C̄) refresh used by
+    // the theory anchor: the `_into` variants reuse caller buffers.
+    let mut a_bar = net.a.clone();
+    let mut c_bar = net.c.clone();
+    imp.expected_combiners_into(&net, &mut a_bar, &mut c_bar)
+        .expect("bernoulli gating has expected combiners");
+    let refresh = |a_bar: &mut dcd_lms::topology::Combiner,
+                   c_bar: &mut dcd_lms::topology::Combiner,
+                   iters: usize| {
+        for _ in 0..iters {
+            let _ = imp.expected_combiners_into(&net, a_bar, c_bar);
+        }
+    };
+    let (short, _) = allocs_during(|| refresh(&mut a_bar, &mut c_bar, 50));
+    let (long, _) = allocs_during(|| refresh(&mut a_bar, &mut c_bar, 200));
+    assert_eq!(short, long, "expected_combiners_into allocates per call");
 }

@@ -100,6 +100,7 @@ fn scenario_list_shows_the_registry() {
         "lossy-geometric",
         "event-triggered-ring",
         "quantized-dense",
+        "mega-grid",
     ] {
         assert!(text.contains(name), "scenario list missing {name}:\n{text}");
     }

@@ -131,7 +131,7 @@ fn partial_engines_agree() {
 
     // Partial diffusion uses C = I.
     let mut net = s.net.clone();
-    net.c = dcd_lms::linalg::Mat::eye(n);
+    net.c = dcd_lms::topology::Combiner::eye(n);
     let w0 = vec![0f32; n * l];
     let (a32, mu32, wo32) = (net.a_f32(), net.mu_f32(), s.model.wo_f32());
     let out = rt
@@ -172,7 +172,7 @@ fn rcd_engines_agree() {
     }
 
     let mut net = s.net.clone();
-    net.c = dcd_lms::linalg::Mat::eye(n);
+    net.c = dcd_lms::topology::Combiner::eye(n);
     let w0 = vec![0f32; n * l];
     let (a32, mu32, wo32) = (net.a_f32(), net.mu_f32(), s.model.wo_f32());
     let out = rt

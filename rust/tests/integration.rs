@@ -295,7 +295,7 @@ fn theory_emse_weighting() {
     let n = 6;
     let l = 4;
     let graph = Graph::ring(n, 1);
-    let c = combination_matrix(&graph, Rule::Metropolis);
+    let c = combination_matrix(&graph, Rule::Metropolis).to_dense();
     let setup = TheorySetup {
         n_nodes: n,
         dim: l,

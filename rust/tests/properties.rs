@@ -309,7 +309,14 @@ fn prop_rcd_consensus_preserved() {
 fn prop_metropolis_doubly_stochastic() {
     check(&PropConfig { cases: 80, seed: 37 }, &case_gen(), |case| {
         let graph = Graph::ring(case.n, case.hops);
-        let a = combination_matrix(&graph, Rule::Metropolis);
+        let sparse = combination_matrix(&graph, Rule::Metropolis);
+        let a = sparse.to_dense();
+        // Sparse accessors must agree with the dense view they abstract.
+        for (k, (cs, rs)) in sparse.col_sums().iter().zip(sparse.row_sums()).enumerate() {
+            if (cs - 1.0).abs() > 1e-9 || (rs - 1.0).abs() > 1e-9 {
+                return Err(format!("sparse node {k}: col {cs} row {rs}"));
+            }
+        }
         for k in 0..case.n {
             let col: f64 = (0..case.n).map(|l| a[(l, k)]).sum();
             let row: f64 = a.row(k).iter().sum();
@@ -328,4 +335,96 @@ fn prop_metropolis_doubly_stochastic() {
         let _ = Mat::eye(2);
         Ok(())
     });
+}
+
+/// CSR kernels agree with dense linear algebra on random geometric
+/// graphs across three decades of N — the correctness base under the
+/// sparse fast path (DESIGN.md §10).
+#[test]
+fn sparse_kernels_match_dense_on_geometric_graphs() {
+    use dcd_lms::linalg::SparseMat;
+    for &(n, radius, seed) in &[(10usize, 0.5, 41u64), (50, 0.25, 42), (200, 0.12, 43)] {
+        let mut rng = Pcg64::new(seed, 0);
+        let graph = Graph::random_geometric(n, radius, &mut rng);
+        let dense = combination_matrix(&graph, Rule::Metropolis).to_dense();
+        let sparse = SparseMat::from_dense(&dense);
+        assert_eq!(sparse.to_dense(), dense, "N={n}: from_dense/to_dense roundtrip");
+
+        // spmv vs dense matvec.
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let want = dense.matvec(&x);
+        let got = sparse.spmv(&x);
+        let mut got_into = vec![0.0; n];
+        sparse.spmv_into(&x, &mut got_into);
+        for k in 0..n {
+            assert!((got[k] - want[k]).abs() < 1e-12, "N={n} spmv row {k}");
+            assert!((got_into[k] - want[k]).abs() < 1e-12, "N={n} spmv_into row {k}");
+        }
+
+        // transpose / transpose_into vs the dense transpose.
+        let dt = dense.transpose();
+        assert_eq!(sparse.transpose().to_dense(), dt, "N={n}: transpose");
+        let mut tbuf = SparseMat::zeros(1, 1);
+        sparse.transpose_into(&mut tbuf);
+        assert_eq!(tbuf.to_dense(), dt, "N={n}: transpose_into");
+    }
+}
+
+/// The O(E) in-place effective-matrix rebuild must match a direct dense
+/// reconstruction from the same drawn outcomes, on every graph size.
+#[test]
+fn effective_rebuild_matches_dense_reconstruction() {
+    use dcd_lms::coordinator::impairments::{Gating, ImpairmentState, LinkImpairments};
+    let imp = LinkImpairments {
+        drop_prob: 0.3,
+        gating: Gating::Probabilistic(0.8),
+        quant_step: 0.0,
+    };
+    for &(n, radius, seed) in &[(10usize, 0.5, 51u64), (50, 0.25, 52), (200, 0.12, 53)] {
+        let mut rng = Pcg64::new(seed, 0);
+        let graph = Graph::random_geometric(n, radius, &mut rng);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Uniform);
+        let a0 = a.to_dense();
+        let c0 = c.to_dense();
+        let net = NetworkConfig { graph, c, a, mu: vec![1e-2; n], dim: 3 };
+        let mut alg = Dcd::new(net.clone(), 2, 1);
+        let mut comm = CommMeter::new(n);
+        let mut state = ImpairmentState::new(&net, seed, 9);
+        for iter in 0..5 {
+            state.begin_iteration(&imp, &mut alg, &mut comm);
+            // Dense reconstruction from the published outcomes: dead
+            // l → k links move their mass to the receiver's diagonal; a
+            // silent receiver also collapses its whole C column.
+            let mut a_want = a0.clone();
+            let mut c_want = c0.clone();
+            for k in 0..n {
+                for &lnb in net.graph.neighbors(k) {
+                    let dead = !state.delivered().delivered(lnb, k);
+                    if dead {
+                        a_want[(k, k)] += a_want[(lnb, k)];
+                        a_want[(lnb, k)] = 0.0;
+                    }
+                    if dead || state.silent()[k] {
+                        c_want[(k, k)] += c_want[(lnb, k)];
+                        c_want[(lnb, k)] = 0.0;
+                    }
+                }
+            }
+            let (a_eff, c_eff) = {
+                let netr = alg.network();
+                (netr.a.to_dense(), netr.c.to_dense())
+            };
+            let da = (&a_eff - &a_want).max_abs();
+            let dc = (&c_eff - &c_want).max_abs();
+            assert!(da < 1e-12, "N={n} iter {iter}: A rebuild off by {da}");
+            assert!(dc < 1e-12, "N={n} iter {iter}: C rebuild off by {dc}");
+            // Column mass is conserved exactly by the reallocation.
+            for (k, s) in dcd_lms::topology::col_sums(&a_eff).iter().enumerate() {
+                assert!((s - 1.0).abs() < 1e-9, "N={n} col {k} sum {s}");
+            }
+        }
+        state.restore(&mut alg, &mut comm);
+        assert_eq!(alg.network().a.to_dense(), a0, "restore puts A back");
+    }
 }

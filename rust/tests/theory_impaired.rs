@@ -17,7 +17,7 @@ use dcd_lms::topology::{combination_matrix, Graph, Rule};
 
 fn setup(n: usize, l: usize, m: usize, mg: usize, mu: f64) -> TheorySetup {
     let graph = Graph::ring(n, 1);
-    let c = combination_matrix(&graph, Rule::Metropolis);
+    let c = combination_matrix(&graph, Rule::Metropolis).to_dense();
     TheorySetup {
         n_nodes: n,
         dim: l,

@@ -6,11 +6,10 @@
 use dcd_lms::algorithms::{Dcd, NetworkConfig};
 use dcd_lms::coordinator::MonteCarlo;
 use dcd_lms::datamodel::DataModel;
-use dcd_lms::linalg::Mat;
 use dcd_lms::metrics::to_db;
 use dcd_lms::rng::Pcg64;
 use dcd_lms::theory::{MeanModel, MsdModel, TheorySetup};
-use dcd_lms::topology::{combination_matrix, Graph, Rule};
+use dcd_lms::topology::{combination_matrix, Combiner, Graph, Rule};
 
 fn setup(m: usize, mg: usize, mu: f64) -> (TheorySetup, NetworkConfig, DataModel) {
     let n = 10;
@@ -24,12 +23,12 @@ fn setup(m: usize, mg: usize, mu: f64) -> (TheorySetup, NetworkConfig, DataModel
         dim: l,
         m,
         m_grad: mg,
-        c: c.clone(),
+        c: c.to_dense(),
         mu: vec![mu; n],
         sigma_u2: model.sigma_u2.clone(),
         sigma_v2: model.sigma_v2.clone(),
     };
-    let net = NetworkConfig { graph, c, a: Mat::eye(n), mu: vec![mu; n], dim: l };
+    let net = NetworkConfig { graph, c, a: Combiner::eye(n), mu: vec![mu; n], dim: l };
     (setup, net, model)
 }
 
