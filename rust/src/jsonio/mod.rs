@@ -26,7 +26,7 @@ impl Json {
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { src: src.as_bytes(), pos: 0 };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.pos != p.src.len() {
             return Err(p.err("trailing characters"));
@@ -225,6 +225,15 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Nesting cap for the recursive-descent parser: the grammar recurses
+/// per `[`/`{`, so without a cap a line of a few hundred kilobytes of
+/// `[[[[…` overflows the thread stack — an *abort*, not a catchable
+/// error, and reachable from any malformed protocol frame. Nothing the
+/// repo emits nests deeper than ~6 levels; 256 is three orders of
+/// magnitude of headroom while keeping worst-case recursion a few
+/// hundred stack frames.
+const MAX_DEPTH: usize = 256;
+
 struct Parser<'a> {
     src: &'a [u8],
     pos: usize,
@@ -269,10 +278,13 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -282,7 +294,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, JsonError> {
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -296,7 +308,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             self.skip_ws();
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
             map.insert(key, val);
             self.skip_ws();
             match self.bump() {
@@ -307,7 +319,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -317,7 +329,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -479,6 +491,22 @@ mod tests {
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    /// Pathological nesting is a parse error, not a stack overflow:
+    /// the depth cap has to trip well before the recursion can abort
+    /// the process (malformed protocol frames reach this parser).
+    #[test]
+    fn rejects_pathological_nesting() {
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        let deep_objs = "{\"k\":".repeat(50_000) + "1";
+        let err = Json::parse(&deep_objs).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // Within the cap, deep-but-sane documents still parse.
+        let ok = "[".repeat(200) + &"]".repeat(200);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

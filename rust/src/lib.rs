@@ -34,6 +34,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod shard;
 pub mod testing;
 pub mod theory;

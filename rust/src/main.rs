@@ -9,6 +9,8 @@
 //! dcd-lms scenario run --name NAME [...]    # one declarative scenario
 //! dcd-lms scenario sweep --name NAME --key K --values V1,V2,...
 //! dcd-lms theory  --m M --m-grad MG [--drop-prob P] [...]  # stability + steady state
+//! dcd-lms serve [--listen HOST:PORT] [--cache DIR]  # resident daemon + result cache
+//! dcd-lms scenario run --name NAME --via HOST:PORT  # submit to a resident daemon
 //! dcd-lms validate                          # rust engine ≡ xla engine
 //! dcd-lms info                              # artifact manifest
 //! ```
@@ -106,8 +108,19 @@ fn build_app() -> App {
                 .opt("threads", "worker threads (0 = auto)")
                 .opt("shards", "worker processes (default 1; bit-identical results)")
                 .opt("key", "sweep: dotted scenario key, e.g. impairments.drop_prob")
-                .opt("values", "sweep: comma-separated values for --key"),
+                .opt("values", "sweep: comma-separated values for --key")
+                .opt("via", "run: submit to a resident serve daemon at HOST:PORT"),
             ),
+            Command::new(
+                "serve",
+                "resident scenario service with a content-addressed result cache",
+            )
+            .opt("listen", "HOST:PORT to listen on (default: one session on stdin/stdout)")
+            .opt("stop", "drain and stop the daemon at HOST:PORT, then exit")
+            .opt("cache", "result-cache root directory (default serve-cache/)")
+            .opt("workers", "worker threads draining the job queue (default 2)")
+            .opt("queue-depth", "max queued jobs before submits are refused (default 64)")
+            .opt("cache-max-entries", "FIFO cache eviction bound (default 0 = unlimited)"),
             Command::new("theory", "stability bounds + theoretical steady state")
                 .opt("n", "nodes (default 10)")
                 .opt("dim", "dimension L (default 5)")
@@ -276,6 +289,7 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             Ok(())
         }
         "scenario" => cmd_scenario(args),
+        "serve" => cmd_serve(args),
         "shard-worker" => dcd_lms::shard::worker_main().map_err(|e| anyhow!(e)),
         "theory" => cmd_theory(args),
         "validate" => cmd_validate(args),
@@ -357,6 +371,14 @@ fn cmd_scenario(args: &ParsedArgs) -> Result<()> {
         }
         "run" => {
             let sc = resolve_scenario(args)?;
+            if let Some(addr) = args.get("via") {
+                // Hand the run to a resident daemon; artifacts come
+                // back inline and land in --out byte-identical to a
+                // local run (DESIGN.md §11).
+                dcd_lms::serve::run_via(addr, &sc, Some(&out_dir(args)), args.flag("quiet"))
+                    .map_err(anyhow::Error::msg)?;
+                return Ok(());
+            }
             dcd_lms::scenario::run_scenario(&sc, Some(&out_dir(args)), args.flag("quiet"))
                 .map_err(anyhow::Error::msg)?;
             Ok(())
@@ -386,6 +408,23 @@ fn cmd_scenario(args: &ParsedArgs) -> Result<()> {
         other => Err(anyhow!(
             "unknown scenario action {other:?} (expected list | run | sweep)"
         )),
+    }
+}
+
+/// `dcd-lms serve`: run a resident daemon (stdio or TCP), or stop one.
+fn cmd_serve(args: &ParsedArgs) -> Result<()> {
+    if let Some(addr) = args.get("stop") {
+        return dcd_lms::serve::stop_via(addr).map_err(anyhow::Error::msg);
+    }
+    let cfg = dcd_lms::serve::ServeConfig {
+        cache_dir: args.get("cache").unwrap_or("serve-cache").to_string(),
+        workers: args.get_or("workers", 2).map_err(anyhow::Error::msg)?,
+        queue_depth: args.get_or("queue-depth", 64).map_err(anyhow::Error::msg)?,
+        max_entries: args.get_or("cache-max-entries", 0).map_err(anyhow::Error::msg)?,
+    };
+    match args.get("listen") {
+        Some(addr) => dcd_lms::serve::serve_tcp(&cfg, addr).map_err(anyhow::Error::msg),
+        None => dcd_lms::serve::serve_stdio(&cfg).map_err(anyhow::Error::msg),
     }
 }
 

@@ -267,12 +267,19 @@ fn run_mc(
     model: &DataModel,
     net: &NetworkConfig,
     mc: &MonteCarlo,
+    progress: Option<crate::shard::ShardProgress>,
 ) -> Result<McResult, String> {
     if sc.shards > 1 {
-        return crate::shard::run_scenario_sharded(sc);
+        return crate::shard::run_scenario_sharded_progress(sc, progress);
     }
     let imp = if sc.impairments.is_ideal() { None } else { Some(&sc.impairments) };
-    Ok(mc.run_rust_with(model, imp, || sc.algorithm.build(net.clone())))
+    let res = mc.run_rust_with(model, imp, || sc.algorithm.build(net.clone()));
+    // The in-process path is one logical shard; report its completion
+    // so serve-mode progress streams work at shards = 1 too.
+    if let Some(report) = progress {
+        report(0, 1, 1);
+    }
+    Ok(res)
 }
 
 /// The `"manifest"` object recorded in `results/<name>.json`: the
@@ -344,10 +351,24 @@ pub fn run_scenario(
     out_dir: Option<&str>,
     quiet: bool,
 ) -> Result<ScenarioOutput, String> {
+    run_scenario_with_progress(sc, out_dir, quiet, None)
+}
+
+/// [`run_scenario`] with an optional per-shard progress callback
+/// `(shard_idx, done_shards, total_shards)` — the serve daemon's
+/// streaming hook (DESIGN.md §11). The callback is observational only
+/// (`None` is the exact historical code path), so serve-mode execution
+/// writes byte-identical artifacts.
+pub fn run_scenario_with_progress(
+    sc: &Scenario,
+    out_dir: Option<&str>,
+    quiet: bool,
+    progress: Option<crate::shard::ShardProgress>,
+) -> Result<ScenarioOutput, String> {
     sc.validate()?;
     let out = match sc.mode {
-        ScheduleMode::Rounds => run_rounds_scenario(sc, quiet)?,
-        ScheduleMode::Wsn { .. } => run_wsn_scenario(sc)?,
+        ScheduleMode::Rounds => run_rounds_scenario(sc, quiet, progress)?,
+        ScheduleMode::Wsn { .. } => run_wsn_scenario(sc, progress)?,
     };
 
     if !quiet {
@@ -393,10 +414,14 @@ pub fn run_scenario(
 }
 
 /// The synchronous-round execution path (the default mode).
-fn run_rounds_scenario(sc: &Scenario, quiet: bool) -> Result<ScenarioOutput, String> {
+fn run_rounds_scenario(
+    sc: &Scenario,
+    quiet: bool,
+    progress: Option<crate::shard::ShardProgress>,
+) -> Result<ScenarioOutput, String> {
     let record_every = sc.effective_record_every();
     let (model, net, mc) = mc_parts(sc)?;
-    let res = run_mc(sc, &model, &net, &mc)?;
+    let res = run_mc(sc, &model, &net, &mc, progress)?;
 
     let x: Vec<f64> = (1..=res.msd.len()).map(|i| (i * record_every) as f64).collect();
     let y: Vec<f64> = res.msd.iter().map(|&v| to_db(v)).collect();
@@ -439,11 +464,18 @@ fn run_rounds_scenario(sc: &Scenario, quiet: bool) -> Result<ScenarioOutput, Str
 /// The `mode = wsn` execution path: independent event-driven
 /// realizations fanned across threads (or worker processes with
 /// `shards > 1`), merged in run order.
-fn run_wsn_scenario(sc: &Scenario) -> Result<ScenarioOutput, String> {
+fn run_wsn_scenario(
+    sc: &Scenario,
+    progress: Option<crate::shard::ShardProgress>,
+) -> Result<ScenarioOutput, String> {
     let results = if sc.shards > 1 {
-        crate::shard::run_scenario_wsn_sharded(sc)?
+        crate::shard::run_scenario_wsn_sharded_progress(sc, progress)?
     } else {
-        wsn_block(sc, 0, sc.runs, sc.threads)?
+        let results = wsn_block(sc, 0, sc.runs, sc.threads)?;
+        if let Some(report) = progress {
+            report(0, 1, 1);
+        }
+        results
     };
     let mut acc = TraceAccumulator::new();
     let mut ledger = CommLedger::empty(0);

@@ -1,0 +1,411 @@
+//! The content-addressed result cache behind `dcd-lms serve`
+//! (DESIGN.md §11).
+//!
+//! A job's cache key is the SHA-256 of `(code tag, canonical scenario
+//! INI)`. Canonicalization goes through the scenario layer's own
+//! lossless round-trip — `Scenario::parse_str` fills every default and
+//! `to_ini_string` emits each key in one fixed section/key order — so
+//! two textually different but semantically identical INIs (key order,
+//! whitespace, comments, spelled-out defaults) collapse to one entry,
+//! while *every* semantic key (including the seed and the schedule
+//! knobs that are recorded in the results-JSON manifest) keeps its own
+//! entry. The only value rewritten beyond that round-trip is
+//! `record_every = 0`, which is resolved to its effective stride — the
+//! artifacts are a pure function of the effective value (DESIGN.md §11
+//! spells out the bit-identity argument).
+//!
+//! On disk an entry is the *verbatim* artifact triple `run_scenario`
+//! wrote — `<name>.csv`, `<name>.json`, `<name>_ledger.csv` — plus an
+//! `entry.json` manifest, under `<root>/<key[..2]>/<key>/`. Entries are
+//! committed by renaming a fully-written staging directory into place,
+//! so readers never observe a torn entry; eviction is FIFO by a
+//! persisted monotonic sequence number (`--cache-max-entries`).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::jsonio::{obj, Json};
+use crate::scenario::Scenario;
+
+/// The code-version tag folded into every cache key: results are only
+/// reusable across daemon restarts of the *same* simulator build, so a
+/// crate-version bump (or a frame-protocol bump, which tracks result
+/// semantics) invalidates the whole cache rather than ever serving
+/// stale bytes.
+pub fn code_tag() -> String {
+    format!(
+        "dcd-lms/{}+proto{}.{}",
+        env!("CARGO_PKG_VERSION"),
+        crate::shard::PROTOCOL_VERSION,
+        crate::shard::SESSION_PROTOCOL_VERSION,
+    )
+}
+
+/// The canonical execution form of a scenario: the parse → serialize
+/// round-trip (fixed key order, defaults filled in) with the one
+/// artifact-neutral rewrite, `record_every = 0` resolved to its
+/// effective stride. The daemon *executes* this form, which is why a
+/// cached artifact is byte-identical to recomputing the submitted text
+/// (DESIGN.md §11).
+pub fn canonical_scenario(sc: &Scenario) -> Scenario {
+    let mut c = sc.clone();
+    c.record_every = c.effective_record_every();
+    c
+}
+
+/// Canonical INI text of a scenario spec (see [`canonical_scenario`]).
+pub fn canonical_spec(src: &str) -> Result<String, String> {
+    let sc = Scenario::parse_str(src)?;
+    Ok(canonical_scenario(&sc).to_ini_string())
+}
+
+/// The content-addressed cache key of a scenario: SHA-256 over the
+/// code tag and the canonical INI (which carries the seed).
+pub fn job_key(sc: &Scenario) -> String {
+    let text = format!("{}\n{}", code_tag(), canonical_scenario(sc).to_ini_string());
+    sha256_hex(text.as_bytes())
+}
+
+/// One cached artifact triple, read back as text (the session protocol
+/// ships artifacts inline so `--via` clients write identical files).
+#[derive(Debug, Clone)]
+pub struct CachedResult {
+    /// The entry's cache key (SHA-256 hex).
+    pub key: String,
+    /// Scenario name — the artifact file stem.
+    pub name: String,
+    /// `<name>.csv` bytes.
+    pub csv: String,
+    /// `<name>.json` bytes.
+    pub json: String,
+    /// `<name>_ledger.csv` bytes.
+    pub ledger_csv: String,
+}
+
+/// The on-disk cache. All mutating operations serialize on one lock;
+/// concurrent daemons sharing a root are additionally protected by the
+/// atomic rename commit (the loser of a commit race simply adopts the
+/// winner's entry).
+pub struct ResultCache {
+    root: PathBuf,
+    max_entries: usize,
+    lock: Mutex<()>,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) a cache rooted at `root`.
+    /// `max_entries = 0` disables eviction.
+    pub fn open(root: &str, max_entries: usize) -> Result<Self, String> {
+        let root = PathBuf::from(root);
+        std::fs::create_dir_all(&root)
+            .map_err(|e| format!("creating cache root {}: {e}", root.display()))?;
+        Ok(Self { root, max_entries, lock: Mutex::new(()) })
+    }
+
+    fn entry_dir(&self, key: &str) -> PathBuf {
+        self.root.join(&key[..2]).join(key)
+    }
+
+    /// Cheap existence probe (no artifact reads).
+    pub fn contains(&self, key: &str) -> bool {
+        key.len() == 64 && self.entry_dir(key).join("entry.json").is_file()
+    }
+
+    /// Read an entry's artifacts back, bumping its hit counter
+    /// (best effort — a failed bump never fails the lookup).
+    pub fn lookup(&self, key: &str) -> Option<CachedResult> {
+        if !self.contains(key) {
+            return None;
+        }
+        let dir = self.entry_dir(key);
+        let manifest = Json::parse(&std::fs::read_to_string(dir.join("entry.json")).ok()?).ok()?;
+        let name = manifest.get("name").as_str()?.to_string();
+        let result = CachedResult {
+            key: key.to_string(),
+            name: name.clone(),
+            csv: std::fs::read_to_string(dir.join(format!("{name}.csv"))).ok()?,
+            json: std::fs::read_to_string(dir.join(format!("{name}.json"))).ok()?,
+            ledger_csv: std::fs::read_to_string(dir.join(format!("{name}_ledger.csv"))).ok()?,
+        };
+        let _guard = self.lock.lock().expect("cache lock poisoned");
+        if let (Some(mut m), Some(hits)) =
+            (manifest.as_obj().cloned(), manifest.get("hits").as_u64())
+        {
+            m.insert("hits".to_string(), Json::Num((hits + 1) as f64));
+            let _ = std::fs::write(dir.join("entry.json"), Json::Obj(m).to_string_pretty());
+        }
+        Some(result)
+    }
+
+    /// A private staging directory for one job's artifacts; the caller
+    /// runs the scenario into it and then [`ResultCache::commit`]s.
+    pub fn staging_dir(&self, key: &str, token: u64) -> Result<PathBuf, String> {
+        let dir = self
+            .root
+            .join(format!("staging-{}-{}-{token}", &key[..12], std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("creating staging dir {}: {e}", dir.display()))?;
+        Ok(dir)
+    }
+
+    /// Atomically publish a fully-written staging directory as the
+    /// entry for `key`: write the `entry.json` manifest, rename into
+    /// place, then apply FIFO eviction. If another writer won the race
+    /// the staging copy is discarded and the existing entry is read
+    /// back — either way the returned artifacts are the entry's bytes.
+    pub fn commit(
+        &self,
+        key: &str,
+        sc: &Scenario,
+        staging: &Path,
+    ) -> Result<CachedResult, String> {
+        let guard = self.lock.lock().expect("cache lock poisoned");
+        let seq = self.max_seq() + 1;
+        let manifest = obj(vec![
+            ("key", Json::Str(key.to_string())),
+            ("name", Json::Str(sc.name.clone())),
+            ("seq", Json::Num(seq as f64)),
+            ("hits", Json::Num(0.0)),
+            ("code_tag", Json::Str(code_tag())),
+            ("spec", Json::Str(canonical_scenario(sc).to_ini_string())),
+        ]);
+        std::fs::write(staging.join("entry.json"), manifest.to_string_pretty())
+            .map_err(|e| format!("writing cache manifest: {e}"))?;
+        let dir = self.entry_dir(key);
+        let parent = dir.parent().expect("entry dir has a shard parent");
+        std::fs::create_dir_all(parent)
+            .map_err(|e| format!("creating cache shard {}: {e}", parent.display()))?;
+        if let Err(e) = std::fs::rename(staging, &dir) {
+            // Lost a commit race (the rename target already exists) —
+            // adopt the published entry.
+            std::fs::remove_dir_all(staging).ok();
+            if !self.contains(key) {
+                return Err(format!("publishing cache entry {}: {e}", dir.display()));
+            }
+        }
+        self.evict_locked();
+        drop(guard);
+        self.lookup(key)
+            .ok_or_else(|| format!("cache entry {key} vanished after commit"))
+    }
+
+    /// All `(seq, entry_dir)` pairs currently in the cache.
+    fn entries(&self) -> Vec<(u64, PathBuf)> {
+        let mut out = Vec::new();
+        let Ok(shards) = std::fs::read_dir(&self.root) else {
+            return out;
+        };
+        for shard in shards.flatten() {
+            // Entry shards are two-hex-char directories; staging dirs
+            // and strays are skipped.
+            if shard.file_name().to_string_lossy().len() != 2 {
+                continue;
+            }
+            let Ok(dirs) = std::fs::read_dir(shard.path()) else {
+                continue;
+            };
+            for entry in dirs.flatten() {
+                let manifest = entry.path().join("entry.json");
+                let Ok(text) = std::fs::read_to_string(&manifest) else {
+                    continue;
+                };
+                let seq = Json::parse(&text)
+                    .ok()
+                    .and_then(|m| m.get("seq").as_u64())
+                    .unwrap_or(0);
+                out.push((seq, entry.path()));
+            }
+        }
+        out
+    }
+
+    /// Number of committed entries.
+    pub fn len(&self) -> usize {
+        self.entries().len()
+    }
+
+    /// True when the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn max_seq(&self) -> u64 {
+        self.entries().into_iter().map(|(seq, _)| seq).max().unwrap_or(0)
+    }
+
+    /// FIFO eviction: drop lowest-sequence entries until at most
+    /// `max_entries` remain (no-op when the knob is 0).
+    fn evict_locked(&self) {
+        if self.max_entries == 0 {
+            return;
+        }
+        let mut entries = self.entries();
+        if entries.len() <= self.max_entries {
+            return;
+        }
+        entries.sort_by_key(|(seq, _)| *seq);
+        let excess = entries.len() - self.max_entries;
+        for (_, dir) in entries.into_iter().take(excess) {
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SHA-256 (FIPS 180-4), self-contained: no crypto crates ship in this
+// offline environment (DESIGN.md §2), and a cache key only needs a
+// stable collision-resistant digest, not a vetted crypto stack.
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// SHA-256 digest as lowercase hex.
+pub fn sha256_hex(data: &[u8]) -> String {
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let bit_len = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bit_len.to_be_bytes());
+    let mut w = [0u32; 64];
+    for block in msg.chunks_exact(64) {
+        for (i, word) in w.iter_mut().take(16).enumerate() {
+            *word = u32::from_be_bytes([
+                block[4 * i],
+                block[4 * i + 1],
+                block[4 * i + 2],
+                block[4 * i + 3],
+            ]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        for (slot, v) in h.iter_mut().zip([a, b, c, d, e, f, g, hh]) {
+            *slot = slot.wrapping_add(v);
+        }
+    }
+    let mut hex = String::with_capacity(64);
+    for x in h {
+        hex.push_str(&format!("{x:08x}"));
+    }
+    hex
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::find;
+
+    #[test]
+    fn sha256_matches_fips_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // Multi-block message (200 bytes spans four blocks with padding).
+        assert_eq!(
+            sha256_hex(&[b'a'; 200]),
+            "c2a908d98f5df987ade41b5fce213067efbcc21ef2240212a41e54b5e7c28ae5"
+        );
+    }
+
+    #[test]
+    fn key_is_invariant_to_representation_not_semantics() {
+        let base = find("paper-10-node").unwrap();
+        let canonical = base.to_ini_string();
+        // Key order, whitespace, comments and spelled-out defaults all
+        // collapse to the same key...
+        let scrambled = format!(
+            "# a comment\n[schedule]\nseed={}\nruns = {}\n\n[scenario]\n  name = {}\n\
+             description = {}\n",
+            base.seed, base.runs, base.name, base.description
+        );
+        let a = job_key(&Scenario::parse_str(&canonical).unwrap());
+        let b = job_key(&Scenario::parse_str(&scrambled).unwrap());
+        assert_eq!(a, b, "representation must not change the cache key");
+        // ...and `record_every = 0` is resolved to its effective stride.
+        let mut resolved = base.clone();
+        assert_eq!(resolved.record_every, 0);
+        resolved.record_every = resolved.effective_record_every();
+        assert_eq!(job_key(&base), job_key(&resolved));
+        // But every semantic perturbation gets its own key.
+        let mut seeded = base.clone();
+        seeded.seed += 1;
+        assert_ne!(job_key(&base), job_key(&seeded));
+    }
+
+    #[test]
+    fn cache_roundtrips_and_evicts_fifo() {
+        let root = std::env::temp_dir().join("dcd_cache_unit_test");
+        std::fs::remove_dir_all(&root).ok();
+        let cache = ResultCache::open(root.to_str().unwrap(), 2).unwrap();
+        let mut keys = Vec::new();
+        for i in 0..3u64 {
+            let mut sc = find("paper-10-node").unwrap();
+            sc.seed = 1000 + i;
+            let key = job_key(&sc);
+            let staging = cache.staging_dir(&key, i).unwrap();
+            std::fs::write(staging.join(format!("{}.csv", sc.name)), format!("csv{i}")).unwrap();
+            std::fs::write(staging.join(format!("{}.json", sc.name)), format!("json{i}")).unwrap();
+            std::fs::write(
+                staging.join(format!("{}_ledger.csv", sc.name)),
+                format!("ledger{i}"),
+            )
+            .unwrap();
+            let back = cache.commit(&key, &sc, &staging).unwrap();
+            assert_eq!(back.csv, format!("csv{i}"));
+            keys.push(key);
+        }
+        // FIFO eviction at max_entries = 2: the first entry is gone.
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.contains(&keys[0]));
+        assert!(cache.contains(&keys[1]) && cache.contains(&keys[2]));
+        let hit = cache.lookup(&keys[2]).unwrap();
+        assert_eq!(hit.ledger_csv, "ledger2");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

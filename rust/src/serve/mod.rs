@@ -1,0 +1,127 @@
+//! Resident scenario service with a content-addressed result cache
+//! (DESIGN.md §11).
+//!
+//! `dcd-lms serve` keeps one process resident so repeated scenario
+//! runs pay the simulation cost once: clients submit scenario INI
+//! specs over a newline-JSON **session protocol** (v3, see
+//! `serve/session.rs` and [`crate::shard::SESSION_PROTOCOL_VERSION`]),
+//! a bounded FIFO [`queue::JobQueue`] fans them over a worker pool,
+//! and every result is committed to a [`cache::ResultCache`] keyed by
+//! the canonical hash of (normalized scenario INI, seed inclusive,
+//! code-version tag). A resubmit of the same spec returns the stored
+//! artifact triple byte-for-byte with **zero** simulation work — the
+//! bit-identity argument is DESIGN.md §11's: every computed job routes
+//! through the same deterministic run-order fold as `scenario run`, so
+//! the cached bytes and a recomputation are the same bytes.
+//!
+//! Two front doors:
+//! * [`serve_stdio`] — one session on stdin/stdout (systemd-style
+//!   socket activation, tests, and piping).
+//! * [`serve_tcp`] — a listener accepting many concurrent sessions; a
+//!   client disconnect mid-stream never cancels its job (the queue
+//!   owns jobs, sessions merely observe), so the result still lands in
+//!   the cache for the retry.
+//!
+//! Operations guide: docs/HANDBOOK.md, "Resident serve daemon".
+
+pub mod cache;
+pub mod queue;
+pub mod session;
+
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub use cache::{canonical_scenario, canonical_spec, code_tag, job_key, CachedResult, ResultCache};
+pub use queue::{sim_runs, JobEvent, JobQueue, JobState};
+pub use session::{run_via, serve_session, stop_via, SessionEnd, SessionFrame};
+
+/// Tunables for a resident daemon (CLI flags of `dcd-lms serve`).
+pub struct ServeConfig {
+    /// Cache root directory (created if absent).
+    pub cache_dir: String,
+    /// Worker threads draining the job queue.
+    pub workers: usize,
+    /// Maximum queued-but-not-running jobs before submits are refused.
+    pub queue_depth: usize,
+    /// FIFO eviction bound for the result cache (0 = unlimited).
+    pub max_entries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { cache_dir: "serve-cache".to_string(), workers: 2, queue_depth: 64, max_entries: 0 }
+    }
+}
+
+/// A running daemon: the job queue (which owns the cache and worker
+/// pool). Sessions borrow it; it outlives every session.
+pub struct Daemon {
+    /// The bounded FIFO queue all sessions submit into.
+    pub queue: JobQueue,
+}
+
+impl Daemon {
+    /// Open the cache and start the worker pool.
+    pub fn start(cfg: &ServeConfig) -> Result<Daemon, String> {
+        let cache = Arc::new(ResultCache::open(&cfg.cache_dir, cfg.max_entries)?);
+        Ok(Daemon { queue: JobQueue::start(cache, cfg.workers, cfg.queue_depth) })
+    }
+}
+
+/// Run one session over stdin/stdout, then drain and exit. EOF without
+/// a `shutdown` frame still drains — piped submits always finish.
+pub fn serve_stdio(cfg: &ServeConfig) -> Result<(), String> {
+    let daemon = Daemon::start(cfg)?;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let _ = serve_session(&daemon, stdin.lock(), stdout.lock());
+    daemon.queue.shutdown();
+    Ok(())
+}
+
+/// Listen on `listen` (e.g. `127.0.0.1:7717`, port 0 for ephemeral)
+/// and serve concurrent sessions until one sends `shutdown`. Prints
+/// `serve: listening on <addr>` once ready — scripts parse that line
+/// for the bound port.
+pub fn serve_tcp(cfg: &ServeConfig, listen: &str) -> Result<(), String> {
+    let listener =
+        TcpListener::bind(listen).map_err(|e| format!("binding {listen}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("reading the bound address: {e}"))?;
+    println!("serve: listening on {local}");
+    let _ = std::io::stdout().flush();
+    let daemon = Arc::new(Daemon::start(cfg)?);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut sessions = Vec::new();
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let daemon = Arc::clone(&daemon);
+        let stop = Arc::clone(&stop);
+        sessions.push(std::thread::spawn(move || {
+            let reader = match stream.try_clone() {
+                Ok(s) => BufReader::new(s),
+                Err(_) => return,
+            };
+            if serve_session(&daemon, reader, stream) == SessionEnd::Shutdown {
+                stop.store(true, Ordering::SeqCst);
+                // Self-connect to unblock the accept loop.
+                let _ = TcpStream::connect(local);
+            }
+        }));
+    }
+    for handle in sessions {
+        let _ = handle.join();
+    }
+    daemon.queue.shutdown();
+    println!("serve: stopped");
+    Ok(())
+}

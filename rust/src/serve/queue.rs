@@ -1,0 +1,470 @@
+//! Bounded FIFO job queue behind the serve daemon (DESIGN.md §11).
+//!
+//! Jobs are scenario runs keyed by the content-addressed cache key of
+//! `serve/cache.rs`. A fixed pool of worker threads pops jobs in
+//! submission order; each job first probes the cache (a hit costs zero
+//! simulation work — audited by the global [`sim_runs`] counter), then
+//! coalesces with any in-flight computation of the same key, and only
+//! computes when it is the first holder of that key. Results are
+//! committed to the cache atomically and fanned out to per-job event
+//! listeners (the session threads streaming `wait: true` submits).
+//!
+//! The queue is bounded: submits past `depth` pending jobs are refused
+//! with a `queue full` error rather than buffered without limit, so a
+//! runaway client cannot exhaust the daemon's memory.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::scenario::{run_scenario_with_progress, Scenario};
+
+use super::cache::{canonical_scenario, job_key, CachedResult, ResultCache};
+
+/// Realizations actually simulated by this process since start — only
+/// bumped when a job *computes* (never on a cache hit), so the cache
+/// property tests can assert "resubmit = zero simulation work".
+static SIM_RUNS: AtomicU64 = AtomicU64::new(0);
+
+/// Read the daemon-wide simulated-realizations counter.
+pub fn sim_runs() -> u64 {
+    SIM_RUNS.load(Ordering::SeqCst)
+}
+
+/// Events streamed to a waiting submitter.
+pub enum JobEvent {
+    /// One shard of the job finished.
+    Progress {
+        /// Index of the shard that completed.
+        shard: usize,
+        /// Shards completed so far.
+        done: usize,
+        /// Total shards.
+        total: usize,
+    },
+    /// Terminal success.
+    Done {
+        /// The committed (or already-cached) artifact triple.
+        result: Arc<CachedResult>,
+        /// True when served from the cache with zero simulation work.
+        cached: bool,
+    },
+    /// Terminal failure.
+    Failed {
+        /// Why the run failed.
+        message: String,
+    },
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the FIFO.
+    Queued,
+    /// A worker owns it (probing the cache, waiting on a twin, or
+    /// simulating).
+    Running,
+    /// Finished; artifacts available via [`JobQueue::result_of`].
+    Done {
+        /// True when served from the cache.
+        cached: bool,
+    },
+    /// The run errored.
+    Failed(String),
+    /// Cancelled while still queued.
+    Cancelled,
+}
+
+impl JobState {
+    /// Human/state-frame label.
+    pub fn label(&self) -> String {
+        match self {
+            JobState::Queued => "queued".to_string(),
+            JobState::Running => "running".to_string(),
+            JobState::Done { .. } => "done".to_string(),
+            JobState::Failed(e) => format!("failed: {e}"),
+            JobState::Cancelled => "cancelled".to_string(),
+        }
+    }
+}
+
+struct JobRecord {
+    sc: Scenario,
+    key: String,
+    state: JobState,
+    listeners: Vec<Sender<JobEvent>>,
+    result: Option<Arc<CachedResult>>,
+}
+
+struct QueueState {
+    next_id: u64,
+    pending: VecDeque<u64>,
+    jobs: HashMap<u64, JobRecord>,
+    /// Keys currently being computed — twins wait instead of
+    /// duplicating the work.
+    computing: HashSet<String>,
+    running: usize,
+    draining: bool,
+}
+
+struct QueueInner {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    cache: Arc<ResultCache>,
+    depth: usize,
+}
+
+/// The daemon's job queue: worker pool + bounded FIFO + result cache.
+pub struct JobQueue {
+    inner: Arc<QueueInner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl JobQueue {
+    /// Start `workers` worker threads over `cache`, refusing submits
+    /// once `depth` jobs are pending.
+    pub fn start(cache: Arc<ResultCache>, workers: usize, depth: usize) -> JobQueue {
+        let inner = Arc::new(QueueInner {
+            state: Mutex::new(QueueState {
+                next_id: 1,
+                pending: VecDeque::new(),
+                jobs: HashMap::new(),
+                computing: HashSet::new(),
+                running: 0,
+                draining: false,
+            }),
+            cv: Condvar::new(),
+            cache,
+            depth: depth.max(1),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        JobQueue { inner, workers: Mutex::new(handles) }
+    }
+
+    /// The result cache this queue commits into.
+    pub fn cache(&self) -> &ResultCache {
+        &self.inner.cache
+    }
+
+    /// Enqueue a validated scenario. Returns the job id, its cache
+    /// key, whether the cache already holds that key, and — for
+    /// subscribing submits — the event stream.
+    #[allow(clippy::type_complexity)]
+    pub fn submit(
+        &self,
+        sc: Scenario,
+        subscribe: bool,
+    ) -> Result<(u64, String, bool, Option<Receiver<JobEvent>>), String> {
+        let key = job_key(&sc);
+        let cached = self.inner.cache.contains(&key);
+        let mut st = self.inner.state.lock().expect("queue lock");
+        if st.draining {
+            return Err("daemon is draining and not accepting new jobs".to_string());
+        }
+        if st.pending.len() >= self.inner.depth {
+            return Err(format!("queue full ({} jobs pending)", self.inner.depth));
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        let (listeners, events) = if subscribe {
+            let (tx, rx) = channel();
+            (vec![tx], Some(rx))
+        } else {
+            (Vec::new(), None)
+        };
+        st.jobs.insert(
+            id,
+            JobRecord {
+                sc,
+                key: key.clone(),
+                state: JobState::Queued,
+                listeners,
+                result: None,
+            },
+        );
+        st.pending.push_back(id);
+        self.inner.cv.notify_all();
+        Ok((id, key, cached, events))
+    }
+
+    /// State label for a job id (`None` for unknown ids).
+    pub fn state_label(&self, id: u64) -> Option<String> {
+        let st = self.inner.state.lock().expect("queue lock");
+        st.jobs.get(&id).map(|rec| rec.state.label())
+    }
+
+    /// The artifact triple of a finished job, with its cache-hit flag.
+    pub fn result_of(&self, id: u64) -> Option<(Arc<CachedResult>, bool)> {
+        let st = self.inner.state.lock().expect("queue lock");
+        let rec = st.jobs.get(&id)?;
+        match (&rec.state, &rec.result) {
+            (JobState::Done { cached }, Some(result)) => Some((Arc::clone(result), *cached)),
+            _ => None,
+        }
+    }
+
+    /// Cancel a job that has not started yet. Running or finished jobs
+    /// are refused — a cancel must never tear half-finished artifacts.
+    pub fn cancel(&self, id: u64) -> Result<(), String> {
+        let mut st = self.inner.state.lock().expect("queue lock");
+        let rec = st
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| format!("unknown job {id}"))?;
+        match rec.state {
+            JobState::Queued => {
+                rec.state = JobState::Cancelled;
+                for tx in rec.listeners.drain(..) {
+                    let _ = tx.send(JobEvent::Failed { message: "cancelled".to_string() });
+                }
+                st.pending.retain(|&q| q != id);
+                Ok(())
+            }
+            _ => Err(format!(
+                "job {id} is {}; only queued jobs can be cancelled",
+                rec.state.label()
+            )),
+        }
+    }
+
+    /// Stop accepting jobs and block until everything queued or
+    /// running has finished.
+    pub fn drain(&self) {
+        let mut st = self.inner.state.lock().expect("queue lock");
+        st.draining = true;
+        self.inner.cv.notify_all();
+        while !st.pending.is_empty() || st.running > 0 {
+            st = self.inner.cv.wait(st).expect("queue lock");
+        }
+    }
+
+    /// Drain and join the worker pool (the daemon's last act).
+    pub fn shutdown(&self) {
+        self.drain();
+        let handles: Vec<_> = self.workers.lock().expect("worker handles").drain(..).collect();
+        for handle in handles {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Arc<QueueInner>) {
+    loop {
+        // Pop the next job and mark it running under one lock, so a
+        // cancel can never slip between pop and claim.
+        let (id, sc, key) = {
+            let mut st = inner.state.lock().expect("queue lock");
+            loop {
+                if let Some(id) = st.pending.pop_front() {
+                    st.running += 1;
+                    let rec = st.jobs.get_mut(&id).expect("popped job has a record");
+                    rec.state = JobState::Running;
+                    break (id, rec.sc.clone(), rec.key.clone());
+                }
+                if st.draining {
+                    return;
+                }
+                st = inner.cv.wait(st).expect("queue lock");
+            }
+        };
+        let outcome = run_one(inner, id, &sc, &key);
+        let mut st = inner.state.lock().expect("queue lock");
+        st.running -= 1;
+        let rec = st.jobs.get_mut(&id).expect("finished job has a record");
+        match outcome {
+            Ok((result, cached)) => {
+                rec.state = JobState::Done { cached };
+                rec.result = Some(Arc::clone(&result));
+                for tx in rec.listeners.drain(..) {
+                    let _ = tx.send(JobEvent::Done { result: Arc::clone(&result), cached });
+                }
+            }
+            Err(message) => {
+                rec.state = JobState::Failed(message.clone());
+                for tx in rec.listeners.drain(..) {
+                    let _ = tx.send(JobEvent::Failed { message: message.clone() });
+                }
+            }
+        }
+        inner.cv.notify_all();
+    }
+}
+
+/// Serve one job: cache probe → twin coalescing → compute + commit.
+fn run_one(
+    inner: &Arc<QueueInner>,
+    id: u64,
+    sc: &Scenario,
+    key: &str,
+) -> Result<(Arc<CachedResult>, bool), String> {
+    loop {
+        if let Some(hit) = inner.cache.lookup(key) {
+            return Ok((Arc::new(hit), true));
+        }
+        let mut st = inner.state.lock().expect("queue lock");
+        if st.computing.insert(key.to_string()) {
+            break;
+        }
+        // A twin is computing this key; wait and re-probe the cache.
+        drop(inner.cv.wait(st).expect("queue lock"));
+    }
+    let outcome = compute(inner, id, sc, key);
+    let mut st = inner.state.lock().expect("queue lock");
+    st.computing.remove(key);
+    drop(st);
+    inner.cv.notify_all();
+    outcome
+}
+
+fn compute(
+    inner: &Arc<QueueInner>,
+    id: u64,
+    sc: &Scenario,
+    key: &str,
+) -> Result<(Arc<CachedResult>, bool), String> {
+    let canon = canonical_scenario(sc);
+    let staging = inner.cache.staging_dir(key, id)?;
+    let staging_str = staging
+        .to_str()
+        .ok_or("staging path is not valid UTF-8")?
+        .to_string();
+    let report = |shard: usize, done: usize, total: usize| {
+        let mut st = inner.state.lock().expect("queue lock");
+        if let Some(rec) = st.jobs.get_mut(&id) {
+            rec.listeners
+                .retain(|tx| tx.send(JobEvent::Progress { shard, done, total }).is_ok());
+        }
+    };
+    let run = run_scenario_with_progress(&canon, Some(&staging_str), true, Some(&report));
+    if let Err(e) = run {
+        let _ = std::fs::remove_dir_all(&staging);
+        return Err(e);
+    }
+    SIM_RUNS.fetch_add(canon.runs as u64, Ordering::SeqCst);
+    let result = inner.cache.commit(key, &canon, &staging)?;
+    Ok((Arc::new(result), false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::find;
+
+    fn tmp(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("dcd-serve-queue-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.to_str().expect("utf-8 temp path").to_string()
+    }
+
+    fn small_scenario(seed: u64) -> Scenario {
+        let mut sc = find("paper-10-node").expect("builtin scenario").clone();
+        sc.runs = 2;
+        sc.iters = 200;
+        sc.seed = seed;
+        sc.threads = 1;
+        sc.shards = 1;
+        sc
+    }
+
+    #[test]
+    fn queue_computes_then_serves_from_cache() {
+        let root = tmp("hit");
+        let cache = Arc::new(ResultCache::open(&root, 0).expect("open cache"));
+        let queue = JobQueue::start(cache, 2, 8);
+        let (a, key_a, cached_a, rx_a) = queue.submit(small_scenario(2024), true).unwrap();
+        assert!(!cached_a);
+        let before = sim_runs();
+        let mut done = None;
+        for event in rx_a.unwrap() {
+            if let JobEvent::Done { result, cached } = event {
+                done = Some((result, cached));
+                break;
+            }
+        }
+        let (first, cached) = done.expect("terminal event");
+        assert!(!cached, "first run must compute");
+        assert_eq!(first.key, key_a);
+        assert!(sim_runs() >= before + 2, "compute must count its runs");
+
+        // Resubmit: byte-identical artifacts, zero additional work.
+        let mid = sim_runs();
+        let (b, key_b, cached_b, rx_b) = queue.submit(small_scenario(2024), true).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(key_a, key_b);
+        assert!(cached_b, "submit-time probe must see the entry");
+        let mut done = None;
+        for event in rx_b.unwrap() {
+            if let JobEvent::Done { result, cached } = event {
+                done = Some((result, cached));
+                break;
+            }
+        }
+        let (second, cached) = done.expect("terminal event");
+        assert!(cached);
+        assert_eq!(first.csv, second.csv);
+        assert_eq!(first.json, second.json);
+        assert_eq!(first.ledger_csv, second.ledger_csv);
+        assert_eq!(sim_runs(), mid, "cache hit must do zero simulation work");
+
+        assert_eq!(queue.state_label(a).unwrap(), "done");
+        queue.shutdown();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cancel_only_reaches_queued_jobs() {
+        let root = tmp("cancel");
+        let cache = Arc::new(ResultCache::open(&root, 0).expect("open cache"));
+        // No free worker: one worker, keep it busy with the first job.
+        let queue = JobQueue::start(cache, 1, 8);
+        let (a, _, _, rx) = queue.submit(small_scenario(1), true).unwrap();
+        // Three more behind the single worker; the last is certainly
+        // still queued when the cancel lands.
+        let _ = queue.submit(small_scenario(2), false).unwrap();
+        let _ = queue.submit(small_scenario(3), false).unwrap();
+        let (b, _, _, _) = queue.submit(small_scenario(4), false).unwrap();
+        queue.cancel(b).expect("queued job cancels");
+        assert_eq!(queue.state_label(b).unwrap(), "cancelled");
+        assert!(queue.cancel(b).is_err(), "double cancel refused");
+        for event in rx.unwrap() {
+            if matches!(event, JobEvent::Done { .. } | JobEvent::Failed { .. }) {
+                break;
+            }
+        }
+        assert!(queue.cancel(a).is_err(), "finished job refuses cancel");
+        assert!(queue.cancel(999).is_err(), "unknown id refused");
+        queue.shutdown();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn queue_depth_is_enforced() {
+        let root = tmp("depth");
+        let cache = Arc::new(ResultCache::open(&root, 0).expect("open cache"));
+        let queue = JobQueue::start(cache, 1, 1);
+        // Worker may or may not have popped the first job yet; keep
+        // submitting until the bound trips — it must trip within
+        // depth+1 distinct seeds.
+        let mut refused = None;
+        for seed in 0..64 {
+            if let Err(e) = queue.submit(small_scenario(100 + seed), false) {
+                refused = Some(e);
+                break;
+            }
+        }
+        let msg = refused.expect("bounded queue must refuse eventually");
+        assert!(msg.contains("queue full"), "{msg}");
+        queue.shutdown();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,643 @@
+//! The v3 **session** frame grammar spoken between `dcd-lms serve` and
+//! its clients (DESIGN.md §11), plus the server-side session loop and
+//! the `scenario run --via <addr>` client.
+//!
+//! Like the v2 worker-pipe grammar (`shard/protocol.rs`), frames are
+//! newline-delimited JSON objects carrying a version (`"v"`, here
+//! [`SESSION_PROTOCOL_VERSION`]) and a `"type"` tag. Clients send
+//! `submit` / `status` / `result` / `cancel` / `shutdown`; the daemon
+//! answers `accepted`, streams `progress` per completed shard, and
+//! terminates a waited submit with a `result` frame that carries the
+//! three artifact texts inline — so a `--via` client writes files
+//! byte-identical to a local run.
+//!
+//! A malformed or unexpected frame never kills the session (and never
+//! panics — fuzz-tested in `rust/tests/protocol_fuzz.rs`): the daemon
+//! answers an `error` frame naming the 1-based input frame index and
+//! the offending field, then keeps reading.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::jsonio::{obj, Json};
+use crate::scenario::Scenario;
+use crate::shard::SESSION_PROTOCOL_VERSION;
+
+use super::queue::{sim_runs, JobEvent};
+use super::Daemon;
+
+/// One v3 session frame (client → daemon or daemon → client; the
+/// direction is part of the contract, and a frame arriving in the
+/// wrong direction is answered with an `error` frame).
+#[derive(Debug, Clone)]
+pub enum SessionFrame {
+    /// Client → daemon: run this scenario INI. With `wait` (the
+    /// default) the daemon streams progress and the terminal result on
+    /// this session; with `wait = false` the client polls `status` and
+    /// fetches the result later.
+    Submit {
+        /// Scenario INI text (any representation; the daemon
+        /// canonicalizes it for the cache key).
+        spec: String,
+        /// Stream progress + result on this session (default true).
+        wait: bool,
+    },
+    /// Client → daemon: report a job's state.
+    Status {
+        /// Job id from the `accepted` frame.
+        job: u64,
+    },
+    /// Client → daemon: fetch the result of a finished job.
+    ResultRequest {
+        /// Job id from the `accepted` frame.
+        job: u64,
+    },
+    /// Client → daemon: cancel a still-queued job.
+    Cancel {
+        /// Job id from the `accepted` frame.
+        job: u64,
+    },
+    /// Client → daemon: drain the queue (finish running and queued
+    /// jobs, accept no new ones), answer [`SessionFrame::Bye`], stop.
+    Shutdown,
+    /// Daemon → client: the submit was queued (or will be served from
+    /// the cache — `cached` is the submit-time probe).
+    Accepted {
+        /// Daemon-assigned job id.
+        job: u64,
+        /// Content-addressed cache key (SHA-256 hex, DESIGN.md §11).
+        key: String,
+        /// Whether the cache already held this key at submit time.
+        cached: bool,
+    },
+    /// Daemon → client: one shard of the job finished.
+    Progress {
+        /// Job id.
+        job: u64,
+        /// Index of the shard that just completed.
+        shard: usize,
+        /// Shards completed so far.
+        done: usize,
+        /// Total shards in the job.
+        total: usize,
+    },
+    /// Daemon → client: terminal success, artifacts inline.
+    Result {
+        /// Job id.
+        job: u64,
+        /// Cache key the artifacts live under.
+        key: String,
+        /// True when served from the cache with zero simulation work.
+        cached: bool,
+        /// Scenario name — the artifact file stem.
+        name: String,
+        /// `<name>.csv` text.
+        csv: String,
+        /// `<name>.json` text.
+        json: String,
+        /// `<name>_ledger.csv` text.
+        ledger_csv: String,
+    },
+    /// Daemon → client: answer to `status` / `cancel`.
+    Report {
+        /// Job id.
+        job: u64,
+        /// Job state: `queued | running | done | cancelled` or
+        /// `failed: <reason>`.
+        state: String,
+        /// Daemon-wide realizations simulated so far (the cache
+        /// tests' zero-work counter).
+        sim_runs: u64,
+    },
+    /// Daemon → client: shutdown acknowledged, session over.
+    Bye,
+    /// Daemon → client: a frame could not be honored. The session
+    /// stays open.
+    Error {
+        /// 1-based index of the offending input frame on this session
+        /// (0 when the error is not tied to one input line).
+        frame: u64,
+        /// What went wrong, naming the offending field.
+        message: String,
+    },
+}
+
+fn num(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .as_u64()
+        .ok_or_else(|| format!("frame field {key:?} must be an exact u64"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| format!("frame field {key:?} must be a non-negative integer"))
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String, String> {
+    Ok(v.get(key)
+        .as_str()
+        .ok_or_else(|| format!("frame field {key:?} must be a string"))?
+        .to_string())
+}
+
+impl SessionFrame {
+    /// Serialize as one line of compact JSON.
+    pub fn encode(&self) -> String {
+        let v = ("v", Json::Num(SESSION_PROTOCOL_VERSION as f64));
+        let doc = match self {
+            SessionFrame::Submit { spec, wait } => obj(vec![
+                v,
+                ("type", Json::Str("submit".into())),
+                ("spec", Json::Str(spec.clone())),
+                ("wait", Json::Bool(*wait)),
+            ]),
+            SessionFrame::Status { job } => obj(vec![
+                v,
+                ("type", Json::Str("status".into())),
+                ("job", Json::Num(*job as f64)),
+            ]),
+            SessionFrame::ResultRequest { job } => obj(vec![
+                v,
+                ("type", Json::Str("result".into())),
+                ("job", Json::Num(*job as f64)),
+            ]),
+            SessionFrame::Cancel { job } => obj(vec![
+                v,
+                ("type", Json::Str("cancel".into())),
+                ("job", Json::Num(*job as f64)),
+            ]),
+            SessionFrame::Shutdown => obj(vec![v, ("type", Json::Str("shutdown".into()))]),
+            SessionFrame::Accepted { job, key, cached } => obj(vec![
+                v,
+                ("type", Json::Str("accepted".into())),
+                ("job", Json::Num(*job as f64)),
+                ("key", Json::Str(key.clone())),
+                ("cached", Json::Bool(*cached)),
+            ]),
+            SessionFrame::Progress { job, shard, done, total } => obj(vec![
+                v,
+                ("type", Json::Str("progress".into())),
+                ("job", Json::Num(*job as f64)),
+                ("shard", num(*shard)),
+                ("done", num(*done)),
+                ("total", num(*total)),
+            ]),
+            SessionFrame::Result { job, key, cached, name, csv, json, ledger_csv } => obj(vec![
+                v,
+                ("type", Json::Str("result".into())),
+                ("job", Json::Num(*job as f64)),
+                ("key", Json::Str(key.clone())),
+                ("cached", Json::Bool(*cached)),
+                ("name", Json::Str(name.clone())),
+                (
+                    "artifacts",
+                    obj(vec![
+                        ("csv", Json::Str(csv.clone())),
+                        ("json", Json::Str(json.clone())),
+                        ("ledger_csv", Json::Str(ledger_csv.clone())),
+                    ]),
+                ),
+            ]),
+            SessionFrame::Report { job, state, sim_runs } => obj(vec![
+                v,
+                ("type", Json::Str("report".into())),
+                ("job", Json::Num(*job as f64)),
+                ("state", Json::Str(state.clone())),
+                ("sim_runs", Json::Num(*sim_runs as f64)),
+            ]),
+            SessionFrame::Bye => obj(vec![v, ("type", Json::Str("bye".into()))]),
+            SessionFrame::Error { frame, message } => obj(vec![
+                v,
+                ("type", Json::Str("error".into())),
+                ("frame", Json::Num(*frame as f64)),
+                ("message", Json::Str(message.clone())),
+            ]),
+        };
+        doc.to_string_compact()
+    }
+
+    /// Parse one session frame line; errors carry enough context to
+    /// point at the offending field.
+    pub fn decode(line: &str) -> Result<SessionFrame, String> {
+        let doc = Json::parse(line.trim())
+            .map_err(|e| format!("session protocol: not a JSON frame ({e})"))?;
+        let version = get_u64(&doc, "v")
+            .map_err(|e| format!("session protocol: {e} (missing version?)"))?;
+        if version != SESSION_PROTOCOL_VERSION {
+            return Err(format!(
+                "session protocol: frame version {version} != supported \
+                 {SESSION_PROTOCOL_VERSION} (v2 is the shard worker pipe; mixed binaries?)"
+            ));
+        }
+        let ty = get_str(&doc, "type").map_err(|e| format!("session protocol: {e}"))?;
+        let frame = match ty.as_str() {
+            "submit" => SessionFrame::Submit {
+                spec: get_str(&doc, "spec")?,
+                wait: match doc.get("wait") {
+                    Json::Null => true,
+                    Json::Bool(b) => *b,
+                    _ => return Err("frame field \"wait\" must be a boolean".to_string()),
+                },
+            },
+            "status" => SessionFrame::Status { job: get_u64(&doc, "job")? },
+            "cancel" => SessionFrame::Cancel { job: get_u64(&doc, "job")? },
+            "shutdown" => SessionFrame::Shutdown,
+            // `result` is a request (client → daemon) without artifacts
+            // and the terminal answer (daemon → client) with them.
+            "result" => {
+                let job = get_u64(&doc, "job")?;
+                let artifacts = doc.get("artifacts");
+                if matches!(artifacts, Json::Null) {
+                    SessionFrame::ResultRequest { job }
+                } else {
+                    SessionFrame::Result {
+                        job,
+                        key: get_str(&doc, "key")?,
+                        cached: doc
+                            .get("cached")
+                            .as_bool()
+                            .ok_or("frame field \"cached\" must be a boolean")?,
+                        name: get_str(&doc, "name")?,
+                        csv: get_str(artifacts, "csv")?,
+                        json: get_str(artifacts, "json")?,
+                        ledger_csv: get_str(artifacts, "ledger_csv")?,
+                    }
+                }
+            }
+            "accepted" => SessionFrame::Accepted {
+                job: get_u64(&doc, "job")?,
+                key: get_str(&doc, "key")?,
+                cached: doc
+                    .get("cached")
+                    .as_bool()
+                    .ok_or("frame field \"cached\" must be a boolean")?,
+            },
+            "progress" => SessionFrame::Progress {
+                job: get_u64(&doc, "job")?,
+                shard: get_usize(&doc, "shard")?,
+                done: get_usize(&doc, "done")?,
+                total: get_usize(&doc, "total")?,
+            },
+            "report" => SessionFrame::Report {
+                job: get_u64(&doc, "job")?,
+                state: get_str(&doc, "state")?,
+                sim_runs: get_u64(&doc, "sim_runs")?,
+            },
+            "bye" => SessionFrame::Bye,
+            "error" => SessionFrame::Error {
+                frame: get_u64(&doc, "frame")?,
+                message: get_str(&doc, "message")?,
+            },
+            other => {
+                return Err(format!(
+                    "session protocol: unknown frame type {other:?} (expected submit | status \
+                     | result | cancel | shutdown | accepted | progress | report | bye | error)"
+                ))
+            }
+        };
+        Ok(frame)
+    }
+}
+
+/// Why a session loop returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionEnd {
+    /// The client went away (EOF or a failed write). Jobs it submitted
+    /// keep running; their results land in the cache.
+    Disconnect,
+    /// The client asked the daemon to shut down (queue already
+    /// drained, `bye` sent).
+    Shutdown,
+}
+
+fn send(writer: &mut impl Write, frame: &SessionFrame) -> std::io::Result<()> {
+    writeln!(writer, "{}", frame.encode())?;
+    writer.flush()
+}
+
+/// Drive one client session over any line stream (stdio or one TCP
+/// connection). Never panics and never returns on malformed input —
+/// only on EOF, a dead client, or an honored shutdown frame.
+pub fn serve_session(
+    daemon: &Daemon,
+    reader: impl BufRead,
+    mut writer: impl Write,
+) -> SessionEnd {
+    for (lineno, line) in reader.lines().enumerate() {
+        let frame_no = (lineno + 1) as u64;
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => return SessionEnd::Disconnect,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let refuse = |message: String| SessionFrame::Error { frame: frame_no, message };
+        let frame = match SessionFrame::decode(&line) {
+            Ok(f) => f,
+            Err(e) => {
+                if send(&mut writer, &refuse(format!("frame {frame_no}: {e}"))).is_err() {
+                    return SessionEnd::Disconnect;
+                }
+                continue;
+            }
+        };
+        let answer = match frame {
+            SessionFrame::Submit { spec, wait } => {
+                match handle_submit(daemon, &spec, wait, frame_no, &mut writer) {
+                    Ok(()) => continue,
+                    Err(SubmitEnd::Refused(message)) => refuse(message),
+                    Err(SubmitEnd::Disconnect) => return SessionEnd::Disconnect,
+                }
+            }
+            SessionFrame::Status { job } => match daemon.queue.state_label(job) {
+                Some(state) => SessionFrame::Report { job, state, sim_runs: sim_runs() },
+                None => refuse(format!("frame {frame_no}: unknown job {job}")),
+            },
+            SessionFrame::ResultRequest { job } => match daemon.queue.result_of(job) {
+                Some((result, cached)) => SessionFrame::Result {
+                    job,
+                    key: result.key.clone(),
+                    cached,
+                    name: result.name.clone(),
+                    csv: result.csv.clone(),
+                    json: result.json.clone(),
+                    ledger_csv: result.ledger_csv.clone(),
+                },
+                None => refuse(format!(
+                    "frame {frame_no}: job {job} has no result ({})",
+                    daemon
+                        .queue
+                        .state_label(job)
+                        .unwrap_or_else(|| "unknown job".to_string())
+                )),
+            },
+            SessionFrame::Cancel { job } => match daemon.queue.cancel(job) {
+                Ok(()) => SessionFrame::Report {
+                    job,
+                    state: "cancelled".to_string(),
+                    sim_runs: sim_runs(),
+                },
+                Err(e) => refuse(format!("frame {frame_no}: {e}")),
+            },
+            SessionFrame::Shutdown => {
+                daemon.queue.drain();
+                let _ = send(&mut writer, &SessionFrame::Bye);
+                return SessionEnd::Shutdown;
+            }
+            // Daemon → client frames arriving at the daemon.
+            other => refuse(format!(
+                "frame {frame_no}: {} is a daemon-to-client frame",
+                frame_type_name(&other)
+            )),
+        };
+        if send(&mut writer, &answer).is_err() {
+            return SessionEnd::Disconnect;
+        }
+    }
+    SessionEnd::Disconnect
+}
+
+enum SubmitEnd {
+    /// Answer with an error frame, session continues.
+    Refused(String),
+    /// The client is gone.
+    Disconnect,
+}
+
+/// Handle one submit frame: validate, enqueue, and (for `wait`
+/// submits) forward the job's event stream until the terminal frame.
+fn handle_submit(
+    daemon: &Daemon,
+    spec: &str,
+    wait: bool,
+    frame_no: u64,
+    writer: &mut impl Write,
+) -> Result<(), SubmitEnd> {
+    let sc = Scenario::parse_str(spec)
+        .and_then(|sc| sc.validate().map(|()| sc))
+        .map_err(|e| SubmitEnd::Refused(format!("frame {frame_no}: submit: {e}")))?;
+    let (job, key, cached, events) = daemon
+        .queue
+        .submit(sc, wait)
+        .map_err(|e| SubmitEnd::Refused(format!("frame {frame_no}: submit: {e}")))?;
+    send(writer, &SessionFrame::Accepted { job, key, cached })
+        .map_err(|_| SubmitEnd::Disconnect)?;
+    let Some(events) = events else {
+        return Ok(());
+    };
+    for event in events {
+        let frame = match event {
+            JobEvent::Progress { shard, done, total } => {
+                SessionFrame::Progress { job, shard, done, total }
+            }
+            JobEvent::Done { result, cached } => {
+                let frame = SessionFrame::Result {
+                    job,
+                    key: result.key.clone(),
+                    cached,
+                    name: result.name.clone(),
+                    csv: result.csv.clone(),
+                    json: result.json.clone(),
+                    ledger_csv: result.ledger_csv.clone(),
+                };
+                send(writer, &frame).map_err(|_| SubmitEnd::Disconnect)?;
+                return Ok(());
+            }
+            JobEvent::Failed { message } => SessionFrame::Error {
+                frame: frame_no,
+                message: format!("frame {frame_no}: job {job} failed: {message}"),
+            },
+        };
+        let terminal = matches!(frame, SessionFrame::Error { .. });
+        send(writer, &frame).map_err(|_| SubmitEnd::Disconnect)?;
+        if terminal {
+            return Ok(());
+        }
+    }
+    // All senders dropped without a terminal event (should not happen).
+    Err(SubmitEnd::Refused(format!(
+        "frame {frame_no}: job {job} event stream ended without a result"
+    )))
+}
+
+fn frame_type_name(f: &SessionFrame) -> &'static str {
+    match f {
+        SessionFrame::Submit { .. } => "submit",
+        SessionFrame::Status { .. } => "status",
+        SessionFrame::ResultRequest { .. } => "result-request",
+        SessionFrame::Cancel { .. } => "cancel",
+        SessionFrame::Shutdown => "shutdown",
+        SessionFrame::Accepted { .. } => "accepted",
+        SessionFrame::Progress { .. } => "progress",
+        SessionFrame::Result { .. } => "result",
+        SessionFrame::Report { .. } => "report",
+        SessionFrame::Bye => "bye",
+        SessionFrame::Error { .. } => "error",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side (`scenario run --via <addr>`, `serve --stop <addr>`).
+
+fn connect(addr: &str) -> Result<(BufReader<TcpStream>, TcpStream), String> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| format!("connecting to serve daemon at {addr}: {e}"))?;
+    let writer = stream
+        .try_clone()
+        .map_err(|e| format!("cloning the session stream: {e}"))?;
+    Ok((BufReader::new(stream), writer))
+}
+
+/// Submit a scenario to a resident daemon and stream it to completion,
+/// writing the artifact triple into `out_dir` byte-identically to a
+/// local `scenario run`. Prints one `cache hit` / `cache miss` line
+/// (the CI smoke gate greps for it).
+pub fn run_via(
+    addr: &str,
+    sc: &Scenario,
+    out_dir: Option<&str>,
+    quiet: bool,
+) -> Result<(), String> {
+    let (reader, mut writer) = connect(addr)?;
+    let submit = SessionFrame::Submit { spec: sc.to_ini_string(), wait: true };
+    send(&mut writer, &submit).map_err(|e| format!("sending the submit frame: {e}"))?;
+    for line in reader.lines() {
+        let line = line.map_err(|e| format!("reading from the daemon: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match SessionFrame::decode(&line).map_err(|e| format!("daemon sent {e}"))? {
+            SessionFrame::Accepted { job, key, cached } => {
+                if !quiet {
+                    println!(
+                        "serve: job {job} accepted (key {}…, {})",
+                        key.get(..12).unwrap_or(&key),
+                        if cached { "cached" } else { "queued" }
+                    );
+                }
+            }
+            SessionFrame::Progress { job, shard, done, total } => {
+                if !quiet {
+                    println!("serve: job {job} shard {shard} finished ({done}/{total})");
+                }
+            }
+            SessionFrame::Result { job, key, cached, name, csv, json, ledger_csv } => {
+                println!(
+                    "serve: job {job} {} (key {}…)",
+                    if cached { "cache hit" } else { "cache miss" },
+                    key.get(..12).unwrap_or(&key),
+                );
+                if let Some(dir) = out_dir {
+                    std::fs::create_dir_all(dir)
+                        .map_err(|e| format!("creating {dir}: {e}"))?;
+                    std::fs::write(format!("{dir}/{name}.csv"), csv)
+                        .map_err(|e| format!("writing {dir}/{name}.csv: {e}"))?;
+                    std::fs::write(format!("{dir}/{name}.json"), json)
+                        .map_err(|e| format!("writing {dir}/{name}.json: {e}"))?;
+                    std::fs::write(format!("{dir}/{name}_ledger.csv"), ledger_csv)
+                        .map_err(|e| format!("writing {dir}/{name}_ledger.csv: {e}"))?;
+                    if !quiet {
+                        println!("serve: wrote {dir}/{name}.csv, .json and _ledger.csv");
+                    }
+                }
+                return Ok(());
+            }
+            SessionFrame::Error { frame, message } => {
+                return Err(format!("serve daemon refused (frame {frame}): {message}"))
+            }
+            other => {
+                return Err(format!(
+                    "unexpected {} frame from the daemon",
+                    frame_type_name(&other)
+                ))
+            }
+        }
+    }
+    Err("daemon closed the session before sending a result".to_string())
+}
+
+/// Ask a resident daemon to drain its queue and stop.
+pub fn stop_via(addr: &str) -> Result<(), String> {
+    let (reader, mut writer) = connect(addr)?;
+    send(&mut writer, &SessionFrame::Shutdown)
+        .map_err(|e| format!("sending the shutdown frame: {e}"))?;
+    for line in reader.lines() {
+        let line = line.map_err(|e| format!("reading from the daemon: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match SessionFrame::decode(&line).map_err(|e| format!("daemon sent {e}"))? {
+            SessionFrame::Bye => {
+                println!("serve: daemon at {addr} drained and stopped");
+                return Ok(());
+            }
+            SessionFrame::Error { frame, message } => {
+                return Err(format!("serve daemon refused (frame {frame}): {message}"))
+            }
+            _ => continue,
+        }
+    }
+    Err("daemon closed the session without acknowledging shutdown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_frames_roundtrip() {
+        let frames = vec![
+            SessionFrame::Submit { spec: "[scenario]\nname = x\n".into(), wait: false },
+            SessionFrame::Status { job: 7 },
+            SessionFrame::ResultRequest { job: 7 },
+            SessionFrame::Cancel { job: 9 },
+            SessionFrame::Shutdown,
+            SessionFrame::Accepted { job: 1, key: "ab".repeat(32), cached: true },
+            SessionFrame::Progress { job: 1, shard: 2, done: 3, total: 4 },
+            SessionFrame::Result {
+                job: 1,
+                key: "cd".repeat(32),
+                cached: false,
+                name: "paper-10-node".into(),
+                csv: "x,y\n1,2\n".into(),
+                json: "{}\n".into(),
+                ledger_csv: "src,dst,scalars,bits\n".into(),
+            },
+            SessionFrame::Report { job: 1, state: "running".into(), sim_runs: 42 },
+            SessionFrame::Bye,
+            SessionFrame::Error { frame: 3, message: "boom".into() },
+        ];
+        for frame in frames {
+            let line = frame.encode();
+            assert!(!line.contains('\n'), "frame spans lines: {line}");
+            let back = SessionFrame::decode(&line).unwrap();
+            assert_eq!(frame_type_name(&frame), frame_type_name(&back));
+            assert_eq!(line, back.encode(), "unstable reencode for {line}");
+        }
+    }
+
+    #[test]
+    fn session_decode_rejects_with_context() {
+        // The worker-pipe version is not a session version.
+        let err = SessionFrame::decode("{\"v\":2,\"type\":\"submit\",\"spec\":\"\"}").unwrap_err();
+        assert!(err.contains("version 2"), "{err}");
+        let err = SessionFrame::decode("{\"v\":3,\"type\":\"warp\"}").unwrap_err();
+        assert!(err.contains("warp"), "{err}");
+        let err = SessionFrame::decode("{\"v\":3,\"type\":\"status\"}").unwrap_err();
+        assert!(err.contains("job"), "{err}");
+        // A counter past 2^53 cannot ride in an f64 frame field.
+        let err = SessionFrame::decode("{\"v\":3,\"type\":\"status\",\"job\":9007199254740994}")
+            .unwrap_err();
+        assert!(err.contains("job"), "{err}");
+        let err =
+            SessionFrame::decode("{\"v\":3,\"type\":\"submit\",\"spec\":\"\",\"wait\":1}")
+                .unwrap_err();
+        assert!(err.contains("wait"), "{err}");
+    }
+}

@@ -28,9 +28,12 @@ mod protocol;
 mod supervisor;
 mod worker;
 
-pub use protocol::{Frame, JobKind, RunPayload, ShardJob, PROTOCOL_VERSION};
+pub use protocol::{
+    Frame, JobKind, RunPayload, ShardJob, PROTOCOL_VERSION, SESSION_PROTOCOL_VERSION,
+};
 pub use supervisor::{
-    run_scenario_sharded, run_scenario_wsn_sharded, run_wsn_sharded, shard_retries, RETRIES_ENV,
+    run_scenario_sharded, run_scenario_sharded_progress, run_scenario_wsn_sharded,
+    run_scenario_wsn_sharded_progress, run_wsn_sharded, shard_retries, ShardProgress, RETRIES_ENV,
     WORKER_BIN_ENV,
 };
 pub use worker::{worker_main, CRASH_ONCE_ENV, CRASH_RUN_ENV};

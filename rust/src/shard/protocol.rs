@@ -26,6 +26,16 @@ use crate::jsonio::{obj, Json};
 /// and WSN frames gained the gating/activation breakdown.
 pub const PROTOCOL_VERSION: u64 = 2;
 
+/// Version of the **session** frame grammar spoken by `dcd-lms serve`
+/// (DESIGN.md §11): v3 extends this worker-pipe grammar with the
+/// submit / status / progress / result / cancel session frames. The
+/// two grammars travel on different channels — supervisor ↔ worker
+/// pipes stay on v2 [`Frame`]s; daemon ↔ client sessions speak the v3
+/// `serve::session::SessionFrame`s — so a session frame fed to the
+/// worker pipe (or vice versa) is rejected by the version check
+/// instead of being misread.
+pub const SESSION_PROTOCOL_VERSION: u64 = 3;
+
 /// What a shard worker is asked to execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobKind {

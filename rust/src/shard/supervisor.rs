@@ -40,6 +40,14 @@ pub fn shard_retries() -> usize {
         .unwrap_or(1)
 }
 
+/// A per-shard completion callback `(shard_idx, done_shards,
+/// total_shards)`, invoked from the supervisor's per-shard threads as
+/// each shard's block lands (hence `Sync`). Purely observational: it
+/// sees completions in wall-clock order while reassembly stays in run
+/// order, so wiring one in (the serve daemon streams these as progress
+/// frames, DESIGN.md §11) cannot change result bytes.
+pub type ShardProgress<'a> = &'a (dyn Fn(usize, usize, usize) + Sync);
+
 /// The per-worker in-process thread budget: an explicit request passes
 /// through unchanged; auto (0) divides the machine's cores across the
 /// concurrent shards, so `--shards N` never oversubscribes the host by
@@ -57,20 +65,35 @@ fn per_worker_threads(requested: usize, shards: usize) -> usize {
 /// bit-identical to the in-process runner at any shards × threads
 /// combination (tested end-to-end in `rust/tests/shard.rs`).
 pub fn run_scenario_sharded(sc: &Scenario) -> Result<McResult, String> {
+    run_scenario_sharded_progress(sc, None)
+}
+
+/// [`run_scenario_sharded`] with an optional per-shard progress
+/// callback (the serve daemon's streaming hook; `None` is the exact
+/// historical code path).
+pub fn run_scenario_sharded_progress(
+    sc: &Scenario,
+    progress: Option<ShardProgress>,
+) -> Result<McResult, String> {
     // The payload the workers replay: the same scenario, but with the
     // shard knob reset so a worker never tries to shard recursively.
     let mut job_sc = sc.clone();
     job_sc.shards = 1;
     let payload = job_sc.to_ini_string();
     let threads = per_worker_threads(sc.threads, sc.shards);
-    let collected = collect_sharded(sc.runs, sc.shards, &|run_start, run_count| ShardJob {
-        kind: JobKind::Mc,
-        payload: payload.clone(),
-        run_start,
-        run_count,
-        threads,
-        algo_index: 0,
-    })?;
+    let collected = collect_sharded(
+        sc.runs,
+        sc.shards,
+        progress,
+        &|run_start, run_count| ShardJob {
+            kind: JobKind::Mc,
+            payload: payload.clone(),
+            run_start,
+            run_count,
+            threads,
+            algo_index: 0,
+        },
+    )?;
     let mut results = Vec::with_capacity(collected.len());
     for payload in collected {
         match payload {
@@ -97,18 +120,32 @@ pub fn run_scenario_sharded(sc: &Scenario) -> Result<McResult, String> {
 /// the workers answer with WSN run frames carrying the full ledger
 /// (DESIGN.md §8, §9).
 pub fn run_scenario_wsn_sharded(sc: &Scenario) -> Result<Vec<WsnResult>, String> {
+    run_scenario_wsn_sharded_progress(sc, None)
+}
+
+/// [`run_scenario_wsn_sharded`] with an optional per-shard progress
+/// callback (see [`run_scenario_sharded_progress`]).
+pub fn run_scenario_wsn_sharded_progress(
+    sc: &Scenario,
+    progress: Option<ShardProgress>,
+) -> Result<Vec<WsnResult>, String> {
     let mut job_sc = sc.clone();
     job_sc.shards = 1;
     let payload = job_sc.to_ini_string();
     let threads = per_worker_threads(sc.threads, sc.shards);
-    let collected = collect_sharded(sc.runs, sc.shards, &|run_start, run_count| ShardJob {
-        kind: JobKind::Mc,
-        payload: payload.clone(),
-        run_start,
-        run_count,
-        threads,
-        algo_index: 0,
-    })?;
+    let collected = collect_sharded(
+        sc.runs,
+        sc.shards,
+        progress,
+        &|run_start, run_count| ShardJob {
+            kind: JobKind::Mc,
+            payload: payload.clone(),
+            run_start,
+            run_count,
+            threads,
+            algo_index: 0,
+        },
+    )?;
     let mut results = Vec::with_capacity(collected.len());
     for payload in collected {
         match payload {
@@ -133,7 +170,7 @@ pub fn run_wsn_sharded(
 ) -> Result<Vec<WsnResult>, String> {
     let payload = cfg.to_ini_string();
     let threads = per_worker_threads(0, shards);
-    let collected = collect_sharded(cfg.runs, shards, &|run_start, run_count| ShardJob {
+    let collected = collect_sharded(cfg.runs, shards, None, &|run_start, run_count| ShardJob {
         kind: JobKind::Wsn,
         payload: payload.clone(),
         run_start,
@@ -159,19 +196,30 @@ pub fn run_wsn_sharded(
 fn collect_sharded(
     runs: usize,
     shards: usize,
+    progress: Option<ShardProgress>,
     make_job: &(dyn Fn(usize, usize) -> ShardJob + Sync),
 ) -> Result<Vec<RunPayload>, String> {
     if runs == 0 {
         return Err("sharded run: zero realizations".to_string());
     }
     let ranges = shard_ranges(runs, shards);
+    let total = ranges.len();
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    let done = &done;
     let mut shard_outputs: Vec<Result<Vec<(usize, RunPayload)>, String>> =
         Vec::with_capacity(ranges.len());
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(ranges.len());
         for (idx, &(start, count)) in ranges.iter().enumerate() {
             let job = make_job(start, count);
-            handles.push(scope.spawn(move || run_shard_with_retries(idx, job)));
+            handles.push(scope.spawn(move || {
+                let out = run_shard_with_retries(idx, job);
+                if let (Ok(_), Some(report)) = (&out, progress) {
+                    let n = done.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+                    report(idx, n, total);
+                }
+                out
+            }));
         }
         for handle in handles {
             shard_outputs.push(handle.join().expect("shard supervisor thread panicked"));

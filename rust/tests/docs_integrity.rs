@@ -266,6 +266,31 @@ fn ledger_chapter_and_citation_are_paired() {
     );
 }
 
+/// Rule 6: DESIGN.md must carry the §11 serve/result-cache chapter and
+/// the cache implementation must cite it — the canonical-hash and
+/// cache-hit bit-identity argument lives there, and every cached byte
+/// the daemon replays leans on that argument, so the chapter and its
+/// anchor citation may not silently drift apart. Mirrors rule 6 of
+/// `tools/check_md_links.py`.
+#[test]
+fn serve_chapter_and_citation_are_paired() {
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md")).expect("DESIGN.md");
+    let has_section = design
+        .lines()
+        .any(|l| l.starts_with('#') && l.contains("§11"));
+    assert!(has_section, "DESIGN.md lost its §11 serve/result-cache chapter");
+    let cache = fs::read_to_string(
+        root.join("rust").join("src").join("serve").join("cache.rs"),
+    )
+    .expect("rust/src/serve/cache.rs (the content-addressed result cache)");
+    let needle = format!("{}.md §11", "DESIGN");
+    assert!(
+        cache.contains(&needle),
+        "rust/src/serve/cache.rs does not cite DESIGN.md §11"
+    );
+}
+
 #[test]
 fn relative_markdown_links_point_at_existing_files() {
     let root = repo_root();

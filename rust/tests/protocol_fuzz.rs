@@ -1,0 +1,310 @@
+//! Protocol fuzz battery (DESIGN.md §8 frame grammar + §11 session
+//! grammar): truncated frames, unknown versions, NaN/Inf floats,
+//! counters past 2^53, deep nesting and interleaved garbage are thrown
+//! at both the shard v2 parser and the serve v3 session parser — on
+//! the decode API, on a live worker's stdin, on the supervisor's
+//! worker pipe, and on a live stdio serve session. The contract is
+//! uniform: a contextual error naming the frame index and the
+//! offending field, **never** a panic, and (for sessions) the session
+//! survives the bad frame.
+
+use std::io::Write;
+use std::panic::catch_unwind;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use dcd_lms::scenario::find;
+use dcd_lms::serve::SessionFrame;
+use dcd_lms::shard::{Frame, JobKind, ShardJob};
+
+fn binary() -> PathBuf {
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // release|debug
+    p.push("dcd-lms");
+    p
+}
+
+/// A valid v2 job frame line to mutate.
+fn valid_job_line() -> String {
+    let mut sc = find("paper-10-node").unwrap();
+    sc.runs = 2;
+    sc.iters = 100;
+    Frame::Job(ShardJob {
+        kind: JobKind::Mc,
+        payload: sc.to_ini_string(),
+        run_start: 0,
+        run_count: 2,
+        threads: 1,
+        algo_index: 0,
+    })
+    .encode()
+}
+
+/// A valid v3 submit frame line to mutate.
+fn valid_submit_line() -> String {
+    let mut sc = find("paper-10-node").unwrap();
+    sc.runs = 2;
+    sc.iters = 100;
+    SessionFrame::Submit { spec: sc.to_ini_string(), wait: true }.encode()
+}
+
+/// Every mutation of both grammars' lines must produce `Err`, never a
+/// panic — the decode APIs are total functions over arbitrary bytes.
+#[test]
+fn truncations_and_mutations_never_panic_either_parser() {
+    let seeds = [valid_job_line(), valid_submit_line()];
+    let mut cases: Vec<String> = Vec::new();
+    for line in &seeds {
+        // Every prefix truncation (byte-safe: char boundaries only).
+        for (i, _) in line.char_indices() {
+            cases.push(line[..i].to_string());
+        }
+        // Single-byte corruptions at a stride, plus structural stabs.
+        let bytes = line.as_bytes();
+        for pos in (0..bytes.len()).step_by(7) {
+            let mut b = bytes.to_vec();
+            b[pos] = b[pos].wrapping_add(13);
+            cases.push(String::from_utf8_lossy(&b).into_owned());
+        }
+        cases.push(format!("{line}{line}"));
+        cases.push(line.replace(':', ","));
+        cases.push(line.replace('{', "["));
+    }
+    for garbage in [
+        "",
+        "   ",
+        "null",
+        "42",
+        "\"a string, not an object\"",
+        "{}",
+        "[]",
+        "{\"v\":}",
+        "{\"v\":2",
+        "not json at all \u{1f980}",
+        "{\"v\":2,\"type\":\"job\",\"payload\":123}",
+        "{\"v\":3,\"type\":\"submit\",\"spec\":123}",
+    ] {
+        cases.push(garbage.to_string());
+    }
+    // Deep nesting must be a catchable error, not a stack overflow.
+    cases.push("[".repeat(100_000));
+    cases.push(format!("{}1{}", "{\"v\":".repeat(50_000), "}".repeat(50_000)));
+    for case in &cases {
+        let v2 = case.clone();
+        let out = catch_unwind(move || Frame::decode(&v2).map(|_| ()));
+        let decoded = out.unwrap_or_else(|_| panic!("v2 decode panicked on {case:?}"));
+        if case == &seeds[0] {
+            assert!(decoded.is_ok());
+        }
+        let v3 = case.clone();
+        let out = catch_unwind(move || SessionFrame::decode(&v3).map(|_| ()));
+        let decoded = out.unwrap_or_else(|_| panic!("v3 decode panicked on {case:?}"));
+        if case == &seeds[1] {
+            assert!(decoded.is_ok());
+        }
+    }
+}
+
+/// Version skew is named, in both directions: the worker-pipe parser
+/// rejects v1/v3/v99, the session parser rejects v2/v4.
+#[test]
+fn unknown_versions_are_named() {
+    for v in [0, 1, 3, 4, 99] {
+        let err = Frame::decode(&format!("{{\"v\":{v},\"type\":\"done\",\"runs\":0}}"))
+            .unwrap_err();
+        assert!(err.contains(&format!("version {v}")), "{err}");
+    }
+    for v in [0, 1, 2, 4, 99] {
+        let err = SessionFrame::decode(&format!("{{\"v\":{v},\"type\":\"bye\"}}")).unwrap_err();
+        assert!(err.contains(&format!("version {v}")), "{err}");
+    }
+}
+
+/// Floats that don't survive JSON (NaN, Inf) and counters past 2^53
+/// are contextual errors naming the offending field, on both parsers.
+#[test]
+fn nan_inf_and_oversized_counters_are_contextual_errors() {
+    // Bare NaN / Infinity tokens are not JSON; the parse layer rejects
+    // them before any field logic.
+    for token in ["NaN", "Infinity", "-Infinity"] {
+        let line = format!("{{\"v\":2,\"type\":\"run\",\"run\":0,\"msd\":[{token}]}}");
+        let err = Frame::decode(&line).unwrap_err();
+        assert!(err.contains("shard protocol"), "{err}");
+        let line = format!("{{\"v\":3,\"type\":\"progress\",\"job\":{token}}}");
+        let err = SessionFrame::decode(&line).unwrap_err();
+        assert!(err.contains("session protocol"), "{err}");
+    }
+    // 2^53 + 2: representable as f64 only by rounding, so the exact-u64
+    // accessor refuses rather than silently folding counters.
+    let big = (1u64 << 53) + 2;
+    let line = format!(
+        "{{\"v\":2,\"type\":\"job\",\"kind\":\"mc\",\"payload\":\"\",\"run_start\":{big},\
+         \"run_count\":1,\"threads\":1,\"algo_index\":0}}"
+    );
+    let err = Frame::decode(&line).unwrap_err();
+    assert!(err.contains("run_start"), "{err}");
+    let line = format!("{{\"v\":3,\"type\":\"status\",\"job\":{big}}}");
+    let err = SessionFrame::decode(&line).unwrap_err();
+    assert!(err.contains("job"), "{err}");
+    // The largest exact integer is still accepted.
+    let ok = format!("{{\"v\":3,\"type\":\"status\",\"job\":{}}}", 1u64 << 53);
+    assert!(SessionFrame::decode(&ok).is_ok());
+}
+
+fn run_worker_with_stdin(input: &str) -> (bool, String) {
+    let mut child = Command::new(binary())
+        .arg("shard-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn shard-worker");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(input.as_bytes())
+        .expect("write to shard-worker");
+    let out = child.wait_with_output().expect("wait for shard-worker");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+/// A live worker fed fuzz on stdin dies with a contextual diagnostic —
+/// exit code, not signal; message, not stack trace.
+#[test]
+fn live_worker_survives_fuzz_with_clean_errors() {
+    for (input, needle) in [
+        ("\u{0}\u{0}\u{0}garbage\n", "shard protocol"),
+        ("{\"v\":3,\"type\":\"submit\",\"spec\":\"\"}\n", "version 3"),
+        ("{\"v\":2,\"type\":\"run\",\"run\":0,\"msd\":[]}\n", "expected a job frame"),
+        (
+            "{\"v\":2,\"type\":\"job\",\"kind\":\"mc\",\"payload\":\"\",\
+             \"run_start\":9007199254740994,\"run_count\":1,\"threads\":1,\"algo_index\":0}\n",
+            "run_start",
+        ),
+    ] {
+        let (ok, text) = run_worker_with_stdin(input);
+        assert!(!ok, "worker accepted fuzz {input:?}: {text}");
+        assert!(text.contains(needle), "fuzz {input:?}: wanted {needle:?} in: {text}");
+    }
+}
+
+/// Supervisor side: an impostor worker answering the v2 pipe with
+/// interleaved garbage is diagnosed by frame index — never folded into
+/// results, never a hang (satellite: both sides of the v2 pipe).
+#[cfg(unix)]
+#[test]
+fn supervisor_diagnoses_interleaved_garbage_by_frame_index() {
+    use std::os::unix::fs::PermissionsExt;
+    let dir = std::env::temp_dir().join(format!("dcd-fuzz-impostor-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // One plausible-but-wrong line, then garbage: the supervisor must
+    // point at frame 1 (the first worker line it cannot use).
+    let script = dir.join("impostor.sh");
+    std::fs::write(
+        &script,
+        "#!/bin/sh\nread _job\necho '{\"v\":2,\"type\":\"nonsense\"}'\necho 'interleaved garbage'\n",
+    )
+    .unwrap();
+    std::fs::set_permissions(&script, std::fs::Permissions::from_mode(0o755)).unwrap();
+    let out = Command::new(binary())
+        .args([
+            "scenario", "run", "--name", "paper-10-node", "--runs", "2", "--iters", "100",
+            "--shards", "2", "--quiet",
+        ])
+        .env(dcd_lms::shard::WORKER_BIN_ENV, script.to_str().unwrap())
+        .env(dcd_lms::shard::RETRIES_ENV, "0")
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn dcd-lms");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(!out.status.success(), "impostor must fail the run: {text}");
+    assert!(text.contains("worker frame 1 malformed"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A live stdio serve session under fuzz: every bad line is answered
+/// with an `error` frame carrying the 1-based frame index, the session
+/// keeps serving (a valid submit after the garbage still completes),
+/// and EOF exits cleanly.
+#[test]
+fn serve_session_survives_fuzz_and_reports_frame_indices() {
+    let dir = std::env::temp_dir().join(format!("dcd-fuzz-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = dir.join("cache");
+    let mut sc = find("paper-10-node").unwrap();
+    sc.runs = 2;
+    sc.iters = 200;
+    sc.threads = 1;
+    let mut input = String::new();
+    input.push_str("complete garbage\n"); // frame 1
+    input.push_str("{\"v\":9,\"type\":\"submit\"}\n"); // frame 2: bad version
+    input.push_str("{\"v\":3,\"type\":\"status\",\"job\":777}\n"); // frame 3: unknown job
+    input.push_str("{\"v\":3,\"type\":\"bye\"}\n"); // frame 4: wrong direction
+    input.push_str("{\"v\":3,\"type\":\"submit\",\"spec\":\"[algorithm]\\nname = quantum\\n\"}\n"); // frame 5
+    input.push_str(&format!("{}\n", SessionFrame::Submit { spec: sc.to_ini_string(), wait: true }.encode())); // frame 6
+    input.push_str(&format!("{}\n", SessionFrame::Shutdown.encode())); // frame 7
+    let mut child = Command::new(binary())
+        .args(["serve", "--cache", cache.to_str().unwrap(), "--workers", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn dcd-lms serve");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(input.as_bytes())
+        .expect("write session input");
+    let out = child.wait_with_output().expect("wait for serve");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "fuzzed session must still exit cleanly: {stdout}{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let frames: Vec<SessionFrame> = stdout
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| SessionFrame::decode(l).unwrap_or_else(|e| panic!("daemon emitted {e}: {l}")))
+        .collect();
+    // Frames 1, 2, 3, 4, 5 each draw an error naming their index.
+    for want in 1..=5u64 {
+        assert!(
+            frames.iter().any(|f| matches!(f,
+                SessionFrame::Error { frame, message } if *frame == want
+                    && message.contains(&format!("frame {want}")))),
+            "no error frame for input frame {want}: {stdout}"
+        );
+    }
+    // The good submit after all that garbage still ran to completion.
+    assert!(
+        frames.iter().any(|f| matches!(f, SessionFrame::Accepted { .. })),
+        "{stdout}"
+    );
+    assert!(
+        frames
+            .iter()
+            .any(|f| matches!(f, SessionFrame::Result { cached: false, .. })),
+        "{stdout}"
+    );
+    assert!(
+        matches!(frames.last(), Some(SessionFrame::Bye)),
+        "session must end with bye: {stdout}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,342 @@
+//! End-to-end tests of the resident serve daemon and its
+//! content-addressed result cache (DESIGN.md §11): resubmits are
+//! byte-identical cache hits with zero simulation work, single-key
+//! perturbations miss, semantically identical INIs share an entry, a
+//! worker crash under the daemon converges to the uncrashed bytes, and
+//! a client disconnect mid-stream never loses the job.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use dcd_lms::config::IniDoc;
+use dcd_lms::scenario::{find, Scenario};
+use dcd_lms::serve::{job_key, SessionFrame};
+
+fn binary() -> PathBuf {
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // release|debug
+    p.push("dcd-lms");
+    p
+}
+
+struct DaemonHandle {
+    child: Child,
+    addr: String,
+    stdout: BufReader<std::process::ChildStdout>,
+}
+
+impl DaemonHandle {
+    /// Drain the queue, stop the daemon, and assert a clean exit.
+    fn stop(mut self) {
+        let out = Command::new(binary())
+            .args(["serve", "--stop", &self.addr])
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .expect("spawn serve --stop");
+        assert!(
+            out.status.success(),
+            "serve --stop failed: {}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let status = self.child.wait().expect("wait for daemon");
+        assert!(status.success(), "daemon exited non-zero");
+        let mut rest = String::new();
+        let _ = self.stdout.read_to_string(&mut rest);
+        assert!(rest.contains("serve: stopped"), "{rest}");
+    }
+}
+
+use std::io::Read as _;
+
+/// Spawn `dcd-lms serve --listen 127.0.0.1:0 ...` and parse the bound
+/// address from its banner line.
+fn spawn_daemon(cache: &Path, extra: &[&str], envs: &[(&str, &str)]) -> DaemonHandle {
+    let mut cmd = Command::new(binary());
+    cmd.args(["serve", "--listen", "127.0.0.1:0", "--cache", cache.to_str().unwrap()])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"));
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let mut child = cmd.spawn().expect("spawn dcd-lms serve");
+    let mut stdout = BufReader::new(child.stdout.take().expect("daemon stdout"));
+    let mut banner = String::new();
+    stdout.read_line(&mut banner).expect("read serve banner");
+    let addr = banner
+        .trim()
+        .strip_prefix("serve: listening on ")
+        .unwrap_or_else(|| panic!("unexpected banner {banner:?}"))
+        .to_string();
+    DaemonHandle { child, addr, stdout }
+}
+
+/// One raw v3 session over TCP.
+struct Session {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Session {
+    fn open(addr: &str) -> Session {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let writer = stream.try_clone().expect("clone session stream");
+        Session { reader: BufReader::new(stream), writer }
+    }
+
+    fn send(&mut self, frame: &SessionFrame) {
+        writeln!(self.writer, "{}", frame.encode()).expect("send frame");
+        self.writer.flush().expect("flush frame");
+    }
+
+    fn recv(&mut self) -> SessionFrame {
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).expect("read frame");
+            assert!(n > 0, "daemon closed the session unexpectedly");
+            if line.trim().is_empty() {
+                continue;
+            }
+            return SessionFrame::decode(&line).expect("daemon frame decodes");
+        }
+    }
+
+    /// Submit with wait and read frames through the terminal result.
+    fn submit_and_wait(&mut self, spec: &str) -> (u64, String, bool, String, String, String) {
+        self.send(&SessionFrame::Submit { spec: spec.to_string(), wait: true });
+        let (job, key0, _) = match self.recv() {
+            SessionFrame::Accepted { job, key, cached } => (job, key, cached),
+            other => panic!("expected accepted, got {other:?}"),
+        };
+        loop {
+            match self.recv() {
+                SessionFrame::Progress { .. } => continue,
+                SessionFrame::Result { job: j, key, cached, csv, json, ledger_csv, .. } => {
+                    assert_eq!(j, job);
+                    assert_eq!(key, key0, "result key differs from accepted key");
+                    return (job, key, cached, csv, json, ledger_csv);
+                }
+                other => panic!("expected progress/result, got {other:?}"),
+            }
+        }
+    }
+
+    /// Daemon-wide simulated-realizations counter, via a status frame.
+    fn sim_runs(&mut self, job: u64) -> u64 {
+        self.send(&SessionFrame::Status { job });
+        match self.recv() {
+            SessionFrame::Report { sim_runs, .. } => sim_runs,
+            other => panic!("expected report, got {other:?}"),
+        }
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dcd-serve-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_scenario() -> Scenario {
+    let mut sc = find("paper-10-node").unwrap();
+    sc.runs = 3;
+    sc.iters = 400;
+    sc.threads = 1;
+    sc
+}
+
+/// Tentpole acceptance: a resubmit of the same (spec, seed) is served
+/// from the cache byte-for-byte with **zero** additional simulation
+/// work; perturbing the seed misses; a textually different but
+/// semantically identical INI lands on the same entry.
+#[test]
+fn resubmit_hits_cache_byte_identical_with_zero_work() {
+    let dir = tmp("resubmit");
+    let daemon = spawn_daemon(&dir.join("cache"), &["--workers", "2"], &[]);
+    let mut session = Session::open(&daemon.addr);
+    let sc = small_scenario();
+    let spec = sc.to_ini_string();
+
+    let (job1, key1, cached1, csv1, json1, ledger1) = session.submit_and_wait(&spec);
+    assert!(!cached1, "first submit must compute");
+    let work_after_first = session.sim_runs(job1);
+    assert_eq!(work_after_first, sc.runs as u64, "compute must bill its runs");
+
+    // Resubmit: identical bytes, zero new work.
+    let (job2, key2, cached2, csv2, json2, ledger2) = session.submit_and_wait(&spec);
+    assert_ne!(job1, job2);
+    assert_eq!(key1, key2);
+    assert!(cached2, "resubmit must be a cache hit");
+    assert_eq!(csv1, csv2, "cached CSV differs from computed CSV");
+    assert_eq!(json1, json2, "cached JSON differs from computed JSON");
+    assert_eq!(ledger1, ledger2, "cached ledger differs from computed ledger");
+    assert_eq!(
+        session.sim_runs(job2),
+        work_after_first,
+        "a cache hit must do zero simulation work"
+    );
+
+    // Seed perturbation: a different entry, computed fresh.
+    let mut perturbed = small_scenario();
+    perturbed.seed += 1;
+    let (_, key3, cached3, csv3, ..) = session.submit_and_wait(&perturbed.to_ini_string());
+    assert_ne!(key1, key3, "seed must be part of the cache key");
+    assert!(!cached3);
+    assert_ne!(csv1, csv3, "different seed, different trajectory");
+
+    // A scrambled-but-equivalent INI (comments, blank lines, spacing,
+    // explicit default-valued key) maps onto the SAME cache entry.
+    let scrambled = format!(
+        "; same scenario, different text\n\n[schedule]\nseed={}\nruns = {}\n  iters = {}\n\
+         threads={}\nshards = {}\nrecord_every = {}\n\n[scenario]\n  name = {}\n\
+         description = {}\n",
+        sc.seed,
+        sc.runs,
+        sc.iters,
+        sc.threads,
+        sc.shards,
+        sc.record_every,
+        sc.name,
+        sc.description,
+    );
+    let (_, key4, cached4, csv4, ..) = session.submit_and_wait(&scrambled);
+    assert_eq!(key1, key4, "equivalent INI text must share the cache entry");
+    assert!(cached4);
+    assert_eq!(csv1, csv4);
+
+    drop(session);
+    daemon.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Single-key perturbation property: changing any one scenario INI key
+/// moves the cache key (nothing is silently normalized away).
+#[test]
+fn perturbing_any_single_key_misses() {
+    let sc = small_scenario();
+    let base_key = job_key(&sc);
+    for (dotted, value) in [
+        ("scenario.name", "paper-10-node-b"),
+        ("schedule.seed", "31"),
+        ("schedule.runs", "4"),
+        ("schedule.iters", "500"),
+        ("schedule.threads", "2"),
+        ("schedule.shards", "2"),
+        ("algorithm.m", "2"),
+        ("algorithm.m_grad", "2"),
+        ("algorithm.mu", "0.02"),
+        ("data.sigma_v2", "0.002"),
+        ("impairments.drop_prob", "0.05"),
+    ] {
+        let mut doc = IniDoc::parse(&sc.to_ini_string()).unwrap();
+        Scenario::check_key(dotted).unwrap_or_else(|e| panic!("{dotted}: {e}"));
+        doc.set_dotted(&format!("{dotted}={value}")).unwrap();
+        let perturbed = Scenario::from_ini(&doc).unwrap_or_else(|e| panic!("{dotted}: {e}"));
+        assert_ne!(
+            base_key,
+            job_key(&perturbed),
+            "perturbing {dotted} must change the cache key"
+        );
+    }
+}
+
+/// Crash-injection under the daemon: a worker killed mid-job is
+/// re-spawned and the final artifacts are byte-identical to an
+/// uncrashed local run of the same spec.
+#[test]
+fn worker_crash_under_daemon_converges_to_uncrashed_bytes() {
+    let dir = tmp("crash");
+    std::fs::create_dir_all(&dir).unwrap();
+    let marker = dir.join("crash_once.marker");
+    // Uncrashed reference: a plain local run (no daemon, no crash env).
+    let local = dir.join("local");
+    let base = [
+        "scenario", "run", "--name", "paper-10-node", "--runs", "4", "--iters", "300",
+        "--threads", "1", "--shards", "2", "--quiet",
+    ];
+    let mut args: Vec<&str> = base.to_vec();
+    let local_s = local.to_str().unwrap().to_string();
+    args.extend_from_slice(&["--out", &local_s]);
+    let out = Command::new(binary())
+        .args(&args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("local scenario run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Daemon with the crash hook armed: its first spawned shard worker
+    // exits mid-job, the supervisor re-spawns deterministically.
+    let daemon = spawn_daemon(
+        &dir.join("cache"),
+        &["--workers", "1"],
+        &[(dcd_lms::shard::CRASH_ONCE_ENV, marker.to_str().unwrap())],
+    );
+    let via = dir.join("via");
+    let via_s = via.to_str().unwrap().to_string();
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend_from_slice(&["--out", &via_s, "--via", &daemon.addr]);
+    let out = Command::new(binary())
+        .args(&args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("scenario run --via");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(out.status.success(), "{text}");
+    assert!(text.contains("cache miss"), "{text}");
+    assert!(marker.exists(), "the crash hook should have fired in the daemon's worker");
+    for artifact in ["paper-10-node.csv", "paper-10-node.json", "paper-10-node_ledger.csv"] {
+        let l = std::fs::read_to_string(local.join(artifact)).unwrap();
+        let v = std::fs::read_to_string(via.join(artifact)).unwrap();
+        assert_eq!(l, v, "{artifact}: post-crash daemon bytes diverged from uncrashed local run");
+    }
+    daemon.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Client disconnect mid-stream: the job keeps running, the result
+/// lands in the cache, and a later resubmit is a zero-work hit.
+#[test]
+fn client_disconnect_mid_stream_still_caches_the_result() {
+    let dir = tmp("disconnect");
+    let daemon = spawn_daemon(&dir.join("cache"), &["--workers", "1"], &[]);
+    let mut sc = small_scenario();
+    sc.runs = 6;
+    sc.iters = 1500;
+    let spec = sc.to_ini_string();
+
+    // Submit, read only the accepted frame, then vanish.
+    {
+        let mut session = Session::open(&daemon.addr);
+        session.send(&SessionFrame::Submit { spec: spec.clone(), wait: true });
+        match session.recv() {
+            SessionFrame::Accepted { cached, .. } => assert!(!cached),
+            other => panic!("expected accepted, got {other:?}"),
+        }
+        // Dropping the session closes the socket mid-stream.
+    }
+
+    // A fresh session resubmits: it must get the finished result (the
+    // queue owns the job; the dead client never cancelled it) and the
+    // daemon must have simulated the realizations exactly once.
+    let mut session = Session::open(&daemon.addr);
+    let (job, _, cached, csv, ..) = session.submit_and_wait(&spec);
+    assert!(cached, "orphaned job's result must land in the cache");
+    assert!(!csv.is_empty());
+    assert_eq!(
+        session.sim_runs(job),
+        sc.runs as u64,
+        "the orphaned job must have computed exactly once"
+    );
+    drop(session);
+    daemon.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Markdown link check + DESIGN.md section-citation check.
 
-Standalone CI face of rust/tests/docs_integrity.rs — four rules:
+Standalone CI face of rust/tests/docs_integrity.rs — six rules:
 
 1. Every relative link target in a *.md file must exist on disk.
 2. Every markdown link with a `#fragment` that points at a markdown
@@ -18,6 +18,10 @@ Standalone CI face of rust/tests/docs_integrity.rs — four rules:
    ledger implementation (rust/src/energy/comm.rs) must cite it: the
    billing rules documented there define the communication numbers of
    every result file.
+6. DESIGN.md must carry the §11 serve/result-cache chapter and the
+   cache implementation (rust/src/serve/cache.rs) must cite it: the
+   canonical-hash and cache-hit bit-identity argument documented there
+   is what every replayed cached byte leans on.
 
 The scan covers the repo root *and* docs/ recursively (everything but
 SKIP_DIRS). Exit status 0 = clean, 1 = at least one dangling reference
@@ -162,6 +166,24 @@ def check_ledger_chapter(errors):
         errors.append("rust/src/energy/comm.rs does not cite DESIGN.md §9")
 
 
+def check_serve_chapter(errors):
+    """Rule 6: the §11 serve/cache chapter and its in-code citation pair up."""
+    design = ROOT / "DESIGN.md"
+    if design.exists():
+        headings = [
+            line
+            for line in design.read_text(encoding="utf-8").splitlines()
+            if line.startswith("#") and "§11" in line
+        ]
+        if not headings:
+            errors.append("DESIGN.md: the §11 serve/result-cache chapter is missing")
+    cache = ROOT / "rust" / "src" / "serve" / "cache.rs"
+    if not cache.exists():
+        errors.append("rust/src/serve/cache.rs missing (the content-addressed cache)")
+    elif "DESIGN.md §11" not in cache.read_text(encoding="utf-8"):
+        errors.append("rust/src/serve/cache.rs does not cite DESIGN.md §11")
+
+
 def main():
     errors = []
     # Guard: the walk must include docs/ (a SKIP_DIRS regression would
@@ -172,6 +194,7 @@ def main():
     check_design_citations(errors)
     check_handbook_cli_coverage(errors)
     check_ledger_chapter(errors)
+    check_serve_chapter(errors)
     if errors:
         print("documentation integrity check FAILED:")
         for e in errors:
