@@ -16,7 +16,7 @@
 
 use dcd_lms::algorithms::{CommMeter, Dcd, NetworkConfig};
 use dcd_lms::bench_support::{bench, fast_mode, write_bench_json, BenchRecord, Table};
-use dcd_lms::coordinator::impairments::{Gating, ImpairmentState, LinkImpairments};
+use dcd_lms::coordinator::impairments::{DropModel, Gating, ImpairmentState, LinkImpairments};
 use dcd_lms::linalg::Mat;
 use dcd_lms::rng::Pcg64;
 use dcd_lms::topology::{combination_matrix, Combiner, Graph, Rule};
@@ -91,7 +91,7 @@ fn main() {
     let budget = Duration::from_millis(if fast { 60 } else { 300 });
     let dim = 4usize;
     let imp = LinkImpairments {
-        drop_prob: 0.05,
+        drop: DropModel::Iid(0.05),
         gating: Gating::Always,
         quant_step: 0.0,
     };
@@ -176,7 +176,7 @@ fn main() {
                 &a_dense0,
                 &c_dense0,
                 graph,
-                imp.drop_prob,
+                imp.drop.mean_drop(),
                 &mut rng,
             );
             std::hint::black_box(&a_dense);

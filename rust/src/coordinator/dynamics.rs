@@ -1,0 +1,431 @@
+//! Network-dynamics layer (DESIGN.md §12): node join/leave churn,
+//! mobility-driven topology rewiring, and the adaptive-combiner policy
+//! handle, wrapped around any [`Algorithm`] by the round scheduler.
+//!
+//! Every scenario the system expressed before this layer was static —
+//! fixed topology, fixed membership, fixed optimum. Ad-hoc WSNs are
+//! not: nodes die and rejoin (battery, duty cycling), radios move in
+//! and out of range, and the estimand drifts. This module owns the
+//! first two axes; the drifting optimum lives in
+//! [`crate::datamodel::DriftModel`] because it perturbs the *data*
+//! process, not the network.
+//!
+//! * **Churn** — each node independently leaves an iteration with
+//!   probability `leave` and, once absent, rejoins with probability
+//!   `join`. An absent node is fully off the air: it transmits nothing,
+//!   is billed nothing, solicits nothing (it folds into the impairment
+//!   layer's silence mask), and its step size is masked to zero so it
+//!   freezes in place until it returns. When the spec demands
+//!   `require_connected`, a departure that would disconnect the active
+//!   subgraph is vetoed (the draw is still consumed, so the RNG
+//!   sequence is membership-independent in count per node-state).
+//! * **Mobility rewiring** — nodes orbit their home placement with
+//!   radius `rewire` and period `rewire_period` (deterministic phases,
+//!   golden-angle-spread per node: no RNG consumed), and a support edge
+//!   is live exactly when the current distance is within the connection
+//!   `radius`. The combiners are built once over the *support graph*
+//!   ([`crate::topology::Graph::with_mobility_support`]); liveness only
+//!   toggles per-slot masks, so the per-iteration cost is O(E) with
+//!   zero allocation — the same in-place discipline as the impairment
+//!   layer (`tests/alloc_free.rs`).
+//! * **Adaptive combiners** — this layer carries the
+//!   [`AdaptivePolicy`] the impairment state consults on its periodic
+//!   re-weighting clock ([`super::impairments::ADAPTIVE_PERIOD`]).
+//!
+//! Determinism: churn draws come from a dedicated PCG64 stream
+//! (`seed ^ DYN_SEED_SALT`, same stream id as the run), so dynamics
+//! never perturb the data or impairment sequences and runs stay
+//! bit-identical for any thread/shard layout.
+
+use crate::algorithms::Algorithm;
+use crate::rng::Pcg64;
+
+pub use super::impairments::AdaptivePolicy;
+
+/// Salt XOR-ed into the master seed for the dynamics RNG stream, so
+/// churn draws are decorrelated from (and do not consume) the data and
+/// impairment streams.
+pub const DYN_SEED_SALT: u64 = 0x6479_6e61_6d69_6373; // "dynamics"
+
+/// Golden-angle phase spread between node orbits, so no two nodes'
+/// mobility trajectories ever synchronize.
+const GOLDEN_ANGLE: f64 = 2.399963229728653;
+
+/// Declarative network-dynamics model for one scenario (the runtime
+/// face of the `[dynamics]` INI section — see `scenario/spec.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicsConfig {
+    /// Per-iteration probability that an active node leaves.
+    pub leave: f64,
+    /// Per-iteration probability that an absent node rejoins.
+    pub join: f64,
+    /// Veto departures that would disconnect the active subgraph.
+    pub require_connected: bool,
+    /// Mobility orbit radius ρ around each node's home placement
+    /// (0 = no mobility).
+    pub rewire: f64,
+    /// Mobility orbit period in iterations.
+    pub rewire_period: usize,
+    /// Link reach: a mobile edge is live when the current node distance
+    /// is within this radius (the geometric topology's radius).
+    pub radius: f64,
+    /// Adaptive combination-weight policy (DESIGN.md §12).
+    pub adaptive: AdaptivePolicy,
+}
+
+impl Default for DynamicsConfig {
+    fn default() -> Self {
+        Self {
+            leave: 0.0,
+            join: 0.0,
+            require_connected: false,
+            rewire: 0.0,
+            rewire_period: 1000,
+            radius: 0.0,
+            adaptive: AdaptivePolicy::Static,
+        }
+    }
+}
+
+impl DynamicsConfig {
+    /// True when every axis is off — the scheduler then skips the layer
+    /// entirely and the run is byte-identical to the static path.
+    pub fn is_static(&self) -> bool {
+        self.leave == 0.0
+            && self.join == 0.0
+            && self.rewire == 0.0
+            && self.adaptive == AdaptivePolicy::Static
+    }
+}
+
+fn dist(a: (f64, f64), b: (f64, f64)) -> f64 {
+    ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+}
+
+/// Per-run mutable state of the dynamics layer: membership mask, the
+/// masked step-size backup, mobility positions, and per-slot edge
+/// liveness. All buffers are allocated once in [`DynamicsState::new`];
+/// [`DynamicsState::advance`] is allocation-free.
+pub struct DynamicsState {
+    cfg: DynamicsConfig,
+    /// Membership mask (false = node currently absent).
+    active: Vec<bool>,
+    /// Pristine per-node step sizes (what `restore` reinstalls).
+    mu0: Vec<f64>,
+    /// Home placements (mobility only; empty otherwise).
+    home: Vec<(f64, f64)>,
+    /// Current placements (mobility scratch).
+    pos: Vec<(f64, f64)>,
+    /// Always-live slots: support edges longer than `radius + 2ρ` at
+    /// home can only be the generator's connectivity stitches — they
+    /// model a long-range backbone link and never die to mobility.
+    protected: Vec<bool>,
+    /// Per-directed-slot mobility liveness (empty when mobility is off,
+    /// which [`DynamicsState::edge_alive`] reads as "always live").
+    edge_live: Vec<bool>,
+    /// Directed-link slot base per receiver (same layout as the
+    /// impairment layer's per-link vectors).
+    row_off: Vec<usize>,
+    /// BFS scratch for the connectivity veto.
+    seen: Vec<bool>,
+    stack: Vec<usize>,
+    iter: usize,
+    rng: Pcg64,
+}
+
+impl DynamicsState {
+    /// Capture the network's pristine step sizes and placements and
+    /// seed the dynamics stream for one run (`stream` is the
+    /// Monte-Carlo run stream, as for the impairment state).
+    pub fn new(
+        cfg: DynamicsConfig,
+        net: &crate::algorithms::NetworkConfig,
+        seed: u64,
+        stream: u64,
+    ) -> Self {
+        let n = net.n_nodes();
+        let mut row_off = Vec::with_capacity(n + 1);
+        let mut slots = 0usize;
+        for k in 0..n {
+            row_off.push(slots);
+            slots += net.graph.neighbors(k).len();
+        }
+        row_off.push(slots);
+        let mobility = cfg.rewire > 0.0 && net.graph.positions.is_some();
+        let home: Vec<(f64, f64)> = if mobility {
+            net.graph.positions.clone().unwrap()
+        } else {
+            Vec::new()
+        };
+        let mut protected = Vec::new();
+        let mut edge_live = Vec::new();
+        if mobility {
+            protected.resize(slots, false);
+            edge_live.resize(slots, true);
+            let reach = cfg.radius + 2.0 * cfg.rewire;
+            for k in 0..n {
+                for (slot, &lnb) in net.graph.neighbors(k).iter().enumerate() {
+                    protected[row_off[k] + slot] = dist(home[k], home[lnb]) > reach;
+                }
+            }
+        }
+        Self {
+            cfg,
+            active: vec![true; n],
+            mu0: net.mu.clone(),
+            pos: home.clone(),
+            home,
+            protected,
+            edge_live,
+            row_off,
+            seen: Vec::with_capacity(n),
+            stack: Vec::with_capacity(n),
+            iter: 0,
+            rng: Pcg64::new(seed ^ DYN_SEED_SALT, stream),
+        }
+    }
+
+    /// Advance one iteration: churn draws (leave/join, connectivity
+    /// veto), mobility orbit + edge-liveness refresh, and the per-node
+    /// step-size mask. Called by the impairment layer at the top of
+    /// [`super::impairments::ImpairmentState::begin_iteration_dynamic`].
+    pub fn advance(&mut self, alg: &mut dyn Algorithm) {
+        self.iter += 1;
+        let n = self.active.len();
+        let churn = self.cfg.leave > 0.0 || self.cfg.join > 0.0;
+        if churn {
+            {
+                let graph = &alg.network().graph;
+                for k in 0..n {
+                    if self.active[k] {
+                        if self.rng.next_bool(self.cfg.leave) {
+                            self.active[k] = false;
+                            let last_one = self.active.iter().all(|&a| !a);
+                            let veto = last_one
+                                || (self.cfg.require_connected
+                                    && !graph.is_connected_subset(
+                                        &self.active,
+                                        &mut self.seen,
+                                        &mut self.stack,
+                                    ));
+                            if veto {
+                                self.active[k] = true;
+                            }
+                        }
+                    } else if self.rng.next_bool(self.cfg.join) {
+                        self.active[k] = true;
+                    }
+                }
+            }
+            // An absent node freezes: its step size is masked to zero,
+            // so it neither adapts nor combines fresh information, and
+            // rejoins exactly where it left off.
+            let mu = &mut alg.network_mut().mu;
+            mu.copy_from_slice(&self.mu0);
+            for (k, &a) in self.active.iter().enumerate() {
+                if !a {
+                    mu[k] = 0.0;
+                }
+            }
+        }
+        if !self.edge_live.is_empty() {
+            let period = self.cfg.rewire_period.max(1);
+            let base =
+                2.0 * std::f64::consts::PI * (self.iter % period) as f64 / period as f64;
+            for (k, p) in self.pos.iter_mut().enumerate() {
+                let th = base + GOLDEN_ANGLE * k as f64;
+                *p = (
+                    self.home[k].0 + self.cfg.rewire * th.cos(),
+                    self.home[k].1 + self.cfg.rewire * th.sin(),
+                );
+            }
+            let graph = &alg.network().graph;
+            for k in 0..n {
+                for (slot, &lnb) in graph.neighbors(k).iter().enumerate() {
+                    let sidx = self.row_off[k] + slot;
+                    self.edge_live[sidx] = self.protected[sidx]
+                        || dist(self.pos[k], self.pos[lnb]) <= self.cfg.radius;
+                }
+            }
+        }
+    }
+
+    /// Whether node `k` is currently present.
+    #[inline]
+    pub fn is_active(&self, k: usize) -> bool {
+        self.active[k]
+    }
+
+    /// Number of currently present nodes.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// The membership mask (valid after [`Self::advance`]).
+    pub fn active(&self) -> &[bool] {
+        &self.active
+    }
+
+    /// The adaptive-combiner policy the impairment layer should apply
+    /// on its refresh clock.
+    #[inline]
+    pub fn adaptive(&self) -> AdaptivePolicy {
+        self.cfg.adaptive
+    }
+
+    /// Whether the directed support link `graph.neighbors(k)[slot] → k`
+    /// is structurally alive this iteration: both endpoints present and
+    /// (under mobility) the slot within radio reach.
+    #[inline]
+    pub fn edge_alive(&self, k: usize, slot: usize, lnb: usize) -> bool {
+        self.active[k]
+            && self.active[lnb]
+            && (self.edge_live.is_empty() || self.edge_live[self.row_off[k] + slot])
+    }
+
+    /// Put the pristine step sizes back (paired with the impairment
+    /// state's combiner restore, so a reused algorithm instance sees
+    /// its original configuration).
+    pub fn restore(&self, alg: &mut dyn Algorithm) {
+        alg.network_mut().mu.copy_from_slice(&self.mu0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{CommMeter, Dcd, NetworkConfig};
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    fn net(n: usize, l: usize) -> NetworkConfig {
+        let graph = Graph::ring(n, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        NetworkConfig { graph, c, a, mu: vec![0.05; n], dim: l }
+    }
+
+    #[test]
+    fn static_config_is_static() {
+        assert!(DynamicsConfig::default().is_static());
+        let c = DynamicsConfig { leave: 0.01, ..DynamicsConfig::default() };
+        assert!(!c.is_static());
+        let c = DynamicsConfig {
+            adaptive: AdaptivePolicy::Metropolis,
+            ..DynamicsConfig::default()
+        };
+        assert!(!c.is_static());
+    }
+
+    #[test]
+    fn churn_masks_step_sizes_and_restore_reinstalls() {
+        let cfg = net(8, 2);
+        let mut alg = Dcd::new(cfg.clone(), 1, 1);
+        let dc = DynamicsConfig { leave: 0.9, join: 0.0, ..DynamicsConfig::default() };
+        let mut ds = DynamicsState::new(dc, alg.network(), 42, 1);
+        for _ in 0..20 {
+            ds.advance(&mut alg);
+        }
+        assert!(ds.active_count() >= 1, "the last node can never leave");
+        let mu = &alg.network().mu;
+        for k in 0..8 {
+            if ds.is_active(k) {
+                assert_eq!(mu[k], 0.05);
+            } else {
+                assert_eq!(mu[k], 0.0);
+            }
+        }
+        // With heavy leave pressure somebody must have left.
+        assert!(ds.active_count() < 8);
+        ds.restore(&mut alg);
+        assert_eq!(alg.network().mu, cfg.mu);
+    }
+
+    #[test]
+    fn connectivity_veto_keeps_active_subgraph_connected() {
+        // A path graph: removing an interior node disconnects it, so
+        // with the veto on, only the endpoints may ever leave.
+        let graph = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let cfg = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 2 };
+        let mut alg = Dcd::new(cfg, 1, 1);
+        let dc = DynamicsConfig {
+            leave: 0.5,
+            join: 0.2,
+            require_connected: true,
+            ..DynamicsConfig::default()
+        };
+        let mut ds = DynamicsState::new(dc, alg.network(), 7, 3);
+        let mut seen = Vec::new();
+        let mut stack = Vec::new();
+        for _ in 0..200 {
+            ds.advance(&mut alg);
+            assert!(
+                alg.network().graph.is_connected_subset(ds.active(), &mut seen, &mut stack),
+                "active subgraph disconnected: {:?}",
+                ds.active()
+            );
+        }
+    }
+
+    #[test]
+    fn mobility_toggles_edges_but_keeps_protected_backbone() {
+        let mut rng = Pcg64::new(5, 9);
+        let base = Graph::random_geometric(24, 0.22, &mut rng);
+        let radius = 0.22;
+        let rho = 0.08;
+        let graph = base.with_mobility_support(radius, rho);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let n = graph.n();
+        let cfg = NetworkConfig { graph, c, a, mu: vec![0.05; n], dim: 2 };
+        let mut alg = Dcd::new(cfg, 1, 1);
+        let dc = DynamicsConfig {
+            rewire: rho,
+            rewire_period: 40,
+            radius,
+            ..DynamicsConfig::default()
+        };
+        let mut ds = DynamicsState::new(dc, alg.network(), 11, 1);
+        let mut ever_dead = 0usize;
+        let mut ever_live = 0usize;
+        for _ in 0..40 {
+            ds.advance(&mut alg);
+            let g = &alg.network().graph;
+            for k in 0..n {
+                for (slot, &lnb) in g.neighbors(k).iter().enumerate() {
+                    if ds.edge_alive(k, slot, lnb) {
+                        ever_live += 1;
+                    } else {
+                        ever_dead += 1;
+                    }
+                }
+            }
+        }
+        // Mobility must actually toggle membership both ways.
+        assert!(ever_live > 0 && ever_dead > 0, "live {ever_live} dead {ever_dead}");
+        // No churn configured: everybody stays active.
+        assert_eq!(ds.active_count(), n);
+    }
+
+    #[test]
+    fn dynamics_layer_composes_with_impairments() {
+        use super::super::impairments::{ImpairmentState, LinkImpairments};
+        let cfg = net(6, 2);
+        let mut alg = Dcd::new(cfg, 1, 1);
+        let mut comm = CommMeter::new(6);
+        let imp = LinkImpairments::ideal();
+        let mut state = ImpairmentState::new(alg.network(), 9, 1);
+        let dc = DynamicsConfig { leave: 1.0, join: 0.0, ..DynamicsConfig::default() };
+        let mut ds = DynamicsState::new(dc, alg.network(), 9, 1);
+        // leave = 1.0 with no veto: everyone but the last guard leaves,
+        // and every surviving node's incoming mass collapses to itself.
+        state.begin_iteration_dynamic(&imp, Some(&mut ds), &mut alg, &mut comm);
+        state.begin_iteration_dynamic(&imp, Some(&mut ds), &mut alg, &mut comm);
+        assert_eq!(ds.active_count(), 1);
+        let a = &alg.network().a;
+        for k in 0..6 {
+            assert!((a[(k, k)] - 1.0).abs() < 1e-12, "node {k} not isolated");
+        }
+    }
+}

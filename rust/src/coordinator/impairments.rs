@@ -5,13 +5,16 @@
 //! (DESIGN.md §4) relaxes that along the axes the follow-up literature
 //! studies:
 //!
-//! * **Packet drops** — every directed link `(l → k)` independently fails
-//!   to deliver with probability `drop_prob` per iteration. The
-//!   transmitter still pays for the frame (the energy is spent whether or
-//!   not the packet lands), so communication metering is unchanged; the
-//!   receiver falls back to its own information. This is the
-//!   receiver-side erasure model of the probabilistic-link analyses
-//!   (cf. Arablouei et al., arXiv:1408.5845).
+//! * **Packet drops** — every directed link `(l → k)` fails to deliver
+//!   according to a [`DropModel`]: either independently with probability
+//!   `p` per iteration ([`DropModel::Iid`], the receiver-side erasure
+//!   model of the probabilistic-link analyses, cf. Arablouei et al.,
+//!   arXiv:1408.5845), or through a two-state Gilbert–Elliott Markov
+//!   chain ([`DropModel::Markov`]) whose Bad state produces *bursts* of
+//!   consecutive erasures (DESIGN.md §12). The transmitter still pays
+//!   for the frame (the energy is spent whether or not the packet
+//!   lands), so communication metering is unchanged; the receiver falls
+//!   back to its own information.
 //! * **Communication gating** — a per-node transmit gate: a gated node
 //!   stays off the air for the whole iteration (its transmissions are
 //!   neither delivered *nor billed*). [`Gating::Probabilistic`] is random
@@ -110,11 +113,193 @@ impl std::str::FromStr for Gating {
     }
 }
 
+/// Per-directed-link erasure process (DESIGN.md §12).
+///
+/// [`DropModel::Iid`] is the historical independent-Bernoulli draw.
+/// [`DropModel::Markov`] is a two-state Gilbert–Elliott chain in "lazy
+/// redraw" form: each time the link is sampled, the state is redrawn
+/// with probability `p_gb` (from Good) or `p_bg` (from Bad), and a
+/// redraw lands Bad with probability `p_bad`; the frame is erased iff
+/// the state is Bad. The parameterization is chosen so that
+/// `p_gb = p_bg = 1` redraws every step — i.e. the chain is *exactly*
+/// the i.i.d. Bernoulli(`p_bad`) process, which is what makes
+/// `markov:p,1,1` specs byte-identical to `prob:p` specs.
+///
+/// Closed forms (pinned by `rust/tests/dynamics.rs`):
+/// * stationary Bad occupancy
+///   `π_B = p_gb·p_bad / (p_gb·p_bad + p_bg·(1 − p_bad))`
+///   (equal to `p_bad` whenever `p_gb = p_bg`);
+/// * bad-burst lengths are geometric with success probability
+///   `q = p_bg·(1 − p_bad)`, hence mean burst `1/q`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DropModel {
+    /// Independent erasure with probability `p` per sampled frame.
+    Iid(f64),
+    /// Gilbert–Elliott bursty erasures (lazy-redraw parameterization).
+    Markov {
+        /// P(redraw lands Bad) — also the stationary erasure rate when
+        /// `p_gb = p_bg`.
+        p_bad: f64,
+        /// P(redraw | state Good), in `(0, 1]`.
+        p_gb: f64,
+        /// P(redraw | state Bad), in `(0, 1]`.
+        p_bg: f64,
+    },
+}
+
+impl DropModel {
+    /// The no-drop model.
+    pub fn none() -> Self {
+        DropModel::Iid(0.0)
+    }
+
+    /// True when the process can never erase a frame.
+    pub fn drops_nothing(&self) -> bool {
+        match *self {
+            DropModel::Iid(p) => p == 0.0,
+            DropModel::Markov { p_bad, .. } => p_bad == 0.0,
+        }
+    }
+
+    /// The i.i.d. erasure probability when the process is memoryless:
+    /// `Some(p)` for [`DropModel::Iid`], and `Some(p_bad)` for a Markov
+    /// chain with `p_gb = p_bg = 1` (which redraws every sample and is
+    /// therefore exactly Bernoulli). `None` for a bursty chain — those
+    /// specs are outside the i.i.d. closed-form theory (DESIGN.md §12).
+    ///
+    /// Memoryless specs dispatch to the exact historical i.i.d. draw
+    /// expression, so their RNG consumption — hence every downstream
+    /// byte — matches the equivalent [`DropModel::Iid`] spec.
+    pub fn iid_prob(&self) -> Option<f64> {
+        match *self {
+            DropModel::Iid(p) => Some(p),
+            DropModel::Markov { p_bad, p_gb, p_bg } => {
+                if p_gb == 1.0 && p_bg == 1.0 {
+                    Some(p_bad)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Long-run erasure rate: `p` for i.i.d., the stationary Bad
+    /// occupancy `π_B` for the Markov chain. Memoryless cases return
+    /// the plain probability directly (no formula round-off), so the
+    /// expected-combiner and theory paths of a `markov:p,1,1` spec are
+    /// bit-identical to the `prob:p` spec.
+    pub fn mean_drop(&self) -> f64 {
+        if let Some(p) = self.iid_prob() {
+            return p;
+        }
+        match *self {
+            DropModel::Iid(p) => p,
+            DropModel::Markov { p_bad, p_gb, p_bg } => {
+                let num = p_gb * p_bad;
+                let den = num + p_bg * (1.0 - p_bad);
+                if den == 0.0 {
+                    0.0
+                } else {
+                    num / den
+                }
+            }
+        }
+    }
+
+    /// Mean length of a bad burst in sampled steps: `1 / (p_bg·(1 −
+    /// p_bad))` for the Markov chain, `1 / (1 − p)` for i.i.d. erasures
+    /// (a geometric run of failures). `None` when bursts cannot end.
+    pub fn mean_bad_burst(&self) -> Option<f64> {
+        let q = match *self {
+            DropModel::Iid(p) => 1.0 - p,
+            DropModel::Markov { p_bad, p_bg, .. } => p_bg * (1.0 - p_bad),
+        };
+        if q > 0.0 {
+            Some(1.0 / q)
+        } else {
+            None
+        }
+    }
+
+    /// Range checks.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            DropModel::Iid(p) => {
+                if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                    return Err(format!("impairments: drop_prob {p} outside [0, 1]"));
+                }
+            }
+            DropModel::Markov { p_bad, p_gb, p_bg } => {
+                if !p_bad.is_finite() || !(0.0..=1.0).contains(&p_bad) {
+                    return Err(format!("impairments: markov p_bad {p_bad} outside [0, 1]"));
+                }
+                for (name, p) in [("p_gb", p_gb), ("p_bg", p_bg)] {
+                    if !p.is_finite() || !(p > 0.0 && p <= 1.0) {
+                        return Err(format!(
+                            "impairments: markov {name} {p} outside (0, 1]"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for DropModel {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl std::fmt::Display for DropModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DropModel::Iid(p) => write!(f, "prob:{p}"),
+            DropModel::Markov { p_bad, p_gb, p_bg } => {
+                write!(f, "markov:{p_bad},{p_gb},{p_bg}")
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for DropModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if let Some(p) = s.strip_prefix("prob:") {
+            return p
+                .parse::<f64>()
+                .map(DropModel::Iid)
+                .map_err(|e| format!("drop {s:?}: {e}"));
+        }
+        if let Some(rest) = s.strip_prefix("markov:") {
+            let parts: Vec<&str> = rest.split(',').collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "drop {s:?}: expected markov:<p_bad>,<p_gb>,<p_bg>"
+                ));
+            }
+            let mut v = [0.0f64; 3];
+            for (dst, part) in v.iter_mut().zip(parts.iter()) {
+                *dst = part
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|e| format!("drop {s:?}: {e}"))?;
+            }
+            return Ok(DropModel::Markov { p_bad: v[0], p_gb: v[1], p_bg: v[2] });
+        }
+        Err(format!(
+            "drop {s:?}: expected prob:<p> | markov:<p_bad>,<p_gb>,<p_bg>"
+        ))
+    }
+}
+
 /// Declarative link-impairment model for one scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkImpairments {
-    /// Per-directed-link erasure probability per iteration, in `[0, 1]`.
-    pub drop_prob: f64,
+    /// Per-directed-link erasure process (i.i.d. or Gilbert–Elliott).
+    pub drop: DropModel,
     /// Per-node transmit gate.
     pub gating: Gating,
     /// Uniform quantizer step Δ for the stored estimates (0 = off).
@@ -124,27 +309,34 @@ pub struct LinkImpairments {
 impl LinkImpairments {
     /// Ideal links: nothing dropped, nobody gated, full precision.
     pub fn ideal() -> Self {
-        Self { drop_prob: 0.0, gating: Gating::Always, quant_step: 0.0 }
+        Self { drop: DropModel::none(), gating: Gating::Always, quant_step: 0.0 }
+    }
+
+    /// The historical i.i.d.-erasure constructor.
+    pub fn with_drop_prob(p: f64) -> Self {
+        Self { drop: DropModel::Iid(p), ..Self::ideal() }
     }
 
     /// True when the model is a no-op (the coordinator then takes the
     /// exact legacy code path).
     pub fn is_ideal(&self) -> bool {
-        self.drop_prob == 0.0 && self.gating == Gating::Always && self.quant_step == 0.0
+        self.drop.drops_nothing() && self.gating == Gating::Always && self.quant_step == 0.0
     }
 
     /// True when link-level events (drops or gating) can occur — i.e.
     /// the per-iteration effective-matrix rebuild is actually needed.
     /// Quantization-only models return `false` and skip that work.
     pub fn affects_links(&self) -> bool {
-        self.drop_prob > 0.0 || self.gating != Gating::Always
+        !self.drop.drops_nothing() || self.gating != Gating::Always
     }
 
     /// P that a directed link delivers its *combine* frame (transmitter
-    /// on the air and no erasure): `p_tx · (1 − p_drop)`. `None` under
-    /// event-triggered gating, which has no fixed transmit probability.
+    /// on the air and no erasure): `p_tx · (1 − p_drop)`, where the drop
+    /// rate is the process's long-run mean ([`DropModel::mean_drop`]).
+    /// `None` under event-triggered gating, which has no fixed transmit
+    /// probability.
     pub fn combine_keep_prob(&self) -> Option<f64> {
-        self.gating.transmit_prob().map(|p| p * (1.0 - self.drop_prob))
+        self.gating.transmit_prob().map(|p| p * (1.0 - self.drop.mean_drop()))
     }
 
     /// P that the *adapt* (solicited-gradient) exchange on a directed
@@ -153,7 +345,7 @@ impl LinkImpairments {
     /// own estimate — `p_tx² · (1 − p_drop)` (DESIGN.md §7). `None`
     /// under event-triggered gating.
     pub fn adapt_keep_prob(&self) -> Option<f64> {
-        self.gating.transmit_prob().map(|p| p * p * (1.0 - self.drop_prob))
+        self.gating.transmit_prob().map(|p| p * p * (1.0 - self.drop.mean_drop()))
     }
 
     /// Expected effective combiners `(Ā, C̄) = (E{A(i)}, E{C(i)})` under
@@ -190,12 +382,7 @@ impl LinkImpairments {
 
     /// Range checks for every knob.
     pub fn validate(&self) -> Result<(), String> {
-        if !self.drop_prob.is_finite() || !(0.0..=1.0).contains(&self.drop_prob) {
-            return Err(format!(
-                "impairments: drop_prob {} outside [0, 1]",
-                self.drop_prob
-            ));
-        }
+        self.drop.validate()?;
         match self.gating {
             Gating::Always => {}
             Gating::Probabilistic(p) => {
@@ -271,6 +458,223 @@ pub fn quantize_in_place(w: &mut [f64], step: f64) {
     }
 }
 
+/// Adaptive combination-weight policy (DESIGN.md §12): how the pristine
+/// combiners are re-weighted around links the ledger has observed as
+/// impaired. `Static` is the historical fixed-weight behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdaptivePolicy {
+    /// Fixed weights (the paper's setting).
+    #[default]
+    Static,
+    /// Metropolis-style discounting: every off-diagonal weight is scaled
+    /// by the link's empirical delivery rate; the complement moves to
+    /// the receiver's self weight (cf. the Metropolis construction of
+    /// SNIPPETS-style `1/max(n_k, n_l)` rules).
+    Metropolis,
+    /// Adaptive-combination-weights normalization: rate-scaled weights
+    /// renormalized over the receiver's in-neighbourhood, so relative
+    /// trust shifts toward reliable links.
+    Acw,
+}
+
+impl std::fmt::Display for AdaptivePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdaptivePolicy::Static => write!(f, "static"),
+            AdaptivePolicy::Metropolis => write!(f, "metropolis"),
+            AdaptivePolicy::Acw => write!(f, "acw"),
+        }
+    }
+}
+
+impl std::str::FromStr for AdaptivePolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "static" => Ok(AdaptivePolicy::Static),
+            "metropolis" => Ok(AdaptivePolicy::Metropolis),
+            "acw" => Ok(AdaptivePolicy::Acw),
+            _ => Err(format!("adaptive {s:?}: expected static | metropolis | acw")),
+        }
+    }
+}
+
+/// Iterations between adaptive-combiner refreshes: the empirical
+/// delivery rates are re-read and the pristine combiner values recomputed
+/// every this many iterations (an O(E) in-place pass).
+pub const ADAPTIVE_PERIOD: usize = 64;
+
+/// Recompute one combiner's values from observed per-link delivery
+/// rates, in place and allocation-free (DESIGN.md §12).
+///
+/// `structure` provides the CSR layout shared by `base_vals` (the true
+/// pristine weights) and `out_vals` (the re-weighted values written
+/// here); `rate(k, slot)` is the empirical delivery rate of the directed
+/// link from `graph.neighbors(k)[slot]` into `k`, in `[0, 1]`.
+///
+/// Both policies keep every receiver's incoming weights summing to
+/// exactly the pristine total (1 for a stochastic combiner), and both
+/// degenerate to the pristine weights when every rate is 1 — the
+/// no-impairment-observed case (property-tested in
+/// `rust/tests/properties.rs`).
+pub fn adaptive_reweight_into(
+    policy: AdaptivePolicy,
+    graph: &crate::topology::Graph,
+    structure: &Combiner,
+    base_vals: &[f64],
+    rate: impl Fn(usize, usize) -> f64,
+    out_vals: &mut [f64],
+) {
+    out_vals.copy_from_slice(base_vals);
+    if policy == AdaptivePolicy::Static {
+        return;
+    }
+    let n = structure.n();
+    for k in 0..n {
+        let diag = structure.diag_idx(k);
+        match policy {
+            AdaptivePolicy::Static => unreachable!(),
+            AdaptivePolicy::Metropolis => {
+                // w'_{lk} = w⁰_{lk} · r_{lk}; the receiver's self weight
+                // absorbs the complement, preserving the row total.
+                let mut moved = 0.0;
+                for (slot, &lnb) in graph.neighbors(k).iter().enumerate() {
+                    if let Some(idx) = structure.entry_idx(k, lnb) {
+                        let v = base_vals[idx];
+                        if v != 0.0 {
+                            let kept = v * rate(k, slot);
+                            out_vals[idx] = kept;
+                            moved += v - kept;
+                        }
+                    }
+                }
+                out_vals[diag] = base_vals[diag] + moved;
+            }
+            AdaptivePolicy::Acw => {
+                // w'_{lk} = w⁰_{lk}·r_{lk} / Z_k with the self weight
+                // included in Z_k, so the row renormalizes exactly.
+                let total: f64 = structure.row_span(k).map(|i| base_vals[i]).sum();
+                let mut z = base_vals[diag];
+                for (slot, &lnb) in graph.neighbors(k).iter().enumerate() {
+                    if let Some(idx) = structure.entry_idx(k, lnb) {
+                        z += base_vals[idx] * rate(k, slot);
+                    }
+                }
+                if z <= 0.0 {
+                    // Fully isolated and weightless: keep pristine.
+                    continue;
+                }
+                let scale = total / z;
+                for (slot, &lnb) in graph.neighbors(k).iter().enumerate() {
+                    if let Some(idx) = structure.entry_idx(k, lnb) {
+                        out_vals[idx] = base_vals[idx] * rate(k, slot) * scale;
+                    }
+                }
+                out_vals[diag] = base_vals[diag] * scale;
+            }
+        }
+    }
+}
+
+/// [`adaptive_reweight_into`] returning a fresh combiner — the
+/// property-test face.
+pub fn adaptive_reweight(
+    policy: AdaptivePolicy,
+    graph: &crate::topology::Graph,
+    base: &Combiner,
+    rate: impl Fn(usize, usize) -> f64,
+) -> Combiner {
+    let mut out = base.clone();
+    let mut vals = base.vals().to_vec();
+    adaptive_reweight_into(policy, graph, base, base.vals(), rate, &mut vals);
+    out.vals_mut().copy_from_slice(&vals);
+    out
+}
+
+/// Per-run occupancy counters of the Markov link-state process
+/// (DESIGN.md §12): integer tallies over every *sampled* directed-link
+/// step, so merging across runs/shards is order-independent and the
+/// statistical harness (`rust/tests/dynamics.rs`) can pin the empirical
+/// stationary distribution and burst-length histogram against closed
+/// form. Empty for i.i.d. (memoryless) drop models, which never touch
+/// the chain.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LinkStateStats {
+    /// Sampled steps spent in the Good state.
+    pub good_steps: u64,
+    /// Sampled steps spent in the Bad state.
+    pub bad_steps: u64,
+    /// Completed bad bursts (Bad runs terminated by a Good sample).
+    pub bursts: u64,
+    /// Total sampled length of the completed bursts.
+    pub burst_steps: u64,
+    /// Burst-length histogram: bin `i` counts completed bursts of length
+    /// `i + 1`; the final bin absorbs everything longer.
+    pub burst_hist: Vec<u64>,
+}
+
+impl LinkStateStats {
+    /// Histogram bins (the last one is the overflow bin).
+    pub const HIST_BINS: usize = 32;
+
+    /// Zeroed counters with the histogram pre-sized (so per-iteration
+    /// recording never allocates).
+    pub fn sized() -> Self {
+        Self { burst_hist: vec![0; Self::HIST_BINS], ..Self::default() }
+    }
+
+    /// True when no chain step was ever sampled (i.i.d. models).
+    pub fn is_empty(&self) -> bool {
+        self.good_steps == 0 && self.bad_steps == 0
+    }
+
+    /// Record one completed bad burst of `len` sampled steps.
+    pub fn record_burst(&mut self, len: u32) {
+        self.bursts += 1;
+        self.burst_steps += len as u64;
+        if self.burst_hist.is_empty() {
+            self.burst_hist = vec![0; Self::HIST_BINS];
+        }
+        let bin = (len as usize - 1).min(self.burst_hist.len() - 1);
+        self.burst_hist[bin] += 1;
+    }
+
+    /// Empirical Bad occupancy over the sampled steps.
+    pub fn bad_fraction(&self) -> Option<f64> {
+        let total = self.good_steps + self.bad_steps;
+        if total == 0 {
+            None
+        } else {
+            Some(self.bad_steps as f64 / total as f64)
+        }
+    }
+
+    /// Empirical mean completed-burst length.
+    pub fn mean_burst(&self) -> Option<f64> {
+        if self.bursts == 0 {
+            None
+        } else {
+            Some(self.burst_steps as f64 / self.bursts as f64)
+        }
+    }
+
+    /// Fold another run's counters in (integer sums: order-independent,
+    /// hence bit-identical for any thread/shard layout).
+    pub fn merge(&mut self, other: &LinkStateStats) {
+        self.good_steps += other.good_steps;
+        self.bad_steps += other.bad_steps;
+        self.bursts += other.bursts;
+        self.burst_steps += other.burst_steps;
+        if self.burst_hist.len() < other.burst_hist.len() {
+            self.burst_hist.resize(other.burst_hist.len(), 0);
+        }
+        for (dst, &src) in self.burst_hist.iter_mut().zip(other.burst_hist.iter()) {
+            *dst += src;
+        }
+    }
+}
+
 /// Per-run mutable state of the link-event layer: pristine combiner
 /// copies, the event-trigger reference states, and the dedicated RNG.
 /// Only needed when [`LinkImpairments::affects_links`] — quantization is
@@ -282,10 +686,18 @@ pub fn quantize_in_place(w: &mut [f64], step: f64) {
 pub struct ImpairmentState {
     /// Pristine CSR values of the combine matrix A (same layout as the
     /// network's combiner — the per-iteration effective matrices are
-    /// rebuilt by one O(E) memcpy from these, allocation-free).
+    /// rebuilt by one O(E) memcpy from these, allocation-free). Under an
+    /// adaptive combiner policy these are periodically recomputed from
+    /// `base_a` (DESIGN.md §12); otherwise they stay the capture-time
+    /// values.
     a0: Vec<f64>,
     /// Pristine CSR values of the adapt matrix C.
     c0: Vec<f64>,
+    /// True pristine values of A, never re-weighted (what `restore`
+    /// reinstalls and what adaptive refreshes read from).
+    base_a: Vec<f64>,
+    /// True pristine values of C.
+    base_c: Vec<f64>,
     /// Last-broadcast reference states w̃ (N × L, event gating).
     last_broadcast: Vec<f64>,
     /// Per-node silence decisions for the current iteration.
@@ -295,6 +707,26 @@ pub struct ImpairmentState {
     /// shared by the effective-matrix rebuild *and* the ledger's
     /// solicited-reply billing (DESIGN.md §9).
     delivered: LinkOutcomes,
+    /// Directed-link slot base per receiver: the link
+    /// `graph.neighbors(k)[slot] → k` owns slot `row_off[k] + slot` in
+    /// every per-link vector below.
+    row_off: Vec<usize>,
+    /// Markov link state per directed slot (`true` = Bad). Drawn from
+    /// the stationary distribution on the first bursty iteration; never
+    /// touched by memoryless models (DESIGN.md §12).
+    link_bad: Vec<bool>,
+    /// Length of the current Bad run per slot (occupancy accounting).
+    burst_len: Vec<u32>,
+    markov_ready: bool,
+    /// Occupancy tallies of the sampled chain steps.
+    stats: LinkStateStats,
+    /// Sampled transmission attempts per directed slot (adaptive
+    /// combiners' empirical rate denominator).
+    attempts: Vec<u64>,
+    /// Delivered frames per directed slot.
+    deliv_count: Vec<u64>,
+    /// Iterations seen by the dynamic path (adaptive refresh clock).
+    dyn_iter: usize,
     rng: Pcg64,
     dim: usize,
 }
@@ -303,15 +735,67 @@ impl ImpairmentState {
     /// Capture the pristine combiners of `net` and seed the impairment
     /// stream for one run (`stream` is the Monte-Carlo run stream).
     pub fn new(net: &NetworkConfig, seed: u64, stream: u64) -> Self {
+        let n = net.n_nodes();
+        let mut row_off = Vec::with_capacity(n + 1);
+        let mut slots = 0usize;
+        for k in 0..n {
+            row_off.push(slots);
+            slots += net.graph.neighbors(k).len();
+        }
+        row_off.push(slots);
         Self {
             a0: net.a.vals().to_vec(),
             c0: net.c.vals().to_vec(),
-            last_broadcast: vec![0.0; net.n_nodes() * net.dim],
-            silent: vec![false; net.n_nodes()],
+            base_a: net.a.vals().to_vec(),
+            base_c: net.c.vals().to_vec(),
+            last_broadcast: vec![0.0; n * net.dim],
+            silent: vec![false; n],
             delivered: LinkOutcomes::for_graph(&net.graph),
+            row_off,
+            link_bad: vec![false; slots],
+            burst_len: vec![0; slots],
+            markov_ready: false,
+            stats: LinkStateStats::sized(),
+            attempts: vec![0; slots],
+            deliv_count: vec![0; slots],
+            dyn_iter: 0,
             rng: Pcg64::new(seed ^ LINK_SEED_SALT, stream),
             dim: net.dim,
         }
+    }
+
+    /// The accumulated Markov link-state occupancy counters.
+    pub fn stats(&self) -> &LinkStateStats {
+        &self.stats
+    }
+
+    /// Consume the state, yielding the run's occupancy counters (what
+    /// the round scheduler hands to [`super::round::RunResult`]).
+    pub fn into_stats(self) -> LinkStateStats {
+        self.stats
+    }
+
+    /// Sample the Gilbert–Elliott chain of directed slot `sidx` once
+    /// (lazy-redraw semantics) and tally occupancy. Returns `true` when
+    /// the frame is delivered (state Good).
+    #[inline]
+    fn markov_sample(&mut self, sidx: usize, p_bad: f64, p_gb: f64, p_bg: f64) -> bool {
+        let bad = self.link_bad[sidx];
+        let redraw = self.rng.next_bool(if bad { p_bg } else { p_gb });
+        let nbad = if redraw { self.rng.next_bool(p_bad) } else { bad };
+        self.link_bad[sidx] = nbad;
+        if nbad {
+            self.stats.bad_steps += 1;
+            self.burst_len[sidx] = self.burst_len[sidx].saturating_add(1);
+        } else {
+            self.stats.good_steps += 1;
+            let len = self.burst_len[sidx];
+            if len > 0 {
+                self.stats.record_burst(len);
+                self.burst_len[sidx] = 0;
+            }
+        }
+        !nbad
     }
 
     /// Which nodes are off the air this iteration (valid after
@@ -335,8 +819,33 @@ impl ImpairmentState {
         alg: &mut dyn Algorithm,
         comm: &mut CommMeter,
     ) {
+        self.begin_iteration_dynamic(imp, None, alg, comm);
+    }
+
+    /// [`Self::begin_iteration`] with an optional network-dynamics layer
+    /// (DESIGN.md §12): churn/mobility decisions are advanced first,
+    /// absent nodes fold into the silence mask, dead support edges and
+    /// link erasures erase combiner mass to the receiver's self weight,
+    /// and the adaptive-combiner policy periodically re-weights the
+    /// pristine copies from the observed per-link delivery rates. With
+    /// `dynamics: None` and an i.i.d. drop model this is byte-for-byte
+    /// the historical static path (same draws, same float ops).
+    pub fn begin_iteration_dynamic(
+        &mut self,
+        imp: &LinkImpairments,
+        mut dynamics: Option<&mut super::dynamics::DynamicsState>,
+        alg: &mut dyn Algorithm,
+        comm: &mut CommMeter,
+    ) {
         let l = self.dim;
         let n = self.silent.len();
+
+        // 0. Advance the network dynamics (churn draws, mobility marks,
+        // per-node step-size masking) from their own RNG stream.
+        if let Some(ds) = dynamics.as_mut() {
+            ds.advance(alg);
+            self.dyn_iter += 1;
+        }
 
         // 1. Per-node transmit gate.
         match imp.gating {
@@ -366,6 +875,42 @@ impl ImpairmentState {
             }
         }
 
+        // 1b. Absent nodes (churn) are off the air entirely: they
+        // transmit nothing, are billed nothing, and solicit nothing —
+        // exactly the silent-node treatment, applied after the gate so
+        // the gate RNG consumption never depends on churn.
+        let ds = dynamics.as_deref();
+        if let Some(d) = ds {
+            for k in 0..n {
+                if !d.is_active(k) {
+                    self.silent[k] = true;
+                }
+            }
+            // 1c. Adaptive combiners: periodically rebuild the pristine
+            // copies from the observed delivery rates (O(E), in place).
+            let policy = d.adaptive();
+            if policy != AdaptivePolicy::Static
+                && self.dyn_iter > 1
+                && (self.dyn_iter - 1) % ADAPTIVE_PERIOD == 0
+            {
+                let net = alg.network();
+                let row_off = &self.row_off;
+                let attempts = &self.attempts;
+                let deliv = &self.deliv_count;
+                let rate = |k: usize, slot: usize| {
+                    let s = row_off[k] + slot;
+                    let a = attempts[s];
+                    if a == 0 {
+                        1.0
+                    } else {
+                        deliv[s] as f64 / a as f64
+                    }
+                };
+                adaptive_reweight_into(policy, &net.graph, &net.a, &self.base_a, &rate, &mut self.a0);
+                adaptive_reweight_into(policy, &net.graph, &net.c, &self.base_c, &rate, &mut self.c0);
+            }
+        }
+
         // 2. Effective combiners: start from the pristine copies (one
         // O(E) value memcpy — the CSR structure never changes), then
         // erase every dead directed link (l → k), re-allocating its mass
@@ -386,12 +931,44 @@ impl ImpairmentState {
         net.a.vals_mut().copy_from_slice(&self.a0);
         net.c.vals_mut().copy_from_slice(&self.c0);
         self.delivered.reset_all_true();
-        let p = imp.drop_prob;
+        let drop_iid = imp.drop.iid_prob();
+        let (mk_pb, mk_pgb, mk_pbg) = match imp.drop {
+            DropModel::Markov { p_bad, p_gb, p_bg } => (p_bad, p_gb, p_bg),
+            DropModel::Iid(_) => (0.0, 1.0, 1.0),
+        };
+        // A bursty chain starts from its stationary distribution, drawn
+        // once per run from the impairment stream (memoryless models
+        // never execute this, preserving their draw sequence).
+        if drop_iid.is_none() && !self.markov_ready {
+            let pi = imp.drop.mean_drop();
+            for s in 0..self.link_bad.len() {
+                self.link_bad[s] = self.rng.next_bool(pi);
+            }
+            self.markov_ready = true;
+        }
         for k in 0..n {
             let a_diag = net.a.diag_idx(k);
             let c_diag = net.c.diag_idx(k);
             for (slot, &lnb) in net.graph.neighbors(k).iter().enumerate() {
-                let delivered = !self.silent[lnb] && !(p > 0.0 && self.rng.next_bool(p));
+                // A link is sampled only when it is structurally alive
+                // (churn/mobility) and its transmitter is on the air —
+                // the short-circuit keeps the static i.i.d. path's RNG
+                // consumption byte-identical to the historical loop.
+                let usable = match ds {
+                    Some(d) => d.edge_alive(k, slot, lnb),
+                    None => true,
+                } && !self.silent[lnb];
+                let delivered = usable
+                    && match drop_iid {
+                        Some(p) => !(p > 0.0 && self.rng.next_bool(p)),
+                        None => {
+                            let sidx = self.row_off[k] + slot;
+                            self.markov_sample(sidx, mk_pb, mk_pgb, mk_pbg)
+                        }
+                    };
+                let sidx = self.row_off[k] + slot;
+                self.attempts[sidx] += usable as u64;
+                self.deliv_count[sidx] += delivered as u64;
                 self.delivered.set_row_slot(k, slot, delivered);
                 if !delivered {
                     if let Some(idx) = net.a.entry_idx(k, lnb) {
@@ -424,12 +1001,13 @@ impl ImpairmentState {
     }
 
     /// Put the pristine combiners back (so a reused algorithm instance
-    /// sees its original configuration) and clear the ledger's outcome
+    /// sees its original configuration — the *true* pristine values,
+    /// even after adaptive re-weighting) and clear the ledger's outcome
     /// tables.
     pub fn restore(&self, alg: &mut dyn Algorithm, comm: &mut CommMeter) {
         let net = alg.network_mut();
-        net.a.vals_mut().copy_from_slice(&self.a0);
-        net.c.vals_mut().copy_from_slice(&self.c0);
+        net.a.vals_mut().copy_from_slice(&self.base_a);
+        net.c.vals_mut().copy_from_slice(&self.base_c);
         comm.clear_outcomes();
     }
 }
@@ -480,9 +1058,9 @@ mod tests {
         let mut imp = LinkImpairments::ideal();
         assert!(imp.validate().is_ok());
         assert!(imp.is_ideal());
-        imp.drop_prob = 1.5;
+        imp.drop = DropModel::Iid(1.5);
         assert!(imp.validate().is_err());
-        imp.drop_prob = 0.2;
+        imp.drop = DropModel::Iid(0.2);
         assert!(!imp.is_ideal());
         assert!(imp.validate().is_ok());
         imp.gating = Gating::Probabilistic(-0.1);
@@ -500,7 +1078,7 @@ mod tests {
         let mut alg = Dcd::new(cfg.clone(), 2, 1);
         let mut comm = CommMeter::new(5);
         let imp = LinkImpairments {
-            drop_prob: 1.0,
+            drop: DropModel::Iid(1.0),
             gating: Gating::Always,
             quant_step: 0.0,
         };
@@ -529,7 +1107,7 @@ mod tests {
         let mut alg = Dcd::new(cfg, 1, 1);
         let mut comm = CommMeter::new(6);
         let all_off = LinkImpairments {
-            drop_prob: 0.0,
+            drop: DropModel::none(),
             gating: Gating::Probabilistic(0.0),
             quant_step: 0.0,
         };
@@ -537,7 +1115,7 @@ mod tests {
         state.begin_iteration(&all_off, &mut alg, &mut comm);
         assert!(state.silent().iter().all(|&s| s));
         let all_on = LinkImpairments {
-            drop_prob: 0.0,
+            drop: DropModel::none(),
             gating: Gating::Probabilistic(1.0),
             quant_step: 0.0,
         };
@@ -554,7 +1132,7 @@ mod tests {
         let mut alg = Dcd::new(cfg.clone(), 1, 1);
         let mut comm = CommMeter::new(5);
         let imp = LinkImpairments {
-            drop_prob: 0.25,
+            drop: DropModel::Iid(0.25),
             gating: Gating::Probabilistic(0.8),
             quant_step: 0.0,
         };
@@ -576,7 +1154,7 @@ mod tests {
         state.restore(&mut alg, &mut comm);
         // Event-triggered gating has no closed form.
         let ev = LinkImpairments {
-            drop_prob: 0.1,
+            drop: DropModel::Iid(0.1),
             gating: Gating::EventTriggered(1e-6),
             quant_step: 0.0,
         };
@@ -591,7 +1169,7 @@ mod tests {
     #[test]
     fn keep_probabilities() {
         let imp = LinkImpairments {
-            drop_prob: 0.2,
+            drop: DropModel::Iid(0.2),
             gating: Gating::Probabilistic(0.5),
             quant_step: 0.0,
         };
@@ -611,7 +1189,7 @@ mod tests {
         let mut alg = Dcd::new(cfg, 1, 1);
         let mut comm = CommMeter::new(4);
         let all_dropped = LinkImpairments {
-            drop_prob: 1.0,
+            drop: DropModel::Iid(1.0),
             gating: Gating::Always,
             quant_step: 0.0,
         };
@@ -641,7 +1219,7 @@ mod tests {
         let mut alg = Dcd::new(cfg, 2, 1);
         let mut comm = CommMeter::new(4);
         let imp = LinkImpairments {
-            drop_prob: 0.0,
+            drop: DropModel::none(),
             gating: Gating::EventTriggered(1e-9),
             quant_step: 0.0,
         };

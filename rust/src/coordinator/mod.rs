@@ -31,12 +31,14 @@
 
 pub mod agent;
 pub mod bus;
+pub mod dynamics;
 pub mod impairments;
 pub mod round;
 pub mod runner;
 pub mod wsn;
 
-pub use impairments::{Gating, LinkImpairments};
+pub use dynamics::{DynamicsConfig, DynamicsState};
+pub use impairments::{AdaptivePolicy, DropModel, Gating, LinkImpairments, LinkStateStats};
 pub use round::{RoundScheduler, RunResult};
-pub use runner::{MonteCarlo, McResult};
+pub use runner::{MonteCarlo, McResult, SchedulerOptions};
 pub use wsn::{WsnConfig, WsnResult, WsnSimulation};

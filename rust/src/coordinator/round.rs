@@ -11,10 +11,11 @@
 //! the code path is byte-for-byte the legacy ideal-links loop.
 
 use crate::algorithms::{Algorithm, CommLedger, CommMeter, StepData};
-use crate::datamodel::DataModel;
+use crate::datamodel::{DataModel, DriftModel};
 use crate::rng::Pcg64;
 
-use super::impairments::{quantize_in_place, ImpairmentState, LinkImpairments};
+use super::dynamics::{DynamicsConfig, DynamicsState};
+use super::impairments::{quantize_in_place, ImpairmentState, LinkImpairments, LinkStateStats};
 
 /// Result of a single run.
 #[derive(Debug, Clone)]
@@ -25,6 +26,9 @@ pub struct RunResult {
     /// with per-node, per-link and per-purpose breakdowns
     /// (DESIGN.md §9).
     pub ledger: CommLedger,
+    /// Markov link-state occupancy counters (DESIGN.md §12); empty for
+    /// i.i.d. drop models, which never sample the chain.
+    pub linkstate: LinkStateStats,
 }
 
 /// Synchronous round scheduler.
@@ -36,12 +40,24 @@ pub struct RoundScheduler<'a> {
     /// Optional link-impairment model wrapped around every iteration
     /// (`None` = ideal links, the exact legacy path).
     pub impairments: Option<LinkImpairments>,
+    /// Optional network-dynamics model — churn, mobility rewiring and
+    /// the adaptive-combiner policy (`None`/static = the legacy path).
+    pub dynamics: Option<DynamicsConfig>,
+    /// Time variation of the optimum w°(i) for tracking experiments
+    /// ([`DriftModel::None`] = the paper's fixed w°).
+    pub drift: DriftModel,
 }
 
 impl<'a> RoundScheduler<'a> {
     /// A scheduler over `model` recording every iteration, ideal links.
     pub fn new(model: &'a DataModel) -> Self {
-        Self { model, record_every: 1, impairments: None }
+        Self {
+            model,
+            record_every: 1,
+            impairments: None,
+            dynamics: None,
+            drift: DriftModel::None,
+        }
     }
 
     /// Run `iters` iterations of `alg` with the given seed; the algorithm
@@ -62,17 +78,37 @@ impl<'a> RoundScheduler<'a> {
             // Quantized payloads cost fewer bits per scalar (§9).
             comm.set_quant_step(imp.quant_step);
         }
+        // Network dynamics ride the same per-iteration rebuild machinery
+        // as link events, so an active dynamics layer forces the
+        // impairment state into existence even under ideal links.
+        let mut dyn_state = self
+            .dynamics
+            .as_ref()
+            .filter(|d| !d.is_static())
+            .map(|d| DynamicsState::new(d.clone(), alg.network(), seed, stream));
+        let ideal = LinkImpairments::ideal();
+        let imp_link = imp.unwrap_or(&ideal);
         let mut state = match imp {
             Some(i) if i.affects_links() => {
                 Some(ImpairmentState::new(alg.network(), seed, stream))
             }
+            _ if dyn_state.is_some() => Some(ImpairmentState::new(alg.network(), seed, stream)),
             _ => None,
         };
+        // The drifting optimum is part of the data process: it advances
+        // from the data RNG, before each snapshot, and the MSD is always
+        // measured against the *current* w°(i). A no-drift model draws
+        // nothing, so static scenarios stay byte-identical.
+        let drifting = !self.drift.is_none();
+        let mut wo_cur = self.model.wo.clone();
         alg.reset();
         for i in 0..iters {
-            self.model.sample_iteration(&mut rng, &mut u, &mut d);
-            if let (Some(imp), Some(state)) = (imp, state.as_mut()) {
-                state.begin_iteration(imp, alg, &mut comm);
+            if drifting {
+                self.drift.advance(&mut wo_cur, &mut rng);
+            }
+            self.model.sample_iteration_at(&wo_cur, &mut rng, &mut u, &mut d);
+            if let Some(state) = state.as_mut() {
+                state.begin_iteration_dynamic(imp_link, dyn_state.as_mut(), alg, &mut comm);
             }
             alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
             if let Some(imp) = imp {
@@ -81,13 +117,20 @@ impl<'a> RoundScheduler<'a> {
                 }
             }
             if (i + 1) % self.record_every == 0 {
-                msd.push(alg.msd(&self.model.wo));
+                msd.push(alg.msd(&wo_cur));
             }
         }
-        if let Some(state) = &state {
-            state.restore(alg, &mut comm);
+        if let Some(ds) = &dyn_state {
+            ds.restore(alg);
         }
-        RunResult { msd, ledger: comm.into_ledger() }
+        let linkstate = match state {
+            Some(s) => {
+                s.restore(alg, &mut comm);
+                s.into_stats()
+            }
+            None => LinkStateStats::default(),
+        };
+        RunResult { msd, ledger: comm.into_ledger(), linkstate }
     }
 }
 
@@ -152,7 +195,7 @@ mod tests {
 
     #[test]
     fn drops_degrade_msd_and_suppress_dead_replies() {
-        use crate::coordinator::impairments::{Gating, LinkImpairments};
+        use crate::coordinator::impairments::LinkImpairments;
         let mut rng = Pcg64::new(8, 8);
         let model = DataModel::paper(6, 4, 1.0, 1.0, 1e-3, &mut rng);
         let graph = Graph::ring(6, 1);
@@ -161,11 +204,7 @@ mod tests {
         let net = NetworkConfig { graph, c, a, mu: vec![0.05; 6], dim: 4 };
         let run_with = |drop_prob: f64| {
             let mut sched = RoundScheduler::new(&model);
-            sched.impairments = Some(LinkImpairments {
-                drop_prob,
-                gating: Gating::Always,
-                quant_step: 0.0,
-            });
+            sched.impairments = Some(LinkImpairments::with_drop_prob(drop_prob));
             let mut alg = Dcd::new(net.clone(), 2, 1);
             sched.run(&mut alg, 2_000, 5, 1)
         };
@@ -211,7 +250,7 @@ mod tests {
         let run_with = |gating: Gating| {
             let mut sched = RoundScheduler::new(&model);
             sched.impairments =
-                Some(LinkImpairments { drop_prob: 0.0, gating, quant_step: 0.0 });
+                Some(LinkImpairments { gating, ..LinkImpairments::ideal() });
             let mut alg = Dcd::new(net.clone(), 2, 1);
             sched.run(&mut alg, 1_000, 5, 1)
         };
@@ -234,7 +273,7 @@ mod tests {
 
     #[test]
     fn quantized_state_stays_on_grid() {
-        use crate::coordinator::impairments::{Gating, LinkImpairments};
+        use crate::coordinator::impairments::LinkImpairments;
         let mut rng = Pcg64::new(10, 10);
         let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
         let graph = Graph::ring(5, 1);
@@ -244,9 +283,8 @@ mod tests {
         let step = 1e-3;
         let mut sched = RoundScheduler::new(&model);
         sched.impairments = Some(LinkImpairments {
-            drop_prob: 0.0,
-            gating: Gating::Always,
             quant_step: step,
+            ..LinkImpairments::ideal()
         });
         let mut alg = Dcd::new(net, 2, 1);
         let res = sched.run(&mut alg, 800, 5, 1);
@@ -263,6 +301,74 @@ mod tests {
             crate::energy::payload_bits(step)
         );
         assert!(res.ledger.bits() < res.ledger.scalars * 64);
+    }
+
+    /// The byte-identity contract of DESIGN.md §12: a zero-memory
+    /// Markov spec redraws the chain every sample and must therefore
+    /// reproduce the i.i.d. path bit for bit — MSD, ledger, everything.
+    #[test]
+    fn memoryless_markov_is_bitwise_iid() {
+        use crate::coordinator::impairments::{DropModel, LinkImpairments};
+        let mut rng = Pcg64::new(12, 12);
+        let model = DataModel::paper(6, 3, 1.0, 1.0, 1e-3, &mut rng);
+        let graph = Graph::ring(6, 2);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 6], dim: 3 };
+        let run_with = |drop: DropModel| {
+            let mut sched = RoundScheduler::new(&model);
+            sched.impairments =
+                Some(LinkImpairments { drop, ..LinkImpairments::ideal() });
+            let mut alg = Dcd::new(net.clone(), 2, 1);
+            sched.run(&mut alg, 500, 5, 1)
+        };
+        let iid = run_with(DropModel::Iid(0.3));
+        let mk = run_with(DropModel::Markov { p_bad: 0.3, p_gb: 1.0, p_bg: 1.0 });
+        assert_eq!(iid.msd, mk.msd);
+        assert_eq!(iid.ledger, mk.ledger);
+        // Memoryless chains never sample chain state; bursty ones do.
+        assert!(iid.linkstate.is_empty());
+        assert!(mk.linkstate.is_empty());
+        let bursty = run_with(DropModel::Markov { p_bad: 0.3, p_gb: 0.2, p_bg: 0.2 });
+        assert!(!bursty.linkstate.is_empty());
+        assert!(bursty.linkstate.bad_fraction().unwrap() > 0.0);
+        assert!(bursty.msd[499].is_finite());
+    }
+
+    /// Drift integrates with the scheduler: a random-walk optimum keeps
+    /// the steady-state MSD strictly above the static run's, and a
+    /// `DriftModel::None` scheduler is byte-identical to the legacy path.
+    #[test]
+    fn drifting_optimum_raises_tracking_floor() {
+        let mut rng = Pcg64::new(14, 14);
+        let model = DataModel::paper(5, 3, 1.0, 1.0, 1e-3, &mut rng);
+        let graph = Graph::ring(5, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
+        let run_with = |drift: DriftModel| {
+            let mut sched = RoundScheduler::new(&model);
+            sched.drift = drift;
+            let mut alg = Dcd::new(net.clone(), 2, 1);
+            sched.run(&mut alg, 2_000, 5, 1)
+        };
+        let fixed = run_with(DriftModel::None);
+        let legacy = {
+            let sched = RoundScheduler::new(&model);
+            let mut alg = Dcd::new(net.clone(), 2, 1);
+            sched.run(&mut alg, 2_000, 5, 1)
+        };
+        assert_eq!(fixed.msd, legacy.msd);
+        let walk = run_with(DriftModel::Walk { sigma: 5e-3 });
+        let tail = |r: &RunResult| r.msd[1_800..].iter().sum::<f64>() / 200.0;
+        assert!(
+            tail(&walk) > 3.0 * tail(&fixed),
+            "walk tail {} not above static tail {}",
+            tail(&walk),
+            tail(&fixed)
+        );
+        let rot = run_with(DriftModel::Rotate { omega: 0.02 });
+        assert!(tail(&rot) > tail(&fixed));
     }
 
     #[test]

@@ -21,15 +21,48 @@
 //! `parallel_runner_bit_identical_to_serial` below).
 
 use crate::algorithms::Algorithm;
-use crate::datamodel::DataModel;
+use crate::datamodel::{DataModel, DriftModel};
 use crate::metrics::TraceAccumulator;
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::impairments::LinkImpairments;
+use super::dynamics::DynamicsConfig;
+use super::impairments::{LinkImpairments, LinkStateStats};
 use super::round::{RoundScheduler, RunResult};
+
+/// Per-run scheduler configuration beyond the data model: link
+/// impairments, network dynamics (churn / mobility / adaptive
+/// combiners) and the drifting optimum. The default is the exact
+/// legacy ideal-static path. One value of this struct is built per
+/// scenario and shared by the in-process runner and the shard workers,
+/// so every execution route configures the round scheduler identically
+/// (bit-identity across shards × threads).
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerOptions {
+    /// Optional link-impairment model (None = ideal links).
+    pub impairments: Option<LinkImpairments>,
+    /// Optional network-dynamics model (None/static = fixed network).
+    pub dynamics: Option<DynamicsConfig>,
+    /// Time variation of the optimum w°(i).
+    pub drift: DriftModel,
+}
+
+impl SchedulerOptions {
+    /// Options carrying only a link-impairment model (the historical
+    /// call shape).
+    pub fn from_impairments(imp: Option<&LinkImpairments>) -> Self {
+        Self { impairments: imp.cloned(), ..Self::default() }
+    }
+
+    /// Install these options on a scheduler.
+    fn configure(&self, sched: &mut RoundScheduler<'_>) {
+        sched.impairments = self.impairments.clone();
+        sched.dynamics = self.dynamics.clone();
+        sched.drift = self.drift;
+    }
+}
 
 /// Monte-Carlo configuration.
 #[derive(Debug, Clone)]
@@ -147,6 +180,10 @@ pub struct McResult {
     /// bit-identical for any thread/shard layout; DESIGN.md §9). Empty
     /// (zero-node) for the xla engine, which carries no meter.
     pub ledger: crate::algorithms::CommLedger,
+    /// Markov link-state occupancy counters summed over all
+    /// realizations (integer counters, order-independent; empty for
+    /// i.i.d. drop models — DESIGN.md §12).
+    pub linkstate: LinkStateStats,
 }
 
 /// Parameters of the compiled (xla) engine for one algorithm.
@@ -196,11 +233,24 @@ impl MonteCarlo {
         impairments: Option<&LinkImpairments>,
         make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
     ) -> McResult {
+        self.run_rust_opts(model, &SchedulerOptions::from_impairments(impairments), make_alg)
+    }
+
+    /// [`Self::run_rust`] with the full scheduler configuration —
+    /// impairments, network dynamics and the drifting optimum. Every
+    /// dynamic axis draws from its own per-run stream, so bit-identity
+    /// for any thread count carries over unchanged.
+    pub fn run_rust_opts(
+        &self,
+        model: &DataModel,
+        opts: &SchedulerOptions,
+        make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
+    ) -> McResult {
         let threads = resolve_threads(self.threads, self.runs);
         if threads <= 1 {
-            return self.run_rust_serial_with(model, impairments, make_alg);
+            return self.run_rust_serial_opts(model, opts, make_alg);
         }
-        self.merge(self.run_rust_range(model, impairments, make_alg, 0, self.runs).into_iter())
+        self.merge(self.run_rust_range_opts(model, opts, make_alg, 0, self.runs).into_iter())
     }
 
     /// Execute the contiguous realization block
@@ -218,11 +268,29 @@ impl MonteCarlo {
         run_start: usize,
         count: usize,
     ) -> Vec<RunResult> {
+        self.run_rust_range_opts(
+            model,
+            &SchedulerOptions::from_impairments(impairments),
+            make_alg,
+            run_start,
+            count,
+        )
+    }
+
+    /// [`Self::run_rust_range`] with the full scheduler configuration.
+    pub fn run_rust_range_opts(
+        &self,
+        model: &DataModel,
+        opts: &SchedulerOptions,
+        make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
+        run_start: usize,
+        count: usize,
+    ) -> Vec<RunResult> {
         let threads = resolve_threads(self.threads, count);
         parallel_ordered(count, threads, |i| {
             let mut sched = RoundScheduler::new(model);
             sched.record_every = self.record_every.max(1);
-            sched.impairments = impairments.cloned();
+            opts.configure(&mut sched);
             let mut alg = make_alg();
             sched.run(alg.as_mut(), self.iters, self.seed, (run_start + i) as u64 + 1)
         })
@@ -245,9 +313,23 @@ impl MonteCarlo {
         impairments: Option<&LinkImpairments>,
         make_alg: impl Fn() -> Box<dyn Algorithm>,
     ) -> McResult {
+        self.run_rust_serial_opts(
+            model,
+            &SchedulerOptions::from_impairments(impairments),
+            make_alg,
+        )
+    }
+
+    /// Serial reference path with the full scheduler configuration.
+    pub fn run_rust_serial_opts(
+        &self,
+        model: &DataModel,
+        opts: &SchedulerOptions,
+        make_alg: impl Fn() -> Box<dyn Algorithm>,
+    ) -> McResult {
         let mut sched = RoundScheduler::new(model);
         sched.record_every = self.record_every.max(1);
-        sched.impairments = impairments.cloned();
+        opts.configure(&mut sched);
         self.merge((0..self.runs).map(|r| {
             let mut alg = make_alg();
             sched.run(alg.as_mut(), self.iters, self.seed, r as u64 + 1)
@@ -264,10 +346,12 @@ impl MonteCarlo {
         let mut acc = TraceAccumulator::new();
         let mut scalars = 0.0;
         let mut ledger = crate::algorithms::CommLedger::empty(0);
+        let mut linkstate = LinkStateStats::default();
         for res in results {
             acc.add(&res.msd);
             scalars += res.ledger.scalars as f64;
             ledger.merge(&res.ledger);
+            linkstate.merge(&res.linkstate);
         }
         let msd = acc.mean();
         let tail = (msd.len() / 10).max(1);
@@ -277,6 +361,7 @@ impl MonteCarlo {
             scalars_per_run: scalars / self.runs as f64,
             runs: self.runs,
             ledger,
+            linkstate,
         }
     }
 
@@ -359,6 +444,7 @@ impl MonteCarlo {
             scalars_per_run: 0.0,
             runs: self.runs,
             ledger: crate::algorithms::CommLedger::empty(0),
+            linkstate: LinkStateStats::default(),
         })
     }
 }
@@ -489,7 +575,7 @@ mod tests {
         use crate::coordinator::impairments::{Gating, LinkImpairments};
         let (model, net) = small_case();
         let imp = LinkImpairments {
-            drop_prob: 0.3,
+            drop: crate::coordinator::impairments::DropModel::Iid(0.3),
             gating: Gating::Probabilistic(0.8),
             quant_step: 1e-4,
         };
@@ -511,6 +597,54 @@ mod tests {
             Box::new(Dcd::new(net.clone(), 2, 1))
         });
         assert_eq!(plain.msd, ideal.msd);
+    }
+
+    /// Every dynamic axis (markov drops, churn, drift, adaptive
+    /// combiners) draws from per-run streams, so the parallel runner
+    /// stays bit-identical to the serial one — and the linkstate
+    /// occupancy counters merge order-independently.
+    #[test]
+    fn dynamic_axes_parallel_bit_identical_to_serial() {
+        use crate::coordinator::dynamics::DynamicsConfig;
+        use crate::coordinator::impairments::{AdaptivePolicy, DropModel, LinkImpairments};
+        let (model, _) = small_case();
+        // Metropolis A so churn/adaptive actually re-weight something.
+        let graph = Graph::ring(5, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
+        let opts = SchedulerOptions {
+            impairments: Some(LinkImpairments {
+                drop: DropModel::Markov { p_bad: 0.25, p_gb: 0.3, p_bg: 0.3 },
+                ..LinkImpairments::ideal()
+            }),
+            dynamics: Some(DynamicsConfig {
+                leave: 0.01,
+                join: 0.2,
+                require_connected: true,
+                adaptive: AdaptivePolicy::Metropolis,
+                ..DynamicsConfig::default()
+            }),
+            drift: DriftModel::Walk { sigma: 1e-3 },
+        };
+        let base = MonteCarlo { runs: 6, iters: 200, seed: 29, record_every: 1, threads: 1 };
+        let serial =
+            base.run_rust_serial_opts(&model, &opts, || Box::new(Dcd::new(net.clone(), 2, 1)));
+        assert!(!serial.linkstate.is_empty(), "bursty chain must tally occupancy");
+        for threads in [2usize, 4] {
+            let mc = MonteCarlo { threads, ..base.clone() };
+            let par = mc.run_rust_opts(&model, &opts, || Box::new(Dcd::new(net.clone(), 2, 1)));
+            assert_eq!(par.msd, serial.msd, "threads = {threads}");
+            assert_eq!(par.ledger, serial.ledger, "threads = {threads}");
+            assert_eq!(par.linkstate, serial.linkstate, "threads = {threads}");
+        }
+        // Default options are exactly the historical plain path.
+        let plain = base.run_rust(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
+        let defaulted = base.run_rust_opts(&model, &SchedulerOptions::default(), || {
+            Box::new(Dcd::new(net.clone(), 2, 1))
+        });
+        assert_eq!(plain.msd, defaulted.msd);
+        assert_eq!(plain.ledger, defaulted.ledger);
     }
 
     /// Contiguous shard plans: cover every run exactly once, in order,

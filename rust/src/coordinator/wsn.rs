@@ -51,7 +51,7 @@ use crate::rng::Pcg64;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use super::impairments::{quantize_in_place, Gating, LinkImpairments, LINK_SEED_SALT};
+use super::impairments::{quantize_in_place, DropModel, Gating, LinkImpairments, LINK_SEED_SALT};
 
 /// Which algorithm runs on the motes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -154,6 +154,15 @@ struct Scratch {
     un: Vec<f64>,
     /// Per-neighbour request-delivery outcomes of one activation.
     deliv: Vec<bool>,
+    /// CSR row offsets into `link_bad` (directed slot `row_off[k] + j`
+    /// is node k's j-th incoming link). Empty for memoryless drops.
+    row_off: Vec<usize>,
+    /// Per-directed-link Gilbert–Elliott chain state (DESIGN.md §12);
+    /// persists across activations, lazily seeded from the stationary
+    /// distribution on the first bursty draw.
+    link_bad: Vec<bool>,
+    /// Whether `link_bad` has been seeded yet.
+    markov_ready: bool,
 }
 
 /// The event-driven simulation.
@@ -192,12 +201,30 @@ impl WsnSimulation {
         comm.set_quant_step(imp.quant_step);
         // Last-broadcast reference states w̃ (event gating).
         let mut last_broadcast = vec![0.0f64; n * l];
+        // Bursty (Gilbert–Elliott) drops keep one chain per directed
+        // link across activations; memoryless models draw i.i.d. and
+        // need no state (exact legacy RNG consumption).
+        let (row_off, link_bad) = if imp.drop.iid_prob().is_none() {
+            let mut row_off = Vec::with_capacity(n + 1);
+            let mut total = 0usize;
+            for k in 0..n {
+                row_off.push(total);
+                total += self.cfg.net.graph.neighbors(k).len();
+            }
+            row_off.push(total);
+            (row_off, vec![false; total])
+        } else {
+            (Vec::new(), Vec::new())
+        };
         let mut sb = Scratch {
             scratch: Vec::new(),
             mask32: vec![0f32; l],
             uk: vec![0.0f64; l],
             un: vec![0.0f64; l],
             deliv: Vec::new(),
+            row_off,
+            link_bad,
+            markov_ready: false,
         };
 
         // Event queue ordered by wake time (f64 as ordered bits).
@@ -328,11 +355,35 @@ impl WsnSimulation {
 
     /// Draw this activation's per-neighbour request-delivery outcomes
     /// into `sb.deliv` (all delivered on ideal links — no RNG draw).
-    fn draw_deliveries(&self, degree: usize, imp_rng: &mut Pcg64, sb: &mut Scratch) {
-        let p = self.cfg.impairments.drop_prob;
+    /// Memoryless drop models keep the exact historical i.i.d. draw;
+    /// a bursty `markov:*` model steps node k's per-directed-link
+    /// Gilbert–Elliott chains instead (lazy-redraw semantics, identical
+    /// to the round scheduler's; DESIGN.md §12).
+    fn draw_deliveries(&self, k: usize, degree: usize, imp_rng: &mut Pcg64, sb: &mut Scratch) {
         sb.deliv.clear();
-        for _ in 0..degree {
-            sb.deliv.push(!(p > 0.0 && imp_rng.next_bool(p)));
+        if let Some(p) = self.cfg.impairments.drop.iid_prob() {
+            for _ in 0..degree {
+                sb.deliv.push(!(p > 0.0 && imp_rng.next_bool(p)));
+            }
+            return;
+        }
+        let DropModel::Markov { p_bad, p_gb, p_bg } = self.cfg.impairments.drop else {
+            unreachable!("every non-i.i.d. drop model is markov");
+        };
+        if !sb.markov_ready {
+            let pi = self.cfg.impairments.drop.mean_drop();
+            for bad in sb.link_bad.iter_mut() {
+                *bad = imp_rng.next_bool(pi);
+            }
+            sb.markov_ready = true;
+        }
+        let base = sb.row_off[k];
+        for slot in 0..degree {
+            let bad = sb.link_bad[base + slot];
+            let redraw = imp_rng.next_bool(if bad { p_bg } else { p_gb });
+            let nbad = if redraw { imp_rng.next_bool(p_bad) } else { bad };
+            sb.link_bad[base + slot] = nbad;
+            sb.deliv.push(!nbad);
         }
     }
 
@@ -353,7 +404,7 @@ impl WsnSimulation {
         let l = self.model.dim;
         let mu = net.mu[k];
         let degree = net.graph.neighbors(k).len();
-        self.draw_deliveries(degree, imp_rng, sb);
+        self.draw_deliveries(k, degree, imp_rng, sb);
         let dk = self.sample_node_into(k, rng, &mut sb.uk);
         let wk: Vec<f64> = w[k * l..(k + 1) * l].to_vec();
         let e_self = dk - dot(&sb.uk, &wk);
@@ -756,7 +807,7 @@ mod tests {
         let (mut cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: true }, 4000.0);
         let ideal = WsnSimulation::new(cfg.clone(), model.clone()).run(9);
         cfg.impairments = LinkImpairments {
-            drop_prob: 0.0,
+            drop: DropModel::none(),
             gating: Gating::EventTriggered(1e-2),
             quant_step: 0.0,
         };
@@ -783,7 +834,7 @@ mod tests {
         let (mut cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: false }, 3000.0);
         let ideal = WsnSimulation::new(cfg.clone(), model.clone()).run(5);
         cfg.impairments = LinkImpairments {
-            drop_prob: 0.5,
+            drop: DropModel::Iid(0.5),
             gating: Gating::Always,
             quant_step: 0.0,
         };
@@ -799,6 +850,30 @@ mod tests {
         assert!(*lossy.msd.last().unwrap() < lossy.msd[5]);
     }
 
+    /// A memoryless `markov:p,1,1` spec redraws every sample and is
+    /// exactly the i.i.d. process — bit-identical trajectory and bill.
+    /// A bursty chain shares the stationary loss rate but correlates
+    /// the erasures: still deterministic, but a different trajectory on
+    /// the same activation schedule.
+    #[test]
+    fn wsn_memoryless_markov_matches_iid_bitwise() {
+        let (mut cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: false }, 3000.0);
+        cfg.impairments.drop = DropModel::Iid(0.3);
+        let iid = WsnSimulation::new(cfg.clone(), model.clone()).run(5);
+        cfg.impairments.drop = DropModel::Markov { p_bad: 0.3, p_gb: 1.0, p_bg: 1.0 };
+        let memoryless = WsnSimulation::new(cfg.clone(), model.clone()).run(5);
+        assert_eq!(iid.msd, memoryless.msd);
+        assert_eq!(iid.ledger, memoryless.ledger);
+        cfg.impairments.drop = DropModel::Markov { p_bad: 0.3, p_gb: 0.2, p_bg: 0.2 };
+        let bursty = WsnSimulation::new(cfg.clone(), model.clone()).run(5);
+        let again = WsnSimulation::new(cfg, model).run(5);
+        assert_eq!(bursty.msd, again.msd, "bursty WSN run must be deterministic");
+        assert_ne!(bursty.msd, iid.msd, "burstiness should alter the trajectory");
+        // The salted impairment stream leaves the activation schedule
+        // untouched either way.
+        assert_eq!(iid.activations, bursty.activations);
+    }
+
     /// Quantization snaps the stored state to the grid and bills
     /// payloads at the grid-index width.
     #[test]
@@ -806,7 +881,7 @@ mod tests {
         let (mut cfg, model) = small_cfg(WsnAlgo::Partial { m: 3 }, 2000.0);
         let step = 1e-3;
         cfg.impairments = LinkImpairments {
-            drop_prob: 0.0,
+            drop: DropModel::none(),
             gating: Gating::Always,
             quant_step: step,
         };

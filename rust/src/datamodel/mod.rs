@@ -10,6 +10,122 @@
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 
+/// Time variation of the optimum w°(i) for tracking experiments
+/// (DESIGN.md §12). The paper's experiments keep w° fixed
+/// ([`DriftModel::None`]); the tracking literature's two standard
+/// benchmarks are a Gaussian random walk and a deterministic rotation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftModel {
+    /// Static optimum (the paper's setting).
+    None,
+    /// Random walk: w°(i) = w°(i−1) + σ·g(i), g ~ N(0, I). Draws come
+    /// from the *data* RNG (the drift is part of the data process), so
+    /// static scenarios consume exactly the historical sequence.
+    Walk {
+        /// Per-iteration step standard deviation σ.
+        sigma: f64,
+    },
+    /// Rotation: coordinates (0, 1) of w° rotate by `omega` radians per
+    /// iteration (deterministic — no RNG consumed). Requires `dim ≥ 2`.
+    Rotate {
+        /// Rotation rate in radians per iteration.
+        omega: f64,
+    },
+}
+
+impl DriftModel {
+    /// True when the optimum never moves.
+    pub fn is_none(&self) -> bool {
+        matches!(
+            *self,
+            DriftModel::None
+                | DriftModel::Walk { sigma: 0.0 }
+                | DriftModel::Rotate { omega: 0.0 }
+        )
+    }
+
+    /// Advance w° by one iteration in place.
+    pub fn advance(&self, wo: &mut [f64], rng: &mut Pcg64) {
+        match *self {
+            DriftModel::None => {}
+            DriftModel::Walk { sigma } => {
+                for x in wo.iter_mut() {
+                    *x += sigma * rng.next_gaussian();
+                }
+            }
+            DriftModel::Rotate { omega } => {
+                debug_assert!(wo.len() >= 2, "rotate drift requires dim >= 2");
+                let (s, c) = omega.sin_cos();
+                let (a, b) = (wo[0], wo[1]);
+                wo[0] = c * a - s * b;
+                wo[1] = s * a + c * b;
+            }
+        }
+    }
+
+    /// Range checks.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            DriftModel::None => Ok(()),
+            DriftModel::Walk { sigma } => {
+                if !sigma.is_finite() || sigma < 0.0 {
+                    Err(format!("drift: walk sigma {sigma} must be >= 0"))
+                } else {
+                    Ok(())
+                }
+            }
+            DriftModel::Rotate { omega } => {
+                if !omega.is_finite() {
+                    Err(format!("drift: rotate omega {omega} must be finite"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+impl Default for DriftModel {
+    fn default() -> Self {
+        DriftModel::None
+    }
+}
+
+impl std::fmt::Display for DriftModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DriftModel::None => write!(f, "none"),
+            DriftModel::Walk { sigma } => write!(f, "walk:{sigma}"),
+            DriftModel::Rotate { omega } => write!(f, "rotate:{omega}"),
+        }
+    }
+}
+
+impl std::str::FromStr for DriftModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s == "none" {
+            return Ok(DriftModel::None);
+        }
+        if let Some(v) = s.strip_prefix("walk:") {
+            return v
+                .parse::<f64>()
+                .map(|sigma| DriftModel::Walk { sigma })
+                .map_err(|e| format!("drift {s:?}: {e}"));
+        }
+        if let Some(v) = s.strip_prefix("rotate:") {
+            return v
+                .parse::<f64>()
+                .map(|omega| DriftModel::Rotate { omega })
+                .map_err(|e| format!("drift {s:?}: {e}"));
+        }
+        Err(format!(
+            "drift {s:?}: expected none | walk:<sigma> | rotate:<omega>"
+        ))
+    }
+}
+
 /// Per-node second-order statistics plus the ground truth w°.
 #[derive(Debug, Clone)]
 pub struct DataModel {
@@ -50,7 +166,23 @@ impl DataModel {
     /// Draw one synchronous snapshot: regressors U (n x L, row-major into
     /// `u_out`) and desired responses D (n) including noise.
     pub fn sample_iteration(&self, rng: &mut Pcg64, u_out: &mut [f64], d_out: &mut [f64]) {
+        self.sample_iteration_at(&self.wo, rng, u_out, d_out);
+    }
+
+    /// [`Self::sample_iteration`] against a caller-supplied optimum —
+    /// the tracking path, where `wo` is the drifting w°(i) the round
+    /// scheduler advances via [`DriftModel`]. Identical float ops and
+    /// RNG consumption as the static path (which delegates here), so
+    /// `DriftModel::None` scenarios stay byte-identical.
+    pub fn sample_iteration_at(
+        &self,
+        wo: &[f64],
+        rng: &mut Pcg64,
+        u_out: &mut [f64],
+        d_out: &mut [f64],
+    ) {
         let (n, l) = (self.n_nodes, self.dim);
+        assert_eq!(wo.len(), l);
         assert_eq!(u_out.len(), n * l);
         assert_eq!(d_out.len(), n);
         for k in 0..n {
@@ -60,7 +192,7 @@ impl DataModel {
             let mut dot = 0.0;
             for (j, x) in row.iter_mut().enumerate() {
                 *x = su * rng.next_gaussian();
-                dot += *x * self.wo[j];
+                dot += *x * wo[j];
             }
             d_out[k] = dot + sv * rng.next_gaussian();
         }
@@ -151,6 +283,66 @@ mod tests {
                 assert!((d32buf[ti * 3 + k] as f64 - d[k]).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn drift_parse_display_roundtrip() {
+        for d in [
+            DriftModel::None,
+            DriftModel::Walk { sigma: 2e-3 },
+            DriftModel::Rotate { omega: 0.01 },
+        ] {
+            let s = d.to_string();
+            assert_eq!(s.parse::<DriftModel>().unwrap(), d);
+        }
+        assert!("wander".parse::<DriftModel>().is_err());
+        assert!("walk:x".parse::<DriftModel>().is_err());
+        assert!(DriftModel::Walk { sigma: -1.0 }.validate().is_err());
+        assert!(DriftModel::Rotate { omega: f64::NAN }.validate().is_err());
+        assert!(DriftModel::default().is_none());
+        assert!(DriftModel::Walk { sigma: 0.0 }.is_none());
+        assert!(!DriftModel::Walk { sigma: 1e-3 }.is_none());
+    }
+
+    #[test]
+    fn rotate_drift_preserves_norm_and_walk_moves() {
+        let mut wo = vec![3.0, 4.0, 1.0];
+        let rot = DriftModel::Rotate { omega: 0.1 };
+        let mut rng = Pcg64::new(9, 1);
+        for _ in 0..50 {
+            rot.advance(&mut wo, &mut rng);
+        }
+        let norm2: f64 = wo[0] * wo[0] + wo[1] * wo[1];
+        assert!((norm2 - 25.0).abs() < 1e-9, "rotation must preserve |w°[0..2]|");
+        assert_eq!(wo[2], 1.0, "rotation leaves higher coords untouched");
+        // None consumes no RNG and moves nothing.
+        let before = wo.clone();
+        let mut rng_a = Pcg64::new(4, 4);
+        let mut rng_b = Pcg64::new(4, 4);
+        DriftModel::None.advance(&mut wo, &mut rng_a);
+        assert_eq!(wo, before);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        // Walk perturbs every coordinate almost surely.
+        let walk = DriftModel::Walk { sigma: 1e-2 };
+        walk.advance(&mut wo, &mut rng_a);
+        assert!(wo.iter().zip(before.iter()).all(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn sample_iteration_at_matches_static_path() {
+        let mut rng = Pcg64::new(3, 0);
+        let model = DataModel::paper(3, 2, 1.0, 1.0, 1e-3, &mut rng);
+        let mut rng_a = Pcg64::new(8, 1);
+        let mut rng_b = Pcg64::new(8, 1);
+        let mut ua = vec![0.0; 6];
+        let mut da = vec![0.0; 3];
+        let mut ub = vec![0.0; 6];
+        let mut db = vec![0.0; 3];
+        model.sample_iteration(&mut rng_a, &mut ua, &mut da);
+        let wo = model.wo.clone();
+        model.sample_iteration_at(&wo, &mut rng_b, &mut ub, &mut db);
+        assert_eq!(ua, ub);
+        assert_eq!(da, db);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!
 //! [`ImpairedMsdModel`]: crate::theory::ImpairedMsdModel
 
+use crate::coordinator::impairments::DropModel;
 use crate::metrics::{write_csv, write_json, Series};
 use crate::scenario::{find, run_scenario, theory_scope};
 use anyhow::{anyhow, Result};
@@ -95,7 +96,7 @@ pub fn run_exp4(cfg: &Exp4Config, out_dir: Option<&str>, quiet: bool) -> Result<
     let mut points = Vec::with_capacity(cfg.drop_probs.len());
     for &p in &cfg.drop_probs {
         let mut sc = base.clone();
-        sc.impairments.drop_prob = p;
+        sc.impairments.drop = DropModel::Iid(p);
         if cfg.runs > 0 {
             sc.runs = cfg.runs;
         }

@@ -23,7 +23,7 @@
 use anyhow::{anyhow, Result};
 use dcd_lms::cli::{App, Command, ParsedArgs};
 use dcd_lms::config::{Exp1Config, Exp2Config, Exp3Config, IniDoc};
-use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::coordinator::impairments::{DropModel, Gating, LinkImpairments};
 use dcd_lms::experiments::{run_exp1, run_exp2, run_exp3, run_exp4, Engine, Exp4Config};
 use dcd_lms::linalg::Mat;
 use dcd_lms::metrics::to_db;
@@ -476,7 +476,7 @@ fn cmd_theory(args: &ParsedArgs) -> Result<()> {
     // error instead of silently printing only the ideal numbers.
     if drop_prob != 0.0 || gate_prob.is_some() || quant_step != 0.0 {
         let imp = LinkImpairments {
-            drop_prob,
+            drop: DropModel::Iid(drop_prob),
             gating: match gate_prob {
                 Some(p) => Gating::Probabilistic(p),
                 None => Gating::Always,
@@ -486,7 +486,7 @@ fn cmd_theory(args: &ParsedArgs) -> Result<()> {
         let impaired = ImpairedMsdModel::new(setup, &imp).map_err(anyhow::Error::msg)?;
         println!(
             "impaired links [drop {} gate {} quant {}]:",
-            imp.drop_prob, imp.gating, imp.quant_step
+            imp.drop, imp.gating, imp.quant_step
         );
         println!(
             "  ρ(𝓑̄) = {:.6}  (mean-stable: {})",

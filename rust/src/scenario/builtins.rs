@@ -2,10 +2,11 @@
 //! the paper's settings plus the impaired/asynchronous regimes the
 //! follow-up literature studies (see DESIGN.md §4 for the axes).
 
-use crate::coordinator::impairments::{Gating, LinkImpairments};
+use crate::coordinator::impairments::{AdaptivePolicy, DropModel, Gating, LinkImpairments};
+use crate::datamodel::DriftModel;
 use crate::topology::Rule;
 
-use super::spec::{AlgorithmSpec, Scenario, ScheduleMode, TopologySpec};
+use super::spec::{AlgorithmSpec, DynamicsSpec, Scenario, ScheduleMode, TopologySpec};
 
 /// All built-in scenarios, in display order.
 pub fn builtins() -> Vec<Scenario> {
@@ -17,6 +18,9 @@ pub fn builtins() -> Vec<Scenario> {
         event_triggered_ring(),
         quantized_dense(),
         mega_grid(),
+        bursty_geometric(),
+        churn_grid(),
+        tracking_ring(),
     ]
 }
 
@@ -91,7 +95,7 @@ fn wsn_80() -> Scenario {
     sc.algorithm = AlgorithmSpec::Dcd { m: 3, m_grad: 1 };
     sc.mu = 6e-3;
     sc.impairments = LinkImpairments {
-        drop_prob: 0.05,
+        drop: DropModel::Iid(0.05),
         gating: Gating::EventTriggered(1e-4),
         quant_step: 0.0,
     };
@@ -123,7 +127,7 @@ fn lossy_geometric() -> Scenario {
     // to converge well inside the 3000-iteration schedule.
     sc.mu = 5e-3;
     sc.impairments = LinkImpairments {
-        drop_prob: 0.2,
+        drop: DropModel::Iid(0.2),
         gating: Gating::Always,
         quant_step: 0.0,
     };
@@ -146,7 +150,7 @@ fn event_triggered_ring() -> Scenario {
     sc.algorithm = AlgorithmSpec::DiffusionLms;
     sc.mu = 2e-2;
     sc.impairments = LinkImpairments {
-        drop_prob: 0.0,
+        drop: DropModel::none(),
         gating: Gating::EventTriggered(1e-6),
         quant_step: 0.0,
     };
@@ -168,7 +172,7 @@ fn quantized_dense() -> Scenario {
     sc.algorithm = AlgorithmSpec::Dcd { m: 4, m_grad: 2 };
     sc.mu = 2e-2;
     sc.impairments = LinkImpairments {
-        drop_prob: 0.0,
+        drop: DropModel::none(),
         gating: Gating::Always,
         quant_step: 1e-3,
     };
@@ -201,7 +205,7 @@ fn mega_grid() -> Scenario {
     sc.algorithm = AlgorithmSpec::Dcd { m: 2, m_grad: 1 };
     sc.mu = 1e-2;
     sc.impairments = LinkImpairments {
-        drop_prob: 0.05,
+        drop: DropModel::Iid(0.05),
         gating: Gating::Always,
         quant_step: 0.0,
     };
@@ -212,6 +216,93 @@ fn mega_grid() -> Scenario {
     sc
 }
 
+/// Bursty (Gilbert–Elliott) link erasures (DESIGN.md §12): the same
+/// 20 % stationary loss as `lossy-geometric`, but correlated into mean
+/// bursts of 5 samples (π_B = p_gb·p_bad / (p_gb·p_bad + p_bg·(1−p_bad))
+/// = 0.2, mean burst 1 / (p_bg·(1−p_bad)) = 5). The statistical
+/// harness (`rust/tests/dynamics.rs`) pins both moments against the
+/// run's occupancy counters. The chain has memory, so the run carries
+/// no closed-form theory column.
+fn bursty_geometric() -> Scenario {
+    let mut sc = Scenario::base(
+        "bursty-geometric",
+        "30-node geometric network with Gilbert-Elliott bursty erasures (pi_B=0.2, mean burst 5)",
+    );
+    sc.topology = TopologySpec::Geometric { n: 30, radius: 0.25 };
+    sc.combine_rule = Rule::Identity;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 8;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 3, m_grad: 1 };
+    sc.mu = 5e-3;
+    sc.impairments = LinkImpairments {
+        drop: DropModel::Markov { p_bad: 0.2, p_gb: 0.25, p_bg: 0.25 },
+        gating: Gating::Always,
+        quant_step: 0.0,
+    };
+    sc.runs = 10;
+    sc.iters = 3_000;
+    sc.seed = 12;
+    sc
+}
+
+/// Node churn on a lattice (DESIGN.md §12): nodes leave and rejoin at
+/// random while the connectivity veto keeps the active subgraph in one
+/// piece, and the Metropolis adaptive policy re-weights combiners
+/// around links the ledger observes as lossy.
+fn churn_grid() -> Scenario {
+    let mut sc = Scenario::base(
+        "churn-grid",
+        "12x12 lattice with node churn (connectivity-vetoed) and adaptive Metropolis combiners",
+    );
+    sc.topology = TopologySpec::Grid { rows: 12, cols: 12 };
+    sc.combine_rule = Rule::Metropolis;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 4;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 2, m_grad: 1 };
+    sc.mu = 1e-2;
+    sc.impairments = LinkImpairments {
+        drop: DropModel::Iid(0.1),
+        gating: Gating::Always,
+        quant_step: 0.0,
+    };
+    sc.dynamics = DynamicsSpec {
+        leave: 0.002,
+        join: 0.05,
+        require_connected: true,
+        adaptive: AdaptivePolicy::Metropolis,
+        ..DynamicsSpec::default()
+    };
+    sc.runs = 10;
+    sc.iters = 3_000;
+    sc.seed = 21;
+    sc
+}
+
+/// A drifting optimum w°(i) (DESIGN.md §12): the random walk keeps the
+/// network in perpetual pursuit, so the MSD floors at the tracking
+/// error instead of the static steady state — the classic
+/// tracking-analysis setting (EXPERIMENTS.md worked example).
+fn tracking_ring() -> Scenario {
+    let mut sc = Scenario::base(
+        "tracking-ring",
+        "20-node ring chasing a random-walk optimum (sigma=2e-3 per step)",
+    );
+    sc.topology = TopologySpec::Ring { n: 20, hops: 2 };
+    sc.combine_rule = Rule::Metropolis;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 6;
+    sc.algorithm = AlgorithmSpec::DiffusionLms;
+    sc.mu = 5e-2; // a tracker needs a fast step size
+    sc.dynamics = DynamicsSpec {
+        drift: DriftModel::Walk { sigma: 2e-3 },
+        ..DynamicsSpec::default()
+    };
+    sc.runs = 10;
+    sc.iters = 3_000;
+    sc.seed = 7;
+    sc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,7 +310,7 @@ mod tests {
     #[test]
     fn registry_has_at_least_six_valid_scenarios() {
         let all = builtins();
-        assert!(all.len() >= 6, "only {} built-ins", all.len());
+        assert!(all.len() >= 10, "only {} built-ins", all.len());
         for sc in &all {
             sc.validate().unwrap_or_else(|e| panic!("{}: {e}", sc.name));
         }
@@ -243,6 +334,29 @@ mod tests {
         assert!(find("lossy-geometric").is_some());
         assert!(find("paper-10-node").is_some());
         assert!(find("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn dynamic_presets_state_their_axes() {
+        let bursty = find("bursty-geometric").unwrap();
+        let DropModel::Markov { p_bad, p_gb, p_bg } = bursty.impairments.drop else {
+            panic!("bursty-geometric must use a markov drop model");
+        };
+        // Stationary Bad occupancy 0.2, mean burst 5 — the closed forms
+        // the statistical harness pins.
+        let pi_b = p_gb * p_bad / (p_gb * p_bad + p_bg * (1.0 - p_bad));
+        assert!((pi_b - 0.2).abs() < 1e-12, "pi_B = {pi_b}");
+        let mean_burst = 1.0 / (p_bg * (1.0 - p_bad));
+        assert!((mean_burst - 5.0).abs() < 1e-12, "mean burst = {mean_burst}");
+
+        let churn = find("churn-grid").unwrap();
+        assert!(churn.dynamics.leave > 0.0 && churn.dynamics.require_connected);
+        assert_eq!(churn.dynamics.adaptive, AdaptivePolicy::Metropolis);
+        assert!(!churn.dynamics.network_static());
+
+        let tracking = find("tracking-ring").unwrap();
+        assert!(matches!(tracking.dynamics.drift, DriftModel::Walk { sigma } if sigma > 0.0));
+        assert!(tracking.dynamics.network_static() && !tracking.dynamics.is_static());
     }
 
     #[test]

@@ -33,7 +33,7 @@ mod spec;
 
 pub use builtins::{builtins, find};
 pub use run::{
-    mc_parts, run_scenario, run_scenario_with_progress, sweep_scenario, theory_scope, wsn_block,
-    wsn_sim, ScenarioOutput, SweepOutput, SweepPoint,
+    mc_parts, run_scenario, run_scenario_with_progress, scheduler_options, sweep_scenario,
+    theory_scope, wsn_block, wsn_sim, ScenarioOutput, SweepOutput, SweepPoint,
 };
-pub use spec::{AlgorithmSpec, Scenario, ScheduleMode, TheoryColumn, TopologySpec};
+pub use spec::{AlgorithmSpec, DynamicsSpec, Scenario, ScheduleMode, TheoryColumn, TopologySpec};

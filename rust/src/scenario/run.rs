@@ -18,8 +18,9 @@
 
 use crate::algorithms::NetworkConfig;
 use crate::config::IniDoc;
+use crate::coordinator::impairments::LinkStateStats;
 use crate::coordinator::runner::{
-    parallel_ordered, resolve_threads, shard_ranges, McResult, MonteCarlo,
+    parallel_ordered, resolve_threads, shard_ranges, McResult, MonteCarlo, SchedulerOptions,
 };
 use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnResult, WsnSimulation};
 use crate::datamodel::DataModel;
@@ -30,7 +31,7 @@ use crate::rng::Pcg64;
 use crate::theory::{ImpairedMsdModel, TheorySetup};
 use crate::topology::{combination_matrix, Rule};
 
-use super::spec::{AlgorithmSpec, Scenario, ScheduleMode, TheoryColumn};
+use super::spec::{AlgorithmSpec, Scenario, ScheduleMode, TheoryColumn, TopologySpec};
 
 /// Hard upper bound on N·L for the theory column. With the CSR 𝓑
 /// operator (DESIGN.md §10) one application of the variance operator is
@@ -68,6 +69,9 @@ pub struct ScenarioOutput {
     /// The directional communication bill summed over all realizations
     /// (per-node / per-link / per-purpose breakdowns; DESIGN.md §9).
     pub ledger: CommLedger,
+    /// Gilbert–Elliott occupancy counters summed over all realizations
+    /// (empty unless `drop = markov:*` with memory; DESIGN.md §12).
+    pub linkstate: LinkStateStats,
 }
 
 /// One point of a sweep.
@@ -124,6 +128,20 @@ pub fn theory_scope(sc: &Scenario) -> Result<(usize, usize), String> {
             sc.impairments.gating
         ));
     }
+    if sc.impairments.drop.iid_prob().is_none() {
+        return Err(
+            "the Gilbert-Elliott (markov) link process has memory; the closed-form \
+             model assumes i.i.d. erasures (DESIGN.md §12)"
+                .into(),
+        );
+    }
+    if !sc.dynamics.is_static() {
+        return Err(
+            "[dynamics] (churn / mobility / drift / adaptive combiners) is outside \
+             the analysis scope"
+                .into(),
+        );
+    }
     let nl = sc.topology.n_nodes() * sc.dim;
     if nl > MAX_THEORY_NL {
         return Err(format!(
@@ -172,7 +190,15 @@ fn theory_anchor(
 pub fn mc_parts(sc: &Scenario) -> Result<(DataModel, NetworkConfig, MonteCarlo), String> {
     let n = sc.topology.n_nodes();
     let mut rng = Pcg64::new(sc.seed, 0);
-    let graph = sc.topology.build(&mut rng);
+    let mut graph = sc.topology.build(&mut rng);
+    if sc.dynamics.rewire > 0.0 {
+        // Mobility support graph (DESIGN.md §12): the combiners are built
+        // once over every pair that could ever come within range on its
+        // orbit (reach = radius + 2ρ); the dynamics layer then toggles
+        // those slots per iteration. Consumes no RNG, so the data-model
+        // stream below is untouched.
+        graph = graph.with_mobility_support(mobility_radius(sc), sc.dynamics.rewire);
+    }
     let c = combination_matrix(&graph, sc.adapt_rule);
     let a = combination_matrix(&graph, sc.combine_rule);
     let model = DataModel::paper(n, sc.dim, sc.u2_min, sc.u2_max, sc.sigma_v2, &mut rng);
@@ -186,6 +212,37 @@ pub fn mc_parts(sc: &Scenario) -> Result<(DataModel, NetworkConfig, MonteCarlo),
         threads: sc.threads,
     };
     Ok((model, net, mc))
+}
+
+/// The geometric connection radius mobility works against (0 for
+/// topologies without one — the validator only admits `rewire > 0` on
+/// geometric graphs).
+fn mobility_radius(sc: &Scenario) -> f64 {
+    match sc.topology {
+        TopologySpec::Geometric { radius, .. } => radius,
+        _ => 0.0,
+    }
+}
+
+/// Compile a scenario's impairments + `[dynamics]` section into the
+/// runtime [`SchedulerOptions`]. The in-process runner and the shard
+/// worker (`run_mc_block`) both configure realizations through this one
+/// function — that shared construction is what keeps sharded runs
+/// bit-identical to in-process ones on every dynamic axis.
+pub fn scheduler_options(sc: &Scenario) -> SchedulerOptions {
+    SchedulerOptions {
+        impairments: if sc.impairments.is_ideal() {
+            None
+        } else {
+            Some(sc.impairments.clone())
+        },
+        dynamics: if sc.dynamics.network_static() {
+            None
+        } else {
+            Some(sc.dynamics.to_config(mobility_radius(sc)))
+        },
+        drift: sc.dynamics.drift,
+    }
 }
 
 /// The [`WsnAlgo`] a scenario's algorithm spec maps to under
@@ -272,8 +329,8 @@ fn run_mc(
     if sc.shards > 1 {
         return crate::shard::run_scenario_sharded_progress(sc, progress);
     }
-    let imp = if sc.impairments.is_ideal() { None } else { Some(&sc.impairments) };
-    let res = mc.run_rust_with(model, imp, || sc.algorithm.build(net.clone()));
+    let opts = scheduler_options(sc);
+    let res = mc.run_rust_opts(model, &opts, || sc.algorithm.build(net.clone()));
     // The in-process path is one logical shard; report its completion
     // so serve-mode progress streams work at shards = 1 too.
     if let Some(report) = progress {
@@ -286,7 +343,7 @@ fn run_mc(
 /// schedule that produced the result, including the shard layout
 /// (DESIGN.md §8) and the directional communication bill (§9), so the
 /// artifact is self-describing.
-fn run_manifest(sc: &Scenario, ledger: &CommLedger) -> Json {
+fn run_manifest(sc: &Scenario, ledger: &CommLedger, linkstate: &LinkStateStats) -> Json {
     let layout = Json::Arr(
         shard_ranges(sc.runs, sc.shards)
             .into_iter()
@@ -313,7 +370,7 @@ fn run_manifest(sc: &Scenario, ledger: &CommLedger) -> Json {
         ("per_purpose_scalars", per_purpose),
         ("per_node_bits", per_node_bits),
     ]);
-    obj(vec![
+    let mut fields = vec![
         ("runs", Json::Num(sc.runs as f64)),
         ("iters", Json::Num(sc.iters as f64)),
         ("seed", Json::Num(sc.seed as f64)),
@@ -322,7 +379,27 @@ fn run_manifest(sc: &Scenario, ledger: &CommLedger) -> Json {
         ("shards", Json::Num(sc.shards as f64)),
         ("shard_layout", layout),
         ("ledger", ledger_obj),
-    ])
+    ];
+    // Gilbert–Elliott occupancy (DESIGN.md §12) — only emitted when a
+    // chain actually ran, so every pre-Markov artifact keeps its bytes.
+    if !linkstate.is_empty() {
+        let hist = Json::Arr(
+            linkstate.burst_hist.iter().map(|&c| Json::Num(c as f64)).collect(),
+        );
+        fields.push((
+            "linkstate",
+            obj(vec![
+                ("good_steps", Json::Num(linkstate.good_steps as f64)),
+                ("bad_steps", Json::Num(linkstate.bad_steps as f64)),
+                ("bursts", Json::Num(linkstate.bursts as f64)),
+                ("burst_steps", Json::Num(linkstate.burst_steps as f64)),
+                ("bad_fraction", Json::Num(linkstate.bad_fraction().unwrap_or(0.0))),
+                ("mean_burst", Json::Num(linkstate.mean_burst().unwrap_or(0.0))),
+                ("burst_hist", hist),
+            ]),
+        ));
+    }
+    obj(fields)
 }
 
 /// The per-directed-link billed-bits table as CSV text (`src,dst,
@@ -384,7 +461,7 @@ pub fn run_scenario_with_progress(
             theory,
             out.scalars_per_run,
             out.ledger.bits() as f64 / sc.runs as f64,
-            sc.impairments.drop_prob,
+            sc.impairments.drop,
             sc.impairments.gating,
             sc.impairments.quant_step,
         );
@@ -394,7 +471,7 @@ pub fn run_scenario_with_progress(
         write_json_with_meta(
             format!("{dir}/{}.json", sc.name),
             &format!("scenario {}: {}", sc.name, sc.description),
-            Some(run_manifest(sc, &out.ledger)),
+            Some(run_manifest(sc, &out.ledger, &out.linkstate)),
             &out.series,
         )
         .map_err(|e| e.to_string())?;
@@ -458,6 +535,7 @@ fn run_rounds_scenario(
         theory_steady_db,
         scalars_per_run: res.scalars_per_run,
         ledger: res.ledger,
+        linkstate: res.linkstate,
     })
 }
 
@@ -497,6 +575,7 @@ fn run_wsn_scenario(
         theory_steady_db: None,
         scalars_per_run: ledger.scalars as f64 / sc.runs as f64,
         ledger,
+        linkstate: LinkStateStats::default(),
     })
 }
 

@@ -4,7 +4,9 @@
 
 use crate::algorithms::{Algorithm, Dcd, DiffusionLms, NetworkConfig, PartialDiffusion, Rcd};
 use crate::config::IniDoc;
-use crate::coordinator::impairments::{Gating, LinkImpairments};
+use crate::coordinator::dynamics::DynamicsConfig;
+use crate::coordinator::impairments::{AdaptivePolicy, DropModel, Gating, LinkImpairments};
+use crate::datamodel::DriftModel;
 use crate::rng::Pcg64;
 use crate::topology::{Graph, Rule};
 
@@ -130,6 +132,94 @@ impl AlgorithmSpec {
     }
 }
 
+/// The `[dynamics]` INI section (DESIGN.md §12): time variation of the
+/// network and the optimum. The default is fully static — exactly the
+/// historical behavior, and the section is only serialized when some
+/// knob moved, so pre-existing canonical INIs (hence cache keys and
+/// preset CSVs) keep their bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicsSpec {
+    /// Per-iteration probability that an active node leaves (churn).
+    pub leave: f64,
+    /// Per-iteration probability that an absent node rejoins.
+    pub join: f64,
+    /// Veto departures that would disconnect the active subgraph.
+    pub require_connected: bool,
+    /// Mobility orbit radius ρ around each home placement (0 = off;
+    /// requires a geometric topology, whose radius bounds link reach).
+    pub rewire: f64,
+    /// Mobility orbit period in iterations.
+    pub rewire_period: usize,
+    /// Time variation of the optimum w°(i) (tracking experiments).
+    pub drift: DriftModel,
+    /// Adaptive combination-weight policy re-weighting around links the
+    /// ledger observes as impaired.
+    pub adaptive: AdaptivePolicy,
+}
+
+impl Default for DynamicsSpec {
+    fn default() -> Self {
+        Self {
+            leave: 0.0,
+            join: 0.0,
+            require_connected: false,
+            rewire: 0.0,
+            rewire_period: 1000,
+            drift: DriftModel::None,
+            adaptive: AdaptivePolicy::Static,
+        }
+    }
+}
+
+impl DynamicsSpec {
+    /// True when every network-side axis is off (drift rides the data
+    /// model, not the dynamics state, and is excluded here).
+    pub fn network_static(&self) -> bool {
+        self.leave == 0.0
+            && self.join == 0.0
+            && self.rewire == 0.0
+            && self.adaptive == AdaptivePolicy::Static
+    }
+
+    /// True when the whole section is a no-op — the scenario then runs
+    /// the exact legacy static path.
+    pub fn is_static(&self) -> bool {
+        self.network_static() && self.drift.is_none()
+    }
+
+    /// The runtime configuration for the round scheduler; `radius` is
+    /// the geometric topology's connection radius (link reach under
+    /// mobility — 0 when the topology carries none).
+    pub fn to_config(&self, radius: f64) -> DynamicsConfig {
+        DynamicsConfig {
+            leave: self.leave,
+            join: self.join,
+            require_connected: self.require_connected,
+            rewire: self.rewire,
+            rewire_period: self.rewire_period,
+            radius,
+            adaptive: self.adaptive,
+        }
+    }
+
+    /// Range checks (topology/dim cross-checks live in
+    /// [`Scenario::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [("leave", self.leave), ("join", self.join)] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("dynamics: {name} {p} outside [0, 1]"));
+            }
+        }
+        if !self.rewire.is_finite() || self.rewire < 0.0 {
+            return Err(format!("dynamics: rewire {} must be >= 0", self.rewire));
+        }
+        if self.rewire > 0.0 && self.rewire_period == 0 {
+            return Err("dynamics: rewire_period must be >= 1".into());
+        }
+        self.drift.validate().map_err(|e| format!("dynamics: {e}"))
+    }
+}
+
 /// Whether the runner attaches the closed-form theory column
 /// (`… (theory)` series + steady-state anchor) to a scenario's output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -204,6 +294,9 @@ pub struct Scenario {
     pub mu: f64,
     /// Link-impairment model.
     pub impairments: LinkImpairments,
+    /// Time-varying network / optimum axes (`[dynamics]`; all off by
+    /// default, which reproduces the static legacy path exactly).
+    pub dynamics: DynamicsSpec,
     /// Monte-Carlo realizations.
     pub runs: usize,
     /// Iterations per realization.
@@ -244,6 +337,7 @@ impl Scenario {
             algorithm: AlgorithmSpec::Dcd { m: 3, m_grad: 1 },
             mu: 1e-2,
             impairments: LinkImpairments::ideal(),
+            dynamics: DynamicsSpec::default(),
             runs: 10,
             iters: 4_000,
             seed: 2024,
@@ -279,8 +373,16 @@ impl Scenario {
             "algorithm.m_links",
             "algorithm.mu",
             "impairments.drop_prob",
+            "impairments.drop",
             "impairments.gating",
             "impairments.quant_step",
+            "dynamics.leave",
+            "dynamics.join",
+            "dynamics.require_connected",
+            "dynamics.rewire",
+            "dynamics.rewire_period",
+            "dynamics.drift",
+            "dynamics.adaptive",
             "schedule.runs",
             "schedule.iters",
             "schedule.seed",
@@ -389,11 +491,32 @@ impl Scenario {
         sc.mu = get_or(doc, "algorithm", "mu", sc.mu)?;
 
         // -- impairments --------------------------------------------------
-        sc.impairments.drop_prob = get_or(doc, "impairments", "drop_prob", 0.0)?;
+        // `drop_prob` is the legacy scalar spelling (i.i.d. Bernoulli);
+        // the structured `drop` key (`prob:p` | `markov:p,p_gb,p_bg`)
+        // wins when both are present.
+        sc.impairments.drop = DropModel::Iid(get_or(doc, "impairments", "drop_prob", 0.0)?);
+        if let Some(v) = doc.get("impairments", "drop") {
+            sc.impairments.drop = v.parse::<DropModel>()?;
+        }
         if let Some(v) = doc.get("impairments", "gating") {
             sc.impairments.gating = v.parse::<Gating>()?;
         }
         sc.impairments.quant_step = get_or(doc, "impairments", "quant_step", 0.0)?;
+
+        // -- dynamics -----------------------------------------------------
+        sc.dynamics.leave = get_or(doc, "dynamics", "leave", sc.dynamics.leave)?;
+        sc.dynamics.join = get_or(doc, "dynamics", "join", sc.dynamics.join)?;
+        sc.dynamics.require_connected =
+            get_or(doc, "dynamics", "require_connected", sc.dynamics.require_connected)?;
+        sc.dynamics.rewire = get_or(doc, "dynamics", "rewire", sc.dynamics.rewire)?;
+        sc.dynamics.rewire_period =
+            get_or(doc, "dynamics", "rewire_period", sc.dynamics.rewire_period)?;
+        if let Some(v) = doc.get("dynamics", "drift") {
+            sc.dynamics.drift = v.parse::<DriftModel>()?;
+        }
+        if let Some(v) = doc.get("dynamics", "adaptive") {
+            sc.dynamics.adaptive = v.parse::<AdaptivePolicy>()?;
+        }
 
         // -- schedule -----------------------------------------------------
         sc.runs = get_or(doc, "schedule", "runs", sc.runs)?;
@@ -466,9 +589,24 @@ impl Scenario {
         }
         s.push_str(&format!("mu = {}\n", self.mu));
         s.push_str("\n[impairments]\n");
-        s.push_str(&format!("drop_prob = {}\n", self.impairments.drop_prob));
+        match self.impairments.drop {
+            // The legacy scalar spelling keeps its exact bytes so every
+            // pre-Markov canonical INI (and its cache key) is unchanged.
+            DropModel::Iid(p) => s.push_str(&format!("drop_prob = {p}\n")),
+            m @ DropModel::Markov { .. } => s.push_str(&format!("drop = {m}\n")),
+        }
         s.push_str(&format!("gating = {}\n", self.impairments.gating));
         s.push_str(&format!("quant_step = {}\n", self.impairments.quant_step));
+        if self.dynamics != DynamicsSpec::default() {
+            s.push_str("\n[dynamics]\n");
+            s.push_str(&format!("leave = {}\n", self.dynamics.leave));
+            s.push_str(&format!("join = {}\n", self.dynamics.join));
+            s.push_str(&format!("require_connected = {}\n", self.dynamics.require_connected));
+            s.push_str(&format!("rewire = {}\n", self.dynamics.rewire));
+            s.push_str(&format!("rewire_period = {}\n", self.dynamics.rewire_period));
+            s.push_str(&format!("drift = {}\n", self.dynamics.drift));
+            s.push_str(&format!("adaptive = {}\n", self.dynamics.adaptive));
+        }
         s.push_str("\n[schedule]\n");
         s.push_str(&format!("runs = {}\n", self.runs));
         s.push_str(&format!("iters = {}\n", self.iters));
@@ -565,6 +703,28 @@ impl Scenario {
         self.impairments
             .validate()
             .map_err(|e| format!("scenario {}: {e}", self.name))?;
+        self.dynamics
+            .validate()
+            .map_err(|e| format!("scenario {}: {e}", self.name))?;
+        if self.dynamics.rewire > 0.0 && !matches!(self.topology, TopologySpec::Geometric { .. }) {
+            return Err(format!(
+                "scenario {}: dynamics.rewire needs a geometric topology \
+                 (mobility reach is bounded by its radius)",
+                self.name
+            ));
+        }
+        if matches!(self.dynamics.drift, DriftModel::Rotate { .. }) && self.dim < 2 {
+            return Err(format!(
+                "scenario {}: drift = rotate needs dim >= 2",
+                self.name
+            ));
+        }
+        if !self.dynamics.is_static() && !matches!(self.mode, ScheduleMode::Rounds) {
+            return Err(format!(
+                "scenario {}: [dynamics] is only supported with schedule.mode = rounds",
+                self.name
+            ));
+        }
         if let ScheduleMode::Wsn { duration, sample_dt } = self.mode {
             if !(duration.is_finite() && duration > 0.0) {
                 return Err(format!(
@@ -650,7 +810,7 @@ mod tests {
         sc.algorithm = AlgorithmSpec::Rcd { m_links: 2 };
         sc.mu = 0.025;
         sc.impairments = LinkImpairments {
-            drop_prob: 0.15,
+            drop: DropModel::Iid(0.15),
             gating: Gating::EventTriggered(1e-6),
             quant_step: 1e-4,
         };
@@ -704,9 +864,9 @@ mod tests {
     #[test]
     fn validator_rejects_bad_drop_prob() {
         let mut sc = Scenario::base("bad-drop", "");
-        sc.impairments.drop_prob = 1.5;
+        sc.impairments.drop = DropModel::Iid(1.5);
         let err = sc.validate().unwrap_err();
-        assert!(err.contains("drop_prob"), "{err}");
+        assert!(err.contains("drop"), "{err}");
     }
 
     #[test]
@@ -818,6 +978,112 @@ mod tests {
         let err = Scenario::parse_str("[schedule]\ntheory = maybe\n").unwrap_err();
         assert!(err.contains("maybe"), "{err}");
         assert!(Scenario::check_key("schedule.theory").is_ok());
+    }
+
+    #[test]
+    fn markov_drop_key_roundtrips_and_legacy_bytes_are_stable() {
+        // Markov drop serializes via the structured key and survives the
+        // parse -> serialize -> parse loop losslessly.
+        let mut sc = Scenario::base("bursty", "");
+        sc.impairments.drop = DropModel::Markov { p_bad: 0.3, p_gb: 0.2, p_bg: 0.25 };
+        let text = sc.to_ini_string();
+        assert!(text.contains("drop = markov:0.3,0.2,0.25"), "{text}");
+        assert!(!text.contains("drop_prob"), "{text}");
+        let back = Scenario::parse_str(&text).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.to_ini_string(), text);
+        assert!(sc.validate().is_ok());
+        // An i.i.d. drop keeps the legacy scalar spelling, byte for byte.
+        let mut sc = Scenario::base("iid", "");
+        sc.impairments.drop = DropModel::Iid(0.2);
+        let text = sc.to_ini_string();
+        assert!(text.contains("drop_prob = 0.2"), "{text}");
+        assert!(!text.contains("drop ="), "{text}");
+        assert_eq!(Scenario::parse_str(&text).unwrap(), sc);
+        // The structured key also accepts the prob: spelling, and wins
+        // over a drop_prob in the same document.
+        let sc = Scenario::parse_str(
+            "[scenario]\nname = w\n\n[impairments]\ndrop_prob = 0.5\ndrop = prob:0.1\n",
+        )
+        .unwrap();
+        assert_eq!(sc.impairments.drop, DropModel::Iid(0.1));
+        // Malformed specs are parse errors, not silent defaults.
+        assert!(Scenario::parse_str("[impairments]\ndrop = markov:0.3\n").is_err());
+        // Out-of-range markov parameters are rejected by the validator.
+        let mut sc = Scenario::base("bad-markov", "");
+        sc.impairments.drop = DropModel::Markov { p_bad: 0.3, p_gb: 0.0, p_bg: 0.5 };
+        assert!(sc.validate().is_err());
+        assert!(Scenario::check_key("impairments.drop").is_ok());
+    }
+
+    #[test]
+    fn dynamics_section_roundtrips_and_validates() {
+        // Static dynamics emit no [dynamics] section at all — the
+        // canonical bytes of every pre-existing scenario are unchanged.
+        let plain = Scenario::base("plain", "");
+        assert!(plain.dynamics.is_static());
+        assert!(!plain.to_ini_string().contains("[dynamics]"));
+
+        let mut sc = Scenario::base("dyn", "");
+        sc.topology = TopologySpec::Geometric { n: 24, radius: 0.3 };
+        sc.dynamics = DynamicsSpec {
+            leave: 0.01,
+            join: 0.2,
+            require_connected: true,
+            rewire: 0.05,
+            rewire_period: 250,
+            drift: DriftModel::Walk { sigma: 2e-3 },
+            adaptive: AdaptivePolicy::Metropolis,
+        };
+        let text = sc.to_ini_string();
+        assert!(text.contains("[dynamics]"), "{text}");
+        assert!(text.contains("drift = walk:0.002"), "{text}");
+        assert!(text.contains("adaptive = metropolis"), "{text}");
+        let back = Scenario::parse_str(&text).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.to_ini_string(), text);
+        assert!(sc.validate().is_ok());
+
+        // Even a non-running knob (rewire_period with rewire = 0) must
+        // survive the round-trip: serialization keys off != default, not
+        // is_static().
+        let mut sc = Scenario::base("period-only", "");
+        sc.dynamics.rewire_period = 7;
+        let back = Scenario::parse_str(&sc.to_ini_string()).unwrap();
+        assert_eq!(back, sc);
+
+        // Cross-checks: mobility needs a geometric topology, rotation
+        // needs a plane, and the WSN engine has no dynamics support.
+        let mut sc = Scenario::base("bad-rewire", "");
+        sc.dynamics.rewire = 0.1;
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("geometric"), "{err}");
+        let mut sc = Scenario::base("bad-rotate", "");
+        sc.dim = 1;
+        sc.algorithm = AlgorithmSpec::DiffusionLms;
+        sc.dynamics.drift = DriftModel::Rotate { omega: 0.02 };
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("dim >= 2"), "{err}");
+        let mut sc = Scenario::base("bad-wsn-dyn", "");
+        sc.mode = ScheduleMode::Wsn { duration: 1000.0, sample_dt: 10.0 };
+        sc.dynamics.leave = 0.01;
+        sc.dynamics.join = 0.5;
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("rounds"), "{err}");
+        let mut sc = Scenario::base("bad-leave", "");
+        sc.dynamics.leave = 1.5;
+        assert!(sc.validate().is_err());
+        for key in [
+            "dynamics.leave",
+            "dynamics.join",
+            "dynamics.require_connected",
+            "dynamics.rewire",
+            "dynamics.rewire_period",
+            "dynamics.drift",
+            "dynamics.adaptive",
+        ] {
+            assert!(Scenario::check_key(key).is_ok(), "{key}");
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! run-order merge needs to keep sharded results byte-identical to the
 //! serial runner.
 
+use crate::coordinator::impairments::LinkStateStats;
 use crate::coordinator::round::RunResult;
 use crate::coordinator::wsn::WsnResult;
 use crate::energy::{CommLedger, N_PURPOSES};
@@ -238,6 +239,36 @@ fn ledger_json(l: &CommLedger) -> Json {
     ])
 }
 
+/// Encode the Gilbert–Elliott occupancy counters of one realization
+/// (DESIGN.md §12). Always present on Mc run frames; all-zero for
+/// memoryless drop models.
+fn linkstate_json(s: &LinkStateStats) -> Json {
+    obj(vec![
+        ("good", num_u64(s.good_steps)),
+        ("bad", num_u64(s.bad_steps)),
+        ("bursts", num_u64(s.bursts)),
+        ("burst_steps", num_u64(s.burst_steps)),
+        ("hist", u64_arr(&s.burst_hist)),
+    ])
+}
+
+/// Decode the link-state block of an Mc run frame. An absent block
+/// (frames written before the dynamics axes existed) decodes as the
+/// empty chain — the merge treats both identically.
+fn decode_linkstate(v: &Json) -> Result<LinkStateStats, String> {
+    let l = v.get("linkstate");
+    if matches!(l, &Json::Null) {
+        return Ok(LinkStateStats::default());
+    }
+    Ok(LinkStateStats {
+        good_steps: get_u64(l, "good")?,
+        bad_steps: get_u64(l, "bad")?,
+        bursts: get_u64(l, "bursts")?,
+        burst_steps: get_u64(l, "burst_steps")?,
+        burst_hist: get_u64_arr(l, "hist")?,
+    })
+}
+
 /// Decode the ledger object of a run frame (see [`ledger_json`]).
 fn decode_ledger(v: &Json) -> Result<CommLedger, String> {
     let l = v.get("ledger");
@@ -310,6 +341,7 @@ impl Frame {
                     ("run", num(*run)),
                     ("msd", f64_arr(&res.msd)),
                     ("ledger", ledger_json(&res.ledger)),
+                    ("linkstate", linkstate_json(&res.linkstate)),
                 ]),
                 RunPayload::Wsn(res) => obj(vec![
                     v,
@@ -370,6 +402,7 @@ impl Frame {
                     JobKind::Mc => RunPayload::Mc(RunResult {
                         msd: get_f64_arr(&doc, "msd")?,
                         ledger: decode_ledger(&doc)?,
+                        linkstate: decode_linkstate(&doc)?,
                     }),
                     JobKind::Wsn => RunPayload::Wsn(WsnResult {
                         time: get_f64_arr(&doc, "time")?,
@@ -443,9 +476,15 @@ mod tests {
 
     #[test]
     fn mc_run_frame_roundtrips_bit_exactly() {
+        let mut linkstate = LinkStateStats::sized();
+        linkstate.good_steps = 900;
+        linkstate.bad_steps = 100;
+        linkstate.record_burst(3);
+        linkstate.record_burst(97);
         let res = RunResult {
             msd: vec![1.0, 0.123456789012345e-7, 3.5e300, 0.0],
             ledger: sample_ledger(),
+            linkstate,
         };
         let line = Frame::Run { run: 7, payload: RunPayload::Mc(res.clone()) }.encode();
         match Frame::decode(&line).unwrap() {
@@ -454,10 +493,25 @@ mod tests {
                 // The whole directional ledger survives the pipe —
                 // sparse per-link encoding included.
                 assert_eq!(back.ledger, res.ledger);
+                // As do the Gilbert–Elliott occupancy counters, the
+                // overflow histogram bin included.
+                assert_eq!(back.linkstate, res.linkstate);
                 assert_eq!(back.msd.len(), res.msd.len());
                 for (a, b) in back.msd.iter().zip(res.msd.iter()) {
                     assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
                 }
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // Frames from binaries that predate the dynamics axes carry no
+        // linkstate block: it decodes as the empty chain.
+        let legacy = "{\"v\":2,\"type\":\"run\",\"kind\":\"mc\",\"run\":0,\"msd\":[1.0],\
+                      \"ledger\":{\"n\":1,\"scalars\":0,\"messages\":0,\"suppressed\":0,\
+                      \"dropped_s\":0,\"dropped_m\":0,\"width\":64,\"per_node\":[0],\
+                      \"per_purpose\":[0,0,0],\"per_link\":[]}}";
+        match Frame::decode(legacy).unwrap() {
+            Frame::Run { payload: RunPayload::Mc(back), .. } => {
+                assert!(back.linkstate.is_empty());
             }
             other => panic!("decoded {other:?}"),
         }
@@ -470,6 +524,7 @@ mod tests {
         let res = RunResult {
             msd: vec![f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 1.5],
             ledger: CommLedger::empty(2),
+            linkstate: LinkStateStats::default(),
         };
         let line = Frame::Run { run: 0, payload: RunPayload::Mc(res) }.encode();
         match Frame::decode(&line).unwrap() {

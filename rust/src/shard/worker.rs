@@ -19,7 +19,7 @@ use std::io::{BufRead, Write};
 use crate::config::{Exp3Config, IniDoc};
 use crate::coordinator::runner::{parallel_ordered, resolve_threads};
 use crate::experiments::exp3::{exp3_settings, Exp3Parts};
-use crate::scenario::{mc_parts, wsn_block, Scenario, ScheduleMode};
+use crate::scenario::{mc_parts, scheduler_options, wsn_block, Scenario, ScheduleMode};
 
 use super::protocol::{Frame, JobKind, RunPayload, ShardJob};
 
@@ -111,10 +111,10 @@ fn run_mc_block(job: &ShardJob) -> Result<Vec<RunPayload>, String> {
     // The supervisor divides the machine across the concurrent shards;
     // its budget overrides the scenario's own (whole-machine) setting.
     mc.threads = job.threads;
-    let imp = if sc.impairments.is_ideal() { None } else { Some(&sc.impairments) };
-    let results = mc.run_rust_range(
+    let opts = scheduler_options(&sc);
+    let results = mc.run_rust_range_opts(
         &model,
-        imp,
+        &opts,
         || sc.algorithm.build(net.clone()),
         job.run_start,
         job.run_count,

@@ -71,7 +71,7 @@ impl ImpairedMsdModel {
                 imp.gating
             )
         })?;
-        let lm = LinkStateMoments::new(&setup.c, imp.drop_prob, tx_prob);
+        let lm = LinkStateMoments::new(&setup.c, imp.drop.mean_drop(), tx_prob);
         let eff = TheorySetup { c: lm.mean_matrix(), ..setup };
         let bop = BOperator::build(&eff);
         let quad = build_quad_terms(&eff, &lm);
@@ -171,7 +171,7 @@ impl ImpairedMsdModel {
 mod tests {
     use super::*;
     use crate::algorithms::{Algorithm, CommMeter, Dcd, NetworkConfig};
-    use crate::coordinator::impairments::{Gating, ImpairmentState};
+    use crate::coordinator::impairments::{DropModel, Gating, ImpairmentState};
     use crate::rng::Pcg64;
     use crate::topology::{combination_matrix, Graph, Rule};
 
@@ -199,7 +199,7 @@ mod tests {
     }
 
     fn imp(drop: f64, gate: Gating) -> LinkImpairments {
-        LinkImpairments { drop_prob: drop, gating: gate, quant_step: 0.0 }
+        LinkImpairments { drop: DropModel::Iid(drop), gating: gate, quant_step: 0.0 }
     }
 
     fn random_sigma(nl: usize, rng: &mut Pcg64) -> Mat {
@@ -392,7 +392,7 @@ mod tests {
         let gated = ss(&imp(0.0, Gating::Probabilistic(0.5)));
         assert!(ideal <= gated * 1.02, "{ideal} vs {gated}");
         let quant = ss(&LinkImpairments {
-            drop_prob: 0.0,
+            drop: DropModel::none(),
             gating: Gating::Always,
             quant_step: 1e-3,
         });
@@ -401,7 +401,7 @@ mod tests {
         // state is exactly affine in Δ²: a 10× step must raise the
         // quantization excess by 100×.
         let quant_big = ss(&LinkImpairments {
-            drop_prob: 0.0,
+            drop: DropModel::none(),
             gating: Gating::Always,
             quant_step: 1e-2,
         });

@@ -97,6 +97,65 @@ impl Graph {
         count == self.n
     }
 
+    /// Connectivity of the subgraph induced by the `active` nodes
+    /// (BFS from the first active node over active-only neighbours,
+    /// caller-owned scratch — no allocation once buffers have grown).
+    /// Vacuously true when no node is active. This is the churn veto
+    /// of the dynamics layer (DESIGN.md §12).
+    pub fn is_connected_subset(
+        &self,
+        active: &[bool],
+        seen: &mut Vec<bool>,
+        stack: &mut Vec<usize>,
+    ) -> bool {
+        debug_assert_eq!(active.len(), self.n);
+        let target = active.iter().filter(|&&a| a).count();
+        let Some(start) = active.iter().position(|&a| a) else {
+            return true;
+        };
+        seen.clear();
+        seen.resize(self.n, false);
+        stack.clear();
+        stack.push(start);
+        seen[start] = true;
+        let mut count = 1;
+        while let Some(k) = stack.pop() {
+            for &j in &self.adj[k] {
+                if active[j] && !seen[j] {
+                    seen[j] = true;
+                    count += 1;
+                    stack.push(j);
+                }
+            }
+        }
+        count == target
+    }
+
+    /// Mobility support graph (DESIGN.md §12): the union of this
+    /// graph's edges with every node pair whose placement distance is
+    /// within `radius + 2·rho` — everything two nodes orbiting their
+    /// homes with amplitude `rho` could ever bring within radio reach.
+    /// The dynamics layer builds combiners once over this support and
+    /// then only toggles per-slot liveness masks, so rewiring costs
+    /// O(E) per iteration with no rebuild. Requires positions; consumes
+    /// no RNG (scenario seed-stream neutral).
+    pub fn with_mobility_support(&self, radius: f64, rho: f64) -> Self {
+        let pos = self
+            .positions
+            .as_ref()
+            .expect("mobility support requires node positions");
+        let reach = radius + 2.0 * rho;
+        let mut g = self.clone();
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if !g.has_edge(i, j) && dist(pos[i], pos[j]) <= reach {
+                    g.insert_edge(i, j);
+                }
+            }
+        }
+        g
+    }
+
     /// Ring lattice where each node links to `hops` nodes on each side.
     pub fn ring(n: usize, hops: usize) -> Self {
         let mut edges = Vec::new();
@@ -371,5 +430,59 @@ mod tests {
     #[should_panic(expected = "bad edge")]
     fn rejects_self_loop() {
         let _ = Graph::from_edges(3, &[(1, 1)]);
+    }
+
+    #[test]
+    fn subset_connectivity() {
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let mut seen = Vec::new();
+        let mut stack = Vec::new();
+        assert!(g.is_connected_subset(&[true; 5], &mut seen, &mut stack));
+        // Dropping an endpoint keeps the path connected...
+        assert!(g.is_connected_subset(
+            &[false, true, true, true, true],
+            &mut seen,
+            &mut stack
+        ));
+        // ... dropping an interior node cuts it.
+        assert!(!g.is_connected_subset(
+            &[true, true, false, true, true],
+            &mut seen,
+            &mut stack
+        ));
+        // Vacuous and singleton subsets are connected.
+        assert!(g.is_connected_subset(&[false; 5], &mut seen, &mut stack));
+        assert!(g.is_connected_subset(
+            &[false, false, true, false, false],
+            &mut seen,
+            &mut stack
+        ));
+    }
+
+    #[test]
+    fn mobility_support_is_superset() {
+        let mut rng = Pcg64::new(17, 9);
+        let base = Graph::random_geometric(25, 0.2, &mut rng);
+        let sup = base.with_mobility_support(0.2, 0.05);
+        assert!(sup.edge_count() >= base.edge_count());
+        assert!(sup.is_connected());
+        assert_eq!(sup.positions.as_ref(), base.positions.as_ref());
+        for k in 0..base.n() {
+            for &j in base.neighbors(k) {
+                assert!(sup.has_edge(k, j), "support lost base edge ({k},{j})");
+            }
+        }
+        // Every added edge is within the orbit reach.
+        let pos = base.positions.as_ref().unwrap();
+        for k in 0..sup.n() {
+            for &j in sup.neighbors(k) {
+                if !base.has_edge(k, j) {
+                    assert!(dist(pos[k], pos[j]) <= 0.2 + 2.0 * 0.05);
+                }
+            }
+        }
+        // rho = 0 adds nothing beyond the existing radius edges.
+        let same = base.with_mobility_support(0.2, 0.0);
+        assert_eq!(same.edge_count(), base.edge_count());
     }
 }

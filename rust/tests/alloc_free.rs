@@ -9,7 +9,8 @@
 //! tests.
 
 use dcd_lms::algorithms::{CommMeter, Dcd, NetworkConfig};
-use dcd_lms::coordinator::impairments::{Gating, ImpairmentState, LinkImpairments};
+use dcd_lms::coordinator::dynamics::{DynamicsConfig, DynamicsState};
+use dcd_lms::coordinator::impairments::{AdaptivePolicy, DropModel, Gating, ImpairmentState, LinkImpairments};
 use dcd_lms::theory::{ImpairedMsdModel, MsdModel, TheorySetup};
 use dcd_lms::topology::{combination_matrix, Graph, Rule};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -94,7 +95,7 @@ fn theory_iteration_loops_do_not_allocate() {
     // with drops, gating and the quantization noise floor all active.
     let setup = model.setup().clone();
     let imp = LinkImpairments {
-        drop_prob: 0.2,
+        drop: DropModel::Iid(0.2),
         gating: Gating::Probabilistic(0.8),
         quant_step: 1e-3,
     };
@@ -157,4 +158,37 @@ fn theory_iteration_loops_do_not_allocate() {
     let (short, _) = allocs_during(|| refresh(&mut a_bar, &mut c_bar, 50));
     let (long, _) = allocs_during(|| refresh(&mut a_bar, &mut c_bar, 200));
     assert_eq!(short, long, "expected_combiners_into allocates per call");
+
+    // The dynamic axes (DESIGN.md §12) keep the same discipline: the
+    // Gilbert–Elliott chain state, the occupancy histogram, and the
+    // churn/mobility/adaptive layer are all allocated once per run.
+    let bursty = LinkImpairments {
+        drop: DropModel::Markov { p_bad: 0.3, p_gb: 0.2, p_bg: 0.2 },
+        gating: Gating::Always,
+        quant_step: 0.0,
+    };
+    let dc = DynamicsConfig {
+        leave: 0.01,
+        join: 0.2,
+        require_connected: true,
+        adaptive: AdaptivePolicy::Metropolis,
+        ..DynamicsConfig::default()
+    };
+    let mut state = ImpairmentState::new(&net, 78, 1);
+    let mut ds = DynamicsState::new(dc, &net, 78, 1);
+    let dyn_rebuild = |state: &mut ImpairmentState,
+                       ds: &mut DynamicsState,
+                       alg: &mut Dcd,
+                       comm: &mut CommMeter,
+                       iters: usize| {
+        for _ in 0..iters {
+            state.begin_iteration_dynamic(&bursty, Some(&mut *ds), alg, comm);
+        }
+    };
+    // Warm-up covers the lazy stationary seeding, the first burst
+    // tallies, and at least one adaptive refresh (period 64).
+    dyn_rebuild(&mut state, &mut ds, &mut alg, &mut comm, 128);
+    let (short, _) = allocs_during(|| dyn_rebuild(&mut state, &mut ds, &mut alg, &mut comm, 200));
+    let (long, _) = allocs_during(|| dyn_rebuild(&mut state, &mut ds, &mut alg, &mut comm, 800));
+    assert_eq!(short, long, "dynamic rebuild allocates per iteration");
 }

@@ -291,6 +291,33 @@ fn serve_chapter_and_citation_are_paired() {
     );
 }
 
+/// Rule 7: DESIGN.md must carry the §12 dynamic-networks chapter and
+/// the impairment layer must cite it — the Gilbert–Elliott closed forms
+/// (stationary occupancy, burst law) that `rust/tests/dynamics.rs` pins
+/// are derived there, so the chapter and its anchor citation may not
+/// silently drift apart. Same shape as rules 5–6.
+#[test]
+fn dynamics_chapter_and_citation_are_paired() {
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md")).expect("DESIGN.md");
+    let has_section = design
+        .lines()
+        .any(|l| l.starts_with('#') && l.contains("§12"));
+    assert!(has_section, "DESIGN.md lost its §12 dynamic-networks chapter");
+    let imp = fs::read_to_string(
+        root.join("rust")
+            .join("src")
+            .join("coordinator")
+            .join("impairments.rs"),
+    )
+    .expect("rust/src/coordinator/impairments.rs (the link-event layer)");
+    let needle = format!("{}.md §12", "DESIGN");
+    assert!(
+        imp.contains(&needle),
+        "rust/src/coordinator/impairments.rs does not cite DESIGN.md §12"
+    );
+}
+
 #[test]
 fn relative_markdown_links_point_at_existing_files() {
     let root = repo_root();

@@ -1,0 +1,256 @@
+//! Statistical validation of the dynamic-network axes (DESIGN.md §12):
+//! the Gilbert–Elliott link chain is pinned against its closed forms —
+//! stationary Bad occupancy, geometric burst-length law (chi-square),
+//! mean burst length — and the churn layer's connectivity contract is
+//! exercised under sustained leave/join pressure.
+//!
+//! Every test is seeded (deterministic), but the tolerances are sized
+//! from the estimators' sampling distributions so the assertions would
+//! catch a wrong chain, not a wrong seed:
+//!
+//! * Occupancy: the chain's samples are correlated with relaxation time
+//!   τ ≈ 1/min(p_gb, p_bg), so the occupancy estimate over T sampled
+//!   steps has std ≈ sqrt(2·π(1−π)·τ/T). The asserted absolute
+//!   tolerances are ≥ 5 of those standard deviations.
+//! * Burst chi-square: completed bursts are i.i.d. geometric(q) with
+//!   q = p_bg·(1 − p_bad), so Pearson's statistic over the merged-tail
+//!   histogram is χ²(dof); the critical value is the Wilson–Hilferty
+//!   99.98% quantile (z = 3.5) — a wrong law blows past it by orders
+//!   of magnitude at ~10⁵ bursts.
+//! * Mean burst: relative tolerance 5% ≈ 15 std of the sample mean at
+//!   the burst counts below.
+
+use dcd_lms::algorithms::{CommMeter, Dcd, NetworkConfig};
+use dcd_lms::coordinator::dynamics::{DynamicsConfig, DynamicsState};
+use dcd_lms::coordinator::impairments::{
+    DropModel, Gating, ImpairmentState, LinkImpairments, LinkStateStats,
+};
+use dcd_lms::rng::Pcg64;
+use dcd_lms::scenario::{find, mc_parts, scheduler_options, theory_scope};
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+fn ring_net(n: usize, dim: usize) -> NetworkConfig {
+    let graph = Graph::ring(n, 1);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    NetworkConfig { graph, c, a, mu: vec![5e-3; n], dim }
+}
+
+/// Drive the impairment layer for `iters` iterations with `drop` on a
+/// 10-node ring (20 directed slots sampled per iteration) and return
+/// the chain's occupancy counters.
+fn chain_stats(drop: DropModel, iters: usize, seed: u64) -> LinkStateStats {
+    let net = ring_net(10, 2);
+    let imp = LinkImpairments { drop, gating: Gating::Always, quant_step: 0.0 };
+    let mut alg = Dcd::new(net.clone(), 1, 1);
+    let mut comm = CommMeter::new(net.n_nodes());
+    let mut state = ImpairmentState::new(&net, seed, 1);
+    for _ in 0..iters {
+        state.begin_iteration(&imp, &mut alg, &mut comm);
+    }
+    state.into_stats()
+}
+
+/// Stationary Bad occupancy π_B = p_gb·p_bad / (p_gb·p_bad +
+/// p_bg·(1 − p_bad)), hit by the empirical bad fraction across
+/// symmetric, sticky and asymmetric parameterizations.
+#[test]
+fn stationary_occupancy_matches_closed_form() {
+    let iters = 50_000; // 20 slots → 10⁶ sampled chain steps.
+    for &(p_bad, p_gb, p_bg, seed) in &[
+        (0.2, 0.25, 0.25, 101u64), // symmetric: π_B = p_bad exactly
+        (0.1, 0.05, 0.40, 102),    // sticky Good state, τ = 20
+        (0.5, 0.30, 0.10, 103),    // sticky Bad state
+    ] {
+        let drop = DropModel::Markov { p_bad, p_gb, p_bg };
+        let pi = drop.mean_drop();
+        if p_gb == p_bg {
+            assert_eq!(pi, p_bad, "symmetric redraw must give π_B = p_bad");
+        }
+        let stats = chain_stats(drop, iters, seed);
+        let total = stats.good_steps + stats.bad_steps;
+        assert_eq!(total, 20 * iters as u64, "every slot sampled every iteration");
+        let emp = stats.bad_fraction().expect("chain was sampled");
+        // τ ≤ 20 here, so std ≤ sqrt(2·0.25·20/10⁶) ≈ 0.0032; 0.025
+        // is ≈ 8 std for the stickiest case.
+        assert!(
+            (emp - pi).abs() < 0.025,
+            "markov:{p_bad},{p_gb},{p_bg}: occupancy {emp:.4} vs π_B {pi:.4}"
+        );
+    }
+}
+
+/// Completed bad bursts are geometric: P(len = j) = q·(1−q)^(j−1) with
+/// q = p_bg·(1 − p_bad). Pearson chi-square over the histogram, tail
+/// bins merged up to expected counts ≥ 5, against the Wilson–Hilferty
+/// 99.98% χ² quantile.
+#[test]
+fn burst_length_histogram_matches_geometric_law() {
+    let (p_bad, p_gb, p_bg) = (0.3, 0.5, 0.5);
+    let drop = DropModel::Markov { p_bad, p_gb, p_bg };
+    let q = p_bg * (1.0 - p_bad);
+    assert_eq!(drop.mean_bad_burst(), Some(1.0 / q));
+    let stats = chain_stats(drop, 50_000, 104);
+    assert!(stats.bursts > 50_000, "need ~10⁵ bursts, got {}", stats.bursts);
+
+    // Empirical mean burst vs 1/q (std of the mean ≈ 0.009 here; 5%
+    // relative tolerance ≈ 15 std).
+    let mean = stats.mean_burst().expect("bursts completed");
+    let want = 1.0 / q;
+    assert!(
+        (mean - want).abs() / want < 0.05,
+        "mean burst {mean:.4} vs closed form {want:.4}"
+    );
+
+    // Chi-square. Bin i of the histogram counts bursts of length i+1;
+    // the last bin absorbs the overflow tail, and we merge from the top
+    // until every cell expects ≥ 5 counts.
+    let n = stats.bursts as f64;
+    let bins = stats.burst_hist.len();
+    let pmf = |i: usize| {
+        if i + 1 == bins {
+            (1.0 - q).powi(i as i32) // overflow: P(len > i)
+        } else {
+            q * (1.0 - q).powi(i as i32)
+        }
+    };
+    let mut cells: Vec<(f64, f64)> = Vec::new(); // (observed, expected)
+    let mut tail_obs = 0.0;
+    let mut tail_exp = 0.0;
+    for i in (0..bins).rev() {
+        tail_obs += stats.burst_hist[i] as f64;
+        tail_exp += n * pmf(i);
+        if tail_exp >= 5.0 {
+            cells.push((tail_obs, tail_exp));
+            tail_obs = 0.0;
+            tail_exp = 0.0;
+        }
+    }
+    assert!(cells.len() >= 15, "degenerate binning: {} cells", cells.len());
+    let chi2: f64 = cells.iter().map(|&(o, e)| (o - e) * (o - e) / e).sum();
+    let dof = (cells.len() - 1) as f64;
+    // Wilson–Hilferty: χ²_p(dof) ≈ dof·(1 − 2/(9·dof) + z·sqrt(2/(9·dof)))³.
+    let h = 2.0 / (9.0 * dof);
+    let crit = dof * (1.0 - h + 3.5 * h.sqrt()).powi(3);
+    assert!(
+        chi2 < crit,
+        "burst law rejected: chi2 {chi2:.1} > crit {crit:.1} (dof {dof})"
+    );
+}
+
+/// Memoryless specs (`markov:p,1,1` and plain i.i.d.) dispatch to the
+/// historical Bernoulli draw and never sample the chain — no occupancy
+/// counters, which is also what keeps them byte-identical to `prob:p`.
+#[test]
+fn memoryless_models_collect_no_chain_stats() {
+    for drop in [
+        DropModel::Iid(0.3),
+        DropModel::Markov { p_bad: 0.3, p_gb: 1.0, p_bg: 1.0 },
+    ] {
+        let stats = chain_stats(drop, 500, 105);
+        assert!(stats.is_empty(), "{drop}: chain sampled for a memoryless model");
+        assert_eq!(stats.bursts, 0, "{drop}");
+    }
+}
+
+/// The `bursty-geometric` preset end to end on the Monte-Carlo runner:
+/// the merged occupancy counters reproduce π_B = 0.2, and the bursty
+/// chain is excluded from the closed-form theory column with a message
+/// that names the reason.
+#[test]
+fn bursty_geometric_preset_occupancy_through_the_runner() {
+    let mut sc = find("bursty-geometric").expect("registry has bursty-geometric");
+    assert_eq!(
+        sc.impairments.drop,
+        DropModel::Markov { p_bad: 0.2, p_gb: 0.25, p_bg: 0.25 },
+        "preset changed under the test"
+    );
+    let err = theory_scope(&sc).expect_err("bursty chains have no i.i.d. closed form");
+    assert!(err.contains("markov"), "{err}");
+    // Shrunk schedule — the chain's physics is per-sample, not
+    // per-horizon, so occupancy estimates only need enough samples.
+    sc.runs = 2;
+    sc.iters = 4_000;
+    let (model, net, mc) = mc_parts(&sc).unwrap();
+    let opts = scheduler_options(&sc);
+    let res = mc.run_rust_opts(&model, &opts, || sc.algorithm.build(net.clone()));
+    assert!(!res.linkstate.is_empty(), "bursty preset must tally the chain");
+    let pi = sc.impairments.drop.mean_drop();
+    assert_eq!(pi, 0.2, "symmetric redraw: π_B = p_bad");
+    let emp = res.linkstate.bad_fraction().unwrap();
+    // ~10⁶ sampled steps at τ = 4: std ≈ 0.0011; 0.02 is ≥ 18 std.
+    assert!((emp - pi).abs() < 0.02, "occupancy {emp:.4} vs π_B {pi:.4}");
+    let mb = res.linkstate.mean_burst().unwrap();
+    let want = sc.impairments.drop.mean_bad_burst().unwrap();
+    assert_eq!(want, 5.0, "preset's advertised mean burst");
+    assert!((mb - want).abs() / want < 0.05, "mean burst {mb:.3} vs {want}");
+}
+
+/// Churn under `require_connected`: the active subgraph stays connected
+/// through thousands of leave/join draws, while churn itself genuinely
+/// happens. Without the veto the same pressure disconnects a path graph
+/// almost immediately — the contract is the veto, not luck.
+#[test]
+fn churn_keeps_the_active_subgraph_connected_when_demanded() {
+    let mut rng = Pcg64::new(31, 2);
+    let graph = Graph::random_geometric(20, 0.3, &mut rng);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    let n = graph.n();
+    let net = NetworkConfig { graph, c, a, mu: vec![5e-3; n], dim: 2 };
+    let mut alg = Dcd::new(net.clone(), 1, 1);
+    let dc = DynamicsConfig {
+        leave: 0.05,
+        join: 0.2,
+        require_connected: true,
+        ..DynamicsConfig::default()
+    };
+    let mut ds = DynamicsState::new(dc, &net, 31, 1);
+    let mut seen = Vec::new();
+    let mut stack = Vec::new();
+    let mut min_active = n;
+    for _ in 0..3_000 {
+        ds.advance(&mut alg);
+        min_active = min_active.min(ds.active_count());
+        assert!(
+            net.graph.is_connected_subset(ds.active(), &mut seen, &mut stack),
+            "active subgraph disconnected under require_connected"
+        );
+    }
+    assert!(min_active < n, "churn never removed a node in 3000 iterations");
+    assert!(min_active >= 1, "the last node may never leave");
+
+    // Contrast: the same pressure on a path graph with the veto off
+    // must disconnect it (otherwise the assertion above is vacuous).
+    let path = Graph::from_edges(8, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7)]);
+    let c = combination_matrix(&path, Rule::Metropolis);
+    let a = combination_matrix(&path, Rule::Metropolis);
+    let net = NetworkConfig { graph: path, c, a, mu: vec![5e-3; 8], dim: 2 };
+    let mut alg = Dcd::new(net.clone(), 1, 1);
+    let dc = DynamicsConfig { leave: 0.05, join: 0.2, ..DynamicsConfig::default() };
+    let mut ds = DynamicsState::new(dc, &net, 31, 1);
+    let mut disconnected = false;
+    for _ in 0..3_000 {
+        ds.advance(&mut alg);
+        if ds.active_count() > 0
+            && !net.graph.is_connected_subset(ds.active(), &mut seen, &mut stack)
+        {
+            disconnected = true;
+            break;
+        }
+    }
+    assert!(disconnected, "no-veto churn never disconnected the path graph");
+}
+
+/// The `churn-grid` preset demands connectivity; its `[dynamics]`
+/// section must survive the INI roundtrip and keep the demand.
+#[test]
+fn churn_grid_preset_roundtrips_its_connectivity_demand() {
+    let sc = find("churn-grid").expect("registry has churn-grid");
+    assert!(sc.dynamics.require_connected);
+    assert!(sc.dynamics.leave > 0.0 && sc.dynamics.join > 0.0);
+    let back = dcd_lms::scenario::Scenario::parse_str(&sc.to_ini_string()).unwrap();
+    assert_eq!(back, sc, "churn-grid INI roundtrip");
+    let err = theory_scope(&sc).expect_err("churn is outside the analysis scope");
+    assert!(err.contains("dynamics"), "{err}");
+}

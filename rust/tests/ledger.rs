@@ -4,7 +4,7 @@
 //! rules end-to-end through the round scheduler.
 
 use dcd_lms::algorithms::{NetworkConfig, Purpose};
-use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::coordinator::impairments::{DropModel, Gating, LinkImpairments};
 use dcd_lms::coordinator::RoundScheduler;
 use dcd_lms::datamodel::DataModel;
 use dcd_lms::energy::payload_bits;
@@ -69,7 +69,7 @@ fn ideal_line_bill_matches_hand_computation() {
 #[test]
 fn fully_lossy_line_bill_matches_hand_computation() {
     let imp = LinkImpairments {
-        drop_prob: 1.0,
+        drop: DropModel::Iid(1.0),
         gating: Gating::Always,
         quant_step: 0.0,
     };
@@ -97,7 +97,7 @@ fn fully_lossy_line_bill_matches_hand_computation() {
 #[test]
 fn fully_gated_line_bills_nothing() {
     let imp = LinkImpairments {
-        drop_prob: 0.0,
+        drop: DropModel::none(),
         gating: Gating::Probabilistic(0.0),
         quant_step: 0.0,
     };
@@ -113,7 +113,7 @@ fn fully_gated_line_bills_nothing() {
 #[test]
 fn quantized_line_bill_uses_grid_width() {
     let imp = LinkImpairments {
-        drop_prob: 0.0,
+        drop: DropModel::none(),
         gating: Gating::Always,
         quant_step: 1e-3,
     };
@@ -133,7 +133,7 @@ fn quantized_line_bill_uses_grid_width() {
 #[test]
 fn gated_line_savings_are_exact_and_strictly_larger_than_legacy() {
     let imp = LinkImpairments {
-        drop_prob: 0.0,
+        drop: DropModel::none(),
         gating: Gating::Probabilistic(0.5),
         quant_step: 0.0,
     };

@@ -374,9 +374,9 @@ fn sparse_kernels_match_dense_on_geometric_graphs() {
 /// reconstruction from the same drawn outcomes, on every graph size.
 #[test]
 fn effective_rebuild_matches_dense_reconstruction() {
-    use dcd_lms::coordinator::impairments::{Gating, ImpairmentState, LinkImpairments};
+    use dcd_lms::coordinator::impairments::{DropModel, Gating, ImpairmentState, LinkImpairments};
     let imp = LinkImpairments {
-        drop_prob: 0.3,
+        drop: DropModel::Iid(0.3),
         gating: Gating::Probabilistic(0.8),
         quant_step: 0.0,
     };
@@ -426,5 +426,55 @@ fn effective_rebuild_matches_dense_reconstruction() {
         }
         state.restore(&mut alg, &mut comm);
         assert_eq!(alg.network().a.to_dense(), a0, "restore puts A back");
+    }
+}
+
+/// Adaptive combination weights (DESIGN.md §12): on random geometric
+/// graphs with arbitrary per-link delivery rates, both policies keep
+/// every receiver's incoming mass at exactly the pristine total, stay
+/// entrywise non-negative, and degenerate to the pristine weights when
+/// no impairment has been observed (all rates 1).
+#[test]
+fn adaptive_reweight_preserves_row_mass_and_degenerates_to_static() {
+    use dcd_lms::coordinator::impairments::{adaptive_reweight, AdaptivePolicy};
+    for &(n, radius, seed) in &[(10usize, 0.5, 61u64), (50, 0.25, 62), (200, 0.12, 63)] {
+        let mut rng = Pcg64::new(seed, 0);
+        let graph = Graph::random_geometric(n, radius, &mut rng);
+        for rule in [Rule::Metropolis, Rule::Uniform] {
+            let base = combination_matrix(&graph, rule);
+            let mut rates = vec![0.0; 0];
+            let mut row_off = vec![0usize; n + 1];
+            for k in 0..n {
+                row_off[k] = rates.len();
+                for _ in graph.neighbors(k) {
+                    rates.push(rng.next_f64());
+                }
+            }
+            row_off[n] = rates.len();
+            let rate = |k: usize, slot: usize| rates[row_off[k] + slot];
+            for policy in [AdaptivePolicy::Metropolis, AdaptivePolicy::Acw] {
+                let rw = adaptive_reweight(policy, &graph, &base, rate);
+                for k in 0..n {
+                    let (_, want) = base.row(k);
+                    let (_, got) = rw.row(k);
+                    let w: f64 = want.iter().sum();
+                    let g: f64 = got.iter().sum();
+                    assert!(
+                        (w - g).abs() < 1e-12,
+                        "N={n} {rule:?} {policy:?} row {k}: mass {w} -> {g}"
+                    );
+                    for (i, &v) in got.iter().enumerate() {
+                        assert!(v >= -1e-15, "N={n} {policy:?} row {k} entry {i}: {v}");
+                    }
+                }
+                // All-delivered rates: bit-identical to the pristine
+                // combiner (the no-impairment degenerate case).
+                let identity = adaptive_reweight(policy, &graph, &base, |_, _| 1.0);
+                assert_eq!(identity.vals(), base.vals(), "N={n} {rule:?} {policy:?}");
+            }
+            // Static is a plain copy whatever the rates say.
+            let st = adaptive_reweight(AdaptivePolicy::Static, &graph, &base, rate);
+            assert_eq!(st.vals(), base.vals(), "N={n} {rule:?} static");
+        }
     }
 }

@@ -232,6 +232,16 @@ fn perturbing_any_single_key_misses() {
         ("algorithm.mu", "0.02"),
         ("data.sigma_v2", "0.002"),
         ("impairments.drop_prob", "0.05"),
+        // The dynamic axes (DESIGN.md §12): a bursty link process and
+        // every `[dynamics]` knob must each perturb the key — a cached
+        // static result must never answer a dynamic request.
+        ("impairments.drop", "markov:0.1,0.3,0.4"),
+        ("dynamics.leave", "0.01"),
+        ("dynamics.join", "0.5"),
+        ("dynamics.require_connected", "true"),
+        ("dynamics.rewire_period", "70"),
+        ("dynamics.drift", "walk:0.001"),
+        ("dynamics.adaptive", "metropolis"),
     ] {
         let mut doc = IniDoc::parse(&sc.to_ini_string()).unwrap();
         Scenario::check_key(dotted).unwrap_or_else(|e| panic!("{dotted}: {e}"));

@@ -171,6 +171,92 @@ fn wsn_scenario_sharded_billed_bits_byte_identical() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The dynamic axes (DESIGN.md §12) through the sharded runner: every
+/// dynamic preset — bursty Markov links, churn + adaptive combiners,
+/// drifting optimum — produces a results CSV byte-identical to the
+/// serial run at shards × threads combinations. The axes draw from
+/// dedicated salted RNG streams per run, so the run split can never
+/// perturb them.
+#[test]
+fn dynamic_presets_sharded_csv_byte_identical_to_serial() {
+    let dir = std::env::temp_dir().join("dcd_shard_dynamics_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    for name in ["bursty-geometric", "churn-grid", "tracking-ring"] {
+        let base = [
+            "scenario", "run", "--name", name, "--runs", "4", "--iters", "600", "--quiet",
+        ];
+        let run_variant = |sub: &str, extra: &[&str]| -> String {
+            let out = dir.join(name).join(sub);
+            let out_s = out.to_str().unwrap().to_string();
+            let mut args: Vec<&str> = base.to_vec();
+            args.extend_from_slice(&["--out", &out_s]);
+            args.extend_from_slice(extra);
+            let (ok, text) = run(&args);
+            assert!(ok, "{name}/{sub}: {text}");
+            read(&out.join(format!("{name}.csv")))
+        };
+        let serial = run_variant("serial", &[]);
+        let s2 = run_variant("s2", &["--shards", "2"]);
+        let s4 = run_variant("s4", &["--shards", "4"]);
+        let s2t2 = run_variant("s2t2", &["--shards", "2", "--threads", "2"]);
+        let s4t4 = run_variant("s4t4", &["--shards", "4", "--threads", "4"]);
+        assert_eq!(serial, s2, "{name}: 2 shards diverged from serial");
+        assert_eq!(serial, s4, "{name}: 4 shards diverged from serial");
+        assert_eq!(serial, s2t2, "{name}: 2x2 diverged from serial");
+        assert_eq!(serial, s4t4, "{name}: 4x4 diverged from serial");
+    }
+    // The bursty preset's manifest carries the merged link-state
+    // occupancy counters (identical across layouts by integer merge).
+    let json = read(
+        &dir.join("bursty-geometric")
+            .join("s4")
+            .join("bursty-geometric.json"),
+    );
+    assert!(json.contains("\"linkstate\""), "manifest lost the occupancy block");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `drop = markov:p,1,1` redraws every sample and must be *byte*-
+/// identical to the historical `drop_prob = p` spec — serial and
+/// sharded alike (the acceptance criterion of DESIGN.md §12).
+#[test]
+fn memoryless_markov_csv_byte_identical_to_iid_prob() {
+    let dir = std::env::temp_dir().join("dcd_shard_markov_iid_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    let base = [
+        "scenario", "run", "--name", "lossy-geometric", "--runs", "4", "--iters", "600",
+        "--quiet",
+    ];
+    let run_variant = |sub: &str, extra: &[&str]| -> String {
+        let out = dir.join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--out", &out_s]);
+        args.extend_from_slice(extra);
+        let (ok, text) = run(&args);
+        assert!(ok, "{sub}: {text}");
+        read(&out.join("lossy-geometric.csv"))
+    };
+    // lossy-geometric ships drop_prob = 0.2; the markov spec overrides
+    // it with the memoryless chain at the same rate.
+    let iid = run_variant("iid", &[]);
+    let mk = run_variant("mk", &["--set", "impairments.drop=markov:0.2,1,1"]);
+    let mk_s2 = run_variant(
+        "mk_s2",
+        &["--set", "impairments.drop=markov:0.2,1,1", "--shards", "2"],
+    );
+    let mk_s4t2 = run_variant(
+        "mk_s4t2",
+        &[
+            "--set", "impairments.drop=markov:0.2,1,1", "--shards", "4", "--threads", "2",
+        ],
+    );
+    assert_eq!(iid, mk, "memoryless markov diverged from prob");
+    assert_eq!(iid, mk_s2, "sharded memoryless markov diverged from prob");
+    assert_eq!(iid, mk_s4t2, "4x2 memoryless markov diverged from prob");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// CLI error paths: `--shards 0` and negative values are rejected with
 /// a clear message on every front-end that accepts the flag.
 #[test]

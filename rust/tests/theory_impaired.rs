@@ -8,7 +8,7 @@
 //!    estimate within 1 dB — the impaired analogue of the paper's
 //!    Fig. 3 (left) model-accuracy claim.
 
-use dcd_lms::coordinator::impairments::{Gating, LinkImpairments};
+use dcd_lms::coordinator::impairments::{DropModel, Gating, LinkImpairments};
 use dcd_lms::linalg::Mat;
 use dcd_lms::rng::Pcg64;
 use dcd_lms::scenario::{find, run_scenario};
@@ -99,7 +99,7 @@ fn zero_impairment_matches_ideal_model() {
 #[test]
 fn lossy_geometric_prediction_within_one_db() {
     let mut sc = find("lossy-geometric").expect("registry has lossy-geometric");
-    assert_eq!(sc.impairments.drop_prob, 0.2, "preset changed under the test");
+    assert_eq!(sc.impairments.drop, DropModel::Iid(0.2), "preset changed under the test");
     // Shrunk schedule (physics untouched): more runs to tame MC noise,
     // a horizon that is still ≫ the convergence time constant.
     sc.runs = 16;
@@ -154,7 +154,7 @@ fn gated_lossy_geometric_prediction_tracks_simulation() {
 fn quantization_raises_the_predicted_floor() {
     let mut sc = find("lossy-geometric").unwrap();
     sc.impairments = LinkImpairments {
-        drop_prob: 0.0,
+        drop: DropModel::none(),
         gating: Gating::Always,
         quant_step: 2e-3,
     };

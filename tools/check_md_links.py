@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Markdown link check + DESIGN.md section-citation check.
 
-Standalone CI face of rust/tests/docs_integrity.rs — six rules:
+Standalone CI face of rust/tests/docs_integrity.rs — seven rules:
 
 1. Every relative link target in a *.md file must exist on disk.
 2. Every markdown link with a `#fragment` that points at a markdown
@@ -22,6 +22,11 @@ Standalone CI face of rust/tests/docs_integrity.rs — six rules:
    cache implementation (rust/src/serve/cache.rs) must cite it: the
    canonical-hash and cache-hit bit-identity argument documented there
    is what every replayed cached byte leans on.
+7. DESIGN.md must carry the §12 dynamic-networks chapter and the
+   impairment layer (rust/src/coordinator/impairments.rs) must cite
+   it: the Gilbert-Elliott semantics, the theory-suppression rationale
+   and the byte-identity contract documented there pin the dynamic
+   presets' numbers.
 
 The scan covers the repo root *and* docs/ recursively (everything but
 SKIP_DIRS). Exit status 0 = clean, 1 = at least one dangling reference
@@ -184,6 +189,24 @@ def check_serve_chapter(errors):
         errors.append("rust/src/serve/cache.rs does not cite DESIGN.md §11")
 
 
+def check_dynamics_chapter(errors):
+    """Rule 7: the §12 dynamics chapter and its in-code citation pair up."""
+    design = ROOT / "DESIGN.md"
+    if design.exists():
+        headings = [
+            line
+            for line in design.read_text(encoding="utf-8").splitlines()
+            if line.startswith("#") and "§12" in line
+        ]
+        if not headings:
+            errors.append("DESIGN.md: the §12 dynamic-networks chapter is missing")
+    imp = ROOT / "rust" / "src" / "coordinator" / "impairments.rs"
+    if not imp.exists():
+        errors.append("rust/src/coordinator/impairments.rs missing (the impairment layer)")
+    elif "DESIGN.md §12" not in imp.read_text(encoding="utf-8"):
+        errors.append("rust/src/coordinator/impairments.rs does not cite DESIGN.md §12")
+
+
 def main():
     errors = []
     # Guard: the walk must include docs/ (a SKIP_DIRS regression would
@@ -195,6 +218,7 @@ def main():
     check_handbook_cli_coverage(errors)
     check_ledger_chapter(errors)
     check_serve_chapter(errors)
+    check_dynamics_chapter(errors)
     if errors:
         print("documentation integrity check FAILED:")
         for e in errors:
