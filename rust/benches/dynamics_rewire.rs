@@ -40,6 +40,7 @@ fn main() {
         drop: DropModel::Markov { p_bad: 0.1, p_gb: 0.25, p_bg: 0.25 },
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
     let dyn_cfg = DynamicsConfig {
         leave: 0.002,

@@ -1,0 +1,87 @@
+//! Bench `frontier_sweep`: the Pareto-frontier driver (DESIGN.md §13).
+//!
+//! Two costs matter when mapping a comm-cost-vs-MSD frontier:
+//!
+//! * **pareto_prune** — the sort-sweep that flags dominated points.
+//!   O(n log n), so even a grid of 10⁵ policy points prunes in
+//!   milliseconds; timed on synthetic clouds to pin that trajectory.
+//! * **frontier_point** — one end-to-end grid-point evaluation (INI
+//!   override → validate → Monte-Carlo run → ledger summary) on a
+//!   shrunk `paper-10-node`. This is the unit the cartesian grid
+//!   multiplies, so its wall time bounds any frontier invocation.
+//!
+//! Emits `BENCH_frontier.json`; the CI `frontier-smoke` job runs the
+//! fast mode and gates on the file's presence.
+
+use dcd_lms::bench_support::{bench, fast_mode, write_bench_json, BenchRecord, Table};
+use dcd_lms::rng::Pcg64;
+use dcd_lms::scenario::{find, frontier_scenario, pareto_front, FrontierAxis};
+use std::time::Duration;
+
+fn main() {
+    let fast = fast_mode();
+    let budget = Duration::from_millis(if fast { 60 } else { 300 });
+
+    println!("== Pareto frontier: prune scaling + per-point cost ==\n");
+    let mut table = Table::new(&["operation", "points", "median", "ns/point"]);
+    let mut records = Vec::new();
+
+    // --- pareto_prune on synthetic point clouds ------------------------
+    for &n in &[1_000usize, 100_000] {
+        if fast && n > 1_000 {
+            continue;
+        }
+        let mut rng = Pcg64::new(42, 0);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.next_f64() * 1e6, -40.0 * rng.next_f64()))
+            .collect();
+        let stats = bench("pareto_prune", 3, budget, || {
+            std::hint::black_box(pareto_front(&pts));
+        });
+        table.row(&[
+            "pareto_prune (sort-sweep)".into(),
+            format!("{n}"),
+            format!("{:?}", stats.median),
+            format!("{:.1}", stats.per_unit(n) * 1e9),
+        ]);
+        records.push(BenchRecord::from_stats(&stats, "pareto_prune", &format!("n={n}")));
+    }
+
+    // --- one grid-point evaluation, end to end -------------------------
+    let mut sc = find("paper-10-node").expect("registry preset");
+    sc.runs = 2;
+    sc.iters = if fast { 200 } else { 1_000 };
+    sc.record_every = 1;
+    let axes = [FrontierAxis {
+        key: "impairments.gating".into(),
+        values: vec!["prob:0.5".into()],
+    }];
+    let stats = bench("frontier_point", 1, budget, || {
+        std::hint::black_box(frontier_scenario(&sc, &axes, None, true).unwrap());
+    });
+    table.row(&[
+        "frontier_point (paper-10-node, 1x1 grid)".into(),
+        "1".into(),
+        format!("{:?}", stats.median),
+        format!("{:.0}", stats.per_unit(1) * 1e9),
+    ]);
+    records.push(BenchRecord::from_stats(
+        &stats,
+        "frontier_point",
+        &format!("runs=2,iters={}", sc.iters),
+    ));
+
+    table.print();
+
+    match write_bench_json(
+        "BENCH_frontier.json",
+        "Pareto frontier driver: pareto_prune = O(n log n) sort-sweep \
+         domination flagging on synthetic (bits, msd_db) clouds; \
+         frontier_point = one policy grid point end to end (INI override + \
+         Monte-Carlo run) on a shrunk paper-10-node",
+        &records,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_frontier.json ({} records)", records.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_frontier.json: {e}"),
+    }
+}

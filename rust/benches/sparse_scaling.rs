@@ -94,6 +94,7 @@ fn main() {
         drop: DropModel::Iid(0.05),
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
 
     println!("== dense vs CSR scaling (grid lattices, drop_prob 0.05) ==\n");

@@ -304,12 +304,27 @@ pub struct LinkImpairments {
     pub gating: Gating,
     /// Uniform quantizer step Δ for the stored estimates (0 = off).
     pub quant_step: f64,
+    /// Per-leg erasures (DESIGN.md §13): when `false` (the historical
+    /// default, §7 assumption 6) the solicited-gradient exchange shares
+    /// one erasure event with the reply-direction estimate frame. When
+    /// `true`, every frame is its own event: the adapt exchange into
+    /// receiver `k` over link `l → k` survives only when the *request*
+    /// leg (`k`'s own estimate broadcast reaching `l`) and an
+    /// independent *reply*-frame draw on `l → k` both deliver. With a
+    /// zero drop rate no extra randomness is consumed, so an otherwise
+    /// ideal per-leg model stays byte-identical to the legacy path.
+    pub per_leg: bool,
 }
 
 impl LinkImpairments {
     /// Ideal links: nothing dropped, nobody gated, full precision.
     pub fn ideal() -> Self {
-        Self { drop: DropModel::none(), gating: Gating::Always, quant_step: 0.0 }
+        Self {
+            drop: DropModel::none(),
+            gating: Gating::Always,
+            quant_step: 0.0,
+            per_leg: false,
+        }
     }
 
     /// The historical i.i.d.-erasure constructor.
@@ -318,7 +333,10 @@ impl LinkImpairments {
     }
 
     /// True when the model is a no-op (the coordinator then takes the
-    /// exact legacy code path).
+    /// exact legacy code path). `per_leg` is deliberately ignored: with
+    /// nothing to drop, per-leg and shared-leg erasures are the same
+    /// (empty) event set, so an otherwise ideal per-leg spec rides the
+    /// ideal fast path byte-for-byte (DESIGN.md §13).
     pub fn is_ideal(&self) -> bool {
         self.drop.drops_nothing() && self.gating == Gating::Always && self.quant_step == 0.0
     }
@@ -342,10 +360,15 @@ impl LinkImpairments {
     /// P that the *adapt* (solicited-gradient) exchange on a directed
     /// link survives: the transmitter is on the air, the frame is
     /// delivered, *and* the receiver solicited it by broadcasting its
-    /// own estimate — `p_tx² · (1 − p_drop)` (DESIGN.md §7). `None`
-    /// under event-triggered gating.
+    /// own estimate — `p_tx² · (1 − p_drop)` under the shared-leg model
+    /// (DESIGN.md §7), `p_tx² · (1 − p_drop)²` under per-leg erasures
+    /// (request and reply frames drawn independently, DESIGN.md §13).
+    /// `None` under event-triggered gating.
     pub fn adapt_keep_prob(&self) -> Option<f64> {
-        self.gating.transmit_prob().map(|p| p * p * (1.0 - self.drop.mean_drop()))
+        self.gating.transmit_prob().map(|p| {
+            let keep = 1.0 - self.drop.mean_drop();
+            p * p * if self.per_leg { keep * keep } else { keep }
+        })
     }
 
     /// Expected effective combiners `(Ā, C̄) = (E{A(i)}, E{C(i)})` under
@@ -980,13 +1003,56 @@ impl ImpairmentState {
                         }
                     }
                 }
-                if !delivered || self.silent[k] {
+                if !imp.per_leg && (!delivered || self.silent[k]) {
                     if let Some(idx) = net.c.entry_idx(k, lnb) {
                         let cm = net.c.vals()[idx];
                         if cm != 0.0 {
                             let vals = net.c.vals_mut();
                             vals[idx] = 0.0;
                             vals[c_diag] += cm;
+                        }
+                    }
+                }
+            }
+        }
+
+        // 2b. Per-leg reply events (DESIGN.md §13). With the request
+        // outcomes of every directed link on the table, a second pass
+        // draws one *independent* reply-frame event per edge and
+        // rebuilds the C erasures from the full exchange: receiver k's
+        // adapt contribution from lnb survives only when k was on the
+        // air, k's request broadcast reached lnb (the reverse-direction
+        // table entry — exactly what the ledger's rule-3 suppression
+        // reads), and lnb's reply frame itself delivered. The edge
+        // order — hence the C diagonal's float accumulation order —
+        // matches the shared-leg branch above, and a zero drop rate
+        // short-circuits every draw, so an otherwise-lossless per-leg
+        // spec is byte-identical to the legacy path.
+        if imp.per_leg {
+            for k in 0..n {
+                let c_diag = net.c.diag_idx(k);
+                for (slot, &lnb) in net.graph.neighbors(k).iter().enumerate() {
+                    let usable = match ds {
+                        Some(d) => d.edge_alive(k, slot, lnb),
+                        None => true,
+                    } && !self.silent[lnb];
+                    let reply = usable
+                        && match drop_iid {
+                            Some(p) => !(p > 0.0 && self.rng.next_bool(p)),
+                            None => {
+                                let sidx = self.row_off[k] + slot;
+                                self.markov_sample(sidx, mk_pb, mk_pgb, mk_pbg)
+                            }
+                        };
+                    let request = self.delivered.delivered(k, lnb);
+                    if !reply || !request || self.silent[k] {
+                        if let Some(idx) = net.c.entry_idx(k, lnb) {
+                            let cm = net.c.vals()[idx];
+                            if cm != 0.0 {
+                                let vals = net.c.vals_mut();
+                                vals[idx] = 0.0;
+                                vals[c_diag] += cm;
+                            }
                         }
                     }
                 }
@@ -1081,6 +1147,7 @@ mod tests {
             drop: DropModel::Iid(1.0),
             gating: Gating::Always,
             quant_step: 0.0,
+            per_leg: false,
         };
         let mut state = ImpairmentState::new(alg.network(), 7, 1);
         state.begin_iteration(&imp, &mut alg, &mut comm);
@@ -1110,6 +1177,7 @@ mod tests {
             drop: DropModel::none(),
             gating: Gating::Probabilistic(0.0),
             quant_step: 0.0,
+            per_leg: false,
         };
         let mut state = ImpairmentState::new(alg.network(), 3, 1);
         state.begin_iteration(&all_off, &mut alg, &mut comm);
@@ -1118,6 +1186,7 @@ mod tests {
             drop: DropModel::none(),
             gating: Gating::Probabilistic(1.0),
             quant_step: 0.0,
+            per_leg: false,
         };
         state.begin_iteration(&all_on, &mut alg, &mut comm);
         assert!(state.silent().iter().all(|&s| !s));
@@ -1135,6 +1204,7 @@ mod tests {
             drop: DropModel::Iid(0.25),
             gating: Gating::Probabilistic(0.8),
             quant_step: 0.0,
+            per_leg: false,
         };
         let (a_bar, c_bar) = imp.expected_combiners(&cfg).unwrap();
         let mut state = ImpairmentState::new(alg.network(), 13, 1);
@@ -1157,6 +1227,7 @@ mod tests {
             drop: DropModel::Iid(0.1),
             gating: Gating::EventTriggered(1e-6),
             quant_step: 0.0,
+            per_leg: false,
         };
         assert!(ev.expected_combiners(&cfg).is_none());
         assert_eq!(ev.gating.transmit_prob(), None);
@@ -1172,6 +1243,7 @@ mod tests {
             drop: DropModel::Iid(0.2),
             gating: Gating::Probabilistic(0.5),
             quant_step: 0.0,
+            per_leg: false,
         };
         assert!((imp.combine_keep_prob().unwrap() - 0.5 * 0.8).abs() < 1e-15);
         assert!((imp.adapt_keep_prob().unwrap() - 0.25 * 0.8).abs() < 1e-15);
@@ -1192,6 +1264,7 @@ mod tests {
             drop: DropModel::Iid(1.0),
             gating: Gating::Always,
             quant_step: 0.0,
+            per_leg: false,
         };
         let mut state = ImpairmentState::new(alg.network(), 11, 1);
         state.begin_iteration(&all_dropped, &mut alg, &mut comm);
@@ -1222,6 +1295,7 @@ mod tests {
             drop: DropModel::none(),
             gating: Gating::EventTriggered(1e-9),
             quant_step: 0.0,
+            per_leg: false,
         };
         let mut state = ImpairmentState::new(alg.network(), 5, 1);
         // Fresh algorithm: w == w̃ == 0, nobody has news to share.

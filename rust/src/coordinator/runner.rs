@@ -578,6 +578,7 @@ mod tests {
             drop: crate::coordinator::impairments::DropModel::Iid(0.3),
             gating: Gating::Probabilistic(0.8),
             quant_step: 1e-4,
+            per_leg: false,
         };
         let base = MonteCarlo { runs: 6, iters: 200, seed: 23, record_every: 1, threads: 1 };
         let serial =

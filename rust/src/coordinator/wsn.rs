@@ -27,6 +27,14 @@
 //!   leg was erased are never transmitted or billed.
 //! * **Quantization** — the updated state is snapped to the Δ grid and
 //!   payloads are billed at the grid-index width.
+//! * **Radio energy** — with a non-zero [`RadioEnergy`], every
+//!   transmitting activation debits the *activating* node's capacitor
+//!   with the exchange's radio joules on top of `e_a`: its own frames
+//!   at the tx rate plus the frames its neighbours send it at the rx
+//!   rate (neighbours are wake-on-radio responders; DESIGN.md §13).
+//!   The billed bits come from integer ledger snapshots around the
+//!   exchange, so the debit consumes no randomness, and the zero-cost
+//!   default adds a literal `+ 0.0` — the exact legacy trajectory.
 //!
 //! All impairment decisions draw from a dedicated PCG64 stream
 //! (`seed ^ LINK_SEED_SALT`), so the ideal configuration replays the
@@ -46,7 +54,9 @@
 
 use crate::algorithms::NetworkConfig;
 use crate::datamodel::DataModel;
-use crate::energy::{ActiveEnergy, CommLedger, CommMeter, EnergyParams, NodeEnergy, Purpose};
+use crate::energy::{
+    ActiveEnergy, CommLedger, CommMeter, EnergyParams, NodeEnergy, Purpose, RadioEnergy,
+};
 use crate::rng::Pcg64;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -116,6 +126,10 @@ pub struct WsnConfig {
     /// Link-impairment layer wrapped around every activation
     /// ([`LinkImpairments::ideal`] = the exact legacy path).
     pub impairments: LinkImpairments,
+    /// Per-bit radio costs debited from the activating node's charge
+    /// alongside `e_a` ([`RadioEnergy::zero`] = no debit and no ledger
+    /// snapshots — the exact legacy path; DESIGN.md §13).
+    pub radio: RadioEnergy,
 }
 
 /// Time series produced by the simulation.
@@ -143,6 +157,14 @@ pub struct WsnResult {
     pub per_node_activations: Vec<u64>,
     /// The run's directional communication bill (DESIGN.md §9).
     pub ledger: CommLedger,
+    /// Per-node radio energy debited over the run (J; length N, all
+    /// zero for the zero-cost radio). The whole exchange is debited
+    /// from the *activating* node (DESIGN.md §13): node k's total is
+    /// `tx_j_per_bit · (bits k transmitted during its own activations)
+    /// + rx_j_per_bit · (bits its neighbours sent it during those
+    /// activations)`, recomputed at the end from integer bit counters
+    /// so it cross-foots exactly with the ledger's bill.
+    pub radio_joules: Vec<f64>,
 }
 
 /// Reusable per-run buffers of the event loop (no allocation per
@@ -247,6 +269,13 @@ impl WsnSimulation {
         let mut skipped = 0u64;
         let mut gated = 0u64;
         let mut per_node_activations = vec![0u64; n];
+        // Integer scalar counters behind the radio bill: what node k
+        // transmitted / received during its *own* activations
+        // (activator-pays attribution; DESIGN.md §13).
+        let radio = self.cfg.radio;
+        let radio_on = !radio.is_zero();
+        let mut tx_scal = vec![0u64; n];
+        let mut rx_scal = vec![0u64; n];
 
         while let Some(Reverse((tk, k))) = queue.pop() {
             let now = key_time(tk);
@@ -285,6 +314,7 @@ impl WsnSimulation {
                         moved <= delta
                     }
                 };
+                let mut radio_cost = 0.0;
                 if silent {
                     gated += 1;
                     self.local_update(k, &mut w, &mut rng, &mut sb);
@@ -295,12 +325,29 @@ impl WsnSimulation {
                         last_broadcast[k * l..(k + 1) * l]
                             .copy_from_slice(&w[k * l..(k + 1) * l]);
                     }
+                    // Snapshot the integer ledger around the exchange:
+                    // the delta billed to k is what it transmitted, the
+                    // rest of the delta is what its neighbours sent it
+                    // (solicited replies / polled estimates).
+                    let (tx0, all0) = {
+                        let led = comm.ledger();
+                        (led.per_node[k], led.scalars)
+                    };
                     self.update_node(k, &mut w, &mut rng, &mut imp_rng, &mut comm, &mut sb);
+                    if radio_on {
+                        let led = comm.ledger();
+                        let width = led.bits_per_scalar as u64;
+                        let dt = led.per_node[k] - tx0;
+                        let dr = led.scalars - all0 - dt;
+                        tx_scal[k] += dt;
+                        rx_scal[k] += dr;
+                        radio_cost = radio.cost(dt * width, dr * width);
+                    }
                 }
                 if imp.quant_step > 0.0 {
                     quantize_in_place(&mut w[k * l..(k + 1) * l], imp.quant_step);
                 }
-                self.cfg.algo.active_energy()
+                self.cfg.algo.active_energy() + radio_cost
             } else {
                 skipped += 1;
                 0.0
@@ -325,6 +372,16 @@ impl WsnSimulation {
             next_sample += self.cfg.sample_dt;
         }
 
+        let ledger = comm.into_ledger();
+        // Recompute each node's radio total from the integer bit
+        // counters (not by summing the per-activation float debits): a
+        // plain product identity that cross-foots exactly with the
+        // ledger's billed bits (DESIGN.md §13; tested).
+        let width = ledger.bits_per_scalar as u64;
+        let radio_joules = (0..n)
+            .map(|k| radio.cost(tx_scal[k] * width, rx_scal[k] * width))
+            .collect();
+
         WsnResult {
             time,
             msd,
@@ -334,7 +391,8 @@ impl WsnSimulation {
             skipped,
             gated,
             per_node_activations,
-            ledger: comm.into_ledger(),
+            ledger,
+            radio_joules,
         }
     }
 
@@ -715,6 +773,7 @@ mod tests {
             duration,
             sample_dt: duration / 50.0,
             impairments: LinkImpairments::ideal(),
+            radio: RadioEnergy::zero(),
         };
         (cfg, model)
     }
@@ -810,6 +869,7 @@ mod tests {
             drop: DropModel::none(),
             gating: Gating::EventTriggered(1e-2),
             quant_step: 0.0,
+            per_leg: false,
         };
         let gated = WsnSimulation::new(cfg.clone(), model.clone()).run(9);
         assert!(gated.gated > 0, "the event gate never closed");
@@ -837,6 +897,7 @@ mod tests {
             drop: DropModel::Iid(0.5),
             gating: Gating::Always,
             quant_step: 0.0,
+            per_leg: false,
         };
         let lossy = WsnSimulation::new(cfg, model).run(5);
         // Same activation schedule (impairments ride a salted stream).
@@ -874,6 +935,114 @@ mod tests {
         assert_eq!(iid.activations, bursty.activations);
     }
 
+    /// Activator-pays radio debit (DESIGN.md §13) with dyadic per-bit
+    /// rates: every product and sum below is an exact f64, so the
+    /// per-node radio bill cross-foots *exactly* with the ledger.
+    /// DCD's activator transmits every Estimate scalar and receives
+    /// every delivered Gradient scalar — on ideal and on lossy links
+    /// (a suppressed reply costs nobody anything).
+    #[test]
+    fn radio_bill_cross_foots_exactly_with_the_ledger() {
+        let tx = (2f64).powi(-20);
+        let rx = (2f64).powi(-22);
+        for drop in [DropModel::none(), DropModel::Iid(0.4)] {
+            let (mut cfg, model) =
+                small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: false }, 2000.0);
+            cfg.radio = RadioEnergy { tx_j_per_bit: tx, rx_j_per_bit: rx };
+            cfg.impairments.drop = drop;
+            let res = WsnSimulation::new(cfg, model).run(13);
+            let w = res.ledger.bits_per_scalar as u64;
+            let est_bits = res.ledger.purpose_scalars(Purpose::Estimate) * w;
+            let grad_bits = res.ledger.purpose_scalars(Purpose::Gradient) * w;
+            let total: f64 = res.radio_joules.iter().sum();
+            assert!(total > 0.0);
+            assert_eq!(total, tx * est_bits as f64 + rx * grad_bits as f64);
+            if drop == DropModel::none() {
+                // Ideal ring(8, 2), M = M∇ = 2: each activation moves
+                // deg·M = 8 estimate scalars out and 8 gradient scalars
+                // back, all billed — a per-node closed form.
+                for k in 0..8 {
+                    let bits = res.per_node_activations[k] * 8 * w;
+                    assert_eq!(res.radio_joules[k], tx * bits as f64 + rx * bits as f64);
+                }
+            }
+        }
+    }
+
+    /// RCD inverts the traffic direction: the activator polls and its
+    /// neighbours transmit, so under activator-pays every billed bit is
+    /// charged at the *rx* rate and a tx-only radio debits nothing.
+    #[test]
+    fn rcd_radio_bill_is_receive_only() {
+        let (mut cfg, model) = small_cfg(WsnAlgo::Rcd { m_links: 2 }, 2000.0);
+        cfg.radio = RadioEnergy { tx_j_per_bit: (2f64).powi(-18), rx_j_per_bit: 0.0 };
+        let tx_only = WsnSimulation::new(cfg, model).run(21);
+        assert!(tx_only.ledger.scalars > 0);
+        assert_eq!(tx_only.radio_joules, vec![0.0; 8]);
+
+        let rx = (2f64).powi(-21);
+        let (mut cfg, model) = small_cfg(WsnAlgo::Rcd { m_links: 2 }, 2000.0);
+        cfg.radio = RadioEnergy { tx_j_per_bit: 0.0, rx_j_per_bit: rx };
+        let rx_only = WsnSimulation::new(cfg, model).run(21);
+        let bits = rx_only.ledger.bits();
+        let total: f64 = rx_only.radio_joules.iter().sum();
+        assert_eq!(total, rx * bits as f64);
+    }
+
+    /// The zero-cost radio is the exact legacy path: `e_a + 0.0`
+    /// preserves the bits of every positive debit and no extra RNG is
+    /// consumed, so the trajectory, schedule and bill are unchanged.
+    #[test]
+    fn zero_radio_is_bitwise_legacy() {
+        let (cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: true }, 2000.0);
+        let base = WsnSimulation::new(cfg.clone(), model.clone()).run(7);
+        let mut cfg2 = cfg;
+        cfg2.radio = RadioEnergy::zero();
+        let again = WsnSimulation::new(cfg2, model).run(7);
+        assert_eq!(base.msd, again.msd);
+        assert_eq!(base.activations, again.activations);
+        assert_eq!(base.ledger, again.ledger);
+        assert_eq!(again.radio_joules, vec![0.0; 8]);
+    }
+
+    /// ENO closed form (eq. (70)): the sleep fixed point scales
+    /// linearly in the per-activation energy, so pricing DCD's radio
+    /// exchange at the Table-I gap (8.58e-2 − 5.4e-3 = 8.04e-2 J over
+    /// the 512 + 512 bits of a ring(8,2) M = M∇ = 2 exchange) makes a
+    /// radio-loaded DCD activation cost exactly what a diffusion
+    /// activation costs — its activation rate must collapse from the
+    /// free-radio rate down to diffusion's.
+    #[test]
+    fn radio_draw_lowers_activation_rate_to_the_eno_prediction() {
+        let (cfg_free, model_free) =
+            small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: false }, 4000.0);
+        let free = WsnSimulation::new(cfg_free, model_free).run(11);
+
+        let rate = (ActiveEnergy::DIFFUSION.0 - ActiveEnergy::DCD.0) / 1024.0;
+        let (mut cfg, model) = small_cfg(WsnAlgo::Dcd { m: 2, m_grad: 2, combine: false }, 4000.0);
+        cfg.radio = RadioEnergy { tx_j_per_bit: rate, rx_j_per_bit: rate };
+        let loaded = WsnSimulation::new(cfg, model).run(11);
+
+        let (cfg_d, model_d) = small_cfg(WsnAlgo::Diffusion, 4000.0);
+        let diffusion = WsnSimulation::new(cfg_d, model_d).run(11);
+
+        assert!(
+            (loaded.activations as f64) < 0.8 * free.activations as f64,
+            "radio load {} not well below free {}",
+            loaded.activations,
+            free.activations
+        );
+        // Same per-activation energy as diffusion ⇒ same ENO schedule
+        // up to sampling noise (different RNG consumption patterns).
+        let ratio = loaded.activations as f64 / diffusion.activations as f64;
+        assert!(
+            (0.75..=1.25).contains(&ratio),
+            "radio-loaded DCD {} vs diffusion {} (ratio {ratio:.3})",
+            loaded.activations,
+            diffusion.activations
+        );
+    }
+
     /// Quantization snaps the stored state to the grid and bills
     /// payloads at the grid-index width.
     #[test]
@@ -884,6 +1053,7 @@ mod tests {
             drop: DropModel::none(),
             gating: Gating::Always,
             quant_step: step,
+            per_leg: false,
         };
         let sim = WsnSimulation::new(cfg, model);
         let res = sim.run(3);

@@ -20,8 +20,10 @@
 use crate::rng::Pcg64;
 
 pub mod comm;
+pub mod radio;
 
 pub use comm::{payload_bits, CommLedger, CommMeter, Purpose, FULL_PRECISION_BITS, N_PURPOSES};
+pub use radio::RadioEnergy;
 
 /// Table I constants plus the harvest-law parameters.
 #[derive(Debug, Clone)]

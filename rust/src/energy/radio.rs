@@ -1,0 +1,108 @@
+//! Radio-energy model (DESIGN.md §13): per-bit transmit/receive joule
+//! costs that turn the directional ledger's billed bits into a debit on
+//! the WSN charge state.
+//!
+//! The Table I active energies e_a are per-activation constants, so the
+//! billed bits of §9 never fed back into the ENO sleep law — gating and
+//! quantization savings showed up in the bill, not in the battery. With
+//! a radio model attached to a scenario, every activation of node k
+//! additionally debits
+//!
+//! ```text
+//!   E_radio(k) = tx_j_per_bit · bits transmitted by k
+//!              + rx_j_per_bit · bits addressed to k
+//! ```
+//!
+//! where both bit counts are exactly the ledger's billed bits for that
+//! activation (billing rules 1–3 of §9 apply unchanged: gated nodes
+//! transmit nothing, erased broadcasts still cost their transmitter,
+//! suppressed replies cost nobody). The debit rides on `e_a` into
+//! [`NodeEnergy::cycle`](crate::energy::NodeEnergy::cycle), so the ENO
+//! sleep-duration law (70) sees it as consumed active energy and the
+//! activation rate responds — closing the bits → joules → activation
+//! loop.
+//!
+//! Attribution: the whole exchange is debited from the *activating*
+//! node — its own transmissions at the tx rate, the frames its
+//! neighbours send it at the rx rate. Neighbour radios are modelled as
+//! negligible-cost wake-on-radio receivers (DESIGN.md §13 discusses the
+//! simplification). The zero-cost default draws no randomness and skips
+//! the ledger snapshot entirely, so a scenario without a radio model is
+//! byte-identical to the pre-radio engine.
+
+/// Per-bit radio costs of one scenario (`[energy]` INI section).
+///
+/// The default is the zero-cost radio: both rates 0 J/bit, under which
+/// the WSN engine takes the exact legacy code path.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RadioEnergy {
+    /// Joules per transmitted payload bit (`energy.tx_j_per_bit`).
+    pub tx_j_per_bit: f64,
+    /// Joules per received payload bit (`energy.rx_j_per_bit`).
+    pub rx_j_per_bit: f64,
+}
+
+impl RadioEnergy {
+    /// The zero-cost radio (same as `Default`): no debit, legacy path.
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    /// Whether this is the zero-cost radio — the gate for the WSN
+    /// engine's legacy fast path (no ledger snapshots, no debit).
+    pub fn is_zero(&self) -> bool {
+        self.tx_j_per_bit == 0.0 && self.rx_j_per_bit == 0.0
+    }
+
+    /// Joules for an exchange of `tx_bits` transmitted and `rx_bits`
+    /// received payload bits.
+    pub fn cost(&self, tx_bits: u64, rx_bits: u64) -> f64 {
+        tx_bits as f64 * self.tx_j_per_bit + rx_bits as f64 * self.rx_j_per_bit
+    }
+
+    /// Scenario-spec validation: both rates must be finite and
+    /// non-negative.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("energy.tx_j_per_bit", self.tx_j_per_bit),
+            ("energy.rx_j_per_bit", self.rx_j_per_bit),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{name} must be finite and >= 0, got {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_radio_is_default_and_costs_nothing() {
+        let r = RadioEnergy::default();
+        assert!(r.is_zero());
+        assert_eq!(r, RadioEnergy::zero());
+        assert_eq!(r.cost(1_000_000, 1_000_000), 0.0);
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn cost_is_linear_in_bits() {
+        let r = RadioEnergy { tx_j_per_bit: 2e-9, rx_j_per_bit: 1e-9 };
+        assert!(!r.is_zero());
+        assert!((r.cost(100, 200) - (100.0 * 2e-9 + 200.0 * 1e-9)).abs() < 1e-18);
+        assert_eq!(r.cost(0, 0), 0.0);
+    }
+
+    #[test]
+    fn validation_rejects_negative_and_non_finite_rates() {
+        let bad = RadioEnergy { tx_j_per_bit: -1e-9, rx_j_per_bit: 0.0 };
+        assert!(bad.validate().unwrap_err().contains("tx_j_per_bit"));
+        let nan = RadioEnergy { tx_j_per_bit: 0.0, rx_j_per_bit: f64::NAN };
+        assert!(nan.validate().unwrap_err().contains("rx_j_per_bit"));
+        let inf = RadioEnergy { tx_j_per_bit: f64::INFINITY, rx_j_per_bit: 0.0 };
+        assert!(inf.validate().is_err());
+    }
+}

@@ -16,7 +16,7 @@ use crate::coordinator::impairments::LinkImpairments;
 use crate::coordinator::runner::{parallel_ordered, resolve_threads};
 use crate::coordinator::wsn::{WsnAlgo, WsnConfig, WsnResult, WsnSimulation};
 use crate::datamodel::DataModel;
-use crate::energy::CommLedger;
+use crate::energy::{CommLedger, RadioEnergy};
 use crate::metrics::{to_db, write_csv, write_json, Series, TraceAccumulator};
 use crate::rng::Pcg64;
 use crate::topology::{combination_matrix, Combiner, Graph, Rule};
@@ -161,9 +161,11 @@ impl Exp3Parts {
             harvest_scale: self.harvest_scale.clone(),
             duration: cfg.duration,
             sample_dt: cfg.sample_dt,
-            // exp3 reproduces the paper's setting: ideal links (the
-            // impaired WSN regimes live in the scenario subsystem).
+            // exp3 reproduces the paper's setting: ideal links and a
+            // free radio (the impaired / radio-priced WSN regimes live
+            // in the scenario subsystem).
             impairments: LinkImpairments::ideal(),
+            radio: RadioEnergy::zero(),
         };
         WsnSimulation::new(wsn_cfg, self.model.clone())
     }

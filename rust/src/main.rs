@@ -8,6 +8,7 @@
 //! dcd-lms scenario list                     # built-in scenario registry
 //! dcd-lms scenario run --name NAME [...]    # one declarative scenario
 //! dcd-lms scenario sweep --name NAME --key K --values V1,V2,...
+//! dcd-lms frontier --name NAME [--axis k=v1,v2]...  # comm-cost-vs-MSD Pareto frontier
 //! dcd-lms theory  --m M --m-grad MG [--drop-prob P] [...]  # stability + steady state
 //! dcd-lms serve [--listen HOST:PORT] [--cache DIR]  # resident daemon + result cache
 //! dcd-lms scenario run --name NAME --via HOST:PORT  # submit to a resident daemon
@@ -110,6 +111,23 @@ fn build_app() -> App {
                 .opt("key", "sweep: dotted scenario key, e.g. impairments.drop_prob")
                 .opt("values", "sweep: comma-separated values for --key")
                 .opt("via", "run: submit to a resident serve daemon at HOST:PORT"),
+            ),
+            common(
+                Command::new(
+                    "frontier",
+                    "map the comm-cost-vs-MSD Pareto frontier of one scenario (DESIGN.md §13)",
+                )
+                .opt("name", "base scenario from the registry (see `scenario list`)")
+                .opt("seed", "override the scenario seed")
+                .opt("runs", "override Monte-Carlo runs per grid point")
+                .opt("iters", "override iterations per run")
+                .opt("threads", "worker threads (0 = auto)")
+                .opt("shards", "worker processes (default 1; bit-identical results)")
+                .opt_repeated(
+                    "axis",
+                    "swept policy axis dotted.key=v1,v2,... (repeatable; \
+                     default: gating x quantization [x DCD m])",
+                ),
             ),
             Command::new(
                 "serve",
@@ -289,6 +307,7 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             Ok(())
         }
         "scenario" => cmd_scenario(args),
+        "frontier" => cmd_frontier(args),
         "serve" => cmd_serve(args),
         "shard-worker" => dcd_lms::shard::worker_main().map_err(|e| anyhow!(e)),
         "theory" => cmd_theory(args),
@@ -411,6 +430,24 @@ fn cmd_scenario(args: &ParsedArgs) -> Result<()> {
     }
 }
 
+/// `dcd-lms frontier`: sweep the policy grid of one scenario and write
+/// the dominated-point-pruned Pareto table (DESIGN.md §13).
+fn cmd_frontier(args: &ParsedArgs) -> Result<()> {
+    let sc = resolve_scenario(args)?;
+    let axis_specs = args.get_all("axis");
+    let axes: Vec<dcd_lms::scenario::FrontierAxis> = if axis_specs.is_empty() {
+        dcd_lms::scenario::default_axes(&sc)
+    } else {
+        axis_specs
+            .iter()
+            .map(|s| dcd_lms::scenario::FrontierAxis::parse(s).map_err(anyhow::Error::msg))
+            .collect::<Result<Vec<_>>>()?
+    };
+    dcd_lms::scenario::frontier_scenario(&sc, &axes, Some(&out_dir(args)), args.flag("quiet"))
+        .map_err(anyhow::Error::msg)?;
+    Ok(())
+}
+
 /// `dcd-lms serve`: run a resident daemon (stdio or TCP), or stop one.
 fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     if let Some(addr) = args.get("stop") {
@@ -482,6 +519,7 @@ fn cmd_theory(args: &ParsedArgs) -> Result<()> {
                 None => Gating::Always,
             },
             quant_step,
+            per_leg: false,
         };
         let impaired = ImpairedMsdModel::new(setup, &imp).map_err(anyhow::Error::msg)?;
         println!(

@@ -4,6 +4,7 @@
 
 use crate::coordinator::impairments::{AdaptivePolicy, DropModel, Gating, LinkImpairments};
 use crate::datamodel::DriftModel;
+use crate::energy::RadioEnergy;
 use crate::topology::Rule;
 
 use super::spec::{AlgorithmSpec, DynamicsSpec, Scenario, ScheduleMode, TopologySpec};
@@ -15,6 +16,8 @@ pub fn builtins() -> Vec<Scenario> {
         fifty_node_sweep(),
         wsn_80(),
         lossy_geometric(),
+        per_leg_lossy(),
+        priced_wsn(),
         event_triggered_ring(),
         quantized_dense(),
         mega_grid(),
@@ -98,6 +101,7 @@ fn wsn_80() -> Scenario {
         drop: DropModel::Iid(0.05),
         gating: Gating::EventTriggered(1e-4),
         quant_step: 0.0,
+        per_leg: false,
     };
     sc.runs = 4;
     sc.iters = 6_000; // unused under mode = wsn (virtual time rules)
@@ -130,10 +134,54 @@ fn lossy_geometric() -> Scenario {
         drop: DropModel::Iid(0.2),
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
     sc.runs = 10;
     sc.iters = 3_000;
     sc.seed = 11;
+    sc
+}
+
+/// `lossy-geometric` with the shared request/reply erasure split into
+/// independent per-leg events (DESIGN.md §13): the request and the
+/// solicited reply each face their own Bernoulli draw, so a combination
+/// entry survives with probability (1−p)² instead of (1−p) — §7
+/// assumption 6 made physical. Still theory-anchored: the impaired
+/// model squares the keep probability along with the scheduler.
+fn per_leg_lossy() -> Scenario {
+    let mut sc = lossy_geometric();
+    sc.name = "per-leg-lossy".into();
+    sc.description = "lossy-geometric with independent request/reply erasure legs \
+                      (keep prob squared, theory-anchored)"
+        .into();
+    sc.impairments.per_leg = true;
+    sc
+}
+
+/// A small energy-harvesting WSN whose radio is **priced** (DESIGN.md
+/// §13): every billed bit debits the activating node's charge at
+/// datasheet-scale per-bit costs, so compression policies feed back
+/// into the ENO duty cycle — the base preset of the `frontier` driver
+/// and the CI `frontier-smoke` job.
+fn priced_wsn() -> Scenario {
+    let mut sc = Scenario::base(
+        "priced-wsn",
+        "16-node harvesting WSN with a priced radio (50/20 nJ per bit), DCD at ratio 5.3",
+    );
+    sc.topology = TopologySpec::Ring { n: 16, hops: 2 };
+    sc.combine_rule = Rule::Metropolis;
+    sc.adapt_rule = Rule::Metropolis;
+    sc.dim = 8;
+    sc.u2_min = 0.8;
+    sc.u2_max = 1.2;
+    sc.sigma_v2 = 1e-3;
+    sc.algorithm = AlgorithmSpec::Dcd { m: 2, m_grad: 1 };
+    sc.mu = 1e-2;
+    sc.radio = RadioEnergy { tx_j_per_bit: 5e-8, rx_j_per_bit: 2e-8 };
+    sc.runs = 4;
+    sc.iters = 6_000; // unused under mode = wsn (virtual time rules)
+    sc.seed = 2020;
+    sc.mode = ScheduleMode::Wsn { duration: 40_000.0, sample_dt: 1_000.0 };
     sc
 }
 
@@ -153,6 +201,7 @@ fn event_triggered_ring() -> Scenario {
         drop: DropModel::none(),
         gating: Gating::EventTriggered(1e-6),
         quant_step: 0.0,
+        per_leg: false,
     };
     sc.runs = 10;
     sc.iters = 3_000;
@@ -175,6 +224,7 @@ fn quantized_dense() -> Scenario {
         drop: DropModel::none(),
         gating: Gating::Always,
         quant_step: 1e-3,
+        per_leg: false,
     };
     sc.runs = 10;
     sc.iters = 3_000;
@@ -208,6 +258,7 @@ fn mega_grid() -> Scenario {
         drop: DropModel::Iid(0.05),
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
     sc.runs = 2;
     sc.iters = 100;
@@ -238,6 +289,7 @@ fn bursty_geometric() -> Scenario {
         drop: DropModel::Markov { p_bad: 0.2, p_gb: 0.25, p_bg: 0.25 },
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
     sc.runs = 10;
     sc.iters = 3_000;
@@ -264,6 +316,7 @@ fn churn_grid() -> Scenario {
         drop: DropModel::Iid(0.1),
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
     sc.dynamics = DynamicsSpec {
         leave: 0.002,
@@ -357,6 +410,18 @@ mod tests {
         let tracking = find("tracking-ring").unwrap();
         assert!(matches!(tracking.dynamics.drift, DriftModel::Walk { sigma } if sigma > 0.0));
         assert!(tracking.dynamics.network_static() && !tracking.dynamics.is_static());
+    }
+
+    #[test]
+    fn energy_loop_presets_state_their_axes() {
+        // Validated cross-checks (DESIGN.md §13): per-leg erasures need
+        // the round scheduler, a priced radio needs the WSN charge state.
+        let pl = find("per-leg-lossy").unwrap();
+        assert!(pl.impairments.per_leg);
+        assert!(matches!(pl.mode, ScheduleMode::Rounds));
+        let pw = find("priced-wsn").unwrap();
+        assert!(!pw.radio.is_zero());
+        assert!(matches!(pw.mode, ScheduleMode::Wsn { .. }));
     }
 
     #[test]

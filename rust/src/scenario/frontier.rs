@@ -1,0 +1,415 @@
+//! The comm-cost-vs-MSD Pareto frontier driver (DESIGN.md §13).
+//!
+//! The paper's whole argument is a trade-off: every compression policy
+//! (partial-update masks, event gating, quantization) buys transmitted
+//! bits with steady-state MSD. [`frontier_scenario`] maps that
+//! trade-off for one scenario: it takes a list of policy **axes**
+//! (dotted scenario keys, each with a value list — gating probability,
+//! quantizer step, DCD mask sizes, compressive-projection dimension),
+//! runs every point of the cartesian grid through the same INI-override
+//! layer `scenario sweep` uses, and marks the points no other point
+//! dominates.
+//!
+//! A point dominates another when it is no worse on **both** objectives
+//! — mean billed bits per realization (DESIGN.md §9) and steady-state
+//! MSD in dB — and strictly better on at least one. The surviving
+//! points are the empirical Pareto front, the artifact the ROADMAP's
+//! "Pareto frontier" item asks for.
+//!
+//! Determinism contract: every point runs on the deterministic
+//! Monte-Carlo runner (bit-identical at any `--threads`/`--shards`
+//! setting, §8), points are visited in cartesian order (first axis
+//! outermost), and [`pareto_front`] breaks ties by input index — so
+//! `results/frontier_<name>.{csv,json}` are byte-identical however the
+//! work was spread. The CI `frontier-smoke` job holds this pinned.
+
+use crate::config::IniDoc;
+use crate::jsonio::{obj, Json};
+
+use super::run::run_scenario;
+use super::spec::Scenario;
+
+/// One swept policy axis: a dotted scenario key and its value list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrontierAxis {
+    /// Dotted scenario key (validated against `Scenario::known_keys`).
+    pub key: String,
+    /// Values to sweep, as INI value strings, in sweep order.
+    pub values: Vec<String>,
+}
+
+impl FrontierAxis {
+    /// Parse an `--axis` argument: `dotted.key=v1,v2,...`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let (key, list) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("frontier axis {spec:?}: expected dotted.key=v1,v2,..."))?;
+        let key = key.trim();
+        Scenario::check_key(key)?;
+        let values: Vec<String> = list
+            .split(',')
+            .map(|v| v.trim().to_string())
+            .filter(|v| !v.is_empty())
+            .collect();
+        if values.is_empty() {
+            return Err(format!("frontier axis {spec:?}: empty value list"));
+        }
+        Ok(FrontierAxis { key: key.to_string(), values })
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    /// The `(key, value)` overrides this point applied, in axis order.
+    pub settings: Vec<(String, String)>,
+    /// Steady-state MSD (dB, trailing 10 % of the mean trace).
+    pub steady_db: f64,
+    /// Mean billed payload bits per realization (DESIGN.md §9).
+    pub bits_per_run: f64,
+    /// Mean scalars transmitted per realization.
+    pub scalars_per_run: f64,
+    /// Total radio joules across nodes and realizations (0 unless the
+    /// scenario prices the radio; DESIGN.md §13).
+    pub radio_joules: f64,
+    /// Whether the point survived Pareto pruning.
+    pub pareto: bool,
+}
+
+/// Everything one frontier mapping produces.
+#[derive(Debug, Clone)]
+pub struct FrontierOutput {
+    /// Every grid point in cartesian order (first axis outermost),
+    /// each flagged with its Pareto verdict.
+    pub points: Vec<FrontierPoint>,
+}
+
+impl FrontierOutput {
+    /// The dominated-point-pruned front, in cartesian order.
+    pub fn pareto_points(&self) -> Vec<&FrontierPoint> {
+        self.points.iter().filter(|p| p.pareto).collect()
+    }
+}
+
+/// Default policy axes for a scenario with no explicit `--axis` list:
+/// the transmit-gating probability and the quantizer step (the two
+/// knobs every algorithm in the registry has), plus the DCD estimate
+/// mask size M — the compressive-projection dimension — when the base
+/// algorithm is DCD with room to shrink it.
+pub fn default_axes(sc: &Scenario) -> Vec<FrontierAxis> {
+    let mut axes = vec![
+        FrontierAxis {
+            key: "impairments.gating".into(),
+            values: vec!["always".into(), "prob:0.5".into(), "prob:0.25".into()],
+        },
+        FrontierAxis {
+            key: "impairments.quant_step".into(),
+            values: vec!["0".into(), "0.001".into(), "0.01".into()],
+        },
+    ];
+    if let super::spec::AlgorithmSpec::Dcd { m, .. } = sc.algorithm {
+        if m > 1 {
+            axes.push(FrontierAxis {
+                key: "algorithm.m".into(),
+                values: vec![format!("{m}"), format!("{}", (m / 2).max(1))],
+            });
+        }
+    }
+    axes
+}
+
+/// Mark the Pareto-optimal points of a 2-D minimization: input
+/// `(bits, msd_db)` pairs, output one keep-flag per point. A point is
+/// kept iff no other point is ≤ on both coordinates and < on at least
+/// one; exact duplicates are all kept (neither dominates). Sort-sweep,
+/// O(n log n), fully deterministic (ties broken by input index).
+/// Points with a non-finite MSD (divergent runs) are never kept.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<bool> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .total_cmp(&points[b].0)
+            .then(points[a].1.total_cmp(&points[b].1))
+            .then(a.cmp(&b))
+    });
+    let mut keep = vec![false; points.len()];
+    // Sweeping in ascending-bits order, a point survives iff it strictly
+    // improves the best MSD seen so far — or exactly repeats the point
+    // that set it (a duplicate, which nothing strictly dominates).
+    let mut best_msd = f64::INFINITY;
+    let mut best_bits = f64::INFINITY;
+    for &i in &idx {
+        let (bits, msd) = points[i];
+        if !msd.is_finite() {
+            continue;
+        }
+        if msd < best_msd {
+            best_msd = msd;
+            best_bits = bits;
+            keep[i] = true;
+        } else if msd == best_msd && bits == best_bits {
+            keep[i] = true;
+        }
+    }
+    keep
+}
+
+/// Map the frontier of `base` over `axes`: run every cartesian grid
+/// point through the INI-override layer on the (sharded) runner, prune
+/// dominated points, and — with `out_dir` set — write
+/// `<out_dir>/frontier_<name>.csv` (one row per point, Pareto flag
+/// last) and `<out_dir>/frontier_<name>.json` (the same table plus the
+/// pruned front).
+pub fn frontier_scenario(
+    base: &Scenario,
+    axes: &[FrontierAxis],
+    out_dir: Option<&str>,
+    quiet: bool,
+) -> Result<FrontierOutput, String> {
+    if axes.is_empty() {
+        return Err("frontier: no axes (give --axis or use a registry scenario)".into());
+    }
+    for axis in axes {
+        Scenario::check_key(&axis.key)?;
+        if axis.values.is_empty() {
+            return Err(format!("frontier axis {:?}: empty value list", axis.key));
+        }
+    }
+    let total: usize = axes.iter().map(|a| a.values.len()).product();
+
+    let mut points = Vec::with_capacity(total);
+    // Cartesian order, first axis outermost: point p selects value
+    // (p / stride_i) % len_i on axis i — the row order of the CSV.
+    for p in 0..total {
+        let mut settings = Vec::with_capacity(axes.len());
+        let mut stride = total;
+        for axis in axes {
+            stride /= axis.values.len();
+            let value = &axis.values[(p / stride) % axis.values.len()];
+            settings.push((axis.key.clone(), value.clone()));
+        }
+        let mut doc = IniDoc::parse(&base.to_ini_string())?;
+        for (key, value) in &settings {
+            doc.set_dotted(&format!("{key}={value}"))?;
+        }
+        let sc = Scenario::from_ini(&doc)?;
+        let out = run_scenario(&sc, None, true)?;
+        let bits_per_run = out.ledger.bits() as f64 / sc.runs as f64;
+        let radio_joules: f64 = out.radio_joules.iter().sum();
+        if !quiet {
+            let label: Vec<String> =
+                settings.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            println!(
+                "frontier {:<18} [{}/{total}] {}  steady-state {:7.2} dB  bits/run {:.0}",
+                base.name,
+                p + 1,
+                label.join(" "),
+                out.steady_db,
+                bits_per_run
+            );
+        }
+        points.push(FrontierPoint {
+            settings,
+            steady_db: out.steady_db,
+            bits_per_run,
+            scalars_per_run: out.scalars_per_run,
+            radio_joules,
+            pareto: false,
+        });
+    }
+
+    let objectives: Vec<(f64, f64)> =
+        points.iter().map(|p| (p.bits_per_run, p.steady_db)).collect();
+    for (point, keep) in points.iter_mut().zip(pareto_front(&objectives)) {
+        point.pareto = keep;
+    }
+    let front = points.iter().filter(|p| p.pareto).count();
+    if !quiet {
+        println!(
+            "frontier {}: {front} of {} points on the Pareto front",
+            base.name,
+            points.len()
+        );
+    }
+
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let csv_path = format!("{dir}/frontier_{}.csv", base.name);
+        std::fs::write(&csv_path, frontier_csv(axes, &points)).map_err(|e| e.to_string())?;
+        let json_path = format!("{dir}/frontier_{}.json", base.name);
+        std::fs::write(&json_path, frontier_json(base, axes, &points).to_string_pretty())
+            .map_err(|e| e.to_string())?;
+        if !quiet {
+            println!("frontier {}: wrote {csv_path} and {json_path}", base.name);
+        }
+    }
+    Ok(FrontierOutput { points })
+}
+
+/// The frontier table as CSV text: one column per axis key, then the
+/// two objectives, the auxiliary counters, and the Pareto flag. Floats
+/// print through the shortest-round-trip formatter, so the bytes are a
+/// pure function of the (bit-identical) run results.
+fn frontier_csv(axes: &[FrontierAxis], points: &[FrontierPoint]) -> String {
+    let mut s = String::new();
+    for axis in axes {
+        s.push_str(&axis.key);
+        s.push(',');
+    }
+    s.push_str("steady_db,bits_per_run,scalars_per_run,radio_joules,pareto\n");
+    for p in points {
+        for (_, value) in &p.settings {
+            s.push_str(&value.replace(',', ";"));
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{},{},{},{},{}\n",
+            p.steady_db,
+            p.bits_per_run,
+            p.scalars_per_run,
+            p.radio_joules,
+            u8::from(p.pareto)
+        ));
+    }
+    s
+}
+
+/// The frontier artifact as JSON: scenario name, the axes, every point
+/// (with its Pareto verdict), and the pruned front size.
+fn frontier_json(base: &Scenario, axes: &[FrontierAxis], points: &[FrontierPoint]) -> Json {
+    let axes_json = Json::Arr(
+        axes.iter()
+            .map(|a| {
+                obj(vec![
+                    ("key", Json::Str(a.key.clone())),
+                    (
+                        "values",
+                        Json::Arr(a.values.iter().map(|v| Json::Str(v.clone())).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let points_json = Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                let settings = Json::Arr(
+                    p.settings
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())])
+                        })
+                        .collect(),
+                );
+                obj(vec![
+                    ("settings", settings),
+                    ("steady_db", Json::Num(p.steady_db)),
+                    ("bits_per_run", Json::Num(p.bits_per_run)),
+                    ("scalars_per_run", Json::Num(p.scalars_per_run)),
+                    ("radio_joules", Json::Num(p.radio_joules)),
+                    ("pareto", Json::Bool(p.pareto)),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("title", Json::Str(format!("frontier {}", base.name))),
+        ("scenario", Json::Str(base.name.clone())),
+        ("axes", axes_json),
+        ("points", points_json),
+        (
+            "pareto_size",
+            Json::Num(points.iter().filter(|p| p.pareto).count() as f64),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_front_keeps_exactly_the_undominated_points() {
+        // (bits, msd): b dominates d; c dominates nothing and survives
+        // (cheapest); e is a duplicate of b — both stay.
+        let pts = [
+            (100.0, -30.0), // a: most bits, best msd — on the front
+            (50.0, -20.0),  // b
+            (10.0, -10.0),  // c: fewest bits — on the front
+            (60.0, -19.0),  // d: dominated by b (more bits, worse msd)
+            (50.0, -20.0),  // e: duplicate of b
+        ];
+        assert_eq!(pareto_front(&pts), vec![true, true, true, false, true]);
+    }
+
+    #[test]
+    fn pareto_front_drops_equal_bits_worse_msd_and_nonfinite() {
+        let pts = [
+            (10.0, -5.0),
+            (10.0, -4.0), // same bits, strictly worse msd
+            (5.0, f64::NAN),
+            (5.0, f64::INFINITY),
+        ];
+        assert_eq!(pareto_front(&pts), vec![true, false, false, false]);
+        // Every point dominated except one ⇒ front of one.
+        assert_eq!(pareto_front(&[(1.0, -1.0)]), vec![true]);
+        assert_eq!(pareto_front(&[]), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn axis_parse_validates_keys_and_values() {
+        let axis = FrontierAxis::parse("impairments.gating=always, prob:0.5").unwrap();
+        assert_eq!(axis.key, "impairments.gating");
+        assert_eq!(axis.values, vec!["always".to_string(), "prob:0.5".to_string()]);
+        assert!(FrontierAxis::parse("no-equals").is_err());
+        assert!(FrontierAxis::parse("impairments.gating=").is_err());
+        assert!(FrontierAxis::parse("not.a.key=1,2").is_err());
+    }
+
+    #[test]
+    fn default_axes_cover_gating_quantization_and_dcd_compression() {
+        let sc = super::super::builtins::find("quantized-dense").unwrap();
+        let axes = default_axes(&sc);
+        let keys: Vec<&str> = axes.iter().map(|a| a.key.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec!["impairments.gating", "impairments.quant_step", "algorithm.m"]
+        );
+        // Every default axis parses back through the INI layer.
+        for axis in &axes {
+            Scenario::check_key(&axis.key).unwrap();
+        }
+    }
+
+    #[test]
+    fn tiny_frontier_prunes_dominated_points_deterministically() {
+        let mut sc = super::super::builtins::find("paper-10-node").unwrap();
+        sc.runs = 2;
+        sc.iters = 300;
+        sc.record_every = 1;
+        let axes = [FrontierAxis {
+            key: "impairments.gating".into(),
+            values: vec!["always".into(), "prob:0.5".into()],
+        }];
+        let out = frontier_scenario(&sc, &axes, None, true).unwrap();
+        assert_eq!(out.points.len(), 2);
+        assert!(
+            !out.pareto_points().is_empty(),
+            "a non-empty grid always has a non-empty front"
+        );
+        // Gating halves the billed bits — the two points differ on the
+        // bits axis, so at most one direction of domination is possible
+        // and the cheaper point is always on the front.
+        assert!(out.points[1].bits_per_run < out.points[0].bits_per_run);
+        assert!(out.points[1].pareto);
+        // Determinism: a second mapping reproduces the table bit-exactly.
+        let again = frontier_scenario(&sc, &axes, None, true).unwrap();
+        for (a, b) in out.points.iter().zip(again.points.iter()) {
+            assert_eq!(a.steady_db.to_bits(), b.steady_db.to_bits());
+            assert_eq!(a.bits_per_run.to_bits(), b.bits_per_run.to_bits());
+            assert_eq!(a.pareto, b.pareto);
+        }
+    }
+}

@@ -25,13 +25,19 @@
 //! CLI face: `dcd-lms scenario list | run | sweep` (see the README's
 //! scenario section for a tour); `dcd-lms exp4` sweeps the drop
 //! probability of a theory-anchored scenario and plots predicted vs
-//! simulated steady-state MSD.
+//! simulated steady-state MSD; `dcd-lms frontier` maps the
+//! comm-cost-vs-MSD Pareto frontier over a grid of policy axes
+//! ([`frontier_scenario`], DESIGN.md §13).
 
 mod builtins;
+mod frontier;
 mod run;
 mod spec;
 
 pub use builtins::{builtins, find};
+pub use frontier::{
+    default_axes, frontier_scenario, pareto_front, FrontierAxis, FrontierOutput, FrontierPoint,
+};
 pub use run::{
     mc_parts, run_scenario, run_scenario_with_progress, scheduler_options, sweep_scenario,
     theory_scope, wsn_block, wsn_sim, ScenarioOutput, SweepOutput, SweepPoint,

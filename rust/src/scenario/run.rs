@@ -72,6 +72,10 @@ pub struct ScenarioOutput {
     /// Gilbert–Elliott occupancy counters summed over all realizations
     /// (empty unless `drop = markov:*` with memory; DESIGN.md §12).
     pub linkstate: LinkStateStats,
+    /// Per-node radio joules summed over all realizations (DESIGN.md
+    /// §13) — populated only by `mode = wsn` runs with a non-zero
+    /// `[energy]` section, empty otherwise.
+    pub radio_joules: Vec<f64>,
 }
 
 /// One point of a sweep.
@@ -292,6 +296,7 @@ pub fn wsn_sim(sc: &Scenario) -> Result<WsnSimulation, String> {
         duration,
         sample_dt,
         impairments: sc.impairments.clone(),
+        radio: sc.radio,
     };
     Ok(WsnSimulation::new(cfg, model))
 }
@@ -343,7 +348,12 @@ fn run_mc(
 /// schedule that produced the result, including the shard layout
 /// (DESIGN.md §8) and the directional communication bill (§9), so the
 /// artifact is self-describing.
-fn run_manifest(sc: &Scenario, ledger: &CommLedger, linkstate: &LinkStateStats) -> Json {
+fn run_manifest(
+    sc: &Scenario,
+    ledger: &CommLedger,
+    linkstate: &LinkStateStats,
+    radio_joules: &[f64],
+) -> Json {
     let layout = Json::Arr(
         shard_ranges(sc.runs, sc.shards)
             .into_iter()
@@ -396,6 +406,20 @@ fn run_manifest(sc: &Scenario, ledger: &CommLedger, linkstate: &LinkStateStats) 
                 ("bad_fraction", Json::Num(linkstate.bad_fraction().unwrap_or(0.0))),
                 ("mean_burst", Json::Num(linkstate.mean_burst().unwrap_or(0.0))),
                 ("burst_hist", hist),
+            ]),
+        ));
+    }
+    // Radio energy (DESIGN.md §13) — only emitted when the scenario
+    // prices the radio, so every pre-radio artifact keeps its bytes.
+    if !sc.radio.is_zero() {
+        let per_node = Json::Arr(radio_joules.iter().map(|&j| Json::Num(j)).collect());
+        fields.push((
+            "radio",
+            obj(vec![
+                ("tx_j_per_bit", Json::Num(sc.radio.tx_j_per_bit)),
+                ("rx_j_per_bit", Json::Num(sc.radio.rx_j_per_bit)),
+                ("total_joules", Json::Num(radio_joules.iter().sum())),
+                ("per_node_joules", per_node),
             ]),
         ));
     }
@@ -471,7 +495,7 @@ pub fn run_scenario_with_progress(
         write_json_with_meta(
             format!("{dir}/{}.json", sc.name),
             &format!("scenario {}: {}", sc.name, sc.description),
-            Some(run_manifest(sc, &out.ledger, &out.linkstate)),
+            Some(run_manifest(sc, &out.ledger, &out.linkstate, &out.radio_joules)),
             &out.series,
         )
         .map_err(|e| e.to_string())?;
@@ -536,6 +560,7 @@ fn run_rounds_scenario(
         scalars_per_run: res.scalars_per_run,
         ledger: res.ledger,
         linkstate: res.linkstate,
+        radio_joules: Vec::new(),
     })
 }
 
@@ -558,10 +583,19 @@ fn run_wsn_scenario(
     let mut acc = TraceAccumulator::new();
     let mut ledger = CommLedger::empty(0);
     let mut time = Vec::new();
+    let mut radio_joules = Vec::new();
     for res in &results {
         time.clone_from(&res.time);
         acc.add(&res.msd);
         ledger.merge(&res.ledger);
+        // Element-wise sum in run order — the same float accumulation
+        // order at any thread or shard count (bit-identity; §8, §13).
+        if radio_joules.is_empty() {
+            radio_joules = vec![0.0; res.radio_joules.len()];
+        }
+        for (acc_j, &v) in radio_joules.iter_mut().zip(res.radio_joules.iter()) {
+            *acc_j += v;
+        }
     }
     let mean = acc.mean();
     let tail = (mean.len() / 10).max(1);
@@ -576,6 +610,7 @@ fn run_wsn_scenario(
         scalars_per_run: ledger.scalars as f64 / sc.runs as f64,
         ledger,
         linkstate: LinkStateStats::default(),
+        radio_joules,
     })
 }
 

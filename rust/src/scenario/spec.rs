@@ -7,6 +7,7 @@ use crate::config::IniDoc;
 use crate::coordinator::dynamics::DynamicsConfig;
 use crate::coordinator::impairments::{AdaptivePolicy, DropModel, Gating, LinkImpairments};
 use crate::datamodel::DriftModel;
+use crate::energy::RadioEnergy;
 use crate::rng::Pcg64;
 use crate::topology::{Graph, Rule};
 
@@ -294,6 +295,12 @@ pub struct Scenario {
     pub mu: f64,
     /// Link-impairment model.
     pub impairments: LinkImpairments,
+    /// Per-bit radio energy prices debited from the activating node
+    /// under `mode = wsn` (`[energy]` section; the zero-cost default is
+    /// the exact legacy path and the section is only serialized when a
+    /// rate is non-zero, keeping pre-radio canonical INI bytes —
+    /// DESIGN.md §13).
+    pub radio: RadioEnergy,
     /// Time-varying network / optimum axes (`[dynamics]`; all off by
     /// default, which reproduces the static legacy path exactly).
     pub dynamics: DynamicsSpec,
@@ -337,6 +344,7 @@ impl Scenario {
             algorithm: AlgorithmSpec::Dcd { m: 3, m_grad: 1 },
             mu: 1e-2,
             impairments: LinkImpairments::ideal(),
+            radio: RadioEnergy::zero(),
             dynamics: DynamicsSpec::default(),
             runs: 10,
             iters: 4_000,
@@ -376,6 +384,9 @@ impl Scenario {
             "impairments.drop",
             "impairments.gating",
             "impairments.quant_step",
+            "impairments.per_leg",
+            "energy.tx_j_per_bit",
+            "energy.rx_j_per_bit",
             "dynamics.leave",
             "dynamics.join",
             "dynamics.require_connected",
@@ -502,6 +513,11 @@ impl Scenario {
             sc.impairments.gating = v.parse::<Gating>()?;
         }
         sc.impairments.quant_step = get_or(doc, "impairments", "quant_step", 0.0)?;
+        sc.impairments.per_leg = get_or(doc, "impairments", "per_leg", false)?;
+
+        // -- radio energy (DESIGN.md §13) ---------------------------------
+        sc.radio.tx_j_per_bit = get_or(doc, "energy", "tx_j_per_bit", 0.0)?;
+        sc.radio.rx_j_per_bit = get_or(doc, "energy", "rx_j_per_bit", 0.0)?;
 
         // -- dynamics -----------------------------------------------------
         sc.dynamics.leave = get_or(doc, "dynamics", "leave", sc.dynamics.leave)?;
@@ -597,6 +613,18 @@ impl Scenario {
         }
         s.push_str(&format!("gating = {}\n", self.impairments.gating));
         s.push_str(&format!("quant_step = {}\n", self.impairments.quant_step));
+        if self.impairments.per_leg {
+            // Emitted only when set, so every pre-existing canonical INI
+            // (hence every serve cache key and preset CSV) keeps its
+            // bytes (DESIGN.md §13).
+            s.push_str("per_leg = true\n");
+        }
+        if !self.radio.is_zero() {
+            // Same byte-stability contract as per_leg above.
+            s.push_str("\n[energy]\n");
+            s.push_str(&format!("tx_j_per_bit = {}\n", self.radio.tx_j_per_bit));
+            s.push_str(&format!("rx_j_per_bit = {}\n", self.radio.rx_j_per_bit));
+        }
         if self.dynamics != DynamicsSpec::default() {
             s.push_str("\n[dynamics]\n");
             s.push_str(&format!("leave = {}\n", self.dynamics.leave));
@@ -703,6 +731,23 @@ impl Scenario {
         self.impairments
             .validate()
             .map_err(|e| format!("scenario {}: {e}", self.name))?;
+        self.radio
+            .validate()
+            .map_err(|e| format!("scenario {}: {e}", self.name))?;
+        if self.impairments.per_leg && !matches!(self.mode, ScheduleMode::Rounds) {
+            return Err(format!(
+                "scenario {}: impairments.per_leg needs schedule.mode = rounds \
+                 (the event-driven WSN engine draws no independent reply leg)",
+                self.name
+            ));
+        }
+        if !self.radio.is_zero() && !matches!(self.mode, ScheduleMode::Wsn { .. }) {
+            return Err(format!(
+                "scenario {}: a non-zero [energy] radio model needs \
+                 schedule.mode = wsn (only the WSN engine carries a charge state)",
+                self.name
+            ));
+        }
         self.dynamics
             .validate()
             .map_err(|e| format!("scenario {}: {e}", self.name))?;
@@ -813,6 +858,7 @@ mod tests {
             drop: DropModel::Iid(0.15),
             gating: Gating::EventTriggered(1e-6),
             quant_step: 1e-4,
+            per_leg: false,
         };
         sc.runs = 7;
         sc.iters = 1234;
@@ -1084,6 +1130,64 @@ mod tests {
         ] {
             assert!(Scenario::check_key(key).is_ok(), "{key}");
         }
+    }
+
+    #[test]
+    fn per_leg_key_roundtrips_and_legacy_bytes_are_stable() {
+        // Default (shared-leg) specs emit no per_leg key at all — every
+        // pre-existing canonical INI keeps its bytes.
+        let plain = Scenario::base("plain", "");
+        assert!(!plain.to_ini_string().contains("per_leg"));
+
+        let mut sc = Scenario::base("legs", "");
+        sc.impairments.per_leg = true;
+        let text = sc.to_ini_string();
+        assert!(text.contains("per_leg = true"), "{text}");
+        let back = Scenario::parse_str(&text).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.to_ini_string(), text);
+        assert!(sc.validate().is_ok());
+        assert!(Scenario::check_key("impairments.per_leg").is_ok());
+
+        // The WSN engine has no reply-leg draw: per_leg is rejected
+        // under mode = wsn.
+        sc.mode = ScheduleMode::Wsn { duration: 1000.0, sample_dt: 10.0 };
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("per_leg"), "{err}");
+        assert!(err.contains("rounds"), "{err}");
+    }
+
+    #[test]
+    fn energy_section_roundtrips_and_validates() {
+        // Zero radio (the default) emits no [energy] section.
+        let plain = Scenario::base("plain", "");
+        assert!(plain.radio.is_zero());
+        assert!(!plain.to_ini_string().contains("[energy]"));
+
+        let mut sc = Scenario::base("priced", "");
+        sc.mode = ScheduleMode::Wsn { duration: 10_000.0, sample_dt: 100.0 };
+        sc.radio = RadioEnergy { tx_j_per_bit: 5e-8, rx_j_per_bit: 2e-8 };
+        let text = sc.to_ini_string();
+        assert!(text.contains("[energy]"), "{text}");
+        assert!(text.contains("tx_j_per_bit = 0.00000005"), "{text}");
+        let back = Scenario::parse_str(&text).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.to_ini_string(), text);
+        assert!(sc.validate().is_ok());
+        for key in ["energy.tx_j_per_bit", "energy.rx_j_per_bit"] {
+            assert!(Scenario::check_key(key).is_ok(), "{key}");
+        }
+
+        // A radio price without a charge state is meaningless: rejected
+        // under the round schedule.
+        sc.mode = ScheduleMode::Rounds;
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("wsn"), "{err}");
+        // Negative / non-finite rates are rejected.
+        sc.mode = ScheduleMode::Wsn { duration: 10_000.0, sample_dt: 100.0 };
+        sc.radio.rx_j_per_bit = -1.0;
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("rx_j_per_bit"), "{err}");
     }
 
     #[test]

@@ -356,6 +356,7 @@ impl Frame {
                     ("skipped", num_u64(res.skipped)),
                     ("gated", num_u64(res.gated)),
                     ("per_node_activations", u64_arr(&res.per_node_activations)),
+                    ("radio_joules", f64_arr(&res.radio_joules)),
                     ("ledger", ledger_json(&res.ledger)),
                 ]),
             },
@@ -404,17 +405,29 @@ impl Frame {
                         ledger: decode_ledger(&doc)?,
                         linkstate: decode_linkstate(&doc)?,
                     }),
-                    JobKind::Wsn => RunPayload::Wsn(WsnResult {
-                        time: get_f64_arr(&doc, "time")?,
-                        msd: get_f64_arr(&doc, "msd")?,
-                        mean_sleep: get_f64_arr(&doc, "mean_sleep")?,
-                        mean_harvest: get_f64_arr(&doc, "mean_harvest")?,
-                        activations: get_u64(&doc, "activations")?,
-                        skipped: get_u64(&doc, "skipped")?,
-                        gated: get_u64(&doc, "gated")?,
-                        per_node_activations: get_u64_arr(&doc, "per_node_activations")?,
-                        ledger: decode_ledger(&doc)?,
-                    }),
+                    JobKind::Wsn => {
+                        let ledger = decode_ledger(&doc)?;
+                        // Frames from binaries that predate the radio
+                        // model carry no radio block: decode it as the
+                        // free radio, exactly what those workers billed.
+                        let radio_joules = if matches!(doc.get("radio_joules"), &Json::Null) {
+                            vec![0.0; ledger.n_nodes]
+                        } else {
+                            get_f64_arr(&doc, "radio_joules")?
+                        };
+                        RunPayload::Wsn(WsnResult {
+                            time: get_f64_arr(&doc, "time")?,
+                            msd: get_f64_arr(&doc, "msd")?,
+                            mean_sleep: get_f64_arr(&doc, "mean_sleep")?,
+                            mean_harvest: get_f64_arr(&doc, "mean_harvest")?,
+                            activations: get_u64(&doc, "activations")?,
+                            skipped: get_u64(&doc, "skipped")?,
+                            gated: get_u64(&doc, "gated")?,
+                            per_node_activations: get_u64_arr(&doc, "per_node_activations")?,
+                            radio_joules,
+                            ledger,
+                        })
+                    }
                 };
                 Frame::Run { run, payload }
             }
@@ -553,6 +566,7 @@ mod tests {
             skipped: 7,
             gated: 13,
             per_node_activations: vec![200, 121, 0],
+            radio_joules: vec![1.25e-3, 0.0, 7.771561000000001e-4],
             ledger: sample_ledger(),
         };
         let line = Frame::Run { run: 0, payload: RunPayload::Wsn(res.clone()) }.encode();
@@ -566,7 +580,29 @@ mod tests {
                 assert_eq!(back.skipped, 7);
                 assert_eq!(back.gated, 13);
                 assert_eq!(back.per_node_activations, res.per_node_activations);
+                // The radio bill rides the same shortest-round-trip
+                // float transport as the MSD trace: bit-exact.
+                assert_eq!(back.radio_joules.len(), res.radio_joules.len());
+                for (a, b) in back.radio_joules.iter().zip(res.radio_joules.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+                }
                 assert_eq!(back.ledger, res.ledger);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // Frames from binaries that predate the radio model carry no
+        // radio_joules array: it decodes as the free radio, sized to
+        // the ledger's node count.
+        let legacy = "{\"v\":2,\"type\":\"run\",\"kind\":\"wsn\",\"run\":0,\
+                      \"time\":[500.0],\"msd\":[0.5],\"mean_sleep\":[10.0],\
+                      \"mean_harvest\":[0.01],\"activations\":1,\"skipped\":0,\
+                      \"gated\":0,\"per_node_activations\":[1,0,0],\
+                      \"ledger\":{\"n\":3,\"scalars\":0,\"messages\":0,\"suppressed\":0,\
+                      \"dropped_s\":0,\"dropped_m\":0,\"width\":64,\"per_node\":[0,0,0],\
+                      \"per_purpose\":[0,0,0],\"per_link\":[]}}";
+        match Frame::decode(legacy).unwrap() {
+            Frame::Run { payload: RunPayload::Wsn(back), .. } => {
+                assert_eq!(back.radio_joules, vec![0.0, 0.0, 0.0]);
             }
             other => panic!("decoded {other:?}"),
         }

@@ -199,7 +199,12 @@ mod tests {
     }
 
     fn imp(drop: f64, gate: Gating) -> LinkImpairments {
-        LinkImpairments { drop: DropModel::Iid(drop), gating: gate, quant_step: 0.0 }
+        LinkImpairments {
+            drop: DropModel::Iid(drop),
+            gating: gate,
+            quant_step: 0.0,
+            per_leg: false,
+        }
     }
 
     fn random_sigma(nl: usize, rng: &mut Pcg64) -> Mat {
@@ -395,6 +400,7 @@ mod tests {
             drop: DropModel::none(),
             gating: Gating::Always,
             quant_step: 1e-3,
+            per_leg: false,
         });
         assert!(quant > ideal, "{quant} vs {ideal}");
         // The Σ-recursion is untouched by quantization, so the steady
@@ -404,6 +410,7 @@ mod tests {
             drop: DropModel::none(),
             gating: Gating::Always,
             quant_step: 1e-2,
+            per_leg: false,
         });
         let ratio = (quant_big - ideal) / (quant - ideal);
         assert!((ratio - 100.0).abs() < 1.0, "Δ² scaling off: ratio {ratio}");

@@ -98,6 +98,7 @@ fn theory_iteration_loops_do_not_allocate() {
         drop: DropModel::Iid(0.2),
         gating: Gating::Probabilistic(0.8),
         quant_step: 1e-3,
+        per_leg: false,
     };
     let impaired = ImpairedMsdModel::new(setup, &imp).expect("bernoulli gating is in scope");
     let _ = impaired.trajectory(&wo, 8);
@@ -166,6 +167,7 @@ fn theory_iteration_loops_do_not_allocate() {
         drop: DropModel::Markov { p_bad: 0.3, p_gb: 0.2, p_bg: 0.2 },
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
     let dc = DynamicsConfig {
         leave: 0.01,

@@ -318,6 +318,31 @@ fn dynamics_chapter_and_citation_are_paired() {
     );
 }
 
+/// Rule 8: DESIGN.md must carry the §13 energy-loop chapter and the
+/// radio model must cite it — the activator-pays billing rule, the
+/// per-leg erasure semantics, the Pareto pruning order and the
+/// frontier determinism contract live there, and every frontier result
+/// file is defined by them, so the chapter and its anchor citation may
+/// not silently drift apart. Same shape as rules 5–7.
+#[test]
+fn energy_chapter_and_citation_are_paired() {
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md")).expect("DESIGN.md");
+    let has_section = design
+        .lines()
+        .any(|l| l.starts_with('#') && l.contains("§13"));
+    assert!(has_section, "DESIGN.md lost its §13 energy-loop chapter");
+    let radio = fs::read_to_string(
+        root.join("rust").join("src").join("energy").join("radio.rs"),
+    )
+    .expect("rust/src/energy/radio.rs (the priced radio model)");
+    let needle = format!("{}.md §13", "DESIGN");
+    assert!(
+        radio.contains(&needle),
+        "rust/src/energy/radio.rs does not cite DESIGN.md §13"
+    );
+}
+
 #[test]
 fn relative_markdown_links_point_at_existing_files() {
     let root = repo_root();

@@ -41,7 +41,7 @@ fn ring_net(n: usize, dim: usize) -> NetworkConfig {
 /// the chain's occupancy counters.
 fn chain_stats(drop: DropModel, iters: usize, seed: u64) -> LinkStateStats {
     let net = ring_net(10, 2);
-    let imp = LinkImpairments { drop, gating: Gating::Always, quant_step: 0.0 };
+    let imp = LinkImpairments { drop, gating: Gating::Always, quant_step: 0.0, per_leg: false };
     let mut alg = Dcd::new(net.clone(), 1, 1);
     let mut comm = CommMeter::new(net.n_nodes());
     let mut state = ImpairmentState::new(&net, seed, 1);
@@ -253,4 +253,65 @@ fn churn_grid_preset_roundtrips_its_connectivity_demand() {
     assert_eq!(back, sc, "churn-grid INI roundtrip");
     let err = theory_scope(&sc).expect_err("churn is outside the analysis scope");
     assert!(err.contains("dynamics"), "{err}");
+}
+
+/// The energy loop at the scenario level (DESIGN.md §13): a priced
+/// radio debits the same capacitor as the compute cost, so the ENO
+/// sleep fixed point stretches and the activation rate falls. Seeded
+/// and direction-tested with a wide margin here — the exact closed-form
+/// collapse factor is pinned at the unit level in
+/// `rust/src/coordinator/wsn.rs`, and the bill's exactness in
+/// `rust/tests/ledger.rs`.
+#[test]
+fn priced_radio_scenario_lowers_the_activation_rate() {
+    use dcd_lms::energy::RadioEnergy;
+    use dcd_lms::scenario::{wsn_sim, ScheduleMode};
+
+    let mut sc = find("priced-wsn").expect("registry has priced-wsn");
+    sc.mode = ScheduleMode::Wsn { duration: 20_000.0, sample_dt: 500.0 };
+
+    let mut free_sc = sc.clone();
+    free_sc.radio = RadioEnergy::zero();
+    let free = wsn_sim(&free_sc).unwrap().run(sc.seed + 1);
+    assert!(free.activations > 500, "workload too small to compare: {}", free.activations);
+    assert_eq!(free.radio_joules, vec![0.0; 16], "the free radio must bill nothing");
+
+    // A radio heavy enough to rival the Table-I compute cost: each DCD
+    // activation on this ring(16, 2) exchanges ~768 bits, so 1e-5 J/bit
+    // prices an activation at ~7.7e-3 J next to e_a = 5.4e-3 J — the
+    // ENO fixed point must stretch visibly, not marginally.
+    let mut heavy_sc = sc.clone();
+    heavy_sc.radio = RadioEnergy { tx_j_per_bit: 1e-5, rx_j_per_bit: 1e-5 };
+    let heavy = wsn_sim(&heavy_sc).unwrap().run(sc.seed + 1);
+    assert!(
+        (heavy.activations as f64) < 0.75 * free.activations as f64,
+        "heavy radio {} not well below free {}",
+        heavy.activations,
+        free.activations
+    );
+    assert!(
+        (heavy.activations as f64) > 0.15 * free.activations as f64,
+        "heavy radio {} collapsed implausibly far below free {}",
+        heavy.activations,
+        free.activations
+    );
+    // Fewer activations means a genuinely smaller communication bill.
+    assert!(heavy.ledger.bits() < free.ledger.bits());
+    assert!(heavy.radio_joules.iter().sum::<f64>() > 0.0);
+
+    // The preset's own gentle rates (50/20 nJ per bit) are a ~0.6%
+    // perturbation of the per-activation energy: the bill must be
+    // non-zero but the schedule must barely move. (No one-sided
+    // ordering here: the shared event-order RNG decouples the two
+    // sample paths, so only a closeness bound is sound.)
+    let priced = wsn_sim(&sc).unwrap().run(sc.seed + 1);
+    assert!(priced.radio_joules.iter().all(|&j| j >= 0.0));
+    assert!(priced.radio_joules.iter().sum::<f64>() > 0.0);
+    let ratio = priced.activations as f64 / free.activations as f64;
+    assert!(
+        (0.9..=1.1).contains(&ratio),
+        "gentle radio {} vs free {} (ratio {ratio:.3}) — a 50 nJ/bit price must not move the ENO schedule",
+        priced.activations,
+        free.activations
+    );
 }

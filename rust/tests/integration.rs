@@ -217,6 +217,7 @@ fn wsn_energy_ordering() {
             duration: 20_000.0,
             sample_dt: 1_000.0,
             impairments: dcd_lms::coordinator::LinkImpairments::ideal(),
+            radio: dcd_lms::energy::RadioEnergy::zero(),
         };
         let res = WsnSimulation::new(cfg, model.clone()).run(5);
         activations.push((algo.label(), res.activations));

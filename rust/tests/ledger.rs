@@ -72,6 +72,7 @@ fn fully_lossy_line_bill_matches_hand_computation() {
         drop: DropModel::Iid(1.0),
         gating: Gating::Always,
         quant_step: 0.0,
+        per_leg: false,
     };
     let res = run_line(Some(imp));
     let t = ITERS as u64;
@@ -100,6 +101,7 @@ fn fully_gated_line_bills_nothing() {
         drop: DropModel::none(),
         gating: Gating::Probabilistic(0.0),
         quant_step: 0.0,
+        per_leg: false,
     };
     let res = run_line(Some(imp));
     assert_eq!(res.ledger.scalars, 0);
@@ -116,6 +118,7 @@ fn quantized_line_bill_uses_grid_width() {
         drop: DropModel::none(),
         gating: Gating::Always,
         quant_step: 1e-3,
+        per_leg: false,
     };
     let res = run_line(Some(imp));
     let t = ITERS as u64;
@@ -124,6 +127,121 @@ fn quantized_line_bill_uses_grid_width() {
     assert_eq!(width, 14);
     assert_eq!(res.ledger.scalars, 12 * t);
     assert_eq!(res.ledger.bits(), 12 * t * width);
+}
+
+/// Per-leg erasures (DESIGN.md §13) with **no** drop process: the
+/// independent reply draw is short-circuited (nothing to draw), so the
+/// per-leg path is bit-identical to the legacy shared-erasure path —
+/// trajectory and bill alike. This is the legacy-bytes contract the
+/// shard golden test holds end-to-end.
+#[test]
+fn per_leg_with_no_drop_is_bit_identical_to_the_shared_path() {
+    let shared = run_line(Some(LinkImpairments {
+        drop: DropModel::none(),
+        gating: Gating::Always,
+        quant_step: 0.0,
+        per_leg: false,
+    }));
+    let per_leg = run_line(Some(LinkImpairments {
+        drop: DropModel::none(),
+        gating: Gating::Always,
+        quant_step: 0.0,
+        per_leg: true,
+    }));
+    assert_eq!(shared.msd.len(), per_leg.msd.len());
+    for (a, b) in shared.msd.iter().zip(per_leg.msd.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+    }
+    assert_eq!(shared.ledger, per_leg.ledger);
+}
+
+/// Per-leg erasures at `drop_prob = 1`: both legs always erase, so the
+/// bill is exactly the shared-erasure hand computation — estimates
+/// billed (transmitter pays), requests never delivered, every reply
+/// suppressed. The per-leg split changes *which* draws decide, never
+/// what a certainly-dead link bills.
+#[test]
+fn per_leg_fully_lossy_line_matches_hand_computation() {
+    let res = run_line(Some(LinkImpairments {
+        drop: DropModel::Iid(1.0),
+        gating: Gating::Always,
+        quant_step: 0.0,
+        per_leg: true,
+    }));
+    let t = ITERS as u64;
+    let l = &res.ledger;
+    assert_eq!(l.scalars, 8 * t);
+    assert_eq!(l.purpose_scalars(Purpose::Estimate), 8 * t);
+    assert_eq!(l.purpose_scalars(Purpose::Gradient), 0);
+    assert_eq!(l.suppressed_scalars, 4 * t);
+    assert_eq!(l.legacy_scalars(), 12 * t);
+    assert_eq!(l.per_node, vec![2 * t, 4 * t, 2 * t]);
+}
+
+/// The scenario-level radio bill (DESIGN.md §13) cross-foots exactly
+/// against the directional ledger: with tx = rx = 2⁻²⁰ J/bit, every
+/// billed bit costs the same dyadic amount whoever pays it, so the
+/// summed per-node joules equal `2⁻²⁰ · ledger.bits()` bit-exactly (all
+/// products and sums are exact dyadic f64 arithmetic). With a tx-only
+/// price on a DCD network, only Estimate-purpose bits are transmitted
+/// by the activating node — the per-purpose cross-foot.
+#[test]
+fn scenario_radio_bill_cross_foots_with_the_ledger() {
+    let mut sc = dcd_lms::scenario::find("priced-wsn").unwrap();
+    sc.runs = 2;
+    sc.mode = dcd_lms::scenario::ScheduleMode::Wsn { duration: 8_000.0, sample_dt: 500.0 };
+    let rate = (2.0f64).powi(-20);
+    for drop in [DropModel::none(), DropModel::Iid(0.3)] {
+        sc.impairments.drop = drop;
+        // Symmetric price: total joules = rate x total billed bits.
+        sc.radio = dcd_lms::energy::RadioEnergy { tx_j_per_bit: rate, rx_j_per_bit: rate };
+        let out = dcd_lms::scenario::run_scenario(&sc, None, true).unwrap();
+        let total: f64 = out.radio_joules.iter().sum();
+        assert!(total > 0.0, "no radio spend under {drop}");
+        assert_eq!(
+            total.to_bits(),
+            (rate * out.ledger.bits() as f64).to_bits(),
+            "symmetric radio bill must equal rate x billed bits under {drop}"
+        );
+        // Transmit-only price: the activating node transmits exactly
+        // the Estimate-purpose scalars (neighbours send the gradients).
+        sc.radio = dcd_lms::energy::RadioEnergy { tx_j_per_bit: rate, rx_j_per_bit: 0.0 };
+        let out = dcd_lms::scenario::run_scenario(&sc, None, true).unwrap();
+        let total: f64 = out.radio_joules.iter().sum();
+        let est_bits =
+            out.ledger.purpose_scalars(Purpose::Estimate) * out.ledger.bits_per_scalar as u64;
+        assert_eq!(
+            total.to_bits(),
+            (rate * est_bits as f64).to_bits(),
+            "tx-only radio bill must equal rate x Estimate bits under {drop}"
+        );
+    }
+}
+
+/// A zero-rate `[energy]` section is the legacy code path: the canonical
+/// INI omits the section entirely, and the written CSV artifacts are
+/// byte-identical to a run that never mentioned the radio.
+#[test]
+fn zero_rate_radio_scenario_writes_legacy_bytes() {
+    let mut sc = dcd_lms::scenario::find("priced-wsn").unwrap();
+    sc.runs = 2;
+    sc.mode = dcd_lms::scenario::ScheduleMode::Wsn { duration: 5_000.0, sample_dt: 500.0 };
+    sc.radio = dcd_lms::energy::RadioEnergy::zero();
+    let ini = sc.to_ini_string();
+    assert!(!ini.contains("[energy]"), "zero-rate radio must not serialize: {ini}");
+    let base = std::env::temp_dir().join("dcd_ledger_radio_zero");
+    let (dir_a, dir_b) = (base.join("a"), base.join("b"));
+    dcd_lms::scenario::run_scenario(&sc, Some(dir_a.to_str().unwrap()), true).unwrap();
+    // The same scenario re-parsed from its canonical INI (no [energy]
+    // section at all) must land byte-identical artifacts.
+    let sc2 = dcd_lms::scenario::Scenario::parse_str(&ini).unwrap();
+    dcd_lms::scenario::run_scenario(&sc2, Some(dir_b.to_str().unwrap()), true).unwrap();
+    for file in ["priced-wsn.csv", "priced-wsn.json", "priced-wsn_ledger.csv"] {
+        let a = std::fs::read(dir_a.join(file)).unwrap();
+        let b = std::fs::read(dir_b.join(file)).unwrap();
+        assert_eq!(a, b, "{file} differs between zero-rate and radio-free runs");
+    }
+    std::fs::remove_dir_all(&base).ok();
 }
 
 /// The probabilistic-gating bill sits strictly below the legacy bill
@@ -136,6 +254,7 @@ fn gated_line_savings_are_exact_and_strictly_larger_than_legacy() {
         drop: DropModel::none(),
         gating: Gating::Probabilistic(0.5),
         quant_step: 0.0,
+        per_leg: false,
     };
     let res = run_line(Some(imp));
     let l = &res.ledger;

@@ -379,6 +379,7 @@ fn effective_rebuild_matches_dense_reconstruction() {
         drop: DropModel::Iid(0.3),
         gating: Gating::Probabilistic(0.8),
         quant_step: 0.0,
+        per_leg: false,
     };
     for &(n, radius, seed) in &[(10usize, 0.5, 51u64), (50, 0.25, 52), (200, 0.12, 53)] {
         let mut rng = Pcg64::new(seed, 0);

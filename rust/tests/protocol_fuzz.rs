@@ -49,11 +49,31 @@ fn valid_submit_line() -> String {
     SessionFrame::Submit { spec: sc.to_ini_string(), wait: true }.encode()
 }
 
+/// A valid v2 WSN result frame (with a priced-radio block) to mutate.
+fn valid_wsn_run_line() -> String {
+    Frame::Run {
+        run: 0,
+        payload: dcd_lms::shard::RunPayload::Wsn(dcd_lms::coordinator::WsnResult {
+            time: vec![500.0, 1000.0],
+            msd: vec![0.5, 0.25],
+            mean_sleep: vec![10.0, 12.0],
+            mean_harvest: vec![0.01, 0.02],
+            activations: 5,
+            skipped: 1,
+            gated: 2,
+            per_node_activations: vec![2, 2, 1],
+            radio_joules: vec![1.25e-3, 0.0, 7.5e-4],
+            ledger: dcd_lms::energy::CommLedger::empty(3),
+        }),
+    }
+    .encode()
+}
+
 /// Every mutation of both grammars' lines must produce `Err`, never a
 /// panic — the decode APIs are total functions over arbitrary bytes.
 #[test]
 fn truncations_and_mutations_never_panic_either_parser() {
-    let seeds = [valid_job_line(), valid_submit_line()];
+    let seeds = [valid_job_line(), valid_submit_line(), valid_wsn_run_line()];
     let mut cases: Vec<String> = Vec::new();
     for line in &seeds {
         // Every prefix truncation (byte-safe: char boundaries only).
@@ -103,6 +123,48 @@ fn truncations_and_mutations_never_panic_either_parser() {
         if case == &seeds[1] {
             assert!(decoded.is_ok());
         }
+        if case == &seeds[2] {
+            let v2 = case.clone();
+            assert!(Frame::decode(&v2).is_ok(), "pristine wsn run frame must decode");
+        }
+    }
+}
+
+/// The radio block of a WSN result frame (DESIGN.md §13): a malformed
+/// `radio_joules` is a contextual error naming the field, never a
+/// panic; the non-finite string spellings `num_f64` emits survive, and
+/// a string holding a *finite* number is refused (only values
+/// `Json::Num` cannot carry may ride in a string).
+#[test]
+fn malformed_radio_blocks_are_field_named_errors() {
+    let frame_with = |radio: &str| {
+        format!(
+            "{{\"v\":2,\"type\":\"run\",\"kind\":\"wsn\",\"run\":0,\
+             \"time\":[500.0],\"msd\":[0.5],\"mean_sleep\":[10.0],\
+             \"mean_harvest\":[0.01],\"activations\":1,\"skipped\":0,\
+             \"gated\":0,\"per_node_activations\":[1,0,0],\
+             \"radio_joules\":{radio},\
+             \"ledger\":{{\"n\":3,\"scalars\":0,\"messages\":0,\"suppressed\":0,\
+             \"dropped_s\":0,\"dropped_m\":0,\"width\":64,\"per_node\":[0,0,0],\
+             \"per_purpose\":[0,0,0],\"per_link\":[]}}}}"
+        )
+    };
+    for bad in ["\"bogus\"", "{}", "42", "[0.001,\"bogus\"]", "[true]", "[\"0.5\"]", "[[1.0]]"] {
+        let line = frame_with(bad);
+        let out = catch_unwind(move || Frame::decode(&frame_with(bad)).map(|_| ()));
+        let err = out
+            .unwrap_or_else(|_| panic!("decode panicked on radio block {bad}"))
+            .expect_err(&line);
+        assert!(err.contains("radio_joules"), "radio block {bad}: {err}");
+    }
+    // A diverged node's non-finite bill survives the pipe bit-for-bit.
+    match Frame::decode(&frame_with("[\"inf\",\"NaN\",0.0]")).unwrap() {
+        Frame::Run { payload: dcd_lms::shard::RunPayload::Wsn(back), .. } => {
+            assert_eq!(back.radio_joules[0], f64::INFINITY);
+            assert!(back.radio_joules[1].is_nan());
+            assert_eq!(back.radio_joules[2], 0.0);
+        }
+        other => panic!("decoded {other:?}"),
     }
 }
 
@@ -180,6 +242,32 @@ fn run_worker_with_stdin(input: &str) -> (bool, String) {
 /// exit code, not signal; message, not stack trace.
 #[test]
 fn live_worker_survives_fuzz_with_clean_errors() {
+    // Structurally valid job frames whose INI payload carries a
+    // malformed energy-loop key (DESIGN.md §13): the worker must die
+    // naming the key, not panic mid-simulation.
+    let bad_payload_job = |payload: &str| {
+        format!(
+            "{}\n",
+            Frame::Job(ShardJob {
+                // `Mc` is the scenario-replay kind; a `mode = wsn`
+                // scenario still enters through it (`Wsn` is exp3).
+                kind: JobKind::Mc,
+                payload: payload.to_string(),
+                run_start: 0,
+                run_count: 1,
+                threads: 1,
+                algo_index: 0,
+            })
+            .encode()
+        )
+    };
+    let bad_tx = bad_payload_job(
+        "[scenario]\nname = fuzz-energy\n\n[energy]\ntx_j_per_bit = banana\n\
+         \n[schedule]\nmode = wsn\n",
+    );
+    let bad_leg = bad_payload_job(
+        "[scenario]\nname = fuzz-leg\n\n[impairments]\nper_leg = maybe\n",
+    );
     for (input, needle) in [
         ("\u{0}\u{0}\u{0}garbage\n", "shard protocol"),
         ("{\"v\":3,\"type\":\"submit\",\"spec\":\"\"}\n", "version 3"),
@@ -189,6 +277,8 @@ fn live_worker_survives_fuzz_with_clean_errors() {
              \"run_start\":9007199254740994,\"run_count\":1,\"threads\":1,\"algo_index\":0}\n",
             "run_start",
         ),
+        (bad_tx.as_str(), "energy.tx_j_per_bit"),
+        (bad_leg.as_str(), "impairments.per_leg"),
     ] {
         let (ok, text) = run_worker_with_stdin(input);
         assert!(!ok, "worker accepted fuzz {input:?}: {text}");
@@ -301,6 +391,85 @@ fn serve_session_survives_fuzz_and_reports_frame_indices() {
             .iter()
             .any(|f| matches!(f, SessionFrame::Result { cached: false, .. })),
         "{stdout}"
+    );
+    assert!(
+        matches!(frames.last(), Some(SessionFrame::Bye)),
+        "session must end with bye: {stdout}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Energy-loop submits that parse but violate the §13 validators — a
+/// priced radio outside WSN mode, per-leg erasure outside rounds mode,
+/// a negative per-bit cost — each draw a frame-indexed error naming the
+/// broken rule, the session survives all three, and EOF is clean.
+#[test]
+fn invalid_energy_loop_submits_draw_frame_indexed_errors() {
+    let dir = std::env::temp_dir().join(format!("dcd-fuzz-energy-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = dir.join("cache");
+    let specs = [
+        // frame 1: priced radio without the WSN charge state
+        "[scenario]\nname = fuzz-e1\n\n[energy]\ntx_j_per_bit = 5e-8\n".to_string(),
+        // frame 2: per-leg erasure on the event-driven engine
+        "[scenario]\nname = fuzz-e2\n\n[impairments]\nper_leg = true\n\
+         \n[schedule]\nmode = wsn\n"
+            .to_string(),
+        // frame 3: a radio that pays you to transmit
+        "[scenario]\nname = fuzz-e3\n\n[energy]\ntx_j_per_bit = -1\n\
+         \n[schedule]\nmode = wsn\n"
+            .to_string(),
+    ];
+    let mut input = String::new();
+    for spec in &specs {
+        input.push_str(&format!(
+            "{}\n",
+            SessionFrame::Submit { spec: spec.clone(), wait: true }.encode()
+        ));
+    }
+    input.push_str(&format!("{}\n", SessionFrame::Shutdown.encode())); // frame 4
+    let mut child = Command::new(binary())
+        .args(["serve", "--cache", cache.to_str().unwrap(), "--workers", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn dcd-lms serve");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(input.as_bytes())
+        .expect("write session input");
+    let out = child.wait_with_output().expect("wait for serve");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "session must survive invalid submits: {stdout}{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let frames: Vec<SessionFrame> = stdout
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| SessionFrame::decode(l).unwrap_or_else(|e| panic!("daemon emitted {e}: {l}")))
+        .collect();
+    for (want, needle) in [
+        (1u64, "schedule.mode = wsn"),
+        (2, "schedule.mode = rounds"),
+        (3, "tx_j_per_bit"),
+    ] {
+        assert!(
+            frames.iter().any(|f| matches!(f,
+                SessionFrame::Error { frame, message } if *frame == want
+                    && message.contains(&format!("frame {want}"))
+                    && message.contains(needle))),
+            "no frame-{want} error naming {needle:?}: {stdout}"
+        );
+    }
+    assert!(
+        !frames.iter().any(|f| matches!(f, SessionFrame::Accepted { .. })),
+        "an invalid energy-loop submit must never be accepted: {stdout}"
     );
     assert!(
         matches!(frames.last(), Some(SessionFrame::Bye)),

@@ -236,6 +236,13 @@ fn perturbing_any_single_key_misses() {
         // every `[dynamics]` knob must each perturb the key — a cached
         // static result must never answer a dynamic request.
         ("impairments.drop", "markov:0.1,0.3,0.4"),
+        // The energy loop (DESIGN.md §13): splitting the shared erasure
+        // into independent legs and pricing the radio each change the
+        // simulated trajectory, so each must move the cache key — a
+        // free-radio cached result must never answer a priced request.
+        ("impairments.per_leg", "true"),
+        ("energy.tx_j_per_bit", "5e-8"),
+        ("energy.rx_j_per_bit", "2e-8"),
         ("dynamics.leave", "0.01"),
         ("dynamics.join", "0.5"),
         ("dynamics.require_connected", "true"),

@@ -257,6 +257,115 @@ fn memoryless_markov_csv_byte_identical_to_iid_prob() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The frontier driver (DESIGN.md §13) through the sharded runner: the
+/// full Pareto table — every grid point's objectives plus the pruning
+/// verdicts — is byte-identical at 1/2/4 shards × 1/2 threads. Every
+/// point runs on the deterministic runner and the prune is a pure
+/// function of the point set, so the work split can never move the
+/// front.
+#[test]
+fn frontier_csv_byte_identical_across_shards_and_threads() {
+    let dir = std::env::temp_dir().join("dcd_shard_frontier_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    let base = [
+        "frontier", "--name", "priced-wsn", "--fast", "--runs", "2", "--quiet",
+        "--axis", "impairments.gating=always,prob:0.5",
+        "--axis", "impairments.quant_step=0,0.001",
+    ];
+    let run_variant = |sub: &str, extra: &[&str]| -> (String, String) {
+        let out = dir.join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--out", &out_s]);
+        args.extend_from_slice(extra);
+        let (ok, text) = run(&args);
+        assert!(ok, "{sub}: {text}");
+        (
+            read(&out.join("frontier_priced-wsn.csv")),
+            read(&out.join("frontier_priced-wsn.json")),
+        )
+    };
+    let (serial_csv, serial_json) = run_variant("serial", &[]);
+    let (s2_csv, s2_json) = run_variant("s2", &["--shards", "2"]);
+    let (s4_csv, _) = run_variant("s4", &["--shards", "4"]);
+    let (s2t2_csv, _) = run_variant("s2t2", &["--shards", "2", "--threads", "2"]);
+    let (s1t2_csv, _) = run_variant("s1t2", &["--threads", "2"]);
+    assert_eq!(serial_csv, s2_csv, "2-shard frontier diverged from serial");
+    assert_eq!(serial_csv, s4_csv, "4-shard frontier diverged from serial");
+    assert_eq!(serial_csv, s2t2_csv, "2x2 frontier diverged from serial");
+    assert_eq!(serial_csv, s1t2_csv, "2-thread frontier diverged from serial");
+    assert_eq!(serial_json, s2_json, "frontier JSON diverged across shards");
+    // 4 grid points, a header row, and a non-empty Pareto front.
+    assert_eq!(serial_csv.lines().count(), 5, "{serial_csv}");
+    assert!(
+        serial_csv.lines().skip(1).any(|l| l.ends_with(",1")),
+        "no Pareto-optimal point flagged:\n{serial_csv}"
+    );
+    let doc = dcd_lms::jsonio::Json::parse(&serial_json).unwrap();
+    assert!(doc.get("pareto_size").as_usize().unwrap() >= 1);
+    // The priced radio actually spent joules on every grid point.
+    for p in doc.get("points").as_arr().unwrap() {
+        assert!(p.get("radio_joules").as_f64().unwrap() > 0.0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Per-leg erasures with the drop process removed are the legacy path:
+/// `impairments.per_leg = true` at `drop = prob:0` writes CSV artifacts
+/// byte-identical to the shared-erasure run (the zero rate
+/// short-circuits both legs' draws), serial and sharded alike. With a
+/// real drop rate the per-leg preset still shards byte-identically —
+/// the independent reply draws ride the same per-run salted streams.
+#[test]
+fn per_leg_zero_drop_csv_byte_identical_to_shared_path() {
+    let dir = std::env::temp_dir().join("dcd_shard_per_leg_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    let base = [
+        "scenario", "run", "--name", "lossy-geometric", "--runs", "4", "--iters", "600",
+        "--quiet", "--set", "impairments.drop=prob:0",
+    ];
+    let run_variant = |sub: &str, extra: &[&str]| -> String {
+        let out = dir.join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--out", &out_s]);
+        args.extend_from_slice(extra);
+        let (ok, text) = run(&args);
+        assert!(ok, "{sub}: {text}");
+        read(&out.join("lossy-geometric.csv"))
+    };
+    let shared = run_variant("shared", &[]);
+    let per_leg = run_variant("per_leg", &["--set", "impairments.per_leg=true"]);
+    let per_leg_s2 = run_variant(
+        "per_leg_s2",
+        &["--set", "impairments.per_leg=true", "--shards", "2"],
+    );
+    assert_eq!(shared, per_leg, "per-leg at zero drop diverged from shared");
+    assert_eq!(shared, per_leg_s2, "sharded per-leg at zero drop diverged");
+
+    // The lossy per-leg preset: serial == sharded == threaded.
+    let base = [
+        "scenario", "run", "--name", "per-leg-lossy", "--runs", "4", "--iters", "600",
+        "--quiet",
+    ];
+    let run_variant = |sub: &str, extra: &[&str]| -> String {
+        let out = dir.join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--out", &out_s]);
+        args.extend_from_slice(extra);
+        let (ok, text) = run(&args);
+        assert!(ok, "{sub}: {text}");
+        read(&out.join("per-leg-lossy.csv"))
+    };
+    let serial = run_variant("lossy_serial", &[]);
+    let s2 = run_variant("lossy_s2", &["--shards", "2"]);
+    let s2t2 = run_variant("lossy_s2t2", &["--shards", "2", "--threads", "2"]);
+    assert_eq!(serial, s2, "per-leg-lossy: 2 shards diverged from serial");
+    assert_eq!(serial, s2t2, "per-leg-lossy: 2x2 diverged from serial");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// CLI error paths: `--shards 0` and negative values are rejected with
 /// a clear message on every front-end that accepts the flag.
 #[test]

@@ -157,6 +157,7 @@ fn quantization_raises_the_predicted_floor() {
         drop: DropModel::none(),
         gating: Gating::Always,
         quant_step: 2e-3,
+        per_leg: false,
     };
     sc.runs = 4;
     sc.iters = 2_000;

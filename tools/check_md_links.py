@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Markdown link check + DESIGN.md section-citation check.
 
-Standalone CI face of rust/tests/docs_integrity.rs — seven rules:
+Standalone CI face of rust/tests/docs_integrity.rs — eight rules:
 
 1. Every relative link target in a *.md file must exist on disk.
 2. Every markdown link with a `#fragment` that points at a markdown
@@ -27,6 +27,11 @@ Standalone CI face of rust/tests/docs_integrity.rs — seven rules:
    it: the Gilbert-Elliott semantics, the theory-suppression rationale
    and the byte-identity contract documented there pin the dynamic
    presets' numbers.
+8. DESIGN.md must carry the §13 energy-loop chapter and the radio
+   model (rust/src/energy/radio.rs) must cite it: the activator-pays
+   billing rule, the per-leg erasure semantics, the Pareto pruning
+   order and the frontier determinism contract documented there define
+   every frontier result file.
 
 The scan covers the repo root *and* docs/ recursively (everything but
 SKIP_DIRS). Exit status 0 = clean, 1 = at least one dangling reference
@@ -207,6 +212,24 @@ def check_dynamics_chapter(errors):
         errors.append("rust/src/coordinator/impairments.rs does not cite DESIGN.md §12")
 
 
+def check_energy_chapter(errors):
+    """Rule 8: the §13 energy-loop chapter and its in-code citation pair up."""
+    design = ROOT / "DESIGN.md"
+    if design.exists():
+        headings = [
+            line
+            for line in design.read_text(encoding="utf-8").splitlines()
+            if line.startswith("#") and "§13" in line
+        ]
+        if not headings:
+            errors.append("DESIGN.md: the §13 energy-loop chapter is missing")
+    radio = ROOT / "rust" / "src" / "energy" / "radio.rs"
+    if not radio.exists():
+        errors.append("rust/src/energy/radio.rs missing (the priced radio model)")
+    elif "DESIGN.md §13" not in radio.read_text(encoding="utf-8"):
+        errors.append("rust/src/energy/radio.rs does not cite DESIGN.md §13")
+
+
 def main():
     errors = []
     # Guard: the walk must include docs/ (a SKIP_DIRS regression would
@@ -219,6 +242,7 @@ def main():
     check_ledger_chapter(errors)
     check_serve_chapter(errors)
     check_dynamics_chapter(errors)
+    check_energy_chapter(errors)
     if errors:
         print("documentation integrity check FAILED:")
         for e in errors:
