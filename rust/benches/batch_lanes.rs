@@ -1,0 +1,161 @@
+//! Lane-engine step throughput: the scalar `Algorithm::step` versus the
+//! run-batched `BatchStep::batch_step` at SoA widths 2 / 4 / 8, over
+//! N ∈ {10, 50, 320} ring networks, ideal and with a 5% i.i.d. drop
+//! rebuild every iteration (DESIGN.md §14). Data is pre-sampled so the
+//! rows isolate the step path — exactly the loop the lane engine
+//! amortises (per-node temporaries, virtual dispatch, per-edge combiner
+//! lookups). Rates are run-iterations per second: one `batch_step` at
+//! width B advances B realizations, so the lanes=4 row divided by the
+//! lanes=1 row is the CI speedup gate (≥ 2× at N = 50, ideal).
+//!
+//! Writes `BENCH_batch.json`; `--fast` / `DCD_BENCH_FAST=1` shrinks the
+//! workload.
+
+use std::time::Duration;
+
+use dcd_lms::algorithms::{
+    Algorithm, BatchCtx, BatchData, CommMeter, DiffusionLms, NetworkConfig, StepData,
+};
+use dcd_lms::bench_support::{bench, fast_mode, write_bench_json, BenchRecord, Table};
+use dcd_lms::coordinator::impairments::{DropModel, Gating, ImpairmentState, LinkImpairments};
+use dcd_lms::datamodel::DataModel;
+use dcd_lms::rng::Pcg64;
+use dcd_lms::topology::{combination_matrix, Graph, Rule};
+
+fn net(n: usize, l: usize) -> NetworkConfig {
+    let graph = Graph::ring(n, 2);
+    let c = combination_matrix(&graph, Rule::Metropolis);
+    let a = combination_matrix(&graph, Rule::Metropolis);
+    NetworkConfig { graph, c, a, mu: vec![0.01; n], dim: l }
+}
+
+fn main() {
+    let fast = fast_mode();
+    let budget = Duration::from_millis(if fast { 60 } else { 300 });
+    let l = 5;
+    let drop_rate = 0.05;
+    let lossy = LinkImpairments {
+        drop: DropModel::Iid(drop_rate),
+        gating: Gating::Always,
+        quant_step: 0.0,
+        per_leg: false,
+    };
+
+    println!("== lane-engine step throughput (run-iterations/s) ==\n");
+    let mut records = Vec::new();
+    let mut table = Table::new(&["config", "lanes", "ns/run-iter", "run-iters/s", "speedup"]);
+
+    for &n in &[10usize, 50, 320] {
+        let network = net(n, l);
+        let mut rng = Pcg64::new(3, 0);
+        let model = DataModel::paper(n, l, 0.9, 1.1, 1e-3, &mut rng);
+        let mut u = vec![0.0; n * l];
+        let mut d = vec![0.0; n];
+        model.sample_iteration(&mut rng, &mut u, &mut d);
+        let nnz_a = network.a.nnz();
+        let nnz_c = network.c.nnz();
+
+        for (kind, imp) in [("ideal", None), ("drop5", Some(&lossy))] {
+            let mut scalar_rate = 0.0f64;
+            for lanes in [1usize, 2, 4, 8] {
+                let name = format!("n{n}_{kind}_lanes{lanes}");
+                let stats = if lanes == 1 {
+                    // Scalar baseline: the round scheduler's inner body —
+                    // optional impairment rebuild, then one step.
+                    let mut alg = DiffusionLms::new(network.clone());
+                    let mut comm = CommMeter::new(n);
+                    let mut rng = Pcg64::new(5, 1);
+                    let mut state = imp.map(|_| ImpairmentState::new(&network, 7, 1));
+                    bench(&name, 3, budget, || {
+                        if let (Some(state), Some(imp)) = (state.as_mut(), imp) {
+                            state.begin_iteration(imp, &mut alg, &mut comm);
+                        }
+                        alg.step(StepData { u: &u, d: &d }, &mut rng, &mut comm);
+                    })
+                } else {
+                    // Lane engine: the same body at SoA width `lanes` —
+                    // per-lane rebuild into the lane-blocked effective
+                    // values, then one batch_step for all lanes.
+                    let mut alg = DiffusionLms::new(network.clone());
+                    let mut rngs: Vec<Pcg64> =
+                        (0..lanes).map(|b| Pcg64::new(5, b as u64 + 1)).collect();
+                    let mut comms: Vec<CommMeter> =
+                        (0..lanes).map(|_| CommMeter::new(n)).collect();
+                    let mut states: Vec<ImpairmentState> = match imp {
+                        Some(_) => (0..lanes)
+                            .map(|b| ImpairmentState::new(&network, 7, b as u64 + 1))
+                            .collect(),
+                        None => Vec::new(),
+                    };
+                    let mut a_vals = vec![0.0; nnz_a * lanes];
+                    let mut c_vals = vec![0.0; nnz_c * lanes];
+                    for b in 0..lanes {
+                        a_vals[b * nnz_a..(b + 1) * nnz_a].copy_from_slice(network.a.vals());
+                        c_vals[b * nnz_c..(b + 1) * nnz_c].copy_from_slice(network.c.vals());
+                    }
+                    let mut u_soa = vec![0.0; n * l * lanes];
+                    let mut d_soa = vec![0.0; n * lanes];
+                    for b in 0..lanes {
+                        for (j, &x) in u.iter().enumerate() {
+                            u_soa[j * lanes + b] = x;
+                        }
+                        for (k, &x) in d.iter().enumerate() {
+                            d_soa[k * lanes + b] = x;
+                        }
+                    }
+                    let graph = network.graph.clone();
+                    let batch = alg.as_batch().expect("diffusion LMS has a batched face");
+                    batch.batch_reset(lanes);
+                    bench(&name, 3, budget, || {
+                        if let Some(imp) = imp {
+                            for (b, state) in states.iter_mut().enumerate() {
+                                state.begin_iteration_lanes(
+                                    imp,
+                                    &graph,
+                                    &[],
+                                    &mut a_vals[b * nnz_a..(b + 1) * nnz_a],
+                                    &mut c_vals[b * nnz_c..(b + 1) * nnz_c],
+                                    &mut comms[b],
+                                );
+                            }
+                        }
+                        batch.batch_step(
+                            BatchData { u: &u_soa, d: &d_soa },
+                            BatchCtx { lanes, c_vals: &c_vals, a_vals: &a_vals },
+                            &mut rngs,
+                            &mut comms,
+                        );
+                    })
+                };
+                // One timed call advances `lanes` run-iterations.
+                let ns_per_run_iter = stats.median.as_nanos() as f64 / lanes as f64;
+                let rate = if ns_per_run_iter > 0.0 { 1e9 / ns_per_run_iter } else { 0.0 };
+                if lanes == 1 {
+                    scalar_rate = rate;
+                }
+                let speedup = if scalar_rate > 0.0 { rate / scalar_rate } else { 0.0 };
+                table.row(&[
+                    format!("N={n} {kind}"),
+                    lanes.to_string(),
+                    format!("{ns_per_run_iter:.0}"),
+                    format!("{rate:.0}"),
+                    format!("{speedup:.2}x"),
+                ]);
+                records.push(BenchRecord {
+                    name: "batch_step".to_string(),
+                    config: name,
+                    median_ns: ns_per_run_iter,
+                    iters_per_sec: rate,
+                });
+            }
+        }
+    }
+    table.print();
+    write_bench_json(
+        "BENCH_batch.json",
+        "lane-engine step throughput: scalar vs SoA widths 2/4/8 (diffusion LMS, ring(n,2), L=5)",
+        &records,
+    )
+    .expect("write BENCH_batch.json");
+    println!("wrote BENCH_batch.json");
+}

@@ -11,7 +11,11 @@
 //! The compressed-diffusion LMS (CD) of §IV is the `m_grad = L` special
 //! case, built by [`Dcd::cd`].
 
-use super::traits::{Algorithm, CommMeter, NetworkConfig, Purpose, StepData};
+use super::traits::{
+    soa_lane_msd, Algorithm, BatchCtx, BatchData, BatchStep, CommMeter, NetworkConfig, Purpose,
+    StepData,
+};
+use crate::linalg::kernels;
 use crate::rng::Pcg64;
 
 /// Externally supplied selection patterns for one iteration (used by the
@@ -49,6 +53,19 @@ pub struct Dcd {
     /// Reused per-step residual buffer (allocation-free hot loop).
     e_self: Vec<f64>,
     scratch: Vec<usize>,
+    // Lane-engine SoA state (DESIGN.md §14): sized by `batch_reset`,
+    // empty (zero cost) on the scalar path.
+    lanes: usize,
+    bw: Vec<f64>,
+    bpsi: Vec<f64>,
+    bwnew: Vec<f64>,
+    bh: Vec<f64>,
+    bq: Vec<f64>,
+    be_self: Vec<f64>,
+    le: Vec<f64>,
+    lgate: Vec<f64>,
+    lmu: Vec<f64>,
+    lacc: Vec<f64>,
 }
 
 impl Dcd {
@@ -83,6 +100,17 @@ impl Dcd {
             est_noise: vec![0.0; n * l],
             e_self: vec![0.0; n],
             scratch: Vec::new(),
+            lanes: 0,
+            bw: Vec::new(),
+            bpsi: Vec::new(),
+            bwnew: Vec::new(),
+            bh: Vec::new(),
+            bq: Vec::new(),
+            be_self: Vec::new(),
+            le: Vec::new(),
+            lgate: Vec::new(),
+            lmu: Vec::new(),
+            lacc: Vec::new(),
         }
     }
 
@@ -341,6 +369,264 @@ impl Algorithm for Dcd {
         let l = self.cfg.dim as f64;
         Some(2.0 * l / (self.m as f64 + self.m_grad as f64))
     }
+
+    fn as_batch(&mut self) -> Option<&mut dyn BatchStep> {
+        // The noisy-link path draws per-(edge, entry) Gaussians from the
+        // run RNG in an order the lane engine cannot replicate without
+        // serialising — those runs stay on the scalar path.
+        if self.link_noise_sigma > 0.0 {
+            None
+        } else {
+            Some(self)
+        }
+    }
+}
+
+// Run-batched step (DESIGN.md §14), ideal links only (`as_batch` gates
+// on `link_noise_sigma == 0`). Each loop replicates the scalar
+// `step_inner` per lane — including the literal `(w + 0.0)` where the
+// scalar path adds the (all-zero at sigma = 0) link-noise entry, and the
+// estimate-send → residual → gradient-send → `c_lk` gate ordering.
+impl BatchStep for Dcd {
+    fn batch_reset(&mut self, lanes: usize) {
+        let n = self.cfg.n_nodes();
+        let l = self.cfg.dim;
+        self.lanes = lanes;
+        for buf in [&mut self.bw, &mut self.bpsi, &mut self.bwnew, &mut self.bh, &mut self.bq] {
+            buf.clear();
+            buf.resize(n * l * lanes, 0.0);
+        }
+        self.be_self.clear();
+        self.be_self.resize(n * lanes, 0.0);
+        for buf in [&mut self.le, &mut self.lgate, &mut self.lmu] {
+            buf.clear();
+            buf.resize(lanes, 0.0);
+        }
+        self.lacc.clear();
+        self.lacc.resize(4 * lanes, 0.0);
+    }
+
+    fn batch_step(
+        &mut self,
+        data: BatchData<'_>,
+        ctx: BatchCtx<'_>,
+        rngs: &mut [Pcg64],
+        comms: &mut [CommMeter],
+    ) {
+        assert!(self.link_noise_sigma == 0.0, "noisy links are scalar-only");
+        let n = self.cfg.n_nodes();
+        let l = self.cfg.dim;
+        let lanes = ctx.lanes;
+        debug_assert_eq!(lanes, self.lanes, "batch_step before batch_reset");
+        let nnz_c = self.cfg.c.nnz();
+        let nnz_a = self.cfg.a.nnz();
+        let (u, d) = (data.u, data.d);
+        let row = l * lanes;
+
+        // Mask draws: lane b consumes rngs[b] exactly as a scalar run
+        // consumes its run RNG (per node: H then Q).
+        let (m, m_grad) = (self.m, self.m_grad);
+        for (b, rng) in rngs.iter_mut().enumerate().take(lanes) {
+            for k in 0..n {
+                let base = k * row;
+                for j in 0..l {
+                    self.bh[base + j * lanes + b] = 0.0;
+                }
+                rng.sample_indices(l, m, &mut self.scratch);
+                for &i in self.scratch.iter() {
+                    self.bh[base + i * lanes + b] = 1.0;
+                }
+                for j in 0..l {
+                    self.bq[base + j * lanes + b] = 0.0;
+                }
+                rng.sample_indices(l, m_grad, &mut self.scratch);
+                for &i in self.scratch.iter() {
+                    self.bq[base + i * lanes + b] = 1.0;
+                }
+            }
+        }
+
+        // -- Adapt (eqs. (10)/(12)) -------------------------------------
+        // Self residuals e_self[k, b] = d[k, b] − u_k·w_k.
+        {
+            let w = &self.bw;
+            let es = &mut self.be_self;
+            let acc = &mut self.lacc;
+            let e = &mut self.le;
+            for k in 0..n {
+                let uk = &u[k * row..(k + 1) * row];
+                let wk = &w[k * row..(k + 1) * row];
+                kernels::lane_dot(uk, wk, lanes, acc, e);
+                for b in 0..lanes {
+                    es[k * lanes + b] = d[k * lanes + b] - e[b];
+                }
+            }
+        }
+
+        {
+            let cfg = &self.cfg;
+            let w = &self.bw;
+            let h = &self.bh;
+            let q = &self.bq;
+            let es = &self.be_self;
+            let psi = &mut self.bpsi;
+            let gate = &mut self.lgate;
+            let muc = &mut self.lmu;
+            let e = &mut self.le;
+            for k in 0..n {
+                let base = k * row;
+                let mu_k = cfg.mu[k];
+                let wk = &w[base..base + row];
+                let uk = &u[base..base + row];
+                let hk = &h[base..base + row];
+                let es_k = &es[k * lanes..(k + 1) * lanes];
+
+                // psi_k = w_k + (mu_k c_kk) u_k e_self, per lane.
+                let cd = cfg.c.diag_idx(k);
+                for b in 0..lanes {
+                    muc[b] = mu_k * ctx.c_vals[b * nnz_c + cd];
+                }
+                {
+                    let psi_k = &mut psi[base..base + row];
+                    for j in 0..l {
+                        let jb = j * lanes;
+                        for b in 0..lanes {
+                            psi_k[jb + b] = wk[jb + b] + muc[b] * uk[jb + b] * es_k[b];
+                        }
+                    }
+                }
+
+                if self.grad_sharing {
+                    for &lnb in cfg.graph.neighbors(k) {
+                        let cidx = cfg.c.entry_idx(k, lnb);
+                        for comm in comms.iter_mut().take(lanes) {
+                            comm.send(k, lnb, Purpose::Estimate, m);
+                        }
+                        let lb = lnb * row;
+                        let wl = &w[lb..lb + row];
+                        let ul = &u[lb..lb + row];
+                        let ql = &q[lb..lb + row];
+                        // e[b] = d[lnb, b] − Σ_j u_l (h (w + 0) + (1−h) w_l),
+                        // sequential in j like the scalar fold.
+                        for b in 0..lanes {
+                            e[b] = d[lnb * lanes + b];
+                        }
+                        for j in 0..l {
+                            let jb = j * lanes;
+                            for b in 0..lanes {
+                                e[b] -= ul[jb + b]
+                                    * (hk[jb + b] * (wk[jb + b] + 0.0)
+                                        + (1.0 - hk[jb + b]) * wl[jb + b]);
+                            }
+                        }
+                        for comm in comms.iter_mut().take(lanes) {
+                            comm.send(lnb, k, Purpose::Gradient, m_grad);
+                        }
+                        let Some(cidx) = cidx else { continue };
+                        for b in 0..lanes {
+                            gate[b] = ctx.c_vals[b * nnz_c + cidx];
+                        }
+                        for b in 0..lanes {
+                            muc[b] = mu_k * gate[b];
+                        }
+                        let psi_k = &mut psi[base..base + row];
+                        let all_live = gate.iter().all(|&g| g != 0.0);
+                        if all_live {
+                            for j in 0..l {
+                                let jb = j * lanes;
+                                for b in 0..lanes {
+                                    psi_k[jb + b] += muc[b]
+                                        * (ql[jb + b] * (ul[jb + b] * e[b])
+                                            + (1.0 - ql[jb + b]) * (uk[jb + b] * es_k[b]));
+                                }
+                            }
+                        } else {
+                            for j in 0..l {
+                                let jb = j * lanes;
+                                for b in 0..lanes {
+                                    if gate[b] != 0.0 {
+                                        psi_k[jb + b] += muc[b]
+                                            * (ql[jb + b] * (ul[jb + b] * e[b])
+                                                + (1.0 - ql[jb + b]) * (uk[jb + b] * es_k[b]));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    for &lnb in cfg.graph.neighbors(k) {
+                        for comm in comms.iter_mut().take(lanes) {
+                            comm.send(k, lnb, Purpose::Estimate, m);
+                        }
+                    }
+                }
+            }
+        }
+
+        // -- Combine (eq. (11)) ------------------------------------------
+        {
+            let cfg = &self.cfg;
+            let w = &self.bw;
+            let h = &self.bh;
+            let psi = &self.bpsi;
+            let wnew = &mut self.bwnew;
+            let gate = &mut self.lgate;
+            for k in 0..n {
+                let base = k * row;
+                let ad = cfg.a.diag_idx(k);
+                for b in 0..lanes {
+                    gate[b] = ctx.a_vals[b * nnz_a + ad];
+                }
+                let psi_k = &psi[base..base + row];
+                kernels::lane_scale(gate, psi_k, &mut wnew[base..base + row], lanes);
+                for &lnb in cfg.graph.neighbors(k) {
+                    let Some(idx) = cfg.a.entry_idx(k, lnb) else { continue };
+                    for b in 0..lanes {
+                        gate[b] = ctx.a_vals[b * nnz_a + idx];
+                    }
+                    let lb = lnb * row;
+                    let wl = &w[lb..lb + row];
+                    let hl = &h[lb..lb + row];
+                    let out = &mut wnew[base..base + row];
+                    let all_live = gate.iter().all(|&g| g != 0.0);
+                    if all_live {
+                        for j in 0..l {
+                            let jb = j * lanes;
+                            for b in 0..lanes {
+                                out[jb + b] += gate[b]
+                                    * (hl[jb + b] * (wl[jb + b] + 0.0)
+                                        + (1.0 - hl[jb + b]) * psi_k[jb + b]);
+                            }
+                        }
+                    } else {
+                        for j in 0..l {
+                            let jb = j * lanes;
+                            for b in 0..lanes {
+                                if gate[b] != 0.0 {
+                                    out[jb + b] += gate[b]
+                                        * (hl[jb + b] * (wl[jb + b] + 0.0)
+                                            + (1.0 - hl[jb + b]) * psi_k[jb + b]);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut self.bw, &mut self.bwnew);
+    }
+
+    fn batch_weights(&self) -> &[f64] {
+        &self.bw
+    }
+
+    fn batch_weights_mut(&mut self) -> &mut [f64] {
+        &mut self.bw
+    }
+
+    fn batch_msd(&self, b: usize, wo: &[f64]) -> f64 {
+        soa_lane_msd(&self.bw, self.lanes, b, wo)
+    }
 }
 
 #[cfg(test)]
@@ -480,6 +766,95 @@ mod tests {
         assert!(noisy > 2.0 * clean, "clean {clean} noisy {noisy}");
         assert!(very_noisy > noisy, "noisy {noisy} very {very_noisy}");
         assert!(very_noisy.is_finite() && very_noisy < 1.0);
+    }
+
+    /// Lane b of one batched instance must reproduce an independent
+    /// scalar instance with the same run RNG (mask draws) and lane data —
+    /// weights, meter, and MSD all bitwise — with and without gradient
+    /// sharing.
+    #[test]
+    fn batched_lanes_bitwise_match_scalar_runs() {
+        let n = 5;
+        let l = 4;
+        let lanes = 3;
+        let mut ident = cfg(n, l, 0.05);
+        ident.c = crate::topology::Combiner::eye(n);
+        for base in [cfg(n, l, 0.05), ident] {
+            let mut scalars: Vec<Dcd> =
+                (0..lanes).map(|_| Dcd::new(base.clone(), 2, 1)).collect();
+            let mut batched = Dcd::new(base.clone(), 2, 1);
+            assert!(batched.as_batch().is_some());
+            batched.batch_reset(lanes);
+            let (nnz_c, nnz_a) = (base.c.nnz(), base.a.nnz());
+            let mut c_vals = vec![0.0; nnz_c * lanes];
+            let mut a_vals = vec![0.0; nnz_a * lanes];
+            for b in 0..lanes {
+                c_vals[b * nnz_c..(b + 1) * nnz_c].copy_from_slice(base.c.vals());
+                a_vals[b * nnz_a..(b + 1) * nnz_a].copy_from_slice(base.a.vals());
+            }
+            let mut data_rngs: Vec<Pcg64> =
+                (0..lanes).map(|b| Pcg64::new(7, b as u64 + 1)).collect();
+            let mut run_rngs_s: Vec<Pcg64> =
+                (0..lanes).map(|b| Pcg64::new(11, b as u64 + 1)).collect();
+            let mut run_rngs_b: Vec<Pcg64> =
+                (0..lanes).map(|b| Pcg64::new(11, b as u64 + 1)).collect();
+            let mut comms_s: Vec<CommMeter> = (0..lanes).map(|_| CommMeter::new(n)).collect();
+            let mut comms_b: Vec<CommMeter> = (0..lanes).map(|_| CommMeter::new(n)).collect();
+            let mut u = vec![0.0; n * l];
+            let mut d = vec![0.0; n];
+            let mut u_soa = vec![0.0; n * l * lanes];
+            let mut d_soa = vec![0.0; n * lanes];
+            for _ in 0..40 {
+                for b in 0..lanes {
+                    for (idx, x) in u.iter_mut().enumerate() {
+                        *x = data_rngs[b].next_gaussian();
+                        u_soa[idx * lanes + b] = *x;
+                    }
+                    for (k, x) in d.iter_mut().enumerate() {
+                        *x = data_rngs[b].next_gaussian();
+                        d_soa[k * lanes + b] = *x;
+                    }
+                    scalars[b].step(StepData { u: &u, d: &d }, &mut run_rngs_s[b], &mut comms_s[b]);
+                }
+                batched.batch_step(
+                    BatchData { u: &u_soa, d: &d_soa },
+                    BatchCtx { lanes, c_vals: &c_vals, a_vals: &a_vals },
+                    &mut run_rngs_b,
+                    &mut comms_b,
+                );
+            }
+            let wo: Vec<f64> = (0..l).map(|j| 0.25 * j as f64 - 0.3).collect();
+            for b in 0..lanes {
+                assert_eq!(
+                    run_rngs_s[b].next_u64(),
+                    run_rngs_b[b].next_u64(),
+                    "lane {b} rng desynchronised"
+                );
+                for (idx, &x) in scalars[b].weights().iter().enumerate() {
+                    assert_eq!(
+                        batched.bw[idx * lanes + b].to_bits(),
+                        x.to_bits(),
+                        "lane {b} weight {idx}"
+                    );
+                }
+                assert_eq!(comms_s[b].scalars(), comms_b[b].scalars(), "lane {b} meter");
+                assert_eq!(
+                    scalars[b].msd(&wo).to_bits(),
+                    batched.batch_msd(b, &wo).to_bits(),
+                    "lane {b} msd"
+                );
+            }
+        }
+    }
+
+    /// Noisy links cannot be lane-batched: the per-entry RNG order is
+    /// inherently scalar, so `as_batch` must decline.
+    #[test]
+    fn link_noise_opts_out_of_batching() {
+        let mut alg = Dcd::new(cfg(4, 3, 0.05), 2, 2).with_link_noise(0.1);
+        assert!(alg.as_batch().is_none());
+        let mut clean = Dcd::new(cfg(4, 3, 0.05), 2, 2);
+        assert!(clean.as_batch().is_some());
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //! quoted against. The combine step reuses the estimates already held by
 //! the neighbours, matching the accounting of §IV.
 
-use super::traits::{Algorithm, CommMeter, NetworkConfig, Purpose, StepData};
+use super::traits::{
+    soa_lane_msd, Algorithm, BatchCtx, BatchData, BatchStep, CommMeter, NetworkConfig, Purpose,
+    StepData,
+};
+use crate::linalg::kernels;
 use crate::rng::Pcg64;
 
 /// ATC diffusion LMS state.
@@ -17,6 +21,16 @@ pub struct DiffusionLms {
     w: Vec<f64>,
     psi: Vec<f64>,
     wnew: Vec<f64>,
+    // Lane-engine SoA state (DESIGN.md §14): sized by `batch_reset`,
+    // empty (zero cost) on the scalar path.
+    lanes: usize,
+    bw: Vec<f64>,
+    bpsi: Vec<f64>,
+    bwnew: Vec<f64>,
+    le: Vec<f64>,
+    lgate: Vec<f64>,
+    lalpha: Vec<f64>,
+    lacc: Vec<f64>,
 }
 
 impl DiffusionLms {
@@ -29,6 +43,14 @@ impl DiffusionLms {
             w: vec![0.0; n * l],
             psi: vec![0.0; n * l],
             wnew: vec![0.0; n * l],
+            lanes: 0,
+            bw: Vec::new(),
+            bpsi: Vec::new(),
+            bwnew: Vec::new(),
+            le: Vec::new(),
+            lgate: Vec::new(),
+            lalpha: Vec::new(),
+            lacc: Vec::new(),
         }
     }
 
@@ -139,6 +161,146 @@ impl Algorithm for DiffusionLms {
     fn compression_ratio(&self) -> Option<f64> {
         None
     }
+
+    fn as_batch(&mut self) -> Option<&mut dyn BatchStep> {
+        Some(self)
+    }
+}
+
+// Run-batched step (DESIGN.md §14). Every loop below replicates the
+// scalar `step` above per lane: same expression shapes, same `== 0.0`
+// gates, same send ordering — the lane index is the only new axis, and
+// lanes never mix, so lane b's f64 stream is the scalar stream of run b.
+impl BatchStep for DiffusionLms {
+    fn batch_reset(&mut self, lanes: usize) {
+        let n = self.cfg.n_nodes();
+        let l = self.cfg.dim;
+        self.lanes = lanes;
+        for buf in [&mut self.bw, &mut self.bpsi, &mut self.bwnew] {
+            buf.clear();
+            buf.resize(n * l * lanes, 0.0);
+        }
+        for buf in [&mut self.le, &mut self.lgate, &mut self.lalpha] {
+            buf.clear();
+            buf.resize(lanes, 0.0);
+        }
+        self.lacc.clear();
+        self.lacc.resize(4 * lanes, 0.0);
+    }
+
+    fn batch_step(
+        &mut self,
+        data: BatchData<'_>,
+        ctx: BatchCtx<'_>,
+        _rngs: &mut [Pcg64],
+        comms: &mut [CommMeter],
+    ) {
+        let n = self.cfg.n_nodes();
+        let l = self.cfg.dim;
+        let lanes = ctx.lanes;
+        debug_assert_eq!(lanes, self.lanes, "batch_step before batch_reset");
+        let nnz_c = self.cfg.c.nnz();
+        let nnz_a = self.cfg.a.nnz();
+        let (u, d) = (data.u, data.d);
+        let row = l * lanes;
+
+        // Adapt: psi_k = w_k + mu_k sum_l c_lk u_l (d_l - u_l^T w_k).
+        {
+            let cfg = &self.cfg;
+            let w = &self.bw;
+            let psi = &mut self.bpsi;
+            let e = &mut self.le;
+            let gate = &mut self.lgate;
+            let alpha = &mut self.lalpha;
+            let acc = &mut self.lacc;
+            for k in 0..n {
+                let base = k * row;
+                let mu_k = cfg.mu[k];
+                let wk = &w[base..base + row];
+                let psi_k = &mut psi[base..base + row];
+                psi_k.copy_from_slice(wk);
+                let uk = &u[base..base + row];
+                // e_k[b] = d[k, b] − u_k·w_k  (lane_dot folds like scalar dot).
+                kernels::lane_dot(uk, wk, lanes, acc, e);
+                for b in 0..lanes {
+                    e[b] = d[k * lanes + b] - e[b];
+                }
+                // Self gradient — unconditional, like the scalar loop.
+                let cd = cfg.c.diag_idx(k);
+                for b in 0..lanes {
+                    alpha[b] = mu_k * ctx.c_vals[b * nnz_c + cd];
+                }
+                kernels::lane_fused_accum_all(alpha, e, uk, psi_k, lanes);
+                if self.grad_sharing {
+                    for &lnb in cfg.graph.neighbors(k) {
+                        // Sends precede the c_lk gate in the scalar path.
+                        for comm in comms.iter_mut().take(lanes) {
+                            comm.send(k, lnb, Purpose::Estimate, l);
+                            comm.send(lnb, k, Purpose::Gradient, l);
+                        }
+                        // One CSR lookup serves every lane.
+                        let Some(idx) = cfg.c.entry_idx(k, lnb) else { continue };
+                        for b in 0..lanes {
+                            gate[b] = ctx.c_vals[b * nnz_c + idx];
+                        }
+                        let ul = &u[lnb * row..(lnb + 1) * row];
+                        kernels::lane_dot(ul, wk, lanes, acc, e);
+                        for b in 0..lanes {
+                            e[b] = d[lnb * lanes + b] - e[b];
+                        }
+                        for b in 0..lanes {
+                            alpha[b] = mu_k * gate[b];
+                        }
+                        kernels::lane_fused_accum(gate, alpha, e, ul, psi_k, lanes);
+                    }
+                }
+            }
+        }
+
+        // Combine: w_k = sum_l a_lk psi_l.
+        {
+            let cfg = &self.cfg;
+            let psi = &self.bpsi;
+            let wnew = &mut self.bwnew;
+            let alpha = &mut self.lalpha;
+            for k in 0..n {
+                let base = k * row;
+                let ad = cfg.a.diag_idx(k);
+                for b in 0..lanes {
+                    alpha[b] = ctx.a_vals[b * nnz_a + ad];
+                }
+                let psi_k = &psi[base..base + row];
+                let out = &mut wnew[base..base + row];
+                kernels::lane_scale(alpha, psi_k, out, lanes);
+                for &lnb in cfg.graph.neighbors(k) {
+                    if !self.grad_sharing {
+                        for comm in comms.iter_mut().take(lanes) {
+                            comm.send(lnb, k, Purpose::Estimate, l);
+                        }
+                    }
+                    let Some(idx) = cfg.a.entry_idx(k, lnb) else { continue };
+                    for b in 0..lanes {
+                        alpha[b] = ctx.a_vals[b * nnz_a + idx];
+                    }
+                    let psi_l = &psi[lnb * row..(lnb + 1) * row];
+                    kernels::lane_axpy(alpha, psi_l, out, lanes);
+                }
+            }
+        }
+        std::mem::swap(&mut self.bw, &mut self.bwnew);
+    }
+
+    fn batch_weights(&self) -> &[f64] {
+        &self.bw
+    }
+
+    fn batch_weights_mut(&mut self) -> &mut [f64] {
+        &mut self.bw
+    }
+
+    fn batch_msd(&self, b: usize, wo: &[f64]) -> f64 {
+        soa_lane_msd(&self.bw, self.lanes, b, wo)
+    }
 }
 
 #[inline]
@@ -200,6 +362,76 @@ mod tests {
             comm.ledger().purpose_scalars(Purpose::Estimate),
             comm.ledger().purpose_scalars(Purpose::Gradient)
         );
+    }
+
+    /// Lane b of one batched instance must reproduce an independent
+    /// scalar instance fed lane b's data — weights, meter, and MSD all
+    /// bitwise — with and without gradient sharing.
+    #[test]
+    fn batched_lanes_bitwise_match_scalar_runs() {
+        let n = 6;
+        let l = 5;
+        let lanes = 3;
+        let mut ident = cfg(n, l, 0.04);
+        ident.c = crate::topology::Combiner::eye(n);
+        for base in [cfg(n, l, 0.04), ident] {
+            let mut scalars: Vec<DiffusionLms> =
+                (0..lanes).map(|_| DiffusionLms::new(base.clone())).collect();
+            let mut batched = DiffusionLms::new(base.clone());
+            batched.batch_reset(lanes);
+            let (nnz_c, nnz_a) = (base.c.nnz(), base.a.nnz());
+            let mut c_vals = vec![0.0; nnz_c * lanes];
+            let mut a_vals = vec![0.0; nnz_a * lanes];
+            for b in 0..lanes {
+                c_vals[b * nnz_c..(b + 1) * nnz_c].copy_from_slice(base.c.vals());
+                a_vals[b * nnz_a..(b + 1) * nnz_a].copy_from_slice(base.a.vals());
+            }
+            let mut data_rngs: Vec<Pcg64> =
+                (0..lanes).map(|b| Pcg64::new(7, b as u64 + 1)).collect();
+            let mut step_rngs: Vec<Pcg64> = (0..lanes).map(|b| Pcg64::new(9, b as u64)).collect();
+            let mut comms_s: Vec<CommMeter> = (0..lanes).map(|_| CommMeter::new(n)).collect();
+            let mut comms_b: Vec<CommMeter> = (0..lanes).map(|_| CommMeter::new(n)).collect();
+            let mut u = vec![0.0; n * l];
+            let mut d = vec![0.0; n];
+            let mut u_soa = vec![0.0; n * l * lanes];
+            let mut d_soa = vec![0.0; n * lanes];
+            for _ in 0..40 {
+                for b in 0..lanes {
+                    for (idx, x) in u.iter_mut().enumerate() {
+                        *x = data_rngs[b].next_gaussian();
+                        u_soa[idx * lanes + b] = *x;
+                    }
+                    for (k, x) in d.iter_mut().enumerate() {
+                        *x = data_rngs[b].next_gaussian();
+                        d_soa[k * lanes + b] = *x;
+                    }
+                    let mut dummy = Pcg64::new(1, 1);
+                    scalars[b].step(StepData { u: &u, d: &d }, &mut dummy, &mut comms_s[b]);
+                }
+                batched.batch_step(
+                    BatchData { u: &u_soa, d: &d_soa },
+                    BatchCtx { lanes, c_vals: &c_vals, a_vals: &a_vals },
+                    &mut step_rngs,
+                    &mut comms_b,
+                );
+            }
+            let wo: Vec<f64> = (0..l).map(|j| 0.2 * j as f64 - 0.3).collect();
+            for b in 0..lanes {
+                for (idx, &x) in scalars[b].weights().iter().enumerate() {
+                    assert_eq!(
+                        batched.bw[idx * lanes + b].to_bits(),
+                        x.to_bits(),
+                        "lane {b} weight {idx}"
+                    );
+                }
+                assert_eq!(comms_s[b].scalars(), comms_b[b].scalars(), "lane {b} meter");
+                assert_eq!(
+                    scalars[b].msd(&wo).to_bits(),
+                    batched.batch_msd(b, &wo).to_bits(),
+                    "lane {b} msd"
+                );
+            }
+        }
     }
 
     #[test]

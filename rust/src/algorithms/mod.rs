@@ -29,4 +29,7 @@ pub use dcd::{Dcd, DcdMasks};
 pub use diffusion_lms::DiffusionLms;
 pub use partial::{PartialDiffusion, PartialMasks};
 pub use rcd::{Rcd, RcdSelection};
-pub use traits::{Algorithm, CommLedger, CommMeter, NetworkConfig, Purpose, StepData};
+pub use traits::{
+    soa_lane_msd, Algorithm, BatchCtx, BatchData, BatchStep, CommLedger, CommMeter, NetworkConfig,
+    Purpose, StepData,
+};

@@ -135,6 +135,96 @@ pub trait Algorithm {
         }
         total / n as f64
     }
+
+    /// The run-batched face of this algorithm, if it has one.
+    ///
+    /// Returning `Some` opts into the lane engine (DESIGN.md §14): the
+    /// coordinator packs B independent Monte-Carlo runs into SoA state
+    /// and drives [`BatchStep::batch_step`] once per iteration instead
+    /// of [`Algorithm::step`] B times. The contract is *bit-identity*:
+    /// lane b's weight trajectory, ledger, and MSD trace must match a
+    /// scalar run with the same seed/stream exactly. Algorithms whose
+    /// step draws from a shared noise source in a non-per-lane order
+    /// (or that simply have no batched implementation) return `None`
+    /// and the coordinator falls back to the scalar path — the default.
+    fn as_batch(&mut self) -> Option<&mut dyn BatchStep> {
+        None
+    }
+}
+
+/// Lane-major SoA data for one batched iteration: `u[(k*L + j)*lanes + b]`
+/// and `d[k*lanes + b]` hold lane b's regressor entry (k, j) and desired
+/// response at node k.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchData<'a> {
+    pub u: &'a [f64],
+    pub d: &'a [f64],
+}
+
+/// Per-iteration combiner context for a batched step. The lane engine
+/// rebuilds each lane's *effective* CSR combiner values (after erasures)
+/// every iteration; structure (indices) never changes, so algorithms keep
+/// reading indptr/cols from their own [`NetworkConfig`] and take only the
+/// values from here.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCtx<'a> {
+    /// Number of lanes B in flight.
+    pub lanes: usize,
+    /// Effective adapt-combiner (C) values, lane-blocked: lane b's CSR
+    /// value array is `c_vals[b*nnz_c .. (b+1)*nnz_c]`.
+    pub c_vals: &'a [f64],
+    /// Effective combine-matrix (A) values, lane-blocked like `c_vals`.
+    pub a_vals: &'a [f64],
+}
+
+/// A run-batched algorithm: B independent runs advanced in SoA lockstep,
+/// each lane bit-identical to the scalar path (DESIGN.md §14).
+pub trait BatchStep {
+    /// Size the SoA state for `lanes` concurrent runs and zero every
+    /// lane (the batched analogue of [`Algorithm::reset`]).
+    fn batch_reset(&mut self, lanes: usize);
+
+    /// Advance every lane one synchronous network iteration. `rngs[b]`
+    /// is lane b's run RNG (selection-mask draws must consume it in the
+    /// scalar per-run order); `comms[b]` is lane b's meter, billed with
+    /// the scalar path's exact send sequence.
+    fn batch_step(
+        &mut self,
+        data: BatchData<'_>,
+        ctx: BatchCtx<'_>,
+        rngs: &mut [Pcg64],
+        comms: &mut [CommMeter],
+    );
+
+    /// Lane-major SoA weights, `w[(k*L + j)*lanes + b]`.
+    fn batch_weights(&self) -> &[f64];
+
+    /// Mutable SoA weights (the impairment layer quantizes in place —
+    /// elementwise, so lane values stay bit-identical to scalar).
+    fn batch_weights_mut(&mut self) -> &mut [f64];
+
+    /// Network MSD of lane `b` against `wo`, replicating the scalar
+    /// [`Algorithm::msd`] fold order exactly.
+    fn batch_msd(&self, b: usize, wo: &[f64]) -> f64;
+}
+
+/// MSD of lane `b` over lane-major SoA weights `w[(k*L + j)*lanes + b]`,
+/// folding in exactly the scalar [`Algorithm::msd`] order: a sequential
+/// per-row sum over j, rows accumulated in ascending k, divided by N
+/// last. Shared by every [`BatchStep`] implementation.
+pub fn soa_lane_msd(w: &[f64], lanes: usize, b: usize, wo: &[f64]) -> f64 {
+    let l = wo.len();
+    let n = w.len() / (l * lanes);
+    let mut total = 0.0;
+    for k in 0..n {
+        let mut row_sum = 0.0;
+        for (j, &wj) in wo.iter().enumerate() {
+            let x = w[(k * l + j) * lanes + b] - wj;
+            row_sum += x * x;
+        }
+        total += row_sum;
+    }
+    total / n as f64
 }
 
 #[cfg(test)]

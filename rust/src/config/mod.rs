@@ -6,6 +6,7 @@
 mod ini;
 pub use ini::IniDoc;
 
+use crate::coordinator::lanes::LaneCount;
 use crate::energy::EnergyParams;
 
 /// Experiment 1 (Fig. 3 left): N = 10, L = 5, M = 3, M_grad = 1,
@@ -27,6 +28,9 @@ pub struct Exp1Config {
     /// Worker processes the Monte-Carlo runs are sharded across
     /// (1 = in-process; rust engine only — see DESIGN.md §8).
     pub shards: usize,
+    /// SoA lane width of the run-batched engine (1 = scalar path;
+    /// bit-identical at every width — see DESIGN.md §14).
+    pub lanes: LaneCount,
 }
 
 impl Default for Exp1Config {
@@ -44,6 +48,7 @@ impl Default for Exp1Config {
             iters: 40_000,
             seed: 2017,
             shards: 1,
+            lanes: LaneCount::default(),
         }
     }
 }
@@ -64,6 +69,9 @@ pub struct Exp2Config {
     /// Worker processes per sweep point (1 = in-process; rust engine
     /// only — see DESIGN.md §8).
     pub shards: usize,
+    /// SoA lane width of the run-batched engine (1 = scalar path;
+    /// bit-identical at every width — see DESIGN.md §14).
+    pub lanes: LaneCount,
     /// M values for the CD sweep (ratio 2L/(M+L)).
     pub cd_m_values: Vec<usize>,
     /// (M, M_grad) pairs for the DCD sweep (ratio 2L/(M+M_grad)).
@@ -88,6 +96,7 @@ impl Default for Exp2Config {
             iters: 4_000,
             seed: 2018,
             shards: 1,
+            lanes: LaneCount::default(),
             // Ratios 2L/(M+L): 100/95 ... 100/55 (paper: max 100/55 at M = 5).
             cd_m_values: vec![45, 35, 25, 15, 5],
             // Ratios 2L/(M+M_grad): from 100/90 up to 20 (M + M_grad = 5).
@@ -208,6 +217,7 @@ impl Exp1Config {
             "iters" => self.iters => usize,
             "seed" => self.seed => u64,
             "shards" => self.shards => usize,
+            "lanes" => self.lanes => LaneCount,
         });
         self.validate()
     }
@@ -222,6 +232,7 @@ impl Exp1Config {
         if self.shards == 0 {
             return Err("exp1: shards must be >= 1 (1 = in-process)".into());
         }
+        self.lanes.validate().map_err(|e| format!("exp1: {e}"))?;
         Ok(())
     }
 }
@@ -236,6 +247,7 @@ impl Exp2Config {
             "iters" => self.iters => usize,
             "seed" => self.seed => u64,
             "shards" => self.shards => usize,
+            "lanes" => self.lanes => LaneCount,
         });
         self.validate()
     }
@@ -246,6 +258,7 @@ impl Exp2Config {
         if self.shards == 0 {
             return Err("exp2: shards must be >= 1 (1 = in-process)".into());
         }
+        self.lanes.validate().map_err(|e| format!("exp2: {e}"))?;
         Ok(())
     }
 }
@@ -447,6 +460,24 @@ mod tests {
         assert!(Exp2Config::default().apply(&doc).is_err());
         let doc = IniDoc::parse("[exp3]\nshards = 0\n").unwrap();
         assert!(Exp3Config::default().apply(&doc).is_err());
+    }
+
+    #[test]
+    fn lanes_key_parses_and_rejects_zero() {
+        let doc = IniDoc::parse("[exp1]\nlanes = auto\n").unwrap();
+        let mut cfg = Exp1Config::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.lanes, LaneCount::Auto);
+        let doc = IniDoc::parse("[exp2]\nlanes = 4\n").unwrap();
+        let mut cfg = Exp2Config::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.lanes, LaneCount::Fixed(4));
+        // 0, negatives and overflow all fail through LaneCount's parser.
+        for bad in ["0", "-2", "99999999999999999999"] {
+            let doc = IniDoc::parse(&format!("[exp1]\nlanes = {bad}\n")).unwrap();
+            let err = Exp1Config::default().apply(&doc).unwrap_err();
+            assert!(err.contains("lanes"), "{err}");
+        }
     }
 
     #[test]

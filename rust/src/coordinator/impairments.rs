@@ -43,7 +43,7 @@
 use crate::algorithms::{Algorithm, CommMeter, NetworkConfig};
 use crate::energy::comm::LinkOutcomes;
 use crate::rng::Pcg64;
-use crate::topology::Combiner;
+use crate::topology::{Combiner, Graph};
 
 /// Salt XOR-ed into the master seed for the impairment RNG stream, so
 /// link events are decorrelated from (and do not consume) the data RNG.
@@ -734,6 +734,20 @@ pub struct ImpairmentState {
     /// `graph.neighbors(k)[slot] → k` owns slot `row_off[k] + slot` in
     /// every per-link vector below.
     row_off: Vec<usize>,
+    /// Per-directed-slot CSR value index into A (None when the combiner
+    /// has no entry for that edge, e.g. A = I). The CSR structure never
+    /// changes, so these replace the historical per-iteration
+    /// `entry_idx` binary searches — a pure index lookup, no float ops,
+    /// hence bit-identical — and let the erase pass run against *bare
+    /// value slices* (the lane engine's per-lane arrays) instead of a
+    /// `Combiner` borrow.
+    a_slot: Vec<Option<usize>>,
+    /// Per-directed-slot CSR value index into C.
+    c_slot: Vec<Option<usize>>,
+    /// Per-receiver diagonal value index into A.
+    a_diag: Vec<usize>,
+    /// Per-receiver diagonal value index into C.
+    c_diag: Vec<usize>,
     /// Markov link state per directed slot (`true` = Bad). Drawn from
     /// the stationary distribution on the first bursty iteration; never
     /// touched by memoryless models (DESIGN.md §12).
@@ -766,6 +780,18 @@ impl ImpairmentState {
             slots += net.graph.neighbors(k).len();
         }
         row_off.push(slots);
+        let mut a_slot = Vec::with_capacity(slots);
+        let mut c_slot = Vec::with_capacity(slots);
+        let mut a_diag = Vec::with_capacity(n);
+        let mut c_diag = Vec::with_capacity(n);
+        for k in 0..n {
+            a_diag.push(net.a.diag_idx(k));
+            c_diag.push(net.c.diag_idx(k));
+            for &lnb in net.graph.neighbors(k) {
+                a_slot.push(net.a.entry_idx(k, lnb));
+                c_slot.push(net.c.entry_idx(k, lnb));
+            }
+        }
         Self {
             a0: net.a.vals().to_vec(),
             c0: net.c.vals().to_vec(),
@@ -775,6 +801,10 @@ impl ImpairmentState {
             silent: vec![false; n],
             delivered: LinkOutcomes::for_graph(&net.graph),
             row_off,
+            a_slot,
+            c_slot,
+            a_diag,
+            c_diag,
             link_bad: vec![false; slots],
             burst_len: vec![0; slots],
             markov_ready: false,
@@ -860,7 +890,6 @@ impl ImpairmentState {
         alg: &mut dyn Algorithm,
         comm: &mut CommMeter,
     ) {
-        let l = self.dim;
         let n = self.silent.len();
 
         // 0. Advance the network dynamics (churn draws, mobility marks,
@@ -871,32 +900,7 @@ impl ImpairmentState {
         }
 
         // 1. Per-node transmit gate.
-        match imp.gating {
-            Gating::Always => self.silent.iter_mut().for_each(|s| *s = false),
-            Gating::Probabilistic(p) => {
-                for s in self.silent.iter_mut() {
-                    *s = !self.rng.next_bool(p);
-                }
-            }
-            Gating::EventTriggered(delta) => {
-                let w = alg.weights();
-                for k in 0..n {
-                    let wk = &w[k * l..(k + 1) * l];
-                    let lb = &mut self.last_broadcast[k * l..(k + 1) * l];
-                    let moved: f64 = wk
-                        .iter()
-                        .zip(lb.iter())
-                        .map(|(a, b)| (a - b) * (a - b))
-                        .sum();
-                    let quiet = moved <= delta;
-                    self.silent[k] = quiet;
-                    if !quiet {
-                        // Transmitting refreshes the reference state.
-                        lb.copy_from_slice(wk);
-                    }
-                }
-            }
-        }
+        self.gating_phase(imp.gating, alg.weights());
 
         // 1b. Absent nodes (churn) are off the air entirely: they
         // transmit nothing, are billed nothing, and solicit nothing —
@@ -934,25 +938,84 @@ impl ImpairmentState {
             }
         }
 
-        // 2. Effective combiners: start from the pristine copies (one
-        // O(E) value memcpy — the CSR structure never changes), then
-        // erase every dead directed link (l → k), re-allocating its mass
-        // to the receiver's self weight — the completion rule of
-        // eqs. (11)-(12) applied at matrix level. A silent node also
-        // *solicits* nothing: it broadcast no estimate for neighbours to
-        // evaluate gradients at, so its whole C column collapses to the
-        // self weight and it runs a pure self-LMS adapt that iteration.
-        // The per-link outcomes recorded here are the same ones the
-        // ledger bills against below — one draw, two consumers.
-        //
-        // The loop walks *graph* edges, not stored combiner entries:
-        // that keeps the salted-PCG64 draw order (one conditional draw
-        // per directed edge) bit-identical to the historical dense
-        // rebuild even when a combiner's support is smaller than the
-        // graph (e.g. A = I), where the erasure is then a no-op.
+        // 2/2b/3. Effective combiners + ledger outcomes. Splitting the
+        // network config lets the shared erase pass (also driven by the
+        // lane engine against per-lane value arrays) borrow the graph
+        // and both value slices disjointly.
         let net = alg.network_mut();
-        net.a.vals_mut().copy_from_slice(&self.a0);
-        net.c.vals_mut().copy_from_slice(&self.c0);
+        let NetworkConfig { graph, a, c, .. } = net;
+        self.erase_phase(imp, ds, graph, a.vals_mut(), c.vals_mut(), comm);
+    }
+
+    /// Phase 1 of an iteration: the per-node transmit gate. `weights`
+    /// is the algorithm's current row-major estimate matrix — read only
+    /// by [`Gating::EventTriggered`] (the other policies may pass `&[]`).
+    fn gating_phase(&mut self, gating: Gating, weights: &[f64]) {
+        let l = self.dim;
+        let n = self.silent.len();
+        match gating {
+            Gating::Always => self.silent.iter_mut().for_each(|s| *s = false),
+            Gating::Probabilistic(p) => {
+                for s in self.silent.iter_mut() {
+                    *s = !self.rng.next_bool(p);
+                }
+            }
+            Gating::EventTriggered(delta) => {
+                for k in 0..n {
+                    let wk = &weights[k * l..(k + 1) * l];
+                    let lb = &mut self.last_broadcast[k * l..(k + 1) * l];
+                    let moved: f64 = wk
+                        .iter()
+                        .zip(lb.iter())
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    let quiet = moved <= delta;
+                    self.silent[k] = quiet;
+                    if !quiet {
+                        // Transmitting refreshes the reference state.
+                        lb.copy_from_slice(wk);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Phases 2/2b/3 of an iteration, against bare CSR value slices.
+    ///
+    /// 2. Effective combiners: start from the pristine copies (one
+    /// O(E) value memcpy — the CSR structure never changes), then
+    /// erase every dead directed link (l → k), re-allocating its mass
+    /// to the receiver's self weight — the completion rule of
+    /// eqs. (11)-(12) applied at matrix level. A silent node also
+    /// *solicits* nothing: it broadcast no estimate for neighbours to
+    /// evaluate gradients at, so its whole C column collapses to the
+    /// self weight and it runs a pure self-LMS adapt that iteration.
+    /// The per-link outcomes recorded here are the same ones the
+    /// ledger bills against in phase 3 — one draw, two consumers.
+    ///
+    /// The loop walks *graph* edges, not stored combiner entries:
+    /// that keeps the salted-PCG64 draw order (one conditional draw
+    /// per directed edge) bit-identical to the historical dense
+    /// rebuild even when a combiner's support is smaller than the
+    /// graph (e.g. A = I), where the erasure is then a no-op. Stored
+    /// entries resolve through the slot tables computed at
+    /// construction — an index load, no search, no float ops.
+    ///
+    /// `a_vals`/`c_vals` are the *effective* value arrays to rebuild:
+    /// the algorithm's own combiner values on the scalar path, one
+    /// lane's private arrays under the lane engine (DESIGN.md §14).
+    fn erase_phase(
+        &mut self,
+        imp: &LinkImpairments,
+        ds: Option<&super::dynamics::DynamicsState>,
+        graph: &Graph,
+        a_vals: &mut [f64],
+        c_vals: &mut [f64],
+        comm: &mut CommMeter,
+    ) {
+        let n = self.silent.len();
+        a_vals.copy_from_slice(&self.a0);
+        c_vals.copy_from_slice(&self.c0);
         self.delivered.reset_all_true();
         let drop_iid = imp.drop.iid_prob();
         let (mk_pb, mk_pgb, mk_pbg) = match imp.drop {
@@ -970,9 +1033,9 @@ impl ImpairmentState {
             self.markov_ready = true;
         }
         for k in 0..n {
-            let a_diag = net.a.diag_idx(k);
-            let c_diag = net.c.diag_idx(k);
-            for (slot, &lnb) in net.graph.neighbors(k).iter().enumerate() {
+            let a_diag = self.a_diag[k];
+            let c_diag = self.c_diag[k];
+            for (slot, &lnb) in graph.neighbors(k).iter().enumerate() {
                 // A link is sampled only when it is structurally alive
                 // (churn/mobility) and its transmitter is on the air —
                 // the short-circuit keeps the static i.i.d. path's RNG
@@ -994,22 +1057,20 @@ impl ImpairmentState {
                 self.deliv_count[sidx] += delivered as u64;
                 self.delivered.set_row_slot(k, slot, delivered);
                 if !delivered {
-                    if let Some(idx) = net.a.entry_idx(k, lnb) {
-                        let am = net.a.vals()[idx];
+                    if let Some(idx) = self.a_slot[sidx] {
+                        let am = a_vals[idx];
                         if am != 0.0 {
-                            let vals = net.a.vals_mut();
-                            vals[idx] = 0.0;
-                            vals[a_diag] += am;
+                            a_vals[idx] = 0.0;
+                            a_vals[a_diag] += am;
                         }
                     }
                 }
                 if !imp.per_leg && (!delivered || self.silent[k]) {
-                    if let Some(idx) = net.c.entry_idx(k, lnb) {
-                        let cm = net.c.vals()[idx];
+                    if let Some(idx) = self.c_slot[sidx] {
+                        let cm = c_vals[idx];
                         if cm != 0.0 {
-                            let vals = net.c.vals_mut();
-                            vals[idx] = 0.0;
-                            vals[c_diag] += cm;
+                            c_vals[idx] = 0.0;
+                            c_vals[c_diag] += cm;
                         }
                     }
                 }
@@ -1030,8 +1091,8 @@ impl ImpairmentState {
         // spec is byte-identical to the legacy path.
         if imp.per_leg {
             for k in 0..n {
-                let c_diag = net.c.diag_idx(k);
-                for (slot, &lnb) in net.graph.neighbors(k).iter().enumerate() {
+                let c_diag = self.c_diag[k];
+                for (slot, &lnb) in graph.neighbors(k).iter().enumerate() {
                     let usable = match ds {
                         Some(d) => d.edge_alive(k, slot, lnb),
                         None => true,
@@ -1046,12 +1107,12 @@ impl ImpairmentState {
                         };
                     let request = self.delivered.delivered(k, lnb);
                     if !reply || !request || self.silent[k] {
-                        if let Some(idx) = net.c.entry_idx(k, lnb) {
-                            let cm = net.c.vals()[idx];
+                        let sidx = self.row_off[k] + slot;
+                        if let Some(idx) = self.c_slot[sidx] {
+                            let cm = c_vals[idx];
                             if cm != 0.0 {
-                                let vals = net.c.vals_mut();
-                                vals[idx] = 0.0;
-                                vals[c_diag] += cm;
+                                c_vals[idx] = 0.0;
+                                c_vals[c_diag] += cm;
                             }
                         }
                     }
@@ -1064,6 +1125,28 @@ impl ImpairmentState {
         // soliciting broadcast died on this table is never billed
         // (DESIGN.md §9 billing rules).
         comm.set_outcomes(&self.silent, Some(&self.delivered));
+    }
+
+    /// One lane's iteration of link events for the lane engine
+    /// (DESIGN.md §14): the transmit gate plus the erase pass, drawn
+    /// from this state's salted PCG64 in exactly the scalar order, but
+    /// rebuilt into the lane's private effective value arrays instead
+    /// of the algorithm's combiners. `weights` is the lane's row-major
+    /// estimate matrix (only read under event-triggered gating; the
+    /// driver passes `&[]` otherwise). Network dynamics are not
+    /// lane-batched — the coordinator routes those runs to the scalar
+    /// path.
+    pub fn begin_iteration_lanes(
+        &mut self,
+        imp: &LinkImpairments,
+        graph: &Graph,
+        weights: &[f64],
+        a_vals: &mut [f64],
+        c_vals: &mut [f64],
+        comm: &mut CommMeter,
+    ) {
+        self.gating_phase(imp.gating, weights);
+        self.erase_phase(imp, None, graph, a_vals, c_vals, comm);
     }
 
     /// Put the pristine combiners back (so a reused algorithm instance

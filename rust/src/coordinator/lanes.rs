@@ -1,0 +1,442 @@
+//! Lane engine: run-batched Monte-Carlo execution (DESIGN.md §14).
+//!
+//! The round scheduler advances one realization at a time; at small
+//! network sizes the per-iteration cost is dominated by short loops,
+//! virtual dispatch and per-node temporaries rather than floating-point
+//! work. The lane engine amortises all of that across *runs*: B
+//! independent realizations are packed into lane-major SoA state
+//! (`weights[(k·L + j)·B + b]` holds lane b's entry) and one
+//! [`BatchStep::batch_step`](crate::algorithms::BatchStep::batch_step)
+//! call advances all B of them with edge-major inner loops over
+//! contiguous lane blocks — the same memory-motion trick the xla engine
+//! plays across nodes, applied across realizations, without leaving f64
+//! or the message-level billing model.
+//!
+//! The contract is **bit-identity** (DESIGN.md §14): lane b of a block
+//! starting at run `r0` must reproduce the scalar
+//! [`RoundScheduler::run`](super::round::RoundScheduler::run) with
+//! stream `r0 + b + 1` byte for byte — MSD trace, ledger, link-state
+//! tallies, everything. The engine gets this by construction:
+//!
+//! * every per-run random sequence (data, drift, impairments, selection
+//!   masks) is drawn from that run's own PCG64 streams in the scalar
+//!   order — lanes never share an RNG;
+//! * every floating-point reduction inside a lane replicates the scalar
+//!   operation order exactly (the lane-strided kernels of
+//!   [`crate::linalg::kernels`] carry the same partial-sum shapes);
+//! * lanes never mix: SoA rows interleave *storage*, not arithmetic.
+//!
+//! Runs whose configuration has no batched path (an algorithm without a
+//! [`BatchStep`](crate::algorithms::BatchStep) face, network dynamics,
+//! noisy DCD links) are routed to the scalar scheduler by the runner —
+//! per run range, so mixed layouts still fold in run order.
+
+use crate::algorithms::{Algorithm, BatchCtx, BatchData, CommMeter};
+use crate::datamodel::DataModel;
+use crate::rng::Pcg64;
+
+use super::impairments::{
+    quantize_in_place, Gating, ImpairmentState, LinkImpairments, LinkStateStats,
+};
+use super::round::RunResult;
+use super::runner::SchedulerOptions;
+
+/// Requested lane width for the run-batched engine (`[schedule] lanes`,
+/// `--lanes`). The default `Fixed(1)` is the scalar path — artifacts are
+/// byte-identical at every width, so this is a pure throughput knob (and
+/// deliberately *not* part of the serve cache key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneCount {
+    /// Pick a width from the run count (currently min(4, runs)).
+    Auto,
+    /// Exactly this many runs per SoA block (1 = scalar scheduler).
+    Fixed(usize),
+}
+
+impl Default for LaneCount {
+    fn default() -> Self {
+        LaneCount::Fixed(1)
+    }
+}
+
+impl std::fmt::Display for LaneCount {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaneCount::Auto => write!(f, "auto"),
+            LaneCount::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+impl std::str::FromStr for LaneCount {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s == "auto" {
+            return Ok(LaneCount::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(0) => Err("lanes 0: need at least one lane per block \
+                          (1 = scalar path; auto = pick from the run count)"
+                .into()),
+            Ok(n) => Ok(LaneCount::Fixed(n)),
+            Err(e) => Err(format!("lanes {s:?}: {e} (expected auto or a positive integer)")),
+        }
+    }
+}
+
+impl LaneCount {
+    /// Reject widths the engine cannot run (0 lanes). Parsing already
+    /// refuses these; this guards values built programmatically.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            LaneCount::Fixed(0) => Err("lanes 0: need at least one lane per block \
+                                        (1 = scalar path; auto = pick from the run count)"
+                .into()),
+            _ => Ok(()),
+        }
+    }
+
+    /// The effective SoA width for `runs` realizations.
+    pub fn resolve(&self, runs: usize) -> usize {
+        match self {
+            LaneCount::Auto => runs.max(1).min(4),
+            LaneCount::Fixed(n) => (*n).max(1),
+        }
+    }
+
+    /// True for the default scalar width (the artifact-neutral value the
+    /// serve cache canonicalises to).
+    pub fn is_default(&self) -> bool {
+        *self == LaneCount::Fixed(1)
+    }
+}
+
+/// Execute the contiguous realization block
+/// `[run_start, run_start + lanes)` in SoA lockstep and return the
+/// per-run results **in run order** — each byte-identical to the scalar
+/// [`RoundScheduler::run`](super::round::RoundScheduler::run) with the
+/// same seed and stream `run_start + b + 1`.
+///
+/// `alg` must expose a batched face
+/// ([`Algorithm::as_batch`](crate::algorithms::Algorithm::as_batch) →
+/// `Some`) and `opts.dynamics` must be absent or static — the runner
+/// routes every other configuration to the scalar path before getting
+/// here.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lane_block(
+    model: &DataModel,
+    opts: &SchedulerOptions,
+    alg: &mut dyn Algorithm,
+    iters: usize,
+    seed: u64,
+    record_every: usize,
+    run_start: usize,
+    lanes: usize,
+) -> Vec<RunResult> {
+    assert!(lanes >= 1, "lane block needs at least one lane");
+    assert!(
+        opts.dynamics.as_ref().map_or(true, |d| d.is_static()),
+        "network dynamics are scalar-only; the runner must not lane-batch them"
+    );
+    let n = model.n_nodes;
+    let l = model.dim;
+    let record_every = record_every.max(1);
+
+    // Per-lane scalar-run plumbing, each seeded exactly as the scalar
+    // scheduler would for stream `run_start + b + 1`.
+    let mut rngs: Vec<Pcg64> = (0..lanes)
+        .map(|b| Pcg64::new(seed, (run_start + b) as u64 + 1))
+        .collect();
+    let mut comms: Vec<CommMeter> = (0..lanes).map(|_| CommMeter::new(n)).collect();
+    let imp = opts.impairments.as_ref().filter(|imp| !imp.is_ideal());
+    if let Some(imp) = imp {
+        for comm in &mut comms {
+            comm.set_quant_step(imp.quant_step);
+        }
+    }
+    let ideal = LinkImpairments::ideal();
+    let imp_link = imp.unwrap_or(&ideal);
+    let mut states: Vec<ImpairmentState> = match imp {
+        Some(i) if i.affects_links() => (0..lanes)
+            .map(|b| ImpairmentState::new(alg.network(), seed, (run_start + b) as u64 + 1))
+            .collect(),
+        _ => Vec::new(),
+    };
+    let event_gating = !states.is_empty() && matches!(imp_link.gating, Gating::EventTriggered(_));
+
+    // Per-lane *effective* CSR combiner values, lane-blocked: lane b's
+    // arrays are `a_vals[b*nnz_a..(b+1)*nnz_a]` / likewise for C. Under
+    // impairments the erase pass rebuilds them from the pristine copies
+    // every iteration (one O(E) memcpy per lane); ideal runs install the
+    // pristine values once here and never touch them again.
+    let graph = alg.network().graph.clone();
+    let nnz_a = alg.network().a.nnz();
+    let nnz_c = alg.network().c.nnz();
+    let mut a_vals = vec![0.0; nnz_a * lanes];
+    let mut c_vals = vec![0.0; nnz_c * lanes];
+    for b in 0..lanes {
+        a_vals[b * nnz_a..(b + 1) * nnz_a].copy_from_slice(alg.network().a.vals());
+        c_vals[b * nnz_c..(b + 1) * nnz_c].copy_from_slice(alg.network().c.vals());
+    }
+
+    // The drifting optimum is per-run state: each lane advances its own
+    // w°(i) from its own data RNG, exactly as the scalar loop does.
+    let drifting = !opts.drift.is_none();
+    let mut wo_cur: Vec<Vec<f64>> = (0..lanes).map(|_| model.wo.clone()).collect();
+
+    // Data staging: one scalar-layout snapshot per lane, scattered into
+    // the shared SoA tensors. The scatter is pure data movement — lane
+    // b's values are exactly the scalar run's u/d bytes.
+    let mut u_tmp = vec![0.0; n * l];
+    let mut d_tmp = vec![0.0; n];
+    let mut u_soa = vec![0.0; n * l * lanes];
+    let mut d_soa = vec![0.0; n * lanes];
+    // Row-major weight gather, read only by event-triggered gating.
+    let mut w_row = vec![0.0; if event_gating { n * l } else { 0 }];
+
+    let mut msd: Vec<Vec<f64>> = (0..lanes)
+        .map(|_| Vec::with_capacity(iters / record_every + 1))
+        .collect();
+
+    let batch = alg
+        .as_batch()
+        .expect("lane engine requires an algorithm with a batched face");
+    batch.batch_reset(lanes);
+    for i in 0..iters {
+        for b in 0..lanes {
+            if drifting {
+                opts.drift.advance(&mut wo_cur[b], &mut rngs[b]);
+            }
+            model.sample_iteration_at(&wo_cur[b], &mut rngs[b], &mut u_tmp, &mut d_tmp);
+            for (j, &x) in u_tmp.iter().enumerate() {
+                u_soa[j * lanes + b] = x;
+            }
+            for (k, &x) in d_tmp.iter().enumerate() {
+                d_soa[k * lanes + b] = x;
+            }
+        }
+        if !states.is_empty() {
+            for (b, state) in states.iter_mut().enumerate() {
+                let weights: &[f64] = if event_gating {
+                    let w_soa = batch.batch_weights();
+                    for (jk, dst) in w_row.iter_mut().enumerate() {
+                        *dst = w_soa[jk * lanes + b];
+                    }
+                    &w_row
+                } else {
+                    &[]
+                };
+                state.begin_iteration_lanes(
+                    imp_link,
+                    &graph,
+                    weights,
+                    &mut a_vals[b * nnz_a..(b + 1) * nnz_a],
+                    &mut c_vals[b * nnz_c..(b + 1) * nnz_c],
+                    &mut comms[b],
+                );
+            }
+        }
+        batch.batch_step(
+            BatchData { u: &u_soa, d: &d_soa },
+            BatchCtx { lanes, c_vals: &c_vals, a_vals: &a_vals },
+            &mut rngs,
+            &mut comms,
+        );
+        if let Some(imp) = imp {
+            if imp.quant_step > 0.0 {
+                // Elementwise snap: lane values land on exactly the grid
+                // points the scalar run's would.
+                quantize_in_place(batch.batch_weights_mut(), imp.quant_step);
+            }
+        }
+        if (i + 1) % record_every == 0 {
+            for (b, trace) in msd.iter_mut().enumerate() {
+                trace.push(batch.batch_msd(b, &wo_cur[b]));
+            }
+        }
+    }
+
+    // Unpack per-lane results in run order. The algorithm's own
+    // combiners were never modified (effective values lived in the lane
+    // arrays), so there is nothing to restore on it.
+    let mut states = states.into_iter();
+    msd.into_iter()
+        .zip(comms)
+        .map(|(msd, mut comm)| {
+            let linkstate = match states.next() {
+                Some(s) => {
+                    comm.clear_outcomes();
+                    s.into_stats()
+                }
+                None => LinkStateStats::default(),
+            };
+            RunResult { msd, ledger: comm.into_ledger(), linkstate }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Dcd, DiffusionLms, NetworkConfig};
+    use crate::coordinator::impairments::DropModel;
+    use crate::coordinator::round::RoundScheduler;
+    use crate::datamodel::DriftModel;
+    use crate::topology::{combination_matrix, Graph, Rule};
+
+    #[test]
+    fn lane_count_parse_display_validate() {
+        assert_eq!("auto".parse::<LaneCount>().unwrap(), LaneCount::Auto);
+        assert_eq!("4".parse::<LaneCount>().unwrap(), LaneCount::Fixed(4));
+        assert!("0".parse::<LaneCount>().unwrap_err().contains("lanes 0"));
+        assert!("-2".parse::<LaneCount>().is_err());
+        assert!("many".parse::<LaneCount>().is_err());
+        for lc in [LaneCount::Auto, LaneCount::Fixed(1), LaneCount::Fixed(8)] {
+            assert_eq!(lc.to_string().parse::<LaneCount>().unwrap(), lc);
+        }
+        assert!(LaneCount::Fixed(0).validate().is_err());
+        assert!(LaneCount::Auto.validate().is_ok());
+        assert_eq!(LaneCount::default(), LaneCount::Fixed(1));
+        assert!(LaneCount::default().is_default());
+        assert!(!LaneCount::Auto.is_default());
+        assert_eq!(LaneCount::Auto.resolve(2), 2);
+        assert_eq!(LaneCount::Auto.resolve(100), 4);
+        assert_eq!(LaneCount::Auto.resolve(0), 1);
+        assert_eq!(LaneCount::Fixed(8).resolve(2), 8);
+    }
+
+    fn case(n: usize, l: usize) -> (DataModel, NetworkConfig) {
+        let mut rng = Pcg64::new(41, 0);
+        let model = DataModel::paper(n, l, 0.8, 1.2, 1e-3, &mut rng);
+        let graph = Graph::ring(n, 2);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.04; n], dim: l };
+        (model, net)
+    }
+
+    fn scalar_runs(
+        model: &DataModel,
+        opts: &SchedulerOptions,
+        make_alg: impl Fn() -> Box<dyn Algorithm>,
+        iters: usize,
+        seed: u64,
+        record_every: usize,
+        run_start: usize,
+        count: usize,
+    ) -> Vec<RunResult> {
+        let mut sched = RoundScheduler::new(model);
+        sched.record_every = record_every;
+        sched.impairments = opts.impairments.clone();
+        sched.dynamics = opts.dynamics.clone();
+        sched.drift = opts.drift;
+        (0..count)
+            .map(|b| {
+                let mut alg = make_alg();
+                sched.run(alg.as_mut(), iters, seed, (run_start + b) as u64 + 1)
+            })
+            .collect()
+    }
+
+    fn assert_block_matches(a: &[RunResult], b: &[RunResult], tag: &str) {
+        assert_eq!(a.len(), b.len(), "{tag}: run counts differ");
+        for (r, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.msd.len(), y.msd.len(), "{tag} run {r}: trace lengths");
+            for (i, (ma, mb)) in x.msd.iter().zip(y.msd.iter()).enumerate() {
+                assert_eq!(
+                    ma.to_bits(),
+                    mb.to_bits(),
+                    "{tag} run {r} iter {i}: {ma} vs {mb}"
+                );
+            }
+            assert_eq!(x.ledger, y.ledger, "{tag} run {r}: ledgers differ");
+            assert_eq!(x.linkstate, y.linkstate, "{tag} run {r}: linkstate differs");
+        }
+    }
+
+    /// Every impairment axis the lane engine supports, against the
+    /// scalar scheduler, bit for bit — including the block not starting
+    /// at run 0 and a thinned record grid.
+    #[test]
+    fn lane_block_bitwise_matches_scalar_scheduler() {
+        let (model, net) = case(6, 4);
+        let impaired = |imp: LinkImpairments| SchedulerOptions {
+            impairments: Some(imp),
+            ..SchedulerOptions::default()
+        };
+        let cases: Vec<(&str, SchedulerOptions)> = vec![
+            ("ideal", SchedulerOptions::default()),
+            ("drop", impaired(LinkImpairments::with_drop_prob(0.3))),
+            (
+                "bursty-gated-quant",
+                impaired(LinkImpairments {
+                    drop: DropModel::Markov { p_bad: 0.3, p_gb: 0.25, p_bg: 0.25 },
+                    gating: Gating::Probabilistic(0.8),
+                    quant_step: 1e-4,
+                    per_leg: false,
+                }),
+            ),
+            (
+                "per-leg-event",
+                impaired(LinkImpairments {
+                    drop: DropModel::Iid(0.25),
+                    gating: Gating::EventTriggered(1e-6),
+                    quant_step: 0.0,
+                    per_leg: true,
+                }),
+            ),
+            (
+                "drift",
+                SchedulerOptions {
+                    drift: DriftModel::Walk { sigma: 1e-3 },
+                    ..SchedulerOptions::default()
+                },
+            ),
+        ];
+        for (tag, opts) in &cases {
+            for &(run_start, lanes, record_every) in
+                &[(0usize, 3usize, 1usize), (2, 2, 4), (5, 1, 1)]
+            {
+                let make = || -> Box<dyn Algorithm> { Box::new(DiffusionLms::new(net.clone())) };
+                let scalar = scalar_runs(
+                    &model, opts, make, 160, 97, record_every, run_start, lanes,
+                );
+                let mut alg = DiffusionLms::new(net.clone());
+                let laned = run_lane_block(
+                    &model, opts, &mut alg, 160, 97, record_every, run_start, lanes,
+                );
+                assert_block_matches(&laned, &scalar, &format!("{tag}@{run_start}x{lanes}"));
+            }
+        }
+    }
+
+    /// DCD's batched face (mask draws from per-lane RNGs) under the same
+    /// battery.
+    #[test]
+    fn dcd_lane_block_bitwise_matches_scalar_scheduler() {
+        let (model, net) = case(5, 4);
+        let opts_list: Vec<(&str, SchedulerOptions)> = vec![
+            ("ideal", SchedulerOptions::default()),
+            (
+                "lossy",
+                SchedulerOptions {
+                    impairments: Some(LinkImpairments {
+                        drop: DropModel::Iid(0.3),
+                        gating: Gating::Probabilistic(0.7),
+                        quant_step: 1e-4,
+                        per_leg: true,
+                    }),
+                    ..SchedulerOptions::default()
+                },
+            ),
+        ];
+        for (tag, opts) in &opts_list {
+            let make = || -> Box<dyn Algorithm> { Box::new(Dcd::new(net.clone(), 2, 1)) };
+            let scalar = scalar_runs(&model, opts, make, 150, 53, 1, 1, 4);
+            let mut alg = Dcd::new(net.clone(), 2, 1);
+            let laned = run_lane_block(&model, opts, &mut alg, 150, 53, 1, 1, 4);
+            assert_block_matches(&laned, &scalar, tag);
+        }
+    }
+}

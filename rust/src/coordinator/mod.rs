@@ -17,6 +17,9 @@
 //!   directional ledger (DESIGN.md §9).
 //! * [`runner`] — Monte-Carlo orchestration over both engines: the
 //!   message-level rust engine and the AOT-compiled xla engine.
+//! * [`lanes`] — the run-batched lane engine (DESIGN.md §14): B
+//!   realizations advanced in SoA lockstep per scheduler pass,
+//!   bit-identical per lane to the scalar round scheduler.
 //! * [`impairments`] — the link-impairment layer (per-edge erasures,
 //!   probabilistic / event-triggered communication gating, quantized
 //!   state) that the round scheduler wraps around any algorithm; the
@@ -33,12 +36,14 @@ pub mod agent;
 pub mod bus;
 pub mod dynamics;
 pub mod impairments;
+pub mod lanes;
 pub mod round;
 pub mod runner;
 pub mod wsn;
 
 pub use dynamics::{DynamicsConfig, DynamicsState};
 pub use impairments::{AdaptivePolicy, DropModel, Gating, LinkImpairments, LinkStateStats};
+pub use lanes::LaneCount;
 pub use round::{RoundScheduler, RunResult};
 pub use runner::{MonteCarlo, McResult, SchedulerOptions};
 pub use wsn::{WsnConfig, WsnResult, WsnSimulation};

@@ -296,6 +296,78 @@ impl MonteCarlo {
         })
     }
 
+    /// [`Self::run_rust_opts`] through the lane engine (DESIGN.md §14):
+    /// runs are packed `lanes` at a time into SoA blocks and advanced in
+    /// lockstep, bit-identical to the scalar path at every
+    /// lanes × threads combination. `lanes <= 1`, a non-static dynamics
+    /// model or an algorithm without a batched face all fall back to the
+    /// scalar runner, so this is always safe to call.
+    pub fn run_rust_lanes_opts(
+        &self,
+        model: &DataModel,
+        opts: &SchedulerOptions,
+        lanes: usize,
+        make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
+    ) -> McResult {
+        self.merge(
+            self.run_rust_lanes_range_opts(model, opts, lanes, make_alg, 0, self.runs)
+                .into_iter(),
+        )
+    }
+
+    /// [`Self::run_rust_range_opts`] through the lane engine: the block
+    /// `[run_start, run_start + count)` is split into consecutive lane
+    /// blocks of (at most) `lanes` runs, the blocks fan across
+    /// [`MonteCarlo::threads`] workers, and the per-run results come
+    /// back **in run order** — exactly the scalar range's realizations,
+    /// byte for byte. This is also what a shard worker executes when the
+    /// scenario requests lanes, so lanes × threads × shards all compose.
+    ///
+    /// Configurations without a batched path (scalar-only algorithms,
+    /// network dynamics, single-run blocks) are routed to the scalar
+    /// scheduler per block; mixed layouts still fold identically because
+    /// both engines produce the same bytes.
+    pub fn run_rust_lanes_range_opts(
+        &self,
+        model: &DataModel,
+        opts: &SchedulerOptions,
+        lanes: usize,
+        make_alg: impl Fn() -> Box<dyn Algorithm> + Sync,
+        run_start: usize,
+        count: usize,
+    ) -> Vec<RunResult> {
+        let dynamic = opts.dynamics.as_ref().map(|d| !d.is_static()).unwrap_or(false);
+        let batchable = lanes > 1 && !dynamic && make_alg().as_batch().is_some();
+        if !batchable {
+            return self.run_rust_range_opts(model, opts, make_alg, run_start, count);
+        }
+        let blocks: Vec<(usize, usize)> = (0..count)
+            .step_by(lanes)
+            .map(|off| (run_start + off, lanes.min(count - off)))
+            .collect();
+        let threads = resolve_threads(self.threads, blocks.len());
+        let per_block = parallel_ordered(blocks.len(), threads, |i| {
+            let (start, width) = blocks[i];
+            if width == 1 {
+                // A trailing singleton block gains nothing from SoA
+                // packing; the scalar scheduler produces the same bytes.
+                return self.run_rust_range_opts(model, opts, &make_alg, start, 1);
+            }
+            let mut alg = make_alg();
+            super::lanes::run_lane_block(
+                model,
+                opts,
+                alg.as_mut(),
+                self.iters,
+                self.seed,
+                self.record_every.max(1),
+                start,
+                width,
+            )
+        });
+        per_block.into_iter().flatten().collect()
+    }
+
     /// Serial reference path (also the `threads == 1` fast path); the
     /// parallel runner must reproduce it bit-for-bit.
     pub fn run_rust_serial(
@@ -646,6 +718,87 @@ mod tests {
         });
         assert_eq!(plain.msd, defaulted.msd);
         assert_eq!(plain.ledger, defaulted.ledger);
+    }
+
+    /// The lane engine reproduces the serial runner bit-for-bit at
+    /// every lanes × threads combination, ideal and impaired, including
+    /// a lane width that does not divide the run count (trailing
+    /// partial + singleton blocks).
+    #[test]
+    fn laned_runner_bit_identical_to_serial() {
+        use crate::algorithms::DiffusionLms;
+        use crate::coordinator::impairments::{Gating, LinkImpairments};
+        let (model, _) = small_case();
+        let graph = Graph::ring(5, 1);
+        let c = combination_matrix(&graph, Rule::Metropolis);
+        let a = combination_matrix(&graph, Rule::Metropolis);
+        let net = NetworkConfig { graph, c, a, mu: vec![0.05; 5], dim: 3 };
+        let impaired = SchedulerOptions {
+            impairments: Some(LinkImpairments {
+                drop: crate::coordinator::impairments::DropModel::Iid(0.3),
+                gating: Gating::Probabilistic(0.8),
+                quant_step: 1e-4,
+                per_leg: false,
+            }),
+            ..SchedulerOptions::default()
+        };
+        for opts in [SchedulerOptions::default(), impaired] {
+            let base = MonteCarlo { runs: 7, iters: 150, seed: 19, record_every: 1, threads: 1 };
+            let serial = base
+                .run_rust_serial_opts(&model, &opts, || Box::new(DiffusionLms::new(net.clone())));
+            for lanes in [1usize, 2, 3, 4, 16] {
+                for threads in [1usize, 2] {
+                    let mc = MonteCarlo { threads, ..base.clone() };
+                    let laned = mc.run_rust_lanes_opts(&model, &opts, lanes, || {
+                        Box::new(DiffusionLms::new(net.clone()))
+                    });
+                    assert_eq!(laned.msd, serial.msd, "lanes {lanes} threads {threads}");
+                    assert_eq!(
+                        laned.steady_state.to_bits(),
+                        serial.steady_state.to_bits(),
+                        "lanes {lanes} threads {threads}"
+                    );
+                    assert_eq!(laned.ledger, serial.ledger, "lanes {lanes} threads {threads}");
+                    assert_eq!(laned.runs, serial.runs);
+                }
+            }
+        }
+    }
+
+    /// Laned ranges slot into the shard fold: per-run results from lane
+    /// blocks concatenate to exactly the serial realizations.
+    #[test]
+    fn laned_range_runs_merge_to_full_result() {
+        let (model, net) = small_case();
+        let mc = MonteCarlo { runs: 7, iters: 150, seed: 37, record_every: 1, threads: 1 };
+        let serial = mc.run_rust_serial(&model, || Box::new(Dcd::new(net.clone(), 2, 1)));
+        let opts = SchedulerOptions::default();
+        for shards in [1usize, 2, 3] {
+            let mut pieces = Vec::new();
+            for (start, count) in shard_ranges(mc.runs, shards) {
+                pieces.extend(mc.run_rust_lanes_range_opts(
+                    &model,
+                    &opts,
+                    4,
+                    || Box::new(Dcd::new(net.clone(), 2, 1)),
+                    start,
+                    count,
+                ));
+            }
+            let merged = mc.merge(pieces.into_iter());
+            assert_eq!(merged.msd, serial.msd, "shards = {shards}");
+            assert_eq!(merged.ledger, serial.ledger, "shards = {shards}");
+        }
+        // A scalar-only configuration (noisy DCD links) silently takes
+        // the scalar path and still reproduces the serial bytes.
+        let noisy_serial = mc.run_rust_serial(&model, || {
+            Box::new(Dcd::new(net.clone(), 2, 1).with_link_noise(0.05))
+        });
+        let noisy_laned = mc.run_rust_lanes_opts(&model, &opts, 4, || {
+            Box::new(Dcd::new(net.clone(), 2, 1).with_link_noise(0.05))
+        });
+        assert_eq!(noisy_laned.msd, noisy_serial.msd);
+        assert_eq!(noisy_laned.ledger, noisy_serial.ledger);
     }
 
     /// Contiguous shard plans: cover every run exactly once, in order,

@@ -41,6 +41,7 @@ fn sim_scenario(cfg: &Exp1Config, m: usize, m_grad: usize, record_every: usize) 
     sc.record_every = record_every;
     sc.threads = 0;
     sc.shards = cfg.shards;
+    sc.lanes = cfg.lanes;
     sc
 }
 
@@ -146,7 +147,14 @@ pub fn run_exp1(
                     crate::shard::run_scenario_sharded(&sc).map_err(anyhow::Error::msg)?
                 } else {
                     let net = net.clone();
-                    mc.run_rust(&model, move || Box::new(Dcd::new(net.clone(), m, m_grad)))
+                    // Lane dispatch (DESIGN.md §14): bit-identical to
+                    // `run_rust` at every width, so purely throughput.
+                    mc.run_rust_lanes_opts(
+                        &model,
+                        &Default::default(),
+                        cfg.lanes.resolve(cfg.runs),
+                        move || Box::new(Dcd::new(net.clone(), m, m_grad)),
+                    )
                 }
             }
             Engine::Xla => mc.run_xla(

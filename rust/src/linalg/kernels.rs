@@ -48,6 +48,151 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Lane-strided kernels (DESIGN.md §14).
+//
+// The lane engine packs B independent Monte-Carlo runs into SoA buffers
+// where element j of lane b lives at `j * lanes + b`. Each kernel below
+// replicates its scalar counterpart's floating-point operation sequence
+// *per lane* — same partial-sum shapes, same tail handling, same final
+// fold — so lane b's result is bit-identical to running the scalar
+// kernel on lane b's gathered vector. The j-outer / lane-inner loop
+// order keeps every inner trip contiguous in memory (the compiler
+// vectorises across lanes), while the 4-wide j unroll of `lane_dot`
+// mirrors `dot`'s four independent accumulators exactly.
+
+/// Per-lane dot product over lane-major SoA slices: writes
+/// `out[b] = Σ_j a[j*lanes + b] · b[j*lanes + b]` with the *same*
+/// summation order as [`dot`] applied to lane b alone (four independent
+/// partial sums over j-chunks of 4, a sequential tail, and the
+/// `(s0 + s1) + (s2 + s3) + tail` fold). `acc` is caller scratch of
+/// length `4 * lanes` (allocation-free hot loop).
+pub fn lane_dot(a: &[f64], b: &[f64], lanes: usize, acc: &mut [f64], out: &mut [f64]) {
+    assert_eq!(a.len(), b.len(), "lane_dot: length mismatch");
+    assert_eq!(acc.len(), 4 * lanes, "lane_dot: scratch must be 4*lanes");
+    assert_eq!(out.len(), lanes, "lane_dot: out must be lanes");
+    debug_assert_eq!(a.len() % lanes.max(1), 0);
+    let l = a.len() / lanes.max(1);
+    acc.iter_mut().for_each(|x| *x = 0.0);
+    out.iter_mut().for_each(|x| *x = 0.0);
+    let (s0, rest) = acc.split_at_mut(lanes);
+    let (s1, rest) = rest.split_at_mut(lanes);
+    let (s2, s3) = rest.split_at_mut(lanes);
+    let chunks = l / 4;
+    for c in 0..chunks {
+        let base = 4 * c * lanes;
+        let (xa, xb) = (&a[base..base + 4 * lanes], &b[base..base + 4 * lanes]);
+        for lb in 0..lanes {
+            s0[lb] += xa[lb] * xb[lb];
+            s1[lb] += xa[lanes + lb] * xb[lanes + lb];
+            s2[lb] += xa[2 * lanes + lb] * xb[2 * lanes + lb];
+            s3[lb] += xa[3 * lanes + lb] * xb[3 * lanes + lb];
+        }
+    }
+    // Sequential tail, ascending j — `out` doubles as the tail
+    // accumulator so the final fold reads `tail` from it.
+    for j in 4 * chunks..l {
+        let base = j * lanes;
+        for lb in 0..lanes {
+            out[lb] += a[base + lb] * b[base + lb];
+        }
+    }
+    for lb in 0..lanes {
+        out[lb] = (s0[lb] + s1[lb]) + (s2[lb] + s3[lb]) + out[lb];
+    }
+}
+
+/// Per-lane scale into a fresh target: `y[j*lanes+b] = alpha[b] ·
+/// x[j*lanes+b]` (the combine step's unconditional diagonal term,
+/// `out[j] = a_kk * psi_k[j]`, replicated per lane).
+pub fn lane_scale(alpha: &[f64], x: &[f64], y: &mut [f64], lanes: usize) {
+    assert_eq!(x.len(), y.len(), "lane_scale: length mismatch");
+    debug_assert_eq!(alpha.len(), lanes);
+    for (xr, yr) in x.chunks_exact(lanes).zip(y.chunks_exact_mut(lanes)) {
+        for lb in 0..lanes {
+            yr[lb] = alpha[lb] * xr[lb];
+        }
+    }
+}
+
+/// Per-lane gated accumulate: `y[j*lanes+b] += alpha[b] · x[j*lanes+b]`
+/// for every lane with `alpha[b] != 0.0`. The zero-alpha lanes are
+/// *skipped*, not multiplied — the scalar loops guard with `if a_lk ==
+/// 0.0 { continue }` and a literal `+= 0.0 * x` is not a bitwise no-op
+/// (`-0.0 + 0.0` flips the sign bit, `0 · inf` is NaN), so the skip is
+/// part of the bit-identity contract.
+pub fn lane_axpy(alpha: &[f64], x: &[f64], y: &mut [f64], lanes: usize) {
+    assert_eq!(x.len(), y.len(), "lane_axpy: length mismatch");
+    debug_assert_eq!(alpha.len(), lanes);
+    let all_live = alpha.iter().all(|&a| a != 0.0);
+    if all_live {
+        for (xr, yr) in x.chunks_exact(lanes).zip(y.chunks_exact_mut(lanes)) {
+            for lb in 0..lanes {
+                yr[lb] += alpha[lb] * xr[lb];
+            }
+        }
+    } else {
+        for (xr, yr) in x.chunks_exact(lanes).zip(y.chunks_exact_mut(lanes)) {
+            for lb in 0..lanes {
+                if alpha[lb] != 0.0 {
+                    yr[lb] += alpha[lb] * xr[lb];
+                }
+            }
+        }
+    }
+}
+
+/// Per-lane fused gradient accumulate:
+/// `y[j*lanes+b] += alpha[b] · x[j*lanes+b] · e[b]`
+/// with the scalar left-associated order `((alpha · x) · e)` — the adapt
+/// step's `psi_k[j] += mu_k * c_lk * ul[j] * e` shape. Lanes where
+/// `gate[b] == 0.0` are skipped (the scalar `if c_lk == 0.0 { continue }`
+/// guard); pass `gate = alpha` when the weight itself is the gate, or a
+/// gate of all-ones semantics via `gated = false` call sites using
+/// [`lane_fused_accum_all`].
+pub fn lane_fused_accum(
+    gate: &[f64],
+    alpha: &[f64],
+    e: &[f64],
+    x: &[f64],
+    y: &mut [f64],
+    lanes: usize,
+) {
+    assert_eq!(x.len(), y.len(), "lane_fused_accum: length mismatch");
+    debug_assert_eq!(alpha.len(), lanes);
+    debug_assert_eq!(e.len(), lanes);
+    let all_live = gate.iter().all(|&g| g != 0.0);
+    if all_live {
+        for (xr, yr) in x.chunks_exact(lanes).zip(y.chunks_exact_mut(lanes)) {
+            for lb in 0..lanes {
+                yr[lb] += alpha[lb] * xr[lb] * e[lb];
+            }
+        }
+    } else {
+        for (xr, yr) in x.chunks_exact(lanes).zip(y.chunks_exact_mut(lanes)) {
+            for lb in 0..lanes {
+                if gate[lb] != 0.0 {
+                    yr[lb] += alpha[lb] * xr[lb] * e[lb];
+                }
+            }
+        }
+    }
+}
+
+/// Ungated [`lane_fused_accum`]: every lane accumulates (the self-
+/// gradient term `psi_k[j] += mu_k * c_kk * uk[j] * e_k`, which the
+/// scalar loop applies unconditionally — even a zero diagonal is added).
+pub fn lane_fused_accum_all(alpha: &[f64], e: &[f64], x: &[f64], y: &mut [f64], lanes: usize) {
+    assert_eq!(x.len(), y.len(), "lane_fused_accum_all: length mismatch");
+    debug_assert_eq!(alpha.len(), lanes);
+    debug_assert_eq!(e.len(), lanes);
+    for (xr, yr) in x.chunks_exact(lanes).zip(y.chunks_exact_mut(lanes)) {
+        for lb in 0..lanes {
+            yr[lb] += alpha[lb] * xr[lb] * e[lb];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +218,113 @@ mod tests {
             }
             axpy(-0.7, &x, &mut y);
             assert_eq!(y, want, "n={n}");
+        }
+    }
+
+    /// Pack per-lane vectors `vs[b]` into one lane-major SoA buffer.
+    fn pack(vs: &[Vec<f64>]) -> Vec<f64> {
+        let lanes = vs.len();
+        let l = vs[0].len();
+        let mut soa = vec![0.0; l * lanes];
+        for (b, v) in vs.iter().enumerate() {
+            for (j, &x) in v.iter().enumerate() {
+                soa[j * lanes + b] = x;
+            }
+        }
+        soa
+    }
+
+    fn lane_vecs(lanes: usize, l: usize, salt: f64) -> Vec<Vec<f64>> {
+        (0..lanes)
+            .map(|b| {
+                (0..l)
+                    .map(|j| (0.37 * j as f64 - 1.1) * (1.0 + salt * b as f64))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lane_dot_bitwise_matches_scalar_dot_per_lane() {
+        for lanes in [1usize, 2, 3, 4, 8] {
+            for l in [0usize, 1, 3, 4, 5, 8, 17] {
+                let avs = lane_vecs(lanes, l, 0.31);
+                let bvs = lane_vecs(lanes, l, -0.13);
+                let a = pack(&avs);
+                let b = pack(&bvs);
+                let mut acc = vec![0.0; 4 * lanes];
+                let mut out = vec![0.0; lanes];
+                lane_dot(&a, &b, lanes, &mut acc, &mut out);
+                for lb in 0..lanes {
+                    let want = dot(&avs[lb], &bvs[lb]);
+                    assert_eq!(out[lb].to_bits(), want.to_bits(), "lanes={lanes} l={l} b={lb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_axpy_skips_zero_lanes_exactly() {
+        let lanes = 4;
+        let l = 7;
+        let xs = lane_vecs(lanes, l, 0.21);
+        let mut ys = lane_vecs(lanes, l, -0.4);
+        // Lane 2 gated off; its y must be bitwise untouched even where
+        // x holds -0.0 (a multiply-by-zero would flip sign bits).
+        let alpha = [0.5, -1.25, 0.0, 2.0];
+        let mut x = pack(&xs);
+        x[2] = -0.0; // j = 0, lane 2
+        let mut y = pack(&ys);
+        let before = y.clone();
+        lane_axpy(&alpha, &x, &mut y, lanes);
+        for (b, a) in alpha.iter().enumerate() {
+            for j in 0..l {
+                let got = y[j * lanes + b];
+                if *a == 0.0 {
+                    assert_eq!(got.to_bits(), before[j * lanes + b].to_bits());
+                } else {
+                    ys[b][j] += a * x[j * lanes + b];
+                    assert_eq!(got.to_bits(), ys[b][j].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_scale_and_fused_accum_match_scalar_shapes() {
+        let lanes = 3;
+        let l = 5;
+        let xs = lane_vecs(lanes, l, 0.7);
+        let x = pack(&xs);
+        let alpha = [0.25, -0.75, 1.5];
+        let mut y = vec![0.0; l * lanes];
+        lane_scale(&alpha, &x, &mut y, lanes);
+        for b in 0..lanes {
+            for j in 0..l {
+                assert_eq!(y[j * lanes + b].to_bits(), (alpha[b] * xs[b][j]).to_bits());
+            }
+        }
+        let e = [1.1, -0.2, 0.0];
+        let gate = [1.0, 0.0, 1.0];
+        let mut z = y.clone();
+        lane_fused_accum(&gate, &alpha, &e, &x, &mut z, lanes);
+        for b in 0..lanes {
+            for j in 0..l {
+                let want = if gate[b] != 0.0 {
+                    y[j * lanes + b] + alpha[b] * xs[b][j] * e[b]
+                } else {
+                    y[j * lanes + b]
+                };
+                assert_eq!(z[j * lanes + b].to_bits(), want.to_bits());
+            }
+        }
+        let mut w = y.clone();
+        lane_fused_accum_all(&alpha, &e, &x, &mut w, lanes);
+        for b in 0..lanes {
+            for j in 0..l {
+                let want = y[j * lanes + b] + alpha[b] * xs[b][j] * e[b];
+                assert_eq!(w[j * lanes + b].to_bits(), want.to_bits());
+            }
         }
     }
 }

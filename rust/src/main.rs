@@ -19,12 +19,16 @@
 //! `exp1..exp4` and `scenario run|sweep` accept `--shards N` to fan the
 //! Monte-Carlo realizations across N worker processes (`shard-worker`,
 //! a hidden subcommand of this same binary) with bit-identical results
-//! — see DESIGN.md §8 and docs/HANDBOOK.md.
+//! — see DESIGN.md §8 and docs/HANDBOOK.md. `exp1`, `exp2` and
+//! `scenario run|sweep` additionally accept `--lanes auto|N` to batch
+//! runs through the SoA lane engine (DESIGN.md §14) — again
+//! bit-identical, at any lanes × threads × shards layout.
 
 use anyhow::{anyhow, Result};
 use dcd_lms::cli::{App, Command, ParsedArgs};
 use dcd_lms::config::{Exp1Config, Exp2Config, Exp3Config, IniDoc};
 use dcd_lms::coordinator::impairments::{DropModel, Gating, LinkImpairments};
+use dcd_lms::coordinator::LaneCount;
 use dcd_lms::experiments::{run_exp1, run_exp2, run_exp3, run_exp4, Engine, Exp4Config};
 use dcd_lms::linalg::Mat;
 use dcd_lms::metrics::to_db;
@@ -66,20 +70,23 @@ fn build_app() -> App {
                     .opt("engine", "rust|xla (default rust)")
                     .opt("runs", "Monte-Carlo runs")
                     .opt("iters", "iterations per run")
-                    .opt("shards", "worker processes for the MC runs (default 1)"),
+                    .opt("shards", "worker processes for the MC runs (default 1)")
+                    .opt("lanes", "SoA runs per lane block: auto|N (default 1; bit-identical)"),
             ),
             common(
                 Command::new("exp2", "Fig. 3 center/right: MSD vs compression ratio, N=50 L=50")
                     .opt("engine", "rust|xla (default xla)")
                     .opt("runs", "Monte-Carlo runs")
                     .opt("iters", "iterations per run")
-                    .opt("shards", "worker processes per sweep point (rust engine)"),
+                    .opt("shards", "worker processes per sweep point (rust engine)")
+                    .opt("lanes", "SoA runs per lane block: auto|N (default 1; bit-identical)"),
             ),
             common(
                 Command::new("exp3", "Fig. 4: energy-harvesting WSN, N=80 L=40")
                     .opt("runs", "Monte-Carlo runs")
                     .opt("duration", "virtual-time horizon (s)")
                     .opt("shards", "worker processes for the WSN realizations (default 1)")
+                    .opt("lanes", "rejected: the event-driven WSN engine is not run-batched")
                     .flag(
                         "ledger-csv",
                         "also write exp3_ledger.csv (per-node energy/comm breakdown)",
@@ -108,6 +115,7 @@ fn build_app() -> App {
                 .opt("iters", "override iterations per run")
                 .opt("threads", "worker threads (0 = auto)")
                 .opt("shards", "worker processes (default 1; bit-identical results)")
+                .opt("lanes", "SoA runs per lane block: auto|N (default 1; bit-identical)")
                 .opt("key", "sweep: dotted scenario key, e.g. impairments.drop_prob")
                 .opt("values", "sweep: comma-separated values for --key")
                 .opt("via", "run: submit to a resident serve daemon at HOST:PORT"),
@@ -176,6 +184,19 @@ fn parse_shards(args: &ParsedArgs) -> Result<Option<usize>> {
     }
 }
 
+/// Parse `--lanes` through [`LaneCount`]'s own parser, so the CLI, the
+/// INI layer and the scenario validator reject `0`, negatives and
+/// overflow with one message (same style as [`parse_shards`]).
+fn parse_lanes(args: &ParsedArgs) -> Result<Option<LaneCount>> {
+    match args.get("lanes") {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<LaneCount>()
+            .map(Some)
+            .map_err(|e| anyhow!("--{e}")),
+    }
+}
+
 fn load_overrides(args: &ParsedArgs) -> Result<IniDoc> {
     let mut doc = match args.get("config") {
         Some(path) => IniDoc::load(path).map_err(anyhow::Error::msg)?,
@@ -211,6 +232,9 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             if let Some(s) = parse_shards(args)? {
                 cfg.shards = s;
             }
+            if let Some(l) = parse_lanes(args)? {
+                cfg.lanes = l;
+            }
             let engine: Engine = args
                 .get("engine")
                 .unwrap_or("rust")
@@ -237,6 +261,9 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             }
             if let Some(s) = parse_shards(args)? {
                 cfg.shards = s;
+            }
+            if let Some(l) = parse_lanes(args)? {
+                cfg.lanes = l;
             }
             let engine: Engine = args
                 .get("engine")
@@ -267,6 +294,12 @@ fn run(cmd: &str, args: &ParsedArgs) -> Result<()> {
             }
             if let Some(s) = parse_shards(args)? {
                 cfg.shards = s;
+            }
+            if args.get("lanes").is_some() {
+                return Err(anyhow!(
+                    "exp3: --lanes applies to the synchronous-round engine; \
+                     the event-driven WSN scheduler is not run-batched"
+                ));
             }
             cfg.ledger_csv = args.flag("ledger-csv");
             run_exp3(&cfg, Some(&out_dir(args)), args.flag("quiet"))?;
@@ -368,6 +401,9 @@ fn resolve_scenario(args: &ParsedArgs) -> Result<dcd_lms::scenario::Scenario> {
     }
     if let Some(v) = parse_shards(args)? {
         sc.shards = v;
+    }
+    if let Some(v) = parse_lanes(args)? {
+        sc.lanes = v;
     }
     sc.validate().map_err(anyhow::Error::msg)?;
     Ok(sc)

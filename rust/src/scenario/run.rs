@@ -335,7 +335,14 @@ fn run_mc(
         return crate::shard::run_scenario_sharded_progress(sc, progress);
     }
     let opts = scheduler_options(sc);
-    let res = mc.run_rust_opts(model, &opts, || sc.algorithm.build(net.clone()));
+    // The lane engine (DESIGN.md §14) is byte-identical to the scalar
+    // path at every width, so dispatch is purely a throughput decision.
+    let lanes = sc.lanes.resolve(sc.runs);
+    let res = if lanes > 1 {
+        mc.run_rust_lanes_opts(model, &opts, lanes, || sc.algorithm.build(net.clone()))
+    } else {
+        mc.run_rust_opts(model, &opts, || sc.algorithm.build(net.clone()))
+    };
     // The in-process path is one logical shard; report its completion
     // so serve-mode progress streams work at shards = 1 too.
     if let Some(report) = progress {

@@ -6,6 +6,7 @@ use crate::algorithms::{Algorithm, Dcd, DiffusionLms, NetworkConfig, PartialDiff
 use crate::config::IniDoc;
 use crate::coordinator::dynamics::DynamicsConfig;
 use crate::coordinator::impairments::{AdaptivePolicy, DropModel, Gating, LinkImpairments};
+use crate::coordinator::lanes::LaneCount;
 use crate::datamodel::DriftModel;
 use crate::energy::RadioEnergy;
 use crate::rng::Pcg64;
@@ -319,6 +320,12 @@ pub struct Scenario {
     /// in-process; must be ≥ 1). Results are bit-identical for any
     /// value — see DESIGN.md §8 and [`crate::shard`].
     pub shards: usize,
+    /// SoA lane width for the run-batched engine (`[schedule] lanes`,
+    /// DESIGN.md §14): runs advanced per scheduler pass. Artifacts are
+    /// byte-identical at every width, so — like threads and shards —
+    /// this is a pure throughput knob and stays out of the serve cache
+    /// key.
+    pub lanes: LaneCount,
     /// Schedule mode: synchronous rounds (default) or the event-driven
     /// energy-harvesting WSN scheduler (`[schedule] mode = wsn` plus a
     /// `[wsn]` section).
@@ -352,6 +359,7 @@ impl Scenario {
             record_every: 0,
             threads: 0,
             shards: 1,
+            lanes: LaneCount::default(),
             mode: ScheduleMode::Rounds,
             theory: TheoryColumn::Auto,
         }
@@ -400,6 +408,7 @@ impl Scenario {
             "schedule.record_every",
             "schedule.threads",
             "schedule.shards",
+            "schedule.lanes",
             "schedule.mode",
             "schedule.theory",
             "wsn.duration",
@@ -541,6 +550,7 @@ impl Scenario {
         sc.record_every = get_or(doc, "schedule", "record_every", sc.record_every)?;
         sc.threads = get_or(doc, "schedule", "threads", sc.threads)?;
         sc.shards = get_or(doc, "schedule", "shards", sc.shards)?;
+        sc.lanes = get_or(doc, "schedule", "lanes", sc.lanes)?;
         sc.mode = match doc.get("schedule", "mode").unwrap_or("rounds") {
             "rounds" => ScheduleMode::Rounds,
             "wsn" => ScheduleMode::Wsn {
@@ -642,6 +652,13 @@ impl Scenario {
         s.push_str(&format!("record_every = {}\n", self.record_every));
         s.push_str(&format!("threads = {}\n", self.threads));
         s.push_str(&format!("shards = {}\n", self.shards));
+        if !self.lanes.is_default() {
+            // Emitted only when set, so every pre-existing canonical INI
+            // (hence every serve cache key and preset CSV) keeps its
+            // bytes — and the serve cache additionally canonicalises the
+            // key away entirely (lanes never change artifacts).
+            s.push_str(&format!("lanes = {}\n", self.lanes));
+        }
         s.push_str(&format!("theory = {}\n", self.theory.name()));
         match &self.mode {
             ScheduleMode::Rounds => s.push_str("mode = rounds\n"),
@@ -794,6 +811,16 @@ impl Scenario {
             return Err(format!(
                 "scenario {}: shards must be >= 1 (1 = in-process; \
                  there is no process-count auto mode)",
+                self.name
+            ));
+        }
+        self.lanes
+            .validate()
+            .map_err(|e| format!("scenario {}: {e}", self.name))?;
+        if !self.lanes.is_default() && !matches!(self.mode, ScheduleMode::Rounds) {
+            return Err(format!(
+                "scenario {}: [schedule] lanes needs schedule.mode = rounds \
+                 (the event-driven WSN engine is not run-batched)",
                 self.name
             ));
         }
@@ -1188,6 +1215,47 @@ mod tests {
         sc.radio.rx_j_per_bit = -1.0;
         let err = sc.validate().unwrap_err();
         assert!(err.contains("rx_j_per_bit"), "{err}");
+    }
+
+    #[test]
+    fn lanes_key_roundtrips_and_legacy_bytes_are_stable() {
+        // The default (scalar) width emits no lanes key at all — every
+        // pre-existing canonical INI keeps its bytes.
+        let plain = Scenario::base("plain", "");
+        assert_eq!(plain.lanes, LaneCount::Fixed(1));
+        assert!(!plain.to_ini_string().contains("lanes"));
+
+        for (lanes, text) in [(LaneCount::Auto, "lanes = auto"), (LaneCount::Fixed(4), "lanes = 4")]
+        {
+            let mut sc = Scenario::base("laned", "");
+            sc.lanes = lanes;
+            let ini = sc.to_ini_string();
+            assert!(ini.contains(text), "{ini}");
+            let back = Scenario::parse_str(&ini).unwrap();
+            assert_eq!(back, sc);
+            assert_eq!(back.to_ini_string(), ini);
+            assert!(sc.validate().is_ok());
+        }
+        assert!(Scenario::check_key("schedule.lanes").is_ok());
+
+        // Zero lanes are rejected at parse time (shards error style) and
+        // by the validator for programmatically built scenarios.
+        let err = Scenario::parse_str("[schedule]\nlanes = 0\n").unwrap_err();
+        assert!(err.contains("lanes 0"), "{err}");
+        assert!(Scenario::parse_str("[schedule]\nlanes = -3\n").is_err());
+        assert!(Scenario::parse_str("[schedule]\nlanes = 99999999999999999999\n").is_err());
+        let mut sc = Scenario::base("bad-lanes", "");
+        sc.lanes = LaneCount::Fixed(0);
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("lanes"), "{err}");
+
+        // The WSN engine is not run-batched: lanes != 1 is rejected.
+        let mut sc = Scenario::base("wsn-lanes", "");
+        sc.mode = ScheduleMode::Wsn { duration: 1000.0, sample_dt: 10.0 };
+        sc.lanes = LaneCount::Fixed(4);
+        let err = sc.validate().unwrap_err();
+        assert!(err.contains("lanes"), "{err}");
+        assert!(err.contains("rounds"), "{err}");
     }
 
     #[test]

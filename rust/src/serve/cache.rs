@@ -42,14 +42,17 @@ pub fn code_tag() -> String {
 }
 
 /// The canonical execution form of a scenario: the parse → serialize
-/// round-trip (fixed key order, defaults filled in) with the one
-/// artifact-neutral rewrite, `record_every = 0` resolved to its
-/// effective stride. The daemon *executes* this form, which is why a
-/// cached artifact is byte-identical to recomputing the submitted text
-/// (DESIGN.md §11).
+/// round-trip (fixed key order, defaults filled in) with two
+/// artifact-neutral rewrites — `record_every = 0` resolved to its
+/// effective stride, and `[schedule] lanes` erased (the lane engine is
+/// byte-identical at every width, DESIGN.md §14, so lane width must not
+/// split the cache). The daemon *executes* this form (at the submitted
+/// lane width), which is why a cached artifact is byte-identical to
+/// recomputing the submitted text (DESIGN.md §11).
 pub fn canonical_scenario(sc: &Scenario) -> Scenario {
     let mut c = sc.clone();
     c.record_every = c.effective_record_every();
+    c.lanes = crate::coordinator::LaneCount::default();
     c
 }
 

@@ -332,7 +332,11 @@ fn compute(
     sc: &Scenario,
     key: &str,
 ) -> Result<(Arc<CachedResult>, bool), String> {
-    let canon = canonical_scenario(sc);
+    let mut canon = canonical_scenario(sc);
+    // Canonicalization erases the lane width (cache-key neutral); run
+    // at the submitted width anyway — it only changes throughput, the
+    // artifact bytes are identical at every width (DESIGN.md §14).
+    canon.lanes = sc.lanes;
     let staging = inner.cache.staging_dir(key, id)?;
     let staging_str = staging
         .to_str()

@@ -112,9 +112,12 @@ fn run_mc_block(job: &ShardJob) -> Result<Vec<RunPayload>, String> {
     // its budget overrides the scenario's own (whole-machine) setting.
     mc.threads = job.threads;
     let opts = scheduler_options(&sc);
-    let results = mc.run_rust_range_opts(
+    // Same lane dispatch as the in-process path (DESIGN.md §14): the
+    // engine is bit-identical per run, so sharding composes freely.
+    let results = mc.run_rust_lanes_range_opts(
         &model,
         &opts,
+        sc.lanes.resolve(sc.runs),
         || sc.algorithm.build(net.clone()),
         job.run_start,
         job.run_count,

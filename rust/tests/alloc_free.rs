@@ -8,9 +8,12 @@
 //! is process-global and must not see traffic from concurrently running
 //! tests.
 
-use dcd_lms::algorithms::{CommMeter, Dcd, NetworkConfig};
+use dcd_lms::algorithms::{Algorithm, CommMeter, Dcd, DiffusionLms, NetworkConfig};
 use dcd_lms::coordinator::dynamics::{DynamicsConfig, DynamicsState};
 use dcd_lms::coordinator::impairments::{AdaptivePolicy, DropModel, Gating, ImpairmentState, LinkImpairments};
+use dcd_lms::coordinator::lanes::run_lane_block;
+use dcd_lms::coordinator::runner::SchedulerOptions;
+use dcd_lms::datamodel::DataModel;
 use dcd_lms::theory::{ImpairedMsdModel, MsdModel, TheorySetup};
 use dcd_lms::topology::{combination_matrix, Graph, Rule};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -193,4 +196,38 @@ fn theory_iteration_loops_do_not_allocate() {
     let (short, _) = allocs_during(|| dyn_rebuild(&mut state, &mut ds, &mut alg, &mut comm, 200));
     let (long, _) = allocs_during(|| dyn_rebuild(&mut state, &mut ds, &mut alg, &mut comm, 800));
     assert_eq!(short, long, "dynamic rebuild allocates per iteration");
+
+    // The lane engine's batched inner loop (DESIGN.md §14) keeps the
+    // same discipline: SoA state, per-lane RNGs/meters and the
+    // lane-blocked effective combiners are allocated once per block, so
+    // a longer block allocates exactly as much as a shorter one — the
+    // per-node `to_vec` of the scalar step is exactly what the batched
+    // path amortises away. Checked ideal and impaired (drops + gating +
+    // quantization rebuild every iteration).
+    let model = DataModel::paper(n, 4, 0.8, 1.2, 1e-3, &mut dcd_lms::rng::Pcg64::new(5, 0));
+    let lane_allocs = |make: &dyn Fn() -> Box<dyn Algorithm>,
+                       opts: &SchedulerOptions,
+                       iters: usize| {
+        let mut alg = make();
+        let (count, res) = allocs_during(|| {
+            std::hint::black_box(run_lane_block(&model, opts, alg.as_mut(), iters, 91, 4, 0, 4))
+        });
+        assert_eq!(res.len(), 4);
+        count
+    };
+    let ideal_opts = SchedulerOptions::default();
+    let impaired_opts = SchedulerOptions::from_impairments(Some(&imp));
+    let lms: &dyn Fn() -> Box<dyn Algorithm> = &|| Box::new(DiffusionLms::new(net.clone()));
+    let dcd: &dyn Fn() -> Box<dyn Algorithm> = &|| Box::new(Dcd::new(net.clone(), 2, 1));
+    for (label, make) in [("diffusion-lms", lms), ("dcd", dcd)] {
+        for (kind, opts) in [("ideal", &ideal_opts), ("impaired", &impaired_opts)] {
+            let _ = lane_allocs(make, opts, 8); // warm-up
+            let short = lane_allocs(make, opts, 100);
+            let long = lane_allocs(make, opts, 400);
+            assert_eq!(
+                short, long,
+                "{label} ({kind}): the batched inner loop allocates per iteration"
+            );
+        }
+    }
 }

@@ -343,6 +343,35 @@ fn energy_chapter_and_citation_are_paired() {
     );
 }
 
+/// Rule 9: DESIGN.md must carry the §14 lane-engine chapter and the
+/// lane engine must cite it — the SoA layout, the lane-interleaving
+/// bit-identity argument and the lanes × threads × shards composition
+/// live there, and they are what makes `--lanes` a pure throughput
+/// knob (every laned byte is pinned against the serial fold by that
+/// argument), so the chapter and its anchor citation may not silently
+/// drift apart. Same shape as rules 5–8.
+#[test]
+fn lanes_chapter_and_citation_are_paired() {
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md")).expect("DESIGN.md");
+    let has_section = design
+        .lines()
+        .any(|l| l.starts_with('#') && l.contains("§14"));
+    assert!(has_section, "DESIGN.md lost its §14 lane-engine chapter");
+    let lanes = fs::read_to_string(
+        root.join("rust")
+            .join("src")
+            .join("coordinator")
+            .join("lanes.rs"),
+    )
+    .expect("rust/src/coordinator/lanes.rs (the run-batched lane engine)");
+    let needle = format!("{}.md §14", "DESIGN");
+    assert!(
+        lanes.contains(&needle),
+        "rust/src/coordinator/lanes.rs does not cite DESIGN.md §14"
+    );
+}
+
 #[test]
 fn relative_markdown_links_point_at_existing_files() {
     let root = repo_root();

@@ -5,6 +5,9 @@
 use dcd_lms::algorithms::{
     Algorithm, CommMeter, Dcd, DiffusionLms, NetworkConfig, PartialDiffusion, Rcd, StepData,
 };
+use dcd_lms::coordinator::impairments::{DropModel, Gating, LinkImpairments};
+use dcd_lms::coordinator::runner::{MonteCarlo, SchedulerOptions};
+use dcd_lms::datamodel::DataModel;
 use dcd_lms::linalg::Mat;
 use dcd_lms::rng::Pcg64;
 use dcd_lms::testing::{check, usize_in, Gen, PropConfig};
@@ -300,6 +303,72 @@ fn prop_rcd_consensus_preserved() {
         } else {
             Err(format!("rcd failed to reach consensus: msd {msd}"))
         }
+    });
+}
+
+/// Lane dispatch is safe for every algorithm: those without a batched
+/// face (RCD's neighbour polling, partial diffusion, DCD over noisy
+/// links) fall back to the scalar scheduler per run range, so asking
+/// for lanes > 1 must reproduce the serial bytes exactly — MSD trace,
+/// steady state and ledger alike (DESIGN.md §14).
+#[test]
+fn prop_scalar_fallback_under_lanes_reproduces_serial_bytes() {
+    check(&PropConfig { cases: 10, seed: 53 }, &case_gen(), |case| {
+        let net = net_for(case);
+        let mut rng = Pcg64::new(case.seed, 0);
+        let model = DataModel::paper(case.n, case.l, 0.8, 1.2, 1e-3, &mut rng);
+        let imp = LinkImpairments {
+            drop: DropModel::Iid(0.2),
+            gating: Gating::Probabilistic(0.9),
+            quant_step: 0.0,
+            per_leg: false,
+        };
+        let m_links = 1 + case.seed as usize % 2;
+        let builds: [(&str, Box<dyn Fn() -> Box<dyn Algorithm> + Sync>); 3] = [
+            ("rcd", {
+                let net = net.clone();
+                Box::new(move || Box::new(Rcd::new(net.clone(), m_links)) as Box<dyn Algorithm>)
+            }),
+            ("partial", {
+                let (net, m) = (net.clone(), case.m);
+                Box::new(move || {
+                    Box::new(PartialDiffusion::new(net.clone(), m)) as Box<dyn Algorithm>
+                })
+            }),
+            ("noisy-dcd", {
+                let (net, m, mg) = (net.clone(), case.m, case.mg);
+                Box::new(move || {
+                    Box::new(Dcd::new(net.clone(), m, mg).with_link_noise(0.05))
+                        as Box<dyn Algorithm>
+                })
+            }),
+        ];
+        for opts in [
+            SchedulerOptions::default(),
+            SchedulerOptions::from_impairments(Some(&imp)),
+        ] {
+            let mc = MonteCarlo {
+                runs: 5,
+                iters: 40,
+                seed: case.seed ^ 0x5bd1,
+                record_every: 1,
+                threads: 1,
+            };
+            for (name, make) in &builds {
+                let serial = mc.run_rust_serial_opts(&model, &opts, &**make);
+                let laned = mc.run_rust_lanes_opts(&model, &opts, 4, &**make);
+                if laned.msd != serial.msd {
+                    return Err(format!("{name}: MSD diverged under lanes"));
+                }
+                if laned.steady_state.to_bits() != serial.steady_state.to_bits() {
+                    return Err(format!("{name}: steady state diverged under lanes"));
+                }
+                if laned.ledger != serial.ledger {
+                    return Err(format!("{name}: ledger diverged under lanes"));
+                }
+            }
+        }
+        Ok(())
     });
 }
 

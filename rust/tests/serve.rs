@@ -12,7 +12,7 @@ use std::process::{Child, Command, Stdio};
 
 use dcd_lms::config::IniDoc;
 use dcd_lms::scenario::{find, Scenario};
-use dcd_lms::serve::{job_key, SessionFrame};
+use dcd_lms::serve::{canonical_scenario, job_key, SessionFrame};
 
 fn binary() -> PathBuf {
     let mut p = std::env::current_exe().unwrap();
@@ -259,6 +259,32 @@ fn perturbing_any_single_key_misses() {
             job_key(&perturbed),
             "perturbing {dotted} must change the cache key"
         );
+    }
+}
+
+/// The one deliberate exception to the perturbation property:
+/// `[schedule] lanes` is a pure throughput knob — the lane engine is
+/// byte-identical at every width (DESIGN.md §14) — so a `lanes = 4`
+/// submit must HIT the cache entry computed at the default width
+/// instead of recomputing identical artifacts.
+#[test]
+fn lanes_is_artifact_neutral_in_the_cache_key() {
+    let sc = small_scenario();
+    let base_key = job_key(&sc);
+    for value in ["4", "auto"] {
+        let mut doc = IniDoc::parse(&sc.to_ini_string()).unwrap();
+        Scenario::check_key("schedule.lanes").unwrap();
+        doc.set_dotted(&format!("schedule.lanes={value}")).unwrap();
+        let perturbed = Scenario::from_ini(&doc).unwrap();
+        assert_eq!(
+            base_key,
+            job_key(&perturbed),
+            "lanes = {value} must not move the cache key"
+        );
+        // The canonical form the daemon stores and executes is
+        // lanes-free, so cached specs stay byte-stable too.
+        let canon = canonical_scenario(&perturbed).to_ini_string();
+        assert!(!canon.contains("lanes"), "canonical spec leaked lanes:\n{canon}");
     }
 }
 

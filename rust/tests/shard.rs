@@ -366,6 +366,122 @@ fn per_leg_zero_drop_csv_byte_identical_to_shared_path() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The lane-engine acceptance battery (DESIGN.md §14): `scenario run`
+/// artifacts are byte-identical at every lanes × threads × shards
+/// layout — for an ideal preset, a lossy one, and the bursty-Markov
+/// one. The CSV must match the serial bytes everywhere; the JSON
+/// manifest must match the same-layout lanes=1 manifest (it records
+/// threads and the shard layout, but never the lane width — lanes is
+/// artifact-neutral by construction).
+#[test]
+fn laned_scenario_csv_byte_identical_across_layouts() {
+    let dir = std::env::temp_dir().join("dcd_lane_identity");
+    std::fs::remove_dir_all(&dir).ok();
+    for name in ["paper-10-node", "lossy-geometric", "bursty-geometric"] {
+        let base = [
+            "scenario", "run", "--name", name, "--runs", "4", "--iters", "600", "--quiet",
+        ];
+        let run_variant = |sub: &str, extra: &[&str]| -> (String, String) {
+            let out = dir.join(name).join(sub);
+            let out_s = out.to_str().unwrap().to_string();
+            let mut args: Vec<&str> = base.to_vec();
+            args.extend_from_slice(&["--out", &out_s]);
+            args.extend_from_slice(extra);
+            let (ok, text) = run(&args);
+            assert!(ok, "{name}/{sub}: {text}");
+            (
+                read(&out.join(format!("{name}.csv"))),
+                read(&out.join(format!("{name}.json"))),
+            )
+        };
+        let (serial_csv, _) = run_variant("serial", &[]);
+        for threads in ["1", "2"] {
+            for shards in ["1", "2"] {
+                let mut jsons = Vec::new();
+                for lanes in ["1", "2", "4"] {
+                    let sub = format!("l{lanes}t{threads}s{shards}");
+                    let (csv, json) = run_variant(
+                        &sub,
+                        &["--lanes", lanes, "--threads", threads, "--shards", shards],
+                    );
+                    assert_eq!(serial_csv, csv, "{name} {sub}: CSV diverged from serial");
+                    jsons.push((sub, json));
+                }
+                // Same layout, different lane width: the full manifest
+                // (ledger, linkstate, shard layout) must not move.
+                let (base_sub, base_json) = &jsons[0];
+                for (sub, json) in &jsons[1..] {
+                    assert_eq!(
+                        base_json, json,
+                        "{name}: manifest diverged between {base_sub} and {sub}"
+                    );
+                }
+            }
+        }
+    }
+    // `--lanes auto` rides the same engine; spot-check one preset.
+    let base = [
+        "scenario", "run", "--name", "paper-10-node", "--runs", "4", "--iters", "600",
+        "--quiet",
+    ];
+    let run_variant = |sub: &str, extra: &[&str]| -> String {
+        let out = dir.join("auto").join(sub);
+        let out_s = out.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--out", &out_s]);
+        args.extend_from_slice(extra);
+        let (ok, text) = run(&args);
+        assert!(ok, "auto/{sub}: {text}");
+        read(&out.join("paper-10-node.csv"))
+    };
+    assert_eq!(
+        run_variant("serial", &[]),
+        run_variant("lanes", &["--lanes", "auto"]),
+        "--lanes auto diverged from serial"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// CLI error paths for `--lanes`: 0, negatives and garbage are rejected
+/// with a clear message on every front-end that accepts the flag, the
+/// INI face hits the same validation, and exp3 (event-driven, never
+/// run-batched) refuses the flag outright.
+#[test]
+fn bad_lane_counts_are_rejected() {
+    let (ok, text) = run(&["exp1", "--fast", "--lanes", "0"]);
+    assert!(!ok);
+    assert!(text.contains("lanes 0"), "{text}");
+    let (ok, text) = run(&["exp2", "--fast", "--lanes", "-3"]);
+    assert!(!ok);
+    assert!(text.contains("-3"), "{text}");
+    let (ok, text) =
+        run(&["scenario", "run", "--name", "paper-10-node", "--lanes", "banana"]);
+    assert!(!ok);
+    assert!(text.contains("banana"), "{text}");
+    // The INI face hits the same validation (0 and overflow).
+    let (ok, text) = run(&[
+        "scenario", "run", "--name", "paper-10-node", "--set", "schedule.lanes=0",
+        "--fast",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("lanes"), "{text}");
+    let (ok, text) = run(&[
+        "scenario", "run", "--name", "paper-10-node", "--set",
+        "schedule.lanes=99999999999999999999", "--fast",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("lanes"), "{text}");
+    // The WSN schedule has no round loop to batch.
+    let (ok, text) = run(&["exp3", "--fast", "--lanes", "4"]);
+    assert!(!ok);
+    assert!(text.contains("event-driven"), "{text}");
+    let (ok, text) = run(&[
+        "scenario", "run", "--name", "wsn-80", "--fast", "--lanes", "4",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("rounds"), "{text}");
+}
+
 /// CLI error paths: `--shards 0` and negative values are rejected with
 /// a clear message on every front-end that accepts the flag.
 #[test]

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Markdown link check + DESIGN.md section-citation check.
 
-Standalone CI face of rust/tests/docs_integrity.rs — eight rules:
+Standalone CI face of rust/tests/docs_integrity.rs — nine rules:
 
 1. Every relative link target in a *.md file must exist on disk.
 2. Every markdown link with a `#fragment` that points at a markdown
@@ -32,6 +32,11 @@ Standalone CI face of rust/tests/docs_integrity.rs — eight rules:
    billing rule, the per-leg erasure semantics, the Pareto pruning
    order and the frontier determinism contract documented there define
    every frontier result file.
+9. DESIGN.md must carry the §14 lane-engine chapter and the lane
+   engine (rust/src/coordinator/lanes.rs) must cite it: the SoA
+   layout, the lane-interleaving bit-identity argument and the
+   lanes x threads x shards composition documented there are what
+   makes `--lanes` a pure throughput knob.
 
 The scan covers the repo root *and* docs/ recursively (everything but
 SKIP_DIRS). Exit status 0 = clean, 1 = at least one dangling reference
@@ -230,6 +235,24 @@ def check_energy_chapter(errors):
         errors.append("rust/src/energy/radio.rs does not cite DESIGN.md §13")
 
 
+def check_lanes_chapter(errors):
+    """Rule 9: the §14 lane-engine chapter and its in-code citation pair up."""
+    design = ROOT / "DESIGN.md"
+    if design.exists():
+        headings = [
+            line
+            for line in design.read_text(encoding="utf-8").splitlines()
+            if line.startswith("#") and "§14" in line
+        ]
+        if not headings:
+            errors.append("DESIGN.md: the §14 lane-engine chapter is missing")
+    lanes = ROOT / "rust" / "src" / "coordinator" / "lanes.rs"
+    if not lanes.exists():
+        errors.append("rust/src/coordinator/lanes.rs missing (the run-batched lane engine)")
+    elif "DESIGN.md §14" not in lanes.read_text(encoding="utf-8"):
+        errors.append("rust/src/coordinator/lanes.rs does not cite DESIGN.md §14")
+
+
 def main():
     errors = []
     # Guard: the walk must include docs/ (a SKIP_DIRS regression would
@@ -243,6 +266,7 @@ def main():
     check_serve_chapter(errors)
     check_dynamics_chapter(errors)
     check_energy_chapter(errors)
+    check_lanes_chapter(errors)
     if errors:
         print("documentation integrity check FAILED:")
         for e in errors:
